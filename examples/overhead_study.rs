@@ -1,0 +1,59 @@
+//! Fig. 3 reproduction: the isolated reconfiguration-overhead study
+//! (§7.3), measured live on this stack — RMS decision times and real
+//! data-redistribution times across factor-2 reconfigurations 1↔2 … 32↔64.
+//!
+//! Payload defaults to 256 MB (the paper moves 1 GB over InfiniBand; set
+//! `--mb 1024` to match).  Run:
+//!     cargo run --release --example overhead_study -- --mb 1024 --reps 10
+
+use dmr::live::overhead::fig3_sweep;
+use dmr::util::cli::Args;
+use dmr::util::csv::write_csv;
+use dmr::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let mb = args.get_parse("mb", 256usize);
+    let reps = args.get_parse("reps", 5usize);
+    println!("Fig 3 overhead study: {mb} MB payload, {reps} reps per point\n");
+
+    let t0 = std::time::Instant::now();
+    let samples = fig3_sweep(reps, mb * 1024 * 1024 / 4);
+
+    let mut t = Table::new(vec!["Reconfiguration", "Scheduling (ms)", "Resize (ms)", "GB/s"])
+        .with_title("Fig 3: scheduling and resize times (live measurement)");
+    let mut rows = Vec::new();
+    for s in &samples {
+        let gbps = (mb as f64 / 1024.0) / s.resize_secs;
+        t.row(vec![
+            format!("{:>2} -> {:<2}", s.from, s.to),
+            format!("{:.3}", s.sched_secs * 1e3),
+            format!("{:.1}", s.resize_secs * 1e3),
+            format!("{gbps:.2}"),
+        ]);
+        rows.push(vec![
+            s.from.to_string(),
+            s.to.to_string(),
+            format!("{:.6}", s.sched_secs),
+            format!("{:.6}", s.resize_secs),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("total wall time: {:.1?}", t0.elapsed());
+
+    // Paper-shape checks (§7.3):
+    // (1) more processes involved => shorter resize (1->2 vs 32->64)
+    let t_1_2 = samples.iter().find(|s| s.from == 1 && s.to == 2).unwrap().resize_secs;
+    let t_32_64 = samples.iter().find(|s| s.from == 32 && s.to == 64).unwrap().resize_secs;
+    println!("shape check: resize(1->2) = {:.0} ms  >  resize(32->64) = {:.0} ms : {}",
+        t_1_2 * 1e3, t_32_64 * 1e3, if t_1_2 > t_32_64 { "OK" } else { "MISMATCH" });
+    // (2) shrinks cost at least as much as the mirror expansions
+    let exp: f64 = samples.iter().filter(|s| s.to > s.from).map(|s| s.resize_secs).sum();
+    let shr: f64 = samples.iter().filter(|s| s.to < s.from).map(|s| s.resize_secs).sum();
+    println!("shape check: total shrink {:.0} ms vs total expand {:.0} ms : {}",
+        shr * 1e3, exp * 1e3, if shr > exp * 0.8 { "OK" } else { "MISMATCH" });
+
+    write_csv("results/fig3_overhead_live.csv", &["from", "to", "sched_s", "resize_s"], &rows)?;
+    println!("wrote results/fig3_overhead_live.csv");
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Quickstart: the malleability framework in ~40 lines.
+//!
+//! Generates a Feitelson workload (§7.1), processes it twice through the
+//! discrete-event engine — once rigid ("fixed"), once malleable
+//! ("flexible") — and prints the productivity gains the paper's Fig. 4/5
+//! report.  No AOT artifacts required.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dmr::des::{DesConfig, Engine};
+use dmr::metrics::RunSummary;
+use dmr::util::stats::gain_pct;
+use dmr::workload;
+
+fn main() {
+    // 1. A 50-job workload: CG / Jacobi / N-body jobs, Poisson arrivals.
+    let wl = workload::generate(50, 42);
+    println!("workload: {} jobs, seed {}", wl.len(), wl.seed);
+
+    // 2. The rigid baseline: same job stream, malleability off.
+    let fixed = Engine::new(DesConfig::default()).run(&wl.as_fixed(), "Fixed");
+
+    // 3. The flexible version: jobs expose reconfiguring points; the RMS
+    //    expands/shrinks them per the paper's §4 policy.
+    let flex = Engine::new(DesConfig::default()).run(&wl, "Flexible");
+
+    let f = RunSummary::from_run(&fixed);
+    let x = RunSummary::from_run(&flex);
+
+    println!("\n              {:>12} {:>12}", "fixed", "flexible");
+    println!("makespan      {:>11.0}s {:>11.0}s  (gain {:.1}%)",
+        f.makespan, x.makespan, gain_pct(f.makespan, x.makespan));
+    println!("avg wait      {:>11.0}s {:>11.0}s  (gain {:.1}%)",
+        f.wait.mean(), x.wait.mean(), gain_pct(f.wait.mean(), x.wait.mean()));
+    println!("avg exec      {:>11.0}s {:>11.0}s  (jobs run shrunk: slower alone, faster together)",
+        f.exec.mean(), x.exec.mean());
+    println!("utilization   {:>11.1}% {:>11.1}%  (allocated-node fraction)",
+        f.util_mean * 100.0, x.util_mean * 100.0);
+    println!("node-seconds  {:>11.2e} {:>11.2e}  (smarter sizes burn fewer node-seconds)",
+        f.node_seconds(), x.node_seconds());
+    println!("\nreconfigurations: {} expansions, {} shrinks",
+        x.actions.expand.count(), x.actions.shrink.count());
+
+    assert!(x.makespan < f.makespan, "malleability should win");
+    println!("\nquickstart OK");
+}

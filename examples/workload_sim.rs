@@ -1,0 +1,124 @@
+//! End-to-end driver: the full system on a real small workload.
+//!
+//! Phase 1 (live): an 8-job adaptive workload runs through the complete
+//! stack — Feitelson generator → RMS (priorities, backfill, §4 policy) →
+//! DMR runtime (spawn + redistribution over vmpi) → PJRT compute (the AOT
+//! Pallas kernels) — with real threads and real bytes.  Fixed vs flexible
+//! on the same stream; the headline metric (workload completion time) is
+//! reported like Fig. 4.
+//!
+//! Phase 2 (DES): the paper-scale 50-job version of the same comparison
+//! in virtual time.
+//!
+//! Requires `make artifacts`.  Run:
+//!     cargo run --release --example workload_sim
+
+use dmr::des::{DesConfig, Engine};
+use dmr::live::{LiveDriver, LiveOpts};
+use dmr::metrics::RunSummary;
+use dmr::rms::RmsConfig;
+use dmr::runtime::ComputeServer;
+use dmr::util::stats::gain_pct;
+use dmr::workload;
+
+fn live_specs(flexible: bool) -> Vec<dmr::workload::JobSpec> {
+    let mut w = workload::generate(8, 7);
+    w.jobs
+        .drain(..)
+        .enumerate()
+        .map(|(i, mut s)| {
+            // Scale the workload to live size: few iterations, small
+            // process counts (within the artifact set), fast arrivals.
+            s.iterations = match s.app {
+                dmr::apps::config::AppKind::NBody => 6,
+                _ => 10,
+            };
+            s.procs = if i % 2 == 0 { 8 } else { 4 };
+            s.max_procs = 8;
+            s.min_procs = 2;
+            s.pref_procs = Some(2);
+            s.sched_period = 0.0;
+            s.malleable = flexible;
+            s
+        })
+        .collect()
+}
+
+struct RunSummaryLite {
+    jobs: usize,
+    avg_wait: f64,
+    avg_exec: f64,
+    expansions: usize,
+    shrinks: usize,
+}
+
+fn run_live(server: &ComputeServer, flexible: bool) -> (f64, RunSummaryLite) {
+    let opts = LiveOpts {
+        rms: RmsConfig { nodes: 16, ..Default::default() },
+        arrival_scale: 0.02,
+        ..Default::default()
+    };
+    let mut driver = LiveDriver::new(opts, server.handle());
+    let t0 = std::time::Instant::now();
+    let report = driver.run(live_specs(flexible));
+    let makespan = t0.elapsed().as_secs_f64();
+    let rms = report.rms.lock().unwrap();
+    let jobs = dmr::metrics::extract(&rms);
+    let lite = RunSummaryLite {
+        jobs: jobs.len(),
+        avg_wait: jobs.iter().map(|j| j.wait()).sum::<f64>() / jobs.len() as f64,
+        avg_exec: jobs.iter().map(|j| j.exec()).sum::<f64>() / jobs.len() as f64,
+        expansions: rms.log.expansions(),
+        shrinks: rms.log.shrinks(),
+    };
+    (makespan, lite)
+}
+
+fn main() -> anyhow::Result<()> {
+    // ---------------- Phase 1: live, real compute -----------------
+    println!("=== Phase 1: live 8-job workload (real PJRT compute) ===");
+    let server = ComputeServer::start_default()?;
+
+    let (t_fixed, s_fixed) = run_live(&server, false);
+    println!(
+        "fixed   : {} jobs in {:.2}s (wait {:.2}s, exec {:.2}s)",
+        s_fixed.jobs, t_fixed, s_fixed.avg_wait, s_fixed.avg_exec
+    );
+    let (t_flex, s_flex) = run_live(&server, true);
+    println!(
+        "flexible: {} jobs in {:.2}s (wait {:.2}s, exec {:.2}s, {} expands, {} shrinks)",
+        s_flex.jobs, t_flex, s_flex.avg_wait, s_flex.avg_exec, s_flex.expansions, s_flex.shrinks
+    );
+    println!(
+        "live workload completion gain: {:.1}% (paper Fig. 4 reports 52-63% at cluster scale)",
+        gain_pct(t_fixed, t_flex)
+    );
+
+    // PJRT executor statistics prove compute ran through the artifacts.
+    let stats = server.handle().stats();
+    let total_calls: u64 = stats.iter().map(|s| s.calls).sum();
+    println!("PJRT executions: {total_calls} artifact calls across {} executables", stats.len());
+    assert!(total_calls > 0, "no PJRT compute happened");
+
+    // ---------------- Phase 2: paper-scale DES -----------------
+    println!("\n=== Phase 2: DES 50-job workload (paper scale, virtual time) ===");
+    let wl = workload::generate(50, 42);
+    let fixed =
+        RunSummary::from_run(&Engine::new(DesConfig::default()).run(&wl.as_fixed(), "Fixed"));
+    let flex = RunSummary::from_run(&Engine::new(DesConfig::default()).run(&wl, "Flexible"));
+    println!(
+        "fixed   : makespan {:>8.0}s  util {:>5.1}%  wait {:>7.0}s  exec {:>5.0}s",
+        fixed.makespan, fixed.util_mean * 100.0, fixed.wait.mean(), fixed.exec.mean()
+    );
+    println!(
+        "flexible: makespan {:>8.0}s  util {:>5.1}%  wait {:>7.0}s  exec {:>5.0}s",
+        flex.makespan, flex.util_mean * 100.0, flex.wait.mean(), flex.exec.mean()
+    );
+    println!(
+        "DES completion gain: {:.1}%  (paper: 52.3% for 50 jobs)",
+        gain_pct(fixed.makespan, flex.makespan)
+    );
+    assert!(flex.makespan < fixed.makespan);
+    println!("\nworkload_sim OK");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+"""AOT pipeline: lower every (app step, nprocs) variant to HLO *text*.
+
+HLO text — not ``lowered.compile().serialize()`` — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser on the Rust side reassigns ids and round-trips cleanly.
+
+Run once via ``make artifacts``; the Rust binary is self-contained after.
+
+Outputs (under --out, default ../artifacts):
+    <fn>_p<P>.hlo.txt   one per variant
+    manifest.json       name -> {inputs: [[shape], dtype], outputs: [...]}
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(fn, example_args):
+    return jax.jit(fn).lower(*example_args)
+
+
+def spec_list(avals):
+    out = []
+    for a in avals:
+        out.append({"shape": list(a.shape), "dtype": str(a.dtype)})
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {}
+    n = 0
+    for name, fn, example_args in model.all_variants():
+        if args.only and args.only not in name:
+            continue
+        lowered = lower_variant(fn, example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *example_args)
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        manifest[name] = {
+            "inputs": spec_list(example_args),
+            "outputs": spec_list(out_avals),
+        }
+        n += 1
+        print(f"[aot] {name}: {len(text)} chars", file=sys.stderr)
+
+    man_path = os.path.join(args.out, "manifest.json")
+    # Merge with any existing manifest so --only refreshes incrementally.
+    if os.path.exists(man_path) and args.only:
+        with open(man_path) as f:
+            old = json.load(f)
+        old.update(manifest)
+        manifest = old
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {n} artifacts + manifest to {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+# L1: Pallas kernels for the compute hot-spots of the three malleable
+# applications the paper evaluates (CG, Jacobi, N-body).
+#
+# All kernels are lowered with interpret=True: the CPU PJRT plugin cannot
+# execute Mosaic custom-calls, and the paper's applications are CPU-cluster
+# MPI codes anyway.  The kernels are still *structured* for TPU execution:
+# block-tiled via BlockSpec/grid so the HBM<->VMEM schedule is explicit (see
+# DESIGN.md "Hardware adaptation").
+from .cg import laplacian_matvec
+from .jacobi import jacobi_sweep
+from .nbody import nbody_accel
+
+__all__ = ["laplacian_matvec", "jacobi_sweep", "nbody_accel"]

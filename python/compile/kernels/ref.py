@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness gate).
+
+Every kernel in this package has a reference implementation here written
+with plain jax.numpy ops only; pytest (python/tests/) asserts allclose
+between kernel and oracle across a hypothesis-driven shape/dtype sweep.
+"""
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-6  # must match kernels.nbody.EPS
+
+
+def laplacian_matvec_ref(xp: jax.Array) -> jax.Array:
+    """y = tridiag(-1, 2, -1) @ x for padded input xp of shape (n+2,)."""
+    return 2.0 * xp[1:-1] - xp[:-2] - xp[2:]
+
+
+def jacobi_sweep_ref(up: jax.Array, b: jax.Array) -> jax.Array:
+    """One 5-point Jacobi sweep over padded (rows+2, cols+2) input."""
+    north = up[:-2, 1:-1]
+    south = up[2:, 1:-1]
+    west = up[1:-1, :-2]
+    east = up[1:-1, 2:]
+    return 0.25 * (north + south + west + east - b)
+
+
+def nbody_accel_ref(pos_all: jax.Array, pos_loc: jax.Array, mass_all: jax.Array) -> jax.Array:
+    """acc[i] = sum_j m[j] (p[j]-p[i]) / (|p[j]-p[i]|^2 + eps)^1.5."""
+    d = pos_all[None, :, :] - pos_loc[:, None, :]  # (n, N, 3)
+    r2 = jnp.sum(d * d, axis=-1) + EPS
+    w = mass_all[None, :] * r2 ** (-1.5)
+    return jnp.sum(w[..., None] * d, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Whole-algorithm references (used by integration tests to validate the
+# distributed Rust execution end-to-end).
+
+
+def cg_solve_ref(b: jax.Array, iters: int) -> jax.Array:
+    """`iters` steps of CG on tridiag(-1,2,-1) x = b, single domain."""
+
+    def matvec(x):
+        xp = jnp.pad(x, 1)
+        return laplacian_matvec_ref(xp)
+
+    x = jnp.zeros_like(b)
+    r = b - matvec(x)
+    p = r
+    rr = jnp.dot(r, r)
+    for _ in range(iters):
+        q = matvec(p)
+        alpha = rr / jnp.dot(p, q)
+        x = x + alpha * p
+        r = r - alpha * q
+        rr_new = jnp.dot(r, r)
+        beta = rr_new / rr
+        p = r + beta * p
+        rr = rr_new
+    return x
+
+
+def jacobi_solve_ref(b: jax.Array, iters: int) -> jax.Array:
+    """`iters` Jacobi sweeps on the 2-D Poisson problem, zero boundary."""
+    u = jnp.zeros_like(b)
+    for _ in range(iters):
+        up = jnp.pad(u, 1)
+        u = jacobi_sweep_ref(up, b)
+    return u
+
+
+def nbody_step_ref(pos, vel, mass, dt):
+    """One symplectic-Euler step over the full body set."""
+    acc = nbody_accel_ref(pos, pos, mass)
+    vel = vel + dt * acc
+    pos = pos + dt * vel
+    return pos, vel

@@ -1,0 +1,150 @@
+"""L2: per-application JAX step functions, each calling the L1 Pallas kernels.
+
+These are the computations the malleable applications execute on every
+iteration, written against the *local shard* a rank owns plus the halo /
+gathered data the Rust vmpi layer supplies.  Global reductions (CG dot
+products, Jacobi residual, N-body energy) are returned as *partial* scalars;
+the Rust coordinator allreduces them across ranks.
+
+Every function here is lowered per (app, nprocs) shard shape by aot.py and
+executed from Rust via PJRT — Python never runs on the request path.
+
+Problem sizes (global, fixed; shard = global / nprocs):
+    CG      vector length  N_CG     = 16384
+    Jacobi  grid           512 x 256 rows x cols (row-sharded)
+    N-body  bodies         N_NB     = 1024
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import jacobi_sweep, laplacian_matvec, nbody_accel
+
+# Global problem sizes.  Divisible by every supported process count (1..32).
+N_CG = 16384
+JACOBI_ROWS = 512
+JACOBI_COLS = 256
+N_NB = 1024
+
+#: Process counts artifacts are generated for (powers of two; the paper's
+#: resize factor is 2, so every reachable configuration is a power of two).
+PROC_COUNTS = (1, 2, 4, 8, 16, 32)
+
+
+# ---------------------------------------------------------------------------
+# Conjugate Gradient.  Split into three phases around the two global
+# reductions (alpha needs p.q, beta needs r'.r'); the Rust side allreduces
+# between phases.
+
+
+def cg_phase1(p_loc, halo_l, halo_r):
+    """q = A p (local block row) and the local partial of p.q.
+
+    halo_l / halo_r are (1,) arrays holding the neighbour boundary values
+    (zero at the domain ends).
+    """
+    xp = jnp.concatenate([halo_l, p_loc, halo_r])
+    q = laplacian_matvec(xp)
+    partial_pq = jnp.dot(p_loc, q)
+    return q, partial_pq.reshape(1)
+
+
+def cg_phase2(x_loc, r_loc, p_loc, q_loc, alpha):
+    """x += alpha p;  r -= alpha q;  partial of r'.r'.  alpha is (1,)."""
+    a = alpha[0]
+    x2 = x_loc + a * p_loc
+    r2 = r_loc - a * q_loc
+    partial_rr = jnp.dot(r2, r2)
+    return x2, r2, partial_rr.reshape(1)
+
+
+def cg_phase3(r_loc, p_loc, beta):
+    """p = r + beta p.  beta is (1,)."""
+    return (r_loc + beta[0] * p_loc,)
+
+
+def cg_shapes(nprocs: int):
+    n = N_CG // nprocs
+    f32 = jnp.float32
+    v = jax.ShapeDtypeStruct((n,), f32)
+    s = jax.ShapeDtypeStruct((1,), f32)
+    return {
+        "cg_phase1": (v, s, s),
+        "cg_phase2": (v, v, v, v, s),
+        "cg_phase3": (v, v, s),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Jacobi.  One sweep over the rank's row block; halo rows from neighbours.
+
+
+def jacobi_step(u_loc, halo_top, halo_bot, b_loc):
+    """One 5-point sweep.  u_loc (rows, cols); halos (1, cols).
+
+    Returns the updated block and the local partial of the squared update
+    norm  sum((u' - u)^2)  used as the convergence measure.
+    """
+    rows, cols = u_loc.shape
+    inner = jnp.concatenate([halo_top, u_loc, halo_bot], axis=0)
+    up = jnp.pad(inner, ((0, 0), (1, 1)))  # Dirichlet zero side columns
+    u2 = jacobi_sweep(up, b_loc)
+    diff = u2 - u_loc
+    partial = jnp.sum(diff * diff)
+    return u2, partial.reshape(1)
+
+
+def jacobi_shapes(nprocs: int):
+    rows = JACOBI_ROWS // nprocs
+    f32 = jnp.float32
+    blk = jax.ShapeDtypeStruct((rows, JACOBI_COLS), f32)
+    halo = jax.ShapeDtypeStruct((1, JACOBI_COLS), f32)
+    return {"jacobi_step": (blk, halo, halo, blk)}
+
+
+# ---------------------------------------------------------------------------
+# N-body.  Symplectic-Euler step of the local shard against all bodies
+# (positions all-gathered by the coordinator between steps).
+
+
+def nbody_step(pos_all, pos_loc, vel_loc, mass_all, dt):
+    """Returns (pos_loc', vel_loc', partial kinetic energy).  dt is (1,)."""
+    acc = nbody_accel(pos_all, pos_loc, mass_all)
+    v2 = vel_loc + dt[0] * acc
+    p2 = pos_loc + dt[0] * v2
+    ke = 0.5 * jnp.sum(v2 * v2)
+    return p2, v2, ke.reshape(1)
+
+
+def nbody_shapes(nprocs: int):
+    n = N_NB // nprocs
+    f32 = jnp.float32
+    return {
+        "nbody_step": (
+            jax.ShapeDtypeStruct((N_NB, 3), f32),
+            jax.ShapeDtypeStruct((n, 3), f32),
+            jax.ShapeDtypeStruct((n, 3), f32),
+            jax.ShapeDtypeStruct((N_NB,), f32),
+            jax.ShapeDtypeStruct((1,), f32),
+        )
+    }
+
+
+FUNCTIONS = {
+    "cg_phase1": cg_phase1,
+    "cg_phase2": cg_phase2,
+    "cg_phase3": cg_phase3,
+    "jacobi_step": jacobi_step,
+    "nbody_step": nbody_step,
+}
+
+
+def all_variants():
+    """Yield (artifact_name, fn, example_shapes) for every (fn, nprocs)."""
+    for p in PROC_COUNTS:
+        shapes = {}
+        shapes.update(cg_shapes(p))
+        shapes.update(jacobi_shapes(p))
+        shapes.update(nbody_shapes(p))
+        for name, args in shapes.items():
+            yield f"{name}_p{p}", FUNCTIONS[name], args

@@ -1,0 +1,57 @@
+"""AOT pipeline tests: HLO text artifacts + manifest integrity."""
+
+import json
+import os
+
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_roundtrippable_header():
+    lowered = aot.lower_variant(model.cg_phase3, model.cg_shapes(32)["cg_phase3"])
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # return_tuple=True: root computation returns a tuple
+    assert "tuple" in text.lower()
+
+
+def test_spec_list():
+    specs = aot.spec_list(
+        [jax.ShapeDtypeStruct((4, 2), jnp.float32), jax.ShapeDtypeStruct((1,), jnp.float32)]
+    )
+    assert specs == [
+        {"shape": [4, 2], "dtype": "float32"},
+        {"shape": [1], "dtype": "float32"},
+    ]
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@needs_artifacts
+def test_manifest_covers_all_variants():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    for name, _, _ in model.all_variants():
+        assert name in manifest, f"missing artifact entry {name}"
+        assert os.path.exists(os.path.join(ART, f"{name}.hlo.txt"))
+
+
+@needs_artifacts
+def test_manifest_shapes_match_model():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    for name, _, example_args in model.all_variants():
+        want = [list(a.shape) for a in example_args]
+        got = [s["shape"] for s in manifest[name]["inputs"]]
+        assert got == want, name

@@ -1,0 +1,141 @@
+"""Kernel-vs-oracle correctness: the CORE build-time signal.
+
+hypothesis sweeps shapes and block sizes; every Pallas kernel must match its
+pure-jnp reference to float32 tolerance.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import laplacian_matvec, jacobi_sweep, nbody_accel
+from compile.kernels import ref
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def _rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# CG: Laplacian matvec
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 512), seed=st.integers(0, 2**31 - 1))
+def test_matvec_matches_ref(n, seed):
+    xp = _rand((n + 2,), seed)
+    got = laplacian_matvec(xp)
+    want = ref.laplacian_matvec_ref(xp)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("n,block", [(16, 1), (16, 4), (16, 16), (256, 32), (96, 24)])
+def test_matvec_block_sizes(n, block):
+    xp = _rand((n + 2,), 7)
+    got = laplacian_matvec(xp, block=block)
+    want = ref.laplacian_matvec_ref(xp)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_matvec_is_tridiag_matrix():
+    """Kernel equals the dense tridiag(-1,2,-1) matvec."""
+    n = 32
+    x = _rand((n,), 3)
+    a = 2 * np.eye(n) - np.eye(n, k=1) - np.eye(n, k=-1)
+    xp = jnp.pad(x, 1)
+    np.testing.assert_allclose(
+        laplacian_matvec(xp), (a @ np.asarray(x)).astype(np.float32), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matvec_halo_values_enter_boundary_rows():
+    n = 8
+    xp = jnp.zeros((n + 2,), jnp.float32).at[0].set(3.0).at[n + 1].set(5.0)
+    y = np.asarray(laplacian_matvec(xp))
+    assert y[0] == -3.0 and y[-1] == -5.0
+    assert np.all(y[1:-1] == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Jacobi: 5-point sweep
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 96),
+    cols=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_jacobi_matches_ref(rows, cols, seed):
+    up = _rand((rows + 2, cols + 2), seed)
+    b = _rand((rows, cols), seed + 1)
+    got = jacobi_sweep(up, b)
+    want = ref.jacobi_sweep_ref(up, b)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("rows,block_r", [(8, 1), (8, 2), (8, 8), (64, 16)])
+def test_jacobi_block_sizes(rows, block_r):
+    up = _rand((rows + 2, 18), 11)
+    b = _rand((rows, 16), 12)
+    got = jacobi_sweep(up, b, block_r=block_r)
+    want = ref.jacobi_sweep_ref(up, b)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_jacobi_fixed_point():
+    """A harmonic (linear) field with b=0 is a fixed point of the sweep."""
+    rows, cols = 16, 16
+    # u(x,y) = x is harmonic; pad with its own boundary values.
+    full = np.tile(np.arange(cols + 2, dtype=np.float32), (rows + 2, 1))
+    up = jnp.asarray(full)
+    b = jnp.zeros((rows, cols), jnp.float32)
+    got = jacobi_sweep(up, b)
+    np.testing.assert_allclose(got, full[1:-1, 1:-1], rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# N-body: all-pairs accelerations
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_all=st.integers(1, 96),
+    frac=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_nbody_matches_ref(n_all, frac, seed):
+    n_loc = max(1, int(n_all * frac))
+    rs = np.random.RandomState(seed % 2**31)
+    pos_all = jnp.asarray(rs.randn(n_all, 3).astype(np.float32))
+    pos_loc = pos_all[:n_loc]
+    mass = jnp.asarray(np.abs(rs.randn(n_all)).astype(np.float32) + 0.1)
+    got = nbody_accel(pos_all, pos_loc, mass)
+    want = ref.nbody_accel_ref(pos_all, pos_loc, mass)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("ti,tj", [(1, 1), (4, 8), (16, 16), (16, 64)])
+def test_nbody_tile_sizes(ti, tj):
+    rs = np.random.RandomState(5)
+    pos_all = jnp.asarray(rs.randn(64, 3).astype(np.float32))
+    pos_loc = pos_all[:16]
+    mass = jnp.asarray(np.abs(rs.randn(64)).astype(np.float32) + 0.1)
+    got = nbody_accel(pos_all, pos_loc, mass, tile_i=ti, tile_j=tj)
+    want = ref.nbody_accel_ref(pos_all, pos_loc, mass)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_nbody_momentum_conservation():
+    """Total force over all bodies (equal masses) is ~zero."""
+    rs = np.random.RandomState(9)
+    pos = jnp.asarray(rs.randn(32, 3).astype(np.float32))
+    mass = jnp.ones((32,), jnp.float32)
+    acc = nbody_accel(pos, pos, mass)
+    total = np.asarray(acc).sum(axis=0)
+    np.testing.assert_allclose(total, np.zeros(3), atol=1e-3)

@@ -1,0 +1,136 @@
+"""L2 model tests: the sharded step functions compose to the global algorithm.
+
+These mirror exactly what the Rust coordinator does (halo exchange,
+allreduce of partials, allgather of positions) so a pass here certifies the
+numerical contract the runtime relies on.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def _shard(x, p, i):
+    n = x.shape[0] // p
+    return x[i * n : (i + 1) * n]
+
+
+@pytest.mark.parametrize("nprocs", [1, 2, 4])
+def test_cg_phases_match_reference_solver(nprocs):
+    """Run 5 distributed CG iterations via the three phases and compare
+    against the single-domain reference solver."""
+    n = 128
+    rs = np.random.RandomState(0)
+    b = jnp.asarray(rs.randn(n).astype(np.float32))
+
+    iters = 5
+    want = ref.cg_solve_ref(b, iters)
+
+    # Distributed state per rank.
+    x = [jnp.zeros((n // nprocs,), jnp.float32) for _ in range(nprocs)]
+    r = [_shard(b, nprocs, i) for i in range(nprocs)]  # r0 = b - A*0 = b
+    p = [ri for ri in r]
+    rr = float(sum(float(jnp.dot(ri, ri)) for ri in r))
+
+    def halos(vecs, i):
+        hl = vecs[i - 1][-1:] if i > 0 else jnp.zeros((1,), jnp.float32)
+        hr = vecs[i + 1][:1] if i < nprocs - 1 else jnp.zeros((1,), jnp.float32)
+        return hl, hr
+
+    for _ in range(iters):
+        q, pq_parts = [], []
+        for i in range(nprocs):
+            hl, hr = halos(p, i)
+            qi, pqi = model.cg_phase1(p[i], hl, hr)
+            q.append(qi)
+            pq_parts.append(float(pqi[0]))
+        alpha = rr / sum(pq_parts)  # "allreduce"
+        a = jnp.asarray([alpha], jnp.float32)
+        rr_parts = []
+        for i in range(nprocs):
+            x[i], r[i], rri = model.cg_phase2(x[i], r[i], p[i], q[i], a)
+            rr_parts.append(float(rri[0]))
+        rr_new = sum(rr_parts)
+        beta = jnp.asarray([rr_new / rr], jnp.float32)
+        for i in range(nprocs):
+            (p[i],) = model.cg_phase3(r[i], p[i], beta)
+        rr = rr_new
+
+    got = jnp.concatenate(x)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("nprocs", [1, 2, 4])
+def test_jacobi_step_matches_global_sweep(nprocs):
+    rows, cols = 32, 16
+    rs = np.random.RandomState(1)
+    u = jnp.asarray(rs.randn(rows, cols).astype(np.float32))
+    b = jnp.asarray(rs.randn(rows, cols).astype(np.float32))
+
+    up = jnp.pad(u, 1)
+    want = ref.jacobi_sweep_ref(up, b)
+    want_res = float(jnp.sum((want - u) ** 2))
+
+    lr = rows // nprocs
+    got_blocks, partials = [], []
+    for i in range(nprocs):
+        blk = u[i * lr : (i + 1) * lr]
+        top = u[i * lr - 1 : i * lr] if i > 0 else jnp.zeros((1, cols), jnp.float32)
+        bot = (
+            u[(i + 1) * lr : (i + 1) * lr + 1]
+            if i < nprocs - 1
+            else jnp.zeros((1, cols), jnp.float32)
+        )
+        b_blk = b[i * lr : (i + 1) * lr]
+        u2, res = model.jacobi_step(blk, top, bot, b_blk)
+        got_blocks.append(u2)
+        partials.append(float(res[0]))
+
+    got = jnp.concatenate(got_blocks, axis=0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert abs(sum(partials) - want_res) / max(want_res, 1e-9) < 1e-3
+
+
+@pytest.mark.parametrize("nprocs", [1, 2, 4])
+def test_nbody_step_matches_global_step(nprocs):
+    n = 64
+    rs = np.random.RandomState(2)
+    pos = jnp.asarray(rs.randn(n, 3).astype(np.float32))
+    vel = jnp.asarray(rs.randn(n, 3).astype(np.float32) * 0.1)
+    mass = jnp.asarray(np.abs(rs.randn(n)).astype(np.float32) + 0.5)
+    dt = jnp.asarray([1e-3], jnp.float32)
+
+    want_pos, want_vel = ref.nbody_step_ref(pos, vel, mass, float(dt[0]))
+
+    ln = n // nprocs
+    got_pos, got_vel = [], []
+    for i in range(nprocs):
+        p2, v2, _ = model.nbody_step(
+            pos, pos[i * ln : (i + 1) * ln], vel[i * ln : (i + 1) * ln], mass, dt
+        )
+        got_pos.append(p2)
+        got_vel.append(v2)
+    np.testing.assert_allclose(jnp.concatenate(got_pos), want_pos, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(jnp.concatenate(got_vel), want_vel, rtol=2e-3, atol=2e-3)
+
+
+def test_all_variants_enumerates_every_proc_count():
+    names = [name for name, _, _ in model.all_variants()]
+    assert len(names) == len(set(names))
+    for p in model.PROC_COUNTS:
+        assert f"cg_phase1_p{p}" in names
+        assert f"jacobi_step_p{p}" in names
+        assert f"nbody_step_p{p}" in names
+    # 5 functions x |PROC_COUNTS|
+    assert len(names) == 5 * len(model.PROC_COUNTS)
+
+
+def test_shard_shapes_divide_evenly():
+    for p in model.PROC_COUNTS:
+        assert model.N_CG % p == 0
+        assert model.JACOBI_ROWS % p == 0
+        assert model.N_NB % p == 0

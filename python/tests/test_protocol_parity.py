@@ -1,0 +1,52 @@
+"""Cross-language parity checks: the Rust runtime mirrors the constants
+and shard layouts defined here (model.py is the source of truth for the
+AOT shapes; rust/src/apps/state.rs mirrors them).
+
+These tests parse the Rust sources so a drift between the layers fails the
+Python suite at build time, before any artifact mismatch can reach PJRT.
+"""
+
+import os
+import re
+
+from compile import model
+
+RUST_STATE = os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "src", "apps", "state.rs"
+)
+
+
+def _rust_const(name: str) -> int:
+    src = open(RUST_STATE).read()
+    m = re.search(rf"pub const {name}: usize = (\d+);", src)
+    assert m, f"constant {name} not found in state.rs"
+    return int(m.group(1))
+
+
+def test_problem_sizes_match_rust():
+    assert _rust_const("N_CG") == model.N_CG
+    assert _rust_const("JACOBI_ROWS") == model.JACOBI_ROWS
+    assert _rust_const("JACOBI_COLS") == model.JACOBI_COLS
+    assert _rust_const("N_NB") == model.N_NB
+
+
+def test_proc_counts_match_rust():
+    src = open(RUST_STATE).read()
+    m = re.search(r"pub const PROC_COUNTS: \[usize; (\d+)\] = \[([0-9, ]+)\];", src)
+    assert m, "PROC_COUNTS not found"
+    rust_counts = tuple(int(x) for x in m.group(2).split(","))
+    assert rust_counts == tuple(model.PROC_COUNTS)
+
+
+def test_jacobi_cols_lane_aligned():
+    # The kernel docs promise lane-aligned loads (multiples of 128).
+    assert model.JACOBI_COLS % 128 == 0
+
+
+def test_every_artifact_shape_is_shardable_by_factor2():
+    """Factor-2 resizes must keep shard shapes inside the artifact set."""
+    for p in model.PROC_COUNTS:
+        for q in model.PROC_COUNTS:
+            if q == p * 2 or p == q * 2:
+                # both sides exist -> redistribution between them is legal
+                assert model.N_CG % p == 0 and model.N_CG % q == 0

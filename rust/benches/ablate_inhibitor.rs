@@ -1,0 +1,51 @@
+//! Ablation (DESIGN.md §5): the checking-inhibitor period (§5.1).
+//! Sweeps the period on the CG/Jacobi jobs of a 100-job workload and
+//! reports makespan + action counts: too-frequent checks buy nothing but
+//! overhead, too-rare checks miss reconfiguration opportunities.
+
+mod common;
+
+use dmr::des::{DesConfig, Engine};
+use dmr::metrics::RunSummary;
+use dmr::util::table::Table;
+use dmr::workload;
+
+fn main() {
+    common::banner("ablate_inhibitor", "checking-inhibitor period sweep (100 jobs)");
+    let mut t = Table::new(vec![
+        "Period (s)",
+        "Makespan (s)",
+        "Actions",
+        "No-action calls",
+        "Avg exec (s)",
+    ]);
+    let mut results = Vec::new();
+    for period in [1.0, 5.0, 15.0, 60.0, 240.0] {
+        let mut w = workload::generate(100, common::SEED);
+        for j in &mut w.jobs {
+            if j.sched_period > 0.0 {
+                j.sched_period = period;
+            }
+        }
+        let r = Engine::new(DesConfig::default()).run(&w, &format!("p{period}"));
+        let s = RunSummary::from_run(&r);
+        let acts = s.actions.expand.count() + s.actions.shrink.count();
+        t.row(vec![
+            format!("{period}"),
+            format!("{:.0}", s.makespan),
+            format!("{acts}"),
+            format!("{}", s.actions.no_action.count()),
+            format!("{:.0}", s.exec.mean()),
+        ]);
+        results.push((period, s));
+    }
+    println!("{}", t.render());
+
+    // The knob's purpose: fewer RMS calls with longer periods.
+    assert!(
+        results.first().unwrap().1.actions.no_action.count()
+            > results.last().unwrap().1.actions.no_action.count(),
+        "longer inhibition must reduce RMS traffic"
+    );
+    println!("ablate_inhibitor OK");
+}

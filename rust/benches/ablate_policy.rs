@@ -1,0 +1,74 @@
+//! Ablation (DESIGN.md §5): the §4 reconfiguration-policy components —
+//! preference handling (§4.2), wide optimization (§4.3) and the
+//! shrink-trigger priority boost — each disabled in turn on the same
+//! 100-job workload.
+
+mod common;
+
+use dmr::des::{DesConfig, Engine};
+use dmr::metrics::RunSummary;
+use dmr::rms::{PolicyConfig, RmsConfig};
+use dmr::util::table::Table;
+use dmr::workload;
+
+fn run_with(policy: PolicyConfig, boost: bool, label: &str) -> RunSummary {
+    run_cfg(policy, boost, true, label)
+}
+
+fn run_cfg(policy: PolicyConfig, boost: bool, backfill: bool, label: &str) -> RunSummary {
+    let cfg = DesConfig {
+        rms: RmsConfig { policy, shrink_priority_boost: boost, backfill, ..Default::default() },
+        ..Default::default()
+    };
+    let w = workload::generate(100, common::SEED);
+    RunSummary::from_run(&Engine::new(cfg).run(&w, label))
+}
+
+fn main() {
+    common::banner("ablate_policy", "reconfiguration-policy component ablation (100 jobs)");
+    let full = run_with(PolicyConfig::default(), true, "full");
+    let no_wide = run_with(
+        PolicyConfig { wide_optimization: false, ..Default::default() },
+        true,
+        "no-wide-opt",
+    );
+    let no_pref = run_with(
+        PolicyConfig { honor_preference: false, ..Default::default() },
+        true,
+        "no-preference",
+    );
+    let no_boost = run_with(PolicyConfig::default(), false, "no-shrink-boost");
+    let no_backfill = run_cfg(PolicyConfig::default(), true, false, "no-backfill");
+    let fixed = {
+        let w = workload::generate(100, common::SEED).as_fixed();
+        RunSummary::from_run(&Engine::new(DesConfig::default()).run(&w, "rigid"))
+    };
+
+    let mut t = Table::new(vec!["Variant", "Makespan (s)", "Wait (s)", "Exec (s)", "Util (%)", "Actions"]);
+    for s in [&full, &no_wide, &no_pref, &no_boost, &no_backfill, &fixed] {
+        t.row(vec![
+            s.label.clone(),
+            format!("{:.0}", s.makespan),
+            format!("{:.0}", s.wait.mean()),
+            format!("{:.0}", s.exec.mean()),
+            format!("{:.1}", s.util_mean * 100.0),
+            format!("{}", s.actions.expand.count() + s.actions.shrink.count()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Every policy variant still beats rigid; the full policy is best or
+    // tied among variants.
+    for s in [&full, &no_wide, &no_pref, &no_boost, &no_backfill] {
+        assert!(s.makespan < fixed.makespan, "{} must beat rigid", s.label);
+    }
+    let best = [&no_wide, &no_pref, &no_boost]
+        .iter()
+        .map(|s| s.makespan)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        full.makespan <= best * 1.10,
+        "full policy within 10% of the best ablation (usually strictly best)"
+    );
+    println!("ablate_policy OK");
+}

@@ -1,0 +1,28 @@
+//! Shared helpers for the bench harnesses (each bench regenerates one
+//! table/figure of the paper; `BENCH_FULL=1` switches to paper-scale
+//! workload sizes).
+
+use dmr::des::{DesConfig, Engine};
+use dmr::dmr::SchedMode;
+use dmr::metrics::RunSummary;
+use dmr::workload;
+
+pub fn full() -> bool {
+    std::env::var("BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Default seed used across all benches (the paper fixes its seed too).
+pub const SEED: u64 = 42;
+
+pub fn run(jobs: usize, seed: u64, mode: SchedMode, flexible: bool, label: &str) -> RunSummary {
+    let w = workload::generate(jobs, seed);
+    let w = if flexible { w } else { w.as_fixed() };
+    let cfg = DesConfig { mode, ..Default::default() };
+    RunSummary::from_run(&Engine::new(cfg).run(&w, label))
+}
+
+pub fn banner(name: &str, what: &str) {
+    println!("==============================================================");
+    println!("bench {name}: {what}");
+    println!("==============================================================");
+}

@@ -1,0 +1,45 @@
+//! E1/E2 — Fig. 3: reconfiguration scheduling and resize times, measured
+//! live on this stack (§7.3).  Default payload 32 MB for bench speed;
+//! `BENCH_FULL=1` uses 1 GB like the paper.
+
+mod common;
+
+use dmr::live::overhead::fig3_sweep;
+use dmr::util::csv::write_csv;
+use dmr::util::table::Table;
+
+fn main() {
+    let (mb, reps) = if common::full() { (1024usize, 10usize) } else { (32, 3) };
+    common::banner("fig3_overhead", "Fig 3 (scheduling + resize overheads, live)");
+    println!("payload {mb} MB, {reps} reps per point\n");
+    let samples = fig3_sweep(reps, mb * 1024 * 1024 / 4);
+
+    let mut t = Table::new(vec!["Reconfiguration", "Scheduling (ms)", "Resize (ms)"])
+        .with_title("Fig 3 (a) scheduling and (b) resize times");
+    let mut rows = Vec::new();
+    for s in &samples {
+        t.row(vec![
+            format!("{:>2} -> {:<2}", s.from, s.to),
+            format!("{:.3}", s.sched_secs * 1e3),
+            format!("{:.1}", s.resize_secs * 1e3),
+        ]);
+        rows.push(vec![
+            s.from.to_string(),
+            s.to.to_string(),
+            format!("{:.6}", s.sched_secs),
+            format!("{:.6}", s.resize_secs),
+        ]);
+    }
+    println!("{}", t.render());
+    write_csv("results/fig3_overhead_live.csv", &["from", "to", "sched_s", "resize_s"], &rows)
+        .unwrap();
+
+    // Fig 3(b) headline shape: "the more processes involved in the
+    // reconfiguration, the shorter resize time".
+    let get = |f: usize, t_: usize| {
+        samples.iter().find(|s| s.from == f && s.to == t_).unwrap().resize_secs
+    };
+    assert!(get(1, 2) > get(32, 64), "1->2 slower than 32->64");
+    assert!(get(2, 1) > get(64, 32), "2->1 slower than 64->32");
+    println!("fig3_overhead OK (shapes match the paper)");
+}

@@ -1,0 +1,30 @@
+//! Micro-benchmark: redistribution-path throughput (the L3 data hot path
+//! behind Fig 3(b)) across payload sizes and patterns.
+
+mod common;
+
+use dmr::live::overhead::measure_resize;
+use dmr::util::table::Table;
+
+fn main() {
+    common::banner("micro_redistribute", "redistribution throughput");
+    let mut t = Table::new(vec!["Pattern", "Payload (MB)", "Time (ms)", "GB/s"]);
+    let mbs = if common::full() { vec![16usize, 64, 256, 1024] } else { vec![16, 64, 128] };
+    for mb in mbs {
+        for (from, to, name) in [(4usize, 8usize, "expand 4->8"), (8, 4, "shrink 8->4"), (1, 32, "expand 1->32"), (32, 1, "shrink 32->1")] {
+            let f32s = mb * 1024 * 1024 / 4;
+            // best of 3
+            let secs = (0..3)
+                .map(|_| measure_resize(from, to, f32s))
+                .fold(f64::INFINITY, f64::min);
+            t.row(vec![
+                name.to_string(),
+                format!("{mb}"),
+                format!("{:.1}", secs * 1e3),
+                format!("{:.2}", mb as f64 / 1024.0 / secs),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("micro_redistribute OK");
+}

@@ -1,0 +1,69 @@
+//! Micro-benchmark: L3 scheduler hot paths — the scheduling pass and the
+//! DMR decision under growing queue depth (the §Perf targets: decisions
+//! well under the paper's 9.4 ms "no action" average).
+
+mod common;
+
+use std::time::Instant;
+
+use dmr::rms::{DmrRequest, Rms, RmsConfig};
+use dmr::util::table::Table;
+use dmr::workload;
+
+fn bench<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    common::banner("micro_sched", "RMS scheduling-pass + DMR-decision latency");
+    let mut t = Table::new(vec![
+        "Pending jobs",
+        "schedule() (µs)",
+        "dmr_check no-action (µs)",
+        "dmr_check shrink-path (µs)",
+    ]);
+    for depth in [10usize, 50, 100, 400, 1000] {
+        // Saturated cluster: one big running job + `depth` queued jobs.
+        let mut rms = Rms::new(RmsConfig { nodes: 64, ..Default::default() });
+        let w = workload::generate(depth + 1, 1);
+        let mut ids = Vec::new();
+        for (i, mut spec) in w.jobs.clone().into_iter().enumerate() {
+            spec.procs = if i == 0 { 64 } else { 32 };
+            spec.max_procs = 64;
+            ids.push(rms.submit(spec, i as f64 * 0.1));
+        }
+        rms.schedule(0.0);
+        rms.take_recent_starts();
+        let running = ids[0];
+
+        let sched_us = bench(200, || {
+            rms.schedule(1000.0);
+            rms.take_recent_starts();
+        }) * 1e6;
+
+        // A no-action decision (job already huge, nothing to do).
+        let req_noact = DmrRequest { min: 2, max: 64, pref: Some(64), factor: 2 };
+        let noact_us = bench(200, || {
+            let _ = rms.dmr_peek(running, &req_noact, 1000.0);
+        }) * 1e6;
+
+        // The shrink decision path (policy evaluation only — peek).
+        let req_shrink = DmrRequest { min: 2, max: 64, pref: Some(8), factor: 2 };
+        let shrink_us = bench(200, || {
+            let _ = rms.dmr_peek(running, &req_shrink, 1000.0);
+        }) * 1e6;
+
+        t.row(vec![
+            format!("{depth}"),
+            format!("{sched_us:.1}"),
+            format!("{noact_us:.1}"),
+            format!("{shrink_us:.1}"),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("micro_sched OK");
+}

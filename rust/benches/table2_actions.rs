@@ -1,0 +1,37 @@
+//! E3 — Table 2: analysis of the actions performed by the framework in a
+//! 400-job workload, synchronous vs asynchronous scheduling (§7.3).
+
+mod common;
+
+use dmr::dmr::SchedMode;
+use dmr::metrics::report;
+
+fn main() {
+    common::banner("table2_actions", "Table 2 (action analysis, 400-job workload)");
+    let jobs = 400;
+    let sync = common::run(jobs, common::SEED, SchedMode::Sync, true, "Synchronous");
+    let asy = common::run(jobs, common::SEED, SchedMode::Async, true, "Asynchronous");
+    println!("{}", report::table2(&sync.actions, &asy.actions, jobs).render());
+
+    // Shape assertions vs the paper's Table 2:
+    // "the synchronous version schedules fewer reconfigurations"
+    let s_total = sync.actions.expand.count() + sync.actions.shrink.count();
+    let a_total = asy.actions.expand.count() + asy.actions.shrink.count();
+    assert!(
+        s_total < a_total + asy.actions.expand_aborts,
+        "sync schedules fewer actions ({s_total} vs {a_total})"
+    );
+    // "the negative effect of a timeout during an expansion": async expand
+    // max far above sync's, with a large standard deviation.
+    assert!(asy.actions.expand.max() > sync.actions.expand.max() * 5.0);
+    assert!(asy.actions.expand.std() > sync.actions.expand.std() * 3.0);
+    // no-action decisions are milliseconds in both modes
+    assert!(sync.actions.no_action.mean() < 0.05);
+    assert!(asy.actions.no_action.mean() < 0.05);
+    println!(
+        "async expand aborts (timeouts): {} of {} attempts",
+        asy.actions.expand_aborts,
+        asy.actions.expand.count()
+    );
+    println!("table2_actions OK (shapes match the paper)");
+}

@@ -1,0 +1,43 @@
+//! E5/E6/E7 — Table 4 + Fig 4 + Fig 5: the throughput evaluation (§7.5).
+//! Fixed vs flexible across workload sizes, same seeded stream.
+
+mod common;
+
+use dmr::dmr::SchedMode;
+use dmr::metrics::report;
+use dmr::util::csv::write_csv;
+
+fn main() {
+    common::banner("table4_throughput", "Table 4 / Fig 4 / Fig 5 (workload sweep)");
+    let sizes: Vec<usize> = if common::full() {
+        vec![50, 100, 200, 400]
+    } else {
+        vec![50, 100, 200, 400] // DES is fast enough for full scale always
+    };
+    let mut rows = Vec::new();
+    for n in sizes {
+        let t0 = std::time::Instant::now();
+        let fixed = common::run(n, common::SEED, SchedMode::Sync, false, "Fixed");
+        let flex = common::run(n, common::SEED, SchedMode::Sync, true, "Flexible");
+        eprintln!("  {n} jobs simulated in {:.2?}", t0.elapsed());
+        rows.push((n, fixed, flex));
+    }
+    println!("{}", report::table4(&rows).render());
+    println!("{}", report::fig4(&rows));
+    println!("{}", report::fig5(&rows));
+    write_csv(
+        "results/table4_fig4_fig5.csv",
+        &["jobs", "version", "makespan_s", "util_pct", "wait_s", "exec_s", "completion_s", "node_seconds"],
+        &report::throughput_rows(&rows),
+    )
+    .unwrap();
+
+    // Shape assertions vs the paper.
+    for (n, fixed, flex) in &rows {
+        assert!(flex.makespan < fixed.makespan, "{n}: flexible must win");
+        assert!(flex.wait.mean() < fixed.wait.mean(), "{n}: waiting must improve");
+        assert!(flex.exec.mean() > fixed.exec.mean(), "{n}: exec degrades (jobs run shrunk)");
+        assert!(flex.util_mean < fixed.util_mean, "{n}: allocation rate drops (Table 4)");
+    }
+    println!("table4_throughput OK (shapes match the paper)");
+}

@@ -1,0 +1,174 @@
+//! Distributed Conjugate Gradient on `tridiag(-1,2,-1) x = b`.
+//!
+//! Each rank owns a contiguous shard of the vectors; the matvec needs one
+//! halo element per side (exchanged over vmpi); dot products are partial
+//! sums reduced with `allreduce_sum`.  All arithmetic runs in the AOT
+//! artifacts `cg_phase{1,2,3}_p{P}` (L1/L2); Rust only moves data.
+
+use anyhow::{Context, Result};
+
+use super::state::N_CG;
+use crate::runtime::{ComputeHandle, TensorF32};
+use crate::vmpi::{bytes_to_f32s, f32s_to_bytes, Endpoint};
+
+/// App-level message tags (below `TAG_RESERVED_BASE`).
+const TAG_HALO_TO_LEFT: u64 = 10;
+const TAG_HALO_TO_RIGHT: u64 = 11;
+
+pub struct CgShard {
+    pub rank: usize,
+    pub size: usize,
+    pub n_loc: usize,
+    pub x: Vec<f32>,
+    pub r: Vec<f32>,
+    pub p: Vec<f32>,
+    /// Global r·r (replicated across ranks after the allreduce).
+    pub rr: f64,
+}
+
+/// Deterministic right-hand side: every rank can build its shard locally.
+pub fn b_at(i: usize) -> f32 {
+    ((i as f32) * 0.01).sin()
+}
+
+impl CgShard {
+    /// x, r, p interleaved per element.
+    pub const ROW_F32S: usize = 3;
+
+    pub fn init(rank: usize, size: usize) -> CgShard {
+        let n_loc = N_CG / size;
+        let off = rank * n_loc;
+        let b: Vec<f32> = (0..n_loc).map(|i| b_at(off + i)).collect();
+        // x0 = 0 => r0 = b, p0 = r0.
+        // rr is the *global* dot; every rank computes the same full sum
+        // locally (deterministic, no comm needed at init).
+        let rr: f64 = (0..N_CG).map(|i| (b_at(i) as f64) * (b_at(i) as f64)).sum();
+        CgShard { rank, size, n_loc, x: vec![0.0; n_loc], r: b.clone(), p: b, rr }
+    }
+
+    fn halo_exchange(&self, ep: &Endpoint) -> (f32, f32) {
+        // Send my boundary values; receive the neighbours'.
+        if self.rank > 0 {
+            ep.send(self.rank - 1, TAG_HALO_TO_LEFT, f32s_to_bytes(&[self.p[0]]));
+        }
+        if self.rank + 1 < self.size {
+            ep.send(
+                self.rank + 1,
+                TAG_HALO_TO_RIGHT,
+                f32s_to_bytes(&[self.p[self.n_loc - 1]]),
+            );
+        }
+        let hl = if self.rank > 0 {
+            bytes_to_f32s(&ep.recv_from(self.rank - 1, TAG_HALO_TO_RIGHT).payload)[0]
+        } else {
+            0.0
+        };
+        let hr = if self.rank + 1 < self.size {
+            bytes_to_f32s(&ep.recv_from(self.rank + 1, TAG_HALO_TO_LEFT).payload)[0]
+        } else {
+            0.0
+        };
+        (hl, hr)
+    }
+
+    /// One CG iteration; returns the residual norm ||r||² (global).
+    pub fn step(&mut self, ep: &Endpoint, compute: &ComputeHandle) -> Result<f64> {
+        let p = self.size;
+        let (hl, hr) = self.halo_exchange(ep);
+
+        // q = A p ; partial p·q
+        let out = compute
+            .execute(
+                &format!("cg_phase1_p{p}"),
+                vec![
+                    TensorF32::vec(self.p.clone()),
+                    TensorF32::scalar(hl),
+                    TensorF32::scalar(hr),
+                ],
+            )
+            .context("cg_phase1")?;
+        let q = out[0].data.clone();
+        let pq = ep.allreduce_sum(out[1].item() as f64);
+
+        let alpha = (self.rr / pq) as f32;
+        let out = compute
+            .execute(
+                &format!("cg_phase2_p{p}"),
+                vec![
+                    TensorF32::vec(self.x.clone()),
+                    TensorF32::vec(self.r.clone()),
+                    TensorF32::vec(self.p.clone()),
+                    TensorF32::vec(q),
+                    TensorF32::scalar(alpha),
+                ],
+            )
+            .context("cg_phase2")?;
+        self.x = out[0].data.clone();
+        self.r = out[1].data.clone();
+        let rr_new = ep.allreduce_sum(out[2].item() as f64);
+
+        let beta = (rr_new / self.rr) as f32;
+        self.rr = rr_new;
+        let out = compute
+            .execute(
+                &format!("cg_phase3_p{p}"),
+                vec![
+                    TensorF32::vec(self.r.clone()),
+                    TensorF32::vec(self.p.clone()),
+                    TensorF32::scalar(beta),
+                ],
+            )
+            .context("cg_phase3")?;
+        self.p = out[0].data.clone();
+        Ok(rr_new)
+    }
+
+    pub fn to_rows(&self) -> Vec<f32> {
+        let mut rows = Vec::with_capacity(self.n_loc * 3);
+        for i in 0..self.n_loc {
+            rows.push(self.x[i]);
+            rows.push(self.r[i]);
+            rows.push(self.p[i]);
+        }
+        rows
+    }
+
+    pub fn from_rows(rank: usize, size: usize, rows: Vec<f32>, scalars: &[f64]) -> CgShard {
+        let n_loc = rows.len() / 3;
+        assert_eq!(n_loc, N_CG / size, "CG shard size mismatch");
+        let mut x = Vec::with_capacity(n_loc);
+        let mut r = Vec::with_capacity(n_loc);
+        let mut p = Vec::with_capacity(n_loc);
+        for c in rows.chunks_exact(3) {
+            x.push(c[0]);
+            r.push(c[1]);
+            p.push(c[2]);
+        }
+        CgShard { rank, size, n_loc, x, r, p, rr: scalars[0] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_deterministic_and_sharded() {
+        let a = CgShard::init(0, 4);
+        let b = CgShard::init(1, 4);
+        assert_eq!(a.n_loc, N_CG / 4);
+        assert_eq!(a.rr, b.rr);
+        assert_eq!(b.r[0], b_at(N_CG / 4));
+    }
+
+    #[test]
+    fn rows_roundtrip() {
+        let s = CgShard::init(2, 8);
+        let rows = s.to_rows();
+        let s2 = CgShard::from_rows(2, 8, rows, &[s.rr]);
+        assert_eq!(s2.x, s.x);
+        assert_eq!(s2.r, s.r);
+        assert_eq!(s2.p, s.p);
+        assert_eq!(s2.rr, s.rr);
+    }
+}

@@ -1,0 +1,99 @@
+//! Flexible Sleep (FS): the synthetic application of the overhead study
+//! (§7.3).  Each iteration "computes" by sleeping for the configured work
+//! divided by the current process count; the per-rank data payload is what
+//! the reconfiguration redistributes (1 GB total in the paper's
+//! experiments).
+//!
+//! Sleeps are scaled by `DMR_TIME_SCALE` (default 1.0) so live examples
+//! can run at, e.g., 100× speed without changing the workload definition.
+
+use anyhow::Result;
+
+use super::config::{config_for, AppKind};
+use crate::vmpi::Endpoint;
+
+pub struct FsShard {
+    pub rank: usize,
+    pub size: usize,
+    /// Payload ballast (f32s so redistribution reuses the row machinery).
+    pub data: Vec<f32>,
+    /// Seconds to sleep per iteration at the current size (pre-scaled).
+    pub sleep_per_iter: f64,
+}
+
+/// Total FS payload redistributed on resize (f32 elements).  The paper's
+/// overhead study transfers 1 GB; the default here is 64 MB so the test
+/// suite stays fast — the overhead-study bench overrides it via
+/// `DMR_FS_MB`.
+pub fn fs_payload_f32s() -> usize {
+    let mb: usize = std::env::var("DMR_FS_MB")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+    mb * 1024 * 1024 / 4
+}
+
+pub fn time_scale() -> f64 {
+    std::env::var("DMR_TIME_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+impl FsShard {
+    pub const ROW_F32S: usize = 1;
+
+    pub fn init(rank: usize, size: usize, work_scale: f64) -> FsShard {
+        let total = fs_payload_f32s();
+        let n_loc = total / size;
+        let off = rank * n_loc;
+        let data: Vec<f32> = (0..n_loc).map(|i| (off + i) as f32).collect();
+        let work = config_for(AppKind::FlexibleSleep).work_per_iter * work_scale;
+        FsShard {
+            rank,
+            size,
+            data,
+            sleep_per_iter: work / size as f64 * time_scale(),
+        }
+    }
+
+    pub fn step(&mut self, _ep: &Endpoint) -> Result<f64> {
+        std::thread::sleep(std::time::Duration::from_secs_f64(self.sleep_per_iter));
+        Ok(self.sleep_per_iter)
+    }
+
+    pub fn to_rows(&self) -> Vec<f32> {
+        self.data.clone()
+    }
+
+    pub fn from_rows(rank: usize, size: usize, rows: Vec<f32>, work_scale: f64) -> FsShard {
+        let work = config_for(AppKind::FlexibleSleep).work_per_iter * work_scale;
+        FsShard {
+            rank,
+            size,
+            data: rows,
+            sleep_per_iter: work / size as f64 * time_scale(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_splits_by_size() {
+        let a = FsShard::init(0, 4, 1.0);
+        assert_eq!(a.data.len(), fs_payload_f32s() / 4);
+        assert_eq!(a.data[0], 0.0);
+        let b = FsShard::init(1, 4, 1.0);
+        assert_eq!(b.data[0], (fs_payload_f32s() / 4) as f32);
+    }
+
+    #[test]
+    fn sleep_scales_inverse_with_size() {
+        let a = FsShard::init(0, 1, 1.0);
+        let b = FsShard::init(0, 4, 1.0);
+        assert!((a.sleep_per_iter / b.sleep_per_iter - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,12 @@
+//! The malleable applications of the evaluation (§7): CG, Jacobi, N-body
+//! and the synthetic Flexible Sleep, plus their Table 1 configurations.
+
+pub mod cg;
+pub mod config;
+pub mod fsleep;
+pub mod jacobi;
+pub mod nbody;
+pub mod state;
+
+pub use config::{config_for, AppConfig, AppKind};
+pub use state::{size_supported, AppState};

@@ -1,0 +1,118 @@
+//! Distributed all-pairs N-body: bodies sharded across ranks; positions
+//! all-gathered every step; forces/integration in `nbody_step_p{P}`.
+
+use anyhow::{Context, Result};
+
+use super::state::N_NB;
+use crate::runtime::{ComputeHandle, TensorF32};
+use crate::vmpi::Endpoint;
+
+const DT: f32 = 1e-3;
+
+pub struct NBodyShard {
+    pub rank: usize,
+    pub size: usize,
+    pub n_loc: usize,
+    /// Local positions (n_loc x 3 row-major).
+    pub pos: Vec<f32>,
+    /// Local velocities.
+    pub vel: Vec<f32>,
+    /// Full mass vector (deterministic; recomputed locally, never moved).
+    pub mass: Vec<f32>,
+}
+
+/// Deterministic initial position component (SplitMix64-hashed lattice).
+pub fn pos_at(body: usize, dim: usize) -> f32 {
+    let mut z = (body as u64).wrapping_mul(3).wrapping_add(dim as u64).wrapping_add(1);
+    z = z.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^= z >> 31;
+    // map to [-1, 1)
+    ((z >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+}
+
+impl NBodyShard {
+    /// pos(3) + vel(3) per body.
+    pub const ROW_F32S: usize = 6;
+
+    pub fn init(rank: usize, size: usize) -> NBodyShard {
+        let n_loc = N_NB / size;
+        let off = rank * n_loc;
+        let mut pos = Vec::with_capacity(n_loc * 3);
+        for b in 0..n_loc {
+            for d in 0..3 {
+                pos.push(pos_at(off + b, d));
+            }
+        }
+        let mass = vec![1.0 / N_NB as f32; N_NB];
+        NBodyShard { rank, size, n_loc, pos, vel: vec![0.0; n_loc * 3], mass }
+    }
+
+    /// One integration step; returns the global kinetic energy.
+    pub fn step(&mut self, ep: &Endpoint, compute: &ComputeHandle) -> Result<f64> {
+        let p = self.size;
+        let pos_all = ep.allgather_f32(&self.pos);
+        debug_assert_eq!(pos_all.len(), N_NB * 3);
+        let out = compute
+            .execute(
+                &format!("nbody_step_p{p}"),
+                vec![
+                    TensorF32::new(vec![N_NB, 3], pos_all),
+                    TensorF32::new(vec![self.n_loc, 3], self.pos.clone()),
+                    TensorF32::new(vec![self.n_loc, 3], self.vel.clone()),
+                    TensorF32::vec(self.mass.clone()),
+                    TensorF32::scalar(DT),
+                ],
+            )
+            .context("nbody_step")?;
+        self.pos = out[0].data.clone();
+        self.vel = out[1].data.clone();
+        Ok(ep.allreduce_sum(out[2].item() as f64))
+    }
+
+    pub fn to_rows(&self) -> Vec<f32> {
+        let mut rows = Vec::with_capacity(self.n_loc * 6);
+        for b in 0..self.n_loc {
+            rows.extend_from_slice(&self.pos[b * 3..b * 3 + 3]);
+            rows.extend_from_slice(&self.vel[b * 3..b * 3 + 3]);
+        }
+        rows
+    }
+
+    pub fn from_rows(rank: usize, size: usize, rows: Vec<f32>) -> NBodyShard {
+        let n_loc = rows.len() / 6;
+        assert_eq!(n_loc, N_NB / size, "N-body shard size mismatch");
+        let mut pos = Vec::with_capacity(n_loc * 3);
+        let mut vel = Vec::with_capacity(n_loc * 3);
+        for c in rows.chunks_exact(6) {
+            pos.extend_from_slice(&c[..3]);
+            vel.extend_from_slice(&c[3..]);
+        }
+        let mass = vec![1.0 / N_NB as f32; N_NB];
+        NBodyShard { rank, size, n_loc, pos, vel, mass }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_deterministic() {
+        let a = NBodyShard::init(0, 2);
+        let b = NBodyShard::init(1, 2);
+        assert_eq!(a.n_loc, 512);
+        assert_eq!(b.pos[0], pos_at(512, 0));
+        assert!(a.pos.iter().all(|&x| (-1.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn rows_roundtrip() {
+        let mut s = NBodyShard::init(3, 4);
+        s.vel.iter_mut().enumerate().for_each(|(i, v)| *v = i as f32 * 0.5);
+        let s2 = NBodyShard::from_rows(3, 4, s.to_rows());
+        assert_eq!(s2.pos, s.pos);
+        assert_eq!(s2.vel, s.vel);
+    }
+}

@@ -1,0 +1,153 @@
+//! Per-rank application state: the numeric shard a rank owns, how to step
+//! it (PJRT artifacts + vmpi halo exchange / reductions), and how to
+//! serialize it into redistribution rows (§6).
+//!
+//! Global problem sizes mirror `python/compile/model.py` — the artifacts
+//! are lowered for exactly these shapes.
+
+use anyhow::Result;
+
+use super::config::AppKind;
+use super::{cg::CgShard, fsleep::FsShard, jacobi::JacobiShard, nbody::NBodyShard};
+use crate::runtime::ComputeHandle;
+use crate::vmpi::Endpoint;
+
+/// Global CG vector length (== model.N_CG).
+pub const N_CG: usize = 16384;
+/// Global Jacobi grid (== model.JACOBI_ROWS/COLS).
+pub const JACOBI_ROWS: usize = 512;
+pub const JACOBI_COLS: usize = 256;
+/// Global N-body count (== model.N_NB).
+pub const N_NB: usize = 1024;
+/// Process counts with AOT artifacts (powers of two; factor-2 resizes stay
+/// inside this set).
+pub const PROC_COUNTS: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+/// The per-rank state of one running application.
+pub enum AppState {
+    Cg(CgShard),
+    Jacobi(JacobiShard),
+    NBody(NBodyShard),
+    Fs(FsShard),
+}
+
+impl AppState {
+    /// Fresh state for `rank` of `size` (deterministic — every rank
+    /// constructs its shard without communication).
+    pub fn init(app: AppKind, rank: usize, size: usize, work_scale: f64) -> AppState {
+        match app {
+            AppKind::Cg => AppState::Cg(CgShard::init(rank, size)),
+            AppKind::Jacobi => AppState::Jacobi(JacobiShard::init(rank, size)),
+            AppKind::NBody => AppState::NBody(NBodyShard::init(rank, size)),
+            AppKind::FlexibleSleep => AppState::Fs(FsShard::init(rank, size, work_scale)),
+        }
+    }
+
+    /// One outer-loop iteration (a "reconfiguring point" boundary).
+    /// Returns a monitor value (residual norm / kinetic energy) that
+    /// integration tests check for sanity.
+    pub fn step(&mut self, ep: &Endpoint, compute: &ComputeHandle) -> Result<f64> {
+        match self {
+            AppState::Cg(s) => s.step(ep, compute),
+            AppState::Jacobi(s) => s.step(ep, compute),
+            AppState::NBody(s) => s.step(ep, compute),
+            AppState::Fs(s) => s.step(ep),
+        }
+    }
+
+    /// Width (in f32s) of one redistribution row.
+    pub fn row_f32s(&self) -> usize {
+        match self {
+            AppState::Cg(_) => CgShard::ROW_F32S,
+            AppState::Jacobi(_) => JacobiShard::ROW_F32S,
+            AppState::NBody(_) => NBodyShard::ROW_F32S,
+            AppState::Fs(_) => FsShard::ROW_F32S,
+        }
+    }
+
+    /// Serialize the shard into rows (redistribution payload).
+    pub fn to_rows(&self) -> Vec<f32> {
+        match self {
+            AppState::Cg(s) => s.to_rows(),
+            AppState::Jacobi(s) => s.to_rows(),
+            AppState::NBody(s) => s.to_rows(),
+            AppState::Fs(s) => s.to_rows(),
+        }
+    }
+
+    /// Replicated scalars carried across a resize (e.g. CG's r·r).
+    pub fn scalars(&self) -> Vec<f64> {
+        match self {
+            AppState::Cg(s) => vec![s.rr],
+            _ => Vec::new(),
+        }
+    }
+
+    /// Rebuild the state of `rank`/`size` from redistribution rows.
+    pub fn from_rows(
+        app: AppKind,
+        rank: usize,
+        size: usize,
+        rows: Vec<f32>,
+        scalars: &[f64],
+        work_scale: f64,
+    ) -> AppState {
+        match app {
+            AppKind::Cg => AppState::Cg(CgShard::from_rows(rank, size, rows, scalars)),
+            AppKind::Jacobi => AppState::Jacobi(JacobiShard::from_rows(rank, size, rows)),
+            AppKind::NBody => AppState::NBody(NBodyShard::from_rows(rank, size, rows)),
+            AppKind::FlexibleSleep => {
+                AppState::Fs(FsShard::from_rows(rank, size, rows, work_scale))
+            }
+        }
+    }
+
+    /// Gather the full solution to rank 0 (integration-test hook).
+    pub fn gather_solution(&self, ep: &Endpoint) -> Vec<f32> {
+        let local = match self {
+            AppState::Cg(s) => s.x.clone(),
+            AppState::Jacobi(s) => s.u.clone(),
+            AppState::NBody(s) => s.pos.clone(),
+            AppState::Fs(_) => Vec::new(),
+        };
+        ep.allgather_f32(&local)
+    }
+}
+
+/// Whether `size` has artifacts (FS needs none).
+pub fn size_supported(app: AppKind, size: usize) -> bool {
+    app == AppKind::FlexibleSleep || PROC_COUNTS.contains(&size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_divide() {
+        for p in PROC_COUNTS {
+            assert_eq!(N_CG % p, 0);
+            assert_eq!(JACOBI_ROWS % p, 0);
+            assert_eq!(N_NB % p, 0);
+        }
+    }
+
+    #[test]
+    fn supported_sizes() {
+        assert!(size_supported(AppKind::Cg, 8));
+        assert!(!size_supported(AppKind::Cg, 20));
+        assert!(size_supported(AppKind::FlexibleSleep, 20));
+    }
+
+    #[test]
+    fn rows_roundtrip_without_comm() {
+        // CG state serializes and deserializes losslessly at same layout.
+        let s = AppState::init(AppKind::Cg, 1, 4, 1.0);
+        let rows = s.to_rows();
+        assert_eq!(rows.len() % s.row_f32s(), 0);
+        let scal = s.scalars();
+        let s2 = AppState::from_rows(AppKind::Cg, 1, 4, rows.clone(), &scal, 1.0);
+        assert_eq!(s2.to_rows(), rows);
+        assert_eq!(s2.scalars(), scal);
+    }
+}

@@ -1,0 +1,187 @@
+//! Node allocation map: the RMS-facing interface of the machine.
+
+use std::collections::BTreeSet;
+
+use super::NodeState;
+use crate::{JobId, NodeId};
+
+/// Allocation failure causes.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum AllocError {
+    #[error("requested {requested} nodes but only {available} available")]
+    Insufficient { requested: usize, available: usize },
+    #[error("node {0} is not allocated to job {1}")]
+    NotOwner(NodeId, JobId),
+    #[error("node {0} is not idle")]
+    NotIdle(NodeId),
+}
+
+/// A cluster of identical nodes.  Allocation is by count (the paper's
+/// policies reason about node *numbers*, not topology); the free set is a
+/// BTreeSet so allocations are deterministic (lowest ids first).
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    nodes: Vec<NodeState>,
+    free: BTreeSet<NodeId>,
+}
+
+impl Cluster {
+    pub fn new(n: usize) -> Self {
+        Self { nodes: vec![NodeState::Idle; n], free: (0..n).collect() }
+    }
+
+    /// Total node count (including down nodes).
+    pub fn total(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Currently allocatable node count.
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Nodes currently held by jobs.
+    pub fn allocated(&self) -> usize {
+        self.nodes.iter().filter(|s| matches!(s, NodeState::Allocated(_))).count()
+    }
+
+    pub fn state(&self, n: NodeId) -> &NodeState {
+        &self.nodes[n]
+    }
+
+    /// Allocate `count` nodes to `job`. Deterministic: lowest free ids.
+    pub fn alloc(&mut self, job: JobId, count: usize) -> Result<Vec<NodeId>, AllocError> {
+        if self.free.len() < count {
+            return Err(AllocError::Insufficient { requested: count, available: self.free.len() });
+        }
+        let picked: Vec<NodeId> = self.free.iter().take(count).copied().collect();
+        for &n in &picked {
+            self.free.remove(&n);
+            self.nodes[n] = NodeState::Allocated(job);
+        }
+        Ok(picked)
+    }
+
+    /// Release specific nodes held by `job` (the shrink path releases a
+    /// chosen suffix of the job's node list).
+    pub fn release(&mut self, job: JobId, nodes: &[NodeId]) -> Result<(), AllocError> {
+        for &n in nodes {
+            match self.nodes[n] {
+                NodeState::Allocated(j) if j == job => {}
+                _ => return Err(AllocError::NotOwner(n, job)),
+            }
+        }
+        for &n in nodes {
+            self.nodes[n] = NodeState::Idle;
+            self.free.insert(n);
+        }
+        Ok(())
+    }
+
+    /// Re-assign nodes from one job to another *without* freeing them —
+    /// the Slurm resizer-job trick (§3): job B's allocation is handed to
+    /// job A with no gap during which another job could steal the nodes.
+    pub fn transfer(&mut self, from: JobId, to: JobId, nodes: &[NodeId]) -> Result<(), AllocError> {
+        for &n in nodes {
+            match self.nodes[n] {
+                NodeState::Allocated(j) if j == from => {}
+                _ => return Err(AllocError::NotOwner(n, from)),
+            }
+        }
+        for &n in nodes {
+            self.nodes[n] = NodeState::Allocated(to);
+        }
+        Ok(())
+    }
+
+    /// Mark a node down (test/failure injection). Must be idle.
+    pub fn set_down(&mut self, n: NodeId) -> Result<(), AllocError> {
+        if self.nodes[n] != NodeState::Idle {
+            return Err(AllocError::NotIdle(n));
+        }
+        self.free.remove(&n);
+        self.nodes[n] = NodeState::Down;
+        Ok(())
+    }
+
+    /// Bring a down node back.
+    pub fn set_up(&mut self, n: NodeId) {
+        if self.nodes[n] == NodeState::Down {
+            self.nodes[n] = NodeState::Idle;
+            self.free.insert(n);
+        }
+    }
+
+    /// Internal consistency check (used by property tests).
+    pub fn check_invariants(&self) -> bool {
+        let idle = self.nodes.iter().filter(|s| **s == NodeState::Idle).count();
+        idle == self.free.len()
+            && self.free.iter().all(|&n| self.nodes[n] == NodeState::Idle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut c = Cluster::new(8);
+        assert_eq!(c.available(), 8);
+        let got = c.alloc(1, 3).unwrap();
+        assert_eq!(got, vec![0, 1, 2]);
+        assert_eq!(c.available(), 5);
+        assert_eq!(c.allocated(), 3);
+        c.release(1, &got).unwrap();
+        assert_eq!(c.available(), 8);
+        assert!(c.check_invariants());
+    }
+
+    #[test]
+    fn insufficient() {
+        let mut c = Cluster::new(4);
+        c.alloc(1, 3).unwrap();
+        let err = c.alloc(2, 2).unwrap_err();
+        assert_eq!(err, AllocError::Insufficient { requested: 2, available: 1 });
+    }
+
+    #[test]
+    fn release_wrong_owner_rejected() {
+        let mut c = Cluster::new(4);
+        let n = c.alloc(1, 2).unwrap();
+        assert!(c.release(2, &n).is_err());
+        // failed release must not mutate
+        assert_eq!(c.allocated(), 2);
+        assert!(c.check_invariants());
+    }
+
+    #[test]
+    fn transfer_keeps_nodes_allocated() {
+        let mut c = Cluster::new(4);
+        let n = c.alloc(7, 2).unwrap();
+        c.transfer(7, 9, &n).unwrap();
+        assert_eq!(*c.state(n[0]), NodeState::Allocated(9));
+        assert_eq!(c.available(), 2);
+        c.release(9, &n).unwrap();
+        assert!(c.check_invariants());
+    }
+
+    #[test]
+    fn down_nodes_unavailable() {
+        let mut c = Cluster::new(4);
+        c.set_down(0).unwrap();
+        assert_eq!(c.available(), 3);
+        let got = c.alloc(1, 3).unwrap();
+        assert_eq!(got, vec![1, 2, 3]);
+        c.set_up(0);
+        assert_eq!(c.available(), 1);
+        assert!(c.check_invariants());
+    }
+
+    #[test]
+    fn down_requires_idle() {
+        let mut c = Cluster::new(2);
+        c.alloc(1, 1).unwrap();
+        assert!(c.set_down(0).is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! The machine substrate: a cluster of identical compute nodes with an
+//! allocation map.
+//!
+//! Substitutes the paper's testbed (Marenostrum: 2× 8-core Xeon E5-2670
+//! per node, InfiniBand FDR10).  The paper's phenomena are scheduling-level
+//! — what matters is the node count, who holds which nodes, and when they
+//! are released; see DESIGN.md §2.
+
+mod allocation;
+
+pub use allocation::{AllocError, Cluster};
+
+use crate::JobId;
+
+/// State of one compute node.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NodeState {
+    /// Free for allocation.
+    Idle,
+    /// Held by a job.
+    Allocated(JobId),
+    /// Administratively removed (failure injection in tests).
+    Down,
+}
+
+/// Number of nodes of the paper's evaluation partition (Fig. 6 peaks at
+/// 64 allocated nodes).
+pub const DEFAULT_NODES: usize = 64;

@@ -1,0 +1,519 @@
+//! The discrete-event workload engine: processes a workload through the
+//! *real* RMS state machine in virtual time, with modeled iteration and
+//! reconfiguration costs (see [`super::sched_cost`], [`super::execmodel`]).
+//!
+//! The same `Rms` code drives both this engine and the live threaded mode
+//! — the DES only replaces wall-clock execution with the calibrated model,
+//! which is what lets the paper's 9-hour, 400-job workloads run in
+//! milliseconds (DESIGN.md §2).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use super::execmodel::ExecModel;
+use super::sched_cost::CostModel;
+use crate::dmr::{Inhibitor, SchedMode};
+use crate::rms::{Action, DmrOutcome, DmrRequest, Rms, RmsConfig};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::workload::{JobSpec, WorkloadSpec};
+use crate::{JobId, Time};
+
+/// DES configuration.
+#[derive(Debug, Clone)]
+pub struct DesConfig {
+    pub rms: RmsConfig,
+    pub mode: SchedMode,
+    pub costs: CostModel,
+    pub exec: ExecModel,
+    pub seed: u64,
+}
+
+impl Default for DesConfig {
+    fn default() -> Self {
+        DesConfig {
+            rms: RmsConfig::default(),
+            mode: SchedMode::Sync,
+            costs: CostModel::default(),
+            exec: ExecModel::default(),
+            seed: 0xD41,
+        }
+    }
+}
+
+/// Per-action timing statistics (Table 2).
+#[derive(Debug, Clone, Default)]
+pub struct ActionStats {
+    pub no_action: Summary,
+    pub expand: Summary,
+    pub shrink: Summary,
+    pub expand_aborts: u64,
+}
+
+/// Everything measured from one workload run.
+pub struct RunResult {
+    pub label: String,
+    pub rms: Rms,
+    pub makespan: Time,
+    pub first_submit: Time,
+    pub actions: ActionStats,
+    pub user_jobs: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum EvKind {
+    Arrival(usize),
+    Check,
+    Complete,
+    ResizeDone { to: usize, expand: bool, began: Time },
+    ExpandRetry { to: usize, began: Time, deadline: Time },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Ev {
+    t: Time,
+    seq: u64,
+    job: JobId,
+    epoch: u64,
+    kind: EvKind,
+}
+
+// Order by time (then sequence) for the min-heap.
+impl PartialEq for Ev {
+    fn eq(&self, o: &Self) -> bool {
+        self.t == o.t && self.seq == o.seq
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&o.t).then(self.seq.cmp(&o.seq))
+    }
+}
+
+struct SimJob {
+    spec: JobSpec,
+    procs: usize,
+    iters_done: f64,
+    last_t: Time,
+    running: bool,
+    epoch: u64,
+    inhibitor: Inhibitor,
+    pending_async: Option<Action>,
+}
+
+impl SimJob {
+    fn remaining(&self) -> f64 {
+        (self.spec.iterations as f64 - self.iters_done).max(0.0)
+    }
+}
+
+/// The engine.
+pub struct Engine {
+    cfg: DesConfig,
+    rms: Rms,
+    rng: Rng,
+    heap: BinaryHeap<Reverse<Ev>>,
+    jobs: HashMap<JobId, SimJob>,
+    specs: Vec<JobSpec>,
+    now: Time,
+    seq: u64,
+    actions: ActionStats,
+    done: usize,
+    user_jobs: usize,
+    first_submit: Time,
+}
+
+impl Engine {
+    pub fn new(cfg: DesConfig) -> Self {
+        let rms = Rms::new(cfg.rms.clone());
+        let rng = Rng::new(cfg.seed);
+        Engine {
+            cfg,
+            rms,
+            rng,
+            heap: BinaryHeap::new(),
+            jobs: HashMap::new(),
+            specs: Vec::new(),
+            now: 0.0,
+            seq: 0,
+            actions: ActionStats::default(),
+            done: 0,
+            user_jobs: 0,
+            first_submit: f64::INFINITY,
+        }
+    }
+
+    /// Direct access to the machine (failure-injection tests mark nodes
+    /// down before arrivals).
+    pub fn cluster_mut(&mut self) -> &mut crate::cluster::Cluster {
+        &mut self.rms.cluster
+    }
+
+    fn push(&mut self, t: Time, job: JobId, epoch: u64, kind: EvKind) {
+        self.seq += 1;
+        self.heap.push(Reverse(Ev { t, seq: self.seq, job, epoch, kind }));
+    }
+
+    /// Run a workload to completion; returns the measurements.
+    pub fn run(mut self, workload: &WorkloadSpec, label: &str) -> RunResult {
+        self.specs = workload.jobs.clone();
+        self.user_jobs = self.specs.len();
+        for i in 0..self.specs.len() {
+            let t = self.specs[i].submit_time;
+            self.push(t, 0, 0, EvKind::Arrival(i));
+        }
+
+        while let Some(Reverse(ev)) = self.heap.pop() {
+            debug_assert!(ev.t >= self.now - 1e-9, "time went backwards");
+            self.now = ev.t.max(self.now);
+            match ev.kind {
+                EvKind::Arrival(i) => self.on_arrival(i),
+                EvKind::Check => self.on_check(ev),
+                EvKind::Complete => self.on_complete(ev),
+                EvKind::ResizeDone { to, expand, began } => {
+                    self.on_resize_done(ev, to, expand, began)
+                }
+                EvKind::ExpandRetry { to, began, deadline } => {
+                    self.on_expand_retry(ev, to, began, deadline)
+                }
+            }
+            if self.done == self.user_jobs {
+                break;
+            }
+        }
+        assert_eq!(self.done, self.user_jobs, "workload did not drain");
+
+        RunResult {
+            label: label.to_string(),
+            makespan: self.now,
+            first_submit: self.first_submit,
+            actions: self.actions,
+            user_jobs: self.user_jobs,
+            rms: self.rms,
+        }
+    }
+
+    // ------------------------------------------------------------------
+
+    fn on_arrival(&mut self, i: usize) {
+        let spec = self.specs[i].clone();
+        self.first_submit = self.first_submit.min(self.now);
+        let id = self.rms.submit(spec, self.now);
+        // Estimate for backfill: duration at the requested size.
+        let est = self.cfg.exec.exec_time(&self.specs[i], self.specs[i].procs);
+        self.rms.set_expected_end(id, self.now + est);
+        self.try_schedule();
+    }
+
+    fn try_schedule(&mut self) {
+        self.rms.schedule(self.now);
+        let started = self.rms.take_recent_starts();
+        for s in started {
+            let job = match self.rms.job(s.job) {
+                Some(j) if !j.is_resizer => j,
+                _ => continue,
+            };
+            let spec = job.spec.clone();
+            let procs = s.nodes.len();
+            let iter_t = self.cfg.exec.iter_time(&spec, procs);
+            let period = spec.sched_period;
+            let sim = SimJob {
+                procs,
+                iters_done: 0.0,
+                last_t: self.now,
+                running: true,
+                epoch: 0,
+                inhibitor: Inhibitor::new(period),
+                pending_async: None,
+                spec,
+            };
+            let complete_at = self.now + sim.remaining() * iter_t;
+            self.rms.set_expected_end(s.job, complete_at);
+            let malleable = sim.spec.malleable;
+            let check_at = self.now + iter_t.max(period).max(1e-3);
+            self.jobs.insert(s.job, sim);
+            self.push(complete_at, s.job, 0, EvKind::Complete);
+            if malleable {
+                self.push(check_at, s.job, 0, EvKind::Check);
+            }
+        }
+    }
+
+    fn progress(&mut self, id: JobId) {
+        let exec = &self.cfg.exec;
+        if let Some(j) = self.jobs.get_mut(&id) {
+            if j.running {
+                let it = exec.iter_time(&j.spec, j.procs);
+                j.iters_done =
+                    (j.iters_done + (self.now - j.last_t) / it).min(j.spec.iterations as f64);
+            }
+            j.last_t = self.now;
+        }
+    }
+
+    fn on_complete(&mut self, ev: Ev) {
+        let Some(j) = self.jobs.get(&ev.job) else { return };
+        if j.epoch != ev.epoch || !j.running {
+            return; // stale
+        }
+        self.progress(ev.job);
+        let j = self.jobs.get_mut(&ev.job).unwrap();
+        debug_assert!(j.remaining() < 1e-6, "completion with work left");
+        j.running = false;
+        j.epoch += 1;
+        self.rms.finish(ev.job, self.now);
+        self.done += 1;
+        self.try_schedule();
+    }
+
+    fn on_check(&mut self, ev: Ev) {
+        let Some(j) = self.jobs.get(&ev.job) else { return };
+        if j.epoch != ev.epoch || !j.running {
+            return;
+        }
+        self.progress(ev.job);
+        let j = self.jobs.get_mut(&ev.job).unwrap();
+        if j.remaining() <= 1e-9 {
+            return; // completion event will fire at this same instant
+        }
+        let req = DmrRequest {
+            min: j.spec.min_procs,
+            max: j.spec.max_procs,
+            pref: j.spec.pref_procs,
+            factor: j.spec.factor,
+        };
+
+        if !j.inhibitor.allow(self.now) {
+            let epoch = j.epoch;
+            let next = self.next_check_time(ev.job);
+            self.push(next, ev.job, epoch, EvKind::Check);
+            return;
+        }
+
+        let mode = self.cfg.mode;
+        let outcome: Result<DmrOutcome, usize> = match mode {
+            SchedMode::Sync => Ok(self.rms.dmr_check(ev.job, &req, self.now)),
+            SchedMode::Async => {
+                let prev = self.jobs.get_mut(&ev.job).unwrap().pending_async.take();
+                let next_decision = self.rms.dmr_peek(ev.job, &req, self.now);
+                self.jobs.get_mut(&ev.job).unwrap().pending_async = Some(next_decision);
+                match prev {
+                    None | Some(Action::NoAction) => Ok(DmrOutcome::NoAction),
+                    Some(a) => match self.rms.dmr_apply(ev.job, a, self.now) {
+                        Ok(o) => Ok(o),
+                        Err(()) => {
+                            // Stale expansion: resizer job waits (§5.2.1).
+                            let to = match a {
+                                Action::Expand { to } => to,
+                                _ => unreachable!(),
+                            };
+                            Err(to)
+                        }
+                    },
+                }
+            }
+        };
+
+        match outcome {
+            Ok(DmrOutcome::NoAction) => {
+                let cost = self.cfg.costs.no_action(&mut self.rng);
+                self.actions.no_action.push(cost);
+                // The ~10 ms decision overhead is recorded (Table 2) but
+                // not charged against progress: charging it would require
+                // rescheduling the completion event for a <0.1 % effect
+                // (the inhibitor spaces the calls 15 s apart).
+                let epoch = self.jobs[&ev.job].epoch;
+                let next = self.next_check_time(ev.job).max(self.now + cost);
+                self.push(next, ev.job, epoch, EvKind::Check);
+            }
+            Ok(DmrOutcome::Expand { to, .. }) => self.begin_resize(ev.job, to, true, self.now),
+            Ok(DmrOutcome::Shrink { to, .. }) => self.begin_resize(ev.job, to, false, self.now),
+            Err(to) => {
+                // Pause and retry until the deadline (async wait hazard).
+                let j = self.jobs.get_mut(&ev.job).unwrap();
+                j.running = false;
+                j.epoch += 1;
+                let epoch = j.epoch;
+                let deadline = self.now + self.cfg.costs.expand_timeout;
+                self.push(
+                    self.now + 1.0,
+                    ev.job,
+                    epoch,
+                    EvKind::ExpandRetry { to, began: self.now, deadline },
+                );
+            }
+        }
+    }
+
+    /// Pause the job and schedule the commit of a granted resize.
+    fn begin_resize(&mut self, id: JobId, to: usize, expand: bool, began: Time) {
+        let j = self.jobs.get_mut(&id).unwrap();
+        let from = j.procs;
+        j.running = false;
+        j.epoch += 1;
+        let epoch = j.epoch;
+        let delta = to.abs_diff(from);
+        let sched = self.cfg.costs.action_sched(delta, &mut self.rng);
+        let transfer = self
+            .cfg
+            .costs
+            .resize_transfer(self.cfg.exec.resize_bytes, from, to);
+        self.push(
+            self.now + sched + transfer,
+            id,
+            epoch,
+            EvKind::ResizeDone { to, expand, began },
+        );
+    }
+
+    fn on_resize_done(&mut self, ev: Ev, to: usize, expand: bool, began: Time) {
+        let Some(j) = self.jobs.get(&ev.job) else { return };
+        if j.epoch != ev.epoch {
+            return;
+        }
+        if expand {
+            self.rms.commit_resize(ev.job, self.now);
+            self.actions.expand.push(self.now - began);
+        } else {
+            self.rms.commit_shrink_to(ev.job, to, self.now);
+            self.actions.shrink.push(self.now - began);
+        }
+        let j = self.jobs.get_mut(&ev.job).unwrap();
+        j.procs = to;
+        j.running = true;
+        j.last_t = self.now;
+        j.epoch += 1;
+        let epoch = j.epoch;
+        let iter_t = self.cfg.exec.iter_time(&j.spec, to);
+        let complete_at = self.now + j.remaining() * iter_t;
+        self.rms.set_expected_end(ev.job, complete_at);
+        self.push(complete_at, ev.job, epoch, EvKind::Complete);
+        let next = self.next_check_time(ev.job);
+        self.push(next, ev.job, epoch, EvKind::Check);
+        // A shrink may let queued jobs start.
+        self.try_schedule();
+    }
+
+    fn on_expand_retry(&mut self, ev: Ev, to: usize, began: Time, deadline: Time) {
+        let Some(j) = self.jobs.get(&ev.job) else { return };
+        if j.epoch != ev.epoch {
+            return;
+        }
+        match self.rms.dmr_apply(ev.job, Action::Expand { to }, self.now) {
+            Ok(DmrOutcome::Expand { .. }) => {
+                // Resources appeared: pay the protocol costs now; the
+                // elapsed wait is part of the measured expand time.
+                let j = self.jobs.get_mut(&ev.job).unwrap();
+                let from = j.procs;
+                j.epoch += 1;
+                let epoch = j.epoch;
+                let delta = to.abs_diff(from);
+                let sched = self.cfg.costs.action_sched(delta, &mut self.rng);
+                let transfer = self
+                    .cfg
+                    .costs
+                    .resize_transfer(self.cfg.exec.resize_bytes, from, to);
+                self.push(
+                    self.now + sched + transfer,
+                    ev.job,
+                    epoch,
+                    EvKind::ResizeDone { to, expand: true, began },
+                );
+            }
+            _ => {
+                if self.now + 1.0 <= deadline {
+                    let epoch = ev.epoch;
+                    self.push(
+                        self.now + 1.0,
+                        ev.job,
+                        epoch,
+                        EvKind::ExpandRetry { to, began, deadline },
+                    );
+                } else {
+                    // Timed out: abort the action and resume (§5.2.1).
+                    self.actions.expand.push(self.now - began);
+                    self.actions.expand_aborts += 1;
+                    let j = self.jobs.get_mut(&ev.job).unwrap();
+                    j.running = true;
+                    j.last_t = self.now;
+                    j.epoch += 1;
+                    let epoch = j.epoch;
+                    let iter_t = self.cfg.exec.iter_time(&j.spec, j.procs);
+                    let complete_at = self.now + j.remaining() * iter_t;
+                    self.rms.set_expected_end(ev.job, complete_at);
+                    self.push(complete_at, ev.job, epoch, EvKind::Complete);
+                    let next = self.next_check_time(ev.job);
+                    self.push(next, ev.job, epoch, EvKind::Check);
+                }
+            }
+        }
+    }
+
+    fn next_check_time(&self, id: JobId) -> Time {
+        let j = &self.jobs[&id];
+        let iter_t = self.cfg.exec.iter_time(&j.spec, j.procs);
+        // Reconfiguring points are iteration boundaries, rate-limited by
+        // the checking inhibitor.
+        self.now + iter_t.max(j.spec.sched_period).max(1e-3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload;
+
+    #[test]
+    fn single_fixed_job_runs_exact_time() {
+        let w = workload::generate(1, 1).as_fixed();
+        let spec = &w.jobs[0];
+        let want = ExecModel::default().exec_time(spec, spec.procs);
+        let r = Engine::new(DesConfig::default()).run(&w, "one");
+        let job = r.rms.jobs().next().unwrap();
+        let exec = job.exec_time().unwrap();
+        assert!((exec - want).abs() < 1e-6, "exec {exec} vs {want}");
+        assert_eq!(r.user_jobs, 1);
+    }
+
+    #[test]
+    fn fixed_workload_drains_and_is_deterministic() {
+        let w = workload::generate(30, 7).as_fixed();
+        let a = Engine::new(DesConfig::default()).run(&w, "a");
+        let b = Engine::new(DesConfig::default()).run(&w, "b");
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.rms.completed_jobs(), 30);
+        assert!(a.rms.check_invariants());
+    }
+
+    #[test]
+    fn flexible_beats_fixed_makespan() {
+        let w = workload::generate(30, 7);
+        let fixed = Engine::new(DesConfig::default()).run(&w.as_fixed(), "fixed");
+        let flex = Engine::new(DesConfig::default()).run(&w, "flexible");
+        assert_eq!(flex.rms.completed_jobs(), 30);
+        assert!(
+            flex.makespan < fixed.makespan,
+            "flexible {} !< fixed {}",
+            flex.makespan,
+            fixed.makespan
+        );
+        // Reconfigurations actually happened.
+        assert!(flex.actions.shrink.count() + flex.actions.expand.count() > 0);
+        assert!(flex.rms.check_invariants());
+    }
+
+    #[test]
+    fn async_mode_drains() {
+        let w = workload::generate(20, 9);
+        let cfg = DesConfig { mode: SchedMode::Async, ..Default::default() };
+        let r = Engine::new(cfg).run(&w, "async");
+        assert_eq!(r.rms.completed_jobs(), 20);
+        assert!(r.rms.check_invariants());
+    }
+}

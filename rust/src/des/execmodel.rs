@@ -1,0 +1,61 @@
+//! Execution-time model for the discrete-event mode.
+//!
+//! §7.4 of the paper observes the applications "scale linearly" across the
+//! evaluated range, so the default model is `iter_time(p) = work / p`.
+//! A parallel-efficiency exponent is exposed for the scaling-sensitivity
+//! ablation (DESIGN.md §5): `iter_time(p) = work / p^eff`.
+
+use crate::workload::JobSpec;
+
+#[derive(Debug, Clone)]
+pub struct ExecModel {
+    /// Scaling exponent: 1.0 = linear (paper's regime).
+    pub efficiency: f64,
+    /// Data redistributed on a resize, per job (bytes).  The FS overhead
+    /// study uses 1 GB (§7.3); the throughput workloads carry their state
+    /// (we model the same 1 GB order of magnitude).
+    pub resize_bytes: f64,
+}
+
+impl Default for ExecModel {
+    fn default() -> Self {
+        ExecModel { efficiency: 1.0, resize_bytes: 1e9 }
+    }
+}
+
+impl ExecModel {
+    /// Seconds per outer-loop iteration at `procs` processes.  The global
+    /// `efficiency` knob multiplies the per-app exponent (ablation).
+    pub fn iter_time(&self, spec: &JobSpec, procs: usize) -> f64 {
+        spec.work_per_iter() / (procs as f64).powf(spec.alpha * self.efficiency)
+    }
+
+    /// Full execution time at a fixed size.
+    pub fn exec_time(&self, spec: &JobSpec, procs: usize) -> f64 {
+        spec.iterations as f64 * self.iter_time(spec, procs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::config::AppKind;
+
+    #[test]
+    fn follows_app_alpha_by_default() {
+        let m = ExecModel::default();
+        let s = JobSpec::from_app(AppKind::Cg, "CG".into(), 0.0, 1.0);
+        // CG alpha = 0.33: quartering procs costs 4^0.33.
+        let want = 4f64.powf(0.33);
+        assert!((m.exec_time(&s, 8) / m.exec_time(&s, 32) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_knob_scales_alpha() {
+        // efficiency = 1/alpha on CG => effectively linear.
+        let m = ExecModel { efficiency: 1.0 / 0.33, ..Default::default() };
+        let s = JobSpec::from_app(AppKind::Cg, "CG".into(), 0.0, 1.0);
+        let speedup = m.exec_time(&s, 8) / m.exec_time(&s, 32);
+        assert!((speedup - 4.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,11 @@
+//! The discrete-event execution mode: the paper's 50–400-job workloads
+//! (fixed vs flexible, sync vs async) processed through the real RMS in
+//! virtual time with calibrated cost models.
+
+mod engine;
+mod execmodel;
+mod sched_cost;
+
+pub use engine::{ActionStats, DesConfig, Engine, RunResult};
+pub use execmodel::ExecModel;
+pub use sched_cost::CostModel;

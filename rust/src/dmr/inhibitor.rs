@@ -1,0 +1,100 @@
+//! The "checking inhibitor" (§5.1): a timeout during which DMR API calls
+//! are ignored, so iterative applications with short iterations do not
+//! hammer the RMS.  Tunable via the `DMR_INHIBIT_PERIOD` environment
+//! variable, like the paper's knob.
+
+use crate::Time;
+
+#[derive(Debug, Clone)]
+pub struct Inhibitor {
+    period: f64,
+    last: Option<Time>,
+}
+
+impl Inhibitor {
+    pub fn new(period: f64) -> Self {
+        Inhibitor { period, last: None }
+    }
+
+    /// Period from the environment override, falling back to `default`.
+    pub fn from_env(default: f64) -> Self {
+        let period = std::env::var("DMR_INHIBIT_PERIOD")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default);
+        Self::new(period)
+    }
+
+    pub fn period(&self) -> f64 {
+        self.period
+    }
+
+    /// Whether a DMR call at `now` may go through; if so, the inhibition
+    /// window restarts.
+    pub fn allow(&mut self, now: Time) -> bool {
+        match self.last {
+            Some(t) if now - t < self.period => false,
+            _ => {
+                self.last = Some(now);
+                true
+            }
+        }
+    }
+
+    /// Next time a call will be allowed.
+    pub fn next_allowed(&self, now: Time) -> Time {
+        match self.last {
+            Some(t) if now - t < self.period => t + self.period,
+            _ => now,
+        }
+    }
+
+    /// Carry the window across a reconfiguration (the new process set
+    /// resumes with the parent's inhibition state).
+    pub fn restore(period: f64, last: Option<Time>) -> Self {
+        Inhibitor { period, last }
+    }
+
+    pub fn last(&self) -> Option<Time> {
+        self.last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_call_allowed() {
+        let mut i = Inhibitor::new(15.0);
+        assert!(i.allow(0.0));
+        assert!(!i.allow(5.0));
+        assert!(!i.allow(14.9));
+        assert!(i.allow(15.0));
+    }
+
+    #[test]
+    fn zero_period_always_allows() {
+        let mut i = Inhibitor::new(0.0);
+        assert!(i.allow(0.0));
+        assert!(i.allow(0.0));
+    }
+
+    #[test]
+    fn next_allowed() {
+        let mut i = Inhibitor::new(10.0);
+        assert_eq!(i.next_allowed(3.0), 3.0);
+        i.allow(3.0);
+        assert_eq!(i.next_allowed(5.0), 13.0);
+        assert_eq!(i.next_allowed(20.0), 20.0);
+    }
+
+    #[test]
+    fn restore_carries_window() {
+        let mut a = Inhibitor::new(10.0);
+        a.allow(7.0);
+        let mut b = Inhibitor::restore(10.0, a.last());
+        assert!(!b.allow(12.0));
+        assert!(b.allow(17.0));
+    }
+}

@@ -1,0 +1,35 @@
+//! The DMR API runtime (§5): `dmr_check_status` semantics, the checking
+//! inhibitor, and the data-redistribution patterns of §6.
+//!
+//! The live (threaded) execution of these mechanisms lives in
+//! [`crate::live`]; the modeled (discrete-event) execution in
+//! [`crate::des`].  Both share the policy/protocol implementations here
+//! and in [`crate::rms`].
+
+pub mod inhibitor;
+pub mod protocol;
+pub mod redistribute;
+
+pub use inhibitor::Inhibitor;
+
+/// Scheduling mode (§5.1): synchronous `dmr_check_status` or asynchronous
+/// `dmr_icheck_status` (the decision is computed one reconfiguring point
+/// ahead and applied at the next one).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedMode {
+    Sync,
+    Async,
+}
+
+impl SchedMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedMode::Sync => "synchronous",
+            SchedMode::Async => "asynchronous",
+        }
+    }
+}
+pub use protocol::{Decision, StateMsg};
+pub use redistribute::{
+    expand_dest, expand_src, merge_rows, shrink_role, split_rows, ShrinkRole,
+};

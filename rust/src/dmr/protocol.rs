@@ -1,0 +1,132 @@
+//! Wire formats for the runtime's internal messages: the resize decision
+//! broadcast and the state-transfer message that carries a shard (plus the
+//! execution cursor) from the old process set to the new one.
+
+use crate::vmpi::bytes_to_f32s;
+#[cfg(not(target_endian = "little"))]
+use crate::vmpi::f32s_to_bytes;
+
+/// The decision rank 0 broadcasts at each reconfiguring point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision {
+    Continue,
+    /// Resize to `to` processes in group `new_group`; expand if
+    /// `to > current`.
+    Resize { to: u32, new_group: u64 },
+    /// The whole job is done (drain and exit) — used on the last
+    /// iteration.
+    Stop,
+}
+
+impl Decision {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Decision::Continue => vec![0],
+            Decision::Resize { to, new_group } => {
+                let mut b = vec![1];
+                b.extend_from_slice(&to.to_le_bytes());
+                b.extend_from_slice(&new_group.to_le_bytes());
+                b
+            }
+            Decision::Stop => vec![2],
+        }
+    }
+
+    pub fn decode(b: &[u8]) -> Decision {
+        match b[0] {
+            0 => Decision::Continue,
+            1 => {
+                let to = u32::from_le_bytes(b[1..5].try_into().unwrap());
+                let new_group = u64::from_le_bytes(b[5..13].try_into().unwrap());
+                Decision::Resize { to, new_group }
+            }
+            2 => Decision::Stop,
+            x => panic!("bad decision byte {x}"),
+        }
+    }
+}
+
+/// State handed from an old rank to a new rank (or between old ranks in
+/// the shrink merge): execution cursor + replicated scalars + shard rows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StateMsg {
+    /// Next iteration to execute.
+    pub iter: u32,
+    /// Checking-inhibitor window start (carried across the resize).
+    pub inhibit_last: f64,
+    /// App-specific replicated scalars (e.g. CG's r·r).
+    pub scalars: Vec<f64>,
+    /// Shard rows.
+    pub data: Vec<f32>,
+}
+
+impl StateMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(16 + self.scalars.len() * 8 + self.data.len() * 4);
+        b.extend_from_slice(&self.iter.to_le_bytes());
+        b.extend_from_slice(&self.inhibit_last.to_le_bytes());
+        b.extend_from_slice(&(self.scalars.len() as u32).to_le_bytes());
+        for s in &self.scalars {
+            b.extend_from_slice(&s.to_le_bytes());
+        }
+        // Append the payload in one memcpy (a temp f32s_to_bytes Vec here
+        // doubled the copies on the resize hot path — EXPERIMENTS.md §Perf).
+        #[cfg(target_endian = "little")]
+        unsafe {
+            b.extend_from_slice(std::slice::from_raw_parts(
+                self.data.as_ptr().cast::<u8>(),
+                self.data.len() * 4,
+            ));
+        }
+        #[cfg(not(target_endian = "little"))]
+        b.extend_from_slice(&f32s_to_bytes(&self.data));
+        b
+    }
+
+    pub fn decode(b: &[u8]) -> StateMsg {
+        let iter = u32::from_le_bytes(b[0..4].try_into().unwrap());
+        let inhibit_last = f64::from_le_bytes(b[4..12].try_into().unwrap());
+        let ns = u32::from_le_bytes(b[12..16].try_into().unwrap()) as usize;
+        let mut scalars = Vec::with_capacity(ns);
+        let mut off = 16;
+        for _ in 0..ns {
+            scalars.push(f64::from_le_bytes(b[off..off + 8].try_into().unwrap()));
+            off += 8;
+        }
+        let data = bytes_to_f32s(&b[off..]);
+        StateMsg { iter, inhibit_last, scalars, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decision_roundtrip() {
+        for d in [
+            Decision::Continue,
+            Decision::Resize { to: 8, new_group: 12345678901234 },
+            Decision::Stop,
+        ] {
+            assert_eq!(Decision::decode(&d.encode()), d);
+        }
+    }
+
+    #[test]
+    fn state_roundtrip() {
+        let m = StateMsg {
+            iter: 17,
+            inhibit_last: 3.25,
+            scalars: vec![1.5, -2.5e10],
+            data: vec![1.0, 2.0, 3.0],
+        };
+        assert_eq!(StateMsg::decode(&m.encode()), m);
+    }
+
+    #[test]
+    fn state_empty_sections() {
+        let m = StateMsg { iter: 0, inhibit_last: 0.0, scalars: vec![], data: vec![] };
+        assert_eq!(StateMsg::decode(&m.encode()), m);
+    }
+}

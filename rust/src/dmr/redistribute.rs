@@ -1,0 +1,154 @@
+//! Data redistribution patterns of §6 (Listing 3 / Fig. 2), over
+//! row-structured shards.
+//!
+//! Application state is serialized as *rows* of `row_f32s` consecutive
+//! f32 values (CG interleaves x/r/p per element → 3; Jacobi packs u+b per
+//! grid row → 2·cols; N-body packs pos+vel per body → 6).  Rows are
+//! what moves between ranks, so every pattern here is
+//! application-agnostic.
+//!
+//! * **Expand** (Fig. 2a): each of the old ranks partitions its rows into
+//!   `factor` contiguous parts; part `i` goes to new rank
+//!   `old_rank * factor + i`.
+//! * **Shrink** (Fig. 2b, Listing 3): old ranks are grouped by `factor`;
+//!   within each group all ranks but the last are *senders* that ship
+//!   their rows to the group's last rank (the *receiver*), which merges
+//!   rank-ordered and forwards the merged block to new rank
+//!   `old_rank / factor`.
+
+/// Role of an old rank in the shrink pattern.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShrinkRole {
+    /// Send local rows to `dst` (the group's receiver).
+    Sender { dst: usize },
+    /// Collect from `srcs` (ascending), merge with own rows last, forward
+    /// to new rank `new_dst`.
+    Receiver { srcs: Vec<usize>, new_dst: usize },
+}
+
+/// Listing 3's sender/receiver assignment:
+/// `sender = (rank % factor) < factor - 1`, `dst = factor*(rank/factor+1)-1`.
+pub fn shrink_role(rank: usize, factor: usize) -> ShrinkRole {
+    assert!(factor >= 2);
+    if rank % factor < factor - 1 {
+        ShrinkRole::Sender { dst: factor * (rank / factor + 1) - 1 }
+    } else {
+        let base = rank + 1 - factor;
+        ShrinkRole::Receiver { srcs: (base..rank).collect(), new_dst: rank / factor }
+    }
+}
+
+/// Partition `data` (rows of `row_f32s`) into `parts` contiguous blocks
+/// (Listing 3's `part_data`).  Rows must divide evenly — the shipped
+/// problem sizes guarantee it.
+pub fn split_rows(data: &[f32], row_f32s: usize, parts: usize) -> Vec<Vec<f32>> {
+    assert_eq!(data.len() % row_f32s, 0, "data not row-aligned");
+    let rows = data.len() / row_f32s;
+    assert_eq!(rows % parts, 0, "{rows} rows not divisible into {parts} parts");
+    let rows_per = rows / parts;
+    (0..parts)
+        .map(|i| data[i * rows_per * row_f32s..(i + 1) * rows_per * row_f32s].to_vec())
+        .collect()
+}
+
+/// Destination new rank for part `i` of old rank `r` during expansion.
+pub fn expand_dest(old_rank: usize, factor: usize, part: usize) -> usize {
+    old_rank * factor + part
+}
+
+/// Source old rank a new rank receives from during expansion.
+pub fn expand_src(new_rank: usize, factor: usize) -> usize {
+    new_rank / factor
+}
+
+/// Merge rank-ordered row blocks (shrink receiver side).
+pub fn merge_rows(parts: Vec<Vec<f32>>) -> Vec<f32> {
+    let total: usize = parts.iter().map(|p| p.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    for p in parts {
+        out.extend_from_slice(&p);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_rows_contiguous() {
+        let data: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let parts = split_rows(&data, 2, 3); // 6 rows of 2, 3 parts
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0], vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(parts[2], vec![8.0, 9.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible")]
+    fn split_rows_uneven_panics() {
+        split_rows(&[0.0; 6], 2, 2); // 3 rows into 2 parts
+    }
+
+    #[test]
+    fn shrink_roles_listing3() {
+        // factor 2, 4 old ranks: 0->1 (sender), 1 recv {0}, 2->3, 3 recv {2}
+        assert_eq!(shrink_role(0, 2), ShrinkRole::Sender { dst: 1 });
+        assert_eq!(shrink_role(1, 2), ShrinkRole::Receiver { srcs: vec![0], new_dst: 0 });
+        assert_eq!(shrink_role(2, 2), ShrinkRole::Sender { dst: 3 });
+        assert_eq!(shrink_role(3, 2), ShrinkRole::Receiver { srcs: vec![2], new_dst: 1 });
+        // factor 4, rank 5: group {4..7}, sender to 7
+        assert_eq!(shrink_role(5, 4), ShrinkRole::Sender { dst: 7 });
+        assert_eq!(
+            shrink_role(7, 4),
+            ShrinkRole::Receiver { srcs: vec![4, 5, 6], new_dst: 1 }
+        );
+    }
+
+    #[test]
+    fn expand_mapping_roundtrip() {
+        for factor in [2usize, 4, 8] {
+            for old in 0..4 {
+                for part in 0..factor {
+                    let dst = expand_dest(old, factor, part);
+                    assert_eq!(expand_src(dst, factor), old);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn whole_redistribution_preserves_order_expand_then_shrink() {
+        // 2 ranks -> 4 ranks -> 2 ranks roundtrip on a global array.
+        let row = 3usize;
+        let global: Vec<f32> = (0..24).map(|x| x as f32).collect(); // 8 rows
+        let shard = |r: usize, size: usize| -> Vec<f32> {
+            let rows = 8 / size;
+            global[r * rows * row..(r + 1) * rows * row].to_vec()
+        };
+        // expand 2->4
+        let mut new_shards = vec![Vec::new(); 4];
+        for r in 0..2 {
+            let parts = split_rows(&shard(r, 2), row, 2);
+            for (i, p) in parts.into_iter().enumerate() {
+                new_shards[expand_dest(r, 2, i)] = p;
+            }
+        }
+        for (r, s) in new_shards.iter().enumerate() {
+            assert_eq!(*s, shard(r, 4), "expand rank {r}");
+        }
+        // shrink 4->2
+        let mut merged = vec![Vec::new(); 2];
+        for r in 0..4 {
+            if let ShrinkRole::Receiver { srcs, new_dst } = shrink_role(r, 2) {
+                let mut parts: Vec<Vec<f32>> =
+                    srcs.iter().map(|&s| new_shards[s].clone()).collect();
+                parts.push(new_shards[r].clone());
+                merged[new_dst] = merge_rows(parts);
+            }
+        }
+        for (r, s) in merged.iter().enumerate() {
+            assert_eq!(*s, shard(r, 2), "shrink rank {r}");
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! # dmr — reproduction of the DMR API malleability framework
+//!
+//! Reproduces *"DMR API: Improving the Cluster Productivity by Turning
+//! Applications into Malleable"* (Iserte, Mayo, Quintana-Ortí, Beltran,
+//! Peña — Parallel Computing, 2018).
+//!
+//! The paper connects a resource manager (Slurm) with a parallel runtime
+//! (Nanos++/OmpSs) so running MPI jobs can be *expanded* or *shrunk*
+//! on-the-fly, raising global cluster throughput.  This crate rebuilds the
+//! whole stack in Rust over a simulated cluster substrate:
+//!
+//! * [`cluster`] — the machine: nodes and the allocation map.
+//! * [`workload`] — Feitelson-model workload generation (§7.1).
+//! * [`rms`] — the Slurm-like workload manager: multifactor priorities,
+//!   EASY backfill, and the paper's three-mode reconfiguration policy (§4)
+//!   with the expand-via-resizer-job / shrink-with-ACK protocols (§5.2).
+//! * [`vmpi`] — a virtual-MPI substrate: communicators, ranks, spawn,
+//!   point-to-point and collectives over in-process channels.
+//! * [`dmr`] — the DMR API itself: `dmr_check_status` /
+//!   `dmr_icheck_status`, the checking inhibitor, and the data
+//!   redistribution helpers of §6 (Listing 3 / Fig. 2).
+//! * [`runtime`] — the PJRT bridge: loads the AOT-compiled HLO artifacts
+//!   produced by `python/compile/aot.py` and executes them on the request
+//!   path (Python never runs at job time).
+//! * [`apps`] — the malleable applications of §7: CG, Jacobi, N-body and
+//!   the synthetic Flexible Sleep.
+//! * [`des`] — the discrete-event workload engine used to process the
+//!   paper's 50–400-job workloads (fixed vs flexible) in virtual time.
+//! * [`live`] — the threaded *live* driver: real rank threads, real data
+//!   redistribution, real PJRT compute.
+//! * [`metrics`] — recorders and report emitters for every table and
+//!   figure of §7.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod apps;
+pub mod cluster;
+pub mod des;
+pub mod dmr;
+pub mod live;
+pub mod metrics;
+pub mod rms;
+pub mod runtime;
+pub mod util;
+pub mod vmpi;
+pub mod workload;
+
+/// Simulation / wall-clock time in seconds (from an arbitrary epoch 0).
+pub type Time = f64;
+
+/// Job identifier assigned by the RMS at submission.
+pub type JobId = u64;
+
+/// Node identifier within the [`cluster::Cluster`].
+pub type NodeId = usize;

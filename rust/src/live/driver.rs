@@ -1,0 +1,175 @@
+//! The live workload driver: submits jobs at their arrival times, launches
+//! started jobs as vmpi rank-thread groups, reacts to completions and
+//! resizes.  Wall-clock time (optionally compressed for FS sleeps via
+//! `DMR_TIME_SCALE`).
+
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::job::{app_main, DriverEvent, JobCtx, Origin, SchedMode};
+use crate::rms::{Rms, RmsConfig};
+use crate::runtime::ComputeHandle;
+use crate::vmpi::World;
+use crate::workload::JobSpec;
+use crate::{JobId, Time};
+
+/// Driver options.
+#[derive(Clone)]
+pub struct LiveOpts {
+    pub rms: RmsConfig,
+    pub mode: SchedMode,
+    /// Compress arrival gaps by this factor (1.0 = real time).
+    pub arrival_scale: f64,
+    /// Final-solution probe (see [`JobCtx::probe`]).
+    pub probe: Option<mpsc::Sender<(JobId, Vec<f32>)>>,
+}
+
+impl Default for LiveOpts {
+    fn default() -> Self {
+        Self {
+            rms: RmsConfig::default(),
+            mode: SchedMode::Sync,
+            arrival_scale: 1.0,
+            probe: None,
+        }
+    }
+}
+
+/// Summary of a finished live run.
+pub struct LiveReport {
+    pub rms: Arc<Mutex<Rms>>,
+    pub makespan: Time,
+    pub jobs: usize,
+}
+
+/// The live system: RMS + vmpi world + PJRT compute handle.
+pub struct LiveDriver {
+    pub rms: Arc<Mutex<Rms>>,
+    pub world: World,
+    compute: ComputeHandle,
+    opts: LiveOpts,
+    epoch: Instant,
+    events_tx: mpsc::Sender<DriverEvent>,
+    events_rx: mpsc::Receiver<DriverEvent>,
+}
+
+impl LiveDriver {
+    pub fn new(opts: LiveOpts, compute: ComputeHandle) -> Self {
+        let (events_tx, events_rx) = mpsc::channel();
+        LiveDriver {
+            rms: Arc::new(Mutex::new(Rms::new(opts.rms.clone()))),
+            world: World::new(),
+            compute,
+            opts,
+            epoch: Instant::now(),
+            events_tx,
+            events_rx,
+        }
+    }
+
+    pub fn now(&self) -> Time {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Launch a started job as a group of rank threads.
+    fn launch(&self, id: JobId, procs: usize, spec: &JobSpec) {
+        let ctx = Arc::new(JobCtx {
+            job: id,
+            app: spec.app,
+            spec: spec.clone(),
+            rms: Arc::clone(&self.rms),
+            world: self.world.clone(),
+            compute: self.compute.clone(),
+            epoch: self.epoch,
+            events: self.events_tx.clone(),
+            mode: self.opts.mode,
+            probe: self.opts.probe.clone(),
+        });
+        let ctx2 = Arc::clone(&ctx);
+        self.world.spawn(procs, move |ep| {
+            app_main(Arc::clone(&ctx2), ep, Origin::Fresh)
+        });
+    }
+
+    /// Submit the workload at (scaled) arrival times and run to drain.
+    pub fn run(&mut self, mut specs: Vec<JobSpec>) -> LiveReport {
+        specs.sort_by(|a, b| a.submit_time.partial_cmp(&b.submit_time).unwrap());
+        let mut spec_of: HashMap<JobId, JobSpec> = HashMap::new();
+        let total = specs.len();
+        let mut next = 0usize;
+        let mut done = 0usize;
+
+        while done < total {
+            // Submit everything that has arrived.
+            let now = self.now();
+            let mut submitted = false;
+            while next < total && specs[next].submit_time * self.opts.arrival_scale <= now {
+                let spec = specs[next].clone();
+                next += 1;
+                let mut rms = self.rms.lock().unwrap();
+                let id = rms.submit(spec.clone(), now);
+                let est = spec.est_duration();
+                rms.set_expected_end(id, now + est);
+                spec_of.insert(id, spec);
+                submitted = true;
+            }
+            if submitted || done > 0 {
+                self.schedule_and_launch(&spec_of);
+            }
+
+            // Wait for the next arrival or a job event.
+            let wake = if next < total {
+                let t = specs[next].submit_time * self.opts.arrival_scale;
+                Some((t - self.now()).max(0.0))
+            } else {
+                None
+            };
+            let ev = match wake {
+                Some(dt) => self
+                    .events_rx
+                    .recv_timeout(Duration::from_secs_f64(dt.min(0.5).max(1e-3)))
+                    .ok(),
+                None => self
+                    .events_rx
+                    .recv_timeout(Duration::from_millis(200))
+                    .ok(),
+            };
+            match ev {
+                Some(DriverEvent::JobDone(_id)) => {
+                    done += 1;
+                    self.schedule_and_launch(&spec_of);
+                }
+                Some(DriverEvent::Reschedule) => {
+                    self.schedule_and_launch(&spec_of);
+                }
+                None => {}
+            }
+        }
+
+        LiveReport { rms: Arc::clone(&self.rms), makespan: self.now(), jobs: total }
+    }
+
+    fn schedule_and_launch(&self, spec_of: &HashMap<JobId, JobSpec>) {
+        let started = {
+            let mut rms = self.rms.lock().unwrap();
+            let now = self.now();
+            rms.schedule(now);
+            // Drain *all* unobserved starts: scheduling passes also run
+            // inside dmr_check (resizer protocol) on job threads.
+            let started = rms.take_recent_starts();
+            for s in &started {
+                if let Some(spec) = spec_of.get(&s.job) {
+                    rms.set_expected_end(s.job, now + spec.est_duration());
+                }
+            }
+            started
+        };
+        for s in started {
+            // Resizer jobs and already-handled ids are not in spec_of.
+            if let Some(spec) = spec_of.get(&s.job) {
+                self.launch(s.job, s.nodes.len(), spec);
+            }
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! The per-rank application main loop — Listing 3 of the paper, executed
+//! by real threads with real data movement and real PJRT compute.
+//!
+//! Every iteration is a reconfiguring point: rank 0 consults the RMS
+//! (through the checking inhibitor), broadcasts the decision, and on a
+//! resize the whole process set redistributes its shards to a freshly
+//! spawned set (§5.2, §6) and terminates; the new set resumes from the
+//! carried iteration cursor.
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use crate::apps::config::AppKind;
+use crate::apps::state::AppState;
+use crate::dmr::{
+    expand_dest, merge_rows, shrink_role, split_rows, Decision, Inhibitor,
+    ShrinkRole, StateMsg,
+};
+use crate::rms::{Action, DmrOutcome, DmrRequest, Rms};
+use crate::runtime::ComputeHandle;
+use crate::vmpi::{Endpoint, GroupId, RecvSelector, World, TAG_ACK, TAG_DECISION, TAG_STATE};
+use crate::workload::JobSpec;
+use crate::{JobId, Time};
+
+pub use crate::dmr::SchedMode;
+
+/// Events the job threads send back to the driver.
+#[derive(Debug)]
+pub enum DriverEvent {
+    JobDone(JobId),
+    /// A resize committed; the driver should run a scheduling pass (a
+    /// shrink may have unblocked a queued job).
+    Reschedule,
+}
+
+/// Everything a rank thread needs; shared per job via Arc.
+pub struct JobCtx {
+    pub job: JobId,
+    pub app: AppKind,
+    pub spec: JobSpec,
+    pub rms: Arc<Mutex<Rms>>,
+    pub world: World,
+    pub compute: ComputeHandle,
+    pub epoch: Instant,
+    pub events: mpsc::Sender<DriverEvent>,
+    pub mode: SchedMode,
+    /// Test/validation hook: rank 0 sends the gathered final solution
+    /// here on completion.
+    pub probe: Option<mpsc::Sender<(JobId, Vec<f32>)>>,
+}
+
+impl JobCtx {
+    pub fn now(&self) -> Time {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    fn req(&self) -> DmrRequest {
+        DmrRequest {
+            min: self.spec.min_procs,
+            max: self.spec.max_procs,
+            pref: self.spec.pref_procs,
+            factor: self.spec.factor,
+        }
+    }
+}
+
+/// How a rank obtained its state.
+pub enum Origin {
+    /// Fresh start (initial allocation).
+    Fresh,
+    /// Spawned by a resize: receive state from the parent group.
+    Spawned { parent: GroupId },
+}
+
+/// Rank-0 scheduling state carried across resizes.
+struct Rank0State {
+    inhibitor: Inhibitor,
+    /// Async mode: the decision computed at the previous point.
+    pending: Option<Action>,
+}
+
+/// The rank main function.  `origin` tells whether to build fresh state or
+/// receive it from the parent process set.
+pub fn app_main(ctx: Arc<JobCtx>, ep: Endpoint, origin: Origin) {
+    let rank = ep.rank();
+    let size = ep.size();
+
+    // ------------------------------------------------------------------
+    // Obtain state (Listing 1's MPI_Comm_get_parent pattern).
+    let (mut state, mut iter, mut r0) = match origin {
+        Origin::Fresh => (
+            AppState::init(ctx.app, rank, size, ctx.spec.work_scale),
+            0u32,
+            Rank0State {
+                inhibitor: Inhibitor::new(ctx.spec.sched_period),
+                pending: None,
+            },
+        ),
+        Origin::Spawned { parent } => {
+            let msg = ep.recv(RecvSelector::tag(TAG_STATE));
+            let sm = StateMsg::decode(&msg.payload);
+            let state = AppState::from_rows(
+                ctx.app,
+                rank,
+                size,
+                sm.data,
+                &sm.scalars,
+                ctx.spec.work_scale,
+            );
+            let r0 = Rank0State {
+                inhibitor: Inhibitor::restore(
+                    ctx.spec.sched_period,
+                    if sm.inhibit_last >= 0.0 { Some(sm.inhibit_last) } else { None },
+                ),
+                pending: None,
+            };
+            // All state received: detach from the parent group.
+            ep.barrier();
+            if rank == 0 {
+                ctx.world.join_group(parent);
+                ctx.world.destroy_group(parent);
+            }
+            (state, sm.iter, r0)
+        }
+    };
+
+    // ------------------------------------------------------------------
+    // Main loop (Listing 3).
+    while iter < ctx.spec.iterations {
+        let decision = decide_collectively(&ctx, &ep, iter, &mut r0);
+        match decision {
+            Decision::Continue => {
+                state
+                    .step(&ep, &ctx.compute)
+                    .unwrap_or_else(|e| panic!("job {} step failed: {e:#}", ctx.job));
+                iter += 1;
+            }
+            Decision::Resize { to, new_group } => {
+                perform_resize(&ctx, &ep, to as usize, new_group, iter, &state, &r0);
+                return; // old process set terminates (Listing 2 line 22)
+            }
+            Decision::Stop => return,
+        }
+    }
+
+    // Completed: gather the solution (collective — doubles as the final
+    // barrier), then rank 0 reports to the RMS and driver.
+    let solution = state.gather_solution(&ep);
+    if rank == 0 {
+        let now = ctx.now();
+        {
+            let mut rms = ctx.rms.lock().unwrap();
+            rms.finish(ctx.job, now);
+        }
+        if let Some(tx) = &ctx.probe {
+            let _ = tx.send((ctx.job, solution));
+        }
+        let _ = ctx.events.send(DriverEvent::JobDone(ctx.job));
+    }
+}
+
+/// Rank 0 consults the RMS (inhibitor-gated) and broadcasts the decision;
+/// other ranks receive it.  On a resize rank 0 also spawns the new group.
+fn decide_collectively(
+    ctx: &Arc<JobCtx>,
+    ep: &Endpoint,
+    iter: u32,
+    r0: &mut Rank0State,
+) -> Decision {
+    if ep.rank() != 0 {
+        let m = ep.recv(RecvSelector::from_rank(ep.group(), 0, TAG_DECISION));
+        return Decision::decode(&m.payload);
+    }
+
+    let mut decision = Decision::Continue;
+    if ctx.spec.malleable && iter + 1 < ctx.spec.iterations {
+        let now = ctx.now();
+        if r0.inhibitor.allow(now) {
+            let outcome = {
+                let mut rms = ctx.rms.lock().unwrap();
+                match ctx.mode {
+                    SchedMode::Sync => rms.dmr_check(ctx.job, &ctx.req(), now),
+                    SchedMode::Async => {
+                        // Apply the decision computed at the previous
+                        // point; schedule the next one (§5.1).
+                        let prev = r0.pending.take();
+                        r0.pending = Some(rms.dmr_peek(ctx.job, &ctx.req(), now));
+                        match prev {
+                            Some(a) => rms
+                                .dmr_apply(ctx.job, a, now)
+                                // Stale expansion: the resizer job would
+                                // wait; live mode aborts immediately.
+                                .unwrap_or(DmrOutcome::NoAction),
+                            None => DmrOutcome::NoAction,
+                        }
+                    }
+                }
+            };
+            decision = match outcome {
+                DmrOutcome::NoAction => Decision::Continue,
+                DmrOutcome::Expand { to, .. } | DmrOutcome::Shrink { to, .. } => {
+                    let new_group = spawn_new_set(ctx, ep.group(), to);
+                    Decision::Resize { to: to as u32, new_group }
+                }
+            };
+        }
+    }
+    let payload = decision.encode();
+    for r in 1..ep.size() {
+        ep.send(r, TAG_DECISION, payload.clone());
+    }
+    decision
+}
+
+/// Spawn the next process set for this job (MPI_Comm_spawn, §3).
+fn spawn_new_set(ctx: &Arc<JobCtx>, parent: GroupId, to: usize) -> GroupId {
+    let ctx2 = Arc::clone(ctx);
+    ctx.world.spawn(to, move |ep| {
+        app_main(Arc::clone(&ctx2), ep, Origin::Spawned { parent })
+    })
+}
+
+/// Execute the redistribution of Listing 3 / Fig. 2 and commit the resize
+/// with the RMS.
+fn perform_resize(
+    ctx: &Arc<JobCtx>,
+    ep: &Endpoint,
+    to: usize,
+    new_group: GroupId,
+    iter: u32,
+    state: &AppState,
+    r0: &Rank0State,
+) {
+    let from = ep.size();
+    let rank = ep.rank();
+    let rows = state.to_rows();
+    let row_f32s = state.row_f32s();
+    let scalars = state.scalars();
+    let inhibit_last = r0.inhibitor.last().unwrap_or(-1.0);
+    let mk = |data: Vec<f32>| {
+        StateMsg { iter, inhibit_last, scalars: scalars.clone(), data }.encode()
+    };
+
+    if to > from {
+        // ---- Expand (Fig. 2a): partition and send to factor children.
+        let factor = to / from;
+        assert_eq!(to % from, 0, "expand {from}->{to} not integral");
+        let parts = split_rows(&rows, row_f32s, factor);
+        for (i, part) in parts.into_iter().enumerate() {
+            ep.send_to_group(new_group, expand_dest(rank, factor, i), TAG_STATE, mk(part));
+        }
+        ep.barrier();
+        if rank == 0 {
+            let now = ctx.now();
+            ctx.rms.lock().unwrap().commit_resize(ctx.job, now);
+            let _ = ctx.events.send(DriverEvent::Reschedule);
+        }
+    } else {
+        // ---- Shrink (Fig. 2b / Listing 3): intra-group merge at the
+        // receivers, then forward to the new set; every rank ACKs rank 0
+        // before its node is released (§5.2.2).
+        let factor = from / to;
+        assert_eq!(from % to, 0, "shrink {from}->{to} not integral");
+        match shrink_role(rank, factor) {
+            ShrinkRole::Sender { dst } => {
+                ep.send(dst, TAG_STATE, mk(rows));
+            }
+            ShrinkRole::Receiver { srcs, new_dst } => {
+                let mut parts: Vec<Vec<f32>> = Vec::with_capacity(srcs.len() + 1);
+                let mut got: Vec<(usize, Vec<f32>)> = srcs
+                    .iter()
+                    .map(|&s| {
+                        let m = ep.recv(RecvSelector::from_rank(ep.group(), s, TAG_STATE));
+                        (s, StateMsg::decode(&m.payload).data)
+                    })
+                    .collect();
+                got.sort_by_key(|(s, _)| *s);
+                for (_, d) in got {
+                    parts.push(d);
+                }
+                parts.push(rows);
+                ep.send_to_group(new_group, new_dst, TAG_STATE, mk(merge_rows(parts)));
+            }
+        }
+        // ACK-synchronized release.
+        if rank == 0 {
+            for _ in 1..from {
+                ep.recv(RecvSelector::tag(TAG_ACK));
+            }
+            let now = ctx.now();
+            ctx.rms.lock().unwrap().commit_shrink_to(ctx.job, to, now);
+            let _ = ctx.events.send(DriverEvent::Reschedule);
+        } else {
+            ep.send(0, TAG_ACK, Vec::new());
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! The live execution mode: real rank threads over [`crate::vmpi`], real
+//! data redistribution, real PJRT compute through [`crate::runtime`].
+//! Used by the examples, the overhead study (Fig. 3) and the end-to-end
+//! integration tests; the paper-scale workloads run in [`crate::des`].
+
+mod driver;
+mod job;
+pub mod overhead;
+
+pub use driver::{LiveDriver, LiveOpts, LiveReport};
+pub use job::{app_main, DriverEvent, JobCtx, Origin, SchedMode};

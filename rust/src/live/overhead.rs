@@ -1,0 +1,195 @@
+//! The isolated overhead study of §7.3 (Fig. 3), measured on *our* stack:
+//!
+//! * **Scheduling time** — wall time of the RMS reconfiguration decision
+//!   (the `dmr_check` path, including the resizer-job protocol for
+//!   expansions).
+//! * **Resize time** — wall time of the data redistribution between real
+//!   process sets (threads), moving the configured payload through the
+//!   vmpi substrate with the exact Listing 3 patterns.
+//!
+//! Absolute values differ from the paper's (their scheduling time is a
+//! Slurm RPC over a cluster network; their transfers ride InfiniBand) —
+//! EXPERIMENTS.md compares the *shapes*.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::dmr::{
+    expand_dest, merge_rows, shrink_role, split_rows, ShrinkRole, StateMsg,
+};
+use crate::rms::{DmrOutcome, DmrRequest, Rms, RmsConfig};
+use crate::vmpi::{RecvSelector, World, TAG_ACK, TAG_STATE};
+use crate::workload::JobSpec;
+
+/// One measured reconfiguration.
+#[derive(Debug, Clone)]
+pub struct OverheadSample {
+    pub from: usize,
+    pub to: usize,
+    pub sched_secs: f64,
+    pub resize_secs: f64,
+}
+
+/// Measure the RMS scheduling time for a `from -> to` reconfiguration
+/// (fresh RMS per repetition, as each FS job in the paper performs one
+/// reconfiguration).
+pub fn measure_sched(from: usize, to: usize, nodes: usize) -> f64 {
+    let mut rms = Rms::new(RmsConfig { nodes, ..Default::default() });
+    let mut spec = JobSpec::from_app(crate::apps::config::AppKind::FlexibleSleep, "FS".into(), 0.0, 1.0);
+    spec.procs = from;
+    spec.min_procs = 1;
+    spec.max_procs = from.max(to);
+    spec.pref_procs = None;
+    let id = rms.submit(spec.clone(), 0.0);
+    rms.schedule(0.0);
+
+    // A queued job triggers the shrink path (as in the workload runs).
+    if to < from {
+        let mut q = spec.clone();
+        q.name = "queued".into();
+        q.procs = from - to;
+        rms.submit(q, 0.5);
+    }
+
+    let req = DmrRequest {
+        min: if to > from { to } else { 1 },
+        max: from.max(to),
+        pref: Some(to),
+        factor: 2,
+    };
+    let t0 = Instant::now();
+    let out = rms.dmr_check(id, &req, 1.0);
+    let dt = t0.elapsed().as_secs_f64();
+    match out {
+        DmrOutcome::Expand { to: t, .. } => debug_assert_eq!(t, to),
+        DmrOutcome::Shrink { to: t, .. } => debug_assert_eq!(t, to),
+        DmrOutcome::NoAction => {}
+    }
+    dt
+}
+
+/// Measure the redistribution time of `total_f32s` elements between real
+/// thread groups of size `from` and `to` (expand or shrink pattern picked
+/// automatically).  Returns seconds from decision broadcast to the last
+/// state byte received + ACKs collected.
+pub fn measure_resize(from: usize, to: usize, total_f32s: usize) -> f64 {
+    assert!(from != to);
+    let world = World::new();
+    let row = 1usize;
+    let per_old = total_f32s / from;
+    let (done_tx, done_rx) = mpsc::channel::<()>();
+
+    // New group: each rank waits for its state message.
+    let new_gid = world.spawn(to, move |ep| {
+        let m = ep.recv(RecvSelector::tag(TAG_STATE));
+        let sm = StateMsg::decode(&m.payload);
+        std::hint::black_box(&sm.data);
+        ep.barrier();
+        if ep.rank() == 0 {
+            done_tx.send(()).unwrap();
+        }
+    });
+
+    let t0 = Instant::now();
+    // Old group: run the exact Listing 3 redistribution.
+    let old_gid = world.spawn(from, move |ep| {
+        let rank = ep.rank();
+        let data: Vec<f32> = vec![rank as f32; per_old];
+        let mk = |d: Vec<f32>| {
+            StateMsg { iter: 1, inhibit_last: 0.0, scalars: vec![], data: d }.encode()
+        };
+        if to > from {
+            let factor = to / from;
+            let parts = split_rows(&data, row, factor);
+            for (i, p) in parts.into_iter().enumerate() {
+                ep.send_to_group(new_gid, expand_dest(rank, factor, i), TAG_STATE, mk(p));
+            }
+        } else {
+            let factor = from / to;
+            match shrink_role(rank, factor) {
+                ShrinkRole::Sender { dst } => {
+                    ep.send(dst, TAG_STATE, mk(data));
+                }
+                ShrinkRole::Receiver { srcs, new_dst } => {
+                    let mut parts: Vec<Vec<f32>> = Vec::with_capacity(srcs.len() + 1);
+                    for s in srcs {
+                        let m = ep.recv(RecvSelector::from_rank(ep.group(), s, TAG_STATE));
+                        parts.push(StateMsg::decode(&m.payload).data);
+                    }
+                    parts.push(data);
+                    ep.send_to_group(new_gid, new_dst, TAG_STATE, mk(merge_rows(parts)));
+                }
+            }
+            // ACK-synchronized release (§5.2.2).
+            if rank == 0 {
+                for _ in 1..from {
+                    ep.recv(RecvSelector::tag(TAG_ACK));
+                }
+            } else {
+                ep.send(0, TAG_ACK, Vec::new());
+            }
+        }
+    });
+
+    done_rx.recv().expect("resize never completed");
+    let dt = t0.elapsed().as_secs_f64();
+    world.join_group(old_gid);
+    world.join_group(new_gid);
+    world.destroy_group(old_gid);
+    world.destroy_group(new_gid);
+    dt
+}
+
+/// The Fig. 3 sweep: factor-2 reconfigurations 1<->2 ... 32<->64, `reps`
+/// repetitions each, over `total_f32s` elements of payload.
+pub fn fig3_sweep(reps: usize, total_f32s: usize) -> Vec<OverheadSample> {
+    let mut out = Vec::new();
+    let pairs: Vec<(usize, usize)> = (0..6).map(|k| (1usize << k, 1usize << (k + 1))).collect();
+    // expansions (top half of the paper's chart), then shrinks
+    for &(a, b) in &pairs {
+        for dir in [(a, b), (b, a)] {
+            let (from, to) = dir;
+            let mut sched = 0.0;
+            let mut resize = 0.0;
+            for _ in 0..reps {
+                sched += measure_sched(from, to, 128);
+                resize += measure_resize(from, to, total_f32s);
+            }
+            out.push(OverheadSample {
+                from,
+                to,
+                sched_secs: sched / reps as f64,
+                resize_secs: resize / reps as f64,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sched_measures_positive() {
+        let s = measure_sched(4, 8, 32);
+        assert!(s > 0.0 && s < 1.0);
+        let s = measure_sched(8, 4, 32);
+        assert!(s > 0.0 && s < 1.0);
+    }
+
+    #[test]
+    fn resize_expand_and_shrink_complete() {
+        let t = measure_resize(2, 4, 1 << 16);
+        assert!(t > 0.0 && t < 5.0);
+        let t = measure_resize(4, 2, 1 << 16);
+        assert!(t > 0.0 && t < 5.0);
+    }
+
+    #[test]
+    fn small_sweep_runs() {
+        let samples = fig3_sweep(1, 1 << 14);
+        assert_eq!(samples.len(), 12);
+        assert!(samples.iter().all(|s| s.resize_secs > 0.0));
+    }
+}

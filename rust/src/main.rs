@@ -1,0 +1,325 @@
+//! `repro` — the leader entrypoint: regenerates every table and figure of
+//! the paper's evaluation (§7) and drives the live end-to-end runs.
+//!
+//! Subcommands (see `repro help`):
+//!   throughput  Table 4 + Fig 4 + Fig 5 (workload sweep, fixed vs flexible)
+//!   table2      Table 2 (action analysis, sync vs async)
+//!   table3      Table 3 (cluster/job measures, fixed vs sync vs async)
+//!   trace       Fig 6 (time evolution of one workload)
+//!   perjob      Fig 7 + Fig 8 (per-job times by application)
+//!   overhead    Fig 3 (live scheduling + resize times)
+//!   live        small live workload with real PJRT compute
+//!   all         everything DES-based
+fn main() {
+    if let Err(e) = dmr_main::run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+mod dmr_main {
+    use anyhow::Result;
+    use dmr::des::{DesConfig, Engine};
+    use dmr::dmr::SchedMode;
+    use dmr::metrics::{report, RunSummary};
+    use dmr::rms::RmsConfig;
+    use dmr::util::cli::Args;
+    use dmr::util::csv::write_csv;
+    use dmr::workload;
+
+    pub fn run() -> Result<()> {
+        let args = Args::from_env();
+        match args.subcommand.as_deref() {
+            Some("throughput") => throughput(&args),
+            Some("table2") => table2(&args),
+            Some("table3") => table3(&args),
+            Some("trace") => trace(&args),
+            Some("perjob") => perjob(&args),
+            Some("overhead") => overhead(&args),
+            Some("live") => live(&args),
+            Some("calibrate") => calibrate(&args),
+            Some("all") => {
+                throughput(&args)?;
+                table2(&args)?;
+                table3(&args)?;
+                trace(&args)?;
+                perjob(&args)
+            }
+            _ => {
+                println!("{}", HELP);
+                Ok(())
+            }
+        }
+    }
+
+    const HELP: &str = "repro — DMR API reproduction (Iserte et al., ParCo 2018)
+
+USAGE: repro <SUBCOMMAND> [--jobs N] [--seed S] [--nodes N] [--sizes 50,100,200,400]
+
+  throughput   Table 4 + Fig 4 + Fig 5: workload sweep fixed vs flexible
+  table2       Table 2: action analysis (sync vs async scheduling)
+  table3       Table 3: cluster and job measures (400-job workloads)
+  trace        Fig 6: time evolution (default --jobs 50)
+  perjob       Fig 7/8: per-job times by application (default --jobs 50)
+  overhead     Fig 3: live scheduling + resize overheads (--mb payload)
+  live         run a small live workload with real PJRT compute
+  calibrate    measure real per-iteration PJRT times per (app, procs)
+  all          every DES-based artifact
+
+Results are also written as CSV under results/.";
+
+    fn cfg(args: &Args, mode: SchedMode) -> DesConfig {
+        DesConfig {
+            rms: RmsConfig {
+                nodes: args.get_parse("nodes", 64usize),
+                ..Default::default()
+            },
+            mode,
+            seed: args.get_parse("seed", 0xD41u64),
+            ..Default::default()
+        }
+    }
+
+    fn summarize(args: &Args, jobs: usize, seed: u64, mode: SchedMode, flexible: bool) -> RunSummary {
+        let w = workload::generate(jobs, seed);
+        let w = if flexible { w } else { w.as_fixed() };
+        let label = if flexible {
+            match mode {
+                SchedMode::Sync => "Flexible",
+                SchedMode::Async => "Asynchronous",
+            }
+        } else {
+            "Fixed"
+        };
+        RunSummary::from_run(&Engine::new(cfg(args, mode)).run(&w, label))
+    }
+
+    fn throughput(args: &Args) -> Result<()> {
+        let sizes: Vec<usize> = args
+            .get_or("sizes", "50,100,200,400")
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .collect();
+        let seed = args.get_parse("seed", 42u64);
+        let mut rows = Vec::new();
+        for n in sizes {
+            eprintln!("[throughput] {n} jobs ...");
+            let fixed = summarize(args, n, seed, SchedMode::Sync, false);
+            let flex = summarize(args, n, seed, SchedMode::Sync, true);
+            rows.push((n, fixed, flex));
+        }
+        println!("{}", report::table4(&rows).render());
+        println!("{}", report::fig4(&rows));
+        println!("{}", report::fig5(&rows));
+        write_csv(
+            "results/table4_fig4_fig5.csv",
+            &["jobs", "version", "makespan_s", "util_pct", "wait_s", "exec_s", "completion_s", "node_seconds"],
+            &report::throughput_rows(&rows),
+        )?;
+        eprintln!("[throughput] wrote results/table4_fig4_fig5.csv");
+        Ok(())
+    }
+
+    fn table2(args: &Args) -> Result<()> {
+        let jobs = args.get_parse("jobs", 400usize);
+        let seed = args.get_parse("seed", 42u64);
+        eprintln!("[table2] {jobs} jobs sync ...");
+        let sync = summarize(args, jobs, seed, SchedMode::Sync, true);
+        eprintln!("[table2] {jobs} jobs async ...");
+        let asy = summarize(args, jobs, seed, SchedMode::Async, true);
+        println!("{}", report::table2(&sync.actions, &asy.actions, jobs).render());
+        let row = |s: &RunSummary, m: &str| -> Vec<Vec<String>> {
+            [
+                ("no-action", &s.actions.no_action),
+                ("expand", &s.actions.expand),
+                ("shrink", &s.actions.shrink),
+            ]
+            .iter()
+            .map(|(k, x)| {
+                vec![
+                    m.to_string(),
+                    k.to_string(),
+                    format!("{}", x.count()),
+                    format!("{:.4}", x.min()),
+                    format!("{:.4}", x.max()),
+                    format!("{:.4}", x.mean()),
+                    format!("{:.4}", x.std()),
+                ]
+            })
+            .collect()
+        };
+        let mut rows = row(&sync, "sync");
+        rows.extend(row(&asy, "async"));
+        write_csv(
+            "results/table2_actions.csv",
+            &["mode", "action", "count", "min_s", "max_s", "avg_s", "std_s"],
+            &rows,
+        )?;
+        Ok(())
+    }
+
+    fn table3(args: &Args) -> Result<()> {
+        let jobs = args.get_parse("jobs", 400usize);
+        let seed = args.get_parse("seed", 42u64);
+        eprintln!("[table3] fixed ...");
+        let fixed = summarize(args, jobs, seed, SchedMode::Sync, false);
+        eprintln!("[table3] sync ...");
+        let sync = summarize(args, jobs, seed, SchedMode::Sync, true);
+        eprintln!("[table3] async ...");
+        let asy = summarize(args, jobs, seed, SchedMode::Async, true);
+        println!("{}", report::table3(&fixed, &sync, &asy).render());
+        Ok(())
+    }
+
+    fn trace(args: &Args) -> Result<()> {
+        let jobs = args.get_parse("jobs", 50usize);
+        let seed = args.get_parse("seed", 42u64);
+        let fixed = summarize(args, jobs, seed, SchedMode::Sync, false);
+        let flex = summarize(args, jobs, seed, SchedMode::Sync, true);
+        println!("{}", report::fig6(&fixed, &flex));
+        let series = |s: &RunSummary, name: &str| -> Vec<Vec<String>> {
+            s.alloc_series
+                .iter()
+                .map(|(t, v)| vec![name.to_string(), format!("{t:.1}"), format!("{v}")])
+                .collect()
+        };
+        let mut rows = series(&fixed, "alloc-fixed");
+        rows.extend(series(&flex, "alloc-flex"));
+        write_csv("results/fig6_trace.csv", &["series", "t_s", "value"], &rows)?;
+        Ok(())
+    }
+
+    fn perjob(args: &Args) -> Result<()> {
+        let jobs = args.get_parse("jobs", 50usize);
+        let seed = args.get_parse("seed", 42u64);
+        let fixed = summarize(args, jobs, seed, SchedMode::Sync, false);
+        let flex = summarize(args, jobs, seed, SchedMode::Sync, true);
+        println!("{}", report::fig7_fig8_preview(&fixed, &flex));
+        write_csv(
+            "results/fig7_fig8_perjob.csv",
+            &["app", "job", "wait_fixed", "wait_flex", "exec_fixed", "exec_flex",
+              "d_wait", "d_exec", "d_completion"],
+            &report::perjob_rows(&fixed, &flex),
+        )?;
+        eprintln!("[perjob] wrote results/fig7_fig8_perjob.csv");
+        Ok(())
+    }
+
+    fn overhead(args: &Args) -> Result<()> {
+        let mb = args.get_parse("mb", 64usize);
+        let reps = args.get_parse("reps", 3usize);
+        eprintln!("[overhead] {mb} MB payload, {reps} reps per point ...");
+        let samples = dmr::live::overhead::fig3_sweep(reps, mb * 1024 * 1024 / 4);
+        let mut t = dmr::util::table::Table::new(vec![
+            "Reconfig", "Scheduling time (s)", "Resize time (s)",
+        ])
+        .with_title(&format!("Fig 3: reconfiguration overheads ({mb} MB payload)"));
+        let mut rows = Vec::new();
+        for s in &samples {
+            t.row(vec![
+                format!("{} -> {}", s.from, s.to),
+                format!("{:.6}", s.sched_secs),
+                format!("{:.4}", s.resize_secs),
+            ]);
+            rows.push(vec![
+                s.from.to_string(),
+                s.to.to_string(),
+                format!("{:.6}", s.sched_secs),
+                format!("{:.6}", s.resize_secs),
+            ]);
+        }
+        println!("{}", t.render());
+        write_csv("results/fig3_overhead.csv", &["from", "to", "sched_s", "resize_s"], &rows)?;
+        Ok(())
+    }
+
+    /// Measure the real per-iteration cost of every (app, procs) variant
+    /// through the live stack (rank threads + vmpi + PJRT) and emit
+    /// results/calib.json.  These are this testbed's ground-truth step
+    /// costs; the DES uses the paper-calibrated model by default
+    /// (DESIGN.md par.2) but can be compared against these.
+    fn calibrate(args: &Args) -> Result<()> {
+        use dmr::apps::config::AppKind;
+        use dmr::apps::state::AppState;
+        use dmr::runtime::ComputeServer;
+        use dmr::util::json::Json;
+        use dmr::vmpi::World;
+        use std::collections::BTreeMap;
+
+        let iters = args.get_parse("iters", 5u32);
+        let server = ComputeServer::start_default()?;
+        let world = World::new();
+        let mut obj = BTreeMap::new();
+        for app in AppKind::WORKLOAD_APPS {
+            for procs in [1usize, 2, 4, 8] {
+                let (tx, rx) = std::sync::mpsc::channel::<f64>();
+                let compute = server.handle();
+                let gid = world.spawn(procs, move |ep| {
+                    let mut st = AppState::init(app, ep.rank(), ep.size(), 1.0);
+                    // one warm-up step (compiles the executable)
+                    st.step(&ep, &compute).expect("warmup");
+                    ep.barrier();
+                    let t0 = std::time::Instant::now();
+                    for _ in 0..iters {
+                        st.step(&ep, &compute).expect("step");
+                    }
+                    ep.barrier();
+                    if ep.rank() == 0 {
+                        tx.send(t0.elapsed().as_secs_f64() / iters as f64).unwrap();
+                    }
+                });
+                let per_iter = rx.recv().expect("calibration result");
+                world.join_group(gid);
+                world.destroy_group(gid);
+                println!("{app:>7} p={procs:<2}  {:.3} ms/iter", per_iter * 1e3);
+                obj.insert(format!("{}_p{}", app.name(), procs), Json::Num(per_iter));
+            }
+        }
+        std::fs::create_dir_all("results")?;
+        std::fs::write("results/calib.json", Json::Obj(obj).render())?;
+        println!("wrote results/calib.json");
+        Ok(())
+    }
+
+    fn live(args: &Args) -> Result<()> {
+        use dmr::live::{LiveDriver, LiveOpts};
+        use dmr::runtime::ComputeServer;
+        let jobs = args.get_parse("jobs", 4usize);
+        let iters = args.get_parse("iters", 10u32);
+        std::env::set_var("DMR_TIME_SCALE", args.get_or("time-scale", "0.02"));
+        let server = ComputeServer::start_default()?;
+        let opts = LiveOpts {
+            rms: RmsConfig { nodes: args.get_parse("nodes", 16usize), ..Default::default() },
+            arrival_scale: 0.05,
+            ..Default::default()
+        };
+        let mut driver = LiveDriver::new(opts, server.handle());
+        let mut specs = Vec::new();
+        let mut w = workload::generate(jobs, args.get_parse("seed", 1u64));
+        for (i, mut s) in w.jobs.drain(..).enumerate() {
+            s.iterations = iters;
+            // keep live sizes within the artifact set and the small cluster
+            s.procs = if i % 3 == 2 { 8 } else { 4 };
+            s.max_procs = 8;
+            s.min_procs = 2;
+            s.pref_procs = Some(2);
+            specs.push(s);
+        }
+        let t0 = std::time::Instant::now();
+        let report = driver.run(specs);
+        let rms = report.rms.lock().unwrap();
+        println!("live: {} jobs completed in {:.2?}", rms.completed_jobs(), t0.elapsed());
+        println!("      expansions={} shrinks={}", rms.log.expansions(), rms.log.shrinks());
+        for j in dmr::metrics::extract(&rms) {
+            println!(
+                "  {:>12} {:>7}: wait {:>6.2}s exec {:>6.2}s resizes {}",
+                j.name,
+                j.app.name(),
+                j.wait(),
+                j.exec(),
+                j.n_expands + j.n_shrinks
+            );
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,10 @@
+//! Measurement extraction and report emitters for every table and figure
+//! of the paper's evaluation (§7).  See DESIGN.md §4 for the experiment
+//! index.
+
+pub mod record;
+pub mod report;
+pub mod summary;
+
+pub use record::{extract, JobRecord};
+pub use summary::RunSummary;

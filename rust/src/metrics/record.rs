@@ -1,0 +1,106 @@
+//! Per-job measurement records extracted from a finished run.
+
+use crate::apps::config::AppKind;
+use crate::rms::Rms;
+use crate::Time;
+
+/// The §7.5 per-job measures: waiting, execution and completion times.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub name: String,
+    pub app: AppKind,
+    pub submit: Time,
+    pub start: Time,
+    pub end: Time,
+    pub initial_procs: usize,
+    pub n_expands: usize,
+    pub n_shrinks: usize,
+    /// Node-seconds the job held (integral of its allocation over time).
+    pub node_seconds: f64,
+}
+
+impl JobRecord {
+    pub fn wait(&self) -> f64 {
+        self.start - self.submit
+    }
+    pub fn exec(&self) -> f64 {
+        self.end - self.start
+    }
+    pub fn completion(&self) -> f64 {
+        self.end - self.submit
+    }
+}
+
+/// Extract user-job records (resizers excluded), sorted by submission.
+pub fn extract(rms: &Rms) -> Vec<JobRecord> {
+    let mut out: Vec<JobRecord> = rms
+        .jobs()
+        .filter(|j| !j.is_resizer && j.start_time.is_some() && j.end_time.is_some())
+        .map(|j| {
+            let start = j.start_time.unwrap();
+            let end = j.end_time.unwrap();
+            // Integrate the allocation over the resize history.
+            let mut t = start;
+            let mut procs = j.spec.procs as f64;
+            let mut node_seconds = 0.0;
+            for r in &j.resize_log {
+                node_seconds += procs * (r.time - t);
+                t = r.time;
+                procs = r.to_procs as f64;
+            }
+            node_seconds += procs * (end - t);
+            JobRecord {
+                name: j.spec.name.clone(),
+                app: j.spec.app,
+                submit: j.submit_time,
+                start,
+                end,
+                initial_procs: j.spec.procs,
+                n_expands: j
+                    .resize_log
+                    .iter()
+                    .filter(|r| r.to_procs > r.from_procs)
+                    .count(),
+                n_shrinks: j
+                    .resize_log
+                    .iter()
+                    .filter(|r| r.to_procs < r.from_procs)
+                    .count(),
+                node_seconds,
+            }
+        })
+        .collect();
+    out.sort_by(|a, b| a.submit.partial_cmp(&b.submit).unwrap().then(a.name.cmp(&b.name)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rms::{DmrRequest, RmsConfig};
+    use crate::workload::JobSpec;
+
+    #[test]
+    fn extract_computes_node_seconds_across_resizes() {
+        let mut rms = Rms::new(RmsConfig { nodes: 64, ..Default::default() });
+        let spec = JobSpec::from_app(AppKind::Cg, "CG-0".into(), 0.0, 1.0);
+        let a = rms.submit(spec, 0.0);
+        rms.schedule(0.0); // 32 nodes
+        // queue a job so the policy shrinks
+        let waiting = JobSpec::from_app(AppKind::Cg, "CG-1".into(), 1.0, 1.0);
+        rms.submit(waiting, 1.0);
+        let req = DmrRequest { min: 2, max: 32, pref: Some(8), factor: 2 };
+        let out = rms.dmr_check(a, &req, 10.0);
+        assert!(matches!(out, crate::rms::DmrOutcome::Shrink { .. }));
+        rms.commit_shrink_to(a, 8, 10.0);
+        rms.finish(a, 20.0);
+
+        let recs = extract(&rms);
+        let r = recs.iter().find(|r| r.name == "CG-0").unwrap();
+        assert_eq!(r.n_shrinks, 1);
+        // 32 procs for 10 s + 8 procs for 10 s
+        assert!((r.node_seconds - (320.0 + 80.0)).abs() < 1e-9);
+        assert_eq!(r.wait(), 0.0);
+        assert_eq!(r.exec(), 20.0);
+    }
+}

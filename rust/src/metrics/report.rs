@@ -1,0 +1,283 @@
+//! Report emitters: one function per paper table/figure.  Each renders an
+//! ASCII artifact (printed by the benches / CLI) and returns CSV rows for
+//! `results/`.
+
+use super::summary::RunSummary;
+use crate::des::ActionStats;
+use crate::util::plot::{bar_chart, step_chart};
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+
+fn fmt(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+/// Table 2: analysis of the actions performed by the framework
+/// (sync vs async) in a 400-job workload.
+pub fn table2(sync: &ActionStats, asy: &ActionStats, jobs: usize) -> Table {
+    let mut t = Table::new(vec!["Action", "Measure", "Synchronous", "Asynchronous"])
+        .with_title("Table 2: actions performed by the framework (400-job workload)");
+    let sect = |t: &mut Table, name: &str, s: &Summary, a: &Summary| {
+        t.row(vec![name.into(), "Minimum Time (s)".into(), fmt(s.min(), 4), fmt(a.min(), 4)]);
+        t.row(vec![name.into(), "Maximum Time (s)".into(), fmt(s.max(), 4), fmt(a.max(), 4)]);
+        t.row(vec![name.into(), "Average Time (s)".into(), fmt(s.mean(), 4), fmt(a.mean(), 4)]);
+        t.row(vec![
+            name.into(),
+            "Standard Deviation (s)".into(),
+            fmt(s.std(), 4),
+            fmt(a.std(), 4),
+        ]);
+        t.row(vec![
+            name.into(),
+            "Quantity".into(),
+            format!("{}", s.count()),
+            format!("{}", a.count()),
+        ]);
+        t.row(vec![
+            name.into(),
+            "Actions/Job".into(),
+            fmt(s.count() as f64 / jobs as f64, 3),
+            fmt(a.count() as f64 / jobs as f64, 3),
+        ]);
+    };
+    sect(&mut t, "No Action", &sync.no_action, &asy.no_action);
+    sect(&mut t, "Expand", &sync.expand, &asy.expand);
+    sect(&mut t, "Shrink", &sync.shrink, &asy.shrink);
+    t
+}
+
+/// Table 3: cluster and job measures, fixed vs sync vs async.
+pub fn table3(fixed: &RunSummary, sync: &RunSummary, asy: &RunSummary) -> Table {
+    let mut t = Table::new(vec!["Measure", "", "Fixed", "Synchronous", "Asynchronous"])
+        .with_title("Table 3: cluster and job measures of the 400-job workloads");
+    t.row(vec![
+        "Resources utilization".into(),
+        "Avg. (%)".into(),
+        fmt(fixed.util_mean * 100.0, 3),
+        fmt(sync.util_mean * 100.0, 3),
+        fmt(asy.util_mean * 100.0, 3),
+    ]);
+    t.row(vec![
+        "Resources utilization".into(),
+        "Std. (%)".into(),
+        fmt(fixed.util_std * 100.0, 3),
+        fmt(sync.util_std * 100.0, 3),
+        fmt(asy.util_std * 100.0, 3),
+    ]);
+    let (ws, es, cs) = sync.gains_vs(fixed);
+    let (wa, ea, ca) = asy.gains_vs(fixed);
+    let mut gain = |name: &str, s: &Summary, a: &Summary| {
+        t.row(vec![
+            name.to_string(),
+            "Avg. (%)".into(),
+            "-".into(),
+            fmt(s.mean(), 3),
+            fmt(a.mean(), 3),
+        ]);
+        t.row(vec![
+            name.to_string(),
+            "Std. (%)".into(),
+            "-".into(),
+            fmt(s.std(), 3),
+            fmt(a.std(), 3),
+        ]);
+    };
+    gain("Waiting time gain", &ws, &wa);
+    gain("Execution time gain", &es, &ea);
+    gain("Completion time gain", &cs, &ca);
+    t
+}
+
+/// Table 4: the summary measures for every workload size.
+pub fn table4(rows: &[(usize, RunSummary, RunSummary)]) -> Table {
+    let mut t = Table::new(vec![
+        "#Jobs",
+        "Version",
+        "Utilization Rate",
+        "Job Waiting Time",
+        "Job Execution Time",
+        "Job Completion Time",
+    ])
+    .with_title("Table 4: summary of the averaged measures from all the workloads");
+    for (n, fixed, flex) in rows {
+        for s in [fixed, flex] {
+            t.row(vec![
+                format!("{n}"),
+                s.label.clone(),
+                format!("{:.2} %", s.util_mean * 100.0),
+                format!("{:.2} s", s.wait.mean()),
+                format!("{:.2} s", s.exec.mean()),
+                format!("{:.2} s", s.completion.mean()),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 4: workload completion times with flexible-gain labels.
+pub fn fig4(rows: &[(usize, RunSummary, RunSummary)]) -> String {
+    let mut entries = Vec::new();
+    for (n, fixed, flex) in rows {
+        entries.push((format!("{n} fixed"), fixed.makespan, String::new()));
+        let gain = crate::util::stats::gain_pct(fixed.makespan, flex.makespan);
+        entries.push((format!("{n} flex"), flex.makespan, format!("(gain {gain:.1}%)")));
+    }
+    bar_chart("Fig 4: workload execution times (s)", &entries, 50)
+}
+
+/// Fig. 5: average waiting times with gain labels.
+pub fn fig5(rows: &[(usize, RunSummary, RunSummary)]) -> String {
+    let mut entries = Vec::new();
+    for (n, fixed, flex) in rows {
+        entries.push((format!("{n} fixed"), fixed.wait.mean(), String::new()));
+        let gain = crate::util::stats::gain_pct(fixed.wait.mean(), flex.wait.mean());
+        entries.push((format!("{n} flex"), flex.wait.mean(), format!("(gain {gain:.1}%)")));
+    }
+    bar_chart("Fig 5: average job waiting time (s)", &entries, 50)
+}
+
+/// Fig. 6: time evolution of one workload (allocated nodes + running jobs
+/// on top; completed jobs at the bottom), fixed vs flexible.
+pub fn fig6(fixed: &RunSummary, flex: &RunSummary) -> String {
+    let mut s = String::new();
+    s.push_str(&step_chart(
+        "Fig 6 (top): allocated nodes & running jobs",
+        &[
+            ("alloc-fixed".into(), fixed.alloc_series.clone()),
+            ("alloc-flex".into(), flex.alloc_series.clone()),
+            ("run-fixed".into(), fixed.running_series.clone()),
+            ("run-flex".into(), flex.running_series.clone()),
+        ],
+        100,
+        16,
+    ));
+    s.push_str(&step_chart(
+        "Fig 6 (bottom): completed jobs",
+        &[
+            ("done-fixed".into(), fixed.completed_series.clone()),
+            ("done-flex".into(), flex.completed_series.clone()),
+        ],
+        100,
+        12,
+    ));
+    s
+}
+
+/// Fig. 7 + Fig. 8 data: per-job times (fixed vs flexible matched by
+/// name) grouped by application.  Returns CSV rows:
+/// app, name, wait_fixed, wait_flex, exec_fixed, exec_flex, d_wait,
+/// d_exec, d_completion.
+pub fn perjob_rows(fixed: &RunSummary, flex: &RunSummary) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    for f in &fixed.jobs {
+        if let Some(x) = flex.jobs.iter().find(|x| x.name == f.name) {
+            rows.push(vec![
+                f.app.name().to_string(),
+                f.name.clone(),
+                fmt(f.wait(), 1),
+                fmt(x.wait(), 1),
+                fmt(f.exec(), 1),
+                fmt(x.exec(), 1),
+                fmt(f.wait() - x.wait(), 1),
+                fmt(f.exec() - x.exec(), 1),
+                fmt(f.completion() - x.completion(), 1),
+            ]);
+        }
+    }
+    rows
+}
+
+/// Fig. 7/8 ASCII preview: per-app average exec/wait and deltas.
+pub fn fig7_fig8_preview(fixed: &RunSummary, flex: &RunSummary) -> String {
+    let mut t = Table::new(vec![
+        "App",
+        "exec fixed",
+        "exec flex",
+        "wait fixed",
+        "wait flex",
+        "Δcompletion (avg)",
+    ])
+    .with_title("Fig 7/8: per-job times grouped by application (averages)");
+    for app in crate::apps::config::AppKind::WORKLOAD_APPS {
+        let sel = |s: &RunSummary, f: fn(&super::record::JobRecord) -> f64| {
+            Summary::from_iter(s.jobs.iter().filter(|j| j.app == app).map(f))
+        };
+        let fe = sel(fixed, |j| j.exec());
+        let xe = sel(flex, |j| j.exec());
+        let fw = sel(fixed, |j| j.wait());
+        let xw = sel(flex, |j| j.wait());
+        let fc = sel(fixed, |j| j.completion());
+        let xc = sel(flex, |j| j.completion());
+        t.row(vec![
+            app.name().to_string(),
+            fmt(fe.mean(), 0),
+            fmt(xe.mean(), 0),
+            fmt(fw.mean(), 0),
+            fmt(xw.mean(), 0),
+            fmt(fc.mean() - xc.mean(), 0),
+        ]);
+    }
+    t.render()
+}
+
+/// CSV rows for the Table 4 / Fig 4 / Fig 5 sweep.
+pub fn throughput_rows(rows: &[(usize, RunSummary, RunSummary)]) -> Vec<Vec<String>> {
+    let mut out = Vec::new();
+    for (n, fixed, flex) in rows {
+        for s in [fixed, flex] {
+            out.push(vec![
+                n.to_string(),
+                s.label.clone(),
+                fmt(s.makespan, 1),
+                fmt(s.util_mean * 100.0, 2),
+                fmt(s.wait.mean(), 1),
+                fmt(s.exec.mean(), 1),
+                fmt(s.completion.mean(), 1),
+                fmt(s.node_seconds(), 0),
+            ]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::{DesConfig, Engine};
+    use crate::metrics::RunSummary;
+    use crate::workload;
+
+    fn pair(n: usize, seed: u64) -> (usize, RunSummary, RunSummary) {
+        let w = workload::generate(n, seed);
+        let fixed =
+            RunSummary::from_run(&Engine::new(DesConfig::default()).run(&w.as_fixed(), "Fixed"));
+        let flex =
+            RunSummary::from_run(&Engine::new(DesConfig::default()).run(&w, "Flexible"));
+        (n, fixed, flex)
+    }
+
+    #[test]
+    fn all_reports_render() {
+        let p = pair(15, 2);
+        let rows = vec![p];
+        let t4 = table4(&rows).render();
+        assert!(t4.contains("Fixed") && t4.contains("Flexible"));
+        let f4 = fig4(&rows);
+        assert!(f4.contains("gain"));
+        let f5 = fig5(&rows);
+        assert!(f5.contains("gain"));
+        let (_, fixed, flex) = &rows[0];
+        let f6 = fig6(fixed, flex);
+        assert!(f6.contains("allocated nodes"));
+        let pj = perjob_rows(fixed, flex);
+        assert_eq!(pj.len(), 15);
+        let prev = fig7_fig8_preview(fixed, flex);
+        assert!(prev.contains("CG"));
+        let t3 = table3(fixed, flex, flex).render();
+        assert!(t3.contains("utilization"));
+        let t2 = table2(&fixed.actions, &flex.actions, 15).render();
+        assert!(t2.contains("Expand"));
+        let tr = throughput_rows(&rows);
+        assert_eq!(tr.len(), 2);
+    }
+}

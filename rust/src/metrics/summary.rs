@@ -1,0 +1,126 @@
+//! Aggregated per-run measures (the rows of Tables 3–4).
+
+use super::record::{extract, JobRecord};
+use crate::des::RunResult;
+use crate::util::stats::{step_series_mean, Summary};
+
+/// Everything the reports need from one workload run.
+pub struct RunSummary {
+    pub label: String,
+    pub jobs: Vec<JobRecord>,
+    pub makespan: f64,
+    /// Mean / std of the allocated-nodes fraction over the makespan
+    /// ("resource utilization").
+    pub util_mean: f64,
+    pub util_std: f64,
+    pub wait: Summary,
+    pub exec: Summary,
+    pub completion: Summary,
+    pub nodes: usize,
+    /// Fig. 6 series: (t, allocated nodes), (t, running jobs),
+    /// (t, completed jobs).
+    pub alloc_series: Vec<(f64, f64)>,
+    pub running_series: Vec<(f64, f64)>,
+    pub completed_series: Vec<(f64, f64)>,
+    pub actions: crate::des::ActionStats,
+}
+
+impl RunSummary {
+    pub fn from_run(r: &RunResult) -> RunSummary {
+        let jobs = extract(&r.rms);
+        let nodes = r.rms.cluster.total();
+        let t0 = 0.0;
+        let t1 = r.makespan.max(1e-9);
+        let series = &r.rms.telemetry.alloc_series;
+        let util_mean = step_series_mean(series, t0, t1) / nodes as f64;
+        // time-weighted std of the busy fraction
+        let util_std = {
+            let mut acc = 0.0;
+            let mut prev_t = t0;
+            let mut prev_v = 0.0;
+            for &(t, v) in series {
+                let tc = t.clamp(t0, t1);
+                let f = prev_v / nodes as f64;
+                acc += (f - util_mean) * (f - util_mean) * (tc - prev_t).max(0.0);
+                prev_t = tc;
+                prev_v = v;
+            }
+            let f = prev_v / nodes as f64;
+            acc += (f - util_mean) * (f - util_mean) * (t1 - prev_t).max(0.0);
+            (acc / (t1 - t0)).sqrt()
+        };
+        RunSummary {
+            label: r.label.clone(),
+            makespan: r.makespan,
+            util_mean,
+            util_std,
+            wait: Summary::from_iter(jobs.iter().map(|j| j.wait())),
+            exec: Summary::from_iter(jobs.iter().map(|j| j.exec())),
+            completion: Summary::from_iter(jobs.iter().map(|j| j.completion())),
+            nodes,
+            alloc_series: series.clone(),
+            running_series: r.rms.telemetry.running_series.clone(),
+            completed_series: r.rms.telemetry.completed_series.clone(),
+            actions: r.actions.clone(),
+            jobs,
+        }
+    }
+
+    /// Per-job percentage gains versus a baseline run (jobs matched by
+    /// name — both runs process the same stream).  Returns
+    /// (wait, exec, completion) gain summaries, positive = improvement.
+    pub fn gains_vs(&self, base: &RunSummary) -> (Summary, Summary, Summary) {
+        let mut wait = Summary::new();
+        let mut exec = Summary::new();
+        let mut comp = Summary::new();
+        for j in &self.jobs {
+            if let Some(b) = base.jobs.iter().find(|b| b.name == j.name) {
+                // Jobs with ~zero baseline wait are skipped for the wait
+                // gain (as in the paper, gains are relative).
+                if b.wait() > 1.0 {
+                    wait.push(crate::util::stats::gain_pct(b.wait(), j.wait()));
+                }
+                exec.push(crate::util::stats::gain_pct(b.exec(), j.exec()));
+                comp.push(crate::util::stats::gain_pct(b.completion(), j.completion()));
+            }
+        }
+        (wait, exec, comp)
+    }
+
+    /// Total node-seconds allocated to user jobs.
+    pub fn node_seconds(&self) -> f64 {
+        self.jobs.iter().map(|j| j.node_seconds).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::{DesConfig, Engine};
+    use crate::workload;
+
+    #[test]
+    fn summary_from_small_run() {
+        let w = workload::generate(10, 3);
+        let r = Engine::new(DesConfig::default()).run(&w.as_fixed(), "fixed");
+        let s = RunSummary::from_run(&r);
+        assert_eq!(s.jobs.len(), 10);
+        assert!(s.util_mean > 0.0 && s.util_mean <= 1.0);
+        assert!(s.makespan > 0.0);
+        assert!(s.wait.count() == 10);
+        assert!(s.node_seconds() > 0.0);
+    }
+
+    #[test]
+    fn gains_positive_when_flexible_faster() {
+        let w = workload::generate(25, 11);
+        let fixed = RunSummary::from_run(&Engine::new(DesConfig::default()).run(&w.as_fixed(), "fixed"));
+        let flex = RunSummary::from_run(&Engine::new(DesConfig::default()).run(&w, "flexible"));
+        let (wait, exec, comp) = flex.gains_vs(&fixed);
+        // Waiting improves; execution degrades (negative gain); completion
+        // improves on average — the paper's Table 3/4 signature.
+        assert!(wait.mean() > 0.0, "wait gain {}", wait.mean());
+        assert!(exec.mean() < 0.0, "exec gain {}", exec.mean());
+        assert!(comp.mean() > 0.0, "completion gain {}", comp.mean());
+    }
+}

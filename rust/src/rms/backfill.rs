@@ -1,0 +1,182 @@
+//! EASY backfill over node *counts* (§7.2: "Slurm was configured with the
+//! backfill job scheduling policy").
+//!
+//! The head of the priority queue gets a reservation at the earliest time
+//! enough nodes will be free (projected from running jobs' expected ends);
+//! later jobs may start out of order only if they do not delay that
+//! reservation: either they finish before the shadow time, or they use
+//! only nodes the head will not need ("extra" nodes).
+
+use crate::Time;
+
+/// A running job as seen by the backfill projection.
+#[derive(Debug, Clone, Copy)]
+pub struct RunningInfo {
+    pub procs: usize,
+    pub expected_end: Time,
+}
+
+/// A pending job as seen by the scheduler pass.
+#[derive(Debug, Clone, Copy)]
+pub struct PendingInfo {
+    pub id: crate::JobId,
+    pub procs: usize,
+    pub est_duration: f64,
+}
+
+/// Decide which pending jobs (already priority-ordered) start *now*.
+///
+/// Returns the ids to start, in order.  Pure function — the RMS applies
+/// the allocations afterwards.
+pub fn plan_starts(
+    mut free: usize,
+    running: &[RunningInfo],
+    pending_ordered: &[PendingInfo],
+    now: Time,
+    backfill: bool,
+) -> Vec<crate::JobId> {
+    let mut starts = Vec::new();
+    let mut it = pending_ordered.iter();
+    let mut blocked: Option<(usize, Time, usize)> = None; // (need, shadow, extra)
+
+    // Start in priority order until the first job that does not fit.
+    let mut rest: Vec<&PendingInfo> = Vec::new();
+    for p in it.by_ref() {
+        if blocked.is_none() && p.procs <= free {
+            free -= p.procs;
+            starts.push(p.id);
+        } else if blocked.is_none() {
+            // Head-of-line blocker: compute its reservation.
+            let (shadow, free_at_shadow) = shadow_time(free, running, p.procs, now);
+            blocked = Some((p.procs, shadow, free_at_shadow.saturating_sub(p.procs)));
+            rest.push(p);
+        } else {
+            rest.push(p);
+        }
+    }
+
+    if !backfill {
+        return starts;
+    }
+
+    if let Some((_, shadow, extra)) = blocked {
+        // rest[0] is the blocker itself — it cannot start now.
+        let mut extra = extra;
+        for p in rest.iter().skip(1) {
+            if p.procs > free {
+                continue;
+            }
+            let finishes_before_shadow = now + p.est_duration <= shadow;
+            let fits_in_extra = p.procs <= extra;
+            if finishes_before_shadow || fits_in_extra {
+                free -= p.procs;
+                if !finishes_before_shadow {
+                    extra -= p.procs;
+                }
+                starts.push(p.id);
+            }
+        }
+    }
+    starts
+}
+
+/// Earliest time at least `need` nodes are projected free, and how many
+/// will be free then.
+fn shadow_time(free_now: usize, running: &[RunningInfo], need: usize, now: Time) -> (Time, usize) {
+    let mut ends: Vec<(Time, usize)> = running.iter().map(|r| (r.expected_end, r.procs)).collect();
+    ends.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut free = free_now;
+    if free >= need {
+        return (now, free);
+    }
+    for (t, p) in ends {
+        free += p;
+        if free >= need {
+            return (t.max(now), free);
+        }
+    }
+    (Time::INFINITY, free)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(id: u64, procs: usize, est: f64) -> PendingInfo {
+        PendingInfo { id, procs, est_duration: est }
+    }
+
+    #[test]
+    fn starts_in_priority_order_until_blocked() {
+        let starts = plan_starts(10, &[], &[p(1, 4, 10.0), p(2, 4, 10.0), p(3, 4, 10.0)], 0.0, true);
+        // 1 and 2 fit (8 <= 10); 3 blocks (needs 4, free 2); nothing to
+        // backfill behind it.
+        assert_eq!(starts, vec![1, 2]);
+    }
+
+    #[test]
+    fn backfill_short_job_before_shadow() {
+        // 8 nodes total: 6 busy until t=100, 2 free. Head needs 8.
+        let running = [RunningInfo { procs: 6, expected_end: 100.0 }];
+        // Job 2 is small and short: fits the 2 free nodes and ends before
+        // the shadow (t=100).
+        let starts = plan_starts(
+            2,
+            &running,
+            &[p(1, 8, 50.0), p(2, 2, 50.0)],
+            0.0,
+            true,
+        );
+        assert_eq!(starts, vec![2]);
+    }
+
+    #[test]
+    fn backfill_respects_reservation() {
+        // Job 2 is long (would end after shadow) and would consume nodes
+        // the head needs => must NOT start.
+        let running = [RunningInfo { procs: 6, expected_end: 100.0 }];
+        let starts = plan_starts(
+            2,
+            &running,
+            &[p(1, 8, 50.0), p(2, 2, 500.0)],
+            0.0,
+            true,
+        );
+        assert!(starts.is_empty());
+    }
+
+    #[test]
+    fn backfill_long_job_in_extra_nodes() {
+        // 10 total: 6 busy until 100, 4 free; head needs 8 => shadow=100,
+        // free_at_shadow=10, extra=2. A long 2-node job can run on the
+        // extra nodes without delaying the head.
+        let running = [RunningInfo { procs: 6, expected_end: 100.0 }];
+        let starts = plan_starts(
+            4,
+            &running,
+            &[p(1, 8, 50.0), p(2, 2, 500.0)],
+            0.0,
+            true,
+        );
+        assert_eq!(starts, vec![2]);
+    }
+
+    #[test]
+    fn no_backfill_mode_blocks_strictly() {
+        let running = [RunningInfo { procs: 6, expected_end: 100.0 }];
+        let starts = plan_starts(
+            2,
+            &running,
+            &[p(1, 8, 50.0), p(2, 2, 10.0)],
+            0.0,
+            false,
+        );
+        assert!(starts.is_empty());
+    }
+
+    #[test]
+    fn shadow_infinite_when_never_enough() {
+        let (t, _) = shadow_time(1, &[], 4, 0.0);
+        assert!(t.is_infinite());
+    }
+}

@@ -1,0 +1,65 @@
+//! RMS event log: an append-only record of every scheduling decision,
+//! used by tests and by the evaluation reports.
+
+use super::policy::Action;
+use crate::{JobId, Time};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum RmsEvent {
+    Submitted { job: JobId, time: Time },
+    Started { job: JobId, time: Time, procs: usize },
+    Finished { job: JobId, time: Time },
+    Cancelled { job: JobId, time: Time },
+    /// A DMR call was evaluated (§5.1); `action` is what the policy chose.
+    DmrDecision { job: JobId, time: Time, action: Action },
+    /// Expansion committed: the resizer-job protocol succeeded (§5.2.1).
+    Expanded { job: JobId, time: Time, from: usize, to: usize },
+    /// Shrink committed after the ACK-synchronized release (§5.2.2).
+    Shrunk { job: JobId, time: Time, from: usize, to: usize },
+    /// Expansion aborted: the resizer job timed out (§5.2.1).
+    ExpandAborted { job: JobId, time: Time },
+}
+
+/// Append-only log with query helpers.
+#[derive(Debug, Default, Clone)]
+pub struct EventLog {
+    events: Vec<RmsEvent>,
+}
+
+impl EventLog {
+    pub fn push(&mut self, e: RmsEvent) {
+        self.events.push(e);
+    }
+
+    pub fn all(&self) -> &[RmsEvent] {
+        &self.events
+    }
+
+    pub fn count<F: Fn(&RmsEvent) -> bool>(&self, f: F) -> usize {
+        self.events.iter().filter(|e| f(e)).count()
+    }
+
+    pub fn expansions(&self) -> usize {
+        self.count(|e| matches!(e, RmsEvent::Expanded { .. }))
+    }
+
+    pub fn shrinks(&self) -> usize {
+        self.count(|e| matches!(e, RmsEvent::Shrunk { .. }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts() {
+        let mut log = EventLog::default();
+        log.push(RmsEvent::Expanded { job: 1, time: 0.0, from: 8, to: 16 });
+        log.push(RmsEvent::Shrunk { job: 2, time: 1.0, from: 16, to: 8 });
+        log.push(RmsEvent::Shrunk { job: 2, time: 2.0, from: 8, to: 4 });
+        assert_eq!(log.expansions(), 1);
+        assert_eq!(log.shrinks(), 2);
+        assert_eq!(log.all().len(), 3);
+    }
+}

@@ -1,0 +1,127 @@
+//! Job records as tracked by the RMS.
+
+use crate::workload::JobSpec;
+use crate::{JobId, NodeId, Time};
+
+/// Lifecycle of a job inside the RMS.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Queued, waiting for resources.
+    Pending,
+    /// Executing on its allocated nodes.
+    Running,
+    /// Mid-reconfiguration: the decision was returned to the runtime but
+    /// the resize has not been committed yet (shrink: waiting for the
+    /// ACK-synchronized release; expand: waiting for the spawn).
+    Resizing,
+    Completed,
+    Cancelled,
+}
+
+/// One committed reconfiguration (for the per-job analysis of §7.3–7.5).
+#[derive(Debug, Clone, Copy)]
+pub struct ResizeEvent {
+    pub time: Time,
+    pub from_procs: usize,
+    pub to_procs: usize,
+}
+
+/// A job inside the RMS.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: JobId,
+    pub spec: JobSpec,
+    pub state: JobState,
+    pub nodes: Vec<NodeId>,
+    pub submit_time: Time,
+    pub start_time: Option<Time>,
+    pub end_time: Option<Time>,
+    /// Scheduler's estimate of when the job will finish (feeds backfill
+    /// reservations; refreshed by the execution engine after resizes).
+    pub expected_end: Option<Time>,
+    /// Maximum-priority boost: set on resizer jobs (§5.2.1) and on the
+    /// queued job that triggered a shrink (§4.3).
+    pub qos_boost: bool,
+    /// True for the internal "resizer job" of the expansion protocol.
+    pub is_resizer: bool,
+    /// Resizer jobs depend on their original job.
+    pub depends_on: Option<JobId>,
+    pub resize_log: Vec<ResizeEvent>,
+}
+
+impl Job {
+    pub fn new(id: JobId, spec: JobSpec, now: Time) -> Self {
+        Job {
+            id,
+            spec,
+            state: JobState::Pending,
+            nodes: Vec::new(),
+            submit_time: now,
+            start_time: None,
+            end_time: None,
+            expected_end: None,
+            qos_boost: false,
+            is_resizer: false,
+            depends_on: None,
+            resize_log: Vec::new(),
+        }
+    }
+
+    /// Current number of processes (== nodes; one process per node, as in
+    /// the paper's evaluation).
+    pub fn procs(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_active(&self) -> bool {
+        matches!(self.state, JobState::Running | JobState::Resizing)
+    }
+
+    /// Waiting time (§7.5): submission until execution start.
+    pub fn wait_time(&self) -> Option<f64> {
+        self.start_time.map(|s| s - self.submit_time)
+    }
+
+    /// Execution time: start until end.
+    pub fn exec_time(&self) -> Option<f64> {
+        match (self.start_time, self.end_time) {
+            (Some(s), Some(e)) => Some(e - s),
+            _ => None,
+        }
+    }
+
+    /// Completion time (§7.5): submission until finalization.
+    pub fn completion_time(&self) -> Option<f64> {
+        self.end_time.map(|e| e - self.submit_time)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::config::AppKind;
+
+    fn job() -> Job {
+        let spec = JobSpec::from_app(AppKind::Cg, "CG-0".into(), 3.0, 1.0);
+        Job::new(1, spec, 3.0)
+    }
+
+    #[test]
+    fn times() {
+        let mut j = job();
+        assert_eq!(j.wait_time(), None);
+        j.start_time = Some(10.0);
+        j.end_time = Some(25.0);
+        assert_eq!(j.wait_time(), Some(7.0));
+        assert_eq!(j.exec_time(), Some(15.0));
+        assert_eq!(j.completion_time(), Some(22.0));
+    }
+
+    #[test]
+    fn procs_tracks_nodes() {
+        let mut j = job();
+        assert_eq!(j.procs(), 0);
+        j.nodes = vec![0, 1, 2];
+        assert_eq!(j.procs(), 3);
+    }
+}

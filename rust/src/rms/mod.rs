@@ -1,0 +1,17 @@
+//! The Slurm-like workload manager with the paper's reconfiguration
+//! plug-in: multifactor priorities, EASY backfill, the three-mode
+//! reconfiguration policy (§4) and the resize protocols (§3, §5.2).
+
+pub mod backfill;
+pub mod events;
+pub mod job;
+pub mod policy;
+pub mod queue;
+#[allow(clippy::module_inception)]
+mod rms;
+
+pub use events::{EventLog, RmsEvent};
+pub use job::{Job, JobState, ResizeEvent};
+pub use policy::{Action, DmrRequest, PolicyConfig, SystemView};
+pub use queue::PriorityWeights;
+pub use rms::{DmrOutcome, Rms, RmsConfig, Started, Telemetry};

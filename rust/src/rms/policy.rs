@@ -1,0 +1,306 @@
+//! The resource-selection plug-in's reconfiguration policy — §4 of the
+//! paper, three modes with increasing scheduling freedom:
+//!
+//! 1. **Request an action** (§4.1): the application "strongly suggests" a
+//!    specific action by raising its minimum (forced expand) or lowering
+//!    its maximum (forced shrink).  Slurm still grants it only if the
+//!    system status allows.
+//! 2. **Preferred number of nodes** (§4.2): with no queued jobs the job
+//!    may grow up to its maximum; otherwise the RMS steers the job toward
+//!    its preferred size.
+//! 3. **Wide optimization** (§4.3): expand when spare resources cannot
+//!    start any queued job anyway; shrink when releasing nodes lets a
+//!    queued job start (that job then gets the maximum priority).
+
+/// What the application conveys on each DMR call (§5.1).
+#[derive(Debug, Clone, Copy)]
+pub struct DmrRequest {
+    pub min: usize,
+    pub max: usize,
+    pub pref: Option<usize>,
+    /// Resizing factor: targets are multiples/divisors of the current
+    /// size by powers of this factor.
+    pub factor: usize,
+}
+
+/// The resizing action returned to the runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    NoAction,
+    Expand { to: usize },
+    Shrink { to: usize },
+}
+
+impl Action {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Action::NoAction => "no-action",
+            Action::Expand { .. } => "expand",
+            Action::Shrink { .. } => "shrink",
+        }
+    }
+}
+
+/// The queue/cluster snapshot the policy inspects ("the RMS inspects the
+/// global status of the system" — §3).
+#[derive(Debug, Clone, Copy)]
+pub struct SystemView {
+    /// Free (allocatable) nodes right now.
+    pub available: usize,
+    /// Number of queued (pending, non-resizer) jobs.
+    pub pending_jobs: usize,
+    /// Node requirement of the highest-priority pending job, if any.
+    pub head_need: Option<usize>,
+}
+
+/// Policy configuration (ablations: DESIGN.md §5).
+#[derive(Debug, Clone)]
+pub struct PolicyConfig {
+    /// §4.2 preferred-number-of-nodes handling.
+    pub honor_preference: bool,
+    /// §4.3 wide optimization.
+    pub wide_optimization: bool,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        Self { honor_preference: true, wide_optimization: true }
+    }
+}
+
+/// Largest factor-reachable size from `current` that is <= `cap`
+/// (expansion targets: current * factor^k).
+pub fn expand_target(current: usize, factor: usize, cap: usize) -> usize {
+    let mut t = current;
+    while t * factor <= cap {
+        t *= factor;
+    }
+    t
+}
+
+/// Smallest factor-reachable size from `current` that is >= `floor`
+/// (shrink targets: current / factor^k).
+pub fn shrink_target(current: usize, factor: usize, floor: usize) -> usize {
+    let mut t = current;
+    while t % factor == 0 && t / factor >= floor {
+        t /= factor;
+    }
+    t
+}
+
+/// Whether `target` is reachable from `current` by multiplying/dividing by
+/// `factor` repeatedly.
+pub fn factor_reachable(current: usize, target: usize, factor: usize) -> bool {
+    if factor < 2 {
+        return true;
+    }
+    let (mut lo, hi) = if target < current { (target, current) } else { (current, target) };
+    while lo < hi {
+        lo *= factor;
+    }
+    lo == hi
+}
+
+/// Decide the action for a job currently at `current` processes.
+///
+/// Pure function of the request and the system view; the RMS applies the
+/// protocols (resizer job, ACK shrink) afterwards.
+pub fn decide(
+    cfg: &PolicyConfig,
+    current: usize,
+    req: &DmrRequest,
+    view: &SystemView,
+) -> Action {
+    // --- §4.1 Request an action -----------------------------------------
+    if req.min > current {
+        // Forced expansion; grant only up to what is available.
+        let want = expand_target(current, req.factor, req.max.min(current + view.available));
+        let want = want.max(req.min.min(current + view.available));
+        if want > current && factor_reachable(current, want, req.factor) {
+            return Action::Expand { to: want };
+        }
+        return Action::NoAction;
+    }
+    if req.max < current {
+        // Forced shrink: release only as much as needed to get under the
+        // new maximum (factor-reachable).
+        let mut to = current;
+        while to > req.max && to % req.factor == 0 && to / req.factor >= req.min {
+            to /= req.factor;
+        }
+        if to > req.max {
+            to = req.max; // not factor-reachable; honor the hard cap
+        }
+        return Action::Shrink { to };
+    }
+
+    // --- §4.2 Preferred number of nodes ----------------------------------
+    if cfg.honor_preference {
+        if let Some(pref) = req.pref {
+            let pref = pref.clamp(req.min, req.max);
+            if pref == current {
+                // "If the desired size corresponds to the current size,
+                // the RMS will return no action" — at the §4.2 level.
+                // §4.3 wide optimization below may still expand the job
+                // into *queue-starved* idle nodes (nodes no pending job
+                // can use anyway); the checking inhibitor bounds the
+                // resulting churn.
+            } else if view.pending_jobs == 0 {
+                // Queue empty: expansion can be granted up to the maximum.
+                let to = expand_target(current, req.factor, req.max.min(current + view.available));
+                if to > current {
+                    return Action::Expand { to };
+                }
+            } else if pref < current {
+                // Steer toward the preferred size, releasing nodes for the
+                // queue.
+                if factor_reachable(current, pref, req.factor) {
+                    return Action::Shrink { to: pref };
+                }
+                return Action::Shrink { to: shrink_target(current, req.factor, pref) };
+            } else {
+                // pref > current: expand toward pref if resources allow.
+                let cap = pref.min(current + view.available);
+                let to = expand_target(current, req.factor, cap);
+                if to > current {
+                    return Action::Expand { to };
+                }
+                return Action::NoAction;
+            }
+        }
+    }
+
+    // --- §4.3 Wide optimization ------------------------------------------
+    if cfg.wide_optimization {
+        // Expand if resources are spare and either the queue is empty or
+        // no pending job can use them anyway.
+        let queue_starved = match view.head_need {
+            None => true,
+            Some(need) => need > view.available,
+        };
+        if view.available > 0 && queue_starved && current < req.max {
+            let to = expand_target(current, req.factor, req.max.min(current + view.available));
+            if to > current {
+                return Action::Expand { to };
+            }
+        }
+        // Shrink if that lets a queued job start.
+        if let Some(need) = view.head_need {
+            let floor = req.pref.unwrap_or(req.min).clamp(req.min, req.max);
+            let to = shrink_target(current, req.factor, floor);
+            let released = current.saturating_sub(to);
+            if released > 0 && view.available + released >= need {
+                return Action::Shrink { to };
+            }
+        }
+    }
+
+    Action::NoAction
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(min: usize, max: usize, pref: Option<usize>) -> DmrRequest {
+        DmrRequest { min, max, pref, factor: 2 }
+    }
+
+    fn view(available: usize, pending: usize, head: Option<usize>) -> SystemView {
+        SystemView { available, pending_jobs: pending, head_need: head }
+    }
+
+    #[test]
+    fn targets() {
+        assert_eq!(expand_target(8, 2, 32), 32);
+        assert_eq!(expand_target(8, 2, 31), 16);
+        assert_eq!(expand_target(8, 2, 8), 8);
+        assert_eq!(shrink_target(32, 2, 8), 8);
+        assert_eq!(shrink_target(32, 2, 9), 16);
+        assert_eq!(shrink_target(7, 2, 1), 7); // 7 not divisible
+        assert!(factor_reachable(8, 32, 2));
+        assert!(!factor_reachable(8, 24, 2));
+    }
+
+    #[test]
+    fn forced_expand_41() {
+        // App raises min above current => expand (resources permitting).
+        let a = decide(&PolicyConfig::default(), 8, &req(16, 32, None), &view(24, 3, Some(64)));
+        assert_eq!(a, Action::Expand { to: 32 });
+        // Without resources: no action.
+        let a = decide(&PolicyConfig::default(), 8, &req(16, 32, None), &view(0, 3, Some(64)));
+        assert_eq!(a, Action::NoAction);
+    }
+
+    #[test]
+    fn forced_shrink_41() {
+        let a = decide(&PolicyConfig::default(), 32, &req(2, 8, None), &view(0, 0, None));
+        assert_eq!(a, Action::Shrink { to: 8 });
+    }
+
+    #[test]
+    fn preference_no_action_at_pref_with_queue() {
+        // At preferred size, queue nonempty, no shrink would help the
+        // (huge) head job => no action.
+        let a = decide(&PolicyConfig::default(), 8, &req(2, 32, Some(8)), &view(0, 2, Some(64)));
+        assert_eq!(a, Action::NoAction);
+    }
+
+    #[test]
+    fn preference_empty_queue_expands_to_max() {
+        let a = decide(&PolicyConfig::default(), 8, &req(2, 32, Some(8)), &view(56, 0, None));
+        assert_eq!(a, Action::Expand { to: 32 });
+    }
+
+    #[test]
+    fn preference_shrinks_toward_pref_when_queued() {
+        // Launched at max (32), pref 8, jobs waiting => scale down
+        // (the paper's "scaled-down as soon as possible", §7.5).
+        let a = decide(&PolicyConfig::default(), 32, &req(2, 32, Some(8)), &view(0, 4, Some(32)));
+        assert_eq!(a, Action::Shrink { to: 8 });
+    }
+
+    #[test]
+    fn preference_expands_toward_pref() {
+        let a = decide(&PolicyConfig::default(), 2, &req(2, 32, Some(8)), &view(10, 3, Some(64)));
+        assert_eq!(a, Action::Expand { to: 8 });
+    }
+
+    #[test]
+    fn wide_expand_when_queue_starved() {
+        // No preference; 4 free nodes; head needs 32 (> 4) => the spare
+        // nodes go to the running job.
+        let a = decide(&PolicyConfig::default(), 4, &req(1, 16, None), &view(4, 1, Some(32)));
+        assert_eq!(a, Action::Expand { to: 8 });
+    }
+
+    #[test]
+    fn wide_shrink_when_release_starts_head() {
+        // No preference: shrink 16 -> 1 (floor = min) releases 15; head
+        // needs 8 <= 0 + 15 => shrink.
+        let a = decide(&PolicyConfig::default(), 16, &req(1, 16, None), &view(0, 1, Some(8)));
+        assert_eq!(a, Action::Shrink { to: 1 });
+    }
+
+    #[test]
+    fn wide_no_shrink_when_release_insufficient() {
+        let a = decide(&PolicyConfig::default(), 4, &req(2, 16, None), &view(0, 1, Some(32)));
+        assert_eq!(a, Action::NoAction);
+    }
+
+    #[test]
+    fn ablation_disable_wide() {
+        let cfg = PolicyConfig { wide_optimization: false, ..Default::default() };
+        let a = decide(&cfg, 4, &req(1, 16, None), &view(4, 1, Some(32)));
+        assert_eq!(a, Action::NoAction);
+    }
+
+    #[test]
+    fn ablation_disable_preference_falls_through_to_wide() {
+        let cfg = PolicyConfig { honor_preference: false, ..Default::default() };
+        // pref says shrink to 8, but preference handling is off; wide
+        // optimization still shrinks (to pref floor) because head fits.
+        let a = decide(&cfg, 32, &req(2, 32, Some(8)), &view(0, 1, Some(16)));
+        assert_eq!(a, Action::Shrink { to: 8 });
+    }
+}

@@ -1,0 +1,102 @@
+//! Pending-job ordering: Slurm's *multifactor* priority policy (§7.2 —
+//! "we also enabled job priorities with the policy multifactor", default
+//! weights), plus the max-priority boost used by the reconfiguration
+//! protocols.
+
+use super::job::Job;
+use crate::Time;
+
+/// Weights of the multifactor plug-in components we model (age + job
+/// size), normalized like Slurm's: each factor in \[0,1\] scaled by its
+/// weight.
+#[derive(Debug, Clone)]
+pub struct PriorityWeights {
+    pub age_weight: f64,
+    /// Favor bigger jobs (Slurm's default size factor favours larger
+    /// allocations so they do not starve).
+    pub size_weight: f64,
+    /// Saturation horizon for the age factor (Slurm default 7 days; our
+    /// workloads span hours, so we saturate at 1 h).
+    pub age_horizon: f64,
+    /// Boost added by `qos_boost` (resizer jobs / shrink triggers get the
+    /// maximum priority — §4.3, §5.2.1).
+    pub boost: f64,
+}
+
+impl Default for PriorityWeights {
+    fn default() -> Self {
+        Self { age_weight: 1000.0, size_weight: 100.0, age_horizon: 3600.0, boost: 1e9 }
+    }
+}
+
+/// Compute the multifactor priority of a pending job at time `now`.
+pub fn priority(job: &Job, w: &PriorityWeights, total_nodes: usize, now: Time) -> f64 {
+    let age = ((now - job.submit_time) / w.age_horizon).clamp(0.0, 1.0);
+    let size = job.spec.procs as f64 / total_nodes.max(1) as f64;
+    let mut p = w.age_weight * age + w.size_weight * size;
+    if job.qos_boost {
+        p += w.boost;
+    }
+    p
+}
+
+/// Sort job ids by descending priority; FIFO (submit time, then id) as the
+/// tie-break so ordering is deterministic.
+pub fn order_pending(
+    ids: &[crate::JobId],
+    get: impl Fn(crate::JobId) -> (f64, Time, crate::JobId),
+) -> Vec<crate::JobId> {
+    let mut keyed: Vec<(f64, Time, crate::JobId)> = ids.iter().map(|&id| get(id)).collect();
+    keyed.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0)
+            .unwrap()
+            .then(a.1.partial_cmp(&b.1).unwrap())
+            .then(a.2.cmp(&b.2))
+    });
+    keyed.into_iter().map(|k| k.2).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::config::AppKind;
+    use crate::workload::JobSpec;
+
+    fn job(id: u64, submit: f64) -> Job {
+        let spec = JobSpec::from_app(AppKind::Cg, format!("j{id}"), submit, 1.0);
+        Job::new(id, spec, submit)
+    }
+
+    #[test]
+    fn age_increases_priority() {
+        let w = PriorityWeights::default();
+        let old = job(1, 0.0);
+        let new = job(2, 100.0);
+        assert!(priority(&old, &w, 64, 200.0) > priority(&new, &w, 64, 200.0));
+    }
+
+    #[test]
+    fn boost_dominates() {
+        let w = PriorityWeights::default();
+        let mut boosted = job(1, 1000.0);
+        boosted.qos_boost = true;
+        let aged = job(2, 0.0);
+        assert!(priority(&boosted, &w, 64, 5000.0) > priority(&aged, &w, 64, 5000.0));
+    }
+
+    #[test]
+    fn age_saturates() {
+        let w = PriorityWeights::default();
+        let j = job(1, 0.0);
+        let p1 = priority(&j, &w, 64, 3600.0);
+        let p2 = priority(&j, &w, 64, 7200.0);
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn order_deterministic_fifo_tiebreak() {
+        let ids = vec![3, 1, 2];
+        let ordered = order_pending(&ids, |id| (1.0, id as f64, id));
+        assert_eq!(ordered, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,160 @@
+//! Artifact registry: the AOT outputs of `python/compile/aot.py`
+//! (`<fn>_p<P>.hlo.txt` + `manifest.json`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Input/output spec of one artifact (from the manifest).
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// The registry of available artifacts.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    dir: PathBuf,
+    entries: BTreeMap<String, ArtifactInfo>,
+}
+
+fn parse_specs(j: &Json) -> Result<Vec<IoSpec>> {
+    let arr = j.as_arr().context("spec list not an array")?;
+    arr.iter()
+        .map(|s| {
+            let shape = s
+                .get("shape")
+                .and_then(|x| x.as_arr())
+                .context("missing shape")?
+                .iter()
+                .map(|d| d.as_usize().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = s
+                .get("dtype")
+                .and_then(|d| d.as_str())
+                .unwrap_or("float32")
+                .to_string();
+            Ok(IoSpec { shape, dtype })
+        })
+        .collect()
+}
+
+impl ArtifactStore {
+    /// Load the manifest from `dir` (default: `$DMR_ARTIFACTS` or
+    /// `artifacts/` relative to the workspace root).
+    pub fn open<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let man_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&man_path)
+            .with_context(|| format!("reading {man_path:?} (run `make artifacts`)"))?;
+        let man = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let obj = man.as_obj().context("manifest not an object")?;
+        let mut entries = BTreeMap::new();
+        for (name, entry) in obj {
+            let info = ArtifactInfo {
+                name: name.clone(),
+                path: dir.join(format!("{name}.hlo.txt")),
+                inputs: parse_specs(entry.get("inputs").context("missing inputs")?)?,
+                outputs: parse_specs(entry.get("outputs").context("missing outputs")?)?,
+            };
+            entries.insert(name.clone(), info);
+        }
+        Ok(ArtifactStore { dir, entries })
+    }
+
+    /// Default location: `$DMR_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("DMR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(dir)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactInfo> {
+        match self.entries.get(name) {
+            Some(i) => Ok(i),
+            None => bail!("unknown artifact {name:?} (have: {:?})",
+                self.entries.keys().take(8).collect::<Vec<_>>()),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn fake_store() -> (tempdir::TempDirLike, ArtifactStore) {
+        let dir = tempdir::TempDirLike::new("dmr_artifact_test");
+        let manifest = r#"{"toy_p2": {"inputs": [{"shape": [8], "dtype": "float32"}],
+                           "outputs": [{"shape": [8], "dtype": "float32"}]}}"#;
+        let mut f = std::fs::File::create(dir.path().join("manifest.json")).unwrap();
+        f.write_all(manifest.as_bytes()).unwrap();
+        let store = ArtifactStore::open(dir.path()).unwrap();
+        (dir, store)
+    }
+
+    // Minimal tempdir helper (offline: no tempfile crate).
+    mod tempdir {
+        pub struct TempDirLike(std::path::PathBuf);
+        impl TempDirLike {
+            pub fn new(prefix: &str) -> Self {
+                let p = std::env::temp_dir().join(format!(
+                    "{prefix}_{}_{:?}",
+                    std::process::id(),
+                    std::thread::current().id()
+                ));
+                std::fs::create_dir_all(&p).unwrap();
+                TempDirLike(p)
+            }
+            pub fn path(&self) -> &std::path::Path {
+                &self.0
+            }
+        }
+        impl Drop for TempDirLike {
+            fn drop(&mut self) {
+                std::fs::remove_dir_all(&self.0).ok();
+            }
+        }
+    }
+
+    #[test]
+    fn opens_and_lists() {
+        let (_d, store) = fake_store();
+        assert_eq!(store.len(), 1);
+        let info = store.get("toy_p2").unwrap();
+        assert_eq!(info.inputs[0].shape, vec![8]);
+        assert!(store.get("nope").is_err());
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let r = ArtifactStore::open("/nonexistent/dir");
+        assert!(r.is_err());
+    }
+}

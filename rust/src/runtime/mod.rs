@@ -1,0 +1,12 @@
+//! The PJRT bridge: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust request path.
+//! Python never runs at job time — `make artifacts` is the only compile
+//! step (§DESIGN.md "Three-layer architecture").
+
+mod artifact;
+mod server;
+mod tensor;
+
+pub use artifact::{ArtifactInfo, ArtifactStore, IoSpec};
+pub use server::{ComputeHandle, ComputeServer, ExecStat};
+pub use tensor::TensorF32;

@@ -1,0 +1,260 @@
+//! The compute server: a dedicated thread owning the PJRT client and the
+//! compiled executables.
+//!
+//! The `xla` crate's `PjRtClient` / `Literal` wrap raw C++ pointers behind
+//! `Rc` — they are not `Send` — so all PJRT interaction is confined to one
+//! thread; rank threads talk to it through a channel carrying plain
+//! [`TensorF32`] buffers.  On this 1-core testbed the serialization costs
+//! nothing; on a larger machine one server per NUMA domain would be the
+//! natural extension.
+//!
+//! Executables are compiled lazily on first use and cached for the process
+//! lifetime (one compiled executable per model variant, as the
+//! architecture requires).
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::ArtifactStore;
+use super::tensor::TensorF32;
+
+enum Request {
+    Execute {
+        artifact: String,
+        inputs: Vec<TensorF32>,
+        reply: mpsc::Sender<Result<Vec<TensorF32>>>,
+    },
+    /// Compile without executing (warm-up).
+    Warm {
+        artifact: String,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    Stats {
+        reply: mpsc::Sender<Vec<ExecStat>>,
+    },
+}
+
+/// Per-artifact execution statistics (perf reporting).
+#[derive(Debug, Clone)]
+pub struct ExecStat {
+    pub artifact: String,
+    pub calls: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// Cloneable, `Send` handle to the compute server.
+#[derive(Clone)]
+pub struct ComputeHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl ComputeHandle {
+    /// Execute `artifact` with `inputs`; blocks until the result is ready.
+    pub fn execute(&self, artifact: &str, inputs: Vec<TensorF32>) -> Result<Vec<TensorF32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Execute { artifact: artifact.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("compute server gone"))?;
+        rx.recv().map_err(|_| anyhow!("compute server dropped reply"))?
+    }
+
+    /// Compile an artifact ahead of time.
+    pub fn warm(&self, artifact: &str) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Warm { artifact: artifact.to_string(), reply })
+            .map_err(|_| anyhow!("compute server gone"))?;
+        rx.recv().map_err(|_| anyhow!("compute server dropped reply"))?
+    }
+
+    pub fn stats(&self) -> Vec<ExecStat> {
+        let (reply, rx) = mpsc::channel();
+        if self.tx.send(Request::Stats { reply }).is_err() {
+            return Vec::new();
+        }
+        rx.recv().unwrap_or_default()
+    }
+}
+
+/// The compute server; keep it alive for the duration of the run.  All
+/// handles become inert once this is dropped and the thread drains.
+pub struct ComputeServer {
+    handle: ComputeHandle,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ComputeServer {
+    /// Start the server thread over the given artifact store.
+    pub fn start(store: ArtifactStore) -> Result<ComputeServer> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let thread = std::thread::Builder::new()
+            .name("pjrt-compute".into())
+            .spawn(move || server_loop(store, rx, ready_tx))
+            .context("spawn compute server")?;
+        // Fail fast if the PJRT client cannot start.
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("compute server died during startup"))??;
+        Ok(ComputeServer { handle: ComputeHandle { tx }, thread: Some(thread) })
+    }
+
+    /// Start over the default artifact directory.
+    pub fn start_default() -> Result<ComputeServer> {
+        Self::start(ArtifactStore::open_default()?)
+    }
+
+    pub fn handle(&self) -> ComputeHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for ComputeServer {
+    fn drop(&mut self) {
+        // Close our sender so the loop drains and exits...
+        let (dead_tx, _) = mpsc::channel();
+        self.handle = ComputeHandle { tx: dead_tx };
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    stat: ExecStat,
+}
+
+fn server_loop(store: ArtifactStore, rx: mpsc::Receiver<Request>, ready: mpsc::Sender<Result<()>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("PjRtClient::cpu: {e}")));
+            return;
+        }
+    };
+    let store = Arc::new(store);
+    let mut cache: HashMap<String, Compiled> = HashMap::new();
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Execute { artifact, inputs, reply } => {
+                let r = execute_one(&client, &store, &mut cache, &artifact, inputs);
+                let _ = reply.send(r);
+            }
+            Request::Warm { artifact, reply } => {
+                let r = compile_one(&client, &store, &mut cache, &artifact).map(|_| ());
+                let _ = reply.send(r);
+            }
+            Request::Stats { reply } => {
+                let stats = cache.values().map(|c| c.stat.clone()).collect();
+                let _ = reply.send(stats);
+            }
+        }
+    }
+}
+
+fn compile_one<'a>(
+    client: &xla::PjRtClient,
+    store: &ArtifactStore,
+    cache: &'a mut HashMap<String, Compiled>,
+    artifact: &str,
+) -> Result<&'a mut Compiled> {
+    if !cache.contains_key(artifact) {
+        let info = store.get(artifact)?;
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            info.path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parse {:?}: {e}", info.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compile {artifact}: {e}"))?;
+        let compile_secs = t0.elapsed().as_secs_f64();
+        cache.insert(
+            artifact.to_string(),
+            Compiled {
+                exe,
+                stat: ExecStat {
+                    artifact: artifact.to_string(),
+                    calls: 0,
+                    total_secs: 0.0,
+                    compile_secs,
+                },
+            },
+        );
+    }
+    Ok(cache.get_mut(artifact).unwrap())
+}
+
+fn execute_one(
+    client: &xla::PjRtClient,
+    store: &ArtifactStore,
+    cache: &mut HashMap<String, Compiled>,
+    artifact: &str,
+    inputs: Vec<TensorF32>,
+) -> Result<Vec<TensorF32>> {
+    // Validate against the manifest before crossing into C++.
+    {
+        let info = store.get(artifact)?;
+        if info.inputs.len() != inputs.len() {
+            return Err(anyhow!(
+                "{artifact}: expected {} inputs, got {}",
+                info.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (spec, t)) in info.inputs.iter().zip(&inputs).enumerate() {
+            if spec.shape != t.shape {
+                return Err(anyhow!(
+                    "{artifact}: input {i} shape {:?} != expected {:?}",
+                    t.shape,
+                    spec.shape
+                ));
+            }
+        }
+    }
+    let out_shapes: Vec<Vec<usize>> = store.get(artifact)?.outputs.iter().map(|o| o.shape.clone()).collect();
+
+    let compiled = compile_one(client, store, cache, artifact)?;
+    let t0 = std::time::Instant::now();
+
+    let lits: Vec<xla::Literal> = inputs
+        .iter()
+        .map(|t| {
+            let l = xla::Literal::vec1(&t.data);
+            if t.shape.len() == 1 {
+                Ok(l)
+            } else {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                l.reshape(&dims).map_err(|e| anyhow!("reshape: {e}"))
+            }
+        })
+        .collect::<Result<_>>()?;
+
+    let result = compiled
+        .exe
+        .execute::<xla::Literal>(&lits)
+        .map_err(|e| anyhow!("execute {artifact}: {e}"))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal {artifact}: {e}"))?;
+    // aot.py lowers with return_tuple=True: always a tuple.
+    let parts = lit.to_tuple().map_err(|e| anyhow!("to_tuple {artifact}: {e}"))?;
+    let mut out = Vec::with_capacity(parts.len());
+    for (i, p) in parts.into_iter().enumerate() {
+        let data: Vec<f32> = p.to_vec().map_err(|e| anyhow!("to_vec {artifact}[{i}]: {e}"))?;
+        let shape = out_shapes.get(i).cloned().unwrap_or_else(|| vec![data.len()]);
+        out.push(TensorF32::new(shape, data));
+    }
+
+    compiled.stat.calls += 1;
+    compiled.stat.total_secs += t0.elapsed().as_secs_f64();
+    Ok(out)
+}

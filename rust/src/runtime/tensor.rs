@@ -1,0 +1,61 @@
+//! Host-side tensors that cross the compute-server channel (PJRT types are
+//! not `Send`; plain buffers are).
+
+/// A dense f32 tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {shape:?} != data len {}", data.len());
+        TensorF32 { shape, data }
+    }
+
+    pub fn vec(data: Vec<f32>) -> Self {
+        let n = data.len();
+        TensorF32 { shape: vec![n], data }
+    }
+
+    /// A (1,)-shaped "scalar" (the models take scalars as `f32[1]`).
+    pub fn scalar(x: f32) -> Self {
+        TensorF32 { shape: vec![1], data: vec![x] }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        TensorF32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// First element (for (1,)-shaped reduction outputs).
+    pub fn item(&self) -> f32 {
+        self.data[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        let t = TensorF32::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(TensorF32::scalar(2.5).item(), 2.5);
+        assert_eq!(TensorF32::vec(vec![1.0, 2.0]).shape, vec![2]);
+        assert_eq!(TensorF32::zeros(vec![4, 2]).numel(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn shape_mismatch_panics() {
+        TensorF32::new(vec![2, 2], vec![0.0; 3]);
+    }
+}

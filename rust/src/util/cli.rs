@@ -1,0 +1,96 @@
+//! Tiny command-line argument parser (no external crates available
+//! offline): `prog SUBCOMMAND --key value --flag positional`.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding `argv[0]`).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut a = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    a.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    a.flags.push(name.to_string());
+                }
+            } else if a.subcommand.is_none() && a.positional.is_empty() {
+                a.subcommand = Some(tok);
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            Some(s) => s.parse().unwrap_or(default),
+            None => default,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NOTE: a bare `--flag value` is parsed as an option (the value
+        // binds to the flag); use `--flag=` -less style only at the end or
+        // with `=` syntax when a positional follows.
+        let a = parse("run out.csv --jobs 50 --mode flexible --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("jobs"), Some("50"));
+        assert_eq!(a.get_or("mode", "fixed"), "flexible");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn eq_syntax_and_defaults() {
+        let a = parse("bench --jobs=400");
+        assert_eq!(a.get_parse("jobs", 0u32), 400);
+        assert_eq!(a.get_parse("nodes", 64u32), 64);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("x --fast");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("fast"), None);
+    }
+}

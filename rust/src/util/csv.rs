@@ -1,0 +1,53 @@
+//! Minimal CSV emission for the results/ directory (figures are re-plotted
+//! from these files; the ASCII charts are previews).
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write rows to a CSV file, escaping only what the report data needs
+/// (commas and quotes).
+pub fn write_csv<P: AsRef<Path>>(
+    path: P,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> std::io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for r in rows {
+        let line: Vec<String> = r.iter().map(|c| escape(c)).collect();
+        writeln!(f, "{}", line.join(","))?;
+    }
+    Ok(())
+}
+
+fn escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes() {
+        assert_eq!(escape("abc"), "abc");
+        assert_eq!(escape("a,b"), "\"a,b\"");
+        assert_eq!(escape("a\"b"), "\"a\"\"b\"");
+    }
+
+    #[test]
+    fn writes_file() {
+        let p = std::env::temp_dir().join("dmr_csv_test.csv");
+        write_csv(&p, &["x", "y"], &[vec!["1".into(), "2,3".into()]]).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s, "x,y\n1,\"2,3\"\n");
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,38 @@
+//! Small self-contained utilities (the crate builds offline against the
+//! vendored dependency set, so PRNG, stats, tables, plots, CSV and CLI
+//! parsing are implemented here rather than pulled from crates.io).
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod plot;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Format seconds compactly: `"431.2s"` / `"1h12m"` style used in reports.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 0.0 {
+        return format!("-{}", fmt_secs(-s));
+    }
+    if s < 120.0 {
+        format!("{s:.2}s")
+    } else if s < 7200.0 {
+        format!("{:.1}m", s / 60.0)
+    } else {
+        format!("{:.2}h", s / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(1.5), "1.50s");
+        assert_eq!(fmt_secs(600.0), "10.0m");
+        assert_eq!(fmt_secs(7200.0), "2.00h");
+        assert_eq!(fmt_secs(-1.5), "-1.50s");
+    }
+}

@@ -1,0 +1,108 @@
+//! ASCII charts: horizontal bar charts (Figs. 4–5 style, with gain labels)
+//! and step line charts (Fig. 6 style time evolution).
+
+/// Horizontal bar chart. Each entry is (label, value, annotation).
+pub fn bar_chart(title: &str, entries: &[(String, f64, String)], width: usize) -> String {
+    let max = entries.iter().map(|e| e.1).fold(0.0_f64, f64::max).max(1e-12);
+    let lw = entries.iter().map(|e| e.0.len()).max().unwrap_or(0);
+    let mut out = format!("{title}\n");
+    for (label, v, ann) in entries {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "  {:<lw$} |{:<width$}| {:>10.1} {}\n",
+            label,
+            "#".repeat(n),
+            v,
+            ann,
+            lw = lw,
+            width = width
+        ));
+    }
+    out
+}
+
+/// Step-function time series rendered as an ASCII grid.
+/// `series`: (name, points (t, v)); all series share the x/y axes.
+pub fn step_chart(title: &str, series: &[(String, Vec<(f64, f64)>)], cols: usize, rows: usize) -> String {
+    let mut tmax = 0.0_f64;
+    let mut vmax = 0.0_f64;
+    for (_, pts) in series {
+        for &(t, v) in pts {
+            tmax = tmax.max(t);
+            vmax = vmax.max(v);
+        }
+    }
+    if tmax <= 0.0 || vmax <= 0.0 {
+        return format!("{title}\n  (empty)\n");
+    }
+    let marks = ['#', '*', '+', 'o', 'x', '@'];
+    let mut grid = vec![vec![' '; cols]; rows];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        // sample the step function at each column
+        for c in 0..cols {
+            let t = tmax * (c as f64 + 0.5) / cols as f64;
+            let mut v = 0.0;
+            for &(pt, pv) in pts {
+                if pt <= t {
+                    v = pv;
+                } else {
+                    break;
+                }
+            }
+            let r = ((v / vmax) * (rows as f64 - 1.0)).round() as usize;
+            let r = rows - 1 - r.min(rows - 1);
+            grid[r][c] = mark;
+        }
+    }
+    let mut out = format!("{title}   (ymax={vmax:.0}, tmax={tmax:.0}s)\n");
+    for (i, row) in grid.iter().enumerate() {
+        let y = vmax * (rows - 1 - i) as f64 / (rows as f64 - 1.0);
+        out.push_str(&format!("{:>8.0} |{}\n", y, row.iter().collect::<String>()));
+    }
+    out.push_str(&format!("{:>8} +{}\n", "", "-".repeat(cols)));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (n, _))| format!("{}={}", marks[i % marks.len()], n))
+        .collect();
+    out.push_str(&format!("{:>10}{}\n", "", legend.join("  ")));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bars_scale() {
+        let s = bar_chart(
+            "t",
+            &[("a".into(), 10.0, "".into()), ("b".into(), 5.0, "(x)".into())],
+            20,
+        );
+        assert!(s.contains("a"));
+        let a_hashes = s.lines().nth(1).unwrap().matches('#').count();
+        let b_hashes = s.lines().nth(2).unwrap().matches('#').count();
+        assert_eq!(a_hashes, 20);
+        assert_eq!(b_hashes, 10);
+    }
+
+    #[test]
+    fn step_chart_nonempty() {
+        let s = step_chart(
+            "T",
+            &[("x".into(), vec![(0.0, 1.0), (50.0, 3.0)])],
+            40,
+            8,
+        );
+        assert!(s.contains('#'));
+        assert!(s.contains("#=x"));
+    }
+
+    #[test]
+    fn step_chart_empty() {
+        let s = step_chart("T", &[("x".into(), vec![])], 40, 8);
+        assert!(s.contains("empty"));
+    }
+}

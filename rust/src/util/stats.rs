@@ -1,0 +1,163 @@
+//! Summary statistics used throughout the evaluation reports
+//! (min / max / average / standard deviation — the exact columns of
+//! Tables 2–4 in the paper).
+
+/// Online summary of a sample (Welford's algorithm for numerical
+/// stability; the paper's Table 2 spans 4 orders of magnitude).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        // NOT derived: min must start at +inf (a derived 0.0 would absorb
+        // every later sample into a bogus minimum).
+        Self::new()
+    }
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn from_iter<I: IntoIterator<Item = f64>>(xs: I) -> Self {
+        let mut s = Self::new();
+        for x in xs {
+            s.push(x);
+        }
+        s
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+    /// Population standard deviation.
+    pub fn std(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            (self.m2 / self.n as f64).sqrt()
+        }
+    }
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+    pub fn sum(&self) -> f64 {
+        self.mean() * self.n as f64
+    }
+}
+
+/// Percentage gain of `new` over `base` (positive = improvement when lower
+/// is better), as used for the bar labels of Figs. 4–5:
+/// `gain = (base - new) / base * 100`.
+pub fn gain_pct(base: f64, new: f64) -> f64 {
+    if base == 0.0 {
+        0.0
+    } else {
+        (base - new) / base * 100.0
+    }
+}
+
+/// Trapezoidal mean of a step time-series `(t, value)` over `[t0, t1]` —
+/// used for the average resource-utilization columns.
+pub fn step_series_mean(points: &[(f64, f64)], t0: f64, t1: f64) -> f64 {
+    if points.is_empty() || t1 <= t0 {
+        return 0.0;
+    }
+    let mut area = 0.0;
+    let mut prev_t = t0;
+    let mut prev_v = 0.0;
+    for &(t, v) in points {
+        let t = t.clamp(t0, t1);
+        if t > prev_t {
+            area += prev_v * (t - prev_t);
+        }
+        prev_t = t;
+        prev_v = v;
+    }
+    if t1 > prev_t {
+        area += prev_v * (t1 - prev_t);
+    }
+    area / (t1 - t0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::from_iter([1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.std() - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!((s.sum() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_matches_new_not_derived() {
+        let mut s = Summary::default();
+        s.push(5.0);
+        assert_eq!(s.min(), 5.0, "derived Default would report 0.0");
+        assert_eq!(s.max(), 5.0);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::new();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.std(), 0.0);
+    }
+
+    #[test]
+    fn gain() {
+        assert!((gain_pct(100.0, 50.0) - 50.0).abs() < 1e-12);
+        assert!((gain_pct(100.0, 150.0) + 50.0).abs() < 1e-12);
+        assert_eq!(gain_pct(0.0, 5.0), 0.0);
+    }
+
+    #[test]
+    fn step_mean() {
+        // value 2 over [0,5), value 4 over [5,10) => mean 3
+        let pts = vec![(0.0, 2.0), (5.0, 4.0)];
+        assert!((step_series_mean(&pts, 0.0, 10.0) - 3.0).abs() < 1e-12);
+        // window clipped to [5, 10) => 4
+        assert!((step_series_mean(&pts, 5.0, 10.0) - 4.0).abs() < 1e-12);
+    }
+}

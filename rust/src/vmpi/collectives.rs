@@ -1,0 +1,156 @@
+//! Collectives over the endpoint primitives: barrier, broadcast,
+//! allreduce(sum), allgather.  Rank-0-rooted linear algorithms — the
+//! groups are small (≤ 64 ranks) and in-process, so tree algorithms buy
+//! nothing here (see EXPERIMENTS.md §Perf for the measurement).
+
+use super::endpoint::{Endpoint, RecvSelector};
+use super::{bytes_to_f32s, f32s_to_bytes, TAG_BARRIER, TAG_BCAST, TAG_GATHER, TAG_REDUCE};
+
+impl Endpoint {
+    /// Synchronize all ranks of the group.
+    pub fn barrier(&self) {
+        if self.size() == 1 {
+            return;
+        }
+        if self.rank() == 0 {
+            for _ in 1..self.size() {
+                self.recv(RecvSelector::tag(TAG_BARRIER));
+            }
+            for r in 1..self.size() {
+                self.send(r, TAG_BARRIER, Vec::new());
+            }
+        } else {
+            self.send(0, TAG_BARRIER, Vec::new());
+            self.recv(RecvSelector::from_rank(self.group(), 0, TAG_BARRIER));
+        }
+    }
+
+    /// Broadcast `data` from rank 0 to everyone; returns the payload.
+    pub fn bcast(&self, data: Option<Vec<u8>>) -> Vec<u8> {
+        if self.size() == 1 {
+            return data.expect("bcast root payload");
+        }
+        if self.rank() == 0 {
+            let data = data.expect("bcast root payload");
+            for r in 1..self.size() {
+                self.send(r, TAG_BCAST, data.clone());
+            }
+            data
+        } else {
+            self.recv(RecvSelector::from_rank(self.group(), 0, TAG_BCAST)).payload
+        }
+    }
+
+    /// Sum-allreduce of a single f64 (CG dot products, residual norms).
+    pub fn allreduce_sum(&self, x: f64) -> f64 {
+        if self.size() == 1 {
+            return x;
+        }
+        if self.rank() == 0 {
+            let mut acc = x;
+            for _ in 1..self.size() {
+                let m = self.recv(RecvSelector::tag(TAG_REDUCE));
+                acc += f64::from_le_bytes(m.payload.try_into().expect("8-byte f64"));
+            }
+            let b = acc.to_le_bytes().to_vec();
+            for r in 1..self.size() {
+                self.send(r, TAG_REDUCE, b.clone());
+            }
+            acc
+        } else {
+            self.send(0, TAG_REDUCE, x.to_le_bytes().to_vec());
+            let m = self.recv(RecvSelector::from_rank(self.group(), 0, TAG_REDUCE));
+            f64::from_le_bytes(m.payload.try_into().expect("8-byte f64"))
+        }
+    }
+
+    /// Allgather of equal-length f32 slices (N-body position exchange).
+    /// Returns the concatenation ordered by rank.
+    pub fn allgather_f32(&self, local: &[f32]) -> Vec<f32> {
+        if self.size() == 1 {
+            return local.to_vec();
+        }
+        if self.rank() == 0 {
+            let mut parts: Vec<Vec<f32>> = vec![Vec::new(); self.size()];
+            parts[0] = local.to_vec();
+            for _ in 1..self.size() {
+                let m = self.recv(RecvSelector::tag(TAG_GATHER));
+                parts[m.src_rank] = bytes_to_f32s(&m.payload);
+            }
+            let all: Vec<f32> = parts.concat();
+            let bytes = f32s_to_bytes(&all);
+            for r in 1..self.size() {
+                self.send(r, TAG_GATHER, bytes.clone());
+            }
+            all
+        } else {
+            self.send(0, TAG_GATHER, f32s_to_bytes(local));
+            let m = self.recv(RecvSelector::from_rank(self.group(), 0, TAG_GATHER));
+            bytes_to_f32s(&m.payload)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::World;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn run_group<F>(n: usize, f: F)
+    where
+        F: Fn(super::Endpoint) + Send + Sync + 'static,
+    {
+        let w = World::new();
+        let gid = w.spawn(n, f);
+        w.join_group(gid);
+    }
+
+    #[test]
+    fn barrier_orders_phases() {
+        let flag = Arc::new(AtomicUsize::new(0));
+        let f2 = Arc::clone(&flag);
+        run_group(4, move |ep| {
+            f2.fetch_add(1, Ordering::SeqCst);
+            ep.barrier();
+            // After the barrier every rank must observe all 4 increments.
+            assert_eq!(f2.load(Ordering::SeqCst), 4);
+        });
+    }
+
+    #[test]
+    fn bcast_delivers_payload() {
+        run_group(4, |ep| {
+            let data = if ep.rank() == 0 { Some(vec![42u8; 16]) } else { None };
+            let got = ep.bcast(data);
+            assert_eq!(got, vec![42u8; 16]);
+        });
+    }
+
+    #[test]
+    fn allreduce_sums() {
+        run_group(8, |ep| {
+            let s = ep.allreduce_sum((ep.rank() + 1) as f64);
+            assert_eq!(s, 36.0);
+        });
+    }
+
+    #[test]
+    fn allgather_orders_by_rank() {
+        run_group(4, |ep| {
+            let local = vec![ep.rank() as f32; 2];
+            let all = ep.allgather_f32(&local);
+            assert_eq!(all, vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0, 3.0, 3.0]);
+        });
+    }
+
+    #[test]
+    fn single_rank_collectives_trivial() {
+        run_group(1, |ep| {
+            ep.barrier();
+            assert_eq!(ep.allreduce_sum(5.0), 5.0);
+            assert_eq!(ep.allgather_f32(&[1.0]), vec![1.0]);
+            assert_eq!(ep.bcast(Some(vec![1])), vec![1]);
+        });
+    }
+}

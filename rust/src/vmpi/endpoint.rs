@@ -1,0 +1,176 @@
+//! Rank endpoints: tagged blocking send/recv with MPI-style matching.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use super::world::{GroupId, World};
+
+/// A message in flight.
+#[derive(Debug, Clone)]
+pub struct Msg {
+    pub src_group: GroupId,
+    pub src_rank: usize,
+    pub tag: u64,
+    pub payload: Vec<u8>,
+}
+
+/// Message selector for `recv` (MPI_ANY_SOURCE / MPI_ANY_TAG analogues).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RecvSelector {
+    pub src_group: Option<GroupId>,
+    pub src_rank: Option<usize>,
+    pub tag: Option<u64>,
+}
+
+impl RecvSelector {
+    pub fn tag(tag: u64) -> Self {
+        RecvSelector { tag: Some(tag), ..Default::default() }
+    }
+    pub fn from_rank(group: GroupId, rank: usize, tag: u64) -> Self {
+        RecvSelector { src_group: Some(group), src_rank: Some(rank), tag: Some(tag) }
+    }
+    fn matches(&self, m: &Msg) -> bool {
+        self.src_group.map(|g| g == m.src_group).unwrap_or(true)
+            && self.src_rank.map(|r| r == m.src_rank).unwrap_or(true)
+            && self.tag.map(|t| t == m.tag).unwrap_or(true)
+    }
+}
+
+/// Per-rank inbox: unordered-match queue + condvar.
+#[derive(Default)]
+pub(super) struct Mailbox {
+    queue: Mutex<VecDeque<Msg>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    fn push(&self, m: Msg) {
+        self.queue.lock().unwrap().push_back(m);
+        self.cv.notify_all();
+    }
+
+    fn pop(&self, sel: &RecvSelector) -> Msg {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if let Some(pos) = q.iter().position(|m| sel.matches(m)) {
+                return q.remove(pos).unwrap();
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
+    fn try_pop(&self, sel: &RecvSelector) -> Option<Msg> {
+        let mut q = self.queue.lock().unwrap();
+        q.iter()
+            .position(|m| sel.matches(m))
+            .map(|pos| q.remove(pos).unwrap())
+    }
+}
+
+/// One rank's communication handle (intra-group rank + world access for
+/// inter-group sends).  Clonable; cheap.
+#[derive(Clone)]
+pub struct Endpoint {
+    world: World,
+    group: GroupId,
+    rank: usize,
+    size: usize,
+}
+
+impl Endpoint {
+    pub(super) fn new(world: World, group: GroupId, rank: usize, size: usize) -> Self {
+        Endpoint { world, group, rank, size }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+    /// Intra-group size (MPI_Comm_size of the "world" communicator).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+    pub fn group(&self) -> GroupId {
+        self.group
+    }
+    pub fn world(&self) -> &World {
+        &self.world
+    }
+
+    /// Send within the group.
+    pub fn send(&self, dst: usize, tag: u64, payload: Vec<u8>) {
+        self.send_to_group(self.group, dst, tag, payload);
+    }
+
+    /// Send to a rank of another group (inter-communicator path).
+    pub fn send_to_group(&self, group: GroupId, dst: usize, tag: u64, payload: Vec<u8>) {
+        let mb = self.world.mailbox(group, dst);
+        mb.push(Msg { src_group: self.group, src_rank: self.rank, tag, payload });
+    }
+
+    /// Blocking receive with matching.
+    pub fn recv(&self, sel: RecvSelector) -> Msg {
+        self.world.mailbox(self.group, self.rank).pop(&sel)
+    }
+
+    /// Non-blocking probe-receive.
+    pub fn try_recv(&self, sel: RecvSelector) -> Option<Msg> {
+        self.world.mailbox(self.group, self.rank).try_pop(&sel)
+    }
+
+    /// Convenience: intra-group receive from a specific rank/tag.
+    pub fn recv_from(&self, src: usize, tag: u64) -> Msg {
+        self.recv(RecvSelector::from_rank(self.group, src, tag))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_recv_same_group() {
+        let w = World::new();
+        let (_gid, eps) = w.create_group(2);
+        let (a, b) = (eps[0].clone(), eps[1].clone());
+        let t = std::thread::spawn(move || {
+            let m = b.recv(RecvSelector::tag(7));
+            assert_eq!(m.payload, vec![1, 2, 3]);
+            assert_eq!(m.src_rank, 0);
+        });
+        a.send(1, 7, vec![1, 2, 3]);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn tag_matching_out_of_order() {
+        let w = World::new();
+        let (_gid, eps) = w.create_group(2);
+        eps[0].send(1, 1, vec![1]);
+        eps[0].send(1, 2, vec![2]);
+        // Receive tag 2 first even though tag 1 arrived first.
+        let m2 = eps[1].recv(RecvSelector::tag(2));
+        assert_eq!(m2.payload, vec![2]);
+        let m1 = eps[1].recv(RecvSelector::tag(1));
+        assert_eq!(m1.payload, vec![1]);
+    }
+
+    #[test]
+    fn inter_group_send() {
+        let w = World::new();
+        let (ga, a) = w.create_group(1);
+        let (gb, b) = w.create_group(1);
+        a[0].send_to_group(gb, 0, 5, vec![9]);
+        let m = b[0].recv(RecvSelector::tag(5));
+        assert_eq!(m.src_group, ga);
+        assert_eq!(m.payload, vec![9]);
+    }
+
+    #[test]
+    fn try_recv_nonblocking() {
+        let w = World::new();
+        let (_g, eps) = w.create_group(1);
+        assert!(eps[0].try_recv(RecvSelector::tag(1)).is_none());
+        eps[0].send(0, 1, vec![1]);
+        assert!(eps[0].try_recv(RecvSelector::tag(1)).is_some());
+    }
+}

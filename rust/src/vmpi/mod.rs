@@ -1,0 +1,93 @@
+//! vmpi — a virtual MPI substrate over in-process channels.
+//!
+//! Substitutes MPICH on the paper's testbed (see DESIGN.md §2).  Provides
+//! exactly the facilities the malleability framework needs:
+//!
+//! * process *groups* of ranks with point-to-point tagged send/recv
+//!   (blocking, message-matching semantics like MPI),
+//! * collectives: barrier, broadcast, allreduce, allgather,
+//! * **dynamic process creation** — the [`World::spawn`] analogue of
+//!   `MPI_Comm_spawn` (§3): a running group creates a new group of rank
+//!   threads and gets an inter-communicator to it, over which the data
+//!   redistribution of Listing 3 runs with real byte movement.
+//!
+//! Payloads are owned byte buffers; the redistribution paths copy real
+//! data (the Fig. 3(b) resize-time measurements exercise these copies).
+
+mod collectives;
+mod endpoint;
+mod world;
+
+pub use endpoint::{Endpoint, Msg, RecvSelector};
+pub use world::{GroupId, World};
+
+/// Tags reserved by the runtime (apps use tags < `TAG_RESERVED_BASE`).
+pub const TAG_RESERVED_BASE: u64 = 1 << 48;
+pub const TAG_BARRIER: u64 = TAG_RESERVED_BASE;
+pub const TAG_BCAST: u64 = TAG_RESERVED_BASE + 1;
+pub const TAG_REDUCE: u64 = TAG_RESERVED_BASE + 2;
+pub const TAG_GATHER: u64 = TAG_RESERVED_BASE + 3;
+pub const TAG_STATE: u64 = TAG_RESERVED_BASE + 4;
+pub const TAG_ACK: u64 = TAG_RESERVED_BASE + 5;
+pub const TAG_DECISION: u64 = TAG_RESERVED_BASE + 6;
+
+/// Encode a `&[f32]` as little-endian bytes (payload helper).
+///
+/// Perf note (EXPERIMENTS.md §Perf): on little-endian targets this is a
+/// single memcpy of the POD buffer; the per-element `to_le_bytes` loop it
+/// replaces was a measurable slice of redistribution time.
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    #[cfg(target_endian = "little")]
+    {
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(xs.as_ptr().cast::<u8>(), xs.len() * 4) };
+        bytes.to_vec()
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        let mut out = Vec::with_capacity(xs.len() * 4);
+        for x in xs {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+}
+
+/// Decode little-endian bytes into `f32`s.
+pub fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+    assert_eq!(b.len() % 4, 0, "payload not f32-aligned");
+    #[cfg(target_endian = "little")]
+    {
+        // One memcpy into an f32 buffer (the source Vec<u8> is not
+        // guaranteed 4-aligned, so reinterpreting in place is unsound).
+        let n = b.len() / 4;
+        let mut out = vec![0f32; n];
+        unsafe {
+            std::ptr::copy_nonoverlapping(b.as_ptr(), out.as_mut_ptr().cast::<u8>(), b.len());
+        }
+        out
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let xs = vec![1.0f32, -2.5, 3.25e7, f32::MIN_POSITIVE];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&xs)), xs);
+    }
+
+    #[test]
+    #[should_panic(expected = "aligned")]
+    fn misaligned_payload_panics() {
+        bytes_to_f32s(&[1, 2, 3]);
+    }
+}

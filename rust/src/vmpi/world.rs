@@ -1,0 +1,129 @@
+//! The process universe: groups of rank mailboxes and dynamic spawn.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::endpoint::{Endpoint, Mailbox};
+
+/// Identifier of a process group (an intra-communicator's group).
+pub type GroupId = u64;
+
+/// The registry of all process groups.  Cheap to clone (Arc inside).
+#[derive(Clone)]
+pub struct World {
+    inner: Arc<WorldInner>,
+}
+
+pub(super) struct WorldInner {
+    pub(super) groups: Mutex<HashMap<GroupId, Vec<Arc<Mailbox>>>>,
+    next_group: AtomicU64,
+    /// Join registry for spawned rank threads (drained by `join_group`).
+    handles: Mutex<HashMap<GroupId, Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl Default for World {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl World {
+    pub fn new() -> Self {
+        World {
+            inner: Arc::new(WorldInner {
+                groups: Mutex::new(HashMap::new()),
+                next_group: AtomicU64::new(1),
+                handles: Mutex::new(HashMap::new()),
+            }),
+        }
+    }
+
+    /// Create a group of `n` mailboxes and return its id plus endpoints
+    /// (one per rank).  The caller decides how to run the ranks (threads
+    /// via [`World::spawn`], or inline for tests).
+    pub fn create_group(&self, n: usize) -> (GroupId, Vec<Endpoint>) {
+        let gid = self.inner.next_group.fetch_add(1, Ordering::Relaxed);
+        let boxes: Vec<Arc<Mailbox>> = (0..n).map(|_| Arc::new(Mailbox::default())).collect();
+        self.inner.groups.lock().unwrap().insert(gid, boxes);
+        let eps = (0..n)
+            .map(|r| Endpoint::new(self.clone(), gid, r, n))
+            .collect();
+        (gid, eps)
+    }
+
+    /// `MPI_Comm_spawn`: create a group of `n` ranks, each running `f` on
+    /// its own OS thread.  Returns the new group id (the parent uses it as
+    /// the remote side of the inter-communicator).
+    pub fn spawn<F>(&self, n: usize, f: F) -> GroupId
+    where
+        F: Fn(Endpoint) + Send + Sync + 'static,
+    {
+        let (gid, eps) = self.create_group(n);
+        let f = Arc::new(f);
+        let mut hs = Vec::with_capacity(n);
+        for ep in eps {
+            let f = Arc::clone(&f);
+            hs.push(
+                std::thread::Builder::new()
+                    .name(format!("vmpi-g{gid}-r{}", ep.rank()))
+                    .spawn(move || f(ep))
+                    .expect("spawn rank thread"),
+            );
+        }
+        self.inner.handles.lock().unwrap().insert(gid, hs);
+        gid
+    }
+
+    /// Wait for every rank thread of `gid` to return.
+    pub fn join_group(&self, gid: GroupId) {
+        let hs = self.inner.handles.lock().unwrap().remove(&gid);
+        if let Some(hs) = hs {
+            for h in hs {
+                h.join().expect("rank thread panicked");
+            }
+        }
+    }
+
+    /// Drop a group's mailboxes (after its ranks exited).
+    pub fn destroy_group(&self, gid: GroupId) {
+        self.inner.groups.lock().unwrap().remove(&gid);
+    }
+
+    pub(super) fn mailbox(&self, gid: GroupId, rank: usize) -> Arc<Mailbox> {
+        let groups = self.inner.groups.lock().unwrap();
+        let g = groups.get(&gid).unwrap_or_else(|| panic!("no group {gid}"));
+        Arc::clone(&g[rank])
+    }
+
+    pub fn group_size(&self, gid: GroupId) -> usize {
+        self.inner.groups.lock().unwrap().get(&gid).map(|g| g.len()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_and_destroy() {
+        let w = World::new();
+        let (gid, eps) = w.create_group(4);
+        assert_eq!(eps.len(), 4);
+        assert_eq!(w.group_size(gid), 4);
+        w.destroy_group(gid);
+        assert_eq!(w.group_size(gid), 0);
+    }
+
+    #[test]
+    fn spawn_runs_all_ranks() {
+        let w = World::new();
+        let counter = Arc::new(AtomicU64::new(0));
+        let c2 = Arc::clone(&counter);
+        let gid = w.spawn(8, move |ep| {
+            c2.fetch_add(ep.rank() as u64 + 1, Ordering::Relaxed);
+        });
+        w.join_group(gid);
+        assert_eq!(counter.load(Ordering::Relaxed), 36); // 1+..+8
+    }
+}

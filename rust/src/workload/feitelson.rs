@@ -1,0 +1,120 @@
+//! Feitelson's statistical workload model (§7.1 of the paper).
+//!
+//! The paper generates workloads "using the statistical model proposed by
+//! Feitelson \[4\], which characterizes rigid jobs based on observations from
+//! logs of actual cluster workloads", customizing two parameters: the job
+//! count and the inter-arrival times ("Poisson distribution of factor 10").
+//!
+//! We implement the relevant components of the Feitelson '96 model:
+//!
+//! * **Arrivals** — a Poisson process: exponential inter-arrival gaps with
+//!   the configured mean (10 s in all the paper's workloads).
+//! * **Job mix** — jobs instantiate one of the three applications
+//!   (CG / Jacobi / N-body), uniformly with a fixed seed, matching §7.5
+//!   ("randomly-sorted jobs (with a fixed seed) which instantiate one of
+//!   the three non-synthetic applications").
+//! * **Runtime variability** — the model's log-uniform runtime component,
+//!   applied as a work-scale multiplier around 1.0 so per-app Table 1
+//!   calibration is preserved while jobs are not clones of each other.
+
+use crate::apps::config::AppKind;
+use crate::util::rng::Rng;
+
+/// Parameters of the workload model.
+#[derive(Debug, Clone)]
+pub struct FeitelsonParams {
+    /// Number of jobs.
+    pub jobs: usize,
+    /// Mean inter-arrival gap in seconds ("Poisson distribution of factor
+    /// 10" — §7.1).
+    pub mean_interarrival: f64,
+    /// Half-width of the log-uniform work-scale component, in natural-log
+    /// units (0 = all jobs exactly Table 1 scale).
+    pub work_spread: f64,
+    /// Applications to draw from.
+    pub apps: Vec<AppKind>,
+}
+
+impl Default for FeitelsonParams {
+    fn default() -> Self {
+        Self {
+            jobs: 50,
+            mean_interarrival: 10.0,
+            work_spread: 0.25,
+            apps: AppKind::WORKLOAD_APPS.to_vec(),
+        }
+    }
+}
+
+/// One sampled job (before being materialized into a [`crate::workload::JobSpec`]).
+#[derive(Debug, Clone)]
+pub struct SampledJob {
+    pub app: AppKind,
+    pub arrival: f64,
+    pub work_scale: f64,
+}
+
+/// Sample `params.jobs` jobs.  Deterministic for a given seed.
+pub fn sample(params: &FeitelsonParams, rng: &mut Rng) -> Vec<SampledJob> {
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(params.jobs);
+    for _ in 0..params.jobs {
+        t += rng.exp(params.mean_interarrival);
+        let app = *rng.choice(&params.apps);
+        // log-uniform in [e^-spread, e^+spread]
+        let u = rng.f64() * 2.0 - 1.0;
+        let work_scale = (u * params.work_spread).exp();
+        out.push(SampledJob { app, arrival: t, work_scale });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = FeitelsonParams::default();
+        let a = sample(&p, &mut Rng::new(99));
+        let b = sample(&p, &mut Rng::new(99));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.app, y.app);
+            assert_eq!(x.arrival, y.arrival);
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone_and_poisson_mean() {
+        let p = FeitelsonParams { jobs: 5000, ..Default::default() };
+        let s = sample(&p, &mut Rng::new(1));
+        for w in s.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        let mean_gap = s.last().unwrap().arrival / s.len() as f64;
+        assert!((mean_gap - 10.0).abs() < 0.6, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn app_mix_roughly_uniform() {
+        let p = FeitelsonParams { jobs: 3000, ..Default::default() };
+        let s = sample(&p, &mut Rng::new(2));
+        for app in AppKind::WORKLOAD_APPS {
+            let n = s.iter().filter(|j| j.app == app).count();
+            assert!(
+                (n as f64 / s.len() as f64 - 1.0 / 3.0).abs() < 0.05,
+                "{app}: {n}"
+            );
+        }
+    }
+
+    #[test]
+    fn work_scale_bounded() {
+        let p = FeitelsonParams { jobs: 1000, work_spread: 0.25, ..Default::default() };
+        let s = sample(&p, &mut Rng::new(3));
+        for j in &s {
+            assert!(j.work_scale >= (-0.25f64).exp() && j.work_scale <= (0.25f64).exp());
+        }
+    }
+}

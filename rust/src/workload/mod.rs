@@ -1,0 +1,90 @@
+//! Workload generation: the Feitelson statistical model (§7.1) materialized
+//! into the job streams the evaluation processes (50–400 jobs, fixed and
+//! flexible versions of the same stream).
+
+pub mod feitelson;
+mod spec;
+
+pub use feitelson::{sample, FeitelsonParams, SampledJob};
+pub use spec::{JobSpec, WorkloadSpec};
+
+use crate::apps::config::AppKind;
+use crate::util::rng::Rng;
+
+/// Generate the paper's throughput-evaluation workload: `jobs` jobs,
+/// Poisson arrivals with 10 s mean gap, uniform CG/Jacobi/N-body mix,
+/// submitted at each app's maximum size, malleable.
+///
+/// `WorkloadSpec::as_fixed()` derives the rigid baseline from the same
+/// stream.
+pub fn generate(jobs: usize, seed: u64) -> WorkloadSpec {
+    let params = FeitelsonParams { jobs, ..Default::default() };
+    generate_with(&params, seed)
+}
+
+/// Generate with explicit model parameters.
+pub fn generate_with(params: &FeitelsonParams, seed: u64) -> WorkloadSpec {
+    let mut rng = Rng::new(seed);
+    let sampled = sample(params, &mut rng);
+    let mut counts = std::collections::HashMap::new();
+    let jobs = sampled
+        .into_iter()
+        .map(|s| {
+            let k = counts.entry(s.app).or_insert(0usize);
+            let name = format!("{}-{:03}", s.app, *k);
+            *k += 1;
+            JobSpec::from_app(s.app, name, s.arrival, s.work_scale)
+        })
+        .collect();
+    WorkloadSpec { jobs, seed }
+}
+
+/// A Flexible-Sleep-only workload (overhead study, §7.3).
+pub fn generate_fs(jobs: usize, seed: u64) -> WorkloadSpec {
+    let params = FeitelsonParams {
+        jobs,
+        apps: vec![AppKind::FlexibleSleep],
+        ..Default::default()
+    };
+    generate_with(&params, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_sizes_and_names() {
+        let w = generate(50, 42);
+        assert_eq!(w.len(), 50);
+        // names are unique
+        let mut names: Vec<&str> = w.jobs.iter().map(|j| j.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 50);
+        // arrivals sorted
+        for p in w.jobs.windows(2) {
+            assert!(p[1].submit_time >= p[0].submit_time);
+        }
+    }
+
+    #[test]
+    fn same_seed_same_workload() {
+        let a = generate(100, 7);
+        let b = generate(100, 7);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.submit_time, y.submit_time);
+        }
+        let c = generate(100, 8);
+        assert!(a.jobs.iter().zip(&c.jobs).any(|(x, y)| x.name != y.name
+            || x.submit_time != y.submit_time));
+    }
+
+    #[test]
+    fn fs_workload_all_fs() {
+        let w = generate_fs(10, 1);
+        assert!(w.jobs.iter().all(|j| j.app == AppKind::FlexibleSleep));
+        assert!(w.jobs.iter().all(|j| j.procs == 20));
+    }
+}

@@ -1,0 +1,145 @@
+//! Job and workload specifications.
+
+use crate::apps::config::{config_for, AppKind};
+use crate::Time;
+
+/// Everything the RMS needs to know about a job at submission time.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Human-readable name (e.g. `"CG-017"`).
+    pub name: String,
+    pub app: AppKind,
+    /// Outer-loop iterations (reconfiguring points).
+    pub iterations: u32,
+    /// Work multiplier sampled by the workload model (scales the
+    /// per-iteration cost; 1.0 = Table 1 baseline).
+    pub work_scale: f64,
+    /// Requested (initial) number of processes.  The paper submits every
+    /// job with its *maximum* ("the user-preferred scenario of a fast
+    /// execution", §7.5).
+    pub procs: usize,
+    pub min_procs: usize,
+    pub max_procs: usize,
+    pub pref_procs: Option<usize>,
+    /// Expand/shrink factor (2 in all the paper's experiments).
+    pub factor: usize,
+    /// Checking-inhibitor period (seconds).
+    pub sched_period: f64,
+    /// Parallel-scaling exponent (see [`crate::apps::config::AppConfig::alpha`]).
+    pub alpha: f64,
+    /// Whether the job participates in reconfiguration (flexible) or not
+    /// (fixed).  The framework is "compatible with unmodified
+    /// non-malleable applications" (§2).
+    pub malleable: bool,
+    /// Arrival (submission) time.
+    pub submit_time: Time,
+}
+
+impl JobSpec {
+    /// A job instantiating `app` with Table 1 parameters, submitted at its
+    /// maximum size.
+    pub fn from_app(app: AppKind, name: String, submit_time: Time, work_scale: f64) -> Self {
+        let c = config_for(app);
+        JobSpec {
+            name,
+            app,
+            iterations: c.iterations,
+            work_scale,
+            procs: c.max_procs,
+            min_procs: c.min_procs,
+            max_procs: c.max_procs,
+            pref_procs: c.pref_procs,
+            factor: c.factor,
+            sched_period: c.sched_period,
+            alpha: c.alpha,
+            malleable: true,
+            submit_time,
+        }
+    }
+
+    /// Node-seconds of work in one iteration.
+    pub fn work_per_iter(&self) -> f64 {
+        config_for(self.app).work_per_iter * self.work_scale
+    }
+
+    /// Modeled execution time at `p` processes (per-app scaling: CG and
+    /// Jacobi linear per §7.4; N-body communication-bound).
+    pub fn exec_time_at(&self, p: usize) -> f64 {
+        self.iterations as f64 * self.work_per_iter() / (p as f64).powf(self.alpha)
+    }
+
+    /// Runtime estimate the scheduler uses for backfill reservations.
+    pub fn est_duration(&self) -> f64 {
+        self.exec_time_at(self.procs)
+    }
+
+    /// Valid process counts honour min/max and the resize factor chain
+    /// from the initial size.
+    pub fn clamp_procs(&self, p: usize) -> usize {
+        p.clamp(self.min_procs, self.max_procs)
+    }
+}
+
+/// A workload: jobs sorted by arrival time (§7.1).
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub jobs: Vec<JobSpec>,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// The same workload with every job forced rigid (the paper's "fixed"
+    /// baseline: identical job stream, no malleability).
+    pub fn as_fixed(&self) -> Self {
+        let mut w = self.clone();
+        for j in &mut w.jobs {
+            j.malleable = false;
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_app_uses_table1() {
+        let j = JobSpec::from_app(AppKind::Cg, "CG-0".into(), 5.0, 1.0);
+        assert_eq!(j.procs, 32);
+        assert_eq!(j.min_procs, 2);
+        assert_eq!(j.pref_procs, Some(8));
+        assert!(j.malleable);
+        assert_eq!(j.submit_time, 5.0);
+    }
+
+    #[test]
+    fn scaling_follows_alpha() {
+        let j = JobSpec::from_app(AppKind::Cg, "CG-0".into(), 0.0, 1.0);
+        let e32 = j.exec_time_at(32);
+        let e8 = j.exec_time_at(8);
+        // alpha = 0.33: quartering the procs costs ~1.58x (paper's
+        // Table 3 exec-gain signature)
+        assert!((e8 / e32 - 4f64.powf(0.33)).abs() < 1e-9);
+        // N-body is nearly size-invariant
+        let n = JobSpec::from_app(AppKind::NBody, "NB".into(), 0.0, 1.0);
+        assert!(n.exec_time_at(1) / n.exec_time_at(16) < 1.3);
+    }
+
+    #[test]
+    fn as_fixed_clears_malleable_only() {
+        let j = JobSpec::from_app(AppKind::Jacobi, "J-0".into(), 0.0, 1.3);
+        let w = WorkloadSpec { jobs: vec![j], seed: 1 };
+        let f = w.as_fixed();
+        assert!(!f.jobs[0].malleable);
+        assert_eq!(f.jobs[0].work_scale, 1.3);
+        assert!(w.jobs[0].malleable, "original untouched");
+    }
+}

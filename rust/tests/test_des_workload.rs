@@ -1,0 +1,146 @@
+//! DES workload integration: drain, determinism, conservation and the
+//! paper's headline orderings across sizes, seeds and modes.
+
+use dmr::des::{DesConfig, Engine, ExecModel};
+use dmr::dmr::SchedMode;
+use dmr::metrics::RunSummary;
+use dmr::rms::RmsConfig;
+use dmr::workload;
+
+fn run(jobs: usize, seed: u64, mode: SchedMode, flexible: bool) -> RunSummary {
+    let w = workload::generate(jobs, seed);
+    let w = if flexible { w } else { w.as_fixed() };
+    let cfg = DesConfig { mode, ..Default::default() };
+    RunSummary::from_run(&Engine::new(cfg).run(&w, if flexible { "flex" } else { "fixed" }))
+}
+
+#[test]
+fn drains_all_sizes_and_modes() {
+    for &n in &[10usize, 50, 120] {
+        for mode in [SchedMode::Sync, SchedMode::Async] {
+            for flexible in [false, true] {
+                let s = run(n, 5, mode, flexible);
+                assert_eq!(s.jobs.len(), n, "{n} jobs, {mode:?}, flexible={flexible}");
+                // every job has consistent timestamps
+                for j in &s.jobs {
+                    assert!(j.start >= j.submit);
+                    assert!(j.end > j.start);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let a = run(60, 9, SchedMode::Sync, true);
+    let b = run(60, 9, SchedMode::Sync, true);
+    assert_eq!(a.makespan, b.makespan);
+    for (x, y) in a.jobs.iter().zip(&b.jobs) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.start, y.start);
+        assert_eq!(x.end, y.end);
+    }
+}
+
+#[test]
+fn different_seeds_differ() {
+    let a = run(60, 1, SchedMode::Sync, true);
+    let b = run(60, 2, SchedMode::Sync, true);
+    assert_ne!(a.makespan, b.makespan);
+}
+
+/// Conservation: a fixed job's execution time equals exactly its modeled
+/// work at its allocation (no time lost or created by the engine).
+#[test]
+fn fixed_exec_times_match_model_exactly() {
+    let s = run(40, 13, SchedMode::Sync, false);
+    let w = workload::generate(40, 13);
+    let em = ExecModel::default();
+    for (rec, spec) in s.jobs.iter().zip(&w.jobs) {
+        assert_eq!(rec.name, spec.name);
+        let want = em.exec_time(spec, spec.procs);
+        assert!(
+            (rec.exec() - want).abs() < 1e-6,
+            "{}: exec {} vs model {}",
+            rec.name,
+            rec.exec(),
+            want
+        );
+    }
+}
+
+/// Flexible jobs can only run slower than fixed ones individually —
+/// malleability trades per-job speed for global throughput.
+#[test]
+fn flexible_headlines_hold_across_seeds() {
+    for seed in [3u64, 21, 99] {
+        let fixed = run(50, seed, SchedMode::Sync, false);
+        let flex = run(50, seed, SchedMode::Sync, true);
+        assert!(flex.makespan < fixed.makespan, "seed {seed}: makespan");
+        assert!(flex.wait.mean() < fixed.wait.mean(), "seed {seed}: wait");
+        assert!(flex.exec.mean() > fixed.exec.mean(), "seed {seed}: exec");
+        assert!(
+            flex.node_seconds() < fixed.node_seconds(),
+            "seed {seed}: node-seconds (smarter usage)"
+        );
+    }
+}
+
+#[test]
+fn no_expand_timeouts_in_sync_mode() {
+    let s = run(100, 4, SchedMode::Sync, true);
+    assert_eq!(s.actions.expand_aborts, 0, "sync expansions never wait");
+}
+
+#[test]
+fn async_mode_suffers_timeouts_under_pressure() {
+    let s = run(200, 4, SchedMode::Async, true);
+    assert!(
+        s.actions.expand_aborts > 0,
+        "stale async decisions must hit the resizer timeout"
+    );
+    // Aborted expansions show up as the long tail of expand durations
+    // (Table 2's 40 s max).
+    assert!(s.actions.expand.max() >= 39.0);
+}
+
+#[test]
+fn smaller_cluster_serializes_more() {
+    let w = workload::generate(40, 8);
+    let small = DesConfig {
+        rms: RmsConfig { nodes: 32, ..Default::default() },
+        ..Default::default()
+    };
+    let big = DesConfig {
+        rms: RmsConfig { nodes: 128, ..Default::default() },
+        ..Default::default()
+    };
+    let s = RunSummary::from_run(&Engine::new(small).run(&w, "small"));
+    let b = RunSummary::from_run(&Engine::new(big).run(&w, "big"));
+    assert!(s.makespan > b.makespan);
+}
+
+/// Failure injection: a cluster with down nodes still drains (capacity
+/// shrinks, waits grow).
+#[test]
+fn down_nodes_reduce_capacity_but_workload_drains() {
+    let w = workload::generate(20, 15);
+    let mut cfg = DesConfig::default();
+    cfg.rms.nodes = 64;
+    let mut engine = Engine::new(cfg);
+    // mark 16 nodes down before any arrival
+    for n in 48..64 {
+        engine_cluster(&mut engine).set_down(n).unwrap();
+    }
+    let r = engine.run(&w, "degraded");
+    assert_eq!(r.rms.completed_jobs(), 20);
+    let healthy = run(20, 15, SchedMode::Sync, true);
+    let degraded = RunSummary::from_run(&r);
+    assert!(degraded.makespan >= healthy.makespan);
+}
+
+// Small helper: reach the engine's cluster for failure injection.
+fn engine_cluster(engine: &mut Engine) -> &mut dmr::cluster::Cluster {
+    engine.cluster_mut()
+}

@@ -1,0 +1,233 @@
+//! Property-based tests (homegrown driver over the crate's deterministic
+//! PRNG — no proptest offline) on the coordinator's invariants: policy
+//! decisions, cluster bookkeeping, and random RMS operation sequences.
+
+use dmr::apps::config::AppKind;
+use dmr::cluster::Cluster;
+use dmr::rms::policy::{decide, Action, DmrRequest, PolicyConfig, SystemView};
+use dmr::rms::{DmrOutcome, JobState, Rms, RmsConfig};
+use dmr::util::rng::Rng;
+use dmr::workload::JobSpec;
+
+const CASES: usize = 500;
+
+/// Property: every decision respects the request bounds, factor
+/// reachability, and resource availability.
+#[test]
+fn prop_policy_decisions_respect_bounds() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..CASES {
+        // random but consistent request/state
+        let factor = *rng.choice(&[2usize, 2, 2, 4]);
+        let min = rng.range(1, 4) as usize;
+        let max = min * factor.pow(rng.range(0, 4) as u32);
+        // current somewhere factor-reachable within [min, max]
+        let mut current = min;
+        while current * factor <= max && rng.f64() < 0.5 {
+            current *= factor;
+        }
+        let pref = if rng.f64() < 0.7 {
+            let mut p = min;
+            while p * factor <= max && rng.f64() < 0.5 {
+                p *= factor;
+            }
+            Some(p)
+        } else {
+            None
+        };
+        let req = DmrRequest { min, max, pref, factor };
+        let view = SystemView {
+            available: rng.range(0, 64) as usize,
+            pending_jobs: rng.range(0, 5) as usize,
+            head_need: if rng.f64() < 0.7 { Some(rng.range(1, 64) as usize) } else { None },
+        };
+        let view = SystemView {
+            pending_jobs: if view.head_need.is_none() { 0 } else { view.pending_jobs.max(1) },
+            ..view
+        };
+        let cfg = PolicyConfig::default();
+        match decide(&cfg, current, &req, &view) {
+            Action::NoAction => {}
+            Action::Expand { to } => {
+                assert!(to > current, "case {case}: expand must grow");
+                assert!(to <= req.max.max(current), "case {case}: expand caps at max");
+                assert!(
+                    to - current <= view.available,
+                    "case {case}: expand within available ({to} from {current}, avail {})",
+                    view.available
+                );
+            }
+            Action::Shrink { to } => {
+                assert!(to < current, "case {case}: shrink must reduce");
+                assert!(to >= req.min.min(current), "case {case}: shrink floors at min");
+            }
+        }
+    }
+}
+
+/// Property: random alloc/release/transfer sequences never break the
+/// cluster's free-list bookkeeping.
+#[test]
+fn prop_cluster_bookkeeping() {
+    let mut rng = Rng::new(77);
+    for _ in 0..200 {
+        let n = rng.range(4, 64) as usize;
+        let mut c = Cluster::new(n);
+        let mut held: Vec<(u64, Vec<usize>)> = Vec::new();
+        let mut next_job = 1u64;
+        for _ in 0..100 {
+            match rng.range(0, 2) {
+                0 => {
+                    let want = rng.range(1, 8) as usize;
+                    if let Ok(nodes) = c.alloc(next_job, want) {
+                        held.push((next_job, nodes));
+                        next_job += 1;
+                    }
+                }
+                1 if !held.is_empty() => {
+                    let i = rng.below(held.len() as u64) as usize;
+                    let (job, nodes) = held.swap_remove(i);
+                    c.release(job, &nodes).unwrap();
+                }
+                _ if !held.is_empty() => {
+                    let i = rng.below(held.len() as u64) as usize;
+                    let (job, nodes) = held[i].clone();
+                    let to = next_job;
+                    next_job += 1;
+                    c.transfer(job, to, &nodes).unwrap();
+                    held[i] = (to, nodes);
+                }
+                _ => {}
+            }
+            assert!(c.check_invariants());
+            let held_count: usize = held.iter().map(|(_, v)| v.len()).sum();
+            assert_eq!(c.available() + held_count, n);
+        }
+    }
+}
+
+/// Property: random RMS operation sequences (submit / schedule / dmr /
+/// commit / finish) preserve the allocation invariants and never lose a
+/// node.
+#[test]
+fn prop_rms_random_walk_keeps_invariants() {
+    let mut rng = Rng::new(0xDA7A);
+    for walk in 0..30 {
+        let nodes = *rng.choice(&[16usize, 32, 64]);
+        let mut rms = Rms::new(RmsConfig { nodes, ..Default::default() });
+        let mut now = 0.0f64;
+        let mut live: Vec<u64> = Vec::new();
+        let mut resizing: Vec<(u64, usize)> = Vec::new();
+        let mut submitted = 0usize;
+
+        for step in 0..300 {
+            now += rng.f64() * 5.0;
+            match rng.range(0, 4) {
+                0 if submitted < 40 => {
+                    let app = *rng.choice(&AppKind::WORKLOAD_APPS.as_slice());
+                    let mut spec =
+                        JobSpec::from_app(app, format!("w{walk}-j{submitted}"), now, 1.0);
+                    // keep sizes modest so things actually run
+                    spec.procs = spec.procs.min(nodes);
+                    spec.max_procs = spec.max_procs.min(nodes);
+                    rms.submit(spec, now);
+                    submitted += 1;
+                }
+                1 => {
+                    rms.schedule(now);
+                    for s in rms.take_recent_starts() {
+                        if !rms.job(s.job).map(|j| j.is_resizer).unwrap_or(true) {
+                            live.push(s.job);
+                        }
+                    }
+                }
+                2 if !live.is_empty() => {
+                    let i = rng.below(live.len() as u64) as usize;
+                    let id = live[i];
+                    let j = rms.job(id).unwrap();
+                    if j.state != JobState::Running {
+                        continue;
+                    }
+                    let req = DmrRequest {
+                        min: j.spec.min_procs,
+                        max: j.spec.max_procs,
+                        pref: j.spec.pref_procs,
+                        factor: 2,
+                    };
+                    match rms.dmr_check(id, &req, now) {
+                        DmrOutcome::Shrink { to, .. } => resizing.push((id, to)),
+                        DmrOutcome::Expand { .. } => resizing.push((id, 0)),
+                        DmrOutcome::NoAction => {}
+                    }
+                    for s in rms.take_recent_starts() {
+                        if !rms.job(s.job).map(|j| j.is_resizer).unwrap_or(true) {
+                            live.push(s.job);
+                        }
+                    }
+                }
+                3 if !resizing.is_empty() => {
+                    let (id, to) = resizing.swap_remove(0);
+                    if to == 0 {
+                        rms.commit_resize(id, now);
+                    } else {
+                        rms.commit_shrink_to(id, to, now);
+                    }
+                    rms.schedule(now);
+                    for s in rms.take_recent_starts() {
+                        if !rms.job(s.job).map(|j| j.is_resizer).unwrap_or(true) {
+                            live.push(s.job);
+                        }
+                    }
+                }
+                _ if !live.is_empty() => {
+                    // finish a random running (not resizing) job
+                    let i = rng.below(live.len() as u64) as usize;
+                    let id = live[i];
+                    if rms.job(id).unwrap().state == JobState::Running
+                        && !resizing.iter().any(|(r, _)| *r == id)
+                    {
+                        rms.finish(id, now);
+                        live.swap_remove(i);
+                        rms.schedule(now);
+                        for s in rms.take_recent_starts() {
+                            if !rms.job(s.job).map(|j| j.is_resizer).unwrap_or(true) {
+                                live.push(s.job);
+                            }
+                        }
+                    }
+                }
+                _ => {}
+            }
+            assert!(rms.check_invariants(), "walk {walk} step {step}: invariants broken");
+            assert!(
+                rms.cluster.available() <= nodes,
+                "walk {walk} step {step}: free nodes exceed cluster"
+            );
+        }
+    }
+}
+
+/// Property: backfill never oversubscribes — at any instant, allocated
+/// nodes <= cluster size (checked across random schedules).
+#[test]
+fn prop_schedule_never_oversubscribes() {
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..50 {
+        let nodes = rng.range(8, 96) as usize;
+        let mut rms = Rms::new(RmsConfig { nodes, ..Default::default() });
+        let mut now = 0.0;
+        for i in 0..30 {
+            now += rng.f64();
+            let app = *rng.choice(&AppKind::WORKLOAD_APPS.as_slice());
+            let mut spec = JobSpec::from_app(app, format!("j{i}"), now, 1.0);
+            spec.procs = (rng.range(1, 64) as usize).min(nodes);
+            spec.min_procs = spec.procs.min(spec.min_procs);
+            spec.max_procs = spec.max_procs.max(spec.procs).min(nodes);
+            rms.submit(spec, now);
+            rms.schedule(now);
+            rms.take_recent_starts();
+            assert!(rms.cluster.allocated() <= nodes);
+            assert!(rms.check_invariants());
+        }
+    }
+}

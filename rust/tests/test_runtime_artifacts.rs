@@ -1,0 +1,210 @@
+//! Integration: the PJRT bridge executes the real AOT artifacts and the
+//! numerics match the pure-Rust references.  Requires `make artifacts`.
+
+use dmr::runtime::{ArtifactStore, ComputeServer, TensorF32};
+
+fn store() -> Option<ArtifactStore> {
+    // Tests run from the workspace root.
+    ArtifactStore::open("artifacts").ok()
+}
+
+/// CPU-side reference for tridiag(-1,2,-1) @ x on a padded shard.
+fn matvec_ref(xp: &[f32]) -> Vec<f32> {
+    let n = xp.len() - 2;
+    (0..n)
+        .map(|i| 2.0 * xp[i + 1] - xp[i] - xp[i + 2])
+        .collect()
+}
+
+#[test]
+fn manifest_lists_all_variants() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    // 5 functions x 6 process counts
+    assert_eq!(store.len(), 30);
+    for p in [1usize, 2, 4, 8, 16, 32] {
+        for f in ["cg_phase1", "cg_phase2", "cg_phase3", "jacobi_step", "nbody_step"] {
+            assert!(store.get(&format!("{f}_p{p}")).is_ok());
+        }
+    }
+}
+
+#[test]
+fn cg_phase1_matches_reference() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let server = ComputeServer::start(store).unwrap();
+    let h = server.handle();
+
+    let p = 32usize; // shard n = 16384/32 = 512
+    let n = 16384 / p;
+    let p_loc: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.01).sin()).collect();
+    let hl = 0.5f32;
+    let hr = -0.25f32;
+
+    let out = h
+        .execute(
+            &format!("cg_phase1_p{p}"),
+            vec![
+                TensorF32::vec(p_loc.clone()),
+                TensorF32::scalar(hl),
+                TensorF32::scalar(hr),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 2);
+    let q = &out[0];
+    assert_eq!(q.shape, vec![n]);
+
+    let mut xp = vec![hl];
+    xp.extend_from_slice(&p_loc);
+    xp.push(hr);
+    let want = matvec_ref(&xp);
+    for (a, b) in q.data.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+    // partial p.q
+    let want_pq: f32 = p_loc.iter().zip(&want).map(|(a, b)| a * b).sum();
+    assert!((out[1].item() - want_pq).abs() / want_pq.abs().max(1.0) < 1e-3);
+}
+
+#[test]
+fn cg_phase2_updates_and_reduces() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let server = ComputeServer::start(store).unwrap();
+    let h = server.handle();
+
+    let p = 32usize;
+    let n = 16384 / p;
+    let x: Vec<f32> = vec![1.0; n];
+    let r: Vec<f32> = (0..n).map(|i| (i % 7) as f32 * 0.1).collect();
+    let pp: Vec<f32> = (0..n).map(|i| (i % 5) as f32 * 0.2).collect();
+    let q: Vec<f32> = (0..n).map(|i| (i % 3) as f32 * 0.3).collect();
+    let alpha = 0.125f32;
+
+    let out = h
+        .execute(
+            &format!("cg_phase2_p{p}"),
+            vec![
+                TensorF32::vec(x.clone()),
+                TensorF32::vec(r.clone()),
+                TensorF32::vec(pp.clone()),
+                TensorF32::vec(q.clone()),
+                TensorF32::scalar(alpha),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 3);
+    let mut want_rr = 0.0f32;
+    for i in 0..n {
+        let x2 = x[i] + alpha * pp[i];
+        let r2 = r[i] - alpha * q[i];
+        assert!((out[0].data[i] - x2).abs() < 1e-5);
+        assert!((out[1].data[i] - r2).abs() < 1e-5);
+        want_rr += r2 * r2;
+    }
+    assert!((out[2].item() - want_rr).abs() / want_rr < 1e-3);
+}
+
+#[test]
+fn nbody_step_conserves_momentum_roughly() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let server = ComputeServer::start(store).unwrap();
+    let h = server.handle();
+
+    // p=1: local = all 1024 bodies.
+    let nb = 1024usize;
+    let pos: Vec<f32> = (0..nb * 3)
+        .map(|i| ((i as f32 * 0.37).sin() * 2.0) + ((i % 3) as f32))
+        .collect();
+    let vel = vec![0.0f32; nb * 3];
+    let mass = vec![1.0f32 / nb as f32; nb];
+    let dt = 1e-3f32;
+
+    let out = h
+        .execute(
+            "nbody_step_p1",
+            vec![
+                TensorF32::new(vec![nb, 3], pos.clone()),
+                TensorF32::new(vec![nb, 3], pos.clone()),
+                TensorF32::new(vec![nb, 3], vel),
+                TensorF32::vec(mass),
+                TensorF32::scalar(dt),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 3);
+    // equal masses, zero initial velocity: net momentum after one step ~ 0
+    let v2 = &out[1].data;
+    for d in 0..3 {
+        let total: f32 = (0..nb).map(|i| v2[i * 3 + d]).sum();
+        assert!(total.abs() < 1e-1, "momentum[{d}] = {total}");
+    }
+    // kinetic energy partial is positive
+    assert!(out[2].item() > 0.0);
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let server = ComputeServer::start(store).unwrap();
+    let h = server.handle();
+    // wrong arity
+    assert!(h.execute("cg_phase3_p32", vec![]).is_err());
+    // wrong shape
+    let bad = h.execute(
+        "cg_phase3_p32",
+        vec![
+            TensorF32::vec(vec![0.0; 7]),
+            TensorF32::vec(vec![0.0; 512]),
+            TensorF32::scalar(0.0),
+        ],
+    );
+    assert!(bad.is_err());
+    // unknown artifact
+    assert!(h.execute("nope_p1", vec![]).is_err());
+}
+
+#[test]
+fn warm_compiles_and_stats_accumulate() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let server = ComputeServer::start(store).unwrap();
+    let h = server.handle();
+    h.warm("cg_phase3_p32").unwrap();
+    let stats = h.stats();
+    let s = stats.iter().find(|s| s.artifact == "cg_phase3_p32").unwrap();
+    assert_eq!(s.calls, 0);
+    assert!(s.compile_secs > 0.0);
+
+    let n = 512;
+    let out = h
+        .execute(
+            "cg_phase3_p32",
+            vec![
+                TensorF32::vec(vec![1.0; n]),
+                TensorF32::vec(vec![2.0; n]),
+                TensorF32::scalar(0.5),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out[0].data[0], 2.0); // r + beta*p = 1 + 0.5*2
+    let stats = h.stats();
+    let s = stats.iter().find(|s| s.artifact == "cg_phase3_p32").unwrap();
+    assert_eq!(s.calls, 1);
+}

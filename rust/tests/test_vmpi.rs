@@ -1,0 +1,145 @@
+//! Integration: the vmpi substrate under realistic concurrent load,
+//! including the spawn + state-transfer choreography the resize protocol
+//! relies on.
+
+use dmr::dmr::{expand_dest, merge_rows, shrink_role, split_rows, ShrinkRole, StateMsg};
+use dmr::vmpi::{f32s_to_bytes, RecvSelector, World, TAG_STATE};
+
+#[test]
+fn heavy_pingpong_many_ranks() {
+    let w = World::new();
+    let gid = w.spawn(16, |ep| {
+        let n = ep.size();
+        let r = ep.rank();
+        // Ring: send to (r+1)%n, receive from (r-1+n)%n, 50 rounds.
+        for round in 0..50u64 {
+            ep.send((r + 1) % n, round, f32s_to_bytes(&[r as f32, round as f32]));
+            let m = ep.recv(RecvSelector::from_rank(ep.group(), (r + n - 1) % n, round));
+            let v = dmr::vmpi::bytes_to_f32s(&m.payload);
+            assert_eq!(v[0] as usize, (r + n - 1) % n);
+            assert_eq!(v[1] as u64, round);
+        }
+        ep.barrier();
+    });
+    w.join_group(gid);
+}
+
+#[test]
+fn allreduce_stress_is_consistent() {
+    let w = World::new();
+    let gid = w.spawn(8, |ep| {
+        let mut acc = 0.0;
+        for i in 0..100 {
+            let s = ep.allreduce_sum((ep.rank() * i) as f64);
+            acc += s;
+        }
+        // sum over ranks of r*i = i * (0+..+7) = 28 i; total = 28 * 4950
+        assert_eq!(acc, 28.0 * 4950.0);
+    });
+    w.join_group(gid);
+}
+
+/// The expand choreography: an old group of 2 spawns a new group of 4 and
+/// hands over sharded state; the new shards tile the old data exactly.
+#[test]
+fn spawn_and_expand_state_transfer() {
+    let w = World::new();
+    let row = 2usize;
+    let global: Vec<f32> = (0..32).map(|x| x as f32).collect(); // 16 rows
+
+    let (done_tx, done_rx) = std::sync::mpsc::channel::<(usize, Vec<f32>)>();
+
+    let w2 = w.clone();
+    let g_old = {
+        let global = global.clone();
+        w.spawn(2, move |ep| {
+            let size = ep.size();
+            let rows = 16 / size;
+            let shard =
+                global[ep.rank() * rows * row..(ep.rank() + 1) * rows * row].to_vec();
+
+            // rank0 spawns the new group; everyone learns its id via bcast.
+            let new_gid = if ep.rank() == 0 {
+                let done_tx = done_tx.clone();
+                let gid = w2.spawn(4, move |nep| {
+                    let m = nep.recv(RecvSelector::tag(TAG_STATE));
+                    let sm = StateMsg::decode(&m.payload);
+                    assert_eq!(sm.iter, 7);
+                    done_tx.send((nep.rank(), sm.data)).unwrap();
+                });
+                ep.bcast(Some(gid.to_le_bytes().to_vec()));
+                gid
+            } else {
+                u64::from_le_bytes(ep.bcast(None).try_into().unwrap())
+            };
+
+            let factor = 2;
+            let parts = split_rows(&shard, row, factor);
+            for (i, p) in parts.into_iter().enumerate() {
+                let sm = StateMsg { iter: 7, inhibit_last: 0.0, scalars: vec![], data: p };
+                ep.send_to_group(new_gid, expand_dest(ep.rank(), factor, i), TAG_STATE, sm.encode());
+            }
+        })
+    };
+    w.join_group(g_old);
+
+    let mut shards: Vec<(usize, Vec<f32>)> = (0..4).map(|_| done_rx.recv().unwrap()).collect();
+    shards.sort_by_key(|(r, _)| *r);
+    let reassembled: Vec<f32> = shards.into_iter().flat_map(|(_, d)| d).collect();
+    assert_eq!(reassembled, global);
+}
+
+/// The shrink merge: 4 ranks merge pairwise at the receivers; the merged
+/// blocks tile the original data.
+#[test]
+fn shrink_merge_state_transfer() {
+    let w = World::new();
+    let row = 3usize;
+    let global: Vec<f32> = (0..48).map(|x| x as f32).collect(); // 16 rows
+    let (done_tx, done_rx) = std::sync::mpsc::channel::<(usize, Vec<f32>)>();
+
+    let g = {
+        let global = global.clone();
+        w.spawn(4, move |ep| {
+            let rows = 16 / ep.size();
+            let shard =
+                global[ep.rank() * rows * row..(ep.rank() + 1) * rows * row].to_vec();
+            let factor = 2;
+            match shrink_role(ep.rank(), factor) {
+                ShrinkRole::Sender { dst } => {
+                    ep.send(dst, TAG_STATE, f32s_to_bytes(&shard));
+                }
+                ShrinkRole::Receiver { srcs, new_dst } => {
+                    let mut parts = Vec::new();
+                    for s in srcs {
+                        let m = ep.recv(RecvSelector::from_rank(ep.group(), s, TAG_STATE));
+                        parts.push(dmr::vmpi::bytes_to_f32s(&m.payload));
+                    }
+                    parts.push(shard);
+                    done_tx.send((new_dst, merge_rows(parts))).unwrap();
+                }
+            }
+        })
+    };
+    w.join_group(g);
+
+    let mut merged: Vec<(usize, Vec<f32>)> = (0..2).map(|_| done_rx.recv().unwrap()).collect();
+    merged.sort_by_key(|(r, _)| *r);
+    let reassembled: Vec<f32> = merged.into_iter().flat_map(|(_, d)| d).collect();
+    assert_eq!(reassembled, global);
+}
+
+#[test]
+fn large_payload_throughput() {
+    // 64 MB moved through a mailbox — sanity for the Fig. 3(b) study.
+    let w = World::new();
+    let (_g, eps) = w.create_group(2);
+    let data = vec![0u8; 64 << 20];
+    let t0 = std::time::Instant::now();
+    eps[0].send(1, 1, data);
+    let m = eps[1].recv(RecvSelector::tag(1));
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(m.payload.len(), 64 << 20);
+    // Ownership transfer: must be far faster than a memcpy-bound network.
+    assert!(dt < 1.0, "64MB took {dt}s");
+}
