@@ -1,0 +1,45 @@
+//! Campaign engine quickstart: load a declarative spec, sweep the
+//! scenario matrix across worker threads, print the per-scenario
+//! aggregates and write the CSV/JSON artifacts.
+//!
+//! ```sh
+//! cargo run --release --example campaign
+//! cargo run --release --example campaign -- scenarios/swf_replay.toml --workers 4
+//! ```
+
+use dmr::campaign::{self, CampaignSpec};
+use dmr::metrics::report;
+use dmr::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let path = args
+        .subcommand
+        .clone()
+        .unwrap_or_else(|| "scenarios/sweep_small.toml".to_string());
+    let workers = args.get_parse("workers", 0usize);
+
+    let spec = CampaignSpec::from_file(&path)?;
+    println!(
+        "campaign {}: {} runs on {} workers",
+        spec.name,
+        spec.matrix_size(),
+        campaign::runner::resolve_workers(&spec, workers)
+    );
+
+    let result = campaign::run_campaign(&spec, workers)?;
+    let aggs = campaign::aggregate(&result.records);
+    println!("{}", report::campaign_table(&spec.name, &aggs).render());
+
+    let out = campaign::write_outputs(&spec, &result)?;
+    println!(
+        "{} runs in {:.2}s ({:.1} runs/s)",
+        result.records.len(),
+        result.wall_secs,
+        result.runs_per_sec()
+    );
+    println!("wrote {}", out.runs_csv.display());
+    println!("wrote {}", out.agg_csv.display());
+    println!("wrote {}", out.agg_json.display());
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Bench: campaign runner throughput vs worker count — the speed win of
+//! sharding the single-threaded DES across a thread pool.  Also verifies
+//! the aggregate output is identical at every worker count (the runner's
+//! determinism contract) while timing it.
+
+mod common;
+
+use dmr::campaign::{self, CampaignSpec};
+use dmr::metrics::report;
+use dmr::util::table::Table;
+
+fn spec(jobs: usize, seeds: usize) -> CampaignSpec {
+    let seed_list: Vec<String> = (1..=seeds as u64).map(|s| s.to_string()).collect();
+    CampaignSpec::from_toml_str(&format!(
+        r#"
+name = "scaling"
+nodes = [32, 64]
+modes = ["fixed", "sync"]
+seeds = [{seeds}]
+[[workload]]
+kind = "feitelson"
+jobs = {jobs}
+[[workload]]
+kind = "burst_lull"
+jobs = {jobs}
+"#,
+        seeds = seed_list.join(", "),
+        jobs = jobs,
+    ))
+    .expect("valid bench spec")
+}
+
+fn main() {
+    common::banner("campaign_scaling", "campaign runner throughput vs worker count");
+    let (jobs, seeds) = if common::full() { (100, 8) } else { (25, 4) };
+    let s = spec(jobs, seeds);
+    println!(
+        "matrix: {} runs ({} jobs per workload), machine has {} cores\n",
+        s.matrix_size(),
+        jobs,
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+
+    let mut t = Table::new(vec!["Workers", "Wall (s)", "Runs/s", "Speedup"]);
+    let mut base = None;
+    let mut reference: Option<Vec<Vec<String>>> = None;
+    for workers in [1usize, 2, 4, 8] {
+        let res = campaign::run_campaign(&s, workers).expect("campaign runs");
+        let agg_rows = report::campaign_agg_rows(&campaign::aggregate(&res.records));
+        match &reference {
+            None => reference = Some(agg_rows),
+            Some(r) => assert_eq!(r, &agg_rows, "aggregates must not depend on workers"),
+        }
+        let wall = res.wall_secs;
+        let b = *base.get_or_insert(wall);
+        t.row(vec![
+            workers.to_string(),
+            format!("{wall:.3}"),
+            format!("{:.1}", res.runs_per_sec()),
+            format!("{:.2}x", b / wall.max(1e-9)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(aggregate CSV rows verified identical across all worker counts)");
+}

@@ -1,0 +1,144 @@
+//! Cross-scenario aggregation: fold the per-run results of a campaign
+//! into per-scenario statistics (across seeds) with normal-approximation
+//! 95 % confidence intervals, and write the CSV/JSON outputs through
+//! [`crate::metrics::report`] / [`crate::util::csv`].
+
+use std::path::PathBuf;
+
+use super::runner::{CampaignResult, RunRecord};
+use super::spec::CampaignSpec;
+use crate::metrics::report;
+use crate::util::csv::write_csv;
+use crate::util::stats::Summary;
+
+/// Per-scenario aggregate over the scenario's seeds.
+pub struct ScenarioAgg {
+    pub scenario: String,
+    /// Runs folded in (== number of seeds).
+    pub runs: usize,
+    /// Jobs per run.
+    pub jobs: usize,
+    pub makespan_s: Summary,
+    /// Mean cluster utilization per run, in percent.
+    pub util_pct: Summary,
+    pub wait_s: Summary,
+    pub exec_s: Summary,
+    pub completion_s: Summary,
+    pub node_seconds: Summary,
+    pub expands: Summary,
+    pub shrinks: Summary,
+    pub expand_aborts: Summary,
+}
+
+impl ScenarioAgg {
+    fn new(scenario: &str, jobs: usize) -> ScenarioAgg {
+        ScenarioAgg {
+            scenario: scenario.to_string(),
+            runs: 0,
+            jobs,
+            makespan_s: Summary::new(),
+            util_pct: Summary::new(),
+            wait_s: Summary::new(),
+            exec_s: Summary::new(),
+            completion_s: Summary::new(),
+            node_seconds: Summary::new(),
+            expands: Summary::new(),
+            shrinks: Summary::new(),
+            expand_aborts: Summary::new(),
+        }
+    }
+
+    fn push(&mut self, r: &RunRecord) {
+        let s = &r.summary;
+        self.runs += 1;
+        self.makespan_s.push(s.makespan);
+        self.util_pct.push(s.util_mean * 100.0);
+        self.wait_s.push(s.wait.mean());
+        self.exec_s.push(s.exec.mean());
+        self.completion_s.push(s.completion.mean());
+        self.node_seconds.push(s.node_seconds());
+        self.expands.push(s.actions.expand.count() as f64);
+        self.shrinks.push(s.actions.shrink.count() as f64);
+        self.expand_aborts.push(s.actions.expand_aborts as f64);
+    }
+}
+
+/// Fold run records into per-scenario aggregates, preserving matrix order
+/// (records arrive index-ordered, with a scenario's seeds adjacent).
+pub fn aggregate(records: &[RunRecord]) -> Vec<ScenarioAgg> {
+    let mut out: Vec<ScenarioAgg> = Vec::new();
+    for r in records {
+        let scenario = &r.plan.scenario;
+        if out.last().map(|a| a.scenario != *scenario).unwrap_or(true) {
+            out.push(ScenarioAgg::new(scenario, r.jobs));
+        }
+        out.last_mut().unwrap().push(r);
+    }
+    out
+}
+
+/// The file set one campaign writes.
+pub struct CampaignOutputs {
+    pub runs_csv: PathBuf,
+    pub agg_csv: PathBuf,
+    pub agg_json: PathBuf,
+}
+
+/// Write per-run CSV + aggregate CSV/JSON under the spec's output dir.
+/// The contents are a pure function of the run results — worker count and
+/// wall time never appear — so reruns diff clean (tested in
+/// `tests/test_campaign.rs`).
+pub fn write_outputs(spec: &CampaignSpec, result: &CampaignResult) -> std::io::Result<CampaignOutputs> {
+    let aggs = aggregate(&result.records);
+    let dir = &spec.output_dir;
+    std::fs::create_dir_all(dir)?;
+
+    let runs_csv = dir.join(format!("{}_runs.csv", spec.name));
+    write_csv(&runs_csv, report::CAMPAIGN_RUN_HEADER, &report::campaign_run_rows(&result.records))?;
+
+    let agg_csv = dir.join(format!("{}_agg.csv", spec.name));
+    write_csv(&agg_csv, report::CAMPAIGN_AGG_HEADER, &report::campaign_agg_rows(&aggs))?;
+
+    let agg_json = dir.join(format!("{}_agg.json", spec.name));
+    std::fs::write(&agg_json, report::campaign_agg_json(spec, &aggs).render())?;
+
+    Ok(CampaignOutputs { runs_csv, agg_csv, agg_json })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::{run_campaign, CampaignSpec};
+
+    #[test]
+    fn aggregates_group_by_scenario_in_order() {
+        let spec = CampaignSpec::from_toml_str(
+            r#"
+name = "agg-unit"
+nodes = [32]
+modes = ["fixed", "sync"]
+seeds = [1, 2, 3]
+[[workload]]
+kind = "feitelson"
+jobs = 6
+"#,
+        )
+        .unwrap();
+        let res = run_campaign(&spec, 2).unwrap();
+        let aggs = aggregate(&res.records);
+        assert_eq!(aggs.len(), 2, "one aggregate per scenario");
+        for a in &aggs {
+            assert_eq!(a.runs, 3);
+            assert_eq!(a.jobs, 6);
+            assert_eq!(a.makespan_s.count(), 3);
+            assert!(a.makespan_s.mean() > 0.0);
+            assert!(a.util_pct.mean() > 0.0 && a.util_pct.mean() <= 100.0);
+            // 3 seeds -> a non-degenerate CI unless all runs tie exactly
+            assert!(a.makespan_s.ci95_half() >= 0.0);
+        }
+        assert_ne!(aggs[0].scenario, aggs[1].scenario);
+        // the flexible scenario actually reconfigures
+        let sync = aggs.iter().find(|a| a.scenario.ends_with("-sync")).unwrap();
+        assert!(sync.expands.sum() + sync.shrinks.sum() > 0.0);
+    }
+}

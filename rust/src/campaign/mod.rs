@@ -1,0 +1,27 @@
+//! The campaign engine: parallel scenario sweeps over declarative specs.
+//!
+//! The paper's evaluation (§7) runs a handful of hand-picked workloads
+//! one at a time; real scheduling studies (Zojer et al.'s real-trace
+//! malleability evaluation, Chadha et al.'s scheduler-knob sweeps) need
+//! hundreds of DES runs over many scenarios.  This subsystem provides:
+//!
+//! * [`spec`] — [`CampaignSpec`]: a TOML/JSON file describing a cartesian
+//!   matrix of workload sources (Feitelson / burst–lull / SWF real
+//!   traces), cluster sizes, scheduling modes, policy knobs and seeds;
+//! * [`runner`] — [`run_campaign`]: matrix expansion + a `std::thread`
+//!   worker pool sharding the (single-threaded) DES runs across cores;
+//! * [`aggregate`] — per-scenario statistics across seeds with 95 %
+//!   confidence intervals, emitted as CSV/JSON through
+//!   [`crate::metrics::report`].
+//!
+//! Every run is a pure function of its [`RunPlan`], so campaign outputs
+//! are bit-identical for any worker count.  Entry point:
+//! `repro campaign scenarios/sweep_small.toml [--workers N]`.
+
+pub mod aggregate;
+pub mod runner;
+pub mod spec;
+
+pub use aggregate::{aggregate, write_outputs, CampaignOutputs, ScenarioAgg};
+pub use runner::{run_campaign, CampaignResult, RunRecord};
+pub use spec::{CampaignSpec, PolicyAxis, RunMode, RunPlan, WorkloadSource};

@@ -1,0 +1,266 @@
+//! Campaign execution: expand the spec's matrix and shard the DES runs
+//! across a `std::thread` worker pool.
+//!
+//! Every run is an independent, fully-deterministic function of its
+//! [`RunPlan`] (workload generation, DES cost jitter and policy state are
+//! all seeded from the plan), and results land in an index-addressed slot
+//! table — so the campaign output is bit-identical regardless of worker
+//! count or scheduling order, which `tests/test_campaign.rs` locks in.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::spec::{CampaignSpec, RunPlan, WorkloadSource};
+use crate::des::{DesConfig, Engine};
+use crate::metrics::RunSummary;
+use crate::rms::{PolicyConfig, RmsConfig};
+use crate::workload::{self, swf, BurstLullParams, FeitelsonParams, WorkloadSpec};
+
+/// One finished run.
+pub struct RunRecord {
+    pub plan: RunPlan,
+    /// Jobs in the materialized workload (after `max_jobs` etc.).
+    pub jobs: usize,
+    pub summary: RunSummary,
+}
+
+/// Everything a campaign produced.
+pub struct CampaignResult {
+    /// One record per matrix point, in matrix order.
+    pub records: Vec<RunRecord>,
+    /// Worker threads actually used.
+    pub workers: usize,
+    /// Wall-clock seconds for the whole sweep (not part of the
+    /// deterministic outputs).
+    pub wall_secs: f64,
+}
+
+impl CampaignResult {
+    /// Total DES runs per wall-clock second (runner throughput).
+    pub fn runs_per_sec(&self) -> f64 {
+        self.records.len() as f64 / self.wall_secs.max(1e-9)
+    }
+}
+
+/// Resolve the worker count: CLI override, then spec, then one per core.
+pub fn resolve_workers(spec: &CampaignSpec, override_workers: usize) -> usize {
+    let n = if override_workers > 0 {
+        override_workers
+    } else if spec.workers > 0 {
+        spec.workers
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
+    n.max(1)
+}
+
+/// Run the full campaign matrix on `workers` threads (0 = resolve from
+/// the spec / machine).
+pub fn run_campaign(spec: &CampaignSpec, workers: usize) -> Result<CampaignResult> {
+    let plans = spec.expand();
+    let workers = resolve_workers(spec, workers).min(plans.len().max(1));
+    let traces = preload_traces(spec)?;
+    let t0 = Instant::now();
+
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<RunRecord>>> =
+        Mutex::new((0..plans.len()).map(|_| None).collect());
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let Some(plan) = plans.get(i) else { return };
+                let record = execute_plan(spec, plan, &traces);
+                slots.lock().unwrap()[i] = Some(record);
+            });
+        }
+    });
+
+    let records: Vec<RunRecord> = slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("worker filled every slot"))
+        .collect();
+    Ok(CampaignResult { records, workers, wall_secs: t0.elapsed().as_secs_f64() })
+}
+
+/// Load every SWF trace referenced by the spec once, up front (they are
+/// shared read-only across workers and failures should surface before any
+/// DES time is spent).
+fn preload_traces(spec: &CampaignSpec) -> Result<HashMap<String, swf::SwfTrace>> {
+    let mut traces = HashMap::new();
+    for w in &spec.workloads {
+        if let WorkloadSource::Swf { path, .. } = w {
+            if !traces.contains_key(path) {
+                let trace =
+                    swf::load(path).with_context(|| format!("loading SWF trace {path}"))?;
+                anyhow::ensure!(
+                    !trace.records.is_empty(),
+                    "SWF trace {path} contains no usable records \
+                     ({} malformed, {} skipped)",
+                    trace.stats.malformed,
+                    trace.stats.skipped
+                );
+                traces.insert(path.clone(), trace);
+            }
+        }
+    }
+    Ok(traces)
+}
+
+/// Execute one matrix point (pure function of the plan — see module docs).
+fn execute_plan(
+    spec: &CampaignSpec,
+    plan: &RunPlan,
+    traces: &HashMap<String, swf::SwfTrace>,
+) -> RunRecord {
+    let mut w = materialize(&spec.workloads[plan.workload], plan, traces);
+    fit_to_cluster(&mut w, plan.nodes);
+    let (mode, flexible) = plan.mode.des_mode();
+    if !flexible {
+        w = w.as_fixed();
+    }
+    let cfg = DesConfig {
+        rms: RmsConfig {
+            nodes: plan.nodes,
+            backfill: plan.backfill,
+            policy: PolicyConfig {
+                honor_preference: plan.honor_preference,
+                wide_optimization: plan.wide_optimization,
+            },
+            shrink_priority_boost: plan.shrink_boost,
+            ..Default::default()
+        },
+        mode,
+        seed: plan.seed,
+        ..Default::default()
+    };
+    let jobs = w.len();
+    let result = Engine::new(cfg).run(&w, &plan.label);
+    RunRecord { plan: plan.clone(), jobs, summary: RunSummary::from_run(&result) }
+}
+
+fn materialize(
+    source: &WorkloadSource,
+    plan: &RunPlan,
+    traces: &HashMap<String, swf::SwfTrace>,
+) -> WorkloadSpec {
+    match source {
+        WorkloadSource::Feitelson { jobs, mean_interarrival, work_spread } => {
+            let params = FeitelsonParams {
+                jobs: *jobs,
+                mean_interarrival: *mean_interarrival,
+                work_spread: *work_spread,
+                ..Default::default()
+            };
+            workload::generate_with(&params, plan.seed)
+        }
+        WorkloadSource::BurstLull { jobs, burst, burst_gap, lull } => {
+            let params = BurstLullParams {
+                jobs: *jobs,
+                burst: *burst,
+                burst_gap: *burst_gap,
+                lull: *lull,
+                ..Default::default()
+            };
+            workload::generate_burst_lull(&params, plan.seed)
+        }
+        WorkloadSource::Swf { path, opts } => {
+            let trace = traces.get(path).expect("trace preloaded");
+            swf::to_workload(trace, opts, plan.seed)
+        }
+    }
+}
+
+/// Clamp job sizes to the scenario's cluster: a job asking for more nodes
+/// than exist would never start and the workload would not drain.  Sizes
+/// are re-rounded onto the job's factor chain afterwards.
+fn fit_to_cluster(w: &mut WorkloadSpec, nodes: usize) {
+    for j in &mut w.jobs {
+        if j.max_procs > nodes {
+            j.max_procs = nodes;
+        }
+        if j.min_procs > j.max_procs {
+            j.min_procs = j.max_procs;
+        }
+        if j.procs > j.max_procs {
+            // Round down onto the factor chain of the submitted size while
+            // the chain is still rooted there (e.g. 32 on a 24-node
+            // cluster lands on 16, keeping resizes power-of-factor).
+            j.procs = j.clamp_procs(j.max_procs);
+        }
+        if j.pref_procs.is_some_and(|p| p > j.max_procs) {
+            j.pref_procs = Some(j.max_procs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::CampaignSpec;
+
+    fn tiny_spec() -> CampaignSpec {
+        CampaignSpec::from_toml_str(
+            r#"
+name = "tiny"
+nodes = [32]
+modes = ["fixed", "sync"]
+seeds = [1, 2]
+[[workload]]
+kind = "feitelson"
+jobs = 8
+"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn runs_full_matrix_in_order() {
+        let spec = tiny_spec();
+        let res = run_campaign(&spec, 2).unwrap();
+        assert_eq!(res.records.len(), 4);
+        assert_eq!(res.workers, 2);
+        for (i, r) in res.records.iter().enumerate() {
+            assert_eq!(r.plan.index, i);
+            assert_eq!(r.jobs, 8);
+            assert!(r.summary.makespan > 0.0);
+            assert_eq!(r.summary.jobs.len(), 8);
+        }
+    }
+
+    #[test]
+    fn worker_resolution() {
+        let mut spec = tiny_spec();
+        assert_eq!(resolve_workers(&spec, 3), 3, "CLI override wins");
+        spec.workers = 5;
+        assert_eq!(resolve_workers(&spec, 0), 5, "spec value next");
+        assert_eq!(resolve_workers(&spec, 2), 2);
+        spec.workers = 0;
+        assert!(resolve_workers(&spec, 0) >= 1, "auto is at least 1");
+    }
+
+    #[test]
+    fn fit_to_cluster_clamps_oversized_jobs() {
+        let mut w = workload::generate(6, 3); // CG/Jacobi max 32, N-body 16
+        fit_to_cluster(&mut w, 8);
+        for j in &w.jobs {
+            assert!(j.procs <= 8);
+            assert!(j.max_procs <= 8);
+            assert!(j.min_procs <= j.procs);
+        }
+        // and such a workload actually drains on an 8-node cluster
+        let cfg = DesConfig {
+            rms: RmsConfig { nodes: 8, ..Default::default() },
+            ..Default::default()
+        };
+        let r = Engine::new(cfg).run(&w, "clamped");
+        assert_eq!(r.rms.completed_jobs(), 6);
+    }
+}

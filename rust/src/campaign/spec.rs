@@ -1,0 +1,595 @@
+//! Declarative campaign specifications: a TOML (or JSON) file describing a
+//! cartesian matrix of scenarios — workload sources × cluster sizes ×
+//! scheduling modes × policy knobs × seeds — expanded into the flat run
+//! list the [`super::runner`] shards across worker threads.
+//!
+//! See `scenarios/README.md` for the schema with a worked example; checked
+//! in examples live under `scenarios/`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::dmr::SchedMode;
+use crate::util::json::Json;
+use crate::util::toml;
+use crate::workload::swf::SwfOptions;
+
+/// One workload axis entry (`[[workload]]` in the spec).
+#[derive(Debug, Clone)]
+pub enum WorkloadSource {
+    /// Feitelson statistical model (§7.1), the paper's generator.
+    Feitelson { jobs: usize, mean_interarrival: f64, work_spread: f64 },
+    /// Synthetic bursts of arrivals separated by lulls.
+    BurstLull { jobs: usize, burst: usize, burst_gap: f64, lull: f64 },
+    /// A real trace in Standard Workload Format.
+    Swf { path: String, opts: SwfOptions },
+}
+
+impl WorkloadSource {
+    /// Short scenario-id component (`feitelson40`, `burst40`,
+    /// `swf-small`).
+    pub fn label(&self) -> String {
+        match self {
+            WorkloadSource::Feitelson { jobs, .. } => format!("feitelson{jobs}"),
+            WorkloadSource::BurstLull { jobs, .. } => format!("burst{jobs}"),
+            WorkloadSource::Swf { path, .. } => {
+                let stem = Path::new(path)
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| "trace".into());
+                format!("swf-{stem}")
+            }
+        }
+    }
+}
+
+/// The run mode axis: the paper's rigid baseline plus the two DMR
+/// scheduling modes (§5.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunMode {
+    /// Same stream, every job rigid (`WorkloadSpec::as_fixed`).
+    Fixed,
+    /// Malleable, synchronous `dmr_check_status`.
+    Sync,
+    /// Malleable, asynchronous `dmr_icheck_status`.
+    Async,
+}
+
+impl RunMode {
+    pub fn parse(s: &str) -> Result<RunMode> {
+        match s {
+            "fixed" => Ok(RunMode::Fixed),
+            "sync" => Ok(RunMode::Sync),
+            "async" => Ok(RunMode::Async),
+            other => bail!("unknown mode {other:?} (expected fixed | sync | async)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RunMode::Fixed => "fixed",
+            RunMode::Sync => "sync",
+            RunMode::Async => "async",
+        }
+    }
+
+    /// DES scheduling mode + whether jobs stay malleable.
+    pub fn des_mode(&self) -> (SchedMode, bool) {
+        match self {
+            RunMode::Fixed => (SchedMode::Sync, false),
+            RunMode::Sync => (SchedMode::Sync, true),
+            RunMode::Async => (SchedMode::Async, true),
+        }
+    }
+}
+
+/// Policy-knob axes; each knob is a list so it can be swept (defaults are
+/// the `RmsConfig` defaults, a single-point axis).
+#[derive(Debug, Clone)]
+pub struct PolicyAxis {
+    pub backfill: Vec<bool>,
+    pub shrink_boost: Vec<bool>,
+    pub honor_preference: Vec<bool>,
+    pub wide_optimization: Vec<bool>,
+}
+
+impl Default for PolicyAxis {
+    fn default() -> Self {
+        PolicyAxis {
+            backfill: vec![true],
+            shrink_boost: vec![true],
+            honor_preference: vec![true],
+            wide_optimization: vec![true],
+        }
+    }
+}
+
+impl PolicyAxis {
+    /// Whether any knob is actually swept (affects scenario ids).
+    fn swept(&self) -> bool {
+        self.backfill.len() > 1
+            || self.shrink_boost.len() > 1
+            || self.honor_preference.len() > 1
+            || self.wide_optimization.len() > 1
+    }
+}
+
+/// One fully-resolved point of the matrix.
+#[derive(Debug, Clone)]
+pub struct RunPlan {
+    /// Position in the expanded matrix (stable output ordering).
+    pub index: usize,
+    /// Scenario id: every axis except the seed.
+    pub scenario: String,
+    /// Run label: scenario + seed.
+    pub label: String,
+    /// Index into `CampaignSpec::workloads`.
+    pub workload: usize,
+    pub nodes: usize,
+    pub mode: RunMode,
+    pub seed: u64,
+    pub backfill: bool,
+    pub shrink_boost: bool,
+    pub honor_preference: bool,
+    pub wide_optimization: bool,
+}
+
+/// A parsed campaign specification.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    pub name: String,
+    /// Where per-run and aggregate outputs land.
+    pub output_dir: PathBuf,
+    /// Worker threads (0 = one per available core); `--workers` overrides.
+    pub workers: usize,
+    pub workloads: Vec<WorkloadSource>,
+    pub nodes: Vec<usize>,
+    pub modes: Vec<RunMode>,
+    pub seeds: Vec<u64>,
+    pub policy: PolicyAxis,
+}
+
+impl CampaignSpec {
+    /// Load from a `.toml` or `.json` file.
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<CampaignSpec> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading campaign spec {path:?}"))?;
+        let is_json = path.extension().map(|e| e == "json").unwrap_or(false);
+        let spec = if is_json {
+            Self::from_json_str(&text)
+        } else {
+            Self::from_toml_str(&text)
+        };
+        spec.with_context(|| format!("in campaign spec {path:?}"))
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<CampaignSpec> {
+        let v = toml::parse(text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_value(&v)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<CampaignSpec> {
+        let v = Json::parse(text).map_err(|e| anyhow!("json: {e}"))?;
+        Self::from_value(&v)
+    }
+
+    /// Build from the parsed document (shared by both formats).
+    pub fn from_value(v: &Json) -> Result<CampaignSpec> {
+        let name = v
+            .get("name")
+            .and_then(|n| n.as_str())
+            .context("spec needs a string `name`")?
+            .to_string();
+        let output_dir = v
+            .get("output_dir")
+            .and_then(|n| n.as_str())
+            .map(PathBuf::from)
+            .unwrap_or_else(|| Path::new("results/campaigns").join(&name));
+        let workers = v.get("workers").and_then(|n| n.as_usize()).unwrap_or(0);
+
+        let nodes = usize_list(v.get("nodes"), "nodes")?
+            .unwrap_or_else(|| vec![crate::cluster::DEFAULT_NODES]);
+        if nodes.iter().any(|&n| n == 0) {
+            bail!("`nodes` entries must be positive");
+        }
+
+        let modes = match v.get("modes") {
+            None => vec![RunMode::Fixed, RunMode::Sync],
+            Some(m) => m
+                .as_arr()
+                .context("`modes` must be an array of strings")?
+                .iter()
+                .map(|s| {
+                    RunMode::parse(s.as_str().context("`modes` entries must be strings")?)
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+
+        let seeds = match usize_list(v.get("seeds"), "seeds")? {
+            None => vec![1, 2, 3],
+            Some(s) => s.into_iter().map(|x| x as u64).collect(),
+        };
+
+        let workloads = v
+            .get("workload")
+            .context("spec needs at least one [[workload]]")?
+            .as_arr()
+            .context("`workload` must be an array of tables")?
+            .iter()
+            .map(parse_workload)
+            .collect::<Result<Vec<_>>>()?;
+        if workloads.is_empty() || nodes.is_empty() || modes.is_empty() || seeds.is_empty() {
+            bail!("workload/nodes/modes/seeds axes must be non-empty");
+        }
+
+        let policy = match v.get("policy") {
+            None => PolicyAxis::default(),
+            Some(p) => PolicyAxis {
+                backfill: bool_list(p.get("backfill"), "policy.backfill")?
+                    .unwrap_or_else(|| vec![true]),
+                shrink_boost: bool_list(p.get("shrink_boost"), "policy.shrink_boost")?
+                    .unwrap_or_else(|| vec![true]),
+                honor_preference: bool_list(
+                    p.get("honor_preference"),
+                    "policy.honor_preference",
+                )?
+                .unwrap_or_else(|| vec![true]),
+                wide_optimization: bool_list(
+                    p.get("wide_optimization"),
+                    "policy.wide_optimization",
+                )?
+                .unwrap_or_else(|| vec![true]),
+            },
+        };
+
+        Ok(CampaignSpec { name, output_dir, workers, workloads, nodes, modes, seeds, policy })
+    }
+
+    /// Number of runs the matrix expands to.
+    pub fn matrix_size(&self) -> usize {
+        self.workloads.len()
+            * self.nodes.len()
+            * self.modes.len()
+            * self.seeds.len()
+            * self.policy.backfill.len()
+            * self.policy.shrink_boost.len()
+            * self.policy.honor_preference.len()
+            * self.policy.wide_optimization.len()
+    }
+
+    /// Expand the cartesian matrix into the flat, deterministic run list.
+    /// Order: workload (outer) → nodes → mode → policy knobs → seed
+    /// (inner), so all seeds of one scenario are adjacent.
+    pub fn expand(&self) -> Vec<RunPlan> {
+        let mut plans = Vec::with_capacity(self.matrix_size());
+        let swept = self.policy.swept();
+        // Labels only encode kind + size; two same-kind sources differing
+        // in other params (e.g. two feitelson-30 with different
+        // inter-arrivals) would collide and aggregate() would silently
+        // merge them — disambiguate with the workload's position.
+        let labels: Vec<String> = {
+            let raw: Vec<String> = self.workloads.iter().map(|w| w.label()).collect();
+            raw.iter()
+                .enumerate()
+                .map(|(i, l)| {
+                    if raw.iter().filter(|x| *x == l).count() > 1 {
+                        format!("{l}-w{i}")
+                    } else {
+                        l.clone()
+                    }
+                })
+                .collect()
+        };
+        for wi in 0..self.workloads.len() {
+            for &nodes in &self.nodes {
+                for &mode in &self.modes {
+                    for &backfill in &self.policy.backfill {
+                        for &shrink_boost in &self.policy.shrink_boost {
+                            for &honor_preference in &self.policy.honor_preference {
+                                for &wide_optimization in &self.policy.wide_optimization {
+                                    let mut scenario =
+                                        format!("{}-n{}-{}", labels[wi], nodes, mode.label());
+                                    if swept {
+                                        scenario.push_str(&format!(
+                                            "-bf{}-sb{}-hp{}-wo{}",
+                                            u8::from(backfill),
+                                            u8::from(shrink_boost),
+                                            u8::from(honor_preference),
+                                            u8::from(wide_optimization),
+                                        ));
+                                    }
+                                    for &seed in &self.seeds {
+                                        plans.push(RunPlan {
+                                            index: plans.len(),
+                                            scenario: scenario.clone(),
+                                            label: format!("{scenario}-s{seed}"),
+                                            workload: wi,
+                                            nodes,
+                                            mode,
+                                            seed,
+                                            backfill,
+                                            shrink_boost,
+                                            honor_preference,
+                                            wide_optimization,
+                                        });
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        plans
+    }
+}
+
+fn parse_workload(w: &Json) -> Result<WorkloadSource> {
+    let kind = w
+        .get("kind")
+        .and_then(|k| k.as_str())
+        .context("[[workload]] needs a string `kind`")?;
+    let jobs = w.get("jobs").and_then(|j| j.as_usize());
+    let f64_or = |key: &str, d: f64| w.get(key).and_then(|x| x.as_f64()).unwrap_or(d);
+    match kind {
+        "feitelson" => Ok(WorkloadSource::Feitelson {
+            jobs: jobs.context("feitelson workload needs `jobs`")?,
+            mean_interarrival: f64_or("mean_interarrival", 10.0),
+            work_spread: f64_or("work_spread", 0.25),
+        }),
+        "burst_lull" => Ok(WorkloadSource::BurstLull {
+            jobs: jobs.context("burst_lull workload needs `jobs`")?,
+            burst: w.get("burst").and_then(|x| x.as_usize()).unwrap_or(8),
+            burst_gap: f64_or("burst_gap", 2.0),
+            lull: f64_or("lull", 300.0),
+        }),
+        "swf" => {
+            let path = w
+                .get("path")
+                .and_then(|p| p.as_str())
+                .context("swf workload needs a `path`")?
+                .to_string();
+            let d = SwfOptions::default();
+            let opts = SwfOptions {
+                max_jobs: w.get("max_jobs").and_then(|x| x.as_usize()),
+                rescale_nodes: w.get("rescale_nodes").and_then(|x| x.as_usize()),
+                malleable_fraction: f64_or("malleable_fraction", d.malleable_fraction),
+                shrink_levels: w
+                    .get("shrink_levels")
+                    .and_then(|x| x.as_usize())
+                    .map(|x| x as u32)
+                    .unwrap_or(d.shrink_levels),
+                factor: w.get("factor").and_then(|x| x.as_usize()).unwrap_or(d.factor),
+                time_scale: f64_or("time_scale", d.time_scale),
+                iterations: w
+                    .get("iterations")
+                    .and_then(|x| x.as_usize())
+                    .map(|x| x as u32)
+                    .unwrap_or(d.iterations),
+            };
+            if !(0.0..=1.0).contains(&opts.malleable_fraction) {
+                bail!("malleable_fraction must be in [0, 1]");
+            }
+            Ok(WorkloadSource::Swf { path, opts })
+        }
+        other => bail!("unknown workload kind {other:?} (feitelson | burst_lull | swf)"),
+    }
+}
+
+fn usize_list(v: Option<&Json>, what: &str) -> Result<Option<Vec<usize>>> {
+    match v {
+        None => Ok(None),
+        Some(j) => Ok(Some(
+            j.as_arr()
+                .with_context(|| format!("`{what}` must be an array of integers"))?
+                .iter()
+                .map(|x| {
+                    // `as_usize` is a saturating cast: 3.2 would silently
+                    // become 3 and -1 would become 0, so validate first.
+                    let f = x
+                        .as_f64()
+                        .with_context(|| format!("`{what}` entries must be integers"))?;
+                    if f.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&f) {
+                        bail!("`{what}` entry {f} is not a non-negative integer");
+                    }
+                    Ok(f as usize)
+                })
+                .collect::<Result<Vec<_>>>()?,
+        )),
+    }
+}
+
+fn bool_list(v: Option<&Json>, what: &str) -> Result<Option<Vec<bool>>> {
+    match v {
+        None => Ok(None),
+        Some(j) => Ok(Some(
+            j.as_arr()
+                .with_context(|| format!("`{what}` must be an array of booleans"))?
+                .iter()
+                .map(|x| match x {
+                    Json::Bool(b) => Ok(*b),
+                    _ => Err(anyhow!("`{what}` entries must be booleans")),
+                })
+                .collect::<Result<Vec<_>>>()?,
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TOML_SPEC: &str = r#"
+name = "unit"
+workers = 2
+nodes = [32, 64]
+modes = ["fixed", "sync", "async"]
+seeds = [1, 2]
+
+[[workload]]
+kind = "feitelson"
+jobs = 10
+
+[[workload]]
+kind = "burst_lull"
+jobs = 12
+burst = 4
+lull = 100.0
+
+[[workload]]
+kind = "swf"
+path = "scenarios/traces/small.swf"
+max_jobs = 8
+rescale_nodes = 64
+malleable_fraction = 0.5
+"#;
+
+    #[test]
+    fn parses_toml_and_expands() {
+        let s = CampaignSpec::from_toml_str(TOML_SPEC).unwrap();
+        assert_eq!(s.name, "unit");
+        assert_eq!(s.workers, 2);
+        assert_eq!(s.nodes, vec![32, 64]);
+        assert_eq!(s.modes, vec![RunMode::Fixed, RunMode::Sync, RunMode::Async]);
+        assert_eq!(s.seeds, vec![1, 2]);
+        assert_eq!(s.workloads.len(), 3);
+        assert!(matches!(s.workloads[0], WorkloadSource::Feitelson { jobs: 10, .. }));
+        assert!(matches!(
+            s.workloads[1],
+            WorkloadSource::BurstLull { jobs: 12, burst: 4, .. }
+        ));
+        let WorkloadSource::Swf { ref path, ref opts } = s.workloads[2] else {
+            panic!("expected swf source");
+        };
+        assert_eq!(path, "scenarios/traces/small.swf");
+        assert_eq!(opts.max_jobs, Some(8));
+        assert_eq!(opts.rescale_nodes, Some(64));
+        assert_eq!(opts.malleable_fraction, 0.5);
+
+        assert_eq!(s.matrix_size(), 3 * 2 * 3 * 2);
+        let plans = s.expand();
+        assert_eq!(plans.len(), 36);
+        // indices are positional, seeds adjacent within a scenario
+        for (i, p) in plans.iter().enumerate() {
+            assert_eq!(p.index, i);
+        }
+        assert_eq!(plans[0].scenario, plans[1].scenario);
+        assert_eq!(plans[0].seed, 1);
+        assert_eq!(plans[1].seed, 2);
+        assert_ne!(plans[1].scenario, plans[2].scenario);
+        // scenario count = matrix / seeds
+        let mut ids: Vec<&str> = plans.iter().map(|p| p.scenario.as_str()).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 18);
+        assert_eq!(plans[0].scenario, "feitelson10-n32-fixed");
+        assert_eq!(plans[0].label, "feitelson10-n32-fixed-s1");
+    }
+
+    #[test]
+    fn json_spec_equivalent() {
+        let json = r#"{
+            "name": "unit-json",
+            "nodes": [16],
+            "modes": ["sync"],
+            "seeds": [7],
+            "workload": [{"kind": "feitelson", "jobs": 5}]
+        }"#;
+        let s = CampaignSpec::from_json_str(json).unwrap();
+        assert_eq!(s.name, "unit-json");
+        assert_eq!(s.matrix_size(), 1);
+        let p = &s.expand()[0];
+        assert_eq!(p.nodes, 16);
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.mode, RunMode::Sync);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let s = CampaignSpec::from_toml_str(
+            "name = \"d\"\n[[workload]]\nkind = \"feitelson\"\njobs = 4\n",
+        )
+        .unwrap();
+        assert_eq!(s.nodes, vec![crate::cluster::DEFAULT_NODES]);
+        assert_eq!(s.modes, vec![RunMode::Fixed, RunMode::Sync]);
+        assert_eq!(s.seeds, vec![1, 2, 3]);
+        assert_eq!(s.workers, 0);
+        assert_eq!(s.output_dir, Path::new("results/campaigns/d"));
+        assert_eq!(s.policy.backfill, vec![true]);
+    }
+
+    #[test]
+    fn policy_sweep_expands_and_labels() {
+        let toml = r#"
+name = "pol"
+nodes = [32]
+modes = ["sync"]
+seeds = [1]
+[policy]
+backfill = [true, false]
+[[workload]]
+kind = "feitelson"
+jobs = 4
+"#;
+        let s = CampaignSpec::from_toml_str(toml).unwrap();
+        assert_eq!(s.matrix_size(), 2);
+        let plans = s.expand();
+        assert!(plans[0].scenario.contains("-bf1-"));
+        assert!(plans[1].scenario.contains("-bf0-"));
+    }
+
+    #[test]
+    fn duplicate_workload_labels_disambiguated() {
+        let toml = r#"
+name = "dup"
+nodes = [32]
+modes = ["sync"]
+seeds = [1]
+[[workload]]
+kind = "feitelson"
+jobs = 10
+mean_interarrival = 10.0
+[[workload]]
+kind = "feitelson"
+jobs = 10
+mean_interarrival = 60.0
+"#;
+        let s = CampaignSpec::from_toml_str(toml).unwrap();
+        let plans = s.expand();
+        assert_eq!(plans.len(), 2);
+        assert_ne!(plans[0].scenario, plans[1].scenario, "same-label sources must not collide");
+        assert_eq!(plans[0].scenario, "feitelson10-w0-n32-sync");
+        assert_eq!(plans[1].scenario, "feitelson10-w1-n32-sync");
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(CampaignSpec::from_toml_str("nodes = [1]\n").is_err(), "missing name");
+        assert!(
+            CampaignSpec::from_toml_str("name = \"x\"\n").is_err(),
+            "missing workloads"
+        );
+        assert!(CampaignSpec::from_toml_str(
+            "name = \"x\"\nmodes = [\"warp\"]\n[[workload]]\nkind = \"feitelson\"\njobs = 1\n"
+        )
+        .is_err());
+        assert!(CampaignSpec::from_toml_str(
+            "name = \"x\"\n[[workload]]\nkind = \"swf\"\npath = \"t\"\nmalleable_fraction = 1.5\n"
+        )
+        .is_err());
+        assert!(CampaignSpec::from_toml_str(
+            "name = \"x\"\nnodes = [0]\n[[workload]]\nkind = \"feitelson\"\njobs = 1\n"
+        )
+        .is_err());
+        // non-integer / negative axis entries must error, not truncate
+        assert!(CampaignSpec::from_toml_str(
+            "name = \"x\"\nnodes = [3.2]\n[[workload]]\nkind = \"feitelson\"\njobs = 1\n"
+        )
+        .is_err());
+        assert!(CampaignSpec::from_toml_str(
+            "name = \"x\"\nseeds = [-1]\n[[workload]]\nkind = \"feitelson\"\njobs = 1\n"
+        )
+        .is_err());
+    }
+}

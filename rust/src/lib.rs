@@ -10,7 +10,9 @@
 //! whole stack in Rust over a simulated cluster substrate:
 //!
 //! * [`cluster`] — the machine: nodes and the allocation map.
-//! * [`workload`] — Feitelson-model workload generation (§7.1).
+//! * [`workload`] — workload sources: Feitelson-model generation (§7.1),
+//!   synthetic burst–lull arrivals, and real traces in Standard Workload
+//!   Format ([`workload::swf`]).
 //! * [`rms`] — the Slurm-like workload manager: multifactor priorities,
 //!   EASY backfill, and the paper's three-mode reconfiguration policy (§4)
 //!   with the expand-via-resizer-job / shrink-with-ACK protocols (§5.2).
@@ -30,11 +32,27 @@
 //!   redistribution, real PJRT compute.
 //! * [`metrics`] — recorders and report emitters for every table and
 //!   figure of §7.
+//! * [`campaign`] — the campaign engine (below).
+//!
+//! ## Campaign engine
+//!
+//! The paper evaluates a handful of hand-picked workloads one at a time;
+//! the [`campaign`] subsystem scales that to parallel scenario sweeps: a
+//! declarative TOML/JSON [`campaign::CampaignSpec`] describes a cartesian
+//! matrix over workload sources (Feitelson, burst–lull, SWF real traces),
+//! cluster sizes, scheduling modes (fixed/sync/async), policy knobs and
+//! seeds; [`campaign::run_campaign`] shards the expanded DES runs across
+//! a worker-thread pool; [`campaign::aggregate`] folds the results into
+//! per-scenario statistics with 95 % confidence intervals, written as
+//! CSV/JSON under `results/`.  Outputs are bit-identical for any worker
+//! count.  See `scenarios/README.md` for the spec schema, and run e.g.
+//! `repro campaign scenarios/sweep_small.toml --workers 8`.
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
 pub mod apps;
+pub mod campaign;
 pub mod cluster;
 pub mod des;
 pub mod dmr;

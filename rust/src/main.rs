@@ -9,6 +9,7 @@
 //!   perjob      Fig 7 + Fig 8 (per-job times by application)
 //!   overhead    Fig 3 (live scheduling + resize times)
 //!   live        small live workload with real PJRT compute
+//!   campaign    parallel scenario sweep from a declarative spec file
 //!   all         everything DES-based
 fn main() {
     if let Err(e) = dmr_main::run() {
@@ -38,6 +39,7 @@ mod dmr_main {
             Some("overhead") => overhead(&args),
             Some("live") => live(&args),
             Some("calibrate") => calibrate(&args),
+            Some("campaign") => campaign(&args),
             Some("all") => {
                 throughput(&args)?;
                 table2(&args)?;
@@ -64,6 +66,8 @@ USAGE: repro <SUBCOMMAND> [--jobs N] [--seed S] [--nodes N] [--sizes 50,100,200,
   overhead     Fig 3: live scheduling + resize overheads (--mb payload)
   live         run a small live workload with real PJRT compute
   calibrate    measure real per-iteration PJRT times per (app, procs)
+  campaign     run a scenario sweep: repro campaign <spec.toml> [--workers N]
+               (spec schema: scenarios/README.md; examples under scenarios/)
   all          every DES-based artifact
 
 Results are also written as CSV under results/.";
@@ -230,6 +234,54 @@ Results are also written as CSV under results/.";
         }
         println!("{}", t.render());
         write_csv("results/fig3_overhead.csv", &["from", "to", "sched_s", "resize_s"], &rows)?;
+        Ok(())
+    }
+
+    /// Run a campaign: expand the spec's scenario matrix, shard the DES
+    /// runs across worker threads, aggregate across seeds and write
+    /// per-run + aggregate CSV/JSON under the spec's output dir.
+    fn campaign(args: &Args) -> Result<()> {
+        use anyhow::Context as _;
+        use dmr::campaign::{self, CampaignSpec};
+        use dmr::metrics::report;
+
+        let path = args
+            .positional
+            .first()
+            .context("usage: repro campaign <spec.toml|spec.json> [--workers N]")?;
+        let spec = CampaignSpec::from_file(path)?;
+        let workers = args.get_parse("workers", 0usize);
+        eprintln!(
+            "[campaign] {}: {} runs ({} workloads x {} nodes x {} modes x {} seeds{}), {} workers ...",
+            spec.name,
+            spec.matrix_size(),
+            spec.workloads.len(),
+            spec.nodes.len(),
+            spec.modes.len(),
+            spec.seeds.len(),
+            if spec.matrix_size()
+                == spec.workloads.len() * spec.nodes.len() * spec.modes.len() * spec.seeds.len()
+            {
+                String::new()
+            } else {
+                " x policy knobs".to_string()
+            },
+            campaign::runner::resolve_workers(&spec, workers),
+        );
+        let result = campaign::run_campaign(&spec, workers)?;
+        let aggs = campaign::aggregate(&result.records);
+        println!("{}", report::campaign_table(&spec.name, &aggs).render());
+        let out = campaign::write_outputs(&spec, &result)?;
+        eprintln!(
+            "[campaign] {} runs in {:.2}s on {} workers ({:.1} runs/s)",
+            result.records.len(),
+            result.wall_secs,
+            result.workers,
+            result.runs_per_sec()
+        );
+        eprintln!("[campaign] wrote {}", out.runs_csv.display());
+        eprintln!("[campaign] wrote {}", out.agg_csv.display());
+        eprintln!("[campaign] wrote {}", out.agg_json.display());
         Ok(())
     }
 

@@ -240,6 +240,147 @@ pub fn throughput_rows(rows: &[(usize, RunSummary, RunSummary)]) -> Vec<Vec<Stri
     out
 }
 
+// ------------------------------------------------------------------
+// Campaign emitters (see `crate::campaign`): per-run rows, per-scenario
+// aggregate rows with 95 % CIs, a console table and a JSON document.
+// Kept here so every CSV/JSON artifact the crate produces flows through
+// one module.
+
+/// Header of `<name>_runs.csv`.
+pub const CAMPAIGN_RUN_HEADER: &[&str] = &[
+    "run", "scenario", "label", "nodes", "mode", "seed", "jobs", "makespan_s", "util_pct",
+    "wait_mean_s", "exec_mean_s", "completion_mean_s", "node_seconds", "expands", "shrinks",
+    "expand_aborts",
+];
+
+/// Header of `<name>_agg.csv`.
+pub const CAMPAIGN_AGG_HEADER: &[&str] = &[
+    "scenario", "runs", "jobs", "makespan_mean_s", "makespan_ci95_s", "util_mean_pct",
+    "util_ci95_pct", "wait_mean_s", "wait_ci95_s", "exec_mean_s", "exec_ci95_s",
+    "completion_mean_s", "completion_ci95_s", "node_seconds_mean", "expands_mean",
+    "shrinks_mean", "expand_aborts_mean",
+];
+
+/// One CSV row per campaign run, in matrix order.
+pub fn campaign_run_rows(records: &[crate::campaign::RunRecord]) -> Vec<Vec<String>> {
+    records
+        .iter()
+        .map(|r| {
+            let s = &r.summary;
+            vec![
+                r.plan.index.to_string(),
+                r.plan.scenario.clone(),
+                r.plan.label.clone(),
+                r.plan.nodes.to_string(),
+                r.plan.mode.label().to_string(),
+                r.plan.seed.to_string(),
+                r.jobs.to_string(),
+                fmt(s.makespan, 3),
+                fmt(s.util_mean * 100.0, 2),
+                fmt(s.wait.mean(), 3),
+                fmt(s.exec.mean(), 3),
+                fmt(s.completion.mean(), 3),
+                fmt(s.node_seconds(), 1),
+                s.actions.expand.count().to_string(),
+                s.actions.shrink.count().to_string(),
+                s.actions.expand_aborts.to_string(),
+            ]
+        })
+        .collect()
+}
+
+/// One CSV row per scenario aggregate.
+pub fn campaign_agg_rows(aggs: &[crate::campaign::ScenarioAgg]) -> Vec<Vec<String>> {
+    aggs.iter()
+        .map(|a| {
+            vec![
+                a.scenario.clone(),
+                a.runs.to_string(),
+                a.jobs.to_string(),
+                fmt(a.makespan_s.mean(), 3),
+                fmt(a.makespan_s.ci95_half(), 3),
+                fmt(a.util_pct.mean(), 2),
+                fmt(a.util_pct.ci95_half(), 2),
+                fmt(a.wait_s.mean(), 3),
+                fmt(a.wait_s.ci95_half(), 3),
+                fmt(a.exec_s.mean(), 3),
+                fmt(a.exec_s.ci95_half(), 3),
+                fmt(a.completion_s.mean(), 3),
+                fmt(a.completion_s.ci95_half(), 3),
+                fmt(a.node_seconds.mean(), 1),
+                fmt(a.expands.mean(), 2),
+                fmt(a.shrinks.mean(), 2),
+                fmt(a.expand_aborts.mean(), 2),
+            ]
+        })
+        .collect()
+}
+
+/// Console preview of the aggregates (`mean ± ci95` columns).
+pub fn campaign_table(name: &str, aggs: &[crate::campaign::ScenarioAgg]) -> Table {
+    let mut t = Table::new(vec![
+        "Scenario", "Runs", "Makespan (s)", "Util (%)", "Wait (s)", "Completion (s)",
+        "Expands", "Shrinks",
+    ])
+    .with_title(&format!("Campaign {name}: per-scenario aggregates (mean ± 95% CI)"));
+    let pm = |s: &Summary, prec: usize| format!("{} ± {}", fmt(s.mean(), prec), fmt(s.ci95_half(), prec));
+    for a in aggs {
+        t.row(vec![
+            a.scenario.clone(),
+            a.runs.to_string(),
+            pm(&a.makespan_s, 1),
+            pm(&a.util_pct, 1),
+            pm(&a.wait_s, 1),
+            pm(&a.completion_s, 1),
+            fmt(a.expands.mean(), 1),
+            fmt(a.shrinks.mean(), 1),
+        ]);
+    }
+    t
+}
+
+/// The aggregate document for `<name>_agg.json`.
+pub fn campaign_agg_json(
+    spec: &crate::campaign::CampaignSpec,
+    aggs: &[crate::campaign::ScenarioAgg],
+) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    let stat = |s: &Summary| {
+        let mut m = BTreeMap::new();
+        m.insert("mean".into(), Json::Num(s.mean()));
+        m.insert("std".into(), Json::Num(s.sample_std()));
+        m.insert("ci95".into(), Json::Num(s.ci95_half()));
+        m.insert("min".into(), Json::Num(s.min()));
+        m.insert("max".into(), Json::Num(s.max()));
+        Json::Obj(m)
+    };
+    let scenarios: Vec<Json> = aggs
+        .iter()
+        .map(|a| {
+            let mut m = BTreeMap::new();
+            m.insert("scenario".into(), Json::Str(a.scenario.clone()));
+            m.insert("runs".into(), Json::Num(a.runs as f64));
+            m.insert("jobs".into(), Json::Num(a.jobs as f64));
+            m.insert("makespan_s".into(), stat(&a.makespan_s));
+            m.insert("util_pct".into(), stat(&a.util_pct));
+            m.insert("wait_s".into(), stat(&a.wait_s));
+            m.insert("exec_s".into(), stat(&a.exec_s));
+            m.insert("completion_s".into(), stat(&a.completion_s));
+            m.insert("node_seconds".into(), stat(&a.node_seconds));
+            m.insert("expands".into(), stat(&a.expands));
+            m.insert("shrinks".into(), stat(&a.shrinks));
+            m.insert("expand_aborts".into(), stat(&a.expand_aborts));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("campaign".into(), Json::Str(spec.name.clone()));
+    root.insert("matrix_size".into(), Json::Num(spec.matrix_size() as f64));
+    root.insert("scenarios".into(), Json::Arr(scenarios));
+    Json::Obj(root)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -279,5 +420,35 @@ mod tests {
         assert!(t2.contains("Expand"));
         let tr = throughput_rows(&rows);
         assert_eq!(tr.len(), 2);
+    }
+
+    #[test]
+    fn campaign_reports_render() {
+        let spec = crate::campaign::CampaignSpec::from_toml_str(
+            r#"
+name = "report-unit"
+nodes = [32]
+modes = ["fixed", "sync"]
+seeds = [1, 2]
+[[workload]]
+kind = "feitelson"
+jobs = 5
+"#,
+        )
+        .unwrap();
+        let res = crate::campaign::run_campaign(&spec, 1).unwrap();
+        let rows = campaign_run_rows(&res.records);
+        assert_eq!(rows.len(), 4);
+        assert!(rows.iter().all(|r| r.len() == CAMPAIGN_RUN_HEADER.len()));
+        let aggs = crate::campaign::aggregate(&res.records);
+        let arow = campaign_agg_rows(&aggs);
+        assert_eq!(arow.len(), 2);
+        assert!(arow.iter().all(|r| r.len() == CAMPAIGN_AGG_HEADER.len()));
+        let table = campaign_table("report-unit", &aggs).render();
+        assert!(table.contains("±") && table.contains("Scenario"));
+        let json = campaign_agg_json(&spec, &aggs).render();
+        let parsed = crate::util::json::Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("campaign").unwrap().as_str(), Some("report-unit"));
+        assert_eq!(parsed.get("scenarios").unwrap().as_arr().unwrap().len(), 2);
     }
 }

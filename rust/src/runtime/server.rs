@@ -11,9 +11,17 @@
 //! Executables are compiled lazily on first use and cached for the process
 //! lifetime (one compiled executable per model variant, as the
 //! architecture requires).
+//!
+//! The `xla` crate is an external (network) dependency, so everything that
+//! touches it is gated behind the `pjrt` cargo feature.  Without the
+//! feature the server thread reports PJRT as unavailable at startup;
+//! `ComputeServer::start` then fails cleanly and the live/artifact
+//! integration tests skip (the DES and campaign stacks never need it).
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::sync::mpsc;
+#[cfg(feature = "pjrt")]
 use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
@@ -21,6 +29,9 @@ use anyhow::{anyhow, Context, Result};
 use super::artifact::ArtifactStore;
 use super::tensor::TensorF32;
 
+// Without the pjrt feature the fallback loop never reads requests, so the
+// variant fields are write-only there.
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 enum Request {
     Execute {
         artifact: String,
@@ -124,11 +135,27 @@ impl Drop for ComputeServer {
     }
 }
 
+#[cfg(feature = "pjrt")]
 struct Compiled {
     exe: xla::PjRtLoadedExecutable,
     stat: ExecStat,
 }
 
+/// Fallback server loop for builds without the `pjrt` feature: refuse to
+/// start so callers fail fast with an actionable message.
+#[cfg(not(feature = "pjrt"))]
+fn server_loop(
+    _store: ArtifactStore,
+    _rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let _ = ready.send(Err(anyhow!(
+        "PJRT backend unavailable: built without the `pjrt` cargo feature \
+         (see Cargo.toml; the DES/campaign paths do not need it)"
+    )));
+}
+
+#[cfg(feature = "pjrt")]
 fn server_loop(store: ArtifactStore, rx: mpsc::Receiver<Request>, ready: mpsc::Sender<Result<()>>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => {
@@ -161,6 +188,7 @@ fn server_loop(store: ArtifactStore, rx: mpsc::Receiver<Request>, ready: mpsc::S
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn compile_one<'a>(
     client: &xla::PjRtClient,
     store: &ArtifactStore,
@@ -193,6 +221,7 @@ fn compile_one<'a>(
     Ok(cache.get_mut(artifact).unwrap())
 }
 
+#[cfg(feature = "pjrt")]
 fn execute_one(
     client: &xla::PjRtClient,
     store: &ArtifactStore,

@@ -9,6 +9,7 @@ pub mod plot;
 pub mod rng;
 pub mod stats;
 pub mod table;
+pub mod toml;
 
 /// Format seconds compactly: `"431.2s"` / `"1h12m"` style used in reports.
 pub fn fmt_secs(s: f64) -> String {

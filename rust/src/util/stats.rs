@@ -78,6 +78,26 @@ impl Summary {
     pub fn sum(&self) -> f64 {
         self.mean() * self.n as f64
     }
+
+    /// Sample standard deviation (Bessel's correction); 0 for n < 2.
+    pub fn sample_std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    /// Half-width of the normal-approximation 95 % confidence interval of
+    /// the mean (the campaign aggregates quote `mean ± ci95`); 0 for
+    /// n < 2.
+    pub fn ci95_half(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            1.96 * self.sample_std() / (self.n as f64).sqrt()
+        }
+    }
 }
 
 /// Percentage gain of `new` over `base` (positive = improvement when lower
@@ -143,6 +163,19 @@ mod tests {
         assert_eq!(s.count(), 0);
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.std(), 0.0);
+    }
+
+    #[test]
+    fn ci95_and_sample_std() {
+        let s = Summary::from_iter([1.0, 2.0, 3.0, 4.0]);
+        // sample variance = 5/3
+        assert!((s.sample_std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        let want = 1.96 * (5.0f64 / 3.0).sqrt() / 2.0;
+        assert!((s.ci95_half() - want).abs() < 1e-12);
+        // degenerate cases
+        assert_eq!(Summary::new().ci95_half(), 0.0);
+        assert_eq!(Summary::from_iter([5.0]).ci95_half(), 0.0);
+        assert_eq!(Summary::from_iter([5.0]).sample_std(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,477 @@
+//! Minimal TOML parser (offline build: no `toml` crate), covering the
+//! subset the campaign specs use and parsing into [`Json`] so both spec
+//! formats share one accessor API:
+//!
+//! * `key = value` pairs with bare (`[A-Za-z0-9_-]`, optionally dotted) or
+//!   quoted keys;
+//! * `[table]` and `[[array-of-tables]]` headers (dotted paths allowed);
+//! * basic `"..."` strings (with `\n \t \r \" \\ \u{XXXX}`-less JSON-style
+//!   escapes), literal `'...'` strings;
+//! * integers, floats, booleans;
+//! * homogeneous arrays, which may span lines and carry trailing commas;
+//! * `#` comments.
+//!
+//! Datetimes, inline tables and multi-line strings are rejected with an
+//! error rather than mis-parsed.
+
+use std::collections::BTreeMap;
+
+use super::json::Json;
+
+/// Parse a TOML document into a [`Json::Obj`] tree.
+pub fn parse(text: &str) -> Result<Json, String> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    // Path of the table currently receiving keys; each segment may index
+    // into an array-of-tables.
+    let mut current: Vec<(String, Option<usize>)> = Vec::new();
+
+    let mut p = Cursor { b: text.as_bytes(), i: 0, line: 1 };
+    loop {
+        p.skip_trivia();
+        if p.at_end() {
+            break;
+        }
+        if p.peek() == Some(b'[') {
+            let many = p.starts_with("[[");
+            p.advance(if many { 2 } else { 1 });
+            let path = p.key_path()?;
+            p.skip_inline_ws();
+            let closer = if many { "]]" } else { "]" };
+            if !p.starts_with(closer) {
+                return Err(p.err(&format!("expected '{closer}' closing table header")));
+            }
+            p.advance(closer.len());
+            p.expect_line_end()?;
+            current = enter_table(&mut root, &path, many).map_err(|e| p.err(&e))?;
+        } else {
+            let path = p.key_path()?;
+            p.skip_inline_ws();
+            if p.peek() != Some(b'=') {
+                return Err(p.err("expected '=' after key"));
+            }
+            p.advance(1);
+            p.skip_inline_ws();
+            let value = p.value()?;
+            p.expect_line_end()?;
+            let table = descend_mut(&mut root, &current)
+                .ok_or_else(|| p.err("internal: lost current table"))?;
+            insert_value(table, &path, value).map_err(|e| p.err(&e))?;
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+/// Create (or re-enter) the table at `path`; for `[[path]]` append a fresh
+/// element to the array of tables.  Returns the indexed path to it.
+fn enter_table(
+    root: &mut BTreeMap<String, Json>,
+    path: &[String],
+    array_of_tables: bool,
+) -> Result<Vec<(String, Option<usize>)>, String> {
+    let mut indexed: Vec<(String, Option<usize>)> = Vec::new();
+    let (last, prefix) = path.split_last().ok_or("empty table name")?;
+    for seg in prefix {
+        indexed.push((seg.clone(), None));
+    }
+    {
+        // Materialize intermediate tables.
+        let mut map = root;
+        for (seg, _) in &indexed {
+            let entry = map
+                .entry(seg.clone())
+                .or_insert_with(|| Json::Obj(BTreeMap::new()));
+            map = match entry {
+                Json::Obj(m) => m,
+                Json::Arr(v) => match v.last_mut() {
+                    Some(Json::Obj(m)) => m,
+                    _ => return Err(format!("'{seg}' is not a table")),
+                },
+                _ => return Err(format!("'{seg}' is not a table")),
+            };
+        }
+        if array_of_tables {
+            let entry = map
+                .entry(last.clone())
+                .or_insert_with(|| Json::Arr(Vec::new()));
+            match entry {
+                Json::Arr(v) => {
+                    v.push(Json::Obj(BTreeMap::new()));
+                    indexed.push((last.clone(), Some(v.len() - 1)));
+                }
+                _ => return Err(format!("'{last}' already defined as a non-array")),
+            }
+        } else {
+            let entry = map
+                .entry(last.clone())
+                .or_insert_with(|| Json::Obj(BTreeMap::new()));
+            match entry {
+                Json::Obj(_) => indexed.push((last.clone(), None)),
+                _ => return Err(format!("'{last}' already defined as a non-table")),
+            }
+        }
+    }
+    Ok(indexed)
+}
+
+/// Follow an indexed path to the map it denotes.
+fn descend_mut<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[(String, Option<usize>)],
+) -> Option<&'a mut BTreeMap<String, Json>> {
+    let mut map = root;
+    for (seg, idx) in path {
+        let entry = map.get_mut(seg)?;
+        map = match (entry, idx) {
+            (Json::Obj(m), None) => m,
+            (Json::Arr(v), Some(i)) => match v.get_mut(*i)? {
+                Json::Obj(m) => m,
+                _ => return None,
+            },
+            // Re-entering `[a.b]` after `[[a]]`: keys belong to the last
+            // element of the array.
+            (Json::Arr(v), None) => match v.last_mut()? {
+                Json::Obj(m) => m,
+                _ => return None,
+            },
+            _ => return None,
+        };
+    }
+    Some(map)
+}
+
+/// Insert `value` at a (possibly dotted) key path below `table`.
+fn insert_value(
+    table: &mut BTreeMap<String, Json>,
+    path: &[String],
+    value: Json,
+) -> Result<(), String> {
+    let (last, prefix) = path.split_last().ok_or("empty key")?;
+    let mut map = table;
+    for seg in prefix {
+        let entry = map
+            .entry(seg.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        map = match entry {
+            Json::Obj(m) => m,
+            _ => return Err(format!("'{seg}' is not a table")),
+        };
+    }
+    if map.insert(last.clone(), value).is_some() {
+        return Err(format!("duplicate key '{last}'"));
+    }
+    Ok(())
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn at_end(&self) -> bool {
+        self.i >= self.b.len()
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn advance(&mut self, n: usize) {
+        for _ in 0..n {
+            if self.peek() == Some(b'\n') {
+                self.line += 1;
+            }
+            self.i += 1;
+        }
+    }
+
+    fn starts_with(&self, s: &str) -> bool {
+        self.b[self.i..].starts_with(s.as_bytes())
+    }
+
+    fn err(&self, msg: &str) -> String {
+        format!("toml line {}: {msg}", self.line)
+    }
+
+    /// Skip spaces and tabs (not newlines).
+    fn skip_inline_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ') | Some(b'\t')) {
+            self.i += 1;
+        }
+    }
+
+    /// Skip whitespace, newlines and comments.
+    fn skip_trivia(&mut self) {
+        loop {
+            match self.peek() {
+                Some(b' ') | Some(b'\t') | Some(b'\r') => self.i += 1,
+                Some(b'\n') => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                Some(b'#') => {
+                    while !matches!(self.peek(), None | Some(b'\n')) {
+                        self.i += 1;
+                    }
+                }
+                _ => return,
+            }
+        }
+    }
+
+    /// After a value or header: only trivia may remain on the line.
+    fn expect_line_end(&mut self) -> Result<(), String> {
+        self.skip_inline_ws();
+        match self.peek() {
+            None | Some(b'\n') | Some(b'#') | Some(b'\r') => {
+                self.skip_trivia();
+                Ok(())
+            }
+            Some(c) => Err(self.err(&format!("unexpected '{}' after value", c as char))),
+        }
+    }
+
+    /// A dotted key path: `a`, `a.b`, `"quoted key"`.
+    fn key_path(&mut self) -> Result<Vec<String>, String> {
+        let mut parts = Vec::new();
+        loop {
+            self.skip_inline_ws();
+            let part = match self.peek() {
+                Some(b'"') => self.basic_string()?,
+                Some(b'\'') => self.literal_string()?,
+                _ => {
+                    let start = self.i;
+                    while let Some(c) = self.peek() {
+                        if c.is_ascii_alphanumeric() || c == b'_' || c == b'-' {
+                            self.i += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                    if self.i == start {
+                        return Err(self.err("expected a key"));
+                    }
+                    String::from_utf8_lossy(&self.b[start..self.i]).into_owned()
+                }
+            };
+            parts.push(part);
+            self.skip_inline_ws();
+            if self.peek() == Some(b'.') {
+                self.advance(1);
+            } else {
+                return Ok(parts);
+            }
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'"') => Ok(Json::Str(self.basic_string()?)),
+            Some(b'\'') => Ok(Json::Str(self.literal_string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => Err(self.err("inline tables are not supported")),
+            Some(b't') | Some(b'f') => {
+                if self.starts_with("true") {
+                    self.advance(4);
+                    Ok(Json::Bool(true))
+                } else if self.starts_with("false") {
+                    self.advance(5);
+                    Ok(Json::Bool(false))
+                } else {
+                    Err(self.err("bad literal"))
+                }
+            }
+            Some(c) if c == b'-' || c == b'+' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("expected a value")),
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E' | b'_') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let raw = std::str::from_utf8(&self.b[start..self.i]).map_err(|_| self.err("bad number"))?;
+        // `1979-05-27`-style dates scan like numbers; reject them clearly.
+        if raw.matches('-').count() > 1 && !raw.starts_with('-') {
+            return Err(self.err("datetimes are not supported"));
+        }
+        let cleaned: String = raw.chars().filter(|&c| c != '_').collect();
+        cleaned
+            .parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| self.err(&format!("bad number '{raw}'")))
+    }
+
+    fn basic_string(&mut self) -> Result<String, String> {
+        if self.starts_with("\"\"\"") {
+            return Err(self.err("multi-line strings are not supported"));
+        }
+        self.advance(1); // opening quote
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None | Some(b'\n') => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.advance(1);
+                    return Ok(s);
+                }
+                Some(b'\\') => {
+                    self.advance(1);
+                    match self.peek() {
+                        Some(b'n') => s.push('\n'),
+                        Some(b't') => s.push('\t'),
+                        Some(b'r') => s.push('\r'),
+                        Some(b'"') => s.push('"'),
+                        Some(b'\\') => s.push('\\'),
+                        _ => return Err(self.err("unsupported escape")),
+                    }
+                    self.advance(1);
+                }
+                Some(_) => {
+                    let rest = std::str::from_utf8(&self.b[self.i..])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    let c = rest.chars().next().unwrap();
+                    s.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn literal_string(&mut self) -> Result<String, String> {
+        self.advance(1); // opening quote
+        let start = self.i;
+        while !matches!(self.peek(), None | Some(b'\'') | Some(b'\n')) {
+            self.i += 1;
+        }
+        if self.peek() != Some(b'\'') {
+            return Err(self.err("unterminated literal string"));
+        }
+        let s = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+        self.advance(1);
+        Ok(s)
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.advance(1); // '['
+        let mut v = Vec::new();
+        loop {
+            self.skip_trivia();
+            if self.peek() == Some(b']') {
+                self.advance(1);
+                return Ok(Json::Arr(v));
+            }
+            v.push(self.value()?);
+            self.skip_trivia();
+            match self.peek() {
+                Some(b',') => self.advance(1),
+                Some(b']') => {
+                    self.advance(1);
+                    return Ok(Json::Arr(v));
+                }
+                _ => return Err(self.err("expected ',' or ']' in array")),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_tables_and_arrays() {
+        let doc = r#"
+# campaign
+name = "sweep" # trailing comment
+workers = 4
+scale = 2.5
+fast = true
+nodes = [32, 64]
+modes = [
+    "fixed",
+    "sync",   # mixed lines + trailing comma
+]
+
+[policy]
+backfill = [true, false]
+"#;
+        let j = parse(doc).unwrap();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("sweep"));
+        assert_eq!(j.get("workers").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("scale").unwrap().as_f64(), Some(2.5));
+        assert_eq!(j.get("fast"), Some(&Json::Bool(true)));
+        let nodes = j.get("nodes").unwrap().as_arr().unwrap();
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(nodes[1].as_usize(), Some(64));
+        let modes = j.get("modes").unwrap().as_arr().unwrap();
+        assert_eq!(modes[0].as_str(), Some("fixed"));
+        let bf = j.get("policy").unwrap().get("backfill").unwrap().as_arr().unwrap();
+        assert_eq!(bf, &[Json::Bool(true), Json::Bool(false)]);
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let doc = r#"
+[[workload]]
+kind = "feitelson"
+jobs = 40
+
+[[workload]]
+kind = "swf"
+path = 'traces/small.swf'
+"#;
+        let j = parse(doc).unwrap();
+        let w = j.get("workload").unwrap().as_arr().unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].get("kind").unwrap().as_str(), Some("feitelson"));
+        assert_eq!(w[0].get("jobs").unwrap().as_usize(), Some(40));
+        assert_eq!(w[1].get("path").unwrap().as_str(), Some("traces/small.swf"));
+    }
+
+    #[test]
+    fn dotted_and_quoted_keys() {
+        let doc = "a.b = 1\n\"odd key\" = 2\n[t.u]\nc = 3\n";
+        let j = parse(doc).unwrap();
+        assert_eq!(j.get("a").unwrap().get("b").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("odd key").unwrap().as_usize(), Some(2));
+        assert_eq!(
+            j.get("t").unwrap().get("u").unwrap().get("c").unwrap().as_usize(),
+            Some(3)
+        );
+    }
+
+    #[test]
+    fn underscored_and_negative_numbers() {
+        let j = parse("big = 1_000_000\nneg = -3\nexp = 1e3\n").unwrap();
+        assert_eq!(j.get("big").unwrap().as_f64(), Some(1_000_000.0));
+        assert_eq!(j.get("neg").unwrap().as_f64(), Some(-3.0));
+        assert_eq!(j.get("exp").unwrap().as_f64(), Some(1000.0));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("key").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("k = \"unterminated").is_err());
+        assert!(parse("k = 1 trailing").is_err());
+        assert!(parse("k = {a = 1}").is_err());
+        assert!(parse("k = 1\nk = 2\n").is_err());
+        assert!(parse("[t\nk = 1\n").is_err());
+    }
+
+    #[test]
+    fn reenter_array_of_tables_keys_go_to_last() {
+        let doc = "[[w]]\nx = 1\n[[w]]\nx = 2\ny = 3\n";
+        let j = parse(doc).unwrap();
+        let w = j.get("w").unwrap().as_arr().unwrap();
+        assert_eq!(w[0].get("x").unwrap().as_usize(), Some(1));
+        assert_eq!(w[1].get("y").unwrap().as_usize(), Some(3));
+    }
+}

@@ -1,9 +1,13 @@
 //! Workload generation: the Feitelson statistical model (§7.1) materialized
 //! into the job streams the evaluation processes (50–400 jobs, fixed and
-//! flexible versions of the same stream).
+//! flexible versions of the same stream), plus the campaign engine's two
+//! extra sources — real traces in Standard Workload Format ([`swf`]) and
+//! the synthetic burst–lull arrival pattern
+//! ([`generate_burst_lull`]).
 
 pub mod feitelson;
 mod spec;
+pub mod swf;
 
 pub use feitelson::{sample, FeitelsonParams, SampledJob};
 pub use spec::{JobSpec, WorkloadSpec};
@@ -36,6 +40,61 @@ pub fn generate_with(params: &FeitelsonParams, seed: u64) -> WorkloadSpec {
             JobSpec::from_app(s.app, name, s.arrival, s.work_scale)
         })
         .collect();
+    WorkloadSpec { jobs, seed }
+}
+
+/// Parameters of the burst–lull arrival pattern: bursts of `burst` jobs
+/// with short exponential gaps (`burst_gap` mean), separated by `lull`
+/// seconds of silence.  Bursty arrivals are where malleability pays —
+/// shrink under the burst's queue pressure, expand during the lull — so
+/// campaigns sweep this against the smoother Poisson stream.
+#[derive(Debug, Clone)]
+pub struct BurstLullParams {
+    pub jobs: usize,
+    /// Jobs per burst.
+    pub burst: usize,
+    /// Mean gap between jobs inside a burst (seconds).
+    pub burst_gap: f64,
+    /// Silence between bursts (seconds).
+    pub lull: f64,
+    /// Log-uniform work-scale half-width (as in [`FeitelsonParams`]).
+    pub work_spread: f64,
+    pub apps: Vec<AppKind>,
+}
+
+impl Default for BurstLullParams {
+    fn default() -> Self {
+        Self {
+            jobs: 50,
+            burst: 8,
+            burst_gap: 2.0,
+            lull: 300.0,
+            work_spread: 0.25,
+            apps: AppKind::WORKLOAD_APPS.to_vec(),
+        }
+    }
+}
+
+/// Generate a burst–lull workload.  Deterministic for a given seed; the
+/// job mix and naming follow [`generate_with`].
+pub fn generate_burst_lull(params: &BurstLullParams, seed: u64) -> WorkloadSpec {
+    let mut rng = Rng::new(seed);
+    let burst = params.burst.max(1);
+    let mut t = 0.0;
+    let mut counts = std::collections::HashMap::new();
+    let mut jobs = Vec::with_capacity(params.jobs);
+    for i in 0..params.jobs {
+        if i > 0 {
+            t += if i % burst == 0 { params.lull } else { rng.exp(params.burst_gap) };
+        }
+        let app = *rng.choice(&params.apps);
+        let u = rng.f64() * 2.0 - 1.0;
+        let work_scale = (u * params.work_spread).exp();
+        let k = counts.entry(app).or_insert(0usize);
+        let name = format!("{}-{:03}", app, *k);
+        *k += 1;
+        jobs.push(JobSpec::from_app(app, name, t, work_scale));
+    }
     WorkloadSpec { jobs, seed }
 }
 
@@ -79,6 +138,28 @@ mod tests {
         let c = generate(100, 8);
         assert!(a.jobs.iter().zip(&c.jobs).any(|(x, y)| x.name != y.name
             || x.submit_time != y.submit_time));
+    }
+
+    #[test]
+    fn burst_lull_shape() {
+        let p = BurstLullParams { jobs: 24, burst: 8, burst_gap: 1.0, lull: 500.0, ..Default::default() };
+        let w = generate_burst_lull(&p, 5);
+        assert_eq!(w.len(), 24);
+        for pair in w.jobs.windows(2) {
+            assert!(pair[1].submit_time >= pair[0].submit_time);
+        }
+        // gaps at burst boundaries are the lull, gaps inside are small
+        let gap = |i: usize| w.jobs[i].submit_time - w.jobs[i - 1].submit_time;
+        assert!(gap(8) >= 500.0 && gap(16) >= 500.0);
+        let inside: f64 = (1..8).map(gap).sum::<f64>() / 7.0;
+        assert!(inside < 50.0, "inside-burst mean gap {inside}");
+        // deterministic
+        let w2 = generate_burst_lull(&p, 5);
+        assert_eq!(w.jobs.len(), w2.jobs.len());
+        for (a, b) in w.jobs.iter().zip(&w2.jobs) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.submit_time, b.submit_time);
+        }
     }
 
     #[test]

@@ -74,9 +74,41 @@ impl JobSpec {
     }
 
     /// Valid process counts honour min/max and the resize factor chain
-    /// from the initial size.
+    /// from the initial size: the job can only ever run at
+    /// `procs * factor^k` / `procs / factor^k` (§5.1 — resizes move by
+    /// powers of the factor), so `p` is first clamped to `[min, max]` and
+    /// then rounded to the nearest in-range chain size (ties toward the
+    /// smaller size; a resize that cannot reach a chain size keeps the
+    /// clamped value, e.g. factor 1 or an empty in-range chain).
     pub fn clamp_procs(&self, p: usize) -> usize {
-        p.clamp(self.min_procs, self.max_procs)
+        let clamped = p.clamp(self.min_procs, self.max_procs);
+        if self.factor < 2 {
+            return clamped;
+        }
+        // Walk the chain out from the initial size in both directions,
+        // keeping the values inside [min, max].
+        let mut chain = Vec::new();
+        let mut down = self.procs;
+        loop {
+            if (self.min_procs..=self.max_procs).contains(&down) {
+                chain.push(down);
+            }
+            if down % self.factor != 0 || down / self.factor < 1 || down < self.min_procs {
+                break;
+            }
+            down /= self.factor;
+        }
+        let mut up = self.procs;
+        while up <= self.max_procs / self.factor {
+            up *= self.factor;
+            if (self.min_procs..=self.max_procs).contains(&up) {
+                chain.push(up);
+            }
+        }
+        chain
+            .into_iter()
+            .min_by_key(|&c| (c.abs_diff(clamped), c))
+            .unwrap_or(clamped)
     }
 }
 
@@ -131,6 +163,39 @@ mod tests {
         // N-body is nearly size-invariant
         let n = JobSpec::from_app(AppKind::NBody, "NB".into(), 0.0, 1.0);
         assert!(n.exec_time_at(1) / n.exec_time_at(16) < 1.3);
+    }
+
+    #[test]
+    fn clamp_procs_follows_factor_chain() {
+        // CG: procs 32, factor 2, min 2, max 32 -> chain {2,4,8,16,32}
+        let j = JobSpec::from_app(AppKind::Cg, "CG-0".into(), 0.0, 1.0);
+        assert_eq!(j.clamp_procs(32), 32);
+        assert_eq!(j.clamp_procs(8), 8);
+        // off-chain values round to the nearest chain size
+        assert_eq!(j.clamp_procs(20), 16);
+        assert_eq!(j.clamp_procs(7), 8);
+        assert_eq!(j.clamp_procs(5), 4);
+        // ties go to the smaller size
+        assert_eq!(j.clamp_procs(12), 8);
+        assert_eq!(j.clamp_procs(3), 2);
+        // out-of-range clamps to the chain ends
+        assert_eq!(j.clamp_procs(1), 2);
+        assert_eq!(j.clamp_procs(100), 32);
+
+        // an off-chain initial size keeps its own chain: 5 -> {5, 10}
+        let mut odd = j.clone();
+        odd.procs = 5;
+        odd.min_procs = 2;
+        odd.max_procs = 16;
+        assert_eq!(odd.clamp_procs(7), 5);
+        assert_eq!(odd.clamp_procs(9), 10);
+        assert_eq!(odd.clamp_procs(16), 10);
+
+        // factor < 2 degenerates to a plain min/max clamp
+        let mut f1 = j.clone();
+        f1.factor = 1;
+        assert_eq!(f1.clamp_procs(20), 20);
+        assert_eq!(f1.clamp_procs(1), 2);
     }
 
     #[test]

