@@ -1,0 +1,145 @@
+//! Bench: hot-path scaling — DES events/s on multi-thousand-job
+//! workloads (Feitelson + SWF-style trace replay) across 256–4096-node
+//! clusters.  This is the repo's perf trajectory point: it emits the
+//! machine-readable `BENCH_hotpath.json` (per-scenario events/s, overall
+//! runs/s, makespan checksums) so future PRs can be compared against it.
+//!
+//! Every scenario runs **twice**; the second (warm) run is the one
+//! measured, and the two runs' checksums (event-log digest + makespan
+//! bits) must match exactly — CI fails on a determinism mismatch or a
+//! panic, never on timing.
+//!
+//! Quick mode (default, CI): 1k/5k-job workloads on 256 nodes.
+//! `BENCH_FULL=1` adds the 5k-job runs on 1024- and 4096-node clusters.
+
+mod common;
+
+use std::time::Instant;
+
+use dmr::des::{DesConfig, Engine};
+use dmr::dmr::SchedMode;
+use dmr::metrics::report::{bench_checksum, bench_json, BenchRecord};
+use dmr::rms::RmsConfig;
+use dmr::util::rng::Rng;
+use dmr::util::table::Table;
+use dmr::workload::{self, swf, WorkloadSpec};
+
+struct Case {
+    workload: &'static str, // feitelson | swf
+    jobs: usize,
+    nodes: usize,
+    mode: &'static str, // fixed | sync | async
+}
+
+/// Deterministic synthetic SWF-shaped trace: power-of-two job sizes,
+/// exponential runtimes and inter-arrivals (stands in for an archive
+/// trace so the bench has no file dependency at 1k/5k-job scale).
+fn synth_trace(jobs: usize, seed: u64) -> swf::SwfTrace {
+    let mut rng = Rng::new(seed);
+    let mut records = Vec::with_capacity(jobs);
+    let mut t = 0.0;
+    let mut max_procs = 0;
+    for i in 0..jobs {
+        t += rng.exp(8.0);
+        let procs = 1usize << rng.below(8); // 1..=128
+        let runtime = 60.0 + rng.exp(600.0);
+        max_procs = max_procs.max(procs);
+        records.push(swf::SwfRecord { job_id: i as u64 + 1, submit: t, runtime, procs });
+    }
+    swf::SwfTrace { records, stats: swf::SwfStats::default(), max_procs }
+}
+
+fn materialize(case: &Case) -> WorkloadSpec {
+    let w = match case.workload {
+        "feitelson" => workload::generate(case.jobs, common::SEED),
+        "swf" => {
+            let trace = synth_trace(case.jobs, common::SEED);
+            let opts = swf::SwfOptions {
+                rescale_nodes: Some(case.nodes),
+                malleable_fraction: 0.3,
+                ..Default::default()
+            };
+            swf::to_workload(&trace, &opts, common::SEED)
+        }
+        other => panic!("unknown workload kind {other}"),
+    };
+    if case.mode == "fixed" {
+        w.as_fixed()
+    } else {
+        w
+    }
+}
+
+fn run_once(case: &Case, w: &WorkloadSpec) -> (u64, f64, f64, String) {
+    let mode = if case.mode == "async" { SchedMode::Async } else { SchedMode::Sync };
+    let cfg = DesConfig {
+        rms: RmsConfig { nodes: case.nodes, ..Default::default() },
+        mode,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let r = Engine::new(cfg).run(w, "hotpath");
+    let wall = t0.elapsed().as_secs_f64();
+    let checksum = bench_checksum(&r.rms.log, r.makespan);
+    (r.events, wall, r.makespan, checksum)
+}
+
+fn main() {
+    common::banner("hotpath_scale", "DES events/s at 1k/5k jobs, 256-4096 nodes");
+    let mut cases = vec![
+        Case { workload: "feitelson", jobs: 1000, nodes: 256, mode: "fixed" },
+        Case { workload: "feitelson", jobs: 1000, nodes: 256, mode: "sync" },
+        Case { workload: "feitelson", jobs: 5000, nodes: 256, mode: "sync" },
+        Case { workload: "swf", jobs: 1000, nodes: 256, mode: "sync" },
+    ];
+    if common::full() {
+        cases.extend([
+            Case { workload: "feitelson", jobs: 5000, nodes: 1024, mode: "sync" },
+            Case { workload: "feitelson", jobs: 5000, nodes: 4096, mode: "sync" },
+            Case { workload: "swf", jobs: 5000, nodes: 1024, mode: "sync" },
+            Case { workload: "swf", jobs: 5000, nodes: 4096, mode: "async" },
+        ]);
+    }
+
+    let mut t = Table::new(vec![
+        "Scenario", "Events", "Wall (s)", "Events/s", "Makespan (s)", "Checksum",
+    ]);
+    let mut records = Vec::with_capacity(cases.len());
+    for case in &cases {
+        let scenario = format!("{}{}-n{}-{}", case.workload, case.jobs, case.nodes, case.mode);
+        let w = materialize(case);
+        // Cold run: determinism reference.  Warm run: the measurement.
+        let (ev_a, _, mk_a, sum_a) = run_once(case, &w);
+        let (ev_b, wall, mk_b, sum_b) = run_once(case, &w);
+        assert_eq!(
+            sum_a, sum_b,
+            "{scenario}: determinism checksum mismatch ({mk_a} vs {mk_b})"
+        );
+        assert_eq!(ev_a, ev_b, "{scenario}: event count mismatch");
+        t.row(vec![
+            scenario.clone(),
+            ev_b.to_string(),
+            format!("{wall:.3}"),
+            format!("{:.0}", ev_b as f64 / wall.max(1e-9)),
+            format!("{mk_b:.1}"),
+            sum_b.clone(),
+        ]);
+        records.push(BenchRecord {
+            scenario,
+            workload: case.workload.to_string(),
+            jobs: case.jobs,
+            nodes: case.nodes,
+            mode: case.mode.to_string(),
+            events: ev_b,
+            wall_secs: wall,
+            makespan_s: mk_b,
+            checksum: sum_b,
+        });
+    }
+    println!("{}", t.render());
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    let doc = bench_json("hotpath_scale", &records).render();
+    std::fs::write(&out, format!("{doc}\n")).expect("write BENCH_hotpath.json");
+    println!("wrote {out} ({} scenarios, determinism checksums verified)", records.len());
+}

@@ -19,15 +19,20 @@ pub enum AllocError {
 /// A cluster of identical nodes.  Allocation is by count (the paper's
 /// policies reason about node *numbers*, not topology); the free set is a
 /// BTreeSet so allocations are deterministic (lowest ids first).
+///
+/// `allocated()` is answered from an incrementally maintained counter —
+/// the scheduler snapshots it after every start/finish, so a scan over
+/// `nodes` would make each simulated event O(cluster size).
 #[derive(Debug, Clone)]
 pub struct Cluster {
     nodes: Vec<NodeState>,
     free: BTreeSet<NodeId>,
+    allocated: usize,
 }
 
 impl Cluster {
     pub fn new(n: usize) -> Self {
-        Self { nodes: vec![NodeState::Idle; n], free: (0..n).collect() }
+        Self { nodes: vec![NodeState::Idle; n], free: (0..n).collect(), allocated: 0 }
     }
 
     /// Total node count (including down nodes).
@@ -40,9 +45,9 @@ impl Cluster {
         self.free.len()
     }
 
-    /// Nodes currently held by jobs.
+    /// Nodes currently held by jobs (O(1): maintained counter).
     pub fn allocated(&self) -> usize {
-        self.nodes.iter().filter(|s| matches!(s, NodeState::Allocated(_))).count()
+        self.allocated
     }
 
     pub fn state(&self, n: NodeId) -> &NodeState {
@@ -54,11 +59,13 @@ impl Cluster {
         if self.free.len() < count {
             return Err(AllocError::Insufficient { requested: count, available: self.free.len() });
         }
-        let picked: Vec<NodeId> = self.free.iter().take(count).copied().collect();
-        for &n in &picked {
-            self.free.remove(&n);
+        let mut picked = Vec::with_capacity(count);
+        for _ in 0..count {
+            let n = self.free.pop_first().expect("free count checked above");
             self.nodes[n] = NodeState::Allocated(job);
+            picked.push(n);
         }
+        self.allocated += count;
         Ok(picked)
     }
 
@@ -75,6 +82,7 @@ impl Cluster {
             self.nodes[n] = NodeState::Idle;
             self.free.insert(n);
         }
+        self.allocated -= nodes.len();
         Ok(())
     }
 
@@ -115,7 +123,9 @@ impl Cluster {
     /// Internal consistency check (used by property tests).
     pub fn check_invariants(&self) -> bool {
         let idle = self.nodes.iter().filter(|s| **s == NodeState::Idle).count();
+        let alloc = self.nodes.iter().filter(|s| matches!(s, NodeState::Allocated(_))).count();
         idle == self.free.len()
+            && alloc == self.allocated
             && self.free.iter().all(|&n| self.nodes[n] == NodeState::Idle)
     }
 }
@@ -175,6 +185,23 @@ mod tests {
         assert_eq!(got, vec![1, 2, 3]);
         c.set_up(0);
         assert_eq!(c.available(), 1);
+        assert!(c.check_invariants());
+    }
+
+    #[test]
+    fn allocated_counter_tracks_transfer_and_release() {
+        let mut c = Cluster::new(8);
+        let a = c.alloc(1, 3).unwrap();
+        let b = c.alloc(2, 2).unwrap();
+        assert_eq!(c.allocated(), 5);
+        // transfer moves ownership without changing the allocated count
+        c.transfer(2, 1, &b).unwrap();
+        assert_eq!(c.allocated(), 5);
+        c.release(1, &b).unwrap();
+        assert_eq!(c.allocated(), 3);
+        // failed release must not touch the counter
+        assert!(c.release(9, &a).is_err());
+        assert_eq!(c.allocated(), 3);
         assert!(c.check_invariants());
     }
 

@@ -6,9 +6,28 @@
 //! — the DES only replaces wall-clock execution with the calibrated model,
 //! which is what lets the paper's 9-hour, 400-job workloads run in
 //! milliseconds (DESIGN.md §2).
+//!
+//! ## Complexity budget
+//!
+//! One simulated event costs O(active jobs), independent of how many jobs
+//! have already completed:
+//!
+//! * Per-job simulation state lives in a **dense slab** (`Vec<SimJob>`
+//!   plus an id→slot table) instead of a hash map; a `SimJob` carries a
+//!   copyable [`SimSpec`] extracted from the `JobSpec` — starting a job
+//!   allocates no strings and never clones the spec.
+//! * `iter_time` is memoized per (job, procs): the `powf` in the
+//!   execution model is recomputed only when a resize changes the
+//!   process count.
+//! * Arrival handling borrows specs straight from the caller's
+//!   `WorkloadSpec`; exactly one clone per job is made — the one the RMS
+//!   must own.
+//!
+//! `RunResult::events` counts every processed event so throughput
+//! benchmarks (`benches/hotpath_scale.rs`) can report events/s.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::BinaryHeap;
 
 use super::execmodel::ExecModel;
 use super::sched_cost::CostModel;
@@ -58,6 +77,10 @@ pub struct RunResult {
     pub first_submit: Time,
     pub actions: ActionStats,
     pub user_jobs: usize,
+    /// Discrete events processed (arrivals, checks, completions, resize
+    /// commits, retries — including stale ones).  Deterministic for a
+    /// given workload + config; the denominator of events/s.
+    pub events: u64,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -96,8 +119,39 @@ impl Ord for Ev {
     }
 }
 
+/// The copyable subset of a [`JobSpec`] the simulation needs per event —
+/// extracting it once at start time keeps the slab string-free and makes
+/// iteration-time math allocation-free.
+#[derive(Debug, Clone, Copy)]
+struct SimSpec {
+    iterations: u32,
+    /// Pre-resolved `spec.work_per_iter()` (same float ops, same value).
+    work_per_iter: f64,
+    alpha: f64,
+    sched_period: f64,
+    min_procs: usize,
+    max_procs: usize,
+    pref_procs: Option<usize>,
+    factor: usize,
+}
+
+impl SimSpec {
+    fn of(spec: &JobSpec) -> Self {
+        SimSpec {
+            iterations: spec.iterations,
+            work_per_iter: spec.work_per_iter(),
+            alpha: spec.alpha,
+            sched_period: spec.sched_period,
+            min_procs: spec.min_procs,
+            max_procs: spec.max_procs,
+            pref_procs: spec.pref_procs,
+            factor: spec.factor,
+        }
+    }
+}
+
 struct SimJob {
-    spec: JobSpec,
+    spec: SimSpec,
     procs: usize,
     iters_done: f64,
     last_t: Time,
@@ -105,13 +159,29 @@ struct SimJob {
     epoch: u64,
     inhibitor: Inhibitor,
     pending_async: Option<Action>,
+    /// Memoized `iter_time` at `memo_procs` processes.
+    memo_procs: usize,
+    memo_iter: f64,
 }
 
 impl SimJob {
     fn remaining(&self) -> f64 {
         (self.spec.iterations as f64 - self.iters_done).max(0.0)
     }
+
+    /// Seconds per iteration at the current size; recomputed only when a
+    /// resize changed `procs` since the last call.
+    fn iter_time(&mut self, exec: &ExecModel) -> f64 {
+        if self.memo_procs != self.procs {
+            self.memo_iter =
+                exec.iter_time_raw(self.spec.work_per_iter, self.spec.alpha, self.procs);
+            self.memo_procs = self.procs;
+        }
+        self.memo_iter
+    }
 }
+
+const NO_SLOT: u32 = u32::MAX;
 
 /// The engine.
 pub struct Engine {
@@ -119,10 +189,13 @@ pub struct Engine {
     rms: Rms,
     rng: Rng,
     heap: BinaryHeap<Reverse<Ev>>,
-    jobs: HashMap<JobId, SimJob>,
-    specs: Vec<JobSpec>,
+    /// Dense per-job simulation slab, one slot per started user job.
+    sims: Vec<SimJob>,
+    /// JobId → slab slot (`NO_SLOT` = not simulated: resizers, unstarted).
+    slot_of: Vec<u32>,
     now: Time,
     seq: u64,
+    events: u64,
     actions: ActionStats,
     done: usize,
     user_jobs: usize,
@@ -138,10 +211,11 @@ impl Engine {
             rms,
             rng,
             heap: BinaryHeap::new(),
-            jobs: HashMap::new(),
-            specs: Vec::new(),
+            sims: Vec::new(),
+            slot_of: Vec::new(),
             now: 0.0,
             seq: 0,
+            events: 0,
             actions: ActionStats::default(),
             done: 0,
             user_jobs: 0,
@@ -160,20 +234,37 @@ impl Engine {
         self.heap.push(Reverse(Ev { t, seq: self.seq, job, epoch, kind }));
     }
 
+    fn slot(&self, id: JobId) -> Option<usize> {
+        match self.slot_of.get(id as usize) {
+            Some(&s) if s != NO_SLOT => Some(s as usize),
+            _ => None,
+        }
+    }
+
+    fn insert_sim(&mut self, id: JobId, sim: SimJob) {
+        let idx = id as usize;
+        if self.slot_of.len() <= idx {
+            self.slot_of.resize(idx + 1, NO_SLOT);
+        }
+        debug_assert_eq!(self.slot_of[idx], NO_SLOT, "job {id} simulated twice");
+        self.slot_of[idx] = self.sims.len() as u32;
+        self.sims.push(sim);
+    }
+
     /// Run a workload to completion; returns the measurements.
     pub fn run(mut self, workload: &WorkloadSpec, label: &str) -> RunResult {
-        self.specs = workload.jobs.clone();
-        self.user_jobs = self.specs.len();
-        for i in 0..self.specs.len() {
-            let t = self.specs[i].submit_time;
-            self.push(t, 0, 0, EvKind::Arrival(i));
+        self.user_jobs = workload.jobs.len();
+        self.sims.reserve(self.user_jobs);
+        for (i, spec) in workload.jobs.iter().enumerate() {
+            self.push(spec.submit_time, 0, 0, EvKind::Arrival(i));
         }
 
         while let Some(Reverse(ev)) = self.heap.pop() {
             debug_assert!(ev.t >= self.now - 1e-9, "time went backwards");
             self.now = ev.t.max(self.now);
+            self.events += 1;
             match ev.kind {
-                EvKind::Arrival(i) => self.on_arrival(i),
+                EvKind::Arrival(i) => self.on_arrival(&workload.jobs[i]),
                 EvKind::Check => self.on_check(ev),
                 EvKind::Complete => self.on_complete(ev),
                 EvKind::ResizeDone { to, expand, began } => {
@@ -195,18 +286,18 @@ impl Engine {
             first_submit: self.first_submit,
             actions: self.actions,
             user_jobs: self.user_jobs,
+            events: self.events,
             rms: self.rms,
         }
     }
 
     // ------------------------------------------------------------------
 
-    fn on_arrival(&mut self, i: usize) {
-        let spec = self.specs[i].clone();
+    fn on_arrival(&mut self, spec: &JobSpec) {
         self.first_submit = self.first_submit.min(self.now);
-        let id = self.rms.submit(spec, self.now);
         // Estimate for backfill: duration at the requested size.
-        let est = self.cfg.exec.exec_time(&self.specs[i], self.specs[i].procs);
+        let est = self.cfg.exec.exec_time(spec, spec.procs);
+        let id = self.rms.submit(spec.clone(), self.now);
         self.rms.set_expected_end(id, self.now + est);
         self.try_schedule();
     }
@@ -215,15 +306,15 @@ impl Engine {
         self.rms.schedule(self.now);
         let started = self.rms.take_recent_starts();
         for s in started {
-            let job = match self.rms.job(s.job) {
-                Some(j) if !j.is_resizer => j,
+            let (spec, malleable) = match self.rms.job(s.job) {
+                Some(j) if !j.is_resizer => (SimSpec::of(&j.spec), j.spec.malleable),
                 _ => continue,
             };
-            let spec = job.spec.clone();
             let procs = s.nodes.len();
-            let iter_t = self.cfg.exec.iter_time(&spec, procs);
+            let iter_t = self.cfg.exec.iter_time_raw(spec.work_per_iter, spec.alpha, procs);
             let period = spec.sched_period;
             let sim = SimJob {
+                spec,
                 procs,
                 iters_done: 0.0,
                 last_t: self.now,
@@ -231,13 +322,13 @@ impl Engine {
                 epoch: 0,
                 inhibitor: Inhibitor::new(period),
                 pending_async: None,
-                spec,
+                memo_procs: procs,
+                memo_iter: iter_t,
             };
             let complete_at = self.now + sim.remaining() * iter_t;
             self.rms.set_expected_end(s.job, complete_at);
-            let malleable = sim.spec.malleable;
             let check_at = self.now + iter_t.max(period).max(1e-3);
-            self.jobs.insert(s.job, sim);
+            self.insert_sim(s.job, sim);
             self.push(complete_at, s.job, 0, EvKind::Complete);
             if malleable {
                 self.push(check_at, s.job, 0, EvKind::Check);
@@ -245,25 +336,24 @@ impl Engine {
         }
     }
 
-    fn progress(&mut self, id: JobId) {
+    fn progress(&mut self, slot: usize) {
         let exec = &self.cfg.exec;
-        if let Some(j) = self.jobs.get_mut(&id) {
-            if j.running {
-                let it = exec.iter_time(&j.spec, j.procs);
-                j.iters_done =
-                    (j.iters_done + (self.now - j.last_t) / it).min(j.spec.iterations as f64);
-            }
-            j.last_t = self.now;
+        let now = self.now;
+        let j = &mut self.sims[slot];
+        if j.running {
+            let it = j.iter_time(exec);
+            j.iters_done = (j.iters_done + (now - j.last_t) / it).min(j.spec.iterations as f64);
         }
+        j.last_t = now;
     }
 
     fn on_complete(&mut self, ev: Ev) {
-        let Some(j) = self.jobs.get(&ev.job) else { return };
-        if j.epoch != ev.epoch || !j.running {
+        let Some(slot) = self.slot(ev.job) else { return };
+        if self.sims[slot].epoch != ev.epoch || !self.sims[slot].running {
             return; // stale
         }
-        self.progress(ev.job);
-        let j = self.jobs.get_mut(&ev.job).unwrap();
+        self.progress(slot);
+        let j = &mut self.sims[slot];
         debug_assert!(j.remaining() < 1e-6, "completion with work left");
         j.running = false;
         j.epoch += 1;
@@ -273,25 +363,25 @@ impl Engine {
     }
 
     fn on_check(&mut self, ev: Ev) {
-        let Some(j) = self.jobs.get(&ev.job) else { return };
-        if j.epoch != ev.epoch || !j.running {
+        let Some(slot) = self.slot(ev.job) else { return };
+        if self.sims[slot].epoch != ev.epoch || !self.sims[slot].running {
             return;
         }
-        self.progress(ev.job);
-        let j = self.jobs.get_mut(&ev.job).unwrap();
-        if j.remaining() <= 1e-9 {
+        self.progress(slot);
+        if self.sims[slot].remaining() <= 1e-9 {
             return; // completion event will fire at this same instant
         }
+        let spec = self.sims[slot].spec;
         let req = DmrRequest {
-            min: j.spec.min_procs,
-            max: j.spec.max_procs,
-            pref: j.spec.pref_procs,
-            factor: j.spec.factor,
+            min: spec.min_procs,
+            max: spec.max_procs,
+            pref: spec.pref_procs,
+            factor: spec.factor,
         };
 
-        if !j.inhibitor.allow(self.now) {
-            let epoch = j.epoch;
-            let next = self.next_check_time(ev.job);
+        if !self.sims[slot].inhibitor.allow(self.now) {
+            let epoch = self.sims[slot].epoch;
+            let next = self.next_check_time(slot);
             self.push(next, ev.job, epoch, EvKind::Check);
             return;
         }
@@ -300,9 +390,9 @@ impl Engine {
         let outcome: Result<DmrOutcome, usize> = match mode {
             SchedMode::Sync => Ok(self.rms.dmr_check(ev.job, &req, self.now)),
             SchedMode::Async => {
-                let prev = self.jobs.get_mut(&ev.job).unwrap().pending_async.take();
+                let prev = self.sims[slot].pending_async.take();
                 let next_decision = self.rms.dmr_peek(ev.job, &req, self.now);
-                self.jobs.get_mut(&ev.job).unwrap().pending_async = Some(next_decision);
+                self.sims[slot].pending_async = Some(next_decision);
                 match prev {
                     None | Some(Action::NoAction) => Ok(DmrOutcome::NoAction),
                     Some(a) => match self.rms.dmr_apply(ev.job, a, self.now) {
@@ -328,15 +418,15 @@ impl Engine {
                 // not charged against progress: charging it would require
                 // rescheduling the completion event for a <0.1 % effect
                 // (the inhibitor spaces the calls 15 s apart).
-                let epoch = self.jobs[&ev.job].epoch;
-                let next = self.next_check_time(ev.job).max(self.now + cost);
+                let epoch = self.sims[slot].epoch;
+                let next = self.next_check_time(slot).max(self.now + cost);
                 self.push(next, ev.job, epoch, EvKind::Check);
             }
-            Ok(DmrOutcome::Expand { to, .. }) => self.begin_resize(ev.job, to, true, self.now),
-            Ok(DmrOutcome::Shrink { to, .. }) => self.begin_resize(ev.job, to, false, self.now),
+            Ok(DmrOutcome::Expand { to, .. }) => self.begin_resize(slot, ev.job, to, true),
+            Ok(DmrOutcome::Shrink { to, .. }) => self.begin_resize(slot, ev.job, to, false),
             Err(to) => {
                 // Pause and retry until the deadline (async wait hazard).
-                let j = self.jobs.get_mut(&ev.job).unwrap();
+                let j = &mut self.sims[slot];
                 j.running = false;
                 j.epoch += 1;
                 let epoch = j.epoch;
@@ -352,12 +442,15 @@ impl Engine {
     }
 
     /// Pause the job and schedule the commit of a granted resize.
-    fn begin_resize(&mut self, id: JobId, to: usize, expand: bool, began: Time) {
-        let j = self.jobs.get_mut(&id).unwrap();
-        let from = j.procs;
-        j.running = false;
-        j.epoch += 1;
-        let epoch = j.epoch;
+    fn begin_resize(&mut self, slot: usize, id: JobId, to: usize, expand: bool) {
+        let began = self.now;
+        let (from, epoch) = {
+            let j = &mut self.sims[slot];
+            let from = j.procs;
+            j.running = false;
+            j.epoch += 1;
+            (from, j.epoch)
+        };
         let delta = to.abs_diff(from);
         let sched = self.cfg.costs.action_sched(delta, &mut self.rng);
         let transfer = self
@@ -373,8 +466,8 @@ impl Engine {
     }
 
     fn on_resize_done(&mut self, ev: Ev, to: usize, expand: bool, began: Time) {
-        let Some(j) = self.jobs.get(&ev.job) else { return };
-        if j.epoch != ev.epoch {
+        let Some(slot) = self.slot(ev.job) else { return };
+        if self.sims[slot].epoch != ev.epoch {
             return;
         }
         if expand {
@@ -384,35 +477,38 @@ impl Engine {
             self.rms.commit_shrink_to(ev.job, to, self.now);
             self.actions.shrink.push(self.now - began);
         }
-        let j = self.jobs.get_mut(&ev.job).unwrap();
+        let exec = &self.cfg.exec;
+        let now = self.now;
+        let j = &mut self.sims[slot];
         j.procs = to;
         j.running = true;
-        j.last_t = self.now;
+        j.last_t = now;
         j.epoch += 1;
         let epoch = j.epoch;
-        let iter_t = self.cfg.exec.iter_time(&j.spec, to);
-        let complete_at = self.now + j.remaining() * iter_t;
+        let iter_t = j.iter_time(exec);
+        let complete_at = now + j.remaining() * iter_t;
         self.rms.set_expected_end(ev.job, complete_at);
         self.push(complete_at, ev.job, epoch, EvKind::Complete);
-        let next = self.next_check_time(ev.job);
+        let next = self.next_check_time(slot);
         self.push(next, ev.job, epoch, EvKind::Check);
         // A shrink may let queued jobs start.
         self.try_schedule();
     }
 
     fn on_expand_retry(&mut self, ev: Ev, to: usize, began: Time, deadline: Time) {
-        let Some(j) = self.jobs.get(&ev.job) else { return };
-        if j.epoch != ev.epoch {
+        let Some(slot) = self.slot(ev.job) else { return };
+        if self.sims[slot].epoch != ev.epoch {
             return;
         }
         match self.rms.dmr_apply(ev.job, Action::Expand { to }, self.now) {
             Ok(DmrOutcome::Expand { .. }) => {
                 // Resources appeared: pay the protocol costs now; the
                 // elapsed wait is part of the measured expand time.
-                let j = self.jobs.get_mut(&ev.job).unwrap();
-                let from = j.procs;
-                j.epoch += 1;
-                let epoch = j.epoch;
+                let (from, epoch) = {
+                    let j = &mut self.sims[slot];
+                    j.epoch += 1;
+                    (j.procs, j.epoch)
+                };
                 let delta = to.abs_diff(from);
                 let sched = self.cfg.costs.action_sched(delta, &mut self.rng);
                 let transfer = self
@@ -439,25 +535,28 @@ impl Engine {
                     // Timed out: abort the action and resume (§5.2.1).
                     self.actions.expand.push(self.now - began);
                     self.actions.expand_aborts += 1;
-                    let j = self.jobs.get_mut(&ev.job).unwrap();
+                    let exec = &self.cfg.exec;
+                    let now = self.now;
+                    let j = &mut self.sims[slot];
                     j.running = true;
-                    j.last_t = self.now;
+                    j.last_t = now;
                     j.epoch += 1;
                     let epoch = j.epoch;
-                    let iter_t = self.cfg.exec.iter_time(&j.spec, j.procs);
-                    let complete_at = self.now + j.remaining() * iter_t;
+                    let iter_t = j.iter_time(exec);
+                    let complete_at = now + j.remaining() * iter_t;
                     self.rms.set_expected_end(ev.job, complete_at);
                     self.push(complete_at, ev.job, epoch, EvKind::Complete);
-                    let next = self.next_check_time(ev.job);
+                    let next = self.next_check_time(slot);
                     self.push(next, ev.job, epoch, EvKind::Check);
                 }
             }
         }
     }
 
-    fn next_check_time(&self, id: JobId) -> Time {
-        let j = &self.jobs[&id];
-        let iter_t = self.cfg.exec.iter_time(&j.spec, j.procs);
+    fn next_check_time(&mut self, slot: usize) -> Time {
+        let exec = &self.cfg.exec;
+        let j = &mut self.sims[slot];
+        let iter_t = j.iter_time(exec);
         // Reconfiguring points are iteration boundaries, rate-limited by
         // the checking inhibitor.
         self.now + iter_t.max(j.spec.sched_period).max(1e-3)
@@ -479,6 +578,7 @@ mod tests {
         let exec = job.exec_time().unwrap();
         assert!((exec - want).abs() < 1e-6, "exec {exec} vs {want}");
         assert_eq!(r.user_jobs, 1);
+        assert!(r.events >= 2, "at least arrival + completion");
     }
 
     #[test]
@@ -487,6 +587,8 @@ mod tests {
         let a = Engine::new(DesConfig::default()).run(&w, "a");
         let b = Engine::new(DesConfig::default()).run(&w, "b");
         assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.events, b.events, "event count is deterministic");
+        assert_eq!(a.rms.log.digest(), b.rms.log.digest(), "event logs bit-identical");
         assert_eq!(a.rms.completed_jobs(), 30);
         assert!(a.rms.check_invariants());
     }

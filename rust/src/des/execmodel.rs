@@ -27,7 +27,14 @@ impl ExecModel {
     /// Seconds per outer-loop iteration at `procs` processes.  The global
     /// `efficiency` knob multiplies the per-app exponent (ablation).
     pub fn iter_time(&self, spec: &JobSpec, procs: usize) -> f64 {
-        spec.work_per_iter() / (procs as f64).powf(spec.alpha * self.efficiency)
+        self.iter_time_raw(spec.work_per_iter(), spec.alpha, procs)
+    }
+
+    /// Spec-free variant for callers that pre-extracted the job constants
+    /// (the DES keeps them in a copyable per-job record and memoizes the
+    /// result per process count).  Bit-identical to [`Self::iter_time`].
+    pub fn iter_time_raw(&self, work_per_iter: f64, alpha: f64, procs: usize) -> f64 {
+        work_per_iter / (procs as f64).powf(alpha * self.efficiency)
     }
 
     /// Full execution time at a fixed size.

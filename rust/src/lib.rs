@@ -48,6 +48,38 @@
 //! count.  See `scenarios/README.md` for the spec schema, and run e.g.
 //! `repro campaign scenarios/sweep_small.toml --workers 8`.
 //!
+//! ## Performance model & complexity budget
+//!
+//! The paper's headline claim — malleability decisions cost ~10 ms
+//! (Table 2) and can run continuously — only scales to real traces
+//! (thousands of jobs, Chadha et al.; Zojer & Posner) if the simulated
+//! RMS stays cheap too.  The hot paths therefore hold to a budget of
+//! **O(active jobs) per simulated event**, never O(all jobs ever
+//! submitted):
+//!
+//! * [`rms`] splits job storage into a live map and an archive, keeps
+//!   O(1) counters for running/pending/completed queries, and caches the
+//!   priority-ordered pending queue behind a dirty flag (membership and
+//!   boost changes invalidate it; pure aging reuses it while provably
+//!   order-preserving).  Scheduling passes reuse Rms-owned scratch
+//!   buffers — steady state allocates nothing.
+//! * [`des`] keeps per-job simulation state in a dense slab (no hash map
+//!   on the event path), clones each `JobSpec` exactly once (for the RMS)
+//!   and memoizes per-(job, procs) iteration times.
+//! * [`cluster`] answers `allocated()` from a maintained counter, so the
+//!   telemetry snapshot after every start/finish is O(1).
+//!
+//! The budget is *measured*, not assumed: `cargo bench --bench
+//! hotpath_scale` runs 1k/5k-job Feitelson and SWF workloads on
+//! 256–4096-node clusters (quick mode by default; `BENCH_FULL=1` for the
+//! big clusters) and writes the machine-readable `BENCH_hotpath.json`
+//! (per-scenario events/s, overall runs/s, makespan checksums) — the
+//! repo's perf trajectory point, uploaded as a CI artifact.  Behavior
+//! preservation is enforced by `rust/tests/test_golden_determinism.rs`:
+//! bit-identical event logs, makespans and campaign aggregates between
+//! the optimized paths and the re-sort-everything reference, plus a
+//! recorded fixture that locks the event stream across PRs.
+//!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 

@@ -381,6 +381,91 @@ pub fn campaign_agg_json(
     Json::Obj(root)
 }
 
+// ------------------------------------------------------------------
+// Perf-bench emitter: the machine-readable trajectory point written by
+// `benches/hotpath_scale.rs` (BENCH_hotpath.json).  Kept here so every
+// CSV/JSON artifact the crate produces flows through one module.
+
+/// One measured scenario of a perf bench.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// Scenario id, e.g. `feitelson5000-n1024-sync`.
+    pub scenario: String,
+    /// Workload source (`feitelson` | `swf`).
+    pub workload: String,
+    pub jobs: usize,
+    pub nodes: usize,
+    pub mode: String,
+    /// DES events processed (see [`crate::des::RunResult::events`]).
+    pub events: u64,
+    /// Wall-clock seconds for the measured run (timing — informational,
+    /// never a CI gate).
+    pub wall_secs: f64,
+    pub makespan_s: f64,
+    /// Hex digest over the run's event log and makespan bits.  Identical
+    /// re-runs must produce identical checksums — the determinism gate.
+    pub checksum: String,
+}
+
+/// Deterministic hex checksum for one run: event-log digest mixed with
+/// the makespan bits.
+pub fn bench_checksum(log: &crate::rms::EventLog, makespan: f64) -> String {
+    let h = log
+        .digest()
+        .wrapping_mul(0x0000_0100_0000_01B3)
+        ^ makespan.to_bits();
+    format!("{h:016x}")
+}
+
+/// The `BENCH_<name>.json` document: per-scenario events/s plus overall
+/// totals (runs/s), designed to be diffed across PRs as the repo's perf
+/// trajectory.  Timing fields are informational; checksums are the only
+/// values CI asserts on.
+pub fn bench_json(bench: &str, records: &[BenchRecord]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    let scenarios: Vec<Json> = records
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("scenario".into(), Json::Str(r.scenario.clone()));
+            m.insert("workload".into(), Json::Str(r.workload.clone()));
+            m.insert("jobs".into(), Json::Num(r.jobs as f64));
+            m.insert("nodes".into(), Json::Num(r.nodes as f64));
+            m.insert("mode".into(), Json::Str(r.mode.clone()));
+            m.insert("events".into(), Json::Num(r.events as f64));
+            m.insert("wall_secs".into(), Json::Num(r.wall_secs));
+            m.insert(
+                "events_per_sec".into(),
+                Json::Num(r.events as f64 / r.wall_secs.max(1e-9)),
+            );
+            m.insert("makespan_s".into(), Json::Num(r.makespan_s));
+            m.insert("checksum".into(), Json::Str(r.checksum.clone()));
+            Json::Obj(m)
+        })
+        .collect();
+    let total_events: u64 = records.iter().map(|r| r.events).sum();
+    let total_wall: f64 = records.iter().map(|r| r.wall_secs).sum();
+    let mut totals = BTreeMap::new();
+    totals.insert("runs".into(), Json::Num(records.len() as f64));
+    totals.insert("events".into(), Json::Num(total_events as f64));
+    totals.insert("wall_secs".into(), Json::Num(total_wall));
+    totals.insert(
+        "events_per_sec".into(),
+        Json::Num(total_events as f64 / total_wall.max(1e-9)),
+    );
+    totals.insert(
+        "runs_per_sec".into(),
+        Json::Num(records.len() as f64 / total_wall.max(1e-9)),
+    );
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str(bench.to_string()));
+    root.insert("schema_version".into(), Json::Num(1.0));
+    root.insert("scenarios".into(), Json::Arr(scenarios));
+    root.insert("totals".into(), Json::Obj(totals));
+    Json::Obj(root)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -450,5 +535,36 @@ jobs = 5
         let parsed = crate::util::json::Json::parse(&json).unwrap();
         assert_eq!(parsed.get("campaign").unwrap().as_str(), Some("report-unit"));
         assert_eq!(parsed.get("scenarios").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn bench_json_round_trips() {
+        let w = workload::generate(10, 3);
+        let r = Engine::new(DesConfig::default()).run(&w, "bench-unit");
+        let rec = BenchRecord {
+            scenario: "feitelson10-n64-sync".into(),
+            workload: "feitelson".into(),
+            jobs: 10,
+            nodes: 64,
+            mode: "sync".into(),
+            events: r.events,
+            wall_secs: 0.25,
+            makespan_s: r.makespan,
+            checksum: bench_checksum(&r.rms.log, r.makespan),
+        };
+        // Checksum is a deterministic function of the run.
+        assert_eq!(rec.checksum, bench_checksum(&r.rms.log, r.makespan));
+        assert_eq!(rec.checksum.len(), 16);
+
+        let doc = bench_json("hotpath_scale", &[rec.clone(), rec.clone()]).render();
+        let parsed = crate::util::json::Json::parse(&doc).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("hotpath_scale"));
+        let scen = parsed.get("scenarios").unwrap().as_arr().unwrap();
+        assert_eq!(scen.len(), 2);
+        assert_eq!(scen[0].get("events").unwrap().as_usize(), Some(r.events as usize));
+        assert!(scen[0].get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        let totals = parsed.get("totals").unwrap();
+        assert_eq!(totals.get("runs").unwrap().as_usize(), Some(2));
+        assert!((totals.get("wall_secs").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
     }
 }

@@ -27,42 +27,61 @@ pub struct PendingInfo {
 /// Decide which pending jobs (already priority-ordered) start *now*.
 ///
 /// Returns the ids to start, in order.  Pure function — the RMS applies
-/// the allocations afterwards.
+/// the allocations afterwards.  Convenience wrapper over
+/// [`plan_starts_into`] that allocates fresh buffers; the RMS hot path
+/// keeps reusable scratch buffers instead.
 pub fn plan_starts(
-    mut free: usize,
+    free: usize,
     running: &[RunningInfo],
     pending_ordered: &[PendingInfo],
     now: Time,
     backfill: bool,
 ) -> Vec<crate::JobId> {
     let mut starts = Vec::new();
-    let mut it = pending_ordered.iter();
-    let mut blocked: Option<(usize, Time, usize)> = None; // (need, shadow, extra)
+    let mut ends_scratch = Vec::new();
+    plan_starts_into(free, running, pending_ordered, now, backfill, &mut ends_scratch, &mut starts);
+    starts
+}
 
-    // Start in priority order until the first job that does not fit.
-    let mut rest: Vec<&PendingInfo> = Vec::new();
-    for p in it.by_ref() {
-        if blocked.is_none() && p.procs <= free {
+/// Allocation-free scheduling pass: `starts` is cleared and filled with
+/// the ids to start (in order); `ends_scratch` is the reusable
+/// sorted-ends buffer for the shadow-time projection, so a pass costs no
+/// heap allocations once the buffers have grown to steady-state size.
+pub fn plan_starts_into(
+    mut free: usize,
+    running: &[RunningInfo],
+    pending_ordered: &[PendingInfo],
+    now: Time,
+    backfill: bool,
+    ends_scratch: &mut Vec<(Time, usize)>,
+    starts: &mut Vec<crate::JobId>,
+) {
+    starts.clear();
+    // Start in priority order until the first job that does not fit; that
+    // head-of-line blocker gets a reservation at its shadow time.
+    let mut blocked: Option<(Time, usize)> = None; // (shadow, extra)
+    let mut blocked_at = pending_ordered.len();
+    for (i, p) in pending_ordered.iter().enumerate() {
+        if p.procs <= free {
             free -= p.procs;
             starts.push(p.id);
-        } else if blocked.is_none() {
-            // Head-of-line blocker: compute its reservation.
-            let (shadow, free_at_shadow) = shadow_time(free, running, p.procs, now);
-            blocked = Some((p.procs, shadow, free_at_shadow.saturating_sub(p.procs)));
-            rest.push(p);
         } else {
-            rest.push(p);
+            let (shadow, free_at_shadow) =
+                shadow_time_with(ends_scratch, free, running, p.procs, now);
+            blocked = Some((shadow, free_at_shadow.saturating_sub(p.procs)));
+            blocked_at = i;
+            break;
         }
     }
 
     if !backfill {
-        return starts;
+        return;
     }
 
-    if let Some((_, shadow, extra)) = blocked {
-        // rest[0] is the blocker itself — it cannot start now.
-        let mut extra = extra;
-        for p in rest.iter().skip(1) {
+    if let Some((shadow, mut extra)) = blocked {
+        // Jobs behind the blocker may start out of order only if they do
+        // not delay its reservation.
+        for p in &pending_ordered[blocked_at + 1..] {
             if p.procs > free {
                 continue;
             }
@@ -77,25 +96,36 @@ pub fn plan_starts(
             }
         }
     }
-    starts
 }
 
 /// Earliest time at least `need` nodes are projected free, and how many
-/// will be free then.
-fn shadow_time(free_now: usize, running: &[RunningInfo], need: usize, now: Time) -> (Time, usize) {
-    let mut ends: Vec<(Time, usize)> = running.iter().map(|r| (r.expected_end, r.procs)).collect();
+/// will be free then.  `ends` is a reusable scratch buffer.
+fn shadow_time_with(
+    ends: &mut Vec<(Time, usize)>,
+    free_now: usize,
+    running: &[RunningInfo],
+    need: usize,
+    now: Time,
+) -> (Time, usize) {
+    if free_now >= need {
+        return (now, free_now);
+    }
+    ends.clear();
+    ends.extend(running.iter().map(|r| (r.expected_end, r.procs)));
     ends.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
     let mut free = free_now;
-    if free >= need {
-        return (now, free);
-    }
-    for (t, p) in ends {
+    for &(t, p) in ends.iter() {
         free += p;
         if free >= need {
             return (t.max(now), free);
         }
     }
     (Time::INFINITY, free)
+}
+
+#[cfg(test)]
+fn shadow_time(free_now: usize, running: &[RunningInfo], need: usize, now: Time) -> (Time, usize) {
+    shadow_time_with(&mut Vec::new(), free_now, running, need, now)
 }
 
 #[cfg(test)]
@@ -178,5 +208,23 @@ mod tests {
     fn shadow_infinite_when_never_enough() {
         let (t, _) = shadow_time(1, &[], 4, 0.0);
         assert!(t.is_infinite());
+    }
+
+    #[test]
+    fn into_variant_matches_with_dirty_buffers() {
+        // Pre-polluted scratch buffers must not leak into the result.
+        let running = [
+            RunningInfo { procs: 6, expected_end: 100.0 },
+            RunningInfo { procs: 2, expected_end: 40.0 },
+        ];
+        let pending = [p(1, 8, 50.0), p(2, 2, 30.0), p(3, 2, 500.0)];
+        let want = plan_starts(4, &running, &pending, 0.0, true);
+        let mut ends = vec![(999.0, 77); 5];
+        let mut starts = vec![42, 43];
+        plan_starts_into(4, &running, &pending, 0.0, true, &mut ends, &mut starts);
+        assert_eq!(starts, want);
+        // and again, reusing the now-dirty buffers
+        plan_starts_into(4, &running, &pending, 0.0, true, &mut ends, &mut starts);
+        assert_eq!(starts, want);
     }
 }

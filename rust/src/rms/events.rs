@@ -46,6 +46,82 @@ impl EventLog {
     pub fn shrinks(&self) -> usize {
         self.count(|e| matches!(e, RmsEvent::Shrunk { .. }))
     }
+
+    /// Order-sensitive FNV-1a digest over every event and all its fields
+    /// (times hashed bit-exactly).  Two logs digest equal iff they are
+    /// bit-identical — the behavior-preservation contract the golden
+    /// determinism test and the `hotpath_scale` checksum rely on.
+    pub fn digest(&self) -> u64 {
+        fn mix(h: &mut u64, x: u64) {
+            *h ^= x;
+            *h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        fn mix_action(h: &mut u64, a: &Action) {
+            match a {
+                Action::NoAction => mix(h, 0),
+                Action::Expand { to } => {
+                    mix(h, 1);
+                    mix(h, *to as u64);
+                }
+                Action::Shrink { to } => {
+                    mix(h, 2);
+                    mix(h, *to as u64);
+                }
+            }
+        }
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        for e in &self.events {
+            match e {
+                RmsEvent::Submitted { job, time } => {
+                    mix(&mut h, 1);
+                    mix(&mut h, *job);
+                    mix(&mut h, time.to_bits());
+                }
+                RmsEvent::Started { job, time, procs } => {
+                    mix(&mut h, 2);
+                    mix(&mut h, *job);
+                    mix(&mut h, time.to_bits());
+                    mix(&mut h, *procs as u64);
+                }
+                RmsEvent::Finished { job, time } => {
+                    mix(&mut h, 3);
+                    mix(&mut h, *job);
+                    mix(&mut h, time.to_bits());
+                }
+                RmsEvent::Cancelled { job, time } => {
+                    mix(&mut h, 4);
+                    mix(&mut h, *job);
+                    mix(&mut h, time.to_bits());
+                }
+                RmsEvent::DmrDecision { job, time, action } => {
+                    mix(&mut h, 5);
+                    mix(&mut h, *job);
+                    mix(&mut h, time.to_bits());
+                    mix_action(&mut h, action);
+                }
+                RmsEvent::Expanded { job, time, from, to } => {
+                    mix(&mut h, 6);
+                    mix(&mut h, *job);
+                    mix(&mut h, time.to_bits());
+                    mix(&mut h, *from as u64);
+                    mix(&mut h, *to as u64);
+                }
+                RmsEvent::Shrunk { job, time, from, to } => {
+                    mix(&mut h, 7);
+                    mix(&mut h, *job);
+                    mix(&mut h, time.to_bits());
+                    mix(&mut h, *from as u64);
+                    mix(&mut h, *to as u64);
+                }
+                RmsEvent::ExpandAborted { job, time } => {
+                    mix(&mut h, 8);
+                    mix(&mut h, *job);
+                    mix(&mut h, time.to_bits());
+                }
+            }
+        }
+        h
+    }
 }
 
 #[cfg(test)]
@@ -61,5 +137,33 @@ mod tests {
         assert_eq!(log.expansions(), 1);
         assert_eq!(log.shrinks(), 2);
         assert_eq!(log.all().len(), 3);
+    }
+
+    #[test]
+    fn digest_is_order_and_field_sensitive() {
+        let mut a = EventLog::default();
+        a.push(RmsEvent::Submitted { job: 1, time: 0.0 });
+        a.push(RmsEvent::Started { job: 1, time: 1.0, procs: 8 });
+        let mut b = EventLog::default();
+        b.push(RmsEvent::Started { job: 1, time: 1.0, procs: 8 });
+        b.push(RmsEvent::Submitted { job: 1, time: 0.0 });
+        assert_ne!(a.digest(), b.digest(), "order matters");
+
+        let mut c = EventLog::default();
+        c.push(RmsEvent::Submitted { job: 1, time: 0.0 });
+        c.push(RmsEvent::Started { job: 1, time: 1.0, procs: 16 });
+        assert_ne!(a.digest(), c.digest(), "fields matter");
+
+        let mut d = EventLog::default();
+        d.push(RmsEvent::Submitted { job: 1, time: 0.0 });
+        d.push(RmsEvent::Started { job: 1, time: 1.0, procs: 8 });
+        assert_eq!(a.digest(), d.digest(), "identical logs digest equal");
+
+        // Decision actions are distinguishable.
+        let mut e = EventLog::default();
+        e.push(RmsEvent::DmrDecision { job: 2, time: 3.0, action: Action::Expand { to: 8 } });
+        let mut f = EventLog::default();
+        f.push(RmsEvent::DmrDecision { job: 2, time: 3.0, action: Action::Shrink { to: 8 } });
+        assert_ne!(e.digest(), f.digest());
     }
 }

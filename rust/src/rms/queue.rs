@@ -40,19 +40,27 @@ pub fn priority(job: &Job, w: &PriorityWeights, total_nodes: usize, now: Time) -
     p
 }
 
-/// Sort job ids by descending priority; FIFO (submit time, then id) as the
-/// tie-break so ordering is deterministic.
+/// The queue's sort key: (priority, submit time, id).
+pub type PendingKey = (f64, Time, crate::JobId);
+
+/// THE canonical pending-queue order: descending priority; FIFO (submit
+/// time, then id) as the tie-break so ordering is deterministic and
+/// total.  Every consumer — [`order_pending`] and the RMS's cached
+/// order (`rms::Rms`) — must sort with this comparator, never a copy.
+pub fn pending_cmp(a: &PendingKey, b: &PendingKey) -> std::cmp::Ordering {
+    b.0.partial_cmp(&a.0)
+        .unwrap()
+        .then(a.1.partial_cmp(&b.1).unwrap())
+        .then(a.2.cmp(&b.2))
+}
+
+/// Sort job ids by [`pending_cmp`].
 pub fn order_pending(
     ids: &[crate::JobId],
-    get: impl Fn(crate::JobId) -> (f64, Time, crate::JobId),
+    get: impl Fn(crate::JobId) -> PendingKey,
 ) -> Vec<crate::JobId> {
-    let mut keyed: Vec<(f64, Time, crate::JobId)> = ids.iter().map(|&id| get(id)).collect();
-    keyed.sort_by(|a, b| {
-        b.0.partial_cmp(&a.0)
-            .unwrap()
-            .then(a.1.partial_cmp(&b.1).unwrap())
-            .then(a.2.cmp(&b.2))
-    });
+    let mut keyed: Vec<PendingKey> = ids.iter().map(|&id| get(id)).collect();
+    keyed.sort_by(pending_cmp);
     keyed.into_iter().map(|k| k.2).collect()
 }
 

@@ -11,14 +11,41 @@
 //! other job can steal the nodes) and the resizer is cancelled.  Shrinking
 //! returns the nodes to release; the runtime redistributes data, collects
 //! ACKs, and only then commits the release.
+//!
+//! ## Complexity budget
+//!
+//! Every public operation is O(active jobs), never O(all jobs ever
+//! submitted):
+//!
+//! * Job storage is split into a **live** map (pending + active) and an
+//!   **archive** (completed/cancelled); scheduling passes never touch the
+//!   archive.
+//! * `running_jobs()`, `pending_user_jobs()` and `all_done()` are O(1)
+//!   incrementally-maintained counters; the set of active jobs is a
+//!   `BTreeSet` so the backfill projection iterates exactly the active
+//!   jobs in a deterministic (ascending-id) order.
+//! * The priority-ordered pending queue is cached behind a dirty flag:
+//!   membership and boost changes invalidate it, while *pure aging*
+//!   reuses it whenever that provably preserves the relative order (all
+//!   pending jobs still inside the age-saturation horizon — their age
+//!   factors then grow in lockstep).  Set
+//!   [`RmsConfig::cache_pending_order`] to `false` to force a re-sort on
+//!   every pass (the golden determinism test runs both ways and asserts
+//!   bit-identical event logs).
+//! * The `RunningInfo`/`PendingInfo`/sorted-ends scratch buffers are
+//!   owned by the `Rms` and reused across passes, so a steady-state pass
+//!   performs no heap allocation.
+//!
+//! Mutating `cfg` (weights, policy) mid-run is not supported — the cached
+//! queue order assumes stable weights between invalidations.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 
-use super::backfill::{plan_starts, PendingInfo, RunningInfo};
+use super::backfill::{plan_starts_into, PendingInfo, RunningInfo};
 use super::events::{EventLog, RmsEvent};
 use super::job::{Job, JobState, ResizeEvent};
 use super::policy::{decide, Action, DmrRequest, PolicyConfig, SystemView};
-use super::queue::{order_pending, priority, PriorityWeights};
+use super::queue::{pending_cmp, priority, PriorityWeights};
 use crate::cluster::Cluster;
 use crate::workload::JobSpec;
 use crate::{JobId, NodeId, Time};
@@ -34,6 +61,16 @@ pub struct RmsConfig {
     /// Give the queued job that triggered a shrink the maximum priority
     /// (§4.3).  Ablatable.
     pub shrink_priority_boost: bool,
+    /// Record every `telemetry_stride`-th telemetry snapshot.  `1`
+    /// (default) is lossless — identical to the pre-stride behavior at
+    /// paper scale; larger strides downsample the Fig. 6 series on
+    /// multi-thousand-job traces (utilization statistics then become
+    /// approximations); `0` disables telemetry entirely.
+    pub telemetry_stride: usize,
+    /// Reuse the cached priority order of the pending queue when provably
+    /// unchanged (see module docs).  Disabled only by the golden
+    /// determinism test, which compares both paths bit-for-bit.
+    pub cache_pending_order: bool,
 }
 
 impl Default for RmsConfig {
@@ -44,6 +81,8 @@ impl Default for RmsConfig {
             weights: PriorityWeights::default(),
             policy: PolicyConfig::default(),
             shrink_priority_boost: true,
+            telemetry_stride: 1,
+            cache_pending_order: true,
         }
     }
 }
@@ -91,11 +130,37 @@ pub struct Telemetry {
 pub struct Rms {
     pub cfg: RmsConfig,
     pub cluster: Cluster,
-    jobs: HashMap<JobId, Job>,
-    /// Pending (queued) job ids, unordered; ordering happens per pass.
+    /// Pending + active jobs — everything a scheduling pass may touch.
+    live: HashMap<JobId, Job>,
+    /// Completed/cancelled jobs, kept for metrics extraction only.
+    archived: HashMap<JobId, Job>,
+    /// Pending (queued) job ids, unordered; ordering is cached below.
     pending: Vec<JobId>,
+    /// Active (Running | Resizing) job ids, resizers included; BTreeSet so
+    /// the backfill projection iterates deterministically.
+    active: BTreeSet<JobId>,
     next_id: JobId,
     completed_count: usize,
+    /// Pending non-resizer jobs (incremental mirror of `pending` minus
+    /// resizers).
+    pending_user: usize,
+    /// Active non-resizer jobs.
+    active_user: usize,
+    // --- cached priority order of `pending` --------------------------
+    pending_order: Vec<JobId>,
+    order_scratch: Vec<(f64, Time, JobId)>,
+    /// `pending_order` matches `pending` membership and boosts.
+    order_valid: bool,
+    /// Time the cached order was sorted at.
+    order_now: Time,
+    /// Earliest submit time among the cached pending jobs (age-saturation
+    /// reuse bound).
+    order_oldest_submit: Time,
+    // --- reusable scheduling-pass scratch buffers --------------------
+    running_buf: Vec<RunningInfo>,
+    eligible_buf: Vec<PendingInfo>,
+    ends_scratch: Vec<(Time, usize)>,
+    starts_buf: Vec<JobId>,
     /// Starts not yet observed by the execution driver.  Scheduling passes
     /// can run *inside* `dmr_check` (the resizer-job protocol), so drivers
     /// must drain this buffer rather than rely on `schedule`'s return
@@ -103,6 +168,7 @@ pub struct Rms {
     recent_starts: Vec<Started>,
     pub log: EventLog,
     pub telemetry: Telemetry,
+    telemetry_tick: u64,
 }
 
 impl Rms {
@@ -111,13 +177,27 @@ impl Rms {
         Self {
             cfg,
             cluster,
-            jobs: HashMap::new(),
+            live: HashMap::new(),
+            archived: HashMap::new(),
             pending: Vec::new(),
+            active: BTreeSet::new(),
             next_id: 1,
             completed_count: 0,
+            pending_user: 0,
+            active_user: 0,
+            pending_order: Vec::new(),
+            order_scratch: Vec::new(),
+            order_valid: false,
+            order_now: 0.0,
+            order_oldest_submit: f64::INFINITY,
+            running_buf: Vec::new(),
+            eligible_buf: Vec::new(),
+            ends_scratch: Vec::new(),
+            starts_buf: Vec::new(),
             recent_starts: Vec::new(),
             log: EventLog::default(),
             telemetry: Telemetry::default(),
+            telemetry_tick: 0,
         }
     }
 
@@ -130,43 +210,87 @@ impl Rms {
     // Introspection
 
     pub fn job(&self, id: JobId) -> Option<&Job> {
-        self.jobs.get(&id)
+        self.live.get(&id).or_else(|| self.archived.get(&id))
     }
 
+    /// All jobs ever submitted (live first, then archived; order within
+    /// each group is unspecified — metrics sort by submit time).
     pub fn jobs(&self) -> impl Iterator<Item = &Job> {
-        self.jobs.values()
+        self.live.values().chain(self.archived.values())
     }
 
-    /// Pending *user* jobs (resizer jobs excluded).
+    /// Pending *user* jobs (resizer jobs excluded).  O(1).
     pub fn pending_user_jobs(&self) -> usize {
-        self.pending
-            .iter()
-            .filter(|id| !self.jobs[id].is_resizer)
-            .count()
+        self.pending_user
     }
 
+    /// Active (running or resizing) user jobs.  O(1).
     pub fn running_jobs(&self) -> usize {
-        self.jobs.values().filter(|j| j.is_active() && !j.is_resizer).count()
+        self.active_user
     }
 
     pub fn completed_jobs(&self) -> usize {
         self.completed_count
     }
 
-    /// All user jobs have completed (drained workload).
+    /// All user jobs have completed (drained workload).  O(1).
     pub fn all_done(&self) -> bool {
-        self.pending.is_empty()
-            && self.jobs.values().all(|j| {
-                j.is_resizer || matches!(j.state, JobState::Completed | JobState::Cancelled)
-            })
+        self.pending.is_empty() && self.active_user == 0
     }
 
-    fn view(&self, now: Time) -> SystemView {
-        let head = self.ordered_pending(now).into_iter().find(|id| !self.jobs[id].is_resizer);
+    // ------------------------------------------------------------------
+    // Cached pending-queue order
+
+    /// Recompute or reuse the priority order of the pending queue at
+    /// `now`.  Reuse is sound when (a) membership and boosts are
+    /// unchanged (`order_valid`), and (b) either the timestamp is the
+    /// same, or every pending job is still below the age-saturation
+    /// horizon at `now` — then all age factors have grown by the same
+    /// amount since the cached sort and pairwise order is preserved.
+    fn refresh_pending_order(&mut self, now: Time) {
+        let reuse = self.order_valid
+            && self.cfg.cache_pending_order
+            && (now == self.order_now
+                || (now > self.order_now
+                    && now - self.order_oldest_submit < self.cfg.weights.age_horizon));
+        if reuse {
+            return;
+        }
+        let total = self.cluster.total();
+        self.order_scratch.clear();
+        let mut oldest = f64::INFINITY;
+        for &id in &self.pending {
+            let j = &self.live[&id];
+            oldest = oldest.min(j.submit_time);
+            self.order_scratch.push((
+                priority(j, &self.cfg.weights, total, now),
+                j.submit_time,
+                id,
+            ));
+        }
+        self.order_scratch.sort_by(pending_cmp);
+        self.pending_order.clear();
+        self.pending_order.extend(self.order_scratch.iter().map(|k| k.2));
+        self.order_valid = true;
+        self.order_now = now;
+        self.order_oldest_submit = oldest;
+    }
+
+    fn invalidate_pending_order(&mut self) {
+        self.order_valid = false;
+    }
+
+    fn view(&mut self, now: Time) -> SystemView {
+        self.refresh_pending_order(now);
+        let head = self
+            .pending_order
+            .iter()
+            .copied()
+            .find(|id| !self.live[id].is_resizer);
         SystemView {
             available: self.cluster.available(),
-            pending_jobs: self.pending_user_jobs(),
-            head_need: head.map(|id| self.jobs[&id].spec.procs),
+            pending_jobs: self.pending_user,
+            head_need: head.map(|id| self.live[&id].spec.procs),
         }
     }
 
@@ -177,21 +301,28 @@ impl Rms {
         let id = self.next_id;
         self.next_id += 1;
         let job = Job::new(id, spec, now);
-        self.jobs.insert(id, job);
+        self.live.insert(id, job);
         self.pending.push(id);
+        self.pending_user += 1;
+        self.invalidate_pending_order();
         self.log.push(RmsEvent::Submitted { job: id, time: now });
         id
     }
 
     /// Mark a running job finished and release its nodes.
     pub fn finish(&mut self, id: JobId, now: Time) {
-        let job = self.jobs.get_mut(&id).expect("finish: unknown job");
+        let mut job = self.live.remove(&id).expect("finish: unknown job");
         assert!(job.is_active(), "finish: job {id} not active");
         job.state = JobState::Completed;
         job.end_time = Some(now);
         let nodes = std::mem::take(&mut job.nodes);
         self.cluster.release(id, &nodes).expect("finish: release");
+        self.active.remove(&id);
+        if !job.is_resizer {
+            self.active_user -= 1;
+        }
         self.completed_count += 1;
+        self.archived.insert(id, job);
         self.log.push(RmsEvent::Finished { job: id, time: now });
         self.snapshot(now);
     }
@@ -199,22 +330,35 @@ impl Rms {
     /// Cancel a pending job (also used for resizer jobs).
     pub fn cancel(&mut self, id: JobId, now: Time) {
         if let Some(pos) = self.pending.iter().position(|&p| p == id) {
-            self.pending.remove(pos);
+            // Ordering is recomputed per pass from the cached keys, so the
+            // queue position is irrelevant: O(1) swap_remove, not O(n).
+            self.pending.swap_remove(pos);
+            self.invalidate_pending_order();
         }
-        let job = self.jobs.get_mut(&id).expect("cancel: unknown job");
+        let mut job = self.live.remove(&id).expect("cancel: unknown job");
+        if job.state == JobState::Pending && !job.is_resizer {
+            self.pending_user -= 1;
+        }
+        if job.is_active() {
+            self.active.remove(&id);
+            if !job.is_resizer {
+                self.active_user -= 1;
+            }
+        }
         if !job.nodes.is_empty() {
             let nodes = std::mem::take(&mut job.nodes);
             self.cluster.release(id, &nodes).expect("cancel: release");
         }
         job.state = JobState::Cancelled;
         job.end_time = Some(now);
+        self.archived.insert(id, job);
         self.log.push(RmsEvent::Cancelled { job: id, time: now });
     }
 
     /// Refresh the scheduler's estimate of a running job's end time
     /// (feeds backfill reservations).
     pub fn set_expected_end(&mut self, id: JobId, t: Time) {
-        if let Some(j) = self.jobs.get_mut(&id) {
+        if let Some(j) = self.live.get_mut(&id) {
             j.expected_end = Some(t);
         }
     }
@@ -222,65 +366,81 @@ impl Rms {
     // ------------------------------------------------------------------
     // Scheduling pass
 
-    fn ordered_pending(&self, now: Time) -> Vec<JobId> {
-        let total = self.cluster.total();
-        order_pending(&self.pending, |id| {
-            let j = &self.jobs[&id];
-            (priority(j, &self.cfg.weights, total, now), j.submit_time, id)
-        })
-    }
-
     /// One scheduling pass: start every pending job the policy allows.
     /// Returns the started jobs with their allocations.
+    ///
+    /// Cost: O(pending + active) — completed jobs are never visited, and
+    /// the pass reuses the Rms-owned scratch buffers.
     pub fn schedule(&mut self, now: Time) -> Vec<Started> {
-        let ordered = self.ordered_pending(now);
+        if self.pending.is_empty() {
+            return Vec::new();
+        }
+        self.refresh_pending_order(now);
+
         // Resizer jobs whose original is not active cannot start
         // (dependency); they are filtered from this pass.
-        let eligible: Vec<PendingInfo> = ordered
-            .iter()
-            .filter(|id| {
-                let j = &self.jobs[id];
-                match j.depends_on {
-                    Some(dep) => self.jobs.get(&dep).map(|d| d.is_active()).unwrap_or(false),
-                    None => true,
-                }
-            })
-            .map(|&id| {
-                let j = &self.jobs[&id];
-                PendingInfo { id, procs: j.spec.procs, est_duration: j.spec.est_duration() }
-            })
-            .collect();
-        let running: Vec<RunningInfo> = self
-            .jobs
-            .values()
-            .filter(|j| j.is_active())
-            .map(|j| RunningInfo {
+        self.eligible_buf.clear();
+        for &id in &self.pending_order {
+            let j = &self.live[&id];
+            let eligible = match j.depends_on {
+                Some(dep) => self.live.get(&dep).map(|d| d.is_active()).unwrap_or(false),
+                None => true,
+            };
+            if eligible {
+                self.eligible_buf.push(PendingInfo {
+                    id,
+                    procs: j.spec.procs,
+                    est_duration: j.spec.est_duration(),
+                });
+            }
+        }
+        self.running_buf.clear();
+        for &id in &self.active {
+            let j = &self.live[&id];
+            self.running_buf.push(RunningInfo {
                 procs: j.procs(),
                 expected_end: j.expected_end.unwrap_or(now + j.spec.est_duration()),
-            })
-            .collect();
+            });
+        }
 
-        let starts = plan_starts(
+        let mut starts = std::mem::take(&mut self.starts_buf);
+        plan_starts_into(
             self.cluster.available(),
-            &running,
-            &eligible,
+            &self.running_buf,
+            &self.eligible_buf,
             now,
             self.cfg.backfill,
+            &mut self.ends_scratch,
+            &mut starts,
         );
 
         let mut out = Vec::with_capacity(starts.len());
-        for id in starts {
-            let procs = self.jobs[&id].spec.procs;
+        let mut started_user = 0usize;
+        for &id in &starts {
+            let procs = self.live[&id].spec.procs;
             let nodes = self.cluster.alloc(id, procs).expect("schedule: alloc");
-            let job = self.jobs.get_mut(&id).unwrap();
+            let job = self.live.get_mut(&id).unwrap();
             job.nodes = nodes.clone();
             job.state = JobState::Running;
             job.start_time = Some(now);
             job.qos_boost = false; // boost consumed
-            self.pending.retain(|&p| p != id);
+            if !job.is_resizer {
+                started_user += 1;
+            }
+            self.active.insert(id);
             self.log.push(RmsEvent::Started { job: id, time: now, procs });
             out.push(Started { job: id, nodes });
         }
+        if !starts.is_empty() {
+            // Single O(pending) sweep instead of one retain per start.
+            let mut started_ids = starts.clone();
+            started_ids.sort_unstable();
+            self.pending.retain(|p| started_ids.binary_search(p).is_err());
+            self.pending_user -= started_user;
+            self.active_user += started_user;
+            self.invalidate_pending_order();
+        }
+        self.starts_buf = starts;
         if !out.is_empty() {
             self.recent_starts.extend(out.iter().cloned());
             self.snapshot(now);
@@ -294,7 +454,7 @@ impl Rms {
     /// Evaluate a DMR call from `id` (synchronous semantics: decision and
     /// resource movement happen now).
     pub fn dmr_check(&mut self, id: JobId, req: &DmrRequest, now: Time) -> DmrOutcome {
-        let current = self.jobs[&id].procs();
+        let current = self.live[&id].procs();
         let view = self.view(now);
         let action = decide(&self.cfg.policy, current, req, &view);
         self.log.push(RmsEvent::DmrDecision { job: id, time: now, action });
@@ -308,9 +468,10 @@ impl Rms {
     /// Policy-only evaluation (the asynchronous path computes the decision
     /// ahead of time and applies it at the *next* reconfiguring point —
     /// §5.1; the queue may change in between, which is exactly the hazard
-    /// Table 2 quantifies).
-    pub fn dmr_peek(&self, id: JobId, req: &DmrRequest, now: Time) -> Action {
-        let current = self.jobs[&id].procs();
+    /// Table 2 quantifies).  `&mut self` only to refresh the cached queue
+    /// order; no observable state changes.
+    pub fn dmr_peek(&mut self, id: JobId, req: &DmrRequest, now: Time) -> Action {
+        let current = self.live[&id].procs();
         let view = self.view(now);
         decide(&self.cfg.policy, current, req, &view)
     }
@@ -328,7 +489,7 @@ impl Rms {
         match action {
             Action::NoAction => Ok(DmrOutcome::NoAction),
             Action::Expand { to } => {
-                let current = self.jobs[&id].procs();
+                let current = self.live[&id].procs();
                 if to <= current {
                     return Ok(DmrOutcome::NoAction);
                 }
@@ -341,7 +502,7 @@ impl Rms {
                 Ok(self.begin_expand(id, to, now))
             }
             Action::Shrink { to } => {
-                let current = self.jobs[&id].procs();
+                let current = self.live[&id].procs();
                 if to >= current {
                     return Ok(DmrOutcome::NoAction);
                 }
@@ -354,23 +515,27 @@ impl Rms {
     /// dependency on the original), let a scheduling pass allocate it,
     /// transfer its nodes to the original job, cancel it.
     fn begin_expand(&mut self, id: JobId, to: usize, now: Time) -> DmrOutcome {
-        let current = self.jobs[&id].procs();
+        let current = self.live[&id].procs();
         assert!(to > current, "begin_expand: {to} <= {current}");
         let delta = to - current;
 
         // Resizer job: requests exactly the *difference*, "enabling the
         // original nodes to be reused".
-        let mut rspec = self.jobs[&id].spec.clone();
+        let mut rspec = self.live[&id].spec.clone();
         rspec.name = format!("{}-resizer", rspec.name);
         rspec.procs = delta;
         rspec.malleable = false;
         let rj = self.submit(rspec, now);
         {
-            let r = self.jobs.get_mut(&rj).unwrap();
+            let r = self.live.get_mut(&rj).unwrap();
             r.is_resizer = true;
             r.qos_boost = true; // "RJ is set to the maximum priority"
             r.depends_on = Some(id);
         }
+        // The freshly-submitted job is a resizer after all, and its boost
+        // changed: fix the user count and drop the cached order.
+        self.pending_user -= 1;
+        self.invalidate_pending_order();
 
         let started = self.schedule(now);
         let got = started.iter().find(|s| s.job == rj).map(|s| s.nodes.clone());
@@ -380,11 +545,11 @@ impl Rms {
                 // B to 0 nodes / update job A to NA+NB), then cancel RJ.
                 self.cluster.transfer(rj, id, &new_nodes).expect("expand: transfer");
                 {
-                    let r = self.jobs.get_mut(&rj).unwrap();
+                    let r = self.live.get_mut(&rj).unwrap();
                     r.nodes.clear();
                 }
                 self.cancel(rj, now);
-                let job = self.jobs.get_mut(&id).unwrap();
+                let job = self.live.get_mut(&id).unwrap();
                 job.nodes.extend_from_slice(&new_nodes);
                 job.state = JobState::Resizing;
                 job.resize_log.push(ResizeEvent { time: now, from_procs: current, to_procs: to });
@@ -407,23 +572,26 @@ impl Rms {
     /// allocation), boost the queued job that triggered the shrink, and
     /// hand the node list to the runtime for the ACK-synchronized drain.
     fn begin_shrink(&mut self, id: JobId, to: usize, now: Time) -> DmrOutcome {
-        let current = self.jobs[&id].procs();
+        let current = self.live[&id].procs();
         assert!(to < current, "begin_shrink: {to} >= {current}");
-        let release: Vec<NodeId> = self.jobs[&id].nodes[to..].to_vec();
+        let release: Vec<NodeId> = self.live[&id].nodes[to..].to_vec();
 
         if self.cfg.shrink_priority_boost {
             // "the queued job that has triggered the shrinking event will
             // be assigned the maximum priority".
+            self.refresh_pending_order(now);
             if let Some(head) = self
-                .ordered_pending(now)
-                .into_iter()
-                .find(|hid| !self.jobs[hid].is_resizer)
+                .pending_order
+                .iter()
+                .copied()
+                .find(|hid| !self.live[hid].is_resizer)
             {
-                self.jobs.get_mut(&head).unwrap().qos_boost = true;
+                self.live.get_mut(&head).unwrap().qos_boost = true;
+                self.invalidate_pending_order();
             }
         }
 
-        let job = self.jobs.get_mut(&id).unwrap();
+        let job = self.live.get_mut(&id).unwrap();
         job.state = JobState::Resizing;
         DmrOutcome::Shrink { to, release_nodes: release }
     }
@@ -432,7 +600,7 @@ impl Rms {
     /// the runtime collected all ACKs (§5.2.2).
     pub fn commit_shrink_to(&mut self, id: JobId, to: usize, now: Time) {
         let (released, from) = {
-            let job = self.jobs.get_mut(&id).expect("commit_shrink_to");
+            let job = self.live.get_mut(&id).expect("commit_shrink_to");
             assert_eq!(job.state, JobState::Resizing, "job {id} not resizing");
             let from = job.nodes.len();
             assert!(to < from);
@@ -440,7 +608,7 @@ impl Rms {
             (released, from)
         };
         self.cluster.release(id, &released).expect("shrink: release");
-        let job = self.jobs.get_mut(&id).unwrap();
+        let job = self.live.get_mut(&id).unwrap();
         job.state = JobState::Running;
         job.resize_log.push(ResizeEvent { time: now, from_procs: from, to_procs: to });
         self.log.push(RmsEvent::Shrunk { job: id, time: now, from, to });
@@ -449,7 +617,7 @@ impl Rms {
 
     /// Commit an expansion after the runtime spawned the new processes.
     pub fn commit_resize(&mut self, id: JobId, now: Time) {
-        let job = self.jobs.get_mut(&id).expect("commit_resize");
+        let job = self.live.get_mut(&id).expect("commit_resize");
         assert_eq!(job.state, JobState::Resizing, "job {id} not resizing");
         job.state = JobState::Running;
         let _ = now;
@@ -459,6 +627,14 @@ impl Rms {
     // Telemetry
 
     fn snapshot(&mut self, now: Time) {
+        let stride = self.cfg.telemetry_stride;
+        if stride == 0 {
+            return;
+        }
+        self.telemetry_tick += 1;
+        if stride > 1 && self.telemetry_tick % stride as u64 != 0 {
+            return;
+        }
         self.telemetry
             .alloc_series
             .push((now, self.cluster.allocated() as f64));
@@ -470,13 +646,16 @@ impl Rms {
             .push((now, self.completed_count as f64));
     }
 
-    /// Consistency checks used by property tests.
+    /// Consistency checks used by property tests.  Deliberately O(all
+    /// jobs): re-derives every incremental counter from scratch and
+    /// compares.
     pub fn check_invariants(&self) -> bool {
         if !self.cluster.check_invariants() {
             return false;
         }
-        // Every active job's nodes are allocated to it.
-        for j in self.jobs.values() {
+        // Every active job's nodes are allocated to it; archived jobs
+        // hold nothing.
+        for j in self.live.values().chain(self.archived.values()) {
             if j.is_active() {
                 for &n in &j.nodes {
                     if *self.cluster.state(n) != crate::cluster::NodeState::Allocated(j.id) {
@@ -489,14 +668,43 @@ impl Rms {
                 return false;
             }
         }
-        // No node is owned by two jobs (implied by cluster states + above).
+        // The archive holds exactly the terminal jobs.
+        if self.live.values().any(|j| matches!(j.state, JobState::Completed | JobState::Cancelled))
+        {
+            return false;
+        }
+        if self.archived.values().any(|j| !matches!(j.state, JobState::Completed | JobState::Cancelled))
+        {
+            return false;
+        }
         // Pending jobs hold no nodes.
         for id in &self.pending {
-            if !self.jobs[id].nodes.is_empty() {
+            if !self.live[id].nodes.is_empty() {
                 return false;
             }
         }
-        true
+        // Incremental counters/indices re-derived from scratch.
+        let pending_user = self
+            .pending
+            .iter()
+            .filter(|id| !self.live[id].is_resizer)
+            .count();
+        let active_user = self
+            .live
+            .values()
+            .filter(|j| j.is_active() && !j.is_resizer)
+            .count();
+        let active_all: BTreeSet<JobId> =
+            self.live.values().filter(|j| j.is_active()).map(|j| j.id).collect();
+        let completed = self
+            .archived
+            .values()
+            .filter(|j| j.state == JobState::Completed)
+            .count();
+        pending_user == self.pending_user
+            && active_user == self.active_user
+            && active_all == self.active
+            && completed == self.completed_count
     }
 }
 
@@ -639,5 +847,92 @@ mod tests {
         assert!(matches!(out, DmrOutcome::Shrink { .. }));
         assert!(rms.job(c).unwrap().qos_boost);
         assert!(!rms.job(d).unwrap().qos_boost);
+    }
+
+    #[test]
+    fn cancel_then_schedule() {
+        // Cancel a queued job (exercising the swap_remove path with a job
+        // in the *middle* of the pending vec), then verify the next pass
+        // starts the remaining jobs in the correct priority order.
+        let mut rms = small_rms(32);
+        let a = rms.submit(spec(AppKind::Cg, 0.0), 0.0); // 32 nodes
+        rms.schedule(0.0); // a takes the whole machine
+        let b = rms.submit(spec(AppKind::Cg, 1.0), 1.0);
+        let c = rms.submit(spec(AppKind::Cg, 2.0), 2.0);
+        let d = rms.submit(spec(AppKind::Cg, 3.0), 3.0);
+        assert_eq!(rms.pending_user_jobs(), 3);
+
+        rms.cancel(c, 4.0); // middle of `pending`
+        assert_eq!(rms.pending_user_jobs(), 2);
+        assert_eq!(rms.job(c).unwrap().state, JobState::Cancelled);
+        assert!(rms.check_invariants());
+
+        // Free the machine: the oldest surviving job (b) starts first,
+        // regardless of swap_remove having shuffled the raw vec.
+        rms.finish(a, 10.0);
+        let started = rms.schedule(10.0);
+        assert_eq!(started.len(), 1);
+        assert_eq!(started[0].job, b);
+        rms.finish(b, 20.0);
+        let started = rms.schedule(20.0);
+        assert_eq!(started.len(), 1);
+        assert_eq!(started[0].job, d);
+        rms.finish(d, 30.0);
+        assert!(rms.all_done());
+        assert!(rms.check_invariants());
+    }
+
+    #[test]
+    fn cached_order_matches_fresh_sort() {
+        // Same submission stream, cache on vs off: identical event logs.
+        let run = |cache: bool| {
+            let mut rms = Rms::new(RmsConfig {
+                nodes: 64,
+                cache_pending_order: cache,
+                ..Default::default()
+            });
+            let mut ids = Vec::new();
+            for i in 0..12 {
+                ids.push(rms.submit(spec(AppKind::Cg, i as f64), i as f64));
+            }
+            rms.schedule(12.0);
+            // age the queue past events at several timestamps
+            for t in [13.0, 100.0, 2000.0, 5000.0] {
+                rms.schedule(t);
+            }
+            let running: Vec<JobId> = ids
+                .iter()
+                .copied()
+                .filter(|&id| rms.job(id).unwrap().is_active())
+                .collect();
+            for id in running {
+                rms.finish(id, 6000.0);
+                rms.schedule(6000.0);
+            }
+            assert!(rms.check_invariants());
+            rms.log.digest()
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn telemetry_stride_downsamples() {
+        let run = |stride: usize| {
+            let mut rms = Rms::new(RmsConfig {
+                nodes: 64,
+                telemetry_stride: stride,
+                ..Default::default()
+            });
+            for i in 0..8 {
+                let id = rms.submit(spec(AppKind::NBody, i as f64), i as f64);
+                rms.schedule(i as f64);
+                rms.finish(id, i as f64 + 0.5);
+            }
+            rms.telemetry.alloc_series.len()
+        };
+        let lossless = run(1);
+        assert_eq!(lossless, 16, "one snapshot per start + finish");
+        assert_eq!(run(4), lossless / 4);
+        assert_eq!(run(0), 0, "stride 0 disables telemetry");
     }
 }

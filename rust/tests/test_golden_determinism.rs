@@ -1,0 +1,155 @@
+//! Golden behavior-preservation tests for the O(active) hot-path
+//! refactor: the optimized scheduling/DES paths must produce
+//! **bit-identical** event logs, makespans and campaign aggregates.
+//!
+//! Three layers of protection:
+//!
+//! 1. The cached pending-queue order (the one optimization with a
+//!    nontrivial reuse rule) is compared against the always-re-sort
+//!    reference path (`RmsConfig::cache_pending_order = false`) across
+//!    fixed/sync/async modes.
+//! 2. Campaign aggregate CSV rows are compared across worker counts.
+//! 3. A recorded fixture (`rust/tests/fixtures/golden_hotpath.txt`) locks
+//!    the exact event stream across PRs.  On the first run the fixture is
+//!    recorded; afterwards any drift fails the test.  Rerun with
+//!    `GOLDEN_UPDATE=1` to re-record after an *intentional* behavior
+//!    change (and say why in the PR).  CI refuses a tree where the
+//!    fixture had to be recorded (see the "Golden fixture is committed"
+//!    step in `.github/workflows/ci.yml`) — commit the recorded file,
+//!    otherwise the drift lock is inert.
+
+use std::fs;
+use std::path::PathBuf;
+
+use dmr::campaign::{self, CampaignSpec};
+use dmr::des::{DesConfig, Engine};
+use dmr::dmr::SchedMode;
+use dmr::metrics::report;
+use dmr::rms::RmsConfig;
+use dmr::workload;
+
+/// One run reduced to a digest line: event count, event-log FNV digest,
+/// makespan bits.  Equal lines <=> bit-identical observable behavior.
+fn run_digest(mode: &str, cache_pending_order: bool) -> String {
+    let w = workload::generate(40, 17);
+    let (sched, flexible) = match mode {
+        "fixed" => (SchedMode::Sync, false),
+        "sync" => (SchedMode::Sync, true),
+        "async" => (SchedMode::Async, true),
+        other => panic!("unknown mode {other}"),
+    };
+    let w = if flexible { w } else { w.as_fixed() };
+    let cfg = DesConfig {
+        rms: RmsConfig { nodes: 64, cache_pending_order, ..Default::default() },
+        mode: sched,
+        ..Default::default()
+    };
+    let r = Engine::new(cfg).run(&w, mode);
+    assert_eq!(r.rms.completed_jobs(), 40, "{mode}: workload must drain");
+    assert!(r.rms.check_invariants());
+    format!(
+        "{mode} events={} log={:016x} makespan={:016x}",
+        r.events,
+        r.rms.log.digest(),
+        r.makespan.to_bits()
+    )
+}
+
+fn campaign_digest() -> String {
+    let spec = CampaignSpec::from_toml_str(
+        r#"
+name = "golden"
+nodes = [32, 64]
+modes = ["fixed", "sync", "async"]
+seeds = [1, 2]
+[[workload]]
+kind = "feitelson"
+jobs = 15
+"#,
+    )
+    .unwrap();
+    let res = campaign::run_campaign(&spec, 2).unwrap();
+    let aggs = campaign::aggregate(&res.records);
+    let rows = report::campaign_agg_rows(&aggs);
+    // Flatten the CSV rows into one stable line.
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for cell in rows.iter().flatten() {
+        for b in cell.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    format!("campaign rows={} agg={h:016x}", rows.len())
+}
+
+/// The cached pending order must be indistinguishable from re-sorting on
+/// every pass — across all three scheduling modes.
+#[test]
+fn optimized_path_matches_uncached_reference() {
+    for mode in ["fixed", "sync", "async"] {
+        let fast = run_digest(mode, true);
+        let slow = run_digest(mode, false);
+        assert_eq!(fast, slow, "{mode}: cached pending order changed behavior");
+    }
+}
+
+/// Repeated runs are bit-identical (no hidden iteration-order or
+/// allocation-order dependence anywhere in the hot path).
+#[test]
+fn repeated_runs_bit_identical() {
+    for mode in ["fixed", "sync", "async"] {
+        assert_eq!(run_digest(mode, true), run_digest(mode, true), "{mode}");
+    }
+}
+
+/// Campaign aggregates must not depend on the worker count.
+#[test]
+fn campaign_aggregates_identical_across_worker_counts() {
+    let spec = CampaignSpec::from_toml_str(
+        r#"
+name = "golden-workers"
+nodes = [32]
+modes = ["fixed", "sync"]
+seeds = [1, 2, 3]
+[[workload]]
+kind = "feitelson"
+jobs = 10
+"#,
+    )
+    .unwrap();
+    let rows = |workers: usize| {
+        let res = campaign::run_campaign(&spec, workers).unwrap();
+        report::campaign_agg_rows(&campaign::aggregate(&res.records))
+    };
+    let base = rows(1);
+    assert_eq!(base, rows(3), "aggregates must not depend on worker count");
+}
+
+/// Cross-PR drift lock: compare against (or record) the golden fixture.
+#[test]
+fn golden_fixture_locks_event_stream() {
+    let mut lines: Vec<String> = ["fixed", "sync", "async"]
+        .iter()
+        .map(|m| run_digest(m, true))
+        .collect();
+    lines.push(campaign_digest());
+    let body = format!("{}\n", lines.join("\n"));
+
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/golden_hotpath.txt");
+    let update = std::env::var("GOLDEN_UPDATE").map(|v| v == "1").unwrap_or(false);
+    if update || !path.exists() {
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        fs::write(&path, &body).unwrap();
+        eprintln!("golden fixture recorded at {}", path.display());
+        return;
+    }
+    let want = fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        body, want,
+        "scheduling behavior drifted from the recorded golden fixture \
+         ({}); if the change is intentional, re-record with GOLDEN_UPDATE=1 \
+         and justify it in the PR",
+        path.display()
+    );
+}
