@@ -44,7 +44,7 @@ fn synth_trace(jobs: usize, seed: u64) -> swf::SwfTrace {
         let procs = 1usize << rng.below(8); // 1..=128
         let runtime = 60.0 + rng.exp(600.0);
         max_procs = max_procs.max(procs);
-        records.push(swf::SwfRecord { job_id: i as u64 + 1, submit: t, runtime, procs });
+        records.push(swf::SwfRecord { job_id: i as u64 + 1, submit: t, runtime, procs, status: 1 });
     }
     swf::SwfTrace { records, stats: swf::SwfStats::default(), max_procs }
 }

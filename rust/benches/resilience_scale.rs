@@ -1,0 +1,148 @@
+//! Bench: resilience at scale — DES events/s on fault-heavy 1k-job
+//! workloads, the robustness axis of the repo's perf trajectory.  Emits
+//! the machine-readable `BENCH_resilience.json` (same schema as
+//! `BENCH_hotpath.json`: per-scenario events/s, overall runs/s, makespan
+//! checksums) so future PRs can be compared against it.
+//!
+//! Every scenario runs **twice**; the second (warm) run is measured and
+//! the two runs' checksums (event-log digest + makespan bits — failure
+//! events included) must match exactly — CI fails on a determinism
+//! mismatch or a panic, never on timing.
+//!
+//! Quick mode (default, CI): 1k-job workloads on 256 nodes.
+//! `BENCH_FULL=1` adds 5k-job runs.
+
+mod common;
+
+use std::time::Instant;
+
+use dmr::des::{DesConfig, Engine};
+use dmr::dmr::SchedMode;
+use dmr::metrics::report::{bench_checksum, bench_json, BenchRecord};
+use dmr::resilience::{
+    DrainSet, DrainWindow, FaultKind, FaultSpec, FaultTraceEvent, RecoveryConfig,
+    ResilienceConfig,
+};
+use dmr::rms::RmsConfig;
+use dmr::util::table::Table;
+use dmr::workload::{self, WorkloadSpec};
+
+struct Case {
+    jobs: usize,
+    nodes: usize,
+    mode: &'static str, // fixed | sync
+}
+
+/// A fault-heavy machine model: per-node MTBF tuned to land a few dozen
+/// failures across the run, one scripted early failure (so the fault path
+/// is exercised even if the sampled times drift past the makespan) and a
+/// mid-run 16-node drain window.
+fn fault_model() -> ResilienceConfig {
+    ResilienceConfig {
+        faults: FaultSpec {
+            mtbf: 500_000.0,
+            mttr: 2_000.0,
+            scripted: vec![FaultTraceEvent {
+                at: 1_000.0,
+                node: 0,
+                kind: FaultKind::Fail,
+            }],
+            drains: vec![DrainWindow {
+                start: 5_000.0,
+                end: 12_000.0,
+                nodes: DrainSet::Count(16),
+            }],
+        },
+        recovery: RecoveryConfig { checkpoint_interval: 600.0, ..Default::default() },
+    }
+}
+
+fn materialize(case: &Case) -> WorkloadSpec {
+    let w = workload::generate(case.jobs, common::SEED);
+    if case.mode == "fixed" {
+        w.as_fixed()
+    } else {
+        w
+    }
+}
+
+fn run_once(case: &Case, w: &WorkloadSpec) -> (u64, f64, f64, String, u64, u64) {
+    let cfg = DesConfig {
+        rms: RmsConfig { nodes: case.nodes, ..Default::default() },
+        mode: SchedMode::Sync,
+        resilience: fault_model(),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let r = Engine::new(cfg).run(w, "resilience");
+    let wall = t0.elapsed().as_secs_f64();
+    let checksum = bench_checksum(&r.rms.log, r.makespan);
+    (
+        r.events,
+        wall,
+        r.makespan,
+        checksum,
+        r.resilience.node_failures,
+        r.resilience.rescued + r.resilience.requeued,
+    )
+}
+
+fn main() {
+    common::banner("resilience_scale", "DES events/s under fault-heavy 1k-job workloads");
+    let mut cases = vec![
+        Case { jobs: 1000, nodes: 256, mode: "fixed" },
+        Case { jobs: 1000, nodes: 256, mode: "sync" },
+    ];
+    if common::full() {
+        cases.extend([
+            Case { jobs: 5000, nodes: 256, mode: "fixed" },
+            Case { jobs: 5000, nodes: 256, mode: "sync" },
+        ]);
+    }
+
+    let mut t = Table::new(vec![
+        "Scenario", "Events", "Wall (s)", "Events/s", "Makespan (s)", "Failures",
+        "Recoveries", "Checksum",
+    ]);
+    let mut records = Vec::with_capacity(cases.len());
+    for case in &cases {
+        let scenario = format!("faulty-feitelson{}-n{}-{}", case.jobs, case.nodes, case.mode);
+        let w = materialize(case);
+        // Cold run: determinism reference.  Warm run: the measurement.
+        let (ev_a, _, mk_a, sum_a, _, _) = run_once(case, &w);
+        let (ev_b, wall, mk_b, sum_b, failures, recoveries) = run_once(case, &w);
+        assert_eq!(
+            sum_a, sum_b,
+            "{scenario}: determinism checksum mismatch (makespans {mk_a} / {mk_b})"
+        );
+        assert_eq!(ev_a, ev_b, "{scenario}: event count mismatch");
+        assert!(failures > 0, "{scenario}: fault injection never fired");
+        t.row(vec![
+            scenario.clone(),
+            ev_b.to_string(),
+            format!("{wall:.3}"),
+            format!("{:.0}", ev_b as f64 / wall.max(1e-9)),
+            format!("{mk_b:.1}"),
+            failures.to_string(),
+            recoveries.to_string(),
+            sum_b.clone(),
+        ]);
+        records.push(BenchRecord {
+            scenario,
+            workload: "feitelson".to_string(),
+            jobs: case.jobs,
+            nodes: case.nodes,
+            mode: case.mode.to_string(),
+            events: ev_b,
+            wall_secs: wall,
+            makespan_s: mk_b,
+            checksum: sum_b,
+        });
+    }
+    println!("{}", t.render());
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_resilience.json".into());
+    let doc = bench_json("resilience_scale", &records).render();
+    std::fs::write(&out, format!("{doc}\n")).expect("write BENCH_resilience.json");
+    println!("wrote {out} ({} scenarios, determinism checksums verified)", records.len());
+}

@@ -28,6 +28,13 @@ pub struct ScenarioAgg {
     pub expands: Summary,
     pub shrinks: Summary,
     pub expand_aborts: Summary,
+    // --- resilience measures (crate::resilience) ----------------------
+    pub interrupted: Summary,
+    pub rescued: Summary,
+    pub requeued: Summary,
+    pub rework_s: Summary,
+    pub lost_node_s: Summary,
+    pub availability_pct: Summary,
 }
 
 impl ScenarioAgg {
@@ -45,6 +52,12 @@ impl ScenarioAgg {
             expands: Summary::new(),
             shrinks: Summary::new(),
             expand_aborts: Summary::new(),
+            interrupted: Summary::new(),
+            rescued: Summary::new(),
+            requeued: Summary::new(),
+            rework_s: Summary::new(),
+            lost_node_s: Summary::new(),
+            availability_pct: Summary::new(),
         }
     }
 
@@ -60,6 +73,12 @@ impl ScenarioAgg {
         self.expands.push(s.actions.expand.count() as f64);
         self.shrinks.push(s.actions.shrink.count() as f64);
         self.expand_aborts.push(s.actions.expand_aborts as f64);
+        self.interrupted.push(s.resilience.interrupted as f64);
+        self.rescued.push(s.resilience.rescued as f64);
+        self.requeued.push(s.resilience.requeued as f64);
+        self.rework_s.push(s.resilience.rework_time);
+        self.lost_node_s.push(s.resilience.lost_node_seconds);
+        self.availability_pct.push(s.resilience.availability * 100.0);
     }
 }
 

@@ -17,6 +17,7 @@ use anyhow::{Context, Result};
 use super::spec::{CampaignSpec, RunPlan, WorkloadSource};
 use crate::des::{DesConfig, Engine};
 use crate::metrics::RunSummary;
+use crate::resilience::{FaultSpec, RecoveryConfig, ResilienceConfig};
 use crate::rms::{PolicyConfig, RmsConfig};
 use crate::workload::{self, swf, BurstLullParams, FeitelsonParams, WorkloadSpec};
 
@@ -139,6 +140,18 @@ fn execute_plan(
         },
         mode,
         seed: plan.seed,
+        resilience: ResilienceConfig {
+            faults: FaultSpec {
+                mtbf: plan.mtbf,
+                mttr: spec.faults.mttr,
+                scripted: spec.faults.scripted.clone(),
+                drains: spec.faults.drains.clone(),
+            },
+            recovery: RecoveryConfig {
+                checkpoint_interval: plan.checkpoint_interval,
+                ..Default::default()
+            },
+        },
         ..Default::default()
     };
     let jobs = w.len();

@@ -11,6 +11,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::dmr::SchedMode;
+use crate::resilience::{DrainSet, DrainWindow, FaultKind, FaultTraceEvent};
 use crate::util::json::Json;
 use crate::util::toml;
 use crate::workload::swf::SwfOptions;
@@ -115,6 +116,44 @@ impl PolicyAxis {
     }
 }
 
+/// The `[faults]` sweep axis ([`crate::resilience`]): per-node MTBF and
+/// checkpoint interval are sweepable lists; the repair time, scripted
+/// fault trace and drain schedule are shared by every scenario so rigid
+/// and malleable runs face the *same* machine timeline.
+#[derive(Debug, Clone)]
+pub struct FaultAxis {
+    /// Mean time between failures per node, seconds (`0` = no random
+    /// failures).  Sweepable.
+    pub mtbf: Vec<f64>,
+    /// Mean time to repair, seconds.
+    pub mttr: f64,
+    /// Checkpoint interval for the rework model, seconds (`0` = no
+    /// checkpointing).  Sweepable.
+    pub checkpoint_interval: Vec<f64>,
+    /// Scripted `fail node=N at t` / `repair at t` events.
+    pub scripted: Vec<FaultTraceEvent>,
+    /// Scheduled maintenance drain windows.
+    pub drains: Vec<DrainWindow>,
+}
+
+impl Default for FaultAxis {
+    fn default() -> Self {
+        FaultAxis {
+            mtbf: vec![0.0],
+            mttr: 900.0,
+            checkpoint_interval: vec![600.0],
+            scripted: Vec::new(),
+            drains: Vec::new(),
+        }
+    }
+}
+
+impl FaultAxis {
+    fn swept(&self) -> bool {
+        self.mtbf.len() > 1 || self.checkpoint_interval.len() > 1
+    }
+}
+
 /// One fully-resolved point of the matrix.
 #[derive(Debug, Clone)]
 pub struct RunPlan {
@@ -133,6 +172,10 @@ pub struct RunPlan {
     pub shrink_boost: bool,
     pub honor_preference: bool,
     pub wide_optimization: bool,
+    /// Per-node MTBF of this matrix point (0 = no random failures).
+    pub mtbf: f64,
+    /// Checkpoint interval of this matrix point.
+    pub checkpoint_interval: f64,
 }
 
 /// A parsed campaign specification.
@@ -148,6 +191,7 @@ pub struct CampaignSpec {
     pub modes: Vec<RunMode>,
     pub seeds: Vec<u64>,
     pub policy: PolicyAxis,
+    pub faults: FaultAxis,
 }
 
 impl CampaignSpec {
@@ -244,7 +288,23 @@ impl CampaignSpec {
             },
         };
 
-        Ok(CampaignSpec { name, output_dir, workers, workloads, nodes, modes, seeds, policy })
+        let max_nodes = nodes.iter().copied().max().unwrap_or(0);
+        let faults = match v.get("faults") {
+            None => FaultAxis::default(),
+            Some(f) => parse_faults(f, max_nodes)?,
+        };
+
+        Ok(CampaignSpec {
+            name,
+            output_dir,
+            workers,
+            workloads,
+            nodes,
+            modes,
+            seeds,
+            policy,
+            faults,
+        })
     }
 
     /// Number of runs the matrix expands to.
@@ -257,6 +317,8 @@ impl CampaignSpec {
             * self.policy.shrink_boost.len()
             * self.policy.honor_preference.len()
             * self.policy.wide_optimization.len()
+            * self.faults.mtbf.len()
+            * self.faults.checkpoint_interval.len()
     }
 
     /// Expand the cartesian matrix into the flat, deterministic run list.
@@ -282,6 +344,7 @@ impl CampaignSpec {
                 })
                 .collect()
         };
+        let faults_swept = self.faults.swept();
         for wi in 0..self.workloads.len() {
             for &nodes in &self.nodes {
                 for &mode in &self.modes {
@@ -289,31 +352,48 @@ impl CampaignSpec {
                         for &shrink_boost in &self.policy.shrink_boost {
                             for &honor_preference in &self.policy.honor_preference {
                                 for &wide_optimization in &self.policy.wide_optimization {
-                                    let mut scenario =
-                                        format!("{}-n{}-{}", labels[wi], nodes, mode.label());
-                                    if swept {
-                                        scenario.push_str(&format!(
-                                            "-bf{}-sb{}-hp{}-wo{}",
-                                            u8::from(backfill),
-                                            u8::from(shrink_boost),
-                                            u8::from(honor_preference),
-                                            u8::from(wide_optimization),
-                                        ));
-                                    }
-                                    for &seed in &self.seeds {
-                                        plans.push(RunPlan {
-                                            index: plans.len(),
-                                            scenario: scenario.clone(),
-                                            label: format!("{scenario}-s{seed}"),
-                                            workload: wi,
-                                            nodes,
-                                            mode,
-                                            seed,
-                                            backfill,
-                                            shrink_boost,
-                                            honor_preference,
-                                            wide_optimization,
-                                        });
+                                    for &mtbf in &self.faults.mtbf {
+                                        for &ckpt in &self.faults.checkpoint_interval {
+                                            let mut scenario = format!(
+                                                "{}-n{}-{}",
+                                                labels[wi],
+                                                nodes,
+                                                mode.label()
+                                            );
+                                            if swept {
+                                                scenario.push_str(&format!(
+                                                    "-bf{}-sb{}-hp{}-wo{}",
+                                                    u8::from(backfill),
+                                                    u8::from(shrink_boost),
+                                                    u8::from(honor_preference),
+                                                    u8::from(wide_optimization),
+                                                ));
+                                            }
+                                            if faults_swept {
+                                                scenario.push_str(&format!(
+                                                    "-mtbf{}-ck{}",
+                                                    fmt_axis(mtbf),
+                                                    fmt_axis(ckpt),
+                                                ));
+                                            }
+                                            for &seed in &self.seeds {
+                                                plans.push(RunPlan {
+                                                    index: plans.len(),
+                                                    scenario: scenario.clone(),
+                                                    label: format!("{scenario}-s{seed}"),
+                                                    workload: wi,
+                                                    nodes,
+                                                    mode,
+                                                    seed,
+                                                    backfill,
+                                                    shrink_boost,
+                                                    honor_preference,
+                                                    wide_optimization,
+                                                    mtbf,
+                                                    checkpoint_interval: ckpt,
+                                                });
+                                            }
+                                        }
                                     }
                                 }
                             }
@@ -323,6 +403,15 @@ impl CampaignSpec {
             }
         }
         plans
+    }
+}
+
+/// Compact axis-value rendering for scenario ids (`20000`, not `20000.0`).
+fn fmt_axis(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
     }
 }
 
@@ -368,6 +457,11 @@ fn parse_workload(w: &Json) -> Result<WorkloadSource> {
                     .and_then(|x| x.as_usize())
                     .map(|x| x as u32)
                     .unwrap_or(d.iterations),
+                include_failed: match w.get("include_failed") {
+                    None => d.include_failed,
+                    Some(Json::Bool(b)) => *b,
+                    Some(_) => bail!("`include_failed` must be a boolean"),
+                },
             };
             if !(0.0..=1.0).contains(&opts.malleable_fraction) {
                 bail!("malleable_fraction must be in [0, 1]");
@@ -376,6 +470,132 @@ fn parse_workload(w: &Json) -> Result<WorkloadSource> {
         }
         other => bail!("unknown workload kind {other:?} (feitelson | burst_lull | swf)"),
     }
+}
+
+/// Non-negative integer scalar (rejects negatives and fractions, which
+/// `Json::as_usize` would silently saturate/truncate).
+fn usize_scalar(v: Option<&Json>, what: &str) -> Result<usize> {
+    let f = v
+        .and_then(|x| x.as_f64())
+        .with_context(|| format!("`{what}` must be an integer"))?;
+    if f.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&f) {
+        bail!("`{what}` value {f} is not a non-negative integer");
+    }
+    Ok(f as usize)
+}
+
+/// Parse the `[faults]` section (see `scenarios/README.md` for the
+/// schema and `scenarios/faulty_cluster.toml` for a worked example).
+/// `max_nodes` is the largest entry of the `nodes` axis: a scripted or
+/// drained node id at or beyond it could never fire in any scenario, so
+/// it is rejected as a spec typo (ids valid only for *some* axis points
+/// are allowed — the engine skips them on smaller machines).
+fn parse_faults(f: &Json, max_nodes: usize) -> Result<FaultAxis> {
+    let d = FaultAxis::default();
+    let mtbf = f64_list(f.get("mtbf"), "faults.mtbf")?.unwrap_or(d.mtbf);
+    if mtbf.is_empty() {
+        bail!("`faults.mtbf` must not be empty");
+    }
+    let mttr = match f.get("mttr") {
+        None => d.mttr,
+        Some(x) => x.as_f64().context("`faults.mttr` must be a number")?,
+    };
+    if mttr < 0.0 {
+        bail!("`faults.mttr` must be non-negative");
+    }
+    let checkpoint_interval =
+        f64_list(f.get("checkpoint_interval"), "faults.checkpoint_interval")?
+            .unwrap_or(d.checkpoint_interval);
+    if checkpoint_interval.is_empty() {
+        bail!("`faults.checkpoint_interval` must not be empty");
+    }
+
+    let mut scripted = Vec::new();
+    if let Some(fails) = f.get("fail") {
+        for (i, ev) in fails
+            .as_arr()
+            .context("`[[faults.fail]]` must be an array of tables")?
+            .iter()
+            .enumerate()
+        {
+            let node = usize_scalar(ev.get("node"), &format!("faults.fail[{i}].node"))?;
+            if node >= max_nodes {
+                bail!(
+                    "faults.fail[{i}]: node {node} does not exist on any swept cluster \
+                     (largest `nodes` entry is {max_nodes})"
+                );
+            }
+            let at = ev
+                .get("at")
+                .and_then(|x| x.as_f64())
+                .with_context(|| format!("faults.fail[{i}] needs a number `at`"))?;
+            if at < 0.0 {
+                bail!("faults.fail[{i}]: `at` must be non-negative");
+            }
+            scripted.push(FaultTraceEvent { at, node, kind: FaultKind::Fail });
+            if let Some(r) = ev.get("repair_at") {
+                let repair_at = r
+                    .as_f64()
+                    .with_context(|| format!("faults.fail[{i}]: `repair_at` must be a number"))?;
+                if repair_at <= at {
+                    bail!("faults.fail[{i}]: `repair_at` must be after `at`");
+                }
+                scripted.push(FaultTraceEvent { at: repair_at, node, kind: FaultKind::Repair });
+            }
+        }
+    }
+
+    let mut drains = Vec::new();
+    if let Some(ds) = f.get("drain") {
+        for (i, w) in ds
+            .as_arr()
+            .context("`[[faults.drain]]` must be an array of tables")?
+            .iter()
+            .enumerate()
+        {
+            let start = w
+                .get("start")
+                .and_then(|x| x.as_f64())
+                .with_context(|| format!("faults.drain[{i}] needs a number `start`"))?;
+            let end = w
+                .get("end")
+                .and_then(|x| x.as_f64())
+                .with_context(|| format!("faults.drain[{i}] needs a number `end`"))?;
+            if !(start >= 0.0 && end > start) {
+                bail!("faults.drain[{i}]: need 0 <= start < end");
+            }
+            let nodes = match w.get("nodes") {
+                Some(n @ Json::Num(_)) => {
+                    let count = usize_scalar(Some(n), &format!("faults.drain[{i}].nodes"))?;
+                    if count > max_nodes {
+                        bail!(
+                            "faults.drain[{i}]: count {count} exceeds the largest \
+                             `nodes` entry ({max_nodes})"
+                        );
+                    }
+                    DrainSet::Count(count)
+                }
+                Some(arr @ Json::Arr(_)) => {
+                    let ids =
+                        usize_list(Some(arr), "faults.drain.nodes")?.unwrap_or_default();
+                    if ids.is_empty() {
+                        bail!("faults.drain[{i}]: `nodes` list must not be empty");
+                    }
+                    if let Some(&bad) = ids.iter().find(|&&n| n >= max_nodes) {
+                        bail!(
+                            "faults.drain[{i}]: node {bad} does not exist on any swept \
+                             cluster (largest `nodes` entry is {max_nodes})"
+                        );
+                    }
+                    DrainSet::Nodes(ids)
+                }
+                _ => bail!("faults.drain[{i}] needs `nodes` (a count or a node list)"),
+            };
+            drains.push(DrainWindow { start, end, nodes });
+        }
+    }
+
+    Ok(FaultAxis { mtbf, mttr, checkpoint_interval, scripted, drains })
 }
 
 fn usize_list(v: Option<&Json>, what: &str) -> Result<Option<Vec<usize>>> {
@@ -395,6 +615,27 @@ fn usize_list(v: Option<&Json>, what: &str) -> Result<Option<Vec<usize>>> {
                         bail!("`{what}` entry {f} is not a non-negative integer");
                     }
                     Ok(f as usize)
+                })
+                .collect::<Result<Vec<_>>>()?,
+        )),
+    }
+}
+
+fn f64_list(v: Option<&Json>, what: &str) -> Result<Option<Vec<f64>>> {
+    match v {
+        None => Ok(None),
+        Some(j) => Ok(Some(
+            j.as_arr()
+                .with_context(|| format!("`{what}` must be an array of numbers"))?
+                .iter()
+                .map(|x| {
+                    let f = x
+                        .as_f64()
+                        .with_context(|| format!("`{what}` entries must be numbers"))?;
+                    if !(f.is_finite() && f >= 0.0) {
+                        bail!("`{what}` entry {f} must be a non-negative number");
+                    }
+                    Ok(f)
                 })
                 .collect::<Result<Vec<_>>>()?,
         )),
@@ -561,6 +802,96 @@ mean_interarrival = 60.0
         assert_ne!(plans[0].scenario, plans[1].scenario, "same-label sources must not collide");
         assert_eq!(plans[0].scenario, "feitelson10-w0-n32-sync");
         assert_eq!(plans[1].scenario, "feitelson10-w1-n32-sync");
+    }
+
+    #[test]
+    fn faults_axis_parses_and_expands() {
+        let toml = r#"
+name = "faulty"
+nodes = [64]
+modes = ["fixed", "sync"]
+seeds = [1, 2]
+[faults]
+mtbf = [0.0, 20000.0]
+mttr = 1200.0
+checkpoint_interval = [600.0]
+[[faults.fail]]
+node = 3
+at = 500.0
+repair_at = 2500.0
+[[faults.drain]]
+start = 1000.0
+end = 4000.0
+nodes = 8
+[[faults.drain]]
+start = 6000.0
+end = 7000.0
+nodes = [60, 61]
+[[workload]]
+kind = "feitelson"
+jobs = 10
+"#;
+        let s = CampaignSpec::from_toml_str(toml).unwrap();
+        assert_eq!(s.faults.mtbf, vec![0.0, 20000.0]);
+        assert_eq!(s.faults.mttr, 1200.0);
+        assert_eq!(s.faults.checkpoint_interval, vec![600.0]);
+        // one fail + its repair
+        assert_eq!(s.faults.scripted.len(), 2);
+        assert_eq!(s.faults.scripted[0].node, 3);
+        assert!(matches!(s.faults.scripted[0].kind, crate::resilience::FaultKind::Fail));
+        assert!(matches!(s.faults.scripted[1].kind, crate::resilience::FaultKind::Repair));
+        assert_eq!(s.faults.scripted[1].at, 2500.0);
+        assert_eq!(s.faults.drains.len(), 2);
+        assert_eq!(s.faults.drains[0].nodes, crate::resilience::DrainSet::Count(8));
+        assert_eq!(
+            s.faults.drains[1].nodes,
+            crate::resilience::DrainSet::Nodes(vec![60, 61])
+        );
+
+        // mtbf axis doubles the matrix and shows up in scenario ids
+        assert_eq!(s.matrix_size(), 2 * 2 * 2);
+        let plans = s.expand();
+        assert_eq!(plans.len(), 8);
+        assert!(plans[0].scenario.contains("-mtbf0-ck600"));
+        assert!(plans[2].scenario.contains("-mtbf20000-ck600"));
+        assert_eq!(plans[0].mtbf, 0.0);
+        assert_eq!(plans[2].mtbf, 20000.0);
+        assert_eq!(plans[0].checkpoint_interval, 600.0);
+
+        // defaults: no [faults] section -> inactive single-point axis,
+        // no scenario suffix
+        let plain = CampaignSpec::from_toml_str(
+            "name = \"p\"\n[[workload]]\nkind = \"feitelson\"\njobs = 2\n",
+        )
+        .unwrap();
+        assert_eq!(plain.faults.mtbf, vec![0.0]);
+        assert!(plain.faults.scripted.is_empty() && plain.faults.drains.is_empty());
+        assert!(!plain.expand()[0].scenario.contains("mtbf"));
+    }
+
+    #[test]
+    fn bad_fault_specs_rejected() {
+        let base = "name = \"x\"\n[[workload]]\nkind = \"feitelson\"\njobs = 1\n";
+        for faults in [
+            "[faults]\nmtbf = [-5.0]\n",
+            "[faults]\nmttr = -1.0\n",
+            "[faults]\nmtbf = []\n",
+            "[[faults.fail]]\nat = 5.0\n",                        // missing node
+            "[[faults.fail]]\nnode = 1\nat = 5.0\nrepair_at = 2.0\n", // repair before fail
+            "[[faults.fail]]\nnode = -1\nat = 5.0\n",                 // negative node
+            "[[faults.fail]]\nnode = 100\nat = 5.0\n",            // beyond every cluster
+            "[[faults.drain]]\nstart = 5.0\nend = 2.0\nnodes = 4\n",  // end before start
+            "[[faults.drain]]\nstart = 1.0\nend = 2.0\n",             // missing nodes
+            "[[faults.drain]]\nstart = 1.0\nend = 2.0\nnodes = -8\n", // negative count
+            "[[faults.drain]]\nstart = 1.0\nend = 2.0\nnodes = 8.5\n", // fractional count
+            "[[faults.drain]]\nstart = 1.0\nend = 2.0\nnodes = [70]\n", // id beyond cluster
+            "[[faults.drain]]\nstart = 1.0\nend = 2.0\nnodes = []\n",  // empty node list
+            "[[faults.fail]]\nnode = 1\nat = 5.0\nrepair_at = \"x\"\n", // non-numeric repair
+            "[faults]\nmttr = \"1500\"\n",                             // non-numeric mttr
+        ] {
+            let doc = format!("{base}{faults}");
+            assert!(CampaignSpec::from_toml_str(&doc).is_err(), "accepted: {faults}");
+        }
     }
 
     #[test]

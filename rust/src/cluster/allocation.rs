@@ -20,19 +20,28 @@ pub enum AllocError {
 /// policies reason about node *numbers*, not topology); the free set is a
 /// BTreeSet so allocations are deterministic (lowest ids first).
 ///
-/// `allocated()` is answered from an incrementally maintained counter —
-/// the scheduler snapshots it after every start/finish, so a scan over
-/// `nodes` would make each simulated event O(cluster size).
+/// `allocated()` and `down()` are answered from incrementally maintained
+/// counters — the scheduler snapshots the former after every start/finish
+/// and the resilience engine integrates the latter after every event, so
+/// a scan over `nodes` would make each simulated event O(cluster size).
+/// `allocated()` counts `Allocated` *and* `Draining` nodes (both are held
+/// by jobs); `down()` counts only `Down` nodes.
 #[derive(Debug, Clone)]
 pub struct Cluster {
     nodes: Vec<NodeState>,
     free: BTreeSet<NodeId>,
     allocated: usize,
+    down_count: usize,
 }
 
 impl Cluster {
     pub fn new(n: usize) -> Self {
-        Self { nodes: vec![NodeState::Idle; n], free: (0..n).collect(), allocated: 0 }
+        Self {
+            nodes: vec![NodeState::Idle; n],
+            free: (0..n).collect(),
+            allocated: 0,
+            down_count: 0,
+        }
     }
 
     /// Total node count (including down nodes).
@@ -45,9 +54,14 @@ impl Cluster {
         self.free.len()
     }
 
-    /// Nodes currently held by jobs (O(1): maintained counter).
+    /// Nodes currently held by jobs, draining included (O(1) counter).
     pub fn allocated(&self) -> usize {
         self.allocated
+    }
+
+    /// Nodes currently offline (O(1) counter).
+    pub fn down(&self) -> usize {
+        self.down_count
     }
 
     pub fn state(&self, n: NodeId) -> &NodeState {
@@ -70,17 +84,23 @@ impl Cluster {
     }
 
     /// Release specific nodes held by `job` (the shrink path releases a
-    /// chosen suffix of the job's node list).
+    /// chosen suffix of the job's node list).  Draining nodes go offline
+    /// instead of back to the free pool — the drain's whole point.
     pub fn release(&mut self, job: JobId, nodes: &[NodeId]) -> Result<(), AllocError> {
         for &n in nodes {
             match self.nodes[n] {
-                NodeState::Allocated(j) if j == job => {}
+                NodeState::Allocated(j) | NodeState::Draining(j) if j == job => {}
                 _ => return Err(AllocError::NotOwner(n, job)),
             }
         }
         for &n in nodes {
-            self.nodes[n] = NodeState::Idle;
-            self.free.insert(n);
+            if matches!(self.nodes[n], NodeState::Draining(_)) {
+                self.nodes[n] = NodeState::Down;
+                self.down_count += 1;
+            } else {
+                self.nodes[n] = NodeState::Idle;
+                self.free.insert(n);
+            }
         }
         self.allocated -= nodes.len();
         Ok(())
@@ -109,7 +129,66 @@ impl Cluster {
         }
         self.free.remove(&n);
         self.nodes[n] = NodeState::Down;
+        self.down_count += 1;
         Ok(())
+    }
+
+    /// Fail a node regardless of state.  Returns the job that held it (the
+    /// failure's victim), if any; the caller must repair the victim's
+    /// bookkeeping (the node is gone from the machine's point of view).
+    pub fn force_down(&mut self, n: NodeId) -> Option<JobId> {
+        match self.nodes[n] {
+            NodeState::Idle => {
+                self.free.remove(&n);
+                self.nodes[n] = NodeState::Down;
+                self.down_count += 1;
+                None
+            }
+            NodeState::Down => None,
+            NodeState::Allocated(j) | NodeState::Draining(j) => {
+                self.nodes[n] = NodeState::Down;
+                self.allocated -= 1;
+                self.down_count += 1;
+                Some(j)
+            }
+        }
+    }
+
+    /// Start draining a node: idle nodes go offline immediately (returns
+    /// `true`); allocated nodes keep running their job and go offline on
+    /// release.  Down nodes are untouched.
+    pub fn begin_drain(&mut self, n: NodeId) -> bool {
+        match self.nodes[n] {
+            NodeState::Idle => {
+                self.free.remove(&n);
+                self.nodes[n] = NodeState::Down;
+                self.down_count += 1;
+                true
+            }
+            NodeState::Allocated(j) => {
+                self.nodes[n] = NodeState::Draining(j);
+                false
+            }
+            NodeState::Draining(_) | NodeState::Down => false,
+        }
+    }
+
+    /// End a drain: offline nodes come back to the free pool (returns
+    /// `true`), still-draining nodes return to plain `Allocated`.
+    pub fn end_drain(&mut self, n: NodeId) -> bool {
+        match self.nodes[n] {
+            NodeState::Down => {
+                self.nodes[n] = NodeState::Idle;
+                self.free.insert(n);
+                self.down_count -= 1;
+                true
+            }
+            NodeState::Draining(j) => {
+                self.nodes[n] = NodeState::Allocated(j);
+                false
+            }
+            _ => false,
+        }
     }
 
     /// Bring a down node back.
@@ -117,15 +196,22 @@ impl Cluster {
         if self.nodes[n] == NodeState::Down {
             self.nodes[n] = NodeState::Idle;
             self.free.insert(n);
+            self.down_count -= 1;
         }
     }
 
     /// Internal consistency check (used by property tests).
     pub fn check_invariants(&self) -> bool {
         let idle = self.nodes.iter().filter(|s| **s == NodeState::Idle).count();
-        let alloc = self.nodes.iter().filter(|s| matches!(s, NodeState::Allocated(_))).count();
+        let alloc = self
+            .nodes
+            .iter()
+            .filter(|s| matches!(s, NodeState::Allocated(_) | NodeState::Draining(_)))
+            .count();
+        let down = self.nodes.iter().filter(|s| **s == NodeState::Down).count();
         idle == self.free.len()
             && alloc == self.allocated
+            && down == self.down_count
             && self.free.iter().all(|&n| self.nodes[n] == NodeState::Idle)
     }
 }
@@ -181,10 +267,12 @@ mod tests {
         let mut c = Cluster::new(4);
         c.set_down(0).unwrap();
         assert_eq!(c.available(), 3);
+        assert_eq!(c.down(), 1);
         let got = c.alloc(1, 3).unwrap();
         assert_eq!(got, vec![1, 2, 3]);
         c.set_up(0);
         assert_eq!(c.available(), 1);
+        assert_eq!(c.down(), 0);
         assert!(c.check_invariants());
     }
 
@@ -210,5 +298,78 @@ mod tests {
         let mut c = Cluster::new(2);
         c.alloc(1, 1).unwrap();
         assert!(c.set_down(0).is_err());
+    }
+
+    #[test]
+    fn force_down_evicts_the_holder() {
+        let mut c = Cluster::new(4);
+        let n = c.alloc(3, 2).unwrap();
+        assert_eq!(c.force_down(n[0]), Some(3));
+        assert_eq!(*c.state(n[0]), NodeState::Down);
+        assert_eq!(c.allocated(), 1);
+        assert_eq!(c.down(), 1);
+        // the machine no longer tracks the node for job 3: releasing the
+        // survivor only
+        c.release(3, &n[1..]).unwrap();
+        assert_eq!(c.allocated(), 0);
+        // idle and already-down nodes have no victim
+        assert_eq!(c.force_down(3), None);
+        assert_eq!(c.force_down(n[0]), None, "double fail is a no-op");
+        assert_eq!(c.down(), 2);
+        assert!(c.check_invariants());
+    }
+
+    #[test]
+    fn drain_lifecycle() {
+        let mut c = Cluster::new(4);
+        let n = c.alloc(1, 2).unwrap(); // nodes 0, 1
+        // idle node drains offline immediately
+        assert!(c.begin_drain(2));
+        assert_eq!(*c.state(2), NodeState::Down);
+        assert_eq!(c.available(), 1);
+        // allocated node keeps its job
+        assert!(!c.begin_drain(n[0]));
+        assert_eq!(*c.state(n[0]), NodeState::Draining(1));
+        assert_eq!(c.allocated(), 2, "draining still counts as held");
+        assert!(c.check_invariants());
+
+        // the job finishes: the draining node goes down, the other frees
+        c.release(1, &n).unwrap();
+        assert_eq!(*c.state(n[0]), NodeState::Down);
+        assert_eq!(*c.state(n[1]), NodeState::Idle);
+        assert_eq!(c.down(), 2);
+        assert_eq!(c.available(), 2);
+
+        // window ends: both drained nodes return
+        assert!(c.end_drain(2));
+        assert!(c.end_drain(n[0]));
+        assert_eq!(c.available(), 4);
+        assert_eq!(c.down(), 0);
+        assert!(c.check_invariants());
+    }
+
+    #[test]
+    fn end_drain_mid_job_restores_allocated() {
+        let mut c = Cluster::new(2);
+        let n = c.alloc(9, 1).unwrap();
+        c.begin_drain(n[0]);
+        assert_eq!(*c.state(n[0]), NodeState::Draining(9));
+        assert!(!c.end_drain(n[0]), "no capacity freed");
+        assert_eq!(*c.state(n[0]), NodeState::Allocated(9));
+        // a later release now frees normally
+        c.release(9, &n).unwrap();
+        assert_eq!(c.available(), 2);
+        assert!(c.check_invariants());
+    }
+
+    #[test]
+    fn draining_node_can_fail() {
+        let mut c = Cluster::new(2);
+        let n = c.alloc(4, 2).unwrap();
+        c.begin_drain(n[0]);
+        assert_eq!(c.force_down(n[0]), Some(4));
+        assert_eq!(c.allocated(), 1);
+        assert_eq!(c.down(), 1);
+        assert!(c.check_invariants());
     }
 }

@@ -5,6 +5,11 @@
 //! per node, InfiniBand FDR10).  The paper's phenomena are scheduling-level
 //! — what matters is the node count, who holds which nodes, and when they
 //! are released; see DESIGN.md §2.
+//!
+//! The resilience engine ([`crate::resilience`]) adds two unavailability
+//! flavors: `Down` (failed or offline for maintenance — never allocatable)
+//! and `Draining` (still running its job, but released nodes go offline
+//! instead of back to the free pool).
 
 mod allocation;
 
@@ -19,7 +24,11 @@ pub enum NodeState {
     Idle,
     /// Held by a job.
     Allocated(JobId),
-    /// Administratively removed (failure injection in tests).
+    /// Held by a job, but scheduled for maintenance: the job finishes (or
+    /// shrinks away from the node) and the node then goes `Down` instead
+    /// of `Idle`.
+    Draining(JobId),
+    /// Offline: failed, or drained for maintenance.
     Down,
 }
 

@@ -31,12 +31,14 @@ use std::collections::BinaryHeap;
 
 use super::execmodel::ExecModel;
 use super::sched_cost::CostModel;
+use crate::cluster::NodeState;
 use crate::dmr::{Inhibitor, SchedMode};
+use crate::resilience::{feasible_shrink, FaultKind, ResilienceConfig, ResilienceStats};
 use crate::rms::{Action, DmrOutcome, DmrRequest, Rms, RmsConfig};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::workload::{JobSpec, WorkloadSpec};
-use crate::{JobId, Time};
+use crate::{JobId, NodeId, Time};
 
 /// DES configuration.
 #[derive(Debug, Clone)]
@@ -46,6 +48,9 @@ pub struct DesConfig {
     pub costs: CostModel,
     pub exec: ExecModel,
     pub seed: u64,
+    /// Fault injection + recovery (default: inactive — the event stream is
+    /// then byte-identical to a fault-free build).
+    pub resilience: ResilienceConfig,
 }
 
 impl Default for DesConfig {
@@ -56,6 +61,7 @@ impl Default for DesConfig {
             costs: CostModel::default(),
             exec: ExecModel::default(),
             seed: 0xD41,
+            resilience: ResilienceConfig::default(),
         }
     }
 }
@@ -78,9 +84,13 @@ pub struct RunResult {
     pub actions: ActionStats,
     pub user_jobs: usize,
     /// Discrete events processed (arrivals, checks, completions, resize
-    /// commits, retries — including stale ones).  Deterministic for a
-    /// given workload + config; the denominator of events/s.
+    /// commits, retries, machine fault events — including stale ones).
+    /// Deterministic for a given workload + config; the denominator of
+    /// events/s.
     pub events: u64,
+    /// Fault-injection measures (all zero / availability 1.0 when the
+    /// resilience config is inactive).
+    pub resilience: ResilienceStats,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -90,6 +100,16 @@ enum EvKind {
     Complete,
     ResizeDone { to: usize, expand: bool, began: Time },
     ExpandRetry { to: usize, began: Time, deadline: Time },
+    /// Machine events (job field is 0): a node fails; `auto` failures
+    /// belong to the MTBF sampling chain and schedule their own repair +
+    /// next failure.
+    NodeFail { node: NodeId, auto: bool },
+    NodeRepair { node: NodeId },
+    /// Drain window `i` of the fault spec starts / ends.
+    DrainStart(usize),
+    DrainEnd(usize),
+    /// A rescued job finished its post-failure redistribution and resumes.
+    Resume,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -133,6 +153,7 @@ struct SimSpec {
     max_procs: usize,
     pref_procs: Option<usize>,
     factor: usize,
+    malleable: bool,
 }
 
 impl SimSpec {
@@ -146,6 +167,7 @@ impl SimSpec {
             max_procs: spec.max_procs,
             pref_procs: spec.pref_procs,
             factor: spec.factor,
+            malleable: spec.malleable,
         }
     }
 }
@@ -162,6 +184,15 @@ struct SimJob {
     /// Memoized `iter_time` at `memo_procs` processes.
     memo_procs: usize,
     memo_iter: f64,
+    /// Accumulated execution (running) time — the checkpoint/rework model
+    /// rolls this back on failures.
+    run_time_acc: f64,
+    /// Progress at the last checkpoint: execution time (a multiple of the
+    /// checkpoint interval) and the iterations held then.  Recorded by
+    /// `progress` at the rate the work was actually earned, so rollback
+    /// is exact even when resizes changed the iteration rate since.
+    ckpt_run_time: f64,
+    ckpt_iters: f64,
 }
 
 impl SimJob {
@@ -188,11 +219,34 @@ pub struct Engine {
     cfg: DesConfig,
     rms: Rms,
     rng: Rng,
+    /// Dedicated RNG for the MTBF/MTTR fault chains — a separate stream so
+    /// fault timelines are identical across scheduling modes and the cost
+    /// stream of fault-free runs is untouched.
+    fault_rng: Rng,
     heap: BinaryHeap<Reverse<Ev>>,
     /// Dense per-job simulation slab, one slot per started user job.
     sims: Vec<SimJob>,
     /// JobId → slab slot (`NO_SLOT` = not simulated: resizers, unstarted).
     slot_of: Vec<u32>,
+    /// Resolved node lists of the fault spec's drain windows.
+    drain_nodes: Vec<Vec<NodeId>>,
+    /// Per-node count of drain windows currently covering the node.
+    drain_depth: Vec<u32>,
+    /// Per-node count of failures awaiting repair.  Failures and repairs
+    /// pair 1:1 (each auto failure schedules its own chain repair; each
+    /// scripted failure carries at most one scripted repair), so
+    /// overlapping outages nest correctly: the node returns only when
+    /// every outage that hit it has been repaired — and never, for a
+    /// scripted failure with no repair.  Drain ends must not resurrect a
+    /// node while this is nonzero.
+    fail_depth: Vec<u32>,
+    /// Whether any fault source is configured; `false` keeps the
+    /// fault-free hot path free of checkpoint bookkeeping.
+    faults_active: bool,
+    /// Down-node integral: `down_acc` node-seconds as of `down_last_t`.
+    down_acc: f64,
+    down_last_t: Time,
+    stats: ResilienceStats,
     now: Time,
     seq: u64,
     events: u64,
@@ -206,13 +260,31 @@ impl Engine {
     pub fn new(cfg: DesConfig) -> Self {
         let rms = Rms::new(cfg.rms.clone());
         let rng = Rng::new(cfg.seed);
+        let fault_rng = cfg.resilience.faults.rng(cfg.seed);
+        let faults_active = cfg.resilience.faults.is_active();
+        let nodes = cfg.rms.nodes;
+        let drain_nodes = cfg
+            .resilience
+            .faults
+            .drains
+            .iter()
+            .map(|w| w.nodes.node_ids(nodes))
+            .collect();
         Engine {
             cfg,
             rms,
             rng,
+            fault_rng,
             heap: BinaryHeap::new(),
             sims: Vec::new(),
             slot_of: Vec::new(),
+            drain_nodes,
+            drain_depth: vec![0; nodes],
+            fail_depth: vec![0; nodes],
+            faults_active,
+            down_acc: 0.0,
+            down_last_t: 0.0,
+            stats: ResilienceStats::default(),
             now: 0.0,
             seq: 0,
             events: 0,
@@ -258,11 +330,38 @@ impl Engine {
         for (i, spec) in workload.jobs.iter().enumerate() {
             self.push(spec.submit_time, 0, 0, EvKind::Arrival(i));
         }
+        self.seed_fault_events();
+
+        // Deadlock guard: with MTBF chains the heap never empties, so a
+        // workload that can never drain (e.g. a permanently-failed node
+        // leaving a job unplaceable) would spin forever instead of
+        // hitting the drain assert below.  No plausible configuration
+        // processes this many events between two job completions.
+        const STUCK_EVENTS: u64 = 5_000_000;
+        let mut last_done_at: u64 = 0;
+        let mut last_done: usize = 0;
 
         while let Some(Reverse(ev)) = self.heap.pop() {
             debug_assert!(ev.t >= self.now - 1e-9, "time went backwards");
             self.now = ev.t.max(self.now);
             self.events += 1;
+            if self.done != last_done {
+                last_done = self.done;
+                last_done_at = self.events;
+            } else if self.events - last_done_at > STUCK_EVENTS {
+                panic!(
+                    "no job completed in {STUCK_EVENTS} events ({}/{} done, t={}): \
+                     the fault spec has likely made the workload unplaceable",
+                    self.done, self.user_jobs, self.now
+                );
+            }
+            // Integrate machine unavailability up to this instant (O(1):
+            // the down count is a maintained counter).
+            let down = self.rms.cluster.down();
+            if down > 0 {
+                self.down_acc += down as f64 * (self.now - self.down_last_t);
+            }
+            self.down_last_t = self.now;
             match ev.kind {
                 EvKind::Arrival(i) => self.on_arrival(&workload.jobs[i]),
                 EvKind::Check => self.on_check(ev),
@@ -273,12 +372,22 @@ impl Engine {
                 EvKind::ExpandRetry { to, began, deadline } => {
                     self.on_expand_retry(ev, to, began, deadline)
                 }
+                EvKind::NodeFail { node, auto } => self.on_node_fail(node, auto),
+                EvKind::NodeRepair { node } => self.on_node_repair(node),
+                EvKind::DrainStart(w) => self.on_drain_start(w),
+                EvKind::DrainEnd(w) => self.on_drain_end(w),
+                EvKind::Resume => self.on_resume(ev),
             }
             if self.done == self.user_jobs {
                 break;
             }
         }
         assert_eq!(self.done, self.user_jobs, "workload did not drain");
+
+        self.stats.lost_node_seconds = self.down_acc;
+        let capacity = self.rms.cluster.total() as f64 * self.now;
+        self.stats.availability =
+            if capacity > 0.0 { (1.0 - self.down_acc / capacity).max(0.0) } else { 1.0 };
 
         RunResult {
             label: label.to_string(),
@@ -287,7 +396,38 @@ impl Engine {
             actions: self.actions,
             user_jobs: self.user_jobs,
             events: self.events,
+            resilience: self.stats,
             rms: self.rms,
+        }
+    }
+
+    /// Seed the machine-event stream: scripted fault-trace events, drain
+    /// windows, and (when MTBF sampling is on) each node's first failure.
+    /// Pushed *after* the arrivals so fault-free heaps are identical to
+    /// pre-resilience builds.
+    fn seed_fault_events(&mut self) {
+        let faults = self.cfg.resilience.faults.clone();
+        if !faults.is_active() {
+            return;
+        }
+        let total = self.rms.cluster.total();
+        for ev in &faults.scripted {
+            if ev.node >= total {
+                continue;
+            }
+            let kind = match ev.kind {
+                FaultKind::Fail => EvKind::NodeFail { node: ev.node, auto: false },
+                FaultKind::Repair => EvKind::NodeRepair { node: ev.node },
+            };
+            self.push(ev.at, 0, 0, kind);
+        }
+        for (i, w) in faults.drains.iter().enumerate() {
+            self.push(w.start, 0, 0, EvKind::DrainStart(i));
+            self.push(w.end, 0, 0, EvKind::DrainEnd(i));
+        }
+        let init = faults.initial_failures(total, &mut self.fault_rng);
+        for (node, at) in init {
+            self.push(at, 0, 0, EvKind::NodeFail { node, auto: true });
         }
     }
 
@@ -304,15 +444,42 @@ impl Engine {
 
     fn try_schedule(&mut self) {
         self.rms.schedule(self.now);
+        self.drain_started();
+    }
+
+    /// Materialize sims for every start the RMS has made that this driver
+    /// has not picked up yet.  Scheduling passes can run *inside*
+    /// `dmr_check` (the resizer-job protocol), so machine-event handlers
+    /// call this before touching victims — every active job then has a
+    /// slab slot.
+    fn drain_started(&mut self) {
         let started = self.rms.take_recent_starts();
         for s in started {
-            let (spec, malleable) = match self.rms.job(s.job) {
-                Some(j) if !j.is_resizer => (SimSpec::of(&j.spec), j.spec.malleable),
+            // `is_active()` filters starts already invalidated by a node
+            // failure that requeued the job before this buffer drained
+            // (it will start again — and get its sim — via a later pass).
+            let (spec, malleable, procs) = match self.rms.job(s.job) {
+                Some(j) if !j.is_resizer && j.is_active() => {
+                    (SimSpec::of(&j.spec), j.spec.malleable, j.procs())
+                }
                 _ => continue,
             };
-            let procs = s.nodes.len();
             let iter_t = self.cfg.exec.iter_time_raw(spec.work_per_iter, spec.alpha, procs);
             let period = spec.sched_period;
+            if let Some(slot) = self.slot(s.job) {
+                // Restart after a failure requeue: the slab slot survives
+                // and keeps the checkpointed progress (`iters_done` /
+                // `run_time_acc`); everything else resets.
+                {
+                    let j = &mut self.sims[slot];
+                    debug_assert!(!j.running, "restarted job was still running");
+                    j.procs = procs;
+                    j.inhibitor = Inhibitor::new(period);
+                    j.pending_async = None;
+                }
+                self.resume_sim(slot, s.job);
+                continue;
+            }
             let sim = SimJob {
                 spec,
                 procs,
@@ -324,25 +491,68 @@ impl Engine {
                 pending_async: None,
                 memo_procs: procs,
                 memo_iter: iter_t,
+                run_time_acc: 0.0,
+                ckpt_run_time: 0.0,
+                ckpt_iters: 0.0,
             };
             let complete_at = self.now + sim.remaining() * iter_t;
             self.rms.set_expected_end(s.job, complete_at);
-            let check_at = self.now + iter_t.max(period).max(1e-3);
             self.insert_sim(s.job, sim);
             self.push(complete_at, s.job, 0, EvKind::Complete);
             if malleable {
+                let check_at = self.now + iter_t.max(period).max(1e-3);
                 self.push(check_at, s.job, 0, EvKind::Check);
             }
         }
     }
 
+    /// Put a paused sim back to work at its current size: bump the epoch
+    /// (invalidating every outstanding event), reschedule its completion
+    /// and — for malleable jobs — its next DMR check.
+    fn resume_sim(&mut self, slot: usize, id: JobId) {
+        let exec = &self.cfg.exec;
+        let now = self.now;
+        let j = &mut self.sims[slot];
+        j.running = true;
+        j.last_t = now;
+        j.epoch += 1;
+        let epoch = j.epoch;
+        let iter_t = j.iter_time(exec);
+        let complete_at = now + j.remaining() * iter_t;
+        let malleable = j.spec.malleable;
+        self.rms.set_expected_end(id, complete_at);
+        self.push(complete_at, id, epoch, EvKind::Complete);
+        if malleable {
+            let next = self.next_check_time(slot);
+            self.push(next, id, epoch, EvKind::Check);
+        }
+    }
+
     fn progress(&mut self, slot: usize) {
         let exec = &self.cfg.exec;
+        // Checkpoint bookkeeping only matters when something can fail.
+        let ckpt = if self.faults_active {
+            self.cfg.resilience.recovery.checkpoint_interval
+        } else {
+            0.0
+        };
         let now = self.now;
         let j = &mut self.sims[slot];
         if j.running {
             let it = j.iter_time(exec);
             j.iters_done = (j.iters_done + (now - j.last_t) / it).min(j.spec.iterations as f64);
+            j.run_time_acc += now - j.last_t;
+            if ckpt > 0.0 {
+                // Record the newest checkpoint this segment crossed.  The
+                // iteration rate is constant within a segment, so the
+                // iterations held at the boundary are exact.
+                let boundary = (j.run_time_acc / ckpt).floor() * ckpt;
+                if boundary > j.ckpt_run_time {
+                    let past = j.run_time_acc - boundary;
+                    j.ckpt_iters = (j.iters_done - past / it).max(0.0);
+                    j.ckpt_run_time = boundary;
+                }
+            }
         }
         j.last_t = now;
     }
@@ -477,20 +687,8 @@ impl Engine {
             self.rms.commit_shrink_to(ev.job, to, self.now);
             self.actions.shrink.push(self.now - began);
         }
-        let exec = &self.cfg.exec;
-        let now = self.now;
-        let j = &mut self.sims[slot];
-        j.procs = to;
-        j.running = true;
-        j.last_t = now;
-        j.epoch += 1;
-        let epoch = j.epoch;
-        let iter_t = j.iter_time(exec);
-        let complete_at = now + j.remaining() * iter_t;
-        self.rms.set_expected_end(ev.job, complete_at);
-        self.push(complete_at, ev.job, epoch, EvKind::Complete);
-        let next = self.next_check_time(slot);
-        self.push(next, ev.job, epoch, EvKind::Check);
+        self.sims[slot].procs = to;
+        self.resume_sim(slot, ev.job);
         // A shrink may let queued jobs start.
         self.try_schedule();
     }
@@ -535,22 +733,173 @@ impl Engine {
                     // Timed out: abort the action and resume (§5.2.1).
                     self.actions.expand.push(self.now - began);
                     self.actions.expand_aborts += 1;
-                    let exec = &self.cfg.exec;
-                    let now = self.now;
-                    let j = &mut self.sims[slot];
-                    j.running = true;
-                    j.last_t = now;
-                    j.epoch += 1;
-                    let epoch = j.epoch;
-                    let iter_t = j.iter_time(exec);
-                    let complete_at = now + j.remaining() * iter_t;
-                    self.rms.set_expected_end(ev.job, complete_at);
-                    self.push(complete_at, ev.job, epoch, EvKind::Complete);
-                    let next = self.next_check_time(slot);
-                    self.push(next, ev.job, epoch, EvKind::Check);
+                    self.resume_sim(slot, ev.job);
                 }
             }
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Machine events (crate::resilience)
+
+    fn on_node_fail(&mut self, node: NodeId, auto: bool) {
+        // Keep the per-node failure cycle alive *first*: the repair and
+        // next-failure delays are drawn from the dedicated fault stream
+        // unconditionally, so the machine timeline is a pure function of
+        // (fault spec, seed) — identical across scheduling modes.
+        if auto {
+            let (repair_after, next_fail_after) =
+                self.cfg.resilience.faults.next_cycle(&mut self.fault_rng);
+            let up_at = self.now + repair_after;
+            self.push(up_at, 0, 0, EvKind::NodeRepair { node });
+            self.push(up_at + next_fail_after, 0, 0, EvKind::NodeFail { node, auto: true });
+        }
+        // Every hardware failure counts and is logged — including one that
+        // lands on a node already offline (drain overlap / nested
+        // outages).  Both the count and the NodeFailed sequence are then
+        // mode-independent, whatever the node happened to be doing.
+        self.stats.node_failures += 1;
+        self.fail_depth[node] += 1;
+        if matches!(self.rms.cluster.state(node), NodeState::Down) {
+            // Capacity already gone; the outage is extended (fail_depth),
+            // not duplicated, and there is no victim.
+            self.rms.log.push(crate::rms::RmsEvent::NodeFailed { node, time: self.now });
+            return;
+        }
+        // Jobs started inside an undrained RMS pass need their sims
+        // before the victim lookup.
+        self.drain_started();
+        if let Some(victim) = self.rms.fail_node(node, self.now) {
+            self.on_job_hit(victim.job, victim.survivors);
+        }
+    }
+
+    fn on_node_repair(&mut self, node: NodeId) {
+        // Outages nest: the node returns only once every failure that hit
+        // it has been repaired (a scripted failure without `repair_at`
+        // never is — its depth contribution outlives every chain repair).
+        if self.fail_depth[node] > 0 {
+            self.fail_depth[node] -= 1;
+        }
+        // A node under an active drain window stays offline until the
+        // window ends.
+        if self.fail_depth[node] == 0
+            && self.drain_depth[node] == 0
+            && self.rms.repair_node(node, self.now)
+        {
+            self.try_schedule();
+        }
+    }
+
+    fn on_drain_start(&mut self, w: usize) {
+        let nodes = std::mem::take(&mut self.drain_nodes[w]);
+        for &n in &nodes {
+            self.drain_depth[n] += 1;
+            if self.drain_depth[n] == 1 {
+                self.rms.begin_drain(n, self.now);
+            }
+        }
+        self.drain_nodes[w] = nodes;
+    }
+
+    fn on_drain_end(&mut self, w: usize) {
+        let nodes = std::mem::take(&mut self.drain_nodes[w]);
+        let mut freed = false;
+        for &n in &nodes {
+            if self.drain_depth[n] > 0 {
+                self.drain_depth[n] -= 1;
+            }
+            if self.drain_depth[n] == 0 && self.fail_depth[n] == 0 {
+                freed |= self.rms.end_drain(n, self.now);
+            }
+        }
+        self.drain_nodes[w] = nodes;
+        if freed {
+            self.try_schedule();
+        }
+    }
+
+    /// A failure took one of `job`'s nodes.  Roll the job back to its last
+    /// checkpoint, then either shrink it onto a factor-reachable count of
+    /// surviving nodes (malleable rescue) or kill and requeue it.
+    fn on_job_hit(&mut self, job: JobId, survivors: usize) {
+        self.stats.interrupted += 1;
+        let Some(slot) = self.slot(job) else {
+            // The job started inside an RMS scheduling pass this driver
+            // has not drained yet (it sits in `recent_starts` with no sim
+            // slot).  It has made no modeled progress — requeue it; the
+            // stale start record is skipped by `try_schedule`'s
+            // `is_active()` filter and the job starts again later.
+            self.rms.requeue_after_failure(job, self.now);
+            self.stats.requeued += 1;
+            self.try_schedule();
+            return;
+        };
+        self.progress(slot);
+
+        // Roll back to the exact state the last checkpoint held (with no
+        // checkpointing, `ckpt_*` stay 0 — everything is lost).
+        let (lost, committed, factor, min_procs, malleable) = {
+            let j = &mut self.sims[slot];
+            let lost = (j.run_time_acc - j.ckpt_run_time).max(0.0);
+            j.iters_done = j.ckpt_iters;
+            j.run_time_acc = j.ckpt_run_time;
+            (lost, j.procs, j.spec.factor, j.spec.min_procs, j.spec.malleable)
+        };
+        self.stats.rework_time += lost;
+
+        // A failure during an in-flight resize abandons it: the pending
+        // ResizeDone goes stale via the epoch bump below, and the resize
+        // is not recorded in ActionStats (the recovery below is the
+        // action that actually happened).  Feasibility is judged from the
+        // *committed* size (the sim's); the cost uses the RMS's actual
+        // pre-failure holding, which can be larger mid-expand.
+        let target = if self.cfg.resilience.recovery.rescue && malleable {
+            feasible_shrink(committed, survivors, factor, min_procs)
+        } else {
+            None
+        };
+        match target {
+            Some(to) => {
+                self.rms.rescue_shrink_to(job, to, self.now);
+                self.stats.rescued += 1;
+                let epoch = {
+                    let j = &mut self.sims[slot];
+                    j.procs = to;
+                    j.running = false;
+                    j.pending_async = None;
+                    j.epoch += 1;
+                    j.epoch
+                };
+                // The rescue pays the shrink protocol: scheduling plus the
+                // survivor-side redistribution of the dead node's shard.
+                let from = survivors + 1;
+                let delta = from.abs_diff(to).max(1);
+                let sched = self.cfg.costs.action_sched(delta, &mut self.rng);
+                let transfer =
+                    self.cfg.costs.resize_transfer(self.cfg.exec.resize_bytes, from, to);
+                self.push(self.now + sched + transfer, job, epoch, EvKind::Resume);
+            }
+            None => {
+                self.rms.requeue_after_failure(job, self.now);
+                self.stats.requeued += 1;
+                let j = &mut self.sims[slot];
+                j.running = false;
+                j.pending_async = None;
+                j.epoch += 1;
+            }
+        }
+        // Freed nodes (released survivors) may admit queued jobs.
+        self.try_schedule();
+    }
+
+    fn on_resume(&mut self, ev: Ev) {
+        let Some(slot) = self.slot(ev.job) else { return };
+        if self.sims[slot].epoch != ev.epoch {
+            return;
+        }
+        debug_assert!(!self.sims[slot].running, "resume of a running job");
+        self.resume_sim(slot, ev.job);
     }
 
     fn next_check_time(&mut self, slot: usize) -> Time {

@@ -80,6 +80,35 @@
 //! the optimized paths and the re-sort-everything reference, plus a
 //! recorded fixture that locks the event stream across PRs.
 //!
+//! ## Resilience & fault injection
+//!
+//! Node failures and maintenance drains are where RMS–runtime
+//! collaboration pays twice: a malleable job can *shrink to survive* a
+//! lost node while a rigid job must die and requeue.  The [`resilience`]
+//! subsystem threads that scenario class through the stack:
+//!
+//! * **Fault sources** ([`resilience::model`]): seeded per-node MTBF/MTTR
+//!   exponential sampling, scripted fault traces (`fail node=N at t=…,
+//!   repair at t=…`) and scheduled drain windows.  All failure times come
+//!   from a dedicated RNG stream, so the machine timeline is a pure
+//!   function of (spec, seed) — bit-identical across reruns and identical
+//!   between the rigid and malleable runs of a scenario.
+//! * **Machine states** ([`cluster`]): `Down` nodes are skipped by
+//!   allocation; `Draining` nodes finish their current job and then go
+//!   offline; `available()`/`allocated()`/`down()` stay O(1).
+//! * **Recovery** ([`resilience::recovery`] + [`rms`]): every interrupted
+//!   job rolls back to its last checkpoint (configurable interval, rework
+//!   accounted); malleable jobs attempt a factor-chain shrink onto their
+//!   surviving nodes (paying the redistribution cost), rigid jobs — and
+//!   malleable ones with no reachable fit — are killed and requeued.
+//! * **Measurement**: `NodeFail`/`NodeRepair`/`DrainStart`/`DrainEnd`
+//!   events are folded into [`rms::EventLog::digest`] (the golden
+//!   determinism lock covers failures), and campaigns gain a `[faults]`
+//!   sweep axis plus per-run lost node-seconds, interrupted/rescued/
+//!   requeued counts, rework time and machine availability — see
+//!   `scenarios/faulty_cluster.toml` for the malleable-vs-rigid
+//!   comparison under an identical fault trace.
+//!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
@@ -90,6 +119,7 @@ pub mod des;
 pub mod dmr;
 pub mod live;
 pub mod metrics;
+pub mod resilience;
 pub mod rms;
 pub mod runtime;
 pub mod util;

@@ -67,7 +67,8 @@ USAGE: repro <SUBCOMMAND> [--jobs N] [--seed S] [--nodes N] [--sizes 50,100,200,
   live         run a small live workload with real PJRT compute
   calibrate    measure real per-iteration PJRT times per (app, procs)
   campaign     run a scenario sweep: repro campaign <spec.toml> [--workers N]
-               (spec schema: scenarios/README.md; examples under scenarios/)
+               (spec schema: scenarios/README.md; examples under scenarios/;
+               --dry-run prints the expanded scenario matrix and exits)
   all          every DES-based artifact
 
 Results are also written as CSV under results/.";
@@ -248,9 +249,33 @@ Results are also written as CSV under results/.";
         let path = args
             .positional
             .first()
-            .context("usage: repro campaign <spec.toml|spec.json> [--workers N]")?;
+            .context("usage: repro campaign <spec.toml|spec.json> [--workers N] [--dry-run]")?;
         let spec = CampaignSpec::from_file(path)?;
         let workers = args.get_parse("workers", 0usize);
+        if args.flag("dry-run") {
+            // Sanity-check large sweeps without executing anything: print
+            // the expanded scenario matrix and exit.
+            let plans = spec.expand();
+            let mut scenarios: Vec<(String, usize)> = Vec::new();
+            for p in &plans {
+                match scenarios.last_mut() {
+                    Some((s, n)) if *s == p.scenario => *n += 1,
+                    _ => scenarios.push((p.scenario.clone(), 1)),
+                }
+            }
+            println!(
+                "campaign {}: {} scenarios x {} seeds = {} runs (dry run, nothing executed)",
+                spec.name,
+                scenarios.len(),
+                spec.seeds.len(),
+                plans.len()
+            );
+            for (s, n) in &scenarios {
+                println!("  {s}  [{n} runs]");
+            }
+            println!("output dir: {}", spec.output_dir.display());
+            return Ok(());
+        }
         eprintln!(
             "[campaign] {}: {} runs ({} workloads x {} nodes x {} modes x {} seeds{}), {} workers ...",
             spec.name,
@@ -264,7 +289,7 @@ Results are also written as CSV under results/.";
             {
                 String::new()
             } else {
-                " x policy knobs".to_string()
+                " x policy/fault knobs".to_string()
             },
             campaign::runner::resolve_workers(&spec, workers),
         );

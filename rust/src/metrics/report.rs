@@ -250,7 +250,8 @@ pub fn throughput_rows(rows: &[(usize, RunSummary, RunSummary)]) -> Vec<Vec<Stri
 pub const CAMPAIGN_RUN_HEADER: &[&str] = &[
     "run", "scenario", "label", "nodes", "mode", "seed", "jobs", "makespan_s", "util_pct",
     "wait_mean_s", "exec_mean_s", "completion_mean_s", "node_seconds", "expands", "shrinks",
-    "expand_aborts",
+    "expand_aborts", "interrupted", "rescued", "requeued", "rework_s", "lost_node_s",
+    "availability_pct",
 ];
 
 /// Header of `<name>_agg.csv`.
@@ -258,7 +259,8 @@ pub const CAMPAIGN_AGG_HEADER: &[&str] = &[
     "scenario", "runs", "jobs", "makespan_mean_s", "makespan_ci95_s", "util_mean_pct",
     "util_ci95_pct", "wait_mean_s", "wait_ci95_s", "exec_mean_s", "exec_ci95_s",
     "completion_mean_s", "completion_ci95_s", "node_seconds_mean", "expands_mean",
-    "shrinks_mean", "expand_aborts_mean",
+    "shrinks_mean", "expand_aborts_mean", "interrupted_mean", "rescued_mean", "requeued_mean",
+    "rework_mean_s", "lost_node_s_mean", "availability_mean_pct",
 ];
 
 /// One CSV row per campaign run, in matrix order.
@@ -284,6 +286,12 @@ pub fn campaign_run_rows(records: &[crate::campaign::RunRecord]) -> Vec<Vec<Stri
                 s.actions.expand.count().to_string(),
                 s.actions.shrink.count().to_string(),
                 s.actions.expand_aborts.to_string(),
+                s.resilience.interrupted.to_string(),
+                s.resilience.rescued.to_string(),
+                s.resilience.requeued.to_string(),
+                fmt(s.resilience.rework_time, 1),
+                fmt(s.resilience.lost_node_seconds, 1),
+                fmt(s.resilience.availability * 100.0, 3),
             ]
         })
         .collect()
@@ -311,6 +319,12 @@ pub fn campaign_agg_rows(aggs: &[crate::campaign::ScenarioAgg]) -> Vec<Vec<Strin
                 fmt(a.expands.mean(), 2),
                 fmt(a.shrinks.mean(), 2),
                 fmt(a.expand_aborts.mean(), 2),
+                fmt(a.interrupted.mean(), 2),
+                fmt(a.rescued.mean(), 2),
+                fmt(a.requeued.mean(), 2),
+                fmt(a.rework_s.mean(), 1),
+                fmt(a.lost_node_s.mean(), 1),
+                fmt(a.availability_pct.mean(), 3),
             ]
         })
         .collect()
@@ -320,7 +334,7 @@ pub fn campaign_agg_rows(aggs: &[crate::campaign::ScenarioAgg]) -> Vec<Vec<Strin
 pub fn campaign_table(name: &str, aggs: &[crate::campaign::ScenarioAgg]) -> Table {
     let mut t = Table::new(vec![
         "Scenario", "Runs", "Makespan (s)", "Util (%)", "Wait (s)", "Completion (s)",
-        "Expands", "Shrinks",
+        "Expands", "Shrinks", "Rescued", "Requeued", "Avail (%)",
     ])
     .with_title(&format!("Campaign {name}: per-scenario aggregates (mean ± 95% CI)"));
     let pm = |s: &Summary, prec: usize| format!("{} ± {}", fmt(s.mean(), prec), fmt(s.ci95_half(), prec));
@@ -334,6 +348,9 @@ pub fn campaign_table(name: &str, aggs: &[crate::campaign::ScenarioAgg]) -> Tabl
             pm(&a.completion_s, 1),
             fmt(a.expands.mean(), 1),
             fmt(a.shrinks.mean(), 1),
+            fmt(a.rescued.mean(), 1),
+            fmt(a.requeued.mean(), 1),
+            fmt(a.availability_pct.mean(), 2),
         ]);
     }
     t
@@ -371,6 +388,12 @@ pub fn campaign_agg_json(
             m.insert("expands".into(), stat(&a.expands));
             m.insert("shrinks".into(), stat(&a.shrinks));
             m.insert("expand_aborts".into(), stat(&a.expand_aborts));
+            m.insert("interrupted".into(), stat(&a.interrupted));
+            m.insert("rescued".into(), stat(&a.rescued));
+            m.insert("requeued".into(), stat(&a.requeued));
+            m.insert("rework_s".into(), stat(&a.rework_s));
+            m.insert("lost_node_seconds".into(), stat(&a.lost_node_s));
+            m.insert("availability_pct".into(), stat(&a.availability_pct));
             Json::Obj(m)
         })
         .collect();

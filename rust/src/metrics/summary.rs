@@ -23,6 +23,8 @@ pub struct RunSummary {
     pub running_series: Vec<(f64, f64)>,
     pub completed_series: Vec<(f64, f64)>,
     pub actions: crate::des::ActionStats,
+    /// Fault-injection measures (zeros / availability 1.0 without faults).
+    pub resilience: crate::resilience::ResilienceStats,
 }
 
 impl RunSummary {
@@ -62,6 +64,7 @@ impl RunSummary {
             running_series: r.rms.telemetry.running_series.clone(),
             completed_series: r.rms.telemetry.completed_series.clone(),
             actions: r.actions.clone(),
+            resilience: r.resilience.clone(),
             jobs,
         }
     }

@@ -1,0 +1,85 @@
+//! Resilience engine: deterministic fault injection with
+//! malleability-aware recovery.
+//!
+//! Node failures and maintenance drains are the scenario class where
+//! RMS–runtime collaboration pays twice: a *malleable* job can shrink
+//! onto its surviving nodes and keep running, while a *rigid* job must be
+//! killed and requeued, losing all work since its last checkpoint.  This
+//! subsystem threads that comparison through the whole stack:
+//!
+//! * [`model`] — deterministic fault sources: seeded per-node MTBF/MTTR
+//!   sampling (exponential, [`crate::util::rng::Rng`]), scripted fault
+//!   traces (`fail node=N at t=…, repair at t=…`) and scheduled drain
+//!   windows.  Same spec + seed ⇒ bit-identical fault timelines, and the
+//!   machine timeline is independent of the scheduling mode, so fixed and
+//!   sync runs face the *same* fault trace.
+//! * [`recovery`] — the recovery policy: checkpoint/rework accounting
+//!   ([`rework_lost`]) and the factor-chain shrink-rescue target
+//!   ([`feasible_shrink`], built on [`crate::rms::policy::shrink_target`]
+//!   / [`crate::rms::policy::factor_reachable`]).
+//! * [`crate::cluster`] — real `Down`/`Draining` node states: `alloc`
+//!   skips them, the counters stay O(1), and draining nodes finish their
+//!   current job before going offline.
+//! * [`crate::des`] — `NodeFail`/`NodeRepair`/`DrainStart`/`DrainEnd`
+//!   events interleaved with the workload stream; failure events are
+//!   folded into [`crate::rms::EventLog::digest`] so the golden
+//!   determinism lock covers them.
+//! * [`crate::campaign`] — a `[faults]` sweep axis (mtbf, drain schedule,
+//!   checkpoint interval) and the per-run metrics below, emitted through
+//!   the standard CSV/JSON aggregation.
+
+pub mod model;
+pub mod recovery;
+
+pub use model::{DrainSet, DrainWindow, FaultKind, FaultSpec, FaultTraceEvent};
+pub use recovery::{feasible_shrink, rework_lost, RecoveryConfig};
+
+/// Everything the DES needs to inject faults and recover from them.
+#[derive(Debug, Clone, Default)]
+pub struct ResilienceConfig {
+    pub faults: FaultSpec,
+    pub recovery: RecoveryConfig,
+}
+
+/// Per-run resilience measures (the new robustness axis of the campaign
+/// CSV/JSON outputs).
+#[derive(Debug, Clone)]
+pub struct ResilienceStats {
+    /// Hardware failures landed on existing nodes — including ones that
+    /// hit a node already offline (the outage then nests instead of
+    /// duplicating).  The failure *timeline* is a pure function of the
+    /// fault spec + seed; this count covers the slice of it up to each
+    /// run's own makespan, so runs with different makespans see a
+    /// different-length prefix of the same timeline.
+    pub node_failures: u64,
+    /// Running jobs hit by a failed node.
+    pub interrupted: u64,
+    /// Interrupted malleable jobs saved by a DMR shrink onto their
+    /// surviving nodes.
+    pub rescued: u64,
+    /// Interrupted jobs killed and requeued (rigid, or no factor-reachable
+    /// shrink fit).
+    pub requeued: u64,
+    /// Total execution time redone because it post-dated the last
+    /// checkpoint (seconds).
+    pub rework_time: f64,
+    /// Integral of down nodes over the makespan (node-seconds the machine
+    /// could not sell).
+    pub lost_node_seconds: f64,
+    /// Machine availability: `1 - lost_node_seconds / (nodes * makespan)`.
+    pub availability: f64,
+}
+
+impl Default for ResilienceStats {
+    fn default() -> Self {
+        ResilienceStats {
+            node_failures: 0,
+            interrupted: 0,
+            rescued: 0,
+            requeued: 0,
+            rework_time: 0.0,
+            lost_node_seconds: 0.0,
+            availability: 1.0,
+        }
+    }
+}

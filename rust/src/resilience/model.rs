@@ -1,0 +1,159 @@
+//! Deterministic fault sources: MTBF/MTTR sampling, scripted fault
+//! traces and scheduled drain windows.
+//!
+//! Replay contract: all random failure times are drawn from a *dedicated*
+//! RNG stream (seeded from the run seed, salted — see
+//! [`FaultSpec::rng`]), pre-seeded per node in node order and then
+//! advanced only when fault events are processed.  Because repair and
+//! next-failure delays depend only on previous draws, the machine
+//! timeline is a pure function of (spec, seed): bit-identical across
+//! reruns and identical between the rigid and malleable runs of one
+//! scenario — the "same fault trace" the acceptance comparison needs.
+
+use crate::util::rng::Rng;
+use crate::{NodeId, Time};
+
+/// One scripted machine event (`fail node=3 at t=500, repair at t=2000`
+/// becomes a `Fail` and a `Repair` entry).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultTraceEvent {
+    pub at: Time,
+    pub node: NodeId,
+    pub kind: FaultKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Fail,
+    Repair,
+}
+
+/// Which nodes a drain window takes offline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DrainSet {
+    /// The first `n` node ids (`0..n`) — the nodes the deterministic
+    /// allocator prefers, so a count-drain is maximally disruptive.
+    Count(usize),
+    /// An explicit node list.
+    Nodes(Vec<NodeId>),
+}
+
+impl DrainSet {
+    /// Resolve to concrete node ids on a `total`-node machine.
+    pub fn node_ids(&self, total: usize) -> Vec<NodeId> {
+        match self {
+            DrainSet::Count(n) => (0..(*n).min(total)).collect(),
+            DrainSet::Nodes(v) => v.iter().copied().filter(|&n| n < total).collect(),
+        }
+    }
+}
+
+/// A scheduled maintenance window: the nodes stop accepting work at
+/// `start` (idle nodes go offline immediately; allocated nodes finish
+/// their current job first) and return at `end`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DrainWindow {
+    pub start: Time,
+    pub end: Time,
+    pub nodes: DrainSet,
+}
+
+/// The fault sources of one run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSpec {
+    /// Mean time between failures *per node*, seconds (exponential).
+    /// `0` disables random failures.
+    pub mtbf: f64,
+    /// Mean time to repair a failed node, seconds (exponential).
+    pub mttr: f64,
+    /// Scripted machine events, replayed verbatim.
+    pub scripted: Vec<FaultTraceEvent>,
+    /// Scheduled drain windows.
+    pub drains: Vec<DrainWindow>,
+}
+
+/// Salt folded into the run seed for the fault RNG, so the fault stream
+/// never aliases the cost-model stream (both start from the same seed).
+const FAULT_SEED_SALT: u64 = 0xFA11_5EED_D0E5_0B57;
+
+impl FaultSpec {
+    /// Whether this spec injects anything at all (an inactive spec leaves
+    /// the event stream byte-identical to a fault-free run).
+    pub fn is_active(&self) -> bool {
+        self.mtbf > 0.0 || !self.scripted.is_empty() || !self.drains.is_empty()
+    }
+
+    /// The dedicated fault RNG for a run seed.
+    pub fn rng(&self, seed: u64) -> Rng {
+        Rng::new(seed ^ FAULT_SEED_SALT)
+    }
+
+    /// First failure time per node (one exponential draw each, in node-id
+    /// order).  Empty when MTBF sampling is off.
+    pub fn initial_failures(&self, nodes: usize, rng: &mut Rng) -> Vec<(NodeId, Time)> {
+        if self.mtbf <= 0.0 {
+            return Vec::new();
+        }
+        (0..nodes).map(|n| (n, rng.exp(self.mtbf))).collect()
+    }
+
+    /// Repair delay and next-failure delay for one failure cycle (drawn in
+    /// that order, exactly once per processed auto-failure).
+    pub fn next_cycle(&self, rng: &mut Rng) -> (Time, Time) {
+        let repair = rng.exp(self.mttr.max(0.0));
+        let next_fail = rng.exp(self.mtbf.max(0.0));
+        (repair, next_fail)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inactive_by_default() {
+        let f = FaultSpec::default();
+        assert!(!f.is_active());
+        assert!(f.initial_failures(8, &mut f.rng(1)).is_empty());
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let f = FaultSpec { mtbf: 1000.0, mttr: 100.0, ..Default::default() };
+        assert!(f.is_active());
+        let draw = |seed| {
+            let mut rng = f.rng(seed);
+            let init = f.initial_failures(16, &mut rng);
+            let cycle = f.next_cycle(&mut rng);
+            (init, cycle)
+        };
+        assert_eq!(draw(7), draw(7), "same seed, same timeline");
+        assert_ne!(draw(7).0, draw(8).0, "different seeds differ");
+    }
+
+    #[test]
+    fn fault_stream_is_independent_of_cost_stream() {
+        // Same base seed must not produce the same first draw in both
+        // streams (the salt keeps them apart).
+        let f = FaultSpec { mtbf: 1.0, ..Default::default() };
+        let a = f.rng(42).next_u64();
+        let b = Rng::new(42).next_u64();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn drain_sets_resolve() {
+        assert_eq!(DrainSet::Count(3).node_ids(8), vec![0, 1, 2]);
+        assert_eq!(DrainSet::Count(9).node_ids(4), vec![0, 1, 2, 3], "clamped to machine");
+        assert_eq!(DrainSet::Nodes(vec![5, 2, 9]).node_ids(8), vec![5, 2]);
+    }
+
+    #[test]
+    fn initial_failures_cover_every_node_in_order() {
+        let f = FaultSpec { mtbf: 500.0, mttr: 50.0, ..Default::default() };
+        let init = f.initial_failures(5, &mut f.rng(3));
+        let ids: Vec<usize> = init.iter().map(|&(n, _)| n).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        assert!(init.iter().all(|&(_, t)| t >= 0.0));
+    }
+}

@@ -1,0 +1,127 @@
+//! Malleability-aware recovery: what happens to a running job when one of
+//! its nodes fails.
+//!
+//! * Every interrupted job first rolls back to its last checkpoint
+//!   ([`rework_lost`]): with a checkpoint interval `C`, the work done
+//!   since the most recent multiple of `C` seconds of *execution* time is
+//!   redone; `C == 0` models no checkpointing (restart from scratch).
+//! * A **malleable** job then attempts a DMR shrink onto its surviving
+//!   nodes ([`feasible_shrink`]): the largest factor-chain size that fits
+//!   the survivors, honoring the job's resize factor and minimum — the
+//!   same chain rules as [`crate::rms::policy::shrink_target`].  Only the
+//!   redistribution/scheduling cost is paid; the job keeps its nodes and
+//!   its checkpointed progress.
+//! * A **rigid** job (or a malleable one with no factor-reachable fit) is
+//!   killed and requeued; it restarts from the checkpoint once the
+//!   scheduler finds room again.
+
+use crate::rms::policy::{factor_reachable, shrink_target};
+
+/// Checkpoint/rework model knobs.
+#[derive(Debug, Clone)]
+pub struct RecoveryConfig {
+    /// Seconds of execution between checkpoints; `0` = no checkpointing
+    /// (an interrupted job loses all progress).
+    pub checkpoint_interval: f64,
+    /// Attempt the malleable shrink rescue (ablatable; `false` forces
+    /// every interrupted job through kill + requeue).
+    pub rescue: bool,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        RecoveryConfig { checkpoint_interval: 600.0, rescue: true }
+    }
+}
+
+/// Closed-form reference of the rework model: execution time lost to a
+/// failure is the progress since the last checkpoint.  `run_time` is the
+/// job's accumulated execution time.  The engine tracks checkpoint
+/// boundaries incrementally instead (recording the iterations held at
+/// each boundary, which stays exact when resizes change the iteration
+/// rate mid-interval); this form matches it whenever the rate was
+/// constant since the last checkpoint and anchors the model's unit
+/// tests.
+pub fn rework_lost(run_time: f64, checkpoint_interval: f64) -> f64 {
+    if checkpoint_interval > 0.0 {
+        run_time % checkpoint_interval
+    } else {
+        run_time
+    }
+}
+
+/// Largest factor-chain size reachable by shrinking from `current` that
+/// fits on `survivors` nodes and stays at or above `min_procs`.  `None`
+/// when no reachable size fits (the job must requeue).  `current <=
+/// survivors` (nothing lost below the current size — e.g. a failure that
+/// only ate uncommitted expansion nodes) keeps the current size.
+pub fn feasible_shrink(
+    current: usize,
+    survivors: usize,
+    factor: usize,
+    min_procs: usize,
+) -> Option<usize> {
+    if survivors == 0 || current == 0 {
+        return None;
+    }
+    if current <= survivors {
+        return (current >= min_procs).then_some(current);
+    }
+    if factor < 2 {
+        // Degenerate chain: any size is reachable.
+        return (survivors >= min_procs).then_some(survivors);
+    }
+    // Walk down the chain from `current`; `deepest` is where it ends
+    // (indivisible size or the min_procs floor).
+    let deepest = shrink_target(current, factor, min_procs);
+    let mut to = current;
+    while to > survivors {
+        if to == deepest {
+            return None; // chain exhausted above the survivor count
+        }
+        to /= factor;
+    }
+    debug_assert!(factor_reachable(current, to, factor));
+    (to >= min_procs).then_some(to)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rework_follows_checkpoint_grid() {
+        assert_eq!(rework_lost(1000.0, 600.0), 400.0);
+        assert_eq!(rework_lost(599.0, 600.0), 599.0);
+        assert_eq!(rework_lost(1200.0, 600.0), 0.0, "failure right at a checkpoint");
+        assert_eq!(rework_lost(1000.0, 0.0), 1000.0, "no checkpointing loses everything");
+        assert_eq!(rework_lost(0.0, 600.0), 0.0);
+    }
+
+    #[test]
+    fn shrink_rescue_walks_the_chain() {
+        // 32 procs, one node lost: 31 survivors -> 16.
+        assert_eq!(feasible_shrink(32, 31, 2, 2), Some(16));
+        // exactly-fitting survivor count keeps the chain step
+        assert_eq!(feasible_shrink(32, 16, 2, 2), Some(16));
+        assert_eq!(feasible_shrink(32, 15, 2, 2), Some(8));
+        // min_procs floors the walk
+        assert_eq!(feasible_shrink(8, 7, 2, 4), Some(4));
+        assert_eq!(feasible_shrink(8, 3, 2, 4), None, "4 does not fit 3 survivors");
+        // at the floor already: nothing reachable below
+        assert_eq!(feasible_shrink(2, 1, 2, 2), None);
+        // off-chain current sizes stop where the chain ends
+        assert_eq!(feasible_shrink(6, 5, 2, 1), Some(3));
+        assert_eq!(feasible_shrink(7, 6, 2, 1), None, "7 is indivisible by 2");
+    }
+
+    #[test]
+    fn shrink_rescue_edges() {
+        assert_eq!(feasible_shrink(16, 0, 2, 1), None, "no survivors");
+        // mid-expand failure: survivors can exceed the committed size
+        assert_eq!(feasible_shrink(16, 20, 2, 1), Some(16));
+        // factor 1: any size reachable, land on the survivors
+        assert_eq!(feasible_shrink(10, 7, 1, 2), Some(7));
+        assert_eq!(feasible_shrink(10, 1, 1, 2), None, "below min");
+    }
+}

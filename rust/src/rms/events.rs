@@ -2,7 +2,7 @@
 //! used by tests and by the evaluation reports.
 
 use super::policy::Action;
-use crate::{JobId, Time};
+use crate::{JobId, NodeId, Time};
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum RmsEvent {
@@ -18,6 +18,21 @@ pub enum RmsEvent {
     Shrunk { job: JobId, time: Time, from: usize, to: usize },
     /// Expansion aborted: the resizer job timed out (§5.2.1).
     ExpandAborted { job: JobId, time: Time },
+    // --- resilience events (crate::resilience) -----------------------
+    /// A node went down (failure injection).
+    NodeFailed { node: NodeId, time: Time },
+    /// A failed node was repaired and returned to the free pool.
+    NodeRepaired { node: NodeId, time: Time },
+    /// A maintenance drain took hold of a node.
+    DrainStarted { node: NodeId, time: Time },
+    /// A drain window ended for a node.
+    DrainEnded { node: NodeId, time: Time },
+    /// A running job lost `node` to a failure.
+    Interrupted { job: JobId, time: Time, node: NodeId },
+    /// An interrupted job was killed and requeued (rigid recovery).
+    Requeued { job: JobId, time: Time },
+    /// An interrupted malleable job shrank onto its surviving nodes.
+    Rescued { job: JobId, time: Time, from: usize, to: usize },
 }
 
 /// Append-only log with query helpers.
@@ -45,6 +60,18 @@ impl EventLog {
 
     pub fn shrinks(&self) -> usize {
         self.count(|e| matches!(e, RmsEvent::Shrunk { .. }))
+    }
+
+    pub fn node_failures(&self) -> usize {
+        self.count(|e| matches!(e, RmsEvent::NodeFailed { .. }))
+    }
+
+    pub fn rescues(&self) -> usize {
+        self.count(|e| matches!(e, RmsEvent::Rescued { .. }))
+    }
+
+    pub fn requeues(&self) -> usize {
+        self.count(|e| matches!(e, RmsEvent::Requeued { .. }))
     }
 
     /// Order-sensitive FNV-1a digest over every event and all its fields
@@ -118,6 +145,44 @@ impl EventLog {
                     mix(&mut h, *job);
                     mix(&mut h, time.to_bits());
                 }
+                RmsEvent::NodeFailed { node, time } => {
+                    mix(&mut h, 9);
+                    mix(&mut h, *node as u64);
+                    mix(&mut h, time.to_bits());
+                }
+                RmsEvent::NodeRepaired { node, time } => {
+                    mix(&mut h, 10);
+                    mix(&mut h, *node as u64);
+                    mix(&mut h, time.to_bits());
+                }
+                RmsEvent::DrainStarted { node, time } => {
+                    mix(&mut h, 11);
+                    mix(&mut h, *node as u64);
+                    mix(&mut h, time.to_bits());
+                }
+                RmsEvent::DrainEnded { node, time } => {
+                    mix(&mut h, 12);
+                    mix(&mut h, *node as u64);
+                    mix(&mut h, time.to_bits());
+                }
+                RmsEvent::Interrupted { job, time, node } => {
+                    mix(&mut h, 13);
+                    mix(&mut h, *job);
+                    mix(&mut h, time.to_bits());
+                    mix(&mut h, *node as u64);
+                }
+                RmsEvent::Requeued { job, time } => {
+                    mix(&mut h, 14);
+                    mix(&mut h, *job);
+                    mix(&mut h, time.to_bits());
+                }
+                RmsEvent::Rescued { job, time, from, to } => {
+                    mix(&mut h, 15);
+                    mix(&mut h, *job);
+                    mix(&mut h, time.to_bits());
+                    mix(&mut h, *from as u64);
+                    mix(&mut h, *to as u64);
+                }
             }
         }
         h
@@ -165,5 +230,42 @@ mod tests {
         let mut f = EventLog::default();
         f.push(RmsEvent::DmrDecision { job: 2, time: 3.0, action: Action::Shrink { to: 8 } });
         assert_ne!(e.digest(), f.digest());
+    }
+
+    #[test]
+    fn resilience_events_distinct_in_digest() {
+        let digest_of = |e: RmsEvent| {
+            let mut l = EventLog::default();
+            l.push(e);
+            l.digest()
+        };
+        let all = [
+            digest_of(RmsEvent::NodeFailed { node: 1, time: 2.0 }),
+            digest_of(RmsEvent::NodeRepaired { node: 1, time: 2.0 }),
+            digest_of(RmsEvent::DrainStarted { node: 1, time: 2.0 }),
+            digest_of(RmsEvent::DrainEnded { node: 1, time: 2.0 }),
+            digest_of(RmsEvent::Interrupted { job: 1, time: 2.0, node: 1 }),
+            digest_of(RmsEvent::Requeued { job: 1, time: 2.0 }),
+            digest_of(RmsEvent::Rescued { job: 1, time: 2.0, from: 8, to: 4 }),
+        ];
+        for (i, a) in all.iter().enumerate() {
+            for (j, b) in all.iter().enumerate() {
+                if i != j {
+                    assert_ne!(a, b, "variants {i} and {j} collide");
+                }
+            }
+        }
+        // field-sensitivity of the new variants
+        assert_ne!(
+            digest_of(RmsEvent::Rescued { job: 1, time: 2.0, from: 8, to: 4 }),
+            digest_of(RmsEvent::Rescued { job: 1, time: 2.0, from: 8, to: 2 }),
+        );
+        let mut log = EventLog::default();
+        log.push(RmsEvent::NodeFailed { node: 3, time: 1.0 });
+        log.push(RmsEvent::Rescued { job: 2, time: 1.0, from: 32, to: 16 });
+        log.push(RmsEvent::Requeued { job: 4, time: 2.0 });
+        assert_eq!(log.node_failures(), 1);
+        assert_eq!(log.rescues(), 1);
+        assert_eq!(log.requeues(), 1);
     }
 }

@@ -47,6 +47,10 @@ pub struct Job {
     /// Resizer jobs depend on their original job.
     pub depends_on: Option<JobId>,
     pub resize_log: Vec<ResizeEvent>,
+    /// Times the job was killed by a node failure and requeued
+    /// ([`crate::resilience`]); `start_time` then reflects the *last*
+    /// start and `resize_log` the last incarnation.
+    pub requeues: usize,
 }
 
 impl Job {
@@ -64,6 +68,7 @@ impl Job {
             is_resizer: false,
             depends_on: None,
             resize_log: Vec::new(),
+            requeues: 0,
         }
     }
 

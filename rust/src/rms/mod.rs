@@ -14,4 +14,4 @@ pub use events::{EventLog, RmsEvent};
 pub use job::{Job, JobState, ResizeEvent};
 pub use policy::{Action, DmrRequest, PolicyConfig, SystemView};
 pub use queue::PriorityWeights;
-pub use rms::{DmrOutcome, Rms, RmsConfig, Started, Telemetry};
+pub use rms::{DmrOutcome, NodeFailure, Rms, RmsConfig, Started, Telemetry};

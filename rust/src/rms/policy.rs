@@ -223,6 +223,31 @@ mod tests {
     }
 
     #[test]
+    fn target_boundaries() {
+        // expand_target when the cap sits below the next factor step:
+        // stay put (31 < 8*2*2, 15 < 8*2).
+        assert_eq!(expand_target(8, 2, 15), 8);
+        assert_eq!(expand_target(8, 2, 16), 16);
+        assert_eq!(expand_target(1, 2, 1), 1);
+        assert_eq!(expand_target(8, 2, 7), 8, "cap below current never shrinks");
+        // shrink_target at the floor: no movement
+        assert_eq!(shrink_target(8, 2, 8), 8);
+        // floor above current: shrink_target never moves upward
+        assert_eq!(shrink_target(8, 2, 9), 8);
+        // the chain stops where divisibility ends, not at the floor
+        assert_eq!(shrink_target(12, 2, 1), 3);
+        assert_eq!(shrink_target(1, 2, 1), 1);
+        // factor_reachable for non-chain targets
+        assert!(!factor_reachable(8, 12, 2), "12 is not on 8's factor-2 chain");
+        assert!(!factor_reachable(3, 10, 2));
+        assert!(factor_reachable(3, 48, 2), "48 = 3 * 2^4");
+        assert!(factor_reachable(5, 5, 3), "zero steps is always reachable");
+        // factor < 2 treats every target as reachable (degenerate chain)
+        assert!(factor_reachable(7, 9, 1));
+        assert!(factor_reachable(2, 9, 0));
+    }
+
+    #[test]
     fn forced_expand_41() {
         // App raises min above current => expand (resources permitting).
         let a = decide(&PolicyConfig::default(), 8, &req(16, 32, None), &view(24, 3, Some(64)));

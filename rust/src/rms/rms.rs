@@ -94,6 +94,14 @@ pub struct Started {
     pub nodes: Vec<NodeId>,
 }
 
+/// Victim report of a node failure ([`Rms::fail_node`]): the job that
+/// held the failed node and how many of its nodes survive.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeFailure {
+    pub job: JobId,
+    pub survivors: usize,
+}
+
 /// Outcome of a (synchronous) DMR check.
 #[derive(Debug, Clone)]
 pub enum DmrOutcome {
@@ -624,6 +632,104 @@ impl Rms {
     }
 
     // ------------------------------------------------------------------
+    // Resilience (crate::resilience): node failures, drains, recovery
+
+    /// A node failure at `node` hit the machine.  If a job held the node,
+    /// it becomes the failure's victim: the node is removed from its
+    /// allocation (it is gone) and the caller decides between the shrink
+    /// rescue ([`Rms::rescue_shrink_to`]) and kill + requeue
+    /// ([`Rms::requeue_after_failure`]).
+    pub fn fail_node(&mut self, node: NodeId, now: Time) -> Option<NodeFailure> {
+        let victim = self.cluster.force_down(node);
+        self.log.push(RmsEvent::NodeFailed { node, time: now });
+        let id = victim?;
+        let job = self.live.get_mut(&id).expect("failed node held by unknown job");
+        debug_assert!(job.is_active(), "victim job {id} not active");
+        debug_assert!(!job.is_resizer, "resizer jobs never hold nodes across events");
+        job.nodes.retain(|&n| n != node);
+        let survivors = job.nodes.len();
+        self.log.push(RmsEvent::Interrupted { job: id, time: now, node });
+        self.snapshot(now);
+        Some(NodeFailure { job: id, survivors })
+    }
+
+    /// Repair a failed node (no-op unless it is `Down`).  Returns whether
+    /// capacity was restored.
+    pub fn repair_node(&mut self, node: NodeId, now: Time) -> bool {
+        if *self.cluster.state(node) == crate::cluster::NodeState::Down {
+            self.cluster.set_up(node);
+            self.log.push(RmsEvent::NodeRepaired { node, time: now });
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Put a node into maintenance drain: idle nodes go offline now,
+    /// allocated nodes finish their current job first.
+    pub fn begin_drain(&mut self, node: NodeId, now: Time) {
+        self.cluster.begin_drain(node);
+        self.log.push(RmsEvent::DrainStarted { node, time: now });
+    }
+
+    /// End a node's maintenance drain.  Returns whether capacity was
+    /// restored (an offline node came back to the free pool).
+    pub fn end_drain(&mut self, node: NodeId, now: Time) -> bool {
+        let freed = self.cluster.end_drain(node);
+        self.log.push(RmsEvent::DrainEnded { node, time: now });
+        freed
+    }
+
+    /// Kill an interrupted job and put it back in the queue: its surviving
+    /// nodes are released and it competes for resources again (restarting
+    /// from its last checkpoint — the execution engine models the rework).
+    pub fn requeue_after_failure(&mut self, id: JobId, now: Time) {
+        let job = self.live.get_mut(&id).expect("requeue: unknown job");
+        assert!(job.is_active(), "requeue: job {id} not active");
+        assert!(!job.is_resizer, "requeue: resizer jobs cannot requeue");
+        let nodes = std::mem::take(&mut job.nodes);
+        job.state = JobState::Pending;
+        job.start_time = None;
+        job.expected_end = None;
+        job.requeues += 1;
+        job.resize_log.clear();
+        if !nodes.is_empty() {
+            self.cluster.release(id, &nodes).expect("requeue: release");
+        }
+        self.active.remove(&id);
+        self.active_user -= 1;
+        self.pending.push(id);
+        self.pending_user += 1;
+        self.invalidate_pending_order();
+        self.log.push(RmsEvent::Requeued { job: id, time: now });
+        self.snapshot(now);
+    }
+
+    /// Shrink an interrupted malleable job onto `to` of its surviving
+    /// nodes (the failure already removed the dead node): the tail beyond
+    /// `to` is released and the job keeps running.  The caller picked a
+    /// factor-reachable `to` via [`crate::resilience::feasible_shrink`].
+    pub fn rescue_shrink_to(&mut self, id: JobId, to: usize, now: Time) {
+        let (released, survivors) = {
+            let job = self.live.get_mut(&id).expect("rescue: unknown job");
+            assert!(job.is_active(), "rescue: job {id} not active");
+            let s = job.nodes.len();
+            assert!(to <= s, "rescue: target {to} > survivors {s}");
+            (job.nodes.split_off(to), s)
+        };
+        if !released.is_empty() {
+            self.cluster.release(id, &released).expect("rescue: release");
+        }
+        let job = self.live.get_mut(&id).unwrap();
+        job.state = JobState::Running;
+        // `from` is the pre-failure size: survivors + the node that died.
+        let from = survivors + 1;
+        job.resize_log.push(ResizeEvent { time: now, from_procs: from, to_procs: to });
+        self.log.push(RmsEvent::Rescued { job: id, time: now, from, to });
+        self.snapshot(now);
+    }
+
+    // ------------------------------------------------------------------
     // Telemetry
 
     fn snapshot(&mut self, now: Time) {
@@ -653,12 +759,17 @@ impl Rms {
         if !self.cluster.check_invariants() {
             return false;
         }
-        // Every active job's nodes are allocated to it; archived jobs
-        // hold nothing.
+        // Every active job's nodes are allocated to it (possibly mid-
+        // drain); archived jobs hold nothing.
         for j in self.live.values().chain(self.archived.values()) {
             if j.is_active() {
                 for &n in &j.nodes {
-                    if *self.cluster.state(n) != crate::cluster::NodeState::Allocated(j.id) {
+                    let owned = matches!(
+                        self.cluster.state(n),
+                        crate::cluster::NodeState::Allocated(id)
+                            | crate::cluster::NodeState::Draining(id) if *id == j.id
+                    );
+                    if !owned {
                         return false;
                     }
                 }

@@ -4,13 +4,21 @@
 //! Each SWF line carries 18 whitespace-separated fields; `;` lines are
 //! header comments and `-1` marks an unknown field.  The fields used here:
 //!
-//! | # | field                  | use                                    |
-//! |---|------------------------|----------------------------------------|
-//! | 2 | submit time (s)        | arrival, shifted so the trace starts 0 |
-//! | 4 | run time (s)           | modeled execution time                 |
-//! | 5 | allocated processors   | fallback size when request is unknown  |
-//! | 8 | requested processors   | submitted job size                     |
-//! | 9 | requested time (s)     | fallback runtime when run time unknown |
+//! | #  | field                  | use                                    |
+//! |----|------------------------|----------------------------------------|
+//! | 2  | submit time (s)        | arrival, shifted so the trace starts 0 |
+//! | 4  | run time (s)           | modeled execution time                 |
+//! | 5  | allocated processors   | fallback size when request is unknown  |
+//! | 8  | requested processors   | submitted job size                     |
+//! | 9  | requested time (s)     | fallback runtime when run time unknown |
+//! | 11 | status                 | failed/cancelled jobs skipped by default |
+//!
+//! Status semantics (SWF v2.2): `1` = completed, `0` = failed, `5` =
+//! cancelled, `2`–`4` = partial executions, `-1` = unknown.  By default
+//! only completed and unknown-status jobs are replayed — a trace job that
+//! never ran to completion carries a runtime that says nothing about its
+//! real demand; `SwfOptions::include_failed` restores the old
+//! replay-everything behavior.
 //!
 //! Real traces contain only rigid jobs; following *Evaluating Malleable
 //! Job Scheduling in HPC Clusters using Real-World Workloads* (Zojer et
@@ -34,6 +42,17 @@ pub struct SwfRecord {
     /// Processors the job asked for (requested, falling back to
     /// allocated).
     pub procs: usize,
+    /// SWF status field (`1` completed, `0` failed, `5` cancelled,
+    /// `2`–`4` partial, negative = unknown).
+    pub status: i64,
+}
+
+impl SwfRecord {
+    /// Whether the trace marks this job as having run to completion
+    /// (unknown statuses count as completed — old traces omit the field).
+    pub fn completed(&self) -> bool {
+        self.status == 1 || self.status < 0
+    }
 }
 
 /// Parse statistics — surfaced so spec files referencing a trace can be
@@ -49,6 +68,10 @@ pub struct SwfStats {
     /// Parseable records dropped for missing essentials (no positive
     /// runtime or processor count).
     pub skipped: usize,
+    /// Usable records whose status marks a job that never completed
+    /// (failed/cancelled/partial).  Kept in the trace; skipped at
+    /// materialization unless `SwfOptions::include_failed`.
+    pub nonsuccess: usize,
 }
 
 /// A parsed trace.
@@ -82,6 +105,9 @@ pub struct SwfOptions {
     pub time_scale: f64,
     /// Outer-loop iterations (reconfiguring points) per replayed job.
     pub iterations: u32,
+    /// Replay failed/cancelled/partial jobs too (by default only jobs the
+    /// trace marks completed — or with unknown status — are replayed).
+    pub include_failed: bool,
 }
 
 impl Default for SwfOptions {
@@ -94,6 +120,7 @@ impl Default for SwfOptions {
             factor: 2,
             time_scale: 1.0,
             iterations: 20,
+            include_failed: false,
         }
     }
 }
@@ -140,12 +167,19 @@ pub fn parse(text: &str) -> SwfTrace {
             stats.skipped += 1;
             continue;
         }
-        records.push(SwfRecord {
+        // Field 11 (index 10) is the status; absent/garbage = unknown.
+        let status = num(10).map(|s| s as i64).unwrap_or(-1);
+        let rec = SwfRecord {
             job_id: job_id.max(0.0) as u64,
             submit,
             runtime,
             procs: procs as usize,
-        });
+            status,
+        };
+        if !rec.completed() {
+            stats.nonsuccess += 1;
+        }
+        records.push(rec);
     }
     records.sort_by(|a, b| a.submit.total_cmp(&b.submit).then(a.job_id.cmp(&b.job_id)));
     let max_procs = records.iter().map(|r| r.procs).max().unwrap_or(0);
@@ -170,14 +204,18 @@ pub fn to_workload(trace: &SwfTrace, opts: &SwfOptions, seed: u64) -> WorkloadSp
         Some(n) if trace.max_procs > 0 => n as f64 / trace.max_procs as f64,
         _ => 1.0,
     };
-    let t0 = trace.records.first().map(|r| r.submit).unwrap_or(0.0);
-    let n = opts
-        .max_jobs
-        .unwrap_or(trace.records.len())
-        .min(trace.records.len());
+    // Jobs the trace marks as never having completed are skipped unless
+    // asked for (their recorded runtime says nothing about real demand).
+    let usable: Vec<&SwfRecord> = trace
+        .records
+        .iter()
+        .filter(|r| opts.include_failed || r.completed())
+        .collect();
+    let t0 = usable.first().map(|r| r.submit).unwrap_or(0.0);
+    let n = opts.max_jobs.unwrap_or(usable.len()).min(usable.len());
     let fs = crate::apps::config::config_for(AppKind::FlexibleSleep);
     let mut jobs = Vec::with_capacity(n);
-    for rec in &trace.records[..n] {
+    for rec in &usable[..n] {
         let procs = ((rec.procs as f64 * scale).round() as usize).max(1);
         let malleable = rng.f64() < opts.malleable_fraction;
         // Shrink-only malleability: submitted at the maximum (the paper's
@@ -246,21 +284,27 @@ garbage line that is not swf
         assert_eq!(t.stats.comments, 3);
         assert_eq!(t.stats.malformed, 1, "the garbage line");
         assert_eq!(t.stats.skipped, 1, "job 5: no runtime, no procs");
+        assert_eq!(t.stats.nonsuccess, 1, "job 3 is marked failed");
         assert_eq!(t.records.len(), 5);
         assert_eq!(t.max_procs, 64);
-        // -1 run time -> requested time
+        // -1 run time -> requested time; failed records stay in the trace
         let j3 = t.records.iter().find(|r| r.job_id == 3).unwrap();
         assert_eq!(j3.runtime, 300.0);
+        assert_eq!(j3.status, 0);
+        assert!(!j3.completed());
         // -1 requested procs -> allocated
         let j4 = t.records.iter().find(|r| r.job_id == 4).unwrap();
         assert_eq!(j4.procs, 4);
+        assert!(j4.completed());
     }
 
     #[test]
     fn workload_matches_trace_runtimes() {
         let t = parse(FIXTURE);
         let w = to_workload(&t, &SwfOptions::default(), 1);
-        assert_eq!(w.len(), 5);
+        // job 3 is marked failed (status 0) and skipped by default
+        assert_eq!(w.len(), 4);
+        assert!(!w.jobs.iter().any(|j| j.name == "swf-00003"));
         // arrivals shifted to start at 0 and stay sorted
         assert_eq!(w.jobs[0].submit_time, 0.0);
         for p in w.jobs.windows(2) {
@@ -273,6 +317,27 @@ garbage line that is not swf
         // rigid by default
         assert!(w.jobs.iter().all(|j| !j.malleable));
         assert!(w.jobs.iter().all(|j| j.min_procs == j.procs));
+    }
+
+    #[test]
+    fn include_failed_restores_noncompleted_jobs() {
+        let t = parse(FIXTURE);
+        let with = to_workload(
+            &t,
+            &SwfOptions { include_failed: true, ..Default::default() },
+            1,
+        );
+        assert_eq!(with.len(), 5);
+        assert!(with.jobs.iter().any(|j| j.name == "swf-00003"));
+        // max_jobs caps *usable* records: with job 3 filtered the cap
+        // reaches one record further into the trace
+        let capped = to_workload(
+            &t,
+            &SwfOptions { max_jobs: Some(3), ..Default::default() },
+            1,
+        );
+        let names: Vec<&str> = capped.jobs.iter().map(|j| j.name.as_str()).collect();
+        assert_eq!(names, vec!["swf-00001", "swf-00002", "swf-00004"]);
     }
 
     #[test]
@@ -320,7 +385,7 @@ garbage line that is not swf
     #[test]
     fn tiny_procs_never_shrink_below_one() {
         let trace = SwfTrace {
-            records: vec![SwfRecord { job_id: 1, submit: 0.0, runtime: 50.0, procs: 1 }],
+            records: vec![SwfRecord { job_id: 1, submit: 0.0, runtime: 50.0, procs: 1, status: 1 }],
             stats: SwfStats::default(),
             max_procs: 1,
         };
@@ -335,7 +400,7 @@ garbage line that is not swf
         // 6 procs, factor 2: the chain from 6 is {6, 3}; the minimum must
         // stop at 3 even with shrink_levels = 2.
         let trace = SwfTrace {
-            records: vec![SwfRecord { job_id: 1, submit: 0.0, runtime: 50.0, procs: 6 }],
+            records: vec![SwfRecord { job_id: 1, submit: 0.0, runtime: 50.0, procs: 6, status: 1 }],
             stats: SwfStats::default(),
             max_procs: 6,
         };

@@ -123,30 +123,42 @@ lull = 200.0
 #[test]
 fn swf_fixture_parses_from_disk() {
     let trace = swf::load("scenarios/traces/small.swf").unwrap();
-    assert_eq!(trace.records.len(), 24, "all 24 sample jobs usable");
+    assert_eq!(trace.records.len(), 24, "all 24 sample jobs parseable");
     assert!(trace.stats.comments >= 10, "header comment block");
     assert_eq!(trace.stats.malformed, 0);
+    assert_eq!(trace.stats.nonsuccess, 1, "job 10 is marked failed (status 0)");
     assert_eq!(trace.max_procs, 128);
     // job 10 has run time -1: requested time is the fallback
     let j10 = trace.records.iter().find(|r| r.job_id == 10).unwrap();
     assert_eq!(j10.runtime, 1200.0);
+    assert!(!j10.completed());
     // job 7 has requested procs -1: allocation is the fallback
     let j7 = trace.records.iter().find(|r| r.job_id == 7).unwrap();
     assert_eq!(j7.procs, 8);
 
-    // the replay spec's view of it: rescaled 128 -> 64, runtime preserved
+    // the replay spec's view of it: rescaled 128 -> 64, runtime
+    // preserved, and the failed job skipped by default
     let w = swf::to_workload(
         &trace,
         &swf::SwfOptions { rescale_nodes: Some(64), ..Default::default() },
         1,
     );
-    assert_eq!(w.len(), 24);
+    assert_eq!(w.len(), 23, "failed job 10 dropped");
+    assert!(!w.jobs.iter().any(|j| j.name == "swf-00010"));
     let biggest = w.jobs.iter().map(|j| j.procs).max().unwrap();
     assert_eq!(biggest, 64);
     for j in &w.jobs {
         assert!(j.procs >= 1);
         assert!(j.exec_time_at(j.procs) > 0.0);
     }
+    // the include_failed knob restores the old replay-everything behavior
+    let all = swf::to_workload(
+        &trace,
+        &swf::SwfOptions { rescale_nodes: Some(64), include_failed: true, ..Default::default() },
+        1,
+    );
+    assert_eq!(all.len(), 24);
+    assert!(all.jobs.iter().any(|j| j.name == "swf-00010"));
 }
 
 #[test]

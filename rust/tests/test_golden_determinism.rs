@@ -25,6 +25,10 @@ use dmr::campaign::{self, CampaignSpec};
 use dmr::des::{DesConfig, Engine};
 use dmr::dmr::SchedMode;
 use dmr::metrics::report;
+use dmr::resilience::{
+    DrainSet, DrainWindow, FaultKind, FaultSpec, FaultTraceEvent, RecoveryConfig,
+    ResilienceConfig,
+};
 use dmr::rms::RmsConfig;
 use dmr::workload;
 
@@ -52,6 +56,53 @@ fn run_digest(mode: &str, cache_pending_order: bool) -> String {
         r.events,
         r.rms.log.digest(),
         r.makespan.to_bits()
+    )
+}
+
+/// A fault-heavy run reduced to a digest line: MTBF sampling + a scripted
+/// failure + a drain window over the same 40-job stream.  The digest
+/// covers the failure events (NodeFailed/Interrupted/Rescued/Requeued/
+/// Drain*) through `EventLog::digest`, so any drift in the fault replay
+/// fails the fixture comparison.
+fn fault_run_digest(mode: &str) -> String {
+    let w = workload::generate(40, 17);
+    let (sched, flexible) = match mode {
+        "fixed" => (SchedMode::Sync, false),
+        "sync" => (SchedMode::Sync, true),
+        "async" => (SchedMode::Async, true),
+        other => panic!("unknown mode {other}"),
+    };
+    let w = if flexible { w } else { w.as_fixed() };
+    let cfg = DesConfig {
+        rms: RmsConfig { nodes: 64, ..Default::default() },
+        mode: sched,
+        resilience: ResilienceConfig {
+            faults: FaultSpec {
+                mtbf: 60_000.0,
+                mttr: 1_000.0,
+                scripted: vec![FaultTraceEvent { at: 300.0, node: 1, kind: FaultKind::Fail }],
+                drains: vec![DrainWindow {
+                    start: 1_500.0,
+                    end: 3_000.0,
+                    nodes: DrainSet::Count(6),
+                }],
+            },
+            recovery: RecoveryConfig { checkpoint_interval: 500.0, ..Default::default() },
+        },
+        ..Default::default()
+    };
+    let r = Engine::new(cfg).run(&w, mode);
+    assert_eq!(r.rms.completed_jobs(), 40, "fault-{mode}: workload must drain");
+    assert!(r.rms.check_invariants());
+    assert!(r.resilience.node_failures > 0, "fault-{mode}: the scripted failure must land");
+    format!(
+        "fault-{mode} events={} log={:016x} makespan={:016x} failures={} rescued={} requeued={}",
+        r.events,
+        r.rms.log.digest(),
+        r.makespan.to_bits(),
+        r.resilience.node_failures,
+        r.resilience.rescued,
+        r.resilience.requeued,
     )
 }
 
@@ -102,6 +153,57 @@ fn repeated_runs_bit_identical() {
     }
 }
 
+/// Fault replay is deterministic: same spec + seed produces bit-identical
+/// event logs (failure events included) across runs, in every mode.
+#[test]
+fn fault_injection_replays_bit_identical() {
+    for mode in ["fixed", "sync", "async"] {
+        assert_eq!(fault_run_digest(mode), fault_run_digest(mode), "fault-{mode}");
+    }
+}
+
+/// The rigid and malleable runs of one scenario face the *same* machine
+/// timeline: node-failure times come from a dedicated RNG stream whose
+/// draws never depend on job events, so one run's (node, time) failure
+/// sequence is a prefix of the other's (the longer makespan simply sees
+/// more of the shared timeline).
+#[test]
+fn fault_timeline_identical_across_modes() {
+    use dmr::rms::RmsEvent;
+    let failure_seq = |mode: &str, flexible: bool| -> Vec<(usize, u64)> {
+        let w = workload::generate(40, 17);
+        let w = if flexible { w } else { w.as_fixed() };
+        let cfg = DesConfig {
+            rms: RmsConfig { nodes: 64, ..Default::default() },
+            mode: SchedMode::Sync,
+            resilience: ResilienceConfig {
+                faults: FaultSpec { mtbf: 60_000.0, mttr: 1_000.0, ..Default::default() },
+                recovery: RecoveryConfig::default(),
+            },
+            ..Default::default()
+        };
+        let r = Engine::new(cfg).run(&w, mode);
+        r.rms
+            .log
+            .all()
+            .iter()
+            .filter_map(|e| match e {
+                RmsEvent::NodeFailed { node, time } => Some((*node, time.to_bits())),
+                _ => None,
+            })
+            .collect()
+    };
+    let fixed = failure_seq("fixed", false);
+    let sync = failure_seq("sync", true);
+    let n = fixed.len().min(sync.len());
+    assert!(n > 0, "both runs must observe failures");
+    assert_eq!(
+        &fixed[..n],
+        &sync[..n],
+        "rigid and malleable runs diverged on the shared machine timeline"
+    );
+}
+
 /// Campaign aggregates must not depend on the worker count.
 #[test]
 fn campaign_aggregates_identical_across_worker_counts() {
@@ -126,6 +228,8 @@ jobs = 10
 }
 
 /// Cross-PR drift lock: compare against (or record) the golden fixture.
+/// Covers the fault-free event streams, the campaign aggregate, and the
+/// fault-injection streams (failure events included).
 #[test]
 fn golden_fixture_locks_event_stream() {
     let mut lines: Vec<String> = ["fixed", "sync", "async"]
@@ -133,6 +237,9 @@ fn golden_fixture_locks_event_stream() {
         .map(|m| run_digest(m, true))
         .collect();
     lines.push(campaign_digest());
+    for m in ["fixed", "sync", "async"] {
+        lines.push(fault_run_digest(m));
+    }
     let body = format!("{}\n", lines.join("\n"));
 
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))

@@ -1,0 +1,224 @@
+//! Integration: the resilience engine end-to-end — scripted failures and
+//! drains through the DES, malleability-aware recovery (shrink rescue vs
+//! kill + requeue), the availability/rework metrics, and the acceptance
+//! scenario: malleable beats rigid under an identical fault trace.
+
+use dmr::apps::config::AppKind;
+use dmr::campaign::{self, CampaignSpec};
+use dmr::des::{DesConfig, Engine, RunResult};
+use dmr::resilience::{
+    DrainSet, DrainWindow, FaultKind, FaultSpec, FaultTraceEvent, RecoveryConfig,
+    ResilienceConfig,
+};
+use dmr::rms::RmsConfig;
+use dmr::workload::{JobSpec, WorkloadSpec};
+
+/// One CG job (32 procs, min 2, factor 2) submitted at t=0 on a 64-node
+/// machine; it runs ~600 s, so a scripted failure at t=50 is guaranteed
+/// to hit it (the deterministic allocator hands it nodes 0..31).
+fn one_cg_workload() -> WorkloadSpec {
+    let spec = JobSpec::from_app(AppKind::Cg, "CG-0".into(), 0.0, 1.0);
+    WorkloadSpec { jobs: vec![spec], seed: 1 }
+}
+
+fn run_with(faults: FaultSpec, recovery: RecoveryConfig, w: &WorkloadSpec) -> RunResult {
+    let cfg = DesConfig {
+        rms: RmsConfig { nodes: 64, ..Default::default() },
+        resilience: ResilienceConfig { faults, recovery },
+        ..Default::default()
+    };
+    Engine::new(cfg).run(w, "resilience-itest")
+}
+
+fn fail_at(node: usize, at: f64) -> FaultSpec {
+    FaultSpec {
+        scripted: vec![FaultTraceEvent { at, node, kind: FaultKind::Fail }],
+        ..Default::default()
+    }
+}
+
+#[test]
+fn malleable_job_is_rescued_by_shrink() {
+    let w = one_cg_workload();
+    let r = run_with(fail_at(5, 50.0), RecoveryConfig::default(), &w);
+    assert_eq!(r.rms.completed_jobs(), 1);
+    assert_eq!(r.resilience.node_failures, 1);
+    assert_eq!(r.resilience.interrupted, 1);
+    assert_eq!(r.resilience.rescued, 1, "32-proc CG shrinks onto 16 survivors");
+    assert_eq!(r.resilience.requeued, 0);
+    assert_eq!(r.rms.log.rescues(), 1);
+    // the job record shows the rescue as a shrink to a factor-chain size
+    let job = r.rms.jobs().next().unwrap();
+    let rescue = job.resize_log.first().unwrap();
+    assert_eq!((rescue.from_procs, rescue.to_procs), (32, 16));
+    // rework: 50 s of execution post-dated the (600 s) checkpoint grid
+    assert!((r.resilience.rework_time - 50.0).abs() < 1e-6, "{}", r.resilience.rework_time);
+    // the dead node stays down: availability dips below 1
+    assert!(r.resilience.availability < 1.0);
+    assert!(r.resilience.lost_node_seconds > 0.0);
+    assert!(r.rms.check_invariants());
+}
+
+#[test]
+fn rigid_job_is_requeued_with_rework() {
+    let w = one_cg_workload().as_fixed();
+    let r = run_with(fail_at(5, 50.0), RecoveryConfig::default(), &w);
+    assert_eq!(r.rms.completed_jobs(), 1, "requeued job still completes");
+    assert_eq!(r.resilience.interrupted, 1);
+    assert_eq!(r.resilience.rescued, 0);
+    assert_eq!(r.resilience.requeued, 1);
+    assert_eq!(r.rms.log.requeues(), 1);
+    let job = r.rms.jobs().next().unwrap();
+    assert_eq!(job.requeues, 1);
+    // it restarted on the 63 surviving nodes at the failure instant and
+    // redid the lost 50 s: exec ends later than the fault-free ~607 s
+    assert!(r.makespan > 650.0, "makespan {}", r.makespan);
+    assert!(r.rms.check_invariants());
+}
+
+#[test]
+fn no_checkpointing_loses_all_progress() {
+    let w = one_cg_workload().as_fixed();
+    let keep = run_with(
+        fail_at(5, 250.0),
+        RecoveryConfig { checkpoint_interval: 100.0, ..Default::default() },
+        &w,
+    );
+    let lose = run_with(
+        fail_at(5, 250.0),
+        RecoveryConfig { checkpoint_interval: 0.0, ..Default::default() },
+        &w,
+    );
+    assert!((keep.resilience.rework_time - 50.0).abs() < 1e-6, "50 s past the last checkpoint");
+    assert!((lose.resilience.rework_time - 250.0).abs() < 1e-6, "everything lost");
+    assert!(
+        lose.makespan > keep.makespan,
+        "restart-from-scratch {} must outlast checkpointed {}",
+        lose.makespan,
+        keep.makespan
+    );
+}
+
+#[test]
+fn shrink_below_min_falls_back_to_requeue() {
+    // An N-body job at its minimum (1 proc) has no reachable shrink: the
+    // failure must requeue it even though it is malleable.
+    let mut spec = JobSpec::from_app(AppKind::NBody, "NB-0".into(), 0.0, 1.0);
+    spec.procs = 1;
+    spec.min_procs = 1;
+    spec.max_procs = 1;
+    spec.pref_procs = None;
+    let w = WorkloadSpec { jobs: vec![spec], seed: 1 };
+    let r = run_with(fail_at(0, 50.0), RecoveryConfig::default(), &w);
+    assert_eq!(r.resilience.interrupted, 1);
+    assert_eq!(r.resilience.rescued, 0);
+    assert_eq!(r.resilience.requeued, 1);
+    assert_eq!(r.rms.completed_jobs(), 1);
+}
+
+#[test]
+fn drained_nodes_finish_their_job_then_go_offline() {
+    // Two rigid CG jobs (32 nodes each); a drain window [10, 100) over
+    // nodes 0..40 blocks the second job until the window ends.
+    let a = JobSpec::from_app(AppKind::Cg, "CG-A".into(), 0.0, 1.0);
+    let b = JobSpec::from_app(AppKind::Cg, "CG-B".into(), 20.0, 1.0);
+    let w = WorkloadSpec { jobs: vec![a, b], seed: 1 }.as_fixed();
+    let faults = FaultSpec {
+        drains: vec![DrainWindow { start: 10.0, end: 100.0, nodes: DrainSet::Count(40) }],
+        ..Default::default()
+    };
+    let r = run_with(faults, RecoveryConfig::default(), &w);
+    assert_eq!(r.rms.completed_jobs(), 2);
+    // A kept its 32 nodes through the window (drain never kills).
+    let ja = r.rms.jobs().find(|j| j.spec.name == "CG-A").unwrap();
+    assert_eq!(ja.start_time, Some(0.0));
+    assert!(ja.requeues == 0 && ja.resize_log.is_empty());
+    // B needed 32 nodes but only 24 were up inside the window: it starts
+    // exactly when the window ends.
+    let jb = r.rms.jobs().find(|j| j.spec.name == "CG-B").unwrap();
+    let start_b = jb.start_time.unwrap();
+    assert!((start_b - 100.0).abs() < 1e-9, "B started at {start_b}, want 100");
+    // 8 idle drained nodes were offline for the 90 s window
+    assert!((r.resilience.lost_node_seconds - 8.0 * 90.0).abs() < 1e-6);
+    assert!(r.rms.check_invariants());
+}
+
+#[test]
+fn node_repair_restores_capacity() {
+    // Fail an idle region before arrival, repair mid-queue: the second
+    // job starts at the repair.
+    let a = JobSpec::from_app(AppKind::Cg, "CG-A".into(), 0.0, 1.0);
+    let b = JobSpec::from_app(AppKind::Cg, "CG-B".into(), 5.0, 1.0);
+    let w = WorkloadSpec { jobs: vec![a, b], seed: 1 }.as_fixed();
+    let faults = FaultSpec {
+        scripted: (40..48)
+            .flat_map(|n| {
+                vec![
+                    FaultTraceEvent { at: 1.0, node: n, kind: FaultKind::Fail },
+                    FaultTraceEvent { at: 200.0, node: n, kind: FaultKind::Repair },
+                ]
+            })
+            .collect(),
+        ..Default::default()
+    };
+    let r = run_with(faults, RecoveryConfig::default(), &w);
+    assert_eq!(r.rms.completed_jobs(), 2);
+    let jb = r.rms.jobs().find(|j| j.spec.name == "CG-B").unwrap();
+    let start_b = jb.start_time.unwrap();
+    assert!((start_b - 200.0).abs() < 1e-9, "B started at {start_b}, want 200");
+}
+
+#[test]
+fn mtbf_runs_drain_and_are_deterministic() {
+    let w = dmr::workload::generate(25, 9);
+    let run = || {
+        let cfg = DesConfig {
+            rms: RmsConfig { nodes: 64, ..Default::default() },
+            resilience: ResilienceConfig {
+                faults: FaultSpec { mtbf: 40_000.0, mttr: 800.0, ..Default::default() },
+                recovery: RecoveryConfig::default(),
+            },
+            ..Default::default()
+        };
+        let r = Engine::new(cfg).run(&w, "mtbf");
+        assert_eq!(r.rms.completed_jobs(), 25, "faulty workload must still drain");
+        assert!(r.rms.check_invariants());
+        (r.rms.log.digest(), r.makespan.to_bits(), r.events)
+    };
+    assert_eq!(run(), run(), "fault replay must be bit-identical");
+}
+
+/// The acceptance scenario: the checked-in faulty_cluster campaign shows
+/// malleable jobs rescued by shrink and a lower completion time than the
+/// rigid configuration under the same fault trace.
+#[test]
+fn faulty_cluster_campaign_shows_the_malleability_dividend() {
+    let spec = CampaignSpec::from_file("scenarios/faulty_cluster.toml").unwrap();
+    assert_eq!(spec.matrix_size(), 6, "1 workload x 1 nodes x 2 modes x 3 seeds");
+    let res = campaign::run_campaign(&spec, 2).unwrap();
+    let aggs = campaign::aggregate(&res.records);
+    assert_eq!(aggs.len(), 2);
+    let fixed = aggs.iter().find(|a| a.scenario.ends_with("-fixed")).unwrap();
+    let sync = aggs.iter().find(|a| a.scenario.ends_with("-sync")).unwrap();
+
+    // Failures hit both configurations (same machine timeline) ...
+    assert!(fixed.interrupted.sum() > 0.0, "rigid runs saw no failures");
+    assert!(sync.interrupted.sum() > 0.0, "malleable runs saw no failures");
+    // ... but only malleable jobs get rescued,
+    assert!(sync.rescued.sum() > 0.0, "no malleable job was rescued by shrink");
+    assert_eq!(fixed.rescued.sum(), 0.0, "rigid jobs cannot be rescued");
+    assert!(fixed.requeued.sum() > 0.0, "rigid victims must requeue");
+    // ... and the malleable configuration completes the stream sooner.
+    assert!(
+        sync.completion_s.mean() < fixed.completion_s.mean(),
+        "malleable completion {} !< rigid completion {} under the same faults",
+        sync.completion_s.mean(),
+        fixed.completion_s.mean()
+    );
+    assert!(
+        sync.makespan_s.mean() < fixed.makespan_s.mean(),
+        "malleable makespan {} !< rigid makespan {}",
+        sync.makespan_s.mean(),
+        fixed.makespan_s.mean()
+    );
+}
