@@ -44,7 +44,18 @@ fn synth_trace(jobs: usize, seed: u64) -> swf::SwfTrace {
         let procs = 1usize << rng.below(8); // 1..=128
         let runtime = 60.0 + rng.exp(600.0);
         max_procs = max_procs.max(procs);
-        records.push(swf::SwfRecord { job_id: i as u64 + 1, submit: t, runtime, procs, status: 1 });
+        // Deal a small user population round-robin (deterministic — the
+        // checksummed event stream is user-agnostic under the default
+        // strategy, but the fairness metrics become meaningful).
+        let user = (i % 8) as i64 + 1;
+        records.push(swf::SwfRecord {
+            job_id: i as u64 + 1,
+            submit: t,
+            runtime,
+            procs,
+            status: 1,
+            user,
+        });
     }
     swf::SwfTrace { records, stats: swf::SwfStats::default(), max_procs }
 }

@@ -13,27 +13,49 @@ use crate::util::stats::Summary;
 
 /// Per-scenario aggregate over the scenario's seeds.
 pub struct ScenarioAgg {
+    /// Scenario id (all axes except the seed).
     pub scenario: String,
     /// Runs folded in (== number of seeds).
     pub runs: usize,
     /// Jobs per run.
     pub jobs: usize,
+    /// Makespan, seconds.
     pub makespan_s: Summary,
     /// Mean cluster utilization per run, in percent.
     pub util_pct: Summary,
+    /// Mean job waiting time per run, seconds.
     pub wait_s: Summary,
+    /// Mean job execution time per run, seconds.
     pub exec_s: Summary,
+    /// Mean job completion time per run, seconds.
     pub completion_s: Summary,
+    /// Node-seconds allocated to user jobs per run.
     pub node_seconds: Summary,
+    /// Committed expansions per run.
     pub expands: Summary,
+    /// Committed shrinks per run.
     pub shrinks: Summary,
+    /// Aborted (timed-out) expansions per run.
     pub expand_aborts: Summary,
+    // --- policy-comparison measures (crate::rms::policy) --------------
+    /// Mean bounded slowdown per run.
+    pub slowdown: Summary,
+    /// Jain's fairness index over per-user slowdowns, per run.
+    pub fairness: Summary,
+    /// Deadline misses per run.
+    pub deadline_misses: Summary,
     // --- resilience measures (crate::resilience) ----------------------
+    /// Jobs interrupted by node failures per run.
     pub interrupted: Summary,
+    /// Shrink-rescued jobs per run.
     pub rescued: Summary,
+    /// Killed-and-requeued jobs per run.
     pub requeued: Summary,
+    /// Checkpoint rework per run, seconds.
     pub rework_s: Summary,
+    /// Down-node integral per run, node-seconds.
     pub lost_node_s: Summary,
+    /// Machine availability per run, percent.
     pub availability_pct: Summary,
 }
 
@@ -52,6 +74,9 @@ impl ScenarioAgg {
             expands: Summary::new(),
             shrinks: Summary::new(),
             expand_aborts: Summary::new(),
+            slowdown: Summary::new(),
+            fairness: Summary::new(),
+            deadline_misses: Summary::new(),
             interrupted: Summary::new(),
             rescued: Summary::new(),
             requeued: Summary::new(),
@@ -73,6 +98,9 @@ impl ScenarioAgg {
         self.expands.push(s.actions.expand.count() as f64);
         self.shrinks.push(s.actions.shrink.count() as f64);
         self.expand_aborts.push(s.actions.expand_aborts as f64);
+        self.slowdown.push(s.bounded_slowdown.mean());
+        self.fairness.push(s.fairness_jain);
+        self.deadline_misses.push(s.deadline_misses as f64);
         self.interrupted.push(s.resilience.interrupted as f64);
         self.rescued.push(s.resilience.rescued as f64);
         self.requeued.push(s.resilience.requeued as f64);
@@ -98,8 +126,11 @@ pub fn aggregate(records: &[RunRecord]) -> Vec<ScenarioAgg> {
 
 /// The file set one campaign writes.
 pub struct CampaignOutputs {
+    /// One row per DES run, in matrix order.
     pub runs_csv: PathBuf,
+    /// One row per scenario (across-seed mean + 95 % CI).
     pub agg_csv: PathBuf,
+    /// The same aggregates as a JSON document.
     pub agg_json: PathBuf,
 }
 

@@ -12,6 +12,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::dmr::SchedMode;
 use crate::resilience::{DrainSet, DrainWindow, FaultKind, FaultTraceEvent};
+use crate::rms::PolicyStrategy;
 use crate::util::json::Json;
 use crate::util::toml;
 use crate::workload::swf::SwfOptions;
@@ -45,6 +46,20 @@ impl WorkloadSource {
     }
 }
 
+/// One `[[workload]]` entry: the source plus source-independent job
+/// decoration applied at materialization time.
+#[derive(Debug, Clone)]
+pub struct WorkloadAxis {
+    /// Where the job stream comes from.
+    pub source: WorkloadSource,
+    /// Soft-deadline slack: every job gets
+    /// `deadline = submit + slack × est_duration` (see
+    /// [`crate::workload::WorkloadSpec::with_deadlines`]).  `None` = no
+    /// deadlines — the deadline-aware strategy then degenerates to the
+    /// baseline and the miss columns stay 0.
+    pub deadline_slack: Option<f64>,
+}
+
 /// The run mode axis: the paper's rigid baseline plus the two DMR
 /// scheduling modes (§5.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -58,6 +73,7 @@ pub enum RunMode {
 }
 
 impl RunMode {
+    /// Parse a spec-file mode name.
     pub fn parse(s: &str) -> Result<RunMode> {
         match s {
             "fixed" => Ok(RunMode::Fixed),
@@ -67,6 +83,7 @@ impl RunMode {
         }
     }
 
+    /// Short label used in scenario ids and CSV cells.
     pub fn label(&self) -> &'static str {
         match self {
             RunMode::Fixed => "fixed",
@@ -86,33 +103,57 @@ impl RunMode {
 }
 
 /// Policy-knob axes; each knob is a list so it can be swept (defaults are
-/// the `RmsConfig` defaults, a single-point axis).
+/// the `RmsConfig` defaults, a single-point axis).  `strategy` sweeps the
+/// reconfiguration-policy engine itself ([`PolicyStrategy`]); the boolean
+/// knobs ablate within a strategy.
 #[derive(Debug, Clone)]
 pub struct PolicyAxis {
+    /// Which reconfiguration strategies to run (`[policy] strategy`).
+    pub strategy: Vec<PolicyStrategy>,
+    /// EASY-backfill on/off.
     pub backfill: Vec<bool>,
+    /// §4.3 max-priority boost for the shrink trigger, on/off.
     pub shrink_boost: Vec<bool>,
+    /// §4.2 preferred-size handling, on/off.
     pub honor_preference: Vec<bool>,
+    /// §4.3 wide optimization, on/off.
     pub wide_optimization: Vec<bool>,
+    /// QueueAware pending-pressure threshold (scalar tuning knob, shared
+    /// by every run — see `PolicyConfig::queue_pressure`).
+    pub queue_pressure: usize,
+    /// FairShare over/under-share tolerance, ≥ 1 (scalar tuning knob —
+    /// see `PolicyConfig::fair_share_slack`).
+    pub fair_share_slack: f64,
 }
 
 impl Default for PolicyAxis {
     fn default() -> Self {
+        let knobs = crate::rms::PolicyConfig::default();
         PolicyAxis {
+            strategy: vec![PolicyStrategy::ThroughputAware],
             backfill: vec![true],
             shrink_boost: vec![true],
             honor_preference: vec![true],
             wide_optimization: vec![true],
+            queue_pressure: knobs.queue_pressure,
+            fair_share_slack: knobs.fair_share_slack,
         }
     }
 }
 
 impl PolicyAxis {
-    /// Whether any knob is actually swept (affects scenario ids).
+    /// Whether any boolean knob is actually swept (affects scenario ids).
     fn swept(&self) -> bool {
         self.backfill.len() > 1
             || self.shrink_boost.len() > 1
             || self.honor_preference.len() > 1
             || self.wide_optimization.len() > 1
+    }
+
+    /// Whether the strategy axis is swept (per-strategy scenario
+    /// suffixes).
+    fn strategy_swept(&self) -> bool {
+        self.strategy.len() > 1
     }
 }
 
@@ -165,12 +206,21 @@ pub struct RunPlan {
     pub label: String,
     /// Index into `CampaignSpec::workloads`.
     pub workload: usize,
+    /// Cluster size of this matrix point.
     pub nodes: usize,
+    /// Run mode (rigid baseline / sync / async).
     pub mode: RunMode,
+    /// Seed of this run (workload sampling + DES cost jitter).
     pub seed: u64,
+    /// Reconfiguration strategy of this matrix point.
+    pub strategy: PolicyStrategy,
+    /// EASY-backfill knob.
     pub backfill: bool,
+    /// Shrink-trigger priority-boost knob.
     pub shrink_boost: bool,
+    /// §4.2 preferred-size knob.
     pub honor_preference: bool,
+    /// §4.3 wide-optimization knob.
     pub wide_optimization: bool,
     /// Per-node MTBF of this matrix point (0 = no random failures).
     pub mtbf: f64,
@@ -181,16 +231,23 @@ pub struct RunPlan {
 /// A parsed campaign specification.
 #[derive(Debug, Clone)]
 pub struct CampaignSpec {
+    /// Campaign name (also names the output files).
     pub name: String,
     /// Where per-run and aggregate outputs land.
     pub output_dir: PathBuf,
     /// Worker threads (0 = one per available core); `--workers` overrides.
     pub workers: usize,
-    pub workloads: Vec<WorkloadSource>,
+    /// The `[[workload]]` axis entries.
+    pub workloads: Vec<WorkloadAxis>,
+    /// Cluster-size axis.
     pub nodes: Vec<usize>,
+    /// Run-mode axis.
     pub modes: Vec<RunMode>,
+    /// Seed axis (one run per seed per scenario).
     pub seeds: Vec<u64>,
+    /// Policy strategies + knobs.
     pub policy: PolicyAxis,
+    /// Fault-injection axis.
     pub faults: FaultAxis,
 }
 
@@ -209,11 +266,13 @@ impl CampaignSpec {
         spec.with_context(|| format!("in campaign spec {path:?}"))
     }
 
+    /// Parse from TOML text (the subset in [`crate::util::toml`]).
     pub fn from_toml_str(text: &str) -> Result<CampaignSpec> {
         let v = toml::parse(text).map_err(|e| anyhow!("{e}"))?;
         Self::from_value(&v)
     }
 
+    /// Parse from JSON text (same document shape as the TOML form).
     pub fn from_json_str(text: &str) -> Result<CampaignSpec> {
         let v = Json::parse(text).map_err(|e| anyhow!("json: {e}"))?;
         Self::from_value(&v)
@@ -270,29 +329,72 @@ impl CampaignSpec {
 
         let policy = match v.get("policy") {
             None => PolicyAxis::default(),
-            Some(p) => PolicyAxis {
-                backfill: bool_list(p.get("backfill"), "policy.backfill")?
+            Some(p) => {
+                let d = PolicyAxis::default();
+                let fair_share_slack = match p.get("fair_share_slack") {
+                    None => d.fair_share_slack,
+                    Some(x) => {
+                        let s = x
+                            .as_f64()
+                            .context("`policy.fair_share_slack` must be a number")?;
+                        if !(s.is_finite() && s >= 1.0) {
+                            bail!("`policy.fair_share_slack` must be >= 1 (got {s})");
+                        }
+                        s
+                    }
+                };
+                let queue_pressure = match p.get("queue_pressure") {
+                    None => d.queue_pressure,
+                    Some(x) => usize_scalar(Some(x), "policy.queue_pressure")?,
+                };
+                PolicyAxis {
+                    strategy: strategy_list(p.get("strategy"))?
+                        .unwrap_or_else(|| vec![PolicyStrategy::ThroughputAware]),
+                    backfill: bool_list(p.get("backfill"), "policy.backfill")?
+                        .unwrap_or_else(|| vec![true]),
+                    shrink_boost: bool_list(p.get("shrink_boost"), "policy.shrink_boost")?
+                        .unwrap_or_else(|| vec![true]),
+                    honor_preference: bool_list(
+                        p.get("honor_preference"),
+                        "policy.honor_preference",
+                    )?
                     .unwrap_or_else(|| vec![true]),
-                shrink_boost: bool_list(p.get("shrink_boost"), "policy.shrink_boost")?
+                    wide_optimization: bool_list(
+                        p.get("wide_optimization"),
+                        "policy.wide_optimization",
+                    )?
                     .unwrap_or_else(|| vec![true]),
-                honor_preference: bool_list(
-                    p.get("honor_preference"),
-                    "policy.honor_preference",
-                )?
-                .unwrap_or_else(|| vec![true]),
-                wide_optimization: bool_list(
-                    p.get("wide_optimization"),
-                    "policy.wide_optimization",
-                )?
-                .unwrap_or_else(|| vec![true]),
-            },
+                    queue_pressure,
+                    fair_share_slack,
+                }
+            }
         };
+        if policy.strategy.is_empty() {
+            bail!("`policy.strategy` must not be empty");
+        }
 
         let max_nodes = nodes.iter().copied().max().unwrap_or(0);
         let faults = match v.get("faults") {
             None => FaultAxis::default(),
             Some(f) => parse_faults(f, max_nodes)?,
         };
+
+        // A duplicate entry on any swept axis would emit two *non-adjacent*
+        // scenario blocks with identical ids; aggregate() merges only
+        // adjacent records, so the aggregate CSV would carry duplicate
+        // scenario rows each holding a fraction of the seeds.  (Duplicate
+        // [[workload]] sources are fine — expand() disambiguates their
+        // labels with a -w<index> suffix.)
+        no_duplicates(&nodes, "nodes")?;
+        no_duplicates(&modes, "modes")?;
+        no_duplicates(&seeds, "seeds")?;
+        no_duplicates(&policy.strategy, "policy.strategy")?;
+        no_duplicates(&policy.backfill, "policy.backfill")?;
+        no_duplicates(&policy.shrink_boost, "policy.shrink_boost")?;
+        no_duplicates(&policy.honor_preference, "policy.honor_preference")?;
+        no_duplicates(&policy.wide_optimization, "policy.wide_optimization")?;
+        no_duplicates(&faults.mtbf, "faults.mtbf")?;
+        no_duplicates(&faults.checkpoint_interval, "faults.checkpoint_interval")?;
 
         Ok(CampaignSpec {
             name,
@@ -313,6 +415,7 @@ impl CampaignSpec {
             * self.nodes.len()
             * self.modes.len()
             * self.seeds.len()
+            * self.policy.strategy.len()
             * self.policy.backfill.len()
             * self.policy.shrink_boost.len()
             * self.policy.honor_preference.len()
@@ -322,17 +425,19 @@ impl CampaignSpec {
     }
 
     /// Expand the cartesian matrix into the flat, deterministic run list.
-    /// Order: workload (outer) → nodes → mode → policy knobs → seed
-    /// (inner), so all seeds of one scenario are adjacent.
+    /// Order: workload (outer) → nodes → mode → strategy → policy knobs →
+    /// faults → seed (inner), so all seeds of one scenario are adjacent.
     pub fn expand(&self) -> Vec<RunPlan> {
         let mut plans = Vec::with_capacity(self.matrix_size());
         let swept = self.policy.swept();
+        let strat_swept = self.policy.strategy_swept();
         // Labels only encode kind + size; two same-kind sources differing
         // in other params (e.g. two feitelson-30 with different
         // inter-arrivals) would collide and aggregate() would silently
         // merge them — disambiguate with the workload's position.
         let labels: Vec<String> = {
-            let raw: Vec<String> = self.workloads.iter().map(|w| w.label()).collect();
+            let raw: Vec<String> =
+                self.workloads.iter().map(|w| w.source.label()).collect();
             raw.iter()
                 .enumerate()
                 .map(|(i, l)| {
@@ -348,50 +453,57 @@ impl CampaignSpec {
         for wi in 0..self.workloads.len() {
             for &nodes in &self.nodes {
                 for &mode in &self.modes {
-                    for &backfill in &self.policy.backfill {
-                        for &shrink_boost in &self.policy.shrink_boost {
-                            for &honor_preference in &self.policy.honor_preference {
-                                for &wide_optimization in &self.policy.wide_optimization {
-                                    for &mtbf in &self.faults.mtbf {
-                                        for &ckpt in &self.faults.checkpoint_interval {
-                                            let mut scenario = format!(
-                                                "{}-n{}-{}",
-                                                labels[wi],
-                                                nodes,
-                                                mode.label()
-                                            );
-                                            if swept {
-                                                scenario.push_str(&format!(
-                                                    "-bf{}-sb{}-hp{}-wo{}",
-                                                    u8::from(backfill),
-                                                    u8::from(shrink_boost),
-                                                    u8::from(honor_preference),
-                                                    u8::from(wide_optimization),
-                                                ));
-                                            }
-                                            if faults_swept {
-                                                scenario.push_str(&format!(
-                                                    "-mtbf{}-ck{}",
-                                                    fmt_axis(mtbf),
-                                                    fmt_axis(ckpt),
-                                                ));
-                                            }
-                                            for &seed in &self.seeds {
-                                                plans.push(RunPlan {
-                                                    index: plans.len(),
-                                                    scenario: scenario.clone(),
-                                                    label: format!("{scenario}-s{seed}"),
-                                                    workload: wi,
+                    for &strategy in &self.policy.strategy {
+                        for &backfill in &self.policy.backfill {
+                            for &shrink_boost in &self.policy.shrink_boost {
+                                for &honor_preference in &self.policy.honor_preference {
+                                    for &wide_optimization in &self.policy.wide_optimization {
+                                        for &mtbf in &self.faults.mtbf {
+                                            for &ckpt in &self.faults.checkpoint_interval {
+                                                let mut scenario = format!(
+                                                    "{}-n{}-{}",
+                                                    labels[wi],
                                                     nodes,
-                                                    mode,
-                                                    seed,
-                                                    backfill,
-                                                    shrink_boost,
-                                                    honor_preference,
-                                                    wide_optimization,
-                                                    mtbf,
-                                                    checkpoint_interval: ckpt,
-                                                });
+                                                    mode.label()
+                                                );
+                                                if strat_swept {
+                                                    scenario.push('-');
+                                                    scenario.push_str(strategy.label());
+                                                }
+                                                if swept {
+                                                    scenario.push_str(&format!(
+                                                        "-bf{}-sb{}-hp{}-wo{}",
+                                                        u8::from(backfill),
+                                                        u8::from(shrink_boost),
+                                                        u8::from(honor_preference),
+                                                        u8::from(wide_optimization),
+                                                    ));
+                                                }
+                                                if faults_swept {
+                                                    scenario.push_str(&format!(
+                                                        "-mtbf{}-ck{}",
+                                                        fmt_axis(mtbf),
+                                                        fmt_axis(ckpt),
+                                                    ));
+                                                }
+                                                for &seed in &self.seeds {
+                                                    plans.push(RunPlan {
+                                                        index: plans.len(),
+                                                        scenario: scenario.clone(),
+                                                        label: format!("{scenario}-s{seed}"),
+                                                        workload: wi,
+                                                        nodes,
+                                                        mode,
+                                                        seed,
+                                                        strategy,
+                                                        backfill,
+                                                        shrink_boost,
+                                                        honor_preference,
+                                                        wide_optimization,
+                                                        mtbf,
+                                                        checkpoint_interval: ckpt,
+                                                    });
+                                                }
                                             }
                                         }
                                     }
@@ -415,7 +527,24 @@ fn fmt_axis(x: f64) -> String {
     }
 }
 
-fn parse_workload(w: &Json) -> Result<WorkloadSource> {
+fn parse_workload(w: &Json) -> Result<WorkloadAxis> {
+    let deadline_slack = match w.get("deadline_slack") {
+        None => None,
+        Some(x) => {
+            let s = x
+                .as_f64()
+                .context("[[workload]] `deadline_slack` must be a number")?;
+            if !(s.is_finite() && s > 0.0) {
+                bail!("[[workload]] `deadline_slack` must be positive (got {s})");
+            }
+            Some(s)
+        }
+    };
+    let source = parse_workload_source(w)?;
+    Ok(WorkloadAxis { source, deadline_slack })
+}
+
+fn parse_workload_source(w: &Json) -> Result<WorkloadSource> {
     let kind = w
         .get("kind")
         .and_then(|k| k.as_str())
@@ -642,6 +771,39 @@ fn f64_list(v: Option<&Json>, what: &str) -> Result<Option<Vec<f64>>> {
     }
 }
 
+/// Reject a repeated entry on a swept axis (see the call site in
+/// [`CampaignSpec::from_value`] for why duplicates corrupt aggregation).
+fn no_duplicates<T: PartialEq + std::fmt::Debug>(axis: &[T], what: &str) -> Result<()> {
+    if let Some((_, dup)) = axis
+        .iter()
+        .enumerate()
+        .find(|(i, x)| axis[..*i].contains(*x))
+    {
+        bail!("`{what}` lists {dup:?} more than once");
+    }
+    Ok(())
+}
+
+/// Parse `[policy] strategy = ["throughput", ...]` via
+/// [`PolicyStrategy::parse`].
+fn strategy_list(v: Option<&Json>) -> Result<Option<Vec<PolicyStrategy>>> {
+    match v {
+        None => Ok(None),
+        Some(j) => Ok(Some(
+            j.as_arr()
+                .context("`policy.strategy` must be an array of strings")?
+                .iter()
+                .map(|x| {
+                    let s = x
+                        .as_str()
+                        .context("`policy.strategy` entries must be strings")?;
+                    PolicyStrategy::parse(s).map_err(|e| anyhow!("{e}"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        )),
+    }
+}
+
 fn bool_list(v: Option<&Json>, what: &str) -> Result<Option<Vec<bool>>> {
     match v {
         None => Ok(None),
@@ -696,12 +858,16 @@ malleable_fraction = 0.5
         assert_eq!(s.modes, vec![RunMode::Fixed, RunMode::Sync, RunMode::Async]);
         assert_eq!(s.seeds, vec![1, 2]);
         assert_eq!(s.workloads.len(), 3);
-        assert!(matches!(s.workloads[0], WorkloadSource::Feitelson { jobs: 10, .. }));
         assert!(matches!(
-            s.workloads[1],
+            s.workloads[0].source,
+            WorkloadSource::Feitelson { jobs: 10, .. }
+        ));
+        assert!(matches!(
+            s.workloads[1].source,
             WorkloadSource::BurstLull { jobs: 12, burst: 4, .. }
         ));
-        let WorkloadSource::Swf { ref path, ref opts } = s.workloads[2] else {
+        assert!(s.workloads.iter().all(|w| w.deadline_slack.is_none()));
+        let WorkloadSource::Swf { ref path, ref opts } = s.workloads[2].source else {
             panic!("expected swf source");
         };
         assert_eq!(path, "scenarios/traces/small.swf");
@@ -758,6 +924,8 @@ malleable_fraction = 0.5
         assert_eq!(s.workers, 0);
         assert_eq!(s.output_dir, Path::new("results/campaigns/d"));
         assert_eq!(s.policy.backfill, vec![true]);
+        assert_eq!(s.policy.strategy, vec![PolicyStrategy::ThroughputAware]);
+        assert_eq!(s.expand()[0].strategy, PolicyStrategy::ThroughputAware);
     }
 
     #[test]
@@ -778,6 +946,92 @@ jobs = 4
         let plans = s.expand();
         assert!(plans[0].scenario.contains("-bf1-"));
         assert!(plans[1].scenario.contains("-bf0-"));
+    }
+
+    #[test]
+    fn strategy_sweep_expands_and_labels() {
+        let toml = r#"
+name = "strat"
+nodes = [32]
+modes = ["sync"]
+seeds = [1, 2]
+[policy]
+strategy = ["throughput", "queue", "fair", "deadline"]
+[[workload]]
+kind = "feitelson"
+jobs = 4
+deadline_slack = 3.0
+"#;
+        let s = CampaignSpec::from_toml_str(toml).unwrap();
+        assert_eq!(s.policy.strategy.len(), 4);
+        assert_eq!(s.workloads[0].deadline_slack, Some(3.0));
+        // scalar strategy knobs default from PolicyConfig
+        assert_eq!(s.policy.queue_pressure, 2);
+        assert_eq!(s.policy.fair_share_slack, 1.25);
+        assert_eq!(s.matrix_size(), 4 * 2);
+        let plans = s.expand();
+        assert_eq!(plans.len(), 8);
+        // per-strategy scenario suffixes, seeds adjacent within each
+        assert_eq!(plans[0].scenario, "feitelson4-n32-sync-throughput");
+        assert_eq!(plans[2].scenario, "feitelson4-n32-sync-queue");
+        assert_eq!(plans[4].scenario, "feitelson4-n32-sync-fair");
+        assert_eq!(plans[6].scenario, "feitelson4-n32-sync-deadline");
+        assert_eq!(plans[2].strategy, PolicyStrategy::QueueAware);
+        assert_eq!(plans[4].strategy, PolicyStrategy::FairShare);
+        assert_eq!(plans[6].strategy, PolicyStrategy::DeadlineAware);
+        assert_eq!(plans[0].seed, 1);
+        assert_eq!(plans[1].seed, 2);
+
+        // single-strategy specs keep their unsuffixed scenario ids
+        let single = CampaignSpec::from_toml_str(
+            "name = \"one\"\nmodes = [\"sync\"]\n[policy]\nstrategy = [\"queue\"]\n[[workload]]\nkind = \"feitelson\"\njobs = 2\n",
+        )
+        .unwrap();
+        let p = single.expand();
+        assert!(!p[0].scenario.contains("queue"), "{}", p[0].scenario);
+        assert_eq!(p[0].strategy, PolicyStrategy::QueueAware);
+
+        // bad strategy names, duplicates, and bad slack are rejected
+        assert!(CampaignSpec::from_toml_str(
+            "name = \"x\"\n[policy]\nstrategy = [\"warp\"]\n[[workload]]\nkind = \"feitelson\"\njobs = 1\n"
+        )
+        .is_err());
+        assert!(
+            CampaignSpec::from_toml_str(
+                "name = \"x\"\n[policy]\nstrategy = [\"queue\", \"fair\", \"queue\"]\n[[workload]]\nkind = \"feitelson\"\njobs = 1\n"
+            )
+            .is_err(),
+            "duplicate strategy entries must be rejected"
+        );
+        // scalar knobs parse, and out-of-range values are rejected
+        let knobs = CampaignSpec::from_toml_str(
+            "name = \"k\"\n[policy]\nqueue_pressure = 4\nfair_share_slack = 1.5\n[[workload]]\nkind = \"feitelson\"\njobs = 1\n",
+        )
+        .unwrap();
+        assert_eq!(knobs.policy.queue_pressure, 4);
+        assert_eq!(knobs.policy.fair_share_slack, 1.5);
+        assert!(CampaignSpec::from_toml_str(
+            "name = \"x\"\n[policy]\nfair_share_slack = 0.5\n[[workload]]\nkind = \"feitelson\"\njobs = 1\n"
+        )
+        .is_err());
+        assert!(CampaignSpec::from_toml_str(
+            "name = \"x\"\n[policy]\nqueue_pressure = -1\n[[workload]]\nkind = \"feitelson\"\njobs = 1\n"
+        )
+        .is_err());
+        // the duplicate guard covers every swept axis, not just strategy
+        for bad in [
+            "name = \"x\"\nmodes = [\"sync\", \"fixed\", \"sync\"]\n[[workload]]\nkind = \"feitelson\"\njobs = 1\n",
+            "name = \"x\"\nnodes = [32, 32]\n[[workload]]\nkind = \"feitelson\"\njobs = 1\n",
+            "name = \"x\"\nseeds = [1, 2, 1]\n[[workload]]\nkind = \"feitelson\"\njobs = 1\n",
+            "name = \"x\"\n[faults]\nmtbf = [0.0, 60000.0, 0.0]\n[[workload]]\nkind = \"feitelson\"\njobs = 1\n",
+            "name = \"x\"\n[policy]\nbackfill = [true, true]\n[[workload]]\nkind = \"feitelson\"\njobs = 1\n",
+        ] {
+            assert!(CampaignSpec::from_toml_str(bad).is_err(), "accepted: {bad}");
+        }
+        assert!(CampaignSpec::from_toml_str(
+            "name = \"x\"\n[[workload]]\nkind = \"feitelson\"\njobs = 1\ndeadline_slack = -2.0\n"
+        )
+        .is_err());
     }
 
     #[test]

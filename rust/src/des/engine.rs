@@ -43,10 +43,15 @@ use crate::{JobId, NodeId, Time};
 /// DES configuration.
 #[derive(Debug, Clone)]
 pub struct DesConfig {
+    /// Workload-manager configuration (cluster size, policy strategy…).
     pub rms: RmsConfig,
+    /// Synchronous or asynchronous DMR scheduling (§5.1).
     pub mode: SchedMode,
+    /// Reconfiguration cost model (Table 2 calibration).
     pub costs: CostModel,
+    /// Iteration-time execution model (Table 1 calibration).
     pub exec: ExecModel,
+    /// Seed of the cost-jitter RNG (and, via the runner, the workload).
     pub seed: u64,
     /// Fault injection + recovery (default: inactive — the event stream is
     /// then byte-identical to a fault-free build).
@@ -69,19 +74,29 @@ impl Default for DesConfig {
 /// Per-action timing statistics (Table 2).
 #[derive(Debug, Clone, Default)]
 pub struct ActionStats {
+    /// Decision-only costs of no-action calls.
     pub no_action: Summary,
+    /// End-to-end expansion times (wait + protocol).
     pub expand: Summary,
+    /// End-to-end shrink times.
     pub shrink: Summary,
+    /// Expansions abandoned at the resizer-job timeout.
     pub expand_aborts: u64,
 }
 
 /// Everything measured from one workload run.
 pub struct RunResult {
+    /// Run label (scenario + seed for campaigns).
     pub label: String,
+    /// The final manager state (job records, event log, telemetry).
     pub rms: Rms,
+    /// Completion time of the last job.
     pub makespan: Time,
+    /// Arrival time of the first job.
     pub first_submit: Time,
+    /// Per-action timing statistics.
     pub actions: ActionStats,
+    /// User jobs processed.
     pub user_jobs: usize,
     /// Discrete events processed (arrivals, checks, completions, resize
     /// commits, retries, machine fault events — including stale ones).
@@ -257,6 +272,7 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Build an engine (fresh RMS + seeded RNG streams) for one run.
     pub fn new(cfg: DesConfig) -> Self {
         let rms = Rms::new(cfg.rms.clone());
         let rng = Rng::new(cfg.seed);

@@ -14,8 +14,9 @@
 //!   synthetic burst–lull arrivals, and real traces in Standard Workload
 //!   Format ([`workload::swf`]).
 //! * [`rms`] — the Slurm-like workload manager: multifactor priorities,
-//!   EASY backfill, and the paper's three-mode reconfiguration policy (§4)
-//!   with the expand-via-resizer-job / shrink-with-ACK protocols (§5.2).
+//!   EASY backfill, the pluggable reconfiguration-policy engine
+//!   ([`rms::policy`], below) and the expand-via-resizer-job /
+//!   shrink-with-ACK protocols (§5.2).
 //! * [`vmpi`] — a virtual-MPI substrate: communicators, ranks, spawn,
 //!   point-to-point and collectives over in-process channels.
 //! * [`dmr`] — the DMR API itself: `dmr_check_status` /
@@ -33,6 +34,39 @@
 //! * [`metrics`] — recorders and report emitters for every table and
 //!   figure of §7.
 //! * [`campaign`] — the campaign engine (below).
+//!
+//! The full module map, the event/data flow of one reconfiguration and
+//! the determinism contract live in `docs/ARCHITECTURE.md` at the repo
+//! root — read that first when orienting.
+//!
+//! ## Reconfiguration-policy engine
+//!
+//! The paper's central mechanism — the RMS decision on a DMR trigger —
+//! is a pluggable subsystem ([`rms::policy`]): a
+//! [`rms::ReconfigPolicy`] trait consuming the request and a
+//! [`rms::PolicyContext`] (system view + per-job/per-user facts) and
+//! returning an [`rms::Action`].  Built-ins, selected via
+//! [`rms::RmsConfig::strategy`] and swept by campaigns as
+//! `[policy] strategy = [...]`:
+//!
+//! * **`ThroughputAware`** — the paper's §4 rule, preserved
+//!   bit-identically (the golden determinism fixture covers it).
+//! * **`QueueAware`** — the SLURM-extension flavor (Chadha et al.,
+//!   arXiv:2009.08289): shrink aggressively when pending pressure
+//!   crosses a threshold, expand only when the queue is drained.
+//! * **`FairShare`** — per-user weighted balancing over the RMS's
+//!   pending/running indices, one factor step at a time.
+//! * **`DeadlineAware`** — jobs may carry soft deadlines
+//!   ([`workload::JobSpec::deadline`]); jobs projected to miss are
+//!   expanded and never shrunk, deadline-less jobs fall back to the
+//!   baseline.
+//!
+//! Comparative metrics ride along ([`metrics`]): per-job bounded
+//! slowdown, Jain's fairness index over per-user slowdowns, and
+//! deadline-miss counts — per run, aggregated per scenario, and emitted
+//! in every campaign CSV/JSON/table.  `scenarios/policy_matrix.toml` is
+//! the checked-in study: all four strategies over Feitelson + SWF
+//! workloads on a healthy and a faulty cluster.
 //!
 //! ## Campaign engine
 //!

@@ -7,29 +7,67 @@ use crate::Time;
 /// The §7.5 per-job measures: waiting, execution and completion times.
 #[derive(Debug, Clone)]
 pub struct JobRecord {
+    /// Job name (unique within a workload).
     pub name: String,
+    /// Application the job instantiated.
     pub app: AppKind,
+    /// Submission time.
     pub submit: Time,
+    /// Execution start time.
     pub start: Time,
+    /// Finalization time.
     pub end: Time,
+    /// Process count the job was submitted with.
     pub initial_procs: usize,
+    /// Committed expansions over the job's lifetime.
     pub n_expands: usize,
+    /// Committed shrinks over the job's lifetime.
     pub n_shrinks: usize,
     /// Node-seconds the job held (integral of its allocation over time).
     pub node_seconds: f64,
+    /// Owning user (per-user fairness accounting).
+    pub user: u32,
+    /// Soft deadline, if the job carried one.
+    pub deadline: Option<Time>,
 }
 
 impl JobRecord {
+    /// Waiting time: submission until execution start.
     pub fn wait(&self) -> f64 {
         self.start - self.submit
     }
+    /// Execution time: start until end.
     pub fn exec(&self) -> f64 {
         self.end - self.start
     }
+    /// Completion (turnaround) time: submission until finalization.
     pub fn completion(&self) -> f64 {
         self.end - self.submit
     }
+    /// Bounded slowdown: completion over execution, with the standard
+    /// 10-second floor on the denominator so trivially-short jobs cannot
+    /// dominate the metric, and clamped to ≥ 1.
+    ///
+    /// For a job that was killed and requeued by a node failure,
+    /// `completion` spans the whole history while `exec` covers only the
+    /// final incarnation (`start` is the last start), so lost work reads
+    /// as slowdown.  Intentional — the user genuinely waited through the
+    /// rework — but it means fault-sweep scenarios charge requeue-heavy
+    /// strategies here *in addition to* the `rework_s` column; compare
+    /// both columns, not just one, when recoveries differ.
+    pub fn bounded_slowdown(&self) -> f64 {
+        (self.completion() / self.exec().max(SLOWDOWN_BOUND)).max(1.0)
+    }
+    /// Whether the job finished after its soft deadline (jobs without a
+    /// deadline never miss).
+    pub fn missed_deadline(&self) -> bool {
+        self.deadline.is_some_and(|d| self.end > d + 1e-9)
+    }
 }
+
+/// Denominator floor (seconds) of [`JobRecord::bounded_slowdown`] — the
+/// conventional 10 s threshold from the scheduling literature.
+pub const SLOWDOWN_BOUND: f64 = 10.0;
 
 /// Extract user-job records (resizers excluded), sorted by submission.
 pub fn extract(rms: &Rms) -> Vec<JobRecord> {
@@ -67,6 +105,8 @@ pub fn extract(rms: &Rms) -> Vec<JobRecord> {
                     .filter(|r| r.to_procs < r.from_procs)
                     .count(),
                 node_seconds,
+                user: j.spec.user,
+                deadline: j.spec.deadline,
             }
         })
         .collect();
@@ -102,5 +142,32 @@ mod tests {
         assert!((r.node_seconds - (320.0 + 80.0)).abs() < 1e-9);
         assert_eq!(r.wait(), 0.0);
         assert_eq!(r.exec(), 20.0);
+    }
+
+    #[test]
+    fn bounded_slowdown_and_deadline_edges() {
+        let mk = |submit: f64, start: f64, end: f64, deadline: Option<f64>| JobRecord {
+            name: "j".into(),
+            app: AppKind::Cg,
+            submit,
+            start,
+            end,
+            initial_procs: 4,
+            n_expands: 0,
+            n_shrinks: 0,
+            node_seconds: 0.0,
+            user: 0,
+            deadline,
+        };
+        // 100 s exec, 100 s wait: slowdown 2.
+        assert!((mk(0.0, 100.0, 200.0, None).bounded_slowdown() - 2.0).abs() < 1e-9);
+        // Tiny job: denominator floors at 10 s instead of 1 s exec.
+        assert!((mk(0.0, 9.0, 10.0, None).bounded_slowdown() - 1.0).abs() < 1e-9);
+        // No wait: clamped to exactly 1.
+        assert_eq!(mk(0.0, 0.0, 5.0, None).bounded_slowdown(), 1.0);
+        // Deadline edges: exactly on time is not a miss, strictly late is.
+        assert!(!mk(0.0, 0.0, 50.0, Some(50.0)).missed_deadline());
+        assert!(mk(0.0, 0.0, 50.1, Some(50.0)).missed_deadline());
+        assert!(!mk(0.0, 0.0, 50.0, None).missed_deadline());
     }
 }

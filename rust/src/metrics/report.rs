@@ -248,9 +248,10 @@ pub fn throughput_rows(rows: &[(usize, RunSummary, RunSummary)]) -> Vec<Vec<Stri
 
 /// Header of `<name>_runs.csv`.
 pub const CAMPAIGN_RUN_HEADER: &[&str] = &[
-    "run", "scenario", "label", "nodes", "mode", "seed", "jobs", "makespan_s", "util_pct",
-    "wait_mean_s", "exec_mean_s", "completion_mean_s", "node_seconds", "expands", "shrinks",
-    "expand_aborts", "interrupted", "rescued", "requeued", "rework_s", "lost_node_s",
+    "run", "scenario", "label", "nodes", "mode", "policy", "seed", "jobs", "makespan_s",
+    "util_pct", "wait_mean_s", "exec_mean_s", "completion_mean_s", "node_seconds", "expands",
+    "shrinks", "expand_aborts", "bounded_slowdown", "jain_fairness", "deadline_jobs",
+    "deadline_misses", "interrupted", "rescued", "requeued", "rework_s", "lost_node_s",
     "availability_pct",
 ];
 
@@ -259,8 +260,9 @@ pub const CAMPAIGN_AGG_HEADER: &[&str] = &[
     "scenario", "runs", "jobs", "makespan_mean_s", "makespan_ci95_s", "util_mean_pct",
     "util_ci95_pct", "wait_mean_s", "wait_ci95_s", "exec_mean_s", "exec_ci95_s",
     "completion_mean_s", "completion_ci95_s", "node_seconds_mean", "expands_mean",
-    "shrinks_mean", "expand_aborts_mean", "interrupted_mean", "rescued_mean", "requeued_mean",
-    "rework_mean_s", "lost_node_s_mean", "availability_mean_pct",
+    "shrinks_mean", "expand_aborts_mean", "slowdown_mean", "slowdown_ci95", "fairness_mean",
+    "fairness_ci95", "deadline_miss_mean", "interrupted_mean", "rescued_mean",
+    "requeued_mean", "rework_mean_s", "lost_node_s_mean", "availability_mean_pct",
 ];
 
 /// One CSV row per campaign run, in matrix order.
@@ -275,6 +277,7 @@ pub fn campaign_run_rows(records: &[crate::campaign::RunRecord]) -> Vec<Vec<Stri
                 r.plan.label.clone(),
                 r.plan.nodes.to_string(),
                 r.plan.mode.label().to_string(),
+                r.plan.strategy.label().to_string(),
                 r.plan.seed.to_string(),
                 r.jobs.to_string(),
                 fmt(s.makespan, 3),
@@ -286,6 +289,10 @@ pub fn campaign_run_rows(records: &[crate::campaign::RunRecord]) -> Vec<Vec<Stri
                 s.actions.expand.count().to_string(),
                 s.actions.shrink.count().to_string(),
                 s.actions.expand_aborts.to_string(),
+                fmt(s.bounded_slowdown.mean(), 3),
+                fmt(s.fairness_jain, 4),
+                s.deadline_jobs.to_string(),
+                s.deadline_misses.to_string(),
                 s.resilience.interrupted.to_string(),
                 s.resilience.rescued.to_string(),
                 s.resilience.requeued.to_string(),
@@ -319,6 +326,11 @@ pub fn campaign_agg_rows(aggs: &[crate::campaign::ScenarioAgg]) -> Vec<Vec<Strin
                 fmt(a.expands.mean(), 2),
                 fmt(a.shrinks.mean(), 2),
                 fmt(a.expand_aborts.mean(), 2),
+                fmt(a.slowdown.mean(), 3),
+                fmt(a.slowdown.ci95_half(), 3),
+                fmt(a.fairness.mean(), 4),
+                fmt(a.fairness.ci95_half(), 4),
+                fmt(a.deadline_misses.mean(), 2),
                 fmt(a.interrupted.mean(), 2),
                 fmt(a.rescued.mean(), 2),
                 fmt(a.requeued.mean(), 2),
@@ -334,7 +346,8 @@ pub fn campaign_agg_rows(aggs: &[crate::campaign::ScenarioAgg]) -> Vec<Vec<Strin
 pub fn campaign_table(name: &str, aggs: &[crate::campaign::ScenarioAgg]) -> Table {
     let mut t = Table::new(vec![
         "Scenario", "Runs", "Makespan (s)", "Util (%)", "Wait (s)", "Completion (s)",
-        "Expands", "Shrinks", "Rescued", "Requeued", "Avail (%)",
+        "Expands", "Shrinks", "Slowdown", "Jain", "DlMiss", "Rescued", "Requeued",
+        "Avail (%)",
     ])
     .with_title(&format!("Campaign {name}: per-scenario aggregates (mean ± 95% CI)"));
     let pm = |s: &Summary, prec: usize| format!("{} ± {}", fmt(s.mean(), prec), fmt(s.ci95_half(), prec));
@@ -348,6 +361,9 @@ pub fn campaign_table(name: &str, aggs: &[crate::campaign::ScenarioAgg]) -> Tabl
             pm(&a.completion_s, 1),
             fmt(a.expands.mean(), 1),
             fmt(a.shrinks.mean(), 1),
+            pm(&a.slowdown, 2),
+            fmt(a.fairness.mean(), 3),
+            fmt(a.deadline_misses.mean(), 1),
             fmt(a.rescued.mean(), 1),
             fmt(a.requeued.mean(), 1),
             fmt(a.availability_pct.mean(), 2),
@@ -388,6 +404,9 @@ pub fn campaign_agg_json(
             m.insert("expands".into(), stat(&a.expands));
             m.insert("shrinks".into(), stat(&a.shrinks));
             m.insert("expand_aborts".into(), stat(&a.expand_aborts));
+            m.insert("bounded_slowdown".into(), stat(&a.slowdown));
+            m.insert("jain_fairness".into(), stat(&a.fairness));
+            m.insert("deadline_misses".into(), stat(&a.deadline_misses));
             m.insert("interrupted".into(), stat(&a.interrupted));
             m.insert("rescued".into(), stat(&a.rescued));
             m.insert("requeued".into(), stat(&a.requeued));

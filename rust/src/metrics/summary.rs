@@ -25,6 +25,33 @@ pub struct RunSummary {
     pub actions: crate::des::ActionStats,
     /// Fault-injection measures (zeros / availability 1.0 without faults).
     pub resilience: crate::resilience::ResilienceStats,
+    /// Per-job bounded slowdown ([`JobRecord::bounded_slowdown`]) — the
+    /// policy-comparison headline: responsiveness normalized by job
+    /// length.
+    pub bounded_slowdown: Summary,
+    /// Jain's fairness index over the per-user mean bounded slowdowns
+    /// (1 = every user experiences the same slowdown; 1/users = one user
+    /// bears it all).  `1.0` when the run has at most one user.
+    pub fairness_jain: f64,
+    /// Jobs that carried a soft deadline.
+    pub deadline_jobs: usize,
+    /// Deadline-carrying jobs that finished strictly late.
+    pub deadline_misses: usize,
+}
+
+/// Jain's fairness index over `values`: `(Σx)² / (n · Σx²)`.  Ranges from
+/// `1/n` (maximally unfair) to `1` (perfectly even); empty or all-zero
+/// input counts as perfectly fair.
+pub fn jain_index(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = values.iter().sum();
+    let sq: f64 = values.iter().map(|v| v * v).sum();
+    if sq <= 0.0 {
+        return 1.0;
+    }
+    sum * sum / (values.len() as f64 * sq)
 }
 
 impl RunSummary {
@@ -51,6 +78,21 @@ impl RunSummary {
             acc += (f - util_mean) * (f - util_mean) * (t1 - prev_t).max(0.0);
             (acc / (t1 - t0)).sqrt()
         };
+        // Policy-comparison measures: bounded slowdown, per-user fairness
+        // (Jain over per-user mean slowdowns), deadline misses.
+        let bounded_slowdown = Summary::from_iter(jobs.iter().map(|j| j.bounded_slowdown()));
+        let mut per_user: std::collections::BTreeMap<u32, (f64, usize)> =
+            std::collections::BTreeMap::new();
+        for j in &jobs {
+            let e = per_user.entry(j.user).or_insert((0.0, 0));
+            e.0 += j.bounded_slowdown();
+            e.1 += 1;
+        }
+        let user_means: Vec<f64> =
+            per_user.values().map(|(sum, n)| sum / *n as f64).collect();
+        let fairness_jain = jain_index(&user_means);
+        let deadline_jobs = jobs.iter().filter(|j| j.deadline.is_some()).count();
+        let deadline_misses = jobs.iter().filter(|j| j.missed_deadline()).count();
         RunSummary {
             label: r.label.clone(),
             makespan: r.makespan,
@@ -65,6 +107,10 @@ impl RunSummary {
             completed_series: r.rms.telemetry.completed_series.clone(),
             actions: r.actions.clone(),
             resilience: r.resilience.clone(),
+            bounded_slowdown,
+            fairness_jain,
+            deadline_jobs,
+            deadline_misses,
             jobs,
         }
     }
@@ -112,6 +158,36 @@ mod tests {
         assert!(s.makespan > 0.0);
         assert!(s.wait.count() == 10);
         assert!(s.node_seconds() > 0.0);
+        // policy-comparison measures have sane ranges
+        assert_eq!(s.bounded_slowdown.count(), 10);
+        assert!(s.bounded_slowdown.min() >= 1.0);
+        assert!(s.fairness_jain > 0.0 && s.fairness_jain <= 1.0 + 1e-12);
+        assert_eq!(s.deadline_jobs, 0, "no deadlines by default");
+        assert_eq!(s.deadline_misses, 0);
+    }
+
+    #[test]
+    fn jain_index_ranges() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+        assert!((jain_index(&[3.0, 3.0, 3.0]) - 1.0).abs() < 1e-12, "even = 1");
+        // one user bears everything: 1/n
+        let j = jain_index(&[9.0, 0.0, 0.0]);
+        assert!((j - 1.0 / 3.0).abs() < 1e-12, "{j}");
+        // mild imbalance sits in between
+        let j = jain_index(&[1.0, 2.0]);
+        assert!(j > 0.5 && j < 1.0);
+    }
+
+    #[test]
+    fn deadline_misses_counted_under_tight_slack() {
+        // Slack 1.01 on a contended cluster: queue waits guarantee misses.
+        let w = workload::generate(20, 5).with_deadlines(1.01);
+        let r = Engine::new(DesConfig::default()).run(&w.as_fixed(), "fixed");
+        let s = RunSummary::from_run(&r);
+        assert_eq!(s.deadline_jobs, 20);
+        assert!(s.deadline_misses > 0, "tight deadlines must miss under contention");
+        assert!(s.deadline_misses <= s.deadline_jobs);
     }
 
     #[test]

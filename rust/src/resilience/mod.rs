@@ -37,7 +37,9 @@ pub use recovery::{feasible_shrink, rework_lost, RecoveryConfig};
 /// Everything the DES needs to inject faults and recover from them.
 #[derive(Debug, Clone, Default)]
 pub struct ResilienceConfig {
+    /// Fault sources (MTBF sampling, scripted trace, drain windows).
     pub faults: FaultSpec,
+    /// Recovery policy (checkpoint interval, rescue on/off).
     pub recovery: RecoveryConfig,
 }
 

@@ -17,14 +17,20 @@ use crate::{NodeId, Time};
 /// becomes a `Fail` and a `Repair` entry).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FaultTraceEvent {
+    /// When the event fires.
     pub at: Time,
+    /// The affected node.
     pub node: NodeId,
+    /// Failure or repair.
     pub kind: FaultKind,
 }
 
+/// What a scripted machine event does to its node.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FaultKind {
+    /// The node goes down.
     Fail,
+    /// The node is repaired.
     Repair,
 }
 
@@ -53,8 +59,11 @@ impl DrainSet {
 /// their current job first) and return at `end`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DrainWindow {
+    /// Window start.
     pub start: Time,
+    /// Window end.
     pub end: Time,
+    /// The drained nodes.
     pub nodes: DrainSet,
 }
 

@@ -12,15 +12,20 @@ use crate::Time;
 /// A running job as seen by the backfill projection.
 #[derive(Debug, Clone, Copy)]
 pub struct RunningInfo {
+    /// Nodes the job currently holds.
     pub procs: usize,
+    /// Scheduler's estimate of when those nodes free up.
     pub expected_end: Time,
 }
 
 /// A pending job as seen by the scheduler pass.
 #[derive(Debug, Clone, Copy)]
 pub struct PendingInfo {
+    /// Job id (returned in the start list).
     pub id: crate::JobId,
+    /// Nodes the job needs to start.
     pub procs: usize,
+    /// Runtime estimate used for the shadow-time check.
     pub est_duration: f64,
 }
 

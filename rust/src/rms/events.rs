@@ -42,34 +42,42 @@ pub struct EventLog {
 }
 
 impl EventLog {
+    /// Append an event.
     pub fn push(&mut self, e: RmsEvent) {
         self.events.push(e);
     }
 
+    /// Every recorded event, in order.
     pub fn all(&self) -> &[RmsEvent] {
         &self.events
     }
 
+    /// Count events matching a predicate.
     pub fn count<F: Fn(&RmsEvent) -> bool>(&self, f: F) -> usize {
         self.events.iter().filter(|e| f(e)).count()
     }
 
+    /// Committed expansions recorded.
     pub fn expansions(&self) -> usize {
         self.count(|e| matches!(e, RmsEvent::Expanded { .. }))
     }
 
+    /// Committed shrinks recorded.
     pub fn shrinks(&self) -> usize {
         self.count(|e| matches!(e, RmsEvent::Shrunk { .. }))
     }
 
+    /// Node failures recorded.
     pub fn node_failures(&self) -> usize {
         self.count(|e| matches!(e, RmsEvent::NodeFailed { .. }))
     }
 
+    /// Shrink rescues recorded.
     pub fn rescues(&self) -> usize {
         self.count(|e| matches!(e, RmsEvent::Rescued { .. }))
     }
 
+    /// Failure requeues recorded.
     pub fn requeues(&self) -> usize {
         self.count(|e| matches!(e, RmsEvent::Requeued { .. }))
     }

@@ -21,20 +21,30 @@ pub enum JobState {
 /// One committed reconfiguration (for the per-job analysis of §7.3–7.5).
 #[derive(Debug, Clone, Copy)]
 pub struct ResizeEvent {
+    /// Commit time.
     pub time: Time,
+    /// Process count before the resize.
     pub from_procs: usize,
+    /// Process count after the resize.
     pub to_procs: usize,
 }
 
 /// A job inside the RMS.
 #[derive(Debug, Clone)]
 pub struct Job {
+    /// Id assigned at submission.
     pub id: JobId,
+    /// The submission-time specification.
     pub spec: JobSpec,
+    /// Lifecycle state.
     pub state: JobState,
+    /// Nodes currently allocated to the job (empty while pending).
     pub nodes: Vec<NodeId>,
+    /// Submission time.
     pub submit_time: Time,
+    /// Execution start time (the last start, after requeues).
     pub start_time: Option<Time>,
+    /// Finalization time.
     pub end_time: Option<Time>,
     /// Scheduler's estimate of when the job will finish (feeds backfill
     /// reservations; refreshed by the execution engine after resizes).
@@ -54,6 +64,7 @@ pub struct Job {
 }
 
 impl Job {
+    /// A freshly-submitted (pending) job.
     pub fn new(id: JobId, spec: JobSpec, now: Time) -> Self {
         Job {
             id,
@@ -78,6 +89,7 @@ impl Job {
         self.nodes.len()
     }
 
+    /// Whether the job currently holds resources (running or mid-resize).
     pub fn is_active(&self) -> bool {
         matches!(self.state, JobState::Running | JobState::Resizing)
     }

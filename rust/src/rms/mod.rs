@@ -1,6 +1,8 @@
 //! The Slurm-like workload manager with the paper's reconfiguration
-//! plug-in: multifactor priorities, EASY backfill, the three-mode
-//! reconfiguration policy (§4) and the resize protocols (§3, §5.2).
+//! plug-in: multifactor priorities, EASY backfill, the pluggable
+//! reconfiguration-policy engine ([`policy`] — the paper's §4 rule plus
+//! queue-pressure / fair-share / deadline strategies) and the resize
+//! protocols (§3, §5.2).
 
 pub mod backfill;
 pub mod events;
@@ -12,6 +14,9 @@ mod rms;
 
 pub use events::{EventLog, RmsEvent};
 pub use job::{Job, JobState, ResizeEvent};
-pub use policy::{Action, DmrRequest, PolicyConfig, SystemView};
+pub use policy::{
+    Action, DmrRequest, PolicyConfig, PolicyContext, PolicyStrategy, ReconfigPolicy, SystemView,
+    UsageView,
+};
 pub use queue::PriorityWeights;
 pub use rms::{DmrOutcome, NodeFailure, Rms, RmsConfig, Started, Telemetry};

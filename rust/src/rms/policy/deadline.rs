@@ -1,0 +1,148 @@
+//! Deadline-protection strategy: expand jobs projected to miss their
+//! soft deadline, never shrink them.
+
+use super::{
+    decide, expand_fill, forced_action, Action, PolicyConfig, PolicyContext, ReconfigPolicy,
+};
+
+/// Soft-deadline protection.  Jobs may carry an optional deadline
+/// ([`crate::workload::JobSpec::deadline`]); at every reconfiguring point
+/// the strategy compares the scheduler's completion estimate
+/// ([`PolicyContext::expected_end`]) against it:
+///
+/// * **Projected to miss** (estimate strictly past the deadline) —
+///   expand as far as the free nodes and the job's maximum allow.
+/// * **On track** (estimate at or before the deadline — exactly-on-time
+///   counts as on track) — hold steady.  A deadline job is *never*
+///   voluntarily shrunk: giving its nodes away is exactly how deadlines
+///   get missed.
+///
+/// Jobs without a deadline fall back to the [`ThroughputAware`] baseline
+/// unmodified, so their nodes remain available to the queue — and, via
+/// the resizer-job protocol, to deadline jobs that need to grow.
+///
+/// §4.1 forced requests ([`forced_action`]) always win, including forced
+/// shrinks: the application lowering its own maximum is a hard
+/// constraint, not a scheduler choice.
+///
+/// [`ThroughputAware`]: super::ThroughputAware
+#[derive(Debug, Clone)]
+pub struct DeadlineAware {
+    cfg: PolicyConfig,
+}
+
+impl DeadlineAware {
+    /// Build with the baseline's config for the deadline-less fallback.
+    pub fn new(cfg: PolicyConfig) -> Self {
+        DeadlineAware { cfg }
+    }
+}
+
+impl ReconfigPolicy for DeadlineAware {
+    fn name(&self) -> &'static str {
+        "deadline"
+    }
+
+    fn decide(&self, ctx: &PolicyContext) -> Action {
+        let Some(deadline) = ctx.deadline else {
+            // No deadline to protect: behave exactly like the baseline.
+            return decide(&self.cfg, ctx.current, ctx.req, &ctx.view);
+        };
+        if let Some(forced) = forced_action(ctx.current, ctx.req, &ctx.view) {
+            return forced;
+        }
+        let projected = ctx.expected_end.unwrap_or(ctx.now);
+        if projected > deadline {
+            if let Some(to) = expand_fill(ctx.current, ctx.req, ctx.view.available) {
+                return Action::Expand { to };
+            }
+        }
+        Action::NoAction
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rms::policy::{DmrRequest, SystemView};
+
+    const REQ: DmrRequest = DmrRequest { min: 2, max: 32, pref: Some(8), factor: 2 };
+
+    fn ctx_with<'a>(
+        current: usize,
+        req: &'a DmrRequest,
+        view: SystemView,
+        deadline: Option<f64>,
+        expected_end: Option<f64>,
+    ) -> PolicyContext<'a> {
+        let mut ctx = PolicyContext::new(100.0, current, req, view);
+        ctx.deadline = deadline;
+        ctx.expected_end = expected_end;
+        ctx
+    }
+
+    #[test]
+    fn projected_miss_expands_to_what_fits() {
+        let p = DeadlineAware::new(PolicyConfig::default());
+        let view = SystemView { available: 24, pending_jobs: 3, head_need: Some(64) };
+        let ctx = ctx_with(8, &REQ, view, Some(500.0), Some(600.0));
+        assert_eq!(p.decide(&ctx), Action::Expand { to: 32 });
+    }
+
+    #[test]
+    fn exactly_on_time_is_on_track() {
+        // The edge case: estimate == deadline must NOT trigger an
+        // expansion (the job makes it, strictly-late is the miss).
+        let p = DeadlineAware::new(PolicyConfig::default());
+        let view = SystemView { available: 24, pending_jobs: 0, head_need: None };
+        let ctx = ctx_with(8, &REQ, view, Some(500.0), Some(500.0));
+        assert_eq!(p.decide(&ctx), Action::NoAction);
+    }
+
+    #[test]
+    fn deadline_jobs_are_never_voluntarily_shrunk() {
+        // The baseline would shrink 32 → 8 here (pref 8, queue waiting,
+        // release starts the head); the deadline job holds instead.
+        let p = DeadlineAware::new(PolicyConfig::default());
+        let view = SystemView { available: 0, pending_jobs: 4, head_need: Some(16) };
+        let baseline = decide(&PolicyConfig::default(), 32, &REQ, &view);
+        assert!(matches!(baseline, Action::Shrink { .. }));
+        let ctx = ctx_with(32, &REQ, view, Some(5_000.0), Some(400.0));
+        assert_eq!(p.decide(&ctx), Action::NoAction);
+    }
+
+    #[test]
+    fn miss_without_resources_holds() {
+        let p = DeadlineAware::new(PolicyConfig::default());
+        let view = SystemView { available: 0, pending_jobs: 1, head_need: Some(8) };
+        let ctx = ctx_with(8, &REQ, view, Some(500.0), Some(600.0));
+        assert_eq!(p.decide(&ctx), Action::NoAction);
+    }
+
+    #[test]
+    fn no_deadline_falls_back_to_baseline() {
+        let p = DeadlineAware::new(PolicyConfig::default());
+        for (current, view) in [
+            (32, SystemView { available: 0, pending_jobs: 4, head_need: Some(16) }),
+            (8, SystemView { available: 56, pending_jobs: 0, head_need: None }),
+            (4, SystemView { available: 4, pending_jobs: 1, head_need: Some(32) }),
+        ] {
+            let ctx = ctx_with(current, &REQ, view, None, Some(999.0));
+            assert_eq!(
+                p.decide(&ctx),
+                decide(&PolicyConfig::default(), current, &REQ, &view)
+            );
+        }
+    }
+
+    #[test]
+    fn forced_shrink_still_wins_over_protection() {
+        // The app lowered its own maximum below the current size: hard
+        // constraint, even for a deadline job projected to miss.
+        let p = DeadlineAware::new(PolicyConfig::default());
+        let req = DmrRequest { min: 2, max: 8, pref: None, factor: 2 };
+        let view = SystemView { available: 24, pending_jobs: 0, head_need: None };
+        let ctx = ctx_with(32, &req, view, Some(500.0), Some(600.0));
+        assert_eq!(p.decide(&ctx), Action::Shrink { to: 8 });
+    }
+}

@@ -1,0 +1,205 @@
+//! Per-user fair-share strategy: balance the busy nodes across users.
+
+use super::{forced_action, pref_floor, Action, PolicyContext, ReconfigPolicy, UsageView};
+
+/// Weighted per-user balancing over the RMS's pending/running indices:
+/// each user is entitled to an equal share of the currently-busy nodes,
+/// and jobs of over-served users yield one factor step to the queue while
+/// jobs of under-served users may claim one.
+///
+/// The decision compares the requesting user's held nodes
+/// ([`UsageView::user_nodes`]) against the fair share
+/// `busy_nodes / active_users`, with a tolerance factor (`slack`) so the
+/// cluster does not churn around small imbalances:
+///
+/// * **Over share** (`held > fair × slack`) *and* someone else's jobs
+///   are queued ([`UsageView::user_pending`] <
+///   [`SystemView::pending_jobs`]) — shrink one factor step toward the
+///   preferred size, handing nodes to the under-served.  A backlog
+///   consisting solely of the over-served user's own jobs triggers
+///   nothing: yielding to yourself redistributes no share.
+/// * **Under share** (`held × slack < fair`) *and* nodes are free —
+///   expand one factor step.
+/// * Otherwise hold steady.
+///
+/// [`SystemView::pending_jobs`]: super::SystemView::pending_jobs
+///
+/// Moves are deliberately one step at a time: fairness is re-evaluated at
+/// every reconfiguring point and single steps keep the shares from
+/// oscillating.  §4.1 forced requests ([`forced_action`]) always win.
+///
+/// This strategy opts into the per-user usage scan
+/// ([`ReconfigPolicy::wants_usage`]).
+#[derive(Debug, Clone, Copy)]
+pub struct FairShare {
+    /// Tolerated over/under-share factor before acting (values below 1
+    /// are treated as 1; 1.0 reacts to any imbalance).
+    pub slack: f64,
+}
+
+impl ReconfigPolicy for FairShare {
+    fn name(&self) -> &'static str {
+        "fair"
+    }
+
+    fn wants_usage(&self) -> bool {
+        true
+    }
+
+    fn decide(&self, ctx: &PolicyContext) -> Action {
+        if let Some(forced) = forced_action(ctx.current, ctx.req, &ctx.view) {
+            return forced;
+        }
+        let f = ctx.req.factor;
+        if f < 2 {
+            // Degenerate chain: no single-step moves exist.
+            return Action::NoAction;
+        }
+        let u: &UsageView = ctx
+            .usage
+            .as_ref()
+            .expect("FairShare wants_usage(), so the RMS must supply a UsageView");
+        let slack = self.slack.max(1.0);
+        let fair = u.busy_nodes as f64 / u.active_users.max(1) as f64;
+        let held = u.user_nodes as f64;
+        let others_waiting = ctx.view.pending_jobs > u.user_pending;
+        if held > fair * slack && others_waiting {
+            let floor = pref_floor(ctx.req);
+            if ctx.current % f == 0 && ctx.current / f >= floor {
+                return Action::Shrink { to: ctx.current / f };
+            }
+        } else if held * slack < fair && ctx.view.available > 0 {
+            let to = ctx.current * f;
+            if to > ctx.current && to <= ctx.req.max && to - ctx.current <= ctx.view.available {
+                return Action::Expand { to };
+            }
+        }
+        Action::NoAction
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rms::policy::{DmrRequest, SystemView};
+
+    const REQ: DmrRequest = DmrRequest { min: 2, max: 32, pref: Some(4), factor: 2 };
+
+    fn usage_ctx<'a>(
+        current: usize,
+        req: &'a DmrRequest,
+        view: SystemView,
+        user_nodes: usize,
+        busy: usize,
+        users: usize,
+    ) -> PolicyContext<'a> {
+        let mut ctx = PolicyContext::new(10.0, current, req, view);
+        ctx.usage = Some(UsageView {
+            user_nodes,
+            busy_nodes: busy,
+            active_users: users,
+            user_pending: 0,
+        });
+        ctx
+    }
+
+    #[test]
+    fn over_share_with_queue_shrinks_one_step() {
+        // 2 users, 48 busy nodes, this user holds 40 (fair = 24, slack
+        // 1.25 → threshold 30): over share, someone waiting → one step.
+        let view = SystemView { available: 0, pending_jobs: 2, head_need: Some(8) };
+        let p = FairShare { slack: 1.25 };
+        let ctx = usage_ctx(16, &REQ, view, 40, 48, 2);
+        assert_eq!(p.decide(&ctx), Action::Shrink { to: 8 });
+    }
+
+    #[test]
+    fn over_share_with_only_own_backlog_holds() {
+        // Every queued job belongs to the over-served user: shrinking
+        // would hand the nodes straight back to them — no action.
+        let view = SystemView { available: 0, pending_jobs: 2, head_need: Some(8) };
+        let p = FairShare { slack: 1.25 };
+        let mut ctx = usage_ctx(16, &REQ, view, 40, 48, 2);
+        ctx.usage.as_mut().unwrap().user_pending = 2;
+        assert_eq!(p.decide(&ctx), Action::NoAction);
+        // One of the two queued jobs is someone else's: shrink again.
+        ctx.usage.as_mut().unwrap().user_pending = 1;
+        assert_eq!(p.decide(&ctx), Action::Shrink { to: 8 });
+    }
+
+    #[test]
+    fn over_share_without_queue_holds() {
+        let view = SystemView { available: 16, pending_jobs: 0, head_need: None };
+        let p = FairShare { slack: 1.25 };
+        let ctx = usage_ctx(16, &REQ, view, 40, 48, 2);
+        assert_eq!(p.decide(&ctx), Action::NoAction);
+    }
+
+    #[test]
+    fn under_share_with_room_expands_one_step() {
+        // This user holds 4 of 48 busy nodes across 2 users (fair 24):
+        // deeply under share, 16 free → one factor step up.
+        let view = SystemView { available: 16, pending_jobs: 1, head_need: Some(64) };
+        let p = FairShare { slack: 1.25 };
+        let ctx = usage_ctx(4, &REQ, view, 4, 48, 2);
+        assert_eq!(p.decide(&ctx), Action::Expand { to: 8 });
+    }
+
+    #[test]
+    fn under_share_without_free_nodes_holds() {
+        let view = SystemView { available: 0, pending_jobs: 1, head_need: Some(64) };
+        let p = FairShare { slack: 1.25 };
+        let ctx = usage_ctx(4, &REQ, view, 4, 48, 2);
+        assert_eq!(p.decide(&ctx), Action::NoAction);
+    }
+
+    #[test]
+    fn exactly_at_fair_share_holds() {
+        // held == fair: neither `held > fair*slack` nor `held*slack <
+        // fair` can fire for slack >= 1 — the boundary is stable even at
+        // slack exactly 1.
+        let view = SystemView { available: 16, pending_jobs: 3, head_need: Some(8) };
+        for slack in [1.0, 1.25, 2.0] {
+            let p = FairShare { slack };
+            let ctx = usage_ctx(16, &REQ, view, 24, 48, 2);
+            assert_eq!(p.decide(&ctx), Action::NoAction, "slack {slack}");
+        }
+    }
+
+    #[test]
+    fn shrink_respects_pref_floor_and_chain() {
+        let view = SystemView { available: 0, pending_jobs: 2, head_need: Some(8) };
+        let p = FairShare { slack: 1.0 };
+        // At the preferred floor already: no step down exists.
+        let ctx = usage_ctx(4, &REQ, view, 40, 48, 2);
+        assert_eq!(p.decide(&ctx), Action::NoAction);
+        // Off-chain current (odd): no divisible step.
+        let req = DmrRequest { min: 1, max: 32, pref: None, factor: 2 };
+        let ctx = usage_ctx(7, &req, view, 40, 48, 2);
+        assert_eq!(p.decide(&ctx), Action::NoAction);
+    }
+
+    #[test]
+    fn expand_respects_max_and_available() {
+        let p = FairShare { slack: 1.0 };
+        // Step would exceed max: hold.
+        let view = SystemView { available: 64, pending_jobs: 0, head_need: None };
+        let ctx = usage_ctx(32, &REQ, view, 1, 48, 4);
+        assert_eq!(p.decide(&ctx), Action::NoAction);
+        // Step would exceed the free pool: hold.
+        let view = SystemView { available: 3, pending_jobs: 0, head_need: None };
+        let ctx = usage_ctx(4, &REQ, view, 1, 48, 4);
+        assert_eq!(p.decide(&ctx), Action::NoAction);
+    }
+
+    #[test]
+    fn forced_requests_override_fairness() {
+        let p = FairShare { slack: 1.0 };
+        // Over share, but the app lowered its maximum: forced shrink to 8
+        // even though fairness alone would only step to 16.
+        let req = DmrRequest { min: 2, max: 8, pref: None, factor: 2 };
+        let view = SystemView { available: 0, pending_jobs: 0, head_need: None };
+        let ctx = usage_ctx(32, &req, view, 40, 48, 2);
+        assert_eq!(p.decide(&ctx), Action::Shrink { to: 8 });
+    }
+}

@@ -1,0 +1,120 @@
+//! Queue-pressure-driven strategy: shrink under a loaded queue, expand
+//! only into a drained one.
+
+use super::{
+    expand_fill, forced_action, pref_floor, shrink_target, Action, PolicyContext,
+    ReconfigPolicy,
+};
+
+/// The SLURM-extension flavor of adaptive scheduling (Chadha et al.,
+/// arXiv:2009.08289): the *queue*, not the individual job, drives every
+/// decision.
+///
+/// * **Pressure at or above the threshold** — shrink aggressively, all
+///   the way down the factor chain to the job's preferred size (its
+///   minimum when no preference is stated), freeing as many nodes for
+///   the backlog as the chain allows.
+/// * **Queue drained** — expand up to the maximum the free nodes permit;
+///   an empty queue means idle nodes benefit nobody else.
+/// * **In between** — hold steady: mild backlogs are left to backfill
+///   rather than paying reconfiguration costs.
+///
+/// §4.1 forced requests ([`forced_action`]) always win.
+#[derive(Debug, Clone, Copy)]
+pub struct QueueAware {
+    /// Pending-job count at (or above) which running jobs shrink; values
+    /// below 1 are treated as 1.
+    pub pressure: usize,
+}
+
+impl ReconfigPolicy for QueueAware {
+    fn name(&self) -> &'static str {
+        "queue"
+    }
+
+    fn decide(&self, ctx: &PolicyContext) -> Action {
+        if let Some(forced) = forced_action(ctx.current, ctx.req, &ctx.view) {
+            return forced;
+        }
+        let pressure = self.pressure.max(1);
+        if ctx.view.pending_jobs >= pressure {
+            let to = shrink_target(ctx.current, ctx.req.factor, pref_floor(ctx.req));
+            if to < ctx.current {
+                return Action::Shrink { to };
+            }
+        } else if ctx.view.pending_jobs == 0 {
+            if let Some(to) = expand_fill(ctx.current, ctx.req, ctx.view.available) {
+                return Action::Expand { to };
+            }
+        }
+        Action::NoAction
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rms::policy::{DmrRequest, SystemView};
+
+    fn ctx<'a>(current: usize, req: &'a DmrRequest, view: SystemView) -> PolicyContext<'a> {
+        PolicyContext::new(50.0, current, req, view)
+    }
+
+    const REQ: DmrRequest = DmrRequest { min: 2, max: 32, pref: Some(8), factor: 2 };
+
+    #[test]
+    fn shrinks_at_exactly_the_threshold() {
+        let p = QueueAware { pressure: 3 };
+        let view = SystemView { available: 0, pending_jobs: 3, head_need: Some(16) };
+        assert_eq!(p.decide(&ctx(32, &REQ, view)), Action::Shrink { to: 8 });
+    }
+
+    #[test]
+    fn holds_one_below_the_threshold() {
+        let p = QueueAware { pressure: 3 };
+        let view = SystemView { available: 0, pending_jobs: 2, head_need: Some(16) };
+        assert_eq!(p.decide(&ctx(32, &REQ, view)), Action::NoAction);
+    }
+
+    #[test]
+    fn expands_only_when_queue_drained() {
+        let p = QueueAware { pressure: 3 };
+        let drained = SystemView { available: 24, pending_jobs: 0, head_need: None };
+        assert_eq!(p.decide(&ctx(8, &REQ, drained)), Action::Expand { to: 32 });
+        // One pending job is enough to suppress expansion entirely —
+        // unlike the baseline's wide optimization, which expands into
+        // queue-starved idle nodes.
+        let mild = SystemView { available: 24, pending_jobs: 1, head_need: Some(64) };
+        assert_eq!(p.decide(&ctx(8, &REQ, mild)), Action::NoAction);
+    }
+
+    #[test]
+    fn shrink_stops_at_the_pref_floor_and_the_chain_end() {
+        let p = QueueAware { pressure: 1 };
+        let view = SystemView { available: 0, pending_jobs: 5, head_need: Some(64) };
+        // Already at the preferred floor: nothing to release.
+        assert_eq!(p.decide(&ctx(8, &REQ, view)), Action::NoAction);
+        // No preference: the floor is the minimum.
+        let req = DmrRequest { min: 4, max: 32, pref: None, factor: 2 };
+        assert_eq!(p.decide(&ctx(32, &req, view)), Action::Shrink { to: 4 });
+        // Off-chain size: stop where divisibility ends.
+        let req = DmrRequest { min: 1, max: 32, pref: None, factor: 2 };
+        assert_eq!(p.decide(&ctx(12, &req, view)), Action::Shrink { to: 3 });
+    }
+
+    #[test]
+    fn forced_requests_override_pressure() {
+        let p = QueueAware { pressure: 1 };
+        // Queue is loaded, but the app raised its minimum: forced expand.
+        let req = DmrRequest { min: 16, max: 32, pref: None, factor: 2 };
+        let view = SystemView { available: 24, pending_jobs: 5, head_need: Some(64) };
+        assert_eq!(p.decide(&ctx(8, &req, view)), Action::Expand { to: 32 });
+    }
+
+    #[test]
+    fn zero_pressure_behaves_as_one() {
+        let p = QueueAware { pressure: 0 };
+        let view = SystemView { available: 0, pending_jobs: 1, head_need: Some(8) };
+        assert_eq!(p.decide(&ctx(32, &REQ, view)), Action::Shrink { to: 8 });
+    }
+}

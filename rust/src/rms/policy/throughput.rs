@@ -1,0 +1,63 @@
+//! The paper baseline: §4's three-mode rule as a [`ReconfigPolicy`].
+
+use super::{decide, Action, PolicyConfig, PolicyContext, ReconfigPolicy};
+
+/// The paper's §4 decision rule — request-an-action, then
+/// preferred-number-of-nodes, then wide optimization — wrapped as a
+/// strategy.  This is the default of [`crate::rms::RmsConfig`] and the
+/// *golden baseline*: it delegates to the pure [`decide`] function
+/// unchanged, so its event streams are bit-identical to the pre-trait
+/// implementation (locked by `rust/tests/test_golden_determinism.rs`).
+#[derive(Debug, Clone)]
+pub struct ThroughputAware {
+    cfg: PolicyConfig,
+}
+
+impl ThroughputAware {
+    /// Wrap the §4 rule with its ablation switches.
+    pub fn new(cfg: PolicyConfig) -> Self {
+        ThroughputAware { cfg }
+    }
+}
+
+impl ReconfigPolicy for ThroughputAware {
+    fn name(&self) -> &'static str {
+        "throughput"
+    }
+
+    fn decide(&self, ctx: &PolicyContext) -> Action {
+        decide(&self.cfg, ctx.current, ctx.req, &ctx.view)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rms::policy::{DmrRequest, SystemView};
+
+    /// The strategy must be a transparent wrapper over `decide`.
+    #[test]
+    fn matches_pure_decide() {
+        let cfg = PolicyConfig::default();
+        let strat = ThroughputAware::new(cfg.clone());
+        let cases = [
+            (8, DmrRequest { min: 2, max: 32, pref: Some(8), factor: 2 },
+             SystemView { available: 56, pending_jobs: 0, head_need: None }),
+            (32, DmrRequest { min: 2, max: 32, pref: Some(8), factor: 2 },
+             SystemView { available: 0, pending_jobs: 4, head_need: Some(32) }),
+            (4, DmrRequest { min: 1, max: 16, pref: None, factor: 2 },
+             SystemView { available: 4, pending_jobs: 1, head_need: Some(32) }),
+            (8, DmrRequest { min: 16, max: 32, pref: None, factor: 2 },
+             SystemView { available: 24, pending_jobs: 3, head_need: Some(64) }),
+        ];
+        for (current, req, view) in cases {
+            let ctx = PolicyContext::new(100.0, current, &req, view);
+            assert_eq!(strat.decide(&ctx), decide(&cfg, current, &req, &view));
+        }
+    }
+
+    #[test]
+    fn does_not_request_usage_scan() {
+        assert!(!ThroughputAware::new(PolicyConfig::default()).wants_usage());
+    }
+}

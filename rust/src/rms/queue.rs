@@ -11,6 +11,7 @@ use crate::Time;
 /// weight.
 #[derive(Debug, Clone)]
 pub struct PriorityWeights {
+    /// Weight of the (saturating) age factor.
     pub age_weight: f64,
     /// Favor bigger jobs (Slurm's default size factor favours larger
     /// allocations so they do not starve).

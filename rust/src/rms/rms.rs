@@ -44,7 +44,10 @@ use std::collections::{BTreeSet, HashMap};
 use super::backfill::{plan_starts_into, PendingInfo, RunningInfo};
 use super::events::{EventLog, RmsEvent};
 use super::job::{Job, JobState, ResizeEvent};
-use super::policy::{decide, Action, DmrRequest, PolicyConfig, SystemView};
+use super::policy::{
+    Action, DmrRequest, PolicyConfig, PolicyContext, PolicyStrategy, ReconfigPolicy, SystemView,
+    UsageView,
+};
 use super::queue::{pending_cmp, priority, PriorityWeights};
 use crate::cluster::Cluster;
 use crate::workload::JobSpec;
@@ -53,11 +56,18 @@ use crate::{JobId, NodeId, Time};
 /// RMS configuration.
 #[derive(Debug, Clone)]
 pub struct RmsConfig {
+    /// Cluster size (nodes).
     pub nodes: usize,
     /// EASY backfill (§7.2).
     pub backfill: bool,
+    /// Multifactor priority weights for the pending queue.
     pub weights: PriorityWeights,
+    /// Knobs read by the selected reconfiguration strategy.
     pub policy: PolicyConfig,
+    /// Which reconfiguration strategy decides DMR calls (see
+    /// [`crate::rms::policy`]).  The default, `ThroughputAware`, is the
+    /// paper's §4 rule and the golden baseline.
+    pub strategy: PolicyStrategy,
     /// Give the queued job that triggered a shrink the maximum priority
     /// (§4.3).  Ablatable.
     pub shrink_priority_boost: bool,
@@ -80,6 +90,7 @@ impl Default for RmsConfig {
             backfill: true,
             weights: PriorityWeights::default(),
             policy: PolicyConfig::default(),
+            strategy: PolicyStrategy::default(),
             shrink_priority_boost: true,
             telemetry_stride: 1,
             cache_pending_order: true,
@@ -90,7 +101,9 @@ impl Default for RmsConfig {
 /// A job started by a scheduling pass.
 #[derive(Debug, Clone)]
 pub struct Started {
+    /// The started job.
     pub job: JobId,
+    /// Its allocation.
     pub nodes: Vec<NodeId>,
 }
 
@@ -98,7 +111,9 @@ pub struct Started {
 /// held the failed node and how many of its nodes survive.
 #[derive(Debug, Clone, Copy)]
 pub struct NodeFailure {
+    /// The job that held the failed node.
     pub job: JobId,
+    /// Nodes the job still holds after losing the failed one.
     pub survivors: usize,
 }
 
@@ -116,6 +131,7 @@ pub enum DmrOutcome {
 }
 
 impl DmrOutcome {
+    /// Stable lowercase name (logs, CSV cells).
     pub fn action_name(&self) -> &'static str {
         match self {
             DmrOutcome::NoAction => "no-action",
@@ -129,15 +145,22 @@ impl DmrOutcome {
 /// completed jobs over time).
 #[derive(Debug, Default, Clone)]
 pub struct Telemetry {
+    /// (time, allocated nodes) samples.
     pub alloc_series: Vec<(Time, f64)>,
+    /// (time, running user jobs) samples.
     pub running_series: Vec<(Time, f64)>,
+    /// (time, completed user jobs) samples.
     pub completed_series: Vec<(Time, f64)>,
 }
 
 /// The workload manager.
 pub struct Rms {
+    /// Configuration the manager was built with (stable for the run).
     pub cfg: RmsConfig,
+    /// The simulated machine.
     pub cluster: Cluster,
+    /// The reconfiguration strategy built from `cfg.strategy`.
+    policy: Box<dyn ReconfigPolicy>,
     /// Pending + active jobs — everything a scheduling pass may touch.
     live: HashMap<JobId, Job>,
     /// Completed/cancelled jobs, kept for metrics extraction only.
@@ -174,17 +197,23 @@ pub struct Rms {
     /// must drain this buffer rather than rely on `schedule`'s return
     /// value alone.
     recent_starts: Vec<Started>,
+    /// Append-only event log (the golden digests hash it).
     pub log: EventLog,
+    /// Fig. 6 telemetry series.
     pub telemetry: Telemetry,
     telemetry_tick: u64,
 }
 
 impl Rms {
+    /// A fresh manager over an empty `cfg.nodes`-node cluster, with the
+    /// reconfiguration strategy built from `cfg.strategy`.
     pub fn new(cfg: RmsConfig) -> Self {
         let cluster = Cluster::new(cfg.nodes);
+        let policy = cfg.strategy.build(&cfg.policy);
         Self {
             cfg,
             cluster,
+            policy,
             live: HashMap::new(),
             archived: HashMap::new(),
             pending: Vec::new(),
@@ -217,6 +246,7 @@ impl Rms {
     // ------------------------------------------------------------------
     // Introspection
 
+    /// Look up a job, live or archived.
     pub fn job(&self, id: JobId) -> Option<&Job> {
         self.live.get(&id).or_else(|| self.archived.get(&id))
     }
@@ -237,6 +267,10 @@ impl Rms {
         self.active_user
     }
 
+    /// Jobs that ran to completion.  Resizer jobs never appear here —
+    /// the expansion protocol always cancels them (commit and abort
+    /// paths alike), so on a drained workload this equals the user-job
+    /// count.  O(1).
     pub fn completed_jobs(&self) -> usize {
         self.completed_count
     }
@@ -256,12 +290,7 @@ impl Rms {
     /// horizon at `now` — then all age factors have grown by the same
     /// amount since the cached sort and pairwise order is preserved.
     fn refresh_pending_order(&mut self, now: Time) {
-        let reuse = self.order_valid
-            && self.cfg.cache_pending_order
-            && (now == self.order_now
-                || (now > self.order_now
-                    && now - self.order_oldest_submit < self.cfg.weights.age_horizon));
-        if reuse {
+        if self.order_reusable(now) {
             return;
         }
         let total = self.cluster.total();
@@ -288,6 +317,19 @@ impl Rms {
         self.order_valid = false;
     }
 
+    /// Whether the cached pending order may be reused at `now` — the one
+    /// reuse predicate shared by [`Rms::refresh_pending_order`] (the
+    /// `&mut` sorting path) and `view_at` (the `&self` peeking path), so
+    /// the two can never drift.  See `refresh_pending_order`'s docs for
+    /// the soundness argument.
+    fn order_reusable(&self, now: Time) -> bool {
+        self.order_valid
+            && self.cfg.cache_pending_order
+            && (now == self.order_now
+                || (now > self.order_now
+                    && now - self.order_oldest_submit < self.cfg.weights.age_horizon))
+    }
+
     fn view(&mut self, now: Time) -> SystemView {
         self.refresh_pending_order(now);
         let head = self
@@ -302,9 +344,104 @@ impl Rms {
         }
     }
 
+    /// Side-effect-free equivalent of [`Rms::view`], used by
+    /// [`Rms::dmr_peek`] so peeking stays `&self`.  While the cached
+    /// pending order is reusable (the shared `order_reusable` predicate)
+    /// the head comes from a read-only cache lookup, exactly as the
+    /// `&mut` path would see it; otherwise the head is found by a single
+    /// `min_by` scan under the same total comparator ([`pending_cmp`]),
+    /// which yields exactly the first element the sort would produce.
+    /// Cost: one scan is cheaper than the sort `view()` would pay in the
+    /// same (stale-cache) situation, but a *stretch* of peeks with no
+    /// intervening `&mut` pass re-scans each time where the old mutable
+    /// peek sorted once and cached — strict immutability trades that
+    /// amortization away.  Per event this stays O(pending), within the
+    /// O(active + pending) budget.
+    fn view_at(&self, now: Time) -> SystemView {
+        let head = if self.order_reusable(now) {
+            self.pending_order
+                .iter()
+                .copied()
+                .find(|id| !self.live[id].is_resizer)
+        } else {
+            let total = self.cluster.total();
+            self.pending
+                .iter()
+                .copied()
+                .filter(|id| !self.live[id].is_resizer)
+                .map(|id| {
+                    let j = &self.live[&id];
+                    (priority(j, &self.cfg.weights, total, now), j.submit_time, id)
+                })
+                .min_by(pending_cmp)
+                .map(|k| k.2)
+        };
+        SystemView {
+            available: self.cluster.available(),
+            pending_jobs: self.pending_user,
+            head_need: head.map(|id| self.live[&id].spec.procs),
+        }
+    }
+
+    /// Assemble the decision context for `id`'s DMR call: the system
+    /// view plus the job's own facts (user, deadline, completion
+    /// estimate) and — only when the strategy opts in via
+    /// [`ReconfigPolicy::wants_usage`] — the per-user usage indices
+    /// (an O(active + pending) scan the default strategy never pays).
+    fn policy_ctx<'a>(
+        &self,
+        id: JobId,
+        current: usize,
+        req: &'a DmrRequest,
+        view: SystemView,
+        now: Time,
+    ) -> PolicyContext<'a> {
+        let job = &self.live[&id];
+        let mut ctx = PolicyContext::new(now, current, req, view);
+        ctx.user = job.spec.user;
+        ctx.deadline = job.spec.deadline;
+        ctx.expected_end = job.expected_end;
+        if self.policy.wants_usage() {
+            // One resizer-excluded pass supplies numerator *and*
+            // denominator: `busy_nodes` must not count allocations held
+            // by in-flight resizer jobs, or every user would read as
+            // under-share while an expansion protocol is in progress.
+            let mut users = std::collections::BTreeSet::new();
+            let mut user_nodes = 0usize;
+            let mut busy_nodes = 0usize;
+            for aid in &self.active {
+                let a = &self.live[aid];
+                if a.is_resizer {
+                    continue;
+                }
+                users.insert(a.spec.user);
+                busy_nodes += a.nodes.len();
+                if a.spec.user == ctx.user {
+                    user_nodes += a.nodes.len();
+                }
+            }
+            let user_pending = self
+                .pending
+                .iter()
+                .filter(|pid| {
+                    let p = &self.live[*pid];
+                    !p.is_resizer && p.spec.user == ctx.user
+                })
+                .count();
+            ctx.usage = Some(UsageView {
+                user_nodes,
+                busy_nodes,
+                active_users: users.len().max(1),
+                user_pending,
+            });
+        }
+        ctx
+    }
+
     // ------------------------------------------------------------------
     // Submission / completion
 
+    /// Submit a job to the pending queue; returns its assigned id.
     pub fn submit(&mut self, spec: JobSpec, now: Time) -> JobId {
         let id = self.next_id;
         self.next_id += 1;
@@ -460,11 +597,13 @@ impl Rms {
     // The DMR path (§5)
 
     /// Evaluate a DMR call from `id` (synchronous semantics: decision and
-    /// resource movement happen now).
+    /// resource movement happen now).  The decision is delegated to the
+    /// configured [`ReconfigPolicy`] strategy.
     pub fn dmr_check(&mut self, id: JobId, req: &DmrRequest, now: Time) -> DmrOutcome {
         let current = self.live[&id].procs();
         let view = self.view(now);
-        let action = decide(&self.cfg.policy, current, req, &view);
+        let ctx = self.policy_ctx(id, current, req, view, now);
+        let action = self.policy.decide(&ctx);
         self.log.push(RmsEvent::DmrDecision { job: id, time: now, action });
         match action {
             Action::NoAction => DmrOutcome::NoAction,
@@ -476,12 +615,15 @@ impl Rms {
     /// Policy-only evaluation (the asynchronous path computes the decision
     /// ahead of time and applies it at the *next* reconfiguring point —
     /// §5.1; the queue may change in between, which is exactly the hazard
-    /// Table 2 quantifies).  `&mut self` only to refresh the cached queue
-    /// order; no observable state changes.
-    pub fn dmr_peek(&mut self, id: JobId, req: &DmrRequest, now: Time) -> Action {
+    /// Table 2 quantifies).  Takes `&self`: the queue head is found by a
+    /// scan (`view_at`) instead of refreshing the cached order, so a peek
+    /// is guaranteed side-effect-free — and provably identical, since the
+    /// scan minimizes under the same total comparator the sort uses.
+    pub fn dmr_peek(&self, id: JobId, req: &DmrRequest, now: Time) -> Action {
         let current = self.live[&id].procs();
-        let view = self.view(now);
-        decide(&self.cfg.policy, current, req, &view)
+        let view = self.view_at(now);
+        let ctx = self.policy_ctx(id, current, req, view, now);
+        self.policy.decide(&ctx)
     }
 
     /// Try to apply a previously-computed (async) decision.  Returns the
@@ -1024,6 +1166,63 @@ mod tests {
             rms.log.digest()
         };
         assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn scan_view_matches_sorted_view() {
+        // `dmr_peek` builds its SystemView by a min_by scan (`view_at`)
+        // instead of sorting; both must agree on every field — including
+        // the head under age differences, size differences, boosts, and
+        // cached-order reuse at later timestamps.
+        let mut rms = small_rms(64);
+        let a = rms.submit(spec(AppKind::Cg, 0.0), 0.0);
+        rms.schedule(0.0); // a takes 32, queue builds behind it
+        let _b = rms.submit(spec(AppKind::Cg, 1.0), 1.0);
+        let _c = rms.submit(spec(AppKind::NBody, 2.0), 2.0);
+        let d = rms.submit(spec(AppKind::Jacobi, 3.0), 3.0);
+        let check = |rms: &mut Rms, t: Time| {
+            // Before view() refreshes: exercises view_at's scan branch
+            // whenever the cache is invalid or outside the reuse window.
+            let scanned = rms.view_at(t);
+            let sorted = rms.view(t);
+            // After the refresh: exercises view_at's cache-reuse branch.
+            let cached = rms.view_at(t);
+            assert_eq!(sorted.available, scanned.available, "t={t}");
+            assert_eq!(sorted.pending_jobs, scanned.pending_jobs, "t={t}");
+            assert_eq!(sorted.head_need, scanned.head_need, "t={t}");
+            assert_eq!(sorted.head_need, cached.head_need, "t={t} (cached)");
+        };
+        for t in [5.0, 100.0, 2000.0, 5000.0] {
+            check(&mut rms, t);
+        }
+        // a qos boost reorders the head: both views must track it
+        rms.live.get_mut(&d).unwrap().qos_boost = true;
+        rms.invalidate_pending_order();
+        check(&mut rms, 5001.0);
+        let _ = a;
+    }
+
+    #[test]
+    fn dmr_peek_is_side_effect_free_and_matches_check_decision() {
+        // Peeking must neither change state nor disagree with the action
+        // a synchronous check would log at the same instant.
+        let mut rms = small_rms(64);
+        let a = rms.submit(spec(AppKind::Cg, 0.0), 0.0);
+        rms.schedule(0.0);
+        rms.submit(spec(AppKind::Cg, 1.0), 1.0);
+        rms.schedule(1.0); // second job starts too (64 nodes)
+        rms.submit(spec(AppKind::Cg, 2.0), 2.0); // queued
+        let req = DmrRequest { min: 2, max: 32, pref: Some(8), factor: 2 };
+        let events_before = rms.log.all().len();
+        let peeked = rms.dmr_peek(a, &req, 10.0);
+        assert_eq!(rms.log.all().len(), events_before, "peek must not log");
+        let out = rms.dmr_check(a, &req, 10.0);
+        match (peeked, out) {
+            (Action::Shrink { to }, DmrOutcome::Shrink { to: to2, .. }) => {
+                assert_eq!(to, to2)
+            }
+            (p, o) => panic!("peek {p:?} disagrees with check {o:?}"),
+        }
     }
 
     #[test]

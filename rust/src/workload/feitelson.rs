@@ -33,6 +33,12 @@ pub struct FeitelsonParams {
     pub work_spread: f64,
     /// Applications to draw from.
     pub apps: Vec<AppKind>,
+    /// Simulated user population: jobs are dealt to users round-robin by
+    /// submission index (deterministic, consumes no RNG draws, so adding
+    /// users never perturbs the sampled stream).  Drives the fair-share
+    /// strategy and the per-user fairness metrics; `1` = everything
+    /// belongs to one user.
+    pub users: usize,
 }
 
 impl Default for FeitelsonParams {
@@ -42,6 +48,7 @@ impl Default for FeitelsonParams {
             mean_interarrival: 10.0,
             work_spread: 0.25,
             apps: AppKind::WORKLOAD_APPS.to_vec(),
+            users: 4,
         }
     }
 }

@@ -30,14 +30,20 @@ pub fn generate(jobs: usize, seed: u64) -> WorkloadSpec {
 pub fn generate_with(params: &FeitelsonParams, seed: u64) -> WorkloadSpec {
     let mut rng = Rng::new(seed);
     let sampled = sample(params, &mut rng);
+    let users = params.users.max(1);
     let mut counts = std::collections::HashMap::new();
     let jobs = sampled
         .into_iter()
-        .map(|s| {
+        .enumerate()
+        .map(|(i, s)| {
             let k = counts.entry(s.app).or_insert(0usize);
             let name = format!("{}-{:03}", s.app, *k);
             *k += 1;
-            JobSpec::from_app(s.app, name, s.arrival, s.work_scale)
+            let mut spec = JobSpec::from_app(s.app, name, s.arrival, s.work_scale);
+            // Round-robin by submission index: deterministic and free of
+            // RNG draws, so the sampled stream is unchanged.
+            spec.user = (i % users) as u32;
+            spec
         })
         .collect();
     WorkloadSpec { jobs, seed }
@@ -59,7 +65,11 @@ pub struct BurstLullParams {
     pub lull: f64,
     /// Log-uniform work-scale half-width (as in [`FeitelsonParams`]).
     pub work_spread: f64,
+    /// Applications to draw from.
     pub apps: Vec<AppKind>,
+    /// Simulated user population (round-robin by submission index, as in
+    /// [`FeitelsonParams::users`]).
+    pub users: usize,
 }
 
 impl Default for BurstLullParams {
@@ -71,6 +81,7 @@ impl Default for BurstLullParams {
             lull: 300.0,
             work_spread: 0.25,
             apps: AppKind::WORKLOAD_APPS.to_vec(),
+            users: 4,
         }
     }
 }
@@ -80,6 +91,7 @@ impl Default for BurstLullParams {
 pub fn generate_burst_lull(params: &BurstLullParams, seed: u64) -> WorkloadSpec {
     let mut rng = Rng::new(seed);
     let burst = params.burst.max(1);
+    let users = params.users.max(1);
     let mut t = 0.0;
     let mut counts = std::collections::HashMap::new();
     let mut jobs = Vec::with_capacity(params.jobs);
@@ -93,7 +105,9 @@ pub fn generate_burst_lull(params: &BurstLullParams, seed: u64) -> WorkloadSpec 
         let k = counts.entry(app).or_insert(0usize);
         let name = format!("{}-{:03}", app, *k);
         *k += 1;
-        jobs.push(JobSpec::from_app(app, name, t, work_scale));
+        let mut spec = JobSpec::from_app(app, name, t, work_scale);
+        spec.user = (i % users) as u32;
+        jobs.push(spec);
     }
     WorkloadSpec { jobs, seed }
 }
@@ -116,6 +130,13 @@ mod tests {
     fn generate_sizes_and_names() {
         let w = generate(50, 42);
         assert_eq!(w.len(), 50);
+        // users dealt round-robin over the default population
+        assert_eq!(w.jobs[0].user, 0);
+        assert_eq!(w.jobs[1].user, 1);
+        assert_eq!(w.jobs[4].user, 0);
+        let distinct: std::collections::BTreeSet<u32> =
+            w.jobs.iter().map(|j| j.user).collect();
+        assert_eq!(distinct.len(), 4);
         // names are unique
         let mut names: Vec<&str> = w.jobs.iter().map(|j| j.name.as_str()).collect();
         names.sort_unstable();

@@ -33,6 +33,15 @@ pub struct JobSpec {
     pub malleable: bool,
     /// Arrival (submission) time.
     pub submit_time: Time,
+    /// Owning user (0 = the default single user).  Drives the fair-share
+    /// policy strategy and the per-user fairness metrics; workload
+    /// sources assign it (SWF traces carry real user ids, the synthetic
+    /// generators deal users round-robin).
+    pub user: u32,
+    /// Optional soft deadline (absolute time).  The deadline-aware policy
+    /// strategy expands jobs projected to miss it and never shrinks them;
+    /// metrics count the misses.  `None` = no deadline.
+    pub deadline: Option<Time>,
 }
 
 impl JobSpec {
@@ -54,6 +63,8 @@ impl JobSpec {
             alpha: c.alpha,
             malleable: true,
             submit_time,
+            user: 0,
+            deadline: None,
         }
     }
 
@@ -136,6 +147,19 @@ impl WorkloadSpec {
         }
         w
     }
+
+    /// This workload with every job given a soft deadline of
+    /// `submit + slack × est_duration` (the runtime estimate at the
+    /// submitted size).  `slack` just above 1 is aggressive — any queue
+    /// wait causes a miss; larger values leave headroom for waiting and
+    /// for running shrunk.  Consumes `self` (decoration in place — a
+    /// 5k-job trace replay should not clone every job spec).
+    pub fn with_deadlines(mut self, slack: f64) -> Self {
+        for j in &mut self.jobs {
+            j.deadline = Some(j.submit_time + slack * j.est_duration());
+        }
+        self
+    }
 }
 
 #[cfg(test)]
@@ -206,5 +230,18 @@ mod tests {
         assert!(!f.jobs[0].malleable);
         assert_eq!(f.jobs[0].work_scale, 1.3);
         assert!(w.jobs[0].malleable, "original untouched");
+    }
+
+    #[test]
+    fn with_deadlines_sets_submit_plus_slack() {
+        let j = JobSpec::from_app(AppKind::Cg, "CG-0".into(), 100.0, 1.0);
+        let est = j.est_duration();
+        let w = WorkloadSpec { jobs: vec![j], seed: 1 };
+        assert_eq!(w.jobs[0].deadline, None, "no deadlines by default");
+        let d = w.with_deadlines(2.0);
+        let dl = d.jobs[0].deadline.expect("deadline set");
+        assert!((dl - (100.0 + 2.0 * est)).abs() < 1e-9);
+        // deadlines survive the rigid baseline derivation
+        assert_eq!(d.as_fixed().jobs[0].deadline, Some(dl));
     }
 }

@@ -12,6 +12,7 @@
 //! | 8  | requested processors   | submitted job size                     |
 //! | 9  | requested time (s)     | fallback runtime when run time unknown |
 //! | 11 | status                 | failed/cancelled jobs skipped by default |
+//! | 12 | user id                | per-user fairness / fair-share policy  |
 //!
 //! Status semantics (SWF v2.2): `1` = completed, `0` = failed, `5` =
 //! cancelled, `2`–`4` = partial executions, `-1` = unknown.  By default
@@ -45,6 +46,9 @@ pub struct SwfRecord {
     /// SWF status field (`1` completed, `0` failed, `5` cancelled,
     /// `2`–`4` partial, negative = unknown).
     pub status: i64,
+    /// SWF user id (field 12; `-1`/absent = unknown).  Feeds the
+    /// fair-share policy strategy and the per-user fairness metrics.
+    pub user: i64,
 }
 
 impl SwfRecord {
@@ -167,14 +171,17 @@ pub fn parse(text: &str) -> SwfTrace {
             stats.skipped += 1;
             continue;
         }
-        // Field 11 (index 10) is the status; absent/garbage = unknown.
+        // Field 11 (index 10) is the status; field 12 (index 11) the
+        // user id; absent/garbage = unknown.
         let status = num(10).map(|s| s as i64).unwrap_or(-1);
+        let user = num(11).map(|s| s as i64).unwrap_or(-1);
         let rec = SwfRecord {
             job_id: job_id.max(0.0) as u64,
             submit,
             runtime,
             procs: procs as usize,
             status,
+            user,
         };
         if !rec.completed() {
             stats.nonsuccess += 1;
@@ -253,6 +260,9 @@ pub fn to_workload(trace: &SwfTrace, opts: &SwfOptions, seed: u64) -> WorkloadSp
             alpha: 1.0,
             malleable,
             submit_time: (rec.submit - t0) * opts.time_scale,
+            // Real traces carry real user ids; unknown maps to user 0.
+            user: rec.user.max(0) as u32,
+            deadline: None,
         });
     }
     WorkloadSpec { jobs, seed }
@@ -296,6 +306,11 @@ garbage line that is not swf
         let j4 = t.records.iter().find(|r| r.job_id == 4).unwrap();
         assert_eq!(j4.procs, 4);
         assert!(j4.completed());
+        // field 12 is the user id (job 4's line carries user 4)
+        assert_eq!(j4.user, 4);
+        assert_eq!(t.records.iter().find(|r| r.job_id == 2).unwrap().user, 2);
+        let w = to_workload(&t, &SwfOptions::default(), 1);
+        assert_eq!(w.jobs.iter().find(|j| j.name == "swf-00002").unwrap().user, 2);
     }
 
     #[test]
@@ -385,7 +400,14 @@ garbage line that is not swf
     #[test]
     fn tiny_procs_never_shrink_below_one() {
         let trace = SwfTrace {
-            records: vec![SwfRecord { job_id: 1, submit: 0.0, runtime: 50.0, procs: 1, status: 1 }],
+            records: vec![SwfRecord {
+                job_id: 1,
+                submit: 0.0,
+                runtime: 50.0,
+                procs: 1,
+                status: 1,
+                user: -1,
+            }],
             stats: SwfStats::default(),
             max_procs: 1,
         };
@@ -400,7 +422,14 @@ garbage line that is not swf
         // 6 procs, factor 2: the chain from 6 is {6, 3}; the minimum must
         // stop at 3 even with shrink_levels = 2.
         let trace = SwfTrace {
-            records: vec![SwfRecord { job_id: 1, submit: 0.0, runtime: 50.0, procs: 6, status: 1 }],
+            records: vec![SwfRecord {
+                job_id: 1,
+                submit: 0.0,
+                runtime: 50.0,
+                procs: 6,
+                status: 1,
+                user: -1,
+            }],
             stats: SwfStats::default(),
             max_procs: 6,
         };

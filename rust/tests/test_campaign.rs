@@ -76,7 +76,7 @@ fn campaign_writes_csv_and_json_artifacts() {
     let runs = std::fs::read_to_string(&out.runs_csv).unwrap();
     // header + one line per run
     assert_eq!(runs.lines().count(), 1 + spec.matrix_size());
-    assert!(runs.starts_with("run,scenario,label,nodes,mode,seed,jobs,makespan_s"));
+    assert!(runs.starts_with("run,scenario,label,nodes,mode,policy,seed,jobs,makespan_s"));
     let agg = std::fs::read_to_string(&out.agg_csv).unwrap();
     assert_eq!(agg.lines().count(), 1 + 6, "6 scenarios (3 workloads x 2 modes)");
     let json = std::fs::read_to_string(&out.agg_json).unwrap();
@@ -174,8 +174,15 @@ fn checked_in_specs_load_and_size_correctly() {
     let replay = CampaignSpec::from_file("scenarios/swf_replay.toml").unwrap();
     assert_eq!(replay.matrix_size(), 9);
     // its trace reference resolves from the workspace root
-    let campaign::WorkloadSource::Swf { ref path, .. } = replay.workloads[0] else {
+    let campaign::WorkloadSource::Swf { ref path, .. } = replay.workloads[0].source else {
         panic!("swf_replay should use an swf source");
     };
     assert!(std::path::Path::new(path).exists());
+
+    let matrix = CampaignSpec::from_file("scenarios/policy_matrix.toml").unwrap();
+    assert_eq!(
+        matrix.matrix_size(),
+        48,
+        "policy study: 2 workloads x 4 strategies x 2 mtbf x 3 seeds"
+    );
 }

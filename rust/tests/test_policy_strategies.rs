@@ -1,0 +1,184 @@
+//! Integration tests for the pluggable reconfiguration-policy engine:
+//!
+//! 1. **Golden lock** — the default `RmsConfig` (strategy unset) and an
+//!    explicit `ThroughputAware` selection produce bit-identical event
+//!    streams across fixed/sync/async and the faulty-cluster
+//!    configuration.  (The cross-PR digests themselves are pinned by the
+//!    self-recording fixture in `test_golden_determinism.rs`; this file
+//!    locks that the strategy plumbing — trait object, context assembly,
+//!    scan-based `dmr_peek` — cannot perturb the baseline.)
+//! 2. **Drain + determinism per strategy** — every strategy processes a
+//!    contended workload to completion, deterministically, in both
+//!    scheduling modes, with RMS invariants intact.
+//! 3. **Strategy semantics end-to-end** — deadline jobs are never
+//!    voluntarily shrunk; the strategy sweep produces per-strategy
+//!    scenarios and the comparative metric columns.
+
+use dmr::des::{DesConfig, Engine, RunResult};
+use dmr::dmr::SchedMode;
+use dmr::metrics::RunSummary;
+use dmr::resilience::{
+    DrainSet, DrainWindow, FaultKind, FaultSpec, FaultTraceEvent, RecoveryConfig,
+    ResilienceConfig,
+};
+use dmr::rms::{PolicyStrategy, RmsConfig, RmsEvent};
+use dmr::workload;
+
+fn run_with(
+    strategy: Option<PolicyStrategy>,
+    mode: &str,
+    faults: bool,
+    deadlines: Option<f64>,
+) -> RunResult {
+    let w = workload::generate(40, 17);
+    let (sched, flexible) = match mode {
+        "fixed" => (SchedMode::Sync, false),
+        "sync" => (SchedMode::Sync, true),
+        "async" => (SchedMode::Async, true),
+        other => panic!("unknown mode {other}"),
+    };
+    let mut w = if flexible { w } else { w.as_fixed() };
+    if let Some(slack) = deadlines {
+        w = w.with_deadlines(slack);
+    }
+    let mut rms = RmsConfig { nodes: 64, ..Default::default() };
+    if let Some(s) = strategy {
+        rms.strategy = s;
+    }
+    let resilience = if faults {
+        ResilienceConfig {
+            faults: FaultSpec {
+                mtbf: 60_000.0,
+                mttr: 1_000.0,
+                scripted: vec![FaultTraceEvent { at: 300.0, node: 1, kind: FaultKind::Fail }],
+                drains: vec![DrainWindow {
+                    start: 1_500.0,
+                    end: 3_000.0,
+                    nodes: DrainSet::Count(6),
+                }],
+            },
+            recovery: RecoveryConfig { checkpoint_interval: 500.0, ..Default::default() },
+        }
+    } else {
+        ResilienceConfig::default()
+    };
+    let cfg = DesConfig { rms, mode: sched, resilience, ..Default::default() };
+    let r = Engine::new(cfg).run(&w, mode);
+    assert_eq!(r.rms.completed_jobs(), 40, "{mode}: workload must drain");
+    assert!(r.rms.check_invariants());
+    r
+}
+
+fn digest(r: &RunResult) -> String {
+    format!(
+        "events={} log={:016x} makespan={:016x}",
+        r.events,
+        r.rms.log.digest(),
+        r.makespan.to_bits()
+    )
+}
+
+/// The explicit `ThroughputAware` selection is bit-identical to the
+/// default config — across all modes, with and without fault injection.
+/// Combined with the self-recording golden fixture (which pins the
+/// default config's digests across PRs), this locks the baseline to its
+/// pre-refactor event streams.
+#[test]
+fn throughput_strategy_is_bit_identical_to_default() {
+    for mode in ["fixed", "sync", "async"] {
+        for faults in [false, true] {
+            let default_cfg = digest(&run_with(None, mode, faults, None));
+            let explicit =
+                digest(&run_with(Some(PolicyStrategy::ThroughputAware), mode, faults, None));
+            assert_eq!(default_cfg, explicit, "{mode} faults={faults}");
+        }
+    }
+}
+
+/// Every strategy drains the contended stream in both scheduling modes
+/// and is bit-for-bit deterministic across reruns.
+#[test]
+fn all_strategies_drain_deterministically() {
+    for strategy in PolicyStrategy::ALL {
+        for mode in ["sync", "async"] {
+            let a = digest(&run_with(Some(strategy), mode, false, Some(4.0)));
+            let b = digest(&run_with(Some(strategy), mode, false, Some(4.0)));
+            assert_eq!(a, b, "{mode}/{}: nondeterministic", strategy.label());
+        }
+        // and under fault injection (rescue paths included)
+        let a = digest(&run_with(Some(strategy), "sync", true, None));
+        let b = digest(&run_with(Some(strategy), "sync", true, None));
+        assert_eq!(a, b, "fault-sync/{}: nondeterministic", strategy.label());
+    }
+}
+
+/// The strategies genuinely disagree: on a contended stream, at least
+/// one alternative strategy diverges from the baseline's event stream.
+#[test]
+fn strategies_diverge_from_baseline() {
+    let base = digest(&run_with(Some(PolicyStrategy::ThroughputAware), "sync", false, None));
+    let diverged = [PolicyStrategy::QueueAware, PolicyStrategy::FairShare]
+        .iter()
+        .map(|&s| digest(&run_with(Some(s), "sync", false, None)))
+        .filter(|d| *d != base)
+        .count();
+    assert!(diverged > 0, "no alternative strategy changed the event stream");
+}
+
+/// DeadlineAware end-to-end: deadline-carrying jobs are never
+/// voluntarily shrunk (no Shrunk event for any job — the DES issues no
+/// §4.1 forced requests, and every job carries a deadline).
+#[test]
+fn deadline_strategy_never_shrinks_deadline_jobs() {
+    let r = run_with(Some(PolicyStrategy::DeadlineAware), "sync", false, Some(2.0));
+    let shrinks = r
+        .rms
+        .log
+        .all()
+        .iter()
+        .filter(|e| matches!(e, RmsEvent::Shrunk { .. }))
+        .count();
+    assert_eq!(shrinks, 0, "deadline jobs must not be shrunk");
+    let s = RunSummary::from_run(&r);
+    assert_eq!(s.deadline_jobs, 40);
+    assert!(s.deadline_misses <= s.deadline_jobs);
+}
+
+/// On a stream with no deadlines at all, the deadline strategy's
+/// fallback path makes it bit-identical to the baseline — the protection
+/// logic must be a strict extension, not a reinterpretation.
+#[test]
+fn deadline_strategy_without_deadlines_equals_baseline() {
+    for mode in ["sync", "async"] {
+        let base = digest(&run_with(Some(PolicyStrategy::ThroughputAware), mode, false, None));
+        let dl = digest(&run_with(Some(PolicyStrategy::DeadlineAware), mode, false, None));
+        assert_eq!(base, dl, "{mode}: fallback diverged from baseline");
+    }
+    // ...and with deadlines it genuinely diverges (it stops the shrinks
+    // the baseline performs on this contended stream).
+    let base = run_with(Some(PolicyStrategy::ThroughputAware), "sync", false, Some(4.0));
+    assert!(base.rms.log.shrinks() > 0, "baseline must shrink under contention");
+    let dl = run_with(Some(PolicyStrategy::DeadlineAware), "sync", false, Some(4.0));
+    assert_eq!(dl.rms.log.shrinks(), 0);
+}
+
+/// The checked-in comparative study parses, expands to all four
+/// strategies with per-strategy scenario suffixes, and multiplies the
+/// matrix as documented (2 workloads x 4 strategies x 2 mtbf x 3 seeds).
+#[test]
+fn policy_matrix_spec_expands_all_strategies() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/policy_matrix.toml");
+    let spec = dmr::campaign::CampaignSpec::from_file(path).expect("spec parses");
+    assert_eq!(spec.policy.strategy.len(), 4);
+    assert_eq!(spec.matrix_size(), 2 * 4 * 2 * 3);
+    let plans = spec.expand();
+    assert_eq!(plans.len(), 48);
+    for label in ["throughput", "queue", "fair", "deadline"] {
+        assert!(
+            plans.iter().any(|p| p.scenario.contains(&format!("-{label}"))),
+            "no scenario for strategy {label}"
+        );
+    }
+    // both workloads carry deadline slack -> the miss columns are live
+    assert!(spec.workloads.iter().all(|w| w.deadline_slack.is_some()));
+}
