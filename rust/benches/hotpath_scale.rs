@@ -9,8 +9,15 @@
 //! bits) must match exactly — CI fails on a determinism mismatch or a
 //! panic, never on timing.
 //!
-//! Quick mode (default, CI): 1k/5k-job workloads on 256 nodes.
-//! `BENCH_FULL=1` adds the 5k-job runs on 1024- and 4096-node clusters.
+//! Quick mode (default, CI): 1k/5k-job workloads on 256 nodes, sync and
+//! async.  `BENCH_FULL=1` adds the 5k-job runs on 1024- and 4096-node
+//! clusters and a 20k-job / 4096-node async case (the scale the
+//! incremental availability profile targets).
+//!
+//! `HOTPATH_REFERENCE=1` forces `RmsConfig::incremental_profile = false`
+//! (the rebuild-and-sort reference path, elision off).  CI runs the
+//! bench both ways and asserts the per-scenario checksum sets are
+//! identical — the profile must be a pure optimization.
 
 mod common;
 
@@ -81,10 +88,18 @@ fn materialize(case: &Case) -> WorkloadSpec {
     }
 }
 
-fn run_once(case: &Case, w: &WorkloadSpec) -> (u64, f64, f64, String) {
+fn reference_path() -> bool {
+    std::env::var("HOTPATH_REFERENCE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn run_once(case: &Case, w: &WorkloadSpec) -> (u64, f64, f64, String, u64) {
     let mode = if case.mode == "async" { SchedMode::Async } else { SchedMode::Sync };
     let cfg = DesConfig {
-        rms: RmsConfig { nodes: case.nodes, ..Default::default() },
+        rms: RmsConfig {
+            nodes: case.nodes,
+            incremental_profile: !reference_path(),
+            ..Default::default()
+        },
         mode,
         ..Default::default()
     };
@@ -92,16 +107,21 @@ fn run_once(case: &Case, w: &WorkloadSpec) -> (u64, f64, f64, String) {
     let r = Engine::new(cfg).run(w, "hotpath");
     let wall = t0.elapsed().as_secs_f64();
     let checksum = bench_checksum(&r.rms.log, r.makespan);
-    (r.events, wall, r.makespan, checksum)
+    let stats = r.rms.pass_stats();
+    let elided = stats.sched_elided + stats.dmr_elided;
+    (r.events, wall, r.makespan, checksum, elided)
 }
 
 fn main() {
-    common::banner("hotpath_scale", "DES events/s at 1k/5k jobs, 256-4096 nodes");
+    let path = if reference_path() { "reference path (profile+elision off)" } else { "incremental profile" };
+    common::banner("hotpath_scale", &format!("DES events/s at 1k-20k jobs, 256-4096 nodes — {path}"));
     let mut cases = vec![
         Case { workload: "feitelson", jobs: 1000, nodes: 256, mode: "fixed" },
         Case { workload: "feitelson", jobs: 1000, nodes: 256, mode: "sync" },
         Case { workload: "feitelson", jobs: 5000, nodes: 256, mode: "sync" },
+        Case { workload: "feitelson", jobs: 5000, nodes: 256, mode: "async" },
         Case { workload: "swf", jobs: 1000, nodes: 256, mode: "sync" },
+        Case { workload: "swf", jobs: 5000, nodes: 256, mode: "async" },
     ];
     if common::full() {
         cases.extend([
@@ -109,19 +129,22 @@ fn main() {
             Case { workload: "feitelson", jobs: 5000, nodes: 4096, mode: "sync" },
             Case { workload: "swf", jobs: 5000, nodes: 1024, mode: "sync" },
             Case { workload: "swf", jobs: 5000, nodes: 4096, mode: "async" },
+            // The profile's target scale: a deep saturated backlog where
+            // the pre-profile pass cost O(R log R) every event.
+            Case { workload: "feitelson", jobs: 20000, nodes: 4096, mode: "async" },
         ]);
     }
 
     let mut t = Table::new(vec![
-        "Scenario", "Events", "Wall (s)", "Events/s", "Makespan (s)", "Checksum",
+        "Scenario", "Events", "Elided", "Wall (s)", "Events/s", "Makespan (s)", "Checksum",
     ]);
     let mut records = Vec::with_capacity(cases.len());
     for case in &cases {
         let scenario = format!("{}{}-n{}-{}", case.workload, case.jobs, case.nodes, case.mode);
         let w = materialize(case);
         // Cold run: determinism reference.  Warm run: the measurement.
-        let (ev_a, _, mk_a, sum_a) = run_once(case, &w);
-        let (ev_b, wall, mk_b, sum_b) = run_once(case, &w);
+        let (ev_a, _, mk_a, sum_a, _) = run_once(case, &w);
+        let (ev_b, wall, mk_b, sum_b, elided) = run_once(case, &w);
         assert_eq!(
             sum_a, sum_b,
             "{scenario}: determinism checksum mismatch ({mk_a} vs {mk_b})"
@@ -130,6 +153,7 @@ fn main() {
         t.row(vec![
             scenario.clone(),
             ev_b.to_string(),
+            elided.to_string(),
             format!("{wall:.3}"),
             format!("{:.0}", ev_b as f64 / wall.max(1e-9)),
             format!("{mk_b:.1}"),

@@ -26,12 +26,18 @@ pub enum AllocError {
 /// a scan over `nodes` would make each simulated event O(cluster size).
 /// `allocated()` counts `Allocated` *and* `Draining` nodes (both are held
 /// by jobs); `down()` counts only `Down` nodes.
+///
+/// `version()` is a monotonic mutation counter bumped by every
+/// state-changing method; the RMS folds it into the stamp that lets
+/// no-op scheduling passes be elided (equal stamps ⇒ the free pool
+/// cannot have changed).
 #[derive(Debug, Clone)]
 pub struct Cluster {
     nodes: Vec<NodeState>,
     free: BTreeSet<NodeId>,
     allocated: usize,
     down_count: usize,
+    version: u64,
 }
 
 impl Cluster {
@@ -41,7 +47,15 @@ impl Cluster {
             free: (0..n).collect(),
             allocated: 0,
             down_count: 0,
+            version: 0,
         }
+    }
+
+    /// Monotonic mutation counter (bumped by every `&mut self` method,
+    /// including failed attempts — conservative is cheap and always
+    /// sound for cache invalidation).
+    pub fn version(&self) -> u64 {
+        self.version
     }
 
     /// Total node count (including down nodes).
@@ -70,6 +84,7 @@ impl Cluster {
 
     /// Allocate `count` nodes to `job`. Deterministic: lowest free ids.
     pub fn alloc(&mut self, job: JobId, count: usize) -> Result<Vec<NodeId>, AllocError> {
+        self.version += 1;
         if self.free.len() < count {
             return Err(AllocError::Insufficient { requested: count, available: self.free.len() });
         }
@@ -87,6 +102,7 @@ impl Cluster {
     /// chosen suffix of the job's node list).  Draining nodes go offline
     /// instead of back to the free pool — the drain's whole point.
     pub fn release(&mut self, job: JobId, nodes: &[NodeId]) -> Result<(), AllocError> {
+        self.version += 1;
         for &n in nodes {
             match self.nodes[n] {
                 NodeState::Allocated(j) | NodeState::Draining(j) if j == job => {}
@@ -110,6 +126,7 @@ impl Cluster {
     /// the Slurm resizer-job trick (§3): job B's allocation is handed to
     /// job A with no gap during which another job could steal the nodes.
     pub fn transfer(&mut self, from: JobId, to: JobId, nodes: &[NodeId]) -> Result<(), AllocError> {
+        self.version += 1;
         for &n in nodes {
             match self.nodes[n] {
                 NodeState::Allocated(j) if j == from => {}
@@ -124,6 +141,7 @@ impl Cluster {
 
     /// Mark a node down (test/failure injection). Must be idle.
     pub fn set_down(&mut self, n: NodeId) -> Result<(), AllocError> {
+        self.version += 1;
         if self.nodes[n] != NodeState::Idle {
             return Err(AllocError::NotIdle(n));
         }
@@ -137,6 +155,7 @@ impl Cluster {
     /// failure's victim), if any; the caller must repair the victim's
     /// bookkeeping (the node is gone from the machine's point of view).
     pub fn force_down(&mut self, n: NodeId) -> Option<JobId> {
+        self.version += 1;
         match self.nodes[n] {
             NodeState::Idle => {
                 self.free.remove(&n);
@@ -158,6 +177,7 @@ impl Cluster {
     /// `true`); allocated nodes keep running their job and go offline on
     /// release.  Down nodes are untouched.
     pub fn begin_drain(&mut self, n: NodeId) -> bool {
+        self.version += 1;
         match self.nodes[n] {
             NodeState::Idle => {
                 self.free.remove(&n);
@@ -176,6 +196,7 @@ impl Cluster {
     /// End a drain: offline nodes come back to the free pool (returns
     /// `true`), still-draining nodes return to plain `Allocated`.
     pub fn end_drain(&mut self, n: NodeId) -> bool {
+        self.version += 1;
         match self.nodes[n] {
             NodeState::Down => {
                 self.nodes[n] = NodeState::Idle;
@@ -193,6 +214,7 @@ impl Cluster {
 
     /// Bring a down node back.
     pub fn set_up(&mut self, n: NodeId) {
+        self.version += 1;
         if self.nodes[n] == NodeState::Down {
             self.nodes[n] = NodeState::Idle;
             self.free.insert(n);
@@ -291,6 +313,17 @@ mod tests {
         assert!(c.release(9, &a).is_err());
         assert_eq!(c.allocated(), 3);
         assert!(c.check_invariants());
+    }
+
+    #[test]
+    fn version_bumps_on_mutation() {
+        let mut c = Cluster::new(4);
+        let v0 = c.version();
+        let n = c.alloc(1, 2).unwrap();
+        assert!(c.version() > v0, "alloc must bump the version");
+        let v1 = c.version();
+        c.release(1, &n).unwrap();
+        assert!(c.version() > v1, "release must bump the version");
     }
 
     #[test]

@@ -22,6 +22,13 @@
 //! * Arrival handling borrows specs straight from the caller's
 //!   `WorkloadSpec`; exactly one clone per job is made — the one the RMS
 //!   must own.
+//! * Every state transition the engine drives — start, finish, resize
+//!   commit, failure eviction, rescue shrink, requeue, expected-end
+//!   refresh — goes through an `Rms` method that publishes the matching
+//!   O(log active) delta to the incremental availability profile
+//!   ([`crate::rms::profile`]), so scheduling passes never rebuild a
+//!   running-jobs snapshot and provably no-op passes/checks are elided
+//!   (`Rms::pass_stats` counts both).
 //!
 //! `RunResult::events` counts every processed event so throughput
 //! benchmarks (`benches/hotpath_scale.rs`) can report events/s.

@@ -88,31 +88,50 @@
 //! (Table 2) and can run continuously — only scales to real traces
 //! (thousands of jobs, Chadha et al.; Zojer & Posner) if the simulated
 //! RMS stays cheap too.  The hot paths therefore hold to a budget of
-//! **O(active jobs) per simulated event**, never O(all jobs ever
-//! submitted):
+//! **O(pending + log active) per scheduling pass and O(log active) per
+//! state transition**, never O(all jobs ever submitted) and never a
+//! per-pass sort of the running set:
 //!
 //! * [`rms`] splits job storage into a live map and an archive, keeps
 //!   O(1) counters for running/pending/completed queries, and caches the
 //!   priority-ordered pending queue behind a dirty flag (membership and
 //!   boost changes invalidate it; pure aging reuses it while provably
-//!   order-preserving).  Scheduling passes reuse Rms-owned scratch
-//!   buffers — steady state allocates nothing.
+//!   order-preserving — both below the saturation horizon and once the
+//!   whole queue is age-saturated, the deep-backlog regime).  Scheduling
+//!   passes reuse Rms-owned scratch buffers — steady state allocates
+//!   nothing.
+//! * [`rms::profile`] is the **incremental availability profile**: a
+//!   sorted end-time structure updated in O(log active) on every
+//!   start/finish/resize/failure/requeue, so the EASY shadow-time
+//!   projection is an in-order walk — `schedule()` never snapshots the
+//!   running set and never sorts.  Version counters on (cluster, pending
+//!   queue, profile) form a state stamp that lets provably no-op
+//!   scheduling passes and repeated `NoAction` DMR checks return
+//!   memoized answers in O(1) (`rms::PassStats` counts hits).  The
+//!   rebuild-and-sort reference stays selectable via
+//!   [`rms::RmsConfig::incremental_profile`] `= false` — force it when
+//!   auditing a suspected divergence or benchmarking the win.
 //! * [`des`] keeps per-job simulation state in a dense slab (no hash map
 //!   on the event path), clones each `JobSpec` exactly once (for the RMS)
-//!   and memoizes per-(job, procs) iteration times.
+//!   and memoizes per-(job, procs) iteration times; every transition it
+//!   drives publishes its profile delta through the `Rms` entry points.
 //! * [`cluster`] answers `allocated()` from a maintained counter, so the
 //!   telemetry snapshot after every start/finish is O(1).
 //!
 //! The budget is *measured*, not assumed: `cargo bench --bench
-//! hotpath_scale` runs 1k/5k-job Feitelson and SWF workloads on
-//! 256–4096-node clusters (quick mode by default; `BENCH_FULL=1` for the
-//! big clusters) and writes the machine-readable `BENCH_hotpath.json`
-//! (per-scenario events/s, overall runs/s, makespan checksums) — the
-//! repo's perf trajectory point, uploaded as a CI artifact.  Behavior
-//! preservation is enforced by `rust/tests/test_golden_determinism.rs`:
-//! bit-identical event logs, makespans and campaign aggregates between
-//! the optimized paths and the re-sort-everything reference, plus a
-//! recorded fixture that locks the event stream across PRs.
+//! hotpath_scale` runs 1k–5k-job Feitelson and SWF workloads (sync and
+//! async) on 256–4096-node clusters (quick mode by default;
+//! `BENCH_FULL=1` adds the big clusters and a 20k-job / 4096-node case)
+//! and writes the machine-readable `BENCH_hotpath.json` (per-scenario
+//! events/s, elision counts, makespan checksums) — the repo's perf
+//! trajectory point, uploaded as a CI artifact; `HOTPATH_REFERENCE=1`
+//! reruns the same scenarios on the reference path and CI asserts the
+//! checksum sets match.  Behavior preservation is enforced by
+//! `rust/tests/test_golden_determinism.rs` (bit-identical event logs,
+//! makespans and campaign aggregates between the optimized paths and
+//! the rebuild-everything reference, fault-free and faulty, plus a
+//! recorded fixture that locks the event stream across PRs) and by the
+//! randomized differential tests in `rust/tests/test_profile.rs`.
 //!
 //! ## Resilience & fault injection
 //!

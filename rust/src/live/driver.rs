@@ -94,7 +94,7 @@ impl LiveDriver {
 
     /// Submit the workload at (scaled) arrival times and run to drain.
     pub fn run(&mut self, mut specs: Vec<JobSpec>) -> LiveReport {
-        specs.sort_by(|a, b| a.submit_time.partial_cmp(&b.submit_time).unwrap());
+        specs.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time));
         let mut spec_of: HashMap<JobId, JobSpec> = HashMap::new();
         let total = specs.len();
         let mut next = 0usize;

@@ -110,7 +110,7 @@ pub fn extract(rms: &Rms) -> Vec<JobRecord> {
             }
         })
         .collect();
-    out.sort_by(|a, b| a.submit.partial_cmp(&b.submit).unwrap().then(a.name.cmp(&b.name)));
+    out.sort_by(|a, b| a.submit.total_cmp(&b.submit).then(a.name.cmp(&b.name)));
     out
 }
 

@@ -27,6 +27,13 @@
 //! * [`crate::campaign`] — a `[faults]` sweep axis (mtbf, drain schedule,
 //!   checkpoint interval) and the per-run metrics below, emitted through
 //!   the standard CSV/JSON aggregation.
+//!
+//! Every recovery entry point (`Rms::fail_node`, `rescue_shrink_to`,
+//! `requeue_after_failure`) publishes its delta to the incremental
+//! availability profile ([`crate::rms::profile`]) in O(log active), so
+//! fault-heavy runs keep the same per-pass scheduling cost as fault-free
+//! ones — the randomized differential test drives exactly these
+//! transitions and re-derives the profile from scratch after each.
 
 pub mod model;
 pub mod recovery;

@@ -29,6 +29,40 @@ pub struct PendingInfo {
     pub est_duration: f64,
 }
 
+/// The availability projection a scheduling pass consults: "given
+/// `free_now` free nodes, when are at least `need` projected free, and
+/// how many then?"  Two implementations exist:
+///
+/// * [`SortedEnds`] — the reference: snapshot every running job's end
+///   and sort, O(R log R) per query (the pre-profile behavior, kept
+///   alive behind `RmsConfig::incremental_profile = false`).
+/// * [`crate::rms::profile::ProfileShadow`] — an in-order walk of the
+///   incrementally maintained availability profile, no snapshot, no
+///   sort.
+///
+/// Both must return bit-identical answers; the golden determinism tests
+/// compare them end-to-end.
+pub trait ShadowSource {
+    /// Earliest projected time at least `need` nodes are free, and the
+    /// projected free count at that instant.
+    fn shadow(&mut self, free_now: usize, need: usize, now: Time) -> (Time, usize);
+}
+
+/// The reference [`ShadowSource`]: sorts a snapshot of the running
+/// jobs' expected ends on every query.
+pub struct SortedEnds<'a> {
+    /// Running jobs in ascending-id order (the RMS's active-set order).
+    pub running: &'a [RunningInfo],
+    /// Reusable sort buffer.
+    pub scratch: &'a mut Vec<(Time, usize)>,
+}
+
+impl ShadowSource for SortedEnds<'_> {
+    fn shadow(&mut self, free_now: usize, need: usize, now: Time) -> (Time, usize) {
+        shadow_time_with(self.scratch, free_now, self.running, need, now)
+    }
+}
+
 /// Decide which pending jobs (already priority-ordered) start *now*.
 ///
 /// Returns the ids to start, in order.  Pure function — the RMS applies
@@ -48,17 +82,35 @@ pub fn plan_starts(
     starts
 }
 
-/// Allocation-free scheduling pass: `starts` is cleared and filled with
-/// the ids to start (in order); `ends_scratch` is the reusable
-/// sorted-ends buffer for the shadow-time projection, so a pass costs no
-/// heap allocations once the buffers have grown to steady-state size.
+/// Allocation-free scheduling pass over the reference projection:
+/// `starts` is cleared and filled with the ids to start (in order);
+/// `ends_scratch` is the reusable sorted-ends buffer for the
+/// shadow-time projection, so a pass costs no heap allocations once the
+/// buffers have grown to steady-state size.
 pub fn plan_starts_into(
-    mut free: usize,
+    free: usize,
     running: &[RunningInfo],
     pending_ordered: &[PendingInfo],
     now: Time,
     backfill: bool,
     ends_scratch: &mut Vec<(Time, usize)>,
+    starts: &mut Vec<crate::JobId>,
+) {
+    let mut src = SortedEnds { running, scratch: ends_scratch };
+    plan_starts_with(free, &mut src, pending_ordered, now, backfill, starts);
+}
+
+/// The scheduling pass, generic over the availability projection: start
+/// in priority order until the head-of-line blocker, reserve the
+/// blocker's shadow time from `shadow`, then backfill jobs that do not
+/// delay the reservation.  The projection is queried at most **once**
+/// per pass (only a blocked head needs it).
+pub fn plan_starts_with<S: ShadowSource>(
+    mut free: usize,
+    shadow_src: &mut S,
+    pending_ordered: &[PendingInfo],
+    now: Time,
+    backfill: bool,
     starts: &mut Vec<crate::JobId>,
 ) {
     starts.clear();
@@ -71,8 +123,7 @@ pub fn plan_starts_into(
             free -= p.procs;
             starts.push(p.id);
         } else {
-            let (shadow, free_at_shadow) =
-                shadow_time_with(ends_scratch, free, running, p.procs, now);
+            let (shadow, free_at_shadow) = shadow_src.shadow(free, p.procs, now);
             blocked = Some((shadow, free_at_shadow.saturating_sub(p.procs)));
             blocked_at = i;
             break;
@@ -105,6 +156,11 @@ pub fn plan_starts_into(
 
 /// Earliest time at least `need` nodes are projected free, and how many
 /// will be free then.  `ends` is a reusable scratch buffer.
+///
+/// The sort is a *stable* `total_cmp` on the end time: ties keep the
+/// caller's ascending-id order (matching the profile's `(end, id)` key
+/// order), and a NaN estimate sorts last instead of panicking the
+/// scheduler as `partial_cmp().unwrap()` used to.
 fn shadow_time_with(
     ends: &mut Vec<(Time, usize)>,
     free_now: usize,
@@ -117,7 +173,7 @@ fn shadow_time_with(
     }
     ends.clear();
     ends.extend(running.iter().map(|r| (r.expected_end, r.procs)));
-    ends.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    ends.sort_by(|a, b| a.0.total_cmp(&b.0));
     let mut free = free_now;
     for &(t, p) in ends.iter() {
         free += p;

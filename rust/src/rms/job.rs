@@ -18,6 +18,23 @@ pub enum JobState {
     Cancelled,
 }
 
+/// Memoized `NoAction` DMR check: the no-op elision of the incremental
+/// availability profile ([`crate::rms::profile`]).  Valid while the
+/// RMS's state stamp is unchanged; never stored for expand/shrink
+/// decisions (those mutate state, so their stamps die immediately).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct DmrMemo {
+    /// The request the memoized decision answered.
+    pub req: super::policy::DmrRequest,
+    /// Clock of the memoized decision (same-instant hits are always
+    /// sound; cross-clock hits additionally require the strategy's
+    /// [`crate::rms::ReconfigPolicy::time_invariant`]).
+    pub now: Time,
+    /// `(cluster, pending-queue, profile)` version stamp at decision
+    /// time.
+    pub stamp: (u64, u64, u64),
+}
+
 /// One committed reconfiguration (for the per-job analysis of §7.3–7.5).
 #[derive(Debug, Clone, Copy)]
 pub struct ResizeEvent {
@@ -61,6 +78,9 @@ pub struct Job {
     /// ([`crate::resilience`]); `start_time` then reflects the *last*
     /// start and `resize_log` the last incarnation.
     pub requeues: usize,
+    /// Last `NoAction` DMR decision, for the no-op check elision
+    /// (invalidated implicitly: the stamp it carries stops matching).
+    pub(crate) dmr_memo: Option<DmrMemo>,
 }
 
 impl Job {
@@ -80,6 +100,7 @@ impl Job {
             depends_on: None,
             resize_log: Vec::new(),
             requeues: 0,
+            dmr_memo: None,
         }
     }
 

@@ -1,5 +1,6 @@
 //! The Slurm-like workload manager with the paper's reconfiguration
-//! plug-in: multifactor priorities, EASY backfill, the pluggable
+//! plug-in: multifactor priorities, EASY backfill over the incremental
+//! cluster-availability profile ([`profile`]), the pluggable
 //! reconfiguration-policy engine ([`policy`] — the paper's §4 rule plus
 //! queue-pressure / fair-share / deadline strategies) and the resize
 //! protocols (§3, §5.2).
@@ -8,6 +9,7 @@ pub mod backfill;
 pub mod events;
 pub mod job;
 pub mod policy;
+pub mod profile;
 pub mod queue;
 #[allow(clippy::module_inception)]
 mod rms;
@@ -18,5 +20,6 @@ pub use policy::{
     Action, DmrRequest, PolicyConfig, PolicyContext, PolicyStrategy, ReconfigPolicy, SystemView,
     UsageView,
 };
+pub use profile::AvailProfile;
 pub use queue::PriorityWeights;
-pub use rms::{DmrOutcome, NodeFailure, Rms, RmsConfig, Started, Telemetry};
+pub use rms::{DmrOutcome, NodeFailure, PassStats, Rms, RmsConfig, Started, Telemetry};

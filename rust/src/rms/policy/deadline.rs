@@ -59,6 +59,15 @@ impl ReconfigPolicy for DeadlineAware {
         }
         Action::NoAction
     }
+
+    /// **Not** time-invariant: with no completion estimate the deadline
+    /// projection falls back to `ctx.now` (above), so the same context at
+    /// a later clock can cross the deadline and flip the decision.  The
+    /// RMS therefore never elides this strategy's checks across clock
+    /// values (same-instant elision remains sound and allowed).
+    fn time_invariant(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

@@ -76,6 +76,12 @@ impl ReconfigPolicy for FairShare {
         }
         Action::NoAction
     }
+
+    /// Shares are computed from the usage view, never from the clock, so
+    /// repeated checks under an unchanged context may be elided.
+    fn time_invariant(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]

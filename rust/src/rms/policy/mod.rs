@@ -43,7 +43,7 @@ pub use throughput::ThroughputAware;
 use crate::Time;
 
 /// What the application conveys on each DMR call (§5.1).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DmrRequest {
     /// Minimum acceptable process count.
     pub min: usize,
@@ -211,6 +211,20 @@ pub trait ReconfigPolicy: Send + Sync {
     /// populates the per-user usage fields of the context.  Defaults to
     /// `false` so the baseline stays scan-free.
     fn wants_usage(&self) -> bool {
+        false
+    }
+
+    /// Whether [`ReconfigPolicy::decide`] ignores [`PolicyContext::now`]
+    /// — i.e. two contexts differing *only* in `now` always yield the
+    /// same action.  When `true`, the RMS may return a memoized
+    /// `NoAction` for a repeated check whose entire remaining context is
+    /// provably unchanged (the no-op elision of the incremental
+    /// availability profile) even though the clock advanced.  Defaults
+    /// to `false`: a time-reading strategy that wrongly advertises
+    /// invariance would make the memoized path diverge from the
+    /// reference path, so only opt in when `decide` genuinely never
+    /// reads `now`.
+    fn time_invariant(&self) -> bool {
         false
     }
 }

@@ -49,6 +49,12 @@ impl ReconfigPolicy for QueueAware {
         }
         Action::NoAction
     }
+
+    /// Queue pressure is read from the view, never from the clock, so
+    /// repeated checks under an unchanged context may be elided.
+    fn time_invariant(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]

@@ -28,6 +28,13 @@ impl ReconfigPolicy for ThroughputAware {
     fn decide(&self, ctx: &PolicyContext) -> Action {
         decide(&self.cfg, ctx.current, ctx.req, &ctx.view)
     }
+
+    /// The §4 rule never reads the clock — only the request and the
+    /// system view — so repeated checks under an unchanged context may
+    /// be elided by the RMS.
+    fn time_invariant(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]

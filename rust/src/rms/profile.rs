@@ -1,0 +1,334 @@
+//! Incrementally maintained cluster-availability profile.
+//!
+//! The EASY-backfill shadow-time projection needs the running jobs'
+//! expected end times in ascending order.  The original implementation
+//! rebuilt that view on every scheduling pass: snapshot all R active
+//! jobs into a scratch vector, then `extend` + `sort` the ends list —
+//! O(R log R) per pass even when nothing changed since the last one.
+//! Production schedulers keep an *availability profile* instead (the
+//! slot structures of the EASY/Feitelson parallel-workload line): a
+//! sorted end-time structure updated in O(log R) on every job start,
+//! finish, resize, failure and requeue, so a pass walks it in order and
+//! never sorts.
+//!
+//! [`AvailProfile`] is that structure.  The RMS owns one and publishes a
+//! delta at every mutation site ([`crate::rms::Rms`] start/finish/
+//! cancel/expand/shrink/rescue/requeue/failure paths); the scheduling
+//! pass consumes it through [`ProfileShadow`], an impl of
+//! [`super::backfill::ShadowSource`].
+//!
+//! ## Ordering contract
+//!
+//! The reference path iterates active jobs in ascending-id order and
+//! stable-sorts by expected end ([`f64::total_cmp`]), so ties on the
+//! end time keep ascending job ids.  The profile's B-tree is keyed by
+//! `(time_key(end), JobId)` where [`time_key`] is the order-preserving
+//! bit encoding of `f64::total_cmp` — an in-order walk therefore visits
+//! exactly the sequence the reference sort produces, and the two paths
+//! return bit-identical shadow times (locked by the randomized
+//! differential test in `rust/tests/test_profile.rs` and the golden
+//! digests in `rust/tests/test_golden_determinism.rs`).
+//!
+//! Jobs whose end is *unknown* (no `expected_end` yet — never the case
+//! under the DES drivers, which estimate on arrival) are carried with
+//! their duration estimate; a shadow query then falls back to the
+//! reference rebuild so behavior cannot diverge, it is only the fast
+//! walk that requires every end to be known.
+
+use std::collections::BTreeMap;
+
+use super::backfill::ShadowSource;
+use crate::{JobId, Time};
+
+/// Order-preserving integer encoding of an `f64` under
+/// [`f64::total_cmp`]: `key(a) < key(b)` iff `a.total_cmp(&b)` is
+/// `Less`.  Lets the B-tree key on times without wrapping floats in an
+/// `Ord` newtype.
+pub fn time_key(t: Time) -> u64 {
+    let bits = t.to_bits() as i64;
+    // Same transform `f64::total_cmp` applies before its integer
+    // compare, shifted into unsigned order by flipping the sign bit.
+    let key = bits ^ (((bits >> 63) as u64) >> 1) as i64;
+    (key as u64) ^ (1u64 << 63)
+}
+
+/// One active job as tracked by the profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProfileEntry {
+    /// Scheduler's end estimate, if known (`None` keeps the job on the
+    /// reference fallback path — the DES drivers always know).
+    pub end: Option<Time>,
+    /// Nodes the job currently holds.
+    pub procs: usize,
+    /// Static duration estimate used when `end` is unknown
+    /// (`now + est`, exactly like the reference snapshot).
+    pub est: f64,
+}
+
+/// The incrementally maintained availability profile: every active job,
+/// indexed both by id (for O(log R) updates) and by projected end time
+/// (for the in-order shadow walk).
+#[derive(Debug, Default, Clone)]
+pub struct AvailProfile {
+    /// `(end-time key, job id) -> (end, procs)`, ascending by end then
+    /// id — the walk order of the shadow projection.  Holds exactly the
+    /// jobs whose end is known.
+    ends: BTreeMap<(u64, JobId), (Time, usize)>,
+    /// Every active job, by id.
+    jobs: BTreeMap<JobId, ProfileEntry>,
+    /// Bumped on every mutation; the RMS folds it into the state stamp
+    /// that drives no-op pass elision.
+    version: u64,
+}
+
+impl AvailProfile {
+    /// Active jobs tracked.
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// No active jobs tracked.
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Monotonic mutation counter.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// The tracked entry for `id`, if any.
+    pub fn entry(&self, id: JobId) -> Option<&ProfileEntry> {
+        self.jobs.get(&id)
+    }
+
+    /// Track a job that just became active.  O(log R).
+    pub fn insert(&mut self, id: JobId, procs: usize, end: Option<Time>, est: f64) {
+        self.version += 1;
+        if let Some(t) = end {
+            self.ends.insert((time_key(t), id), (t, procs));
+        }
+        let prev = self.jobs.insert(id, ProfileEntry { end, procs, est });
+        debug_assert!(prev.is_none(), "profile: job {id} inserted twice");
+    }
+
+    /// Stop tracking a job (finished, cancelled, requeued).  O(log R);
+    /// a no-op for untracked ids.
+    pub fn remove(&mut self, id: JobId) {
+        if let Some(e) = self.jobs.remove(&id) {
+            self.version += 1;
+            if let Some(t) = e.end {
+                self.ends.remove(&(time_key(t), id));
+            }
+        }
+    }
+
+    /// Publish a node-count change (resize commit, expansion transfer,
+    /// failure eviction, rescue shrink).  O(log R).
+    pub fn set_procs(&mut self, id: JobId, procs: usize) {
+        let Some(e) = self.jobs.get_mut(&id) else {
+            debug_assert!(false, "profile: set_procs on untracked job {id}");
+            return;
+        };
+        self.version += 1;
+        e.procs = procs;
+        if let Some(t) = e.end {
+            self.ends.insert((time_key(t), id), (t, procs));
+        }
+    }
+
+    /// Publish a new end estimate.  O(log R).
+    pub fn set_end(&mut self, id: JobId, end: Time) {
+        let Some(e) = self.jobs.get_mut(&id) else {
+            debug_assert!(false, "profile: set_end on untracked job {id}");
+            return;
+        };
+        self.version += 1;
+        if let Some(old) = e.end {
+            self.ends.remove(&(time_key(old), id));
+        }
+        e.end = Some(end);
+        self.ends.insert((time_key(end), id), (end, e.procs));
+    }
+
+    /// Earliest projected time at least `need` nodes are free (given
+    /// `free_now` free right now) and how many are projected free then —
+    /// the shadow-time query of the EASY reservation.
+    ///
+    /// Fast path (every end known): an in-order walk of the B-tree, no
+    /// snapshot, no sort — O(k) for the k ends visited before the
+    /// crossing.  Fallback (some end unknown): rebuilds `(end, procs)`
+    /// exactly like the reference snapshot and sorts, so results stay
+    /// bit-identical to the rebuild path in every case.
+    pub fn shadow(
+        &self,
+        free_now: usize,
+        need: usize,
+        now: Time,
+        scratch: &mut Vec<(Time, usize)>,
+    ) -> (Time, usize) {
+        if free_now >= need {
+            return (now, free_now);
+        }
+        let mut free = free_now;
+        if self.ends.len() == self.jobs.len() {
+            for &(t, p) in self.ends.values() {
+                free += p;
+                if free >= need {
+                    return (t.max(now), free);
+                }
+            }
+            return (Time::INFINITY, free);
+        }
+        // Some job has no known end: reproduce the reference snapshot
+        // (ascending-id iteration, stable sort by end).
+        scratch.clear();
+        scratch.extend(self.jobs.values().map(|e| (e.end.unwrap_or(now + e.est), e.procs)));
+        scratch.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for &(t, p) in scratch.iter() {
+            free += p;
+            if free >= need {
+                return (t.max(now), free);
+            }
+        }
+        (Time::INFINITY, free)
+    }
+
+    /// Internal consistency: the two indices describe the same set.
+    /// Deliberately O(R log R) — property-test only.
+    pub fn check_invariants(&self) -> bool {
+        let known = self.jobs.iter().filter(|(_, e)| e.end.is_some()).count();
+        if known != self.ends.len() {
+            return false;
+        }
+        self.ends.iter().all(|(&(k, id), &(t, procs))| {
+            k == time_key(t)
+                && self.jobs.get(&id).is_some_and(|e| e.end == Some(t) && e.procs == procs)
+        })
+    }
+}
+
+/// Borrow of the profile (plus the fallback scratch buffer) that plugs
+/// into [`super::backfill::plan_starts_with`] as the availability
+/// projection of a scheduling pass.
+pub struct ProfileShadow<'a> {
+    /// The RMS-owned profile.
+    pub profile: &'a AvailProfile,
+    /// Reusable fallback buffer (untouched on the fast path).
+    pub scratch: &'a mut Vec<(Time, usize)>,
+}
+
+impl ShadowSource for ProfileShadow<'_> {
+    fn shadow(&mut self, free_now: usize, need: usize, now: Time) -> (Time, usize) {
+        self.profile.shadow(free_now, need, now, self.scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_key_matches_total_cmp() {
+        let samples = [
+            f64::NEG_INFINITY,
+            -1e300,
+            -2.5,
+            -0.0,
+            0.0,
+            1e-9,
+            1.0,
+            2.5,
+            1e300,
+            f64::INFINITY,
+            f64::NAN,
+            -f64::NAN,
+        ];
+        for &a in &samples {
+            for &b in &samples {
+                assert_eq!(
+                    time_key(a).cmp(&time_key(b)),
+                    a.total_cmp(&b),
+                    "key order diverges from total_cmp for ({a}, {b})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn insert_walk_remove() {
+        let mut p = AvailProfile::default();
+        p.insert(3, 4, Some(100.0), 50.0);
+        p.insert(1, 2, Some(50.0), 50.0);
+        p.insert(2, 8, Some(100.0), 50.0);
+        // Walk order: t=50 first, then the t=100 tie in id order (2, 3).
+        let mut scratch = Vec::new();
+        // need 3: free 1 + job1's 2 = 3 at t=50
+        assert_eq!(p.shadow(1, 3, 0.0, &mut scratch), (50.0, 3));
+        // need 11: 1 + 2 + 8 = 11 at the first t=100 entry (job 2)
+        assert_eq!(p.shadow(1, 11, 0.0, &mut scratch), (100.0, 11));
+        // need 16: exhausted -> infinity
+        let (t, f) = p.shadow(1, 16, 0.0, &mut scratch);
+        assert!(t.is_infinite());
+        assert_eq!(f, 15);
+        // free already sufficient short-circuits at `now`
+        assert_eq!(p.shadow(5, 3, 7.0, &mut scratch), (7.0, 5));
+        assert!(p.check_invariants());
+
+        p.remove(2);
+        assert_eq!(p.len(), 2);
+        let (t, f) = p.shadow(1, 7, 0.0, &mut scratch);
+        assert_eq!((t, f), (100.0, 7));
+        p.remove(42); // unknown id: no-op
+        assert_eq!(p.len(), 2);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn set_procs_and_end_move_entries() {
+        let mut p = AvailProfile::default();
+        p.insert(1, 4, Some(10.0), 5.0);
+        p.set_procs(1, 2);
+        assert_eq!(p.entry(1).unwrap().procs, 2);
+        let mut scratch = Vec::new();
+        assert_eq!(p.shadow(0, 2, 0.0, &mut scratch), (10.0, 2));
+        p.set_end(1, 99.0);
+        assert_eq!(p.shadow(0, 2, 0.0, &mut scratch), (99.0, 2));
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn unknown_end_falls_back_to_reference_rebuild() {
+        let mut p = AvailProfile::default();
+        p.insert(1, 4, None, 30.0); // end = now + 30
+        p.insert(2, 4, Some(20.0), 99.0);
+        let mut scratch = Vec::new();
+        // At now=0: job 2 ends at 20, job 1 at 30 -> need 6 crosses at 30.
+        assert_eq!(p.shadow(0, 6, 0.0, &mut scratch), (30.0, 8));
+        // At now=25: job 1 now projects to 55, after job 2's 20 (clamped
+        // to now=25).
+        assert_eq!(p.shadow(0, 6, 25.0, &mut scratch), (55.0, 8));
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn version_bumps_on_every_mutation() {
+        let mut p = AvailProfile::default();
+        let v0 = p.version();
+        p.insert(1, 4, Some(10.0), 5.0);
+        let v1 = p.version();
+        assert!(v1 > v0);
+        p.set_procs(1, 2);
+        let v2 = p.version();
+        assert!(v2 > v1);
+        p.set_end(1, 20.0);
+        let v3 = p.version();
+        assert!(v3 > v2);
+        p.remove(1);
+        assert!(p.version() > v3);
+        // No-op remove does not bump.
+        let v4 = p.version();
+        p.remove(1);
+        assert_eq!(p.version(), v4);
+    }
+}

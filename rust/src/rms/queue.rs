@@ -48,11 +48,11 @@ pub type PendingKey = (f64, Time, crate::JobId);
 /// time, then id) as the tie-break so ordering is deterministic and
 /// total.  Every consumer — [`order_pending`] and the RMS's cached
 /// order (`rms::Rms`) — must sort with this comparator, never a copy.
+/// Built on [`f64::total_cmp`]: a NaN priority (a poisoned estimate
+/// upstream) sorts deterministically instead of panicking the scheduler
+/// mid-pass.
 pub fn pending_cmp(a: &PendingKey, b: &PendingKey) -> std::cmp::Ordering {
-    b.0.partial_cmp(&a.0)
-        .unwrap()
-        .then(a.1.partial_cmp(&b.1).unwrap())
-        .then(a.2.cmp(&b.2))
+    b.0.total_cmp(&a.0).then(a.1.total_cmp(&b.1)).then(a.2.cmp(&b.2))
 }
 
 /// Sort job ids by [`pending_cmp`].

@@ -26,28 +26,47 @@
 //!   jobs in a deterministic (ascending-id) order.
 //! * The priority-ordered pending queue is cached behind a dirty flag:
 //!   membership and boost changes invalidate it, while *pure aging*
-//!   reuses it whenever that provably preserves the relative order (all
-//!   pending jobs still inside the age-saturation horizon — their age
-//!   factors then grow in lockstep).  Set
+//!   reuses it whenever that provably preserves the relative order —
+//!   either every pending job is still inside the age-saturation
+//!   horizon (age factors grow in lockstep) or every pending job was
+//!   already *saturated* when the cache was sorted (age factors are all
+//!   pinned at 1, so priorities are constants of time).  Set
 //!   [`RmsConfig::cache_pending_order`] to `false` to force a re-sort on
 //!   every pass (the golden determinism test runs both ways and asserts
 //!   bit-identical event logs).
-//! * The `RunningInfo`/`PendingInfo`/sorted-ends scratch buffers are
-//!   owned by the `Rms` and reused across passes, so a steady-state pass
-//!   performs no heap allocation.
+//! * The backfill projection reads the **incremental availability
+//!   profile** ([`super::profile`]): a sorted end-time structure updated
+//!   in O(log active) at every start/finish/resize/failure/requeue, so a
+//!   scheduling pass walks projected ends in order instead of
+//!   snapshotting all running jobs and sorting (the pre-profile
+//!   behavior, kept as the differential reference behind
+//!   [`RmsConfig::incremental_profile`] `= false`).
+//! * **No-op pass elision**: version counters on the cluster, the
+//!   pending queue and the profile form a state stamp; a scheduling
+//!   pass that started nothing memoizes its stamp, and `schedule()`
+//!   returns the empty answer in O(1) while the stamp (and the cached
+//!   order's reuse window) still hold.  `dmr_check` likewise memoizes a
+//!   `NoAction` decision per job and replays it (still logging the
+//!   `DmrDecision` event, so event streams are bit-identical) while the
+//!   stamp holds — across clock values only for strategies that declare
+//!   [`ReconfigPolicy::time_invariant`].
+//! * The `PendingInfo`/sorted-ends scratch buffers are owned by the
+//!   `Rms` and reused across passes, so a steady-state pass performs no
+//!   heap allocation.
 //!
 //! Mutating `cfg` (weights, policy) mid-run is not supported — the cached
 //! queue order assumes stable weights between invalidations.
 
 use std::collections::{BTreeSet, HashMap};
 
-use super::backfill::{plan_starts_into, PendingInfo, RunningInfo};
+use super::backfill::{plan_starts_with, PendingInfo, RunningInfo, SortedEnds};
 use super::events::{EventLog, RmsEvent};
-use super::job::{Job, JobState, ResizeEvent};
+use super::job::{DmrMemo, Job, JobState, ResizeEvent};
 use super::policy::{
     Action, DmrRequest, PolicyConfig, PolicyContext, PolicyStrategy, ReconfigPolicy, SystemView,
     UsageView,
 };
+use super::profile::{AvailProfile, ProfileShadow};
 use super::queue::{pending_cmp, priority, PriorityWeights};
 use crate::cluster::Cluster;
 use crate::workload::JobSpec;
@@ -81,6 +100,13 @@ pub struct RmsConfig {
     /// unchanged (see module docs).  Disabled only by the golden
     /// determinism test, which compares both paths bit-for-bit.
     pub cache_pending_order: bool,
+    /// Drive the backfill projection from the incrementally maintained
+    /// availability profile and elide provably no-op scheduling passes /
+    /// DMR checks (see module docs).  `false` restores the
+    /// rebuild-and-sort reference path with no elision — the
+    /// differential baseline the golden determinism tests compare
+    /// against bit-for-bit.
+    pub incremental_profile: bool,
 }
 
 impl Default for RmsConfig {
@@ -94,8 +120,26 @@ impl Default for RmsConfig {
             shrink_priority_boost: true,
             telemetry_stride: 1,
             cache_pending_order: true,
+            incremental_profile: true,
         }
     }
+}
+
+/// Hot-path instrumentation: how many scheduling passes / DMR checks
+/// ran, and how many were elided by the no-op memoization (see module
+/// docs).  Purely observational — not part of the event log or any
+/// digest.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PassStats {
+    /// `schedule()` invocations that got past the empty-queue early
+    /// exit.
+    pub sched_passes: u64,
+    /// Of those, passes answered from the no-op memo in O(1).
+    pub sched_elided: u64,
+    /// `dmr_check` invocations.
+    pub dmr_checks: u64,
+    /// Of those, checks answered from the per-job `NoAction` memo.
+    pub dmr_elided: u64,
 }
 
 /// A job started by a scheduling pass.
@@ -185,8 +229,26 @@ pub struct Rms {
     /// Time the cached order was sorted at.
     order_now: Time,
     /// Earliest submit time among the cached pending jobs (age-saturation
-    /// reuse bound).
+    /// reuse bound: nobody saturated yet ⇒ ages grow in lockstep).
     order_oldest_submit: Time,
+    /// Latest submit time among the cached pending jobs (the complementary
+    /// bound: everybody already saturated at `order_now` ⇒ ages pinned).
+    order_youngest_submit: Time,
+    /// Bumped whenever the cached order's *content* may change: every
+    /// [`Rms::invalidate_pending_order`] call and every actual re-sort in
+    /// [`Rms::refresh_pending_order`].  One component of the elision
+    /// state stamp.
+    pending_version: u64,
+    // --- incremental availability profile + no-op elision ------------
+    /// Sorted end-time structure mirroring the active set (kept in sync
+    /// even when `cfg.incremental_profile` is off, so the flag only
+    /// selects the *read* path and invariants hold in both modes).
+    profile: AvailProfile,
+    /// `(clock, state stamp)` of the last scheduling pass that started
+    /// nothing; lets an identical pass return in O(1).
+    sched_noop: Option<(Time, (u64, u64, u64))>,
+    /// Pass/check counters (observational only).
+    passes: PassStats,
     // --- reusable scheduling-pass scratch buffers --------------------
     running_buf: Vec<RunningInfo>,
     eligible_buf: Vec<PendingInfo>,
@@ -227,6 +289,11 @@ impl Rms {
             order_valid: false,
             order_now: 0.0,
             order_oldest_submit: f64::INFINITY,
+            order_youngest_submit: f64::NEG_INFINITY,
+            pending_version: 0,
+            profile: AvailProfile::default(),
+            sched_noop: None,
+            passes: PassStats::default(),
             running_buf: Vec::new(),
             eligible_buf: Vec::new(),
             ends_scratch: Vec::new(),
@@ -280,25 +347,48 @@ impl Rms {
         self.pending.is_empty() && self.active_user == 0
     }
 
+    /// Hot-path pass/elision counters (observational; see [`PassStats`]).
+    pub fn pass_stats(&self) -> PassStats {
+        self.passes
+    }
+
+    /// Read-only view of the incremental availability profile (tests,
+    /// invariant checks).
+    pub fn profile(&self) -> &AvailProfile {
+        &self.profile
+    }
+
+    /// The state stamp driving no-op elision: equal stamps prove that
+    /// the free pool, the pending queue (membership, boosts *and* cached
+    /// order content) and every active job's (procs, expected end) are
+    /// unchanged — each component is a monotonic version counter, so
+    /// equality can never alias across a mutation.
+    fn stamp(&self) -> (u64, u64, u64) {
+        (self.cluster.version(), self.pending_version, self.profile.version())
+    }
+
     // ------------------------------------------------------------------
     // Cached pending-queue order
 
     /// Recompute or reuse the priority order of the pending queue at
-    /// `now`.  Reuse is sound when (a) membership and boosts are
-    /// unchanged (`order_valid`), and (b) either the timestamp is the
-    /// same, or every pending job is still below the age-saturation
-    /// horizon at `now` — then all age factors have grown by the same
-    /// amount since the cached sort and pairwise order is preserved.
+    /// `now`.  The reuse conditions (and their soundness arguments) live
+    /// on [`Rms::order_reusable`], the shared predicate.
     fn refresh_pending_order(&mut self, now: Time) {
         if self.order_reusable(now) {
             return;
         }
+        // The cached order's content is about to be replaced: bump the
+        // queue version so memoized no-op answers taken against the old
+        // order can no longer match (the re-sorted order may differ).
+        self.pending_version += 1;
         let total = self.cluster.total();
         self.order_scratch.clear();
         let mut oldest = f64::INFINITY;
+        let mut youngest = f64::NEG_INFINITY;
         for &id in &self.pending {
             let j = &self.live[&id];
             oldest = oldest.min(j.submit_time);
+            youngest = youngest.max(j.submit_time);
             self.order_scratch.push((
                 priority(j, &self.cfg.weights, total, now),
                 j.submit_time,
@@ -311,23 +401,40 @@ impl Rms {
         self.order_valid = true;
         self.order_now = now;
         self.order_oldest_submit = oldest;
+        self.order_youngest_submit = youngest;
     }
 
     fn invalidate_pending_order(&mut self) {
         self.order_valid = false;
+        self.pending_version += 1;
     }
 
     /// Whether the cached pending order may be reused at `now` — the one
     /// reuse predicate shared by [`Rms::refresh_pending_order`] (the
     /// `&mut` sorting path) and `view_at` (the `&self` peeking path), so
-    /// the two can never drift.  See `refresh_pending_order`'s docs for
-    /// the soundness argument.
+    /// the two can never drift.  Reuse is sound (order provably equal to
+    /// a fresh sort) in either of two regimes, given unchanged
+    /// membership/boosts (`order_valid`):
+    ///
+    /// * **Lockstep aging** — every cached pending job is still below
+    ///   the age-saturation horizon at `now`: all age factors have grown
+    ///   by the same amount since the cached sort, preserving pairwise
+    ///   order.
+    /// * **Full saturation** — every cached pending job was *already*
+    ///   saturated when the cache was sorted: all age factors are pinned
+    ///   at 1 from then on, so priorities are constants of time and a
+    ///   fresh sort would compute identical keys.  This is the
+    ///   deep-backlog regime (thousands of queued jobs, all older than
+    ///   the horizon) where the pre-existing rule re-sorted on every
+    ///   single pass.
     fn order_reusable(&self, now: Time) -> bool {
+        let horizon = self.cfg.weights.age_horizon;
         self.order_valid
             && self.cfg.cache_pending_order
             && (now == self.order_now
                 || (now > self.order_now
-                    && now - self.order_oldest_submit < self.cfg.weights.age_horizon))
+                    && (now - self.order_oldest_submit < horizon
+                        || self.order_now - self.order_youngest_submit >= horizon)))
     }
 
     fn view(&mut self, now: Time) -> SystemView {
@@ -463,6 +570,7 @@ impl Rms {
         let nodes = std::mem::take(&mut job.nodes);
         self.cluster.release(id, &nodes).expect("finish: release");
         self.active.remove(&id);
+        self.profile.remove(id);
         if !job.is_resizer {
             self.active_user -= 1;
         }
@@ -486,6 +594,7 @@ impl Rms {
         }
         if job.is_active() {
             self.active.remove(&id);
+            self.profile.remove(id);
             if !job.is_resizer {
                 self.active_user -= 1;
             }
@@ -501,10 +610,14 @@ impl Rms {
     }
 
     /// Refresh the scheduler's estimate of a running job's end time
-    /// (feeds backfill reservations).
+    /// (feeds backfill reservations; published to the availability
+    /// profile when the job is active).
     pub fn set_expected_end(&mut self, id: JobId, t: Time) {
         if let Some(j) = self.live.get_mut(&id) {
             j.expected_end = Some(t);
+            if j.is_active() {
+                self.profile.set_end(id, t);
+            }
         }
     }
 
@@ -514,11 +627,31 @@ impl Rms {
     /// One scheduling pass: start every pending job the policy allows.
     /// Returns the started jobs with their allocations.
     ///
-    /// Cost: O(pending + active) — completed jobs are never visited, and
-    /// the pass reuses the Rms-owned scratch buffers.
+    /// Cost: O(pending) — completed jobs are never visited, the backfill
+    /// projection walks the incremental availability profile instead of
+    /// snapshotting + sorting the active set, and the pass reuses the
+    /// Rms-owned scratch buffers.  A pass provably identical to the last
+    /// no-op pass (same clock-or-reusable-order, same state stamp)
+    /// returns in O(1) without planning at all; see the module docs for
+    /// the elision soundness argument.
     pub fn schedule(&mut self, now: Time) -> Vec<Started> {
         if self.pending.is_empty() {
             return Vec::new();
+        }
+        self.passes.sched_passes += 1;
+        if self.cfg.incremental_profile {
+            if let Some((t, stamp)) = self.sched_noop {
+                // A no-op pass stays a no-op while nothing changed: at
+                // the same clock trivially; at a later clock because
+                // every reason a job failed to start only hardens with
+                // time (backfill windows shrink as `now` grows, free
+                // nodes and projected ends are pinned by the stamp, and
+                // the order-reuse window pins the head).
+                if stamp == self.stamp() && (now == t || self.order_reusable(now)) {
+                    self.passes.sched_elided += 1;
+                    return Vec::new();
+                }
+            }
         }
         self.refresh_pending_order(now);
 
@@ -539,39 +672,49 @@ impl Rms {
                 });
             }
         }
-        self.running_buf.clear();
-        for &id in &self.active {
-            let j = &self.live[&id];
-            self.running_buf.push(RunningInfo {
-                procs: j.procs(),
-                expected_end: j.expected_end.unwrap_or(now + j.spec.est_duration()),
-            });
-        }
 
+        let free = self.cluster.available();
+        let backfill = self.cfg.backfill;
         let mut starts = std::mem::take(&mut self.starts_buf);
-        plan_starts_into(
-            self.cluster.available(),
-            &self.running_buf,
-            &self.eligible_buf,
-            now,
-            self.cfg.backfill,
-            &mut self.ends_scratch,
-            &mut starts,
-        );
+        if self.cfg.incremental_profile {
+            // Profile path: no running-jobs snapshot at all — a blocked
+            // head walks the sorted ends in order.
+            let mut src =
+                ProfileShadow { profile: &self.profile, scratch: &mut self.ends_scratch };
+            plan_starts_with(free, &mut src, &self.eligible_buf, now, backfill, &mut starts);
+        } else {
+            // Reference path (differential baseline): snapshot active
+            // jobs in ascending-id order and let the projection sort.
+            self.running_buf.clear();
+            for &id in &self.active {
+                let j = &self.live[&id];
+                self.running_buf.push(RunningInfo {
+                    procs: j.procs(),
+                    expected_end: j.expected_end.unwrap_or(now + j.spec.est_duration()),
+                });
+            }
+            let mut src =
+                SortedEnds { running: &self.running_buf, scratch: &mut self.ends_scratch };
+            plan_starts_with(free, &mut src, &self.eligible_buf, now, backfill, &mut starts);
+        }
 
         let mut out = Vec::with_capacity(starts.len());
         let mut started_user = 0usize;
         for &id in &starts {
             let procs = self.live[&id].spec.procs;
             let nodes = self.cluster.alloc(id, procs).expect("schedule: alloc");
-            let job = self.live.get_mut(&id).unwrap();
-            job.nodes = nodes.clone();
-            job.state = JobState::Running;
-            job.start_time = Some(now);
-            job.qos_boost = false; // boost consumed
-            if !job.is_resizer {
-                started_user += 1;
-            }
+            let (expected_end, est) = {
+                let job = self.live.get_mut(&id).unwrap();
+                job.nodes = nodes.clone();
+                job.state = JobState::Running;
+                job.start_time = Some(now);
+                job.qos_boost = false; // boost consumed
+                if !job.is_resizer {
+                    started_user += 1;
+                }
+                (job.expected_end, job.spec.est_duration())
+            };
+            self.profile.insert(id, procs, expected_end, est);
             self.active.insert(id);
             self.log.push(RmsEvent::Started { job: id, time: now, procs });
             out.push(Started { job: id, nodes });
@@ -590,6 +733,9 @@ impl Rms {
             self.recent_starts.extend(out.iter().cloned());
             self.snapshot(now);
         }
+        // Memoize a no-op pass: its stamp is untouched (nothing mutated),
+        // so an identical follow-up pass can skip planning entirely.
+        self.sched_noop = if out.is_empty() { Some((now, self.stamp())) } else { None };
         out
     }
 
@@ -599,11 +745,47 @@ impl Rms {
     /// Evaluate a DMR call from `id` (synchronous semantics: decision and
     /// resource movement happen now).  The decision is delegated to the
     /// configured [`ReconfigPolicy`] strategy.
+    ///
+    /// **No-op elision**: a `NoAction` decision is memoized per job with
+    /// the state stamp it was taken under.  A repeated check whose stamp
+    /// still matches — same free pool, same pending queue (membership,
+    /// boosts, cached-order content), same active procs/ends — replays
+    /// the memo in O(1) instead of reassembling the context, *still
+    /// logging* the `DmrDecision` event so event streams stay
+    /// bit-identical to the reference path.  Cross-clock replays are
+    /// allowed only for strategies declaring
+    /// [`ReconfigPolicy::time_invariant`] and only inside the cached
+    /// order's reuse window (which pins the queue head the view would
+    /// report).
     pub fn dmr_check(&mut self, id: JobId, req: &DmrRequest, now: Time) -> DmrOutcome {
+        self.passes.dmr_checks += 1;
+        if self.cfg.incremental_profile {
+            if let Some(memo) = self.live[&id].dmr_memo {
+                if memo.req == *req
+                    && memo.stamp == self.stamp()
+                    && (now == memo.now
+                        || (self.policy.time_invariant() && self.order_reusable(now)))
+                {
+                    self.passes.dmr_elided += 1;
+                    self.log.push(RmsEvent::DmrDecision {
+                        job: id,
+                        time: now,
+                        action: Action::NoAction,
+                    });
+                    return DmrOutcome::NoAction;
+                }
+            }
+        }
         let current = self.live[&id].procs();
         let view = self.view(now);
         let ctx = self.policy_ctx(id, current, req, view, now);
         let action = self.policy.decide(&ctx);
+        if self.cfg.incremental_profile && action == Action::NoAction {
+            // Stamp *after* the view refresh (which may have re-sorted
+            // the queue and bumped its version).
+            let memo = DmrMemo { req: *req, now, stamp: self.stamp() };
+            self.live.get_mut(&id).unwrap().dmr_memo = Some(memo);
+        }
         self.log.push(RmsEvent::DmrDecision { job: id, time: now, action });
         match action {
             Action::NoAction => DmrOutcome::NoAction,
@@ -699,10 +881,18 @@ impl Rms {
                     r.nodes.clear();
                 }
                 self.cancel(rj, now);
-                let job = self.live.get_mut(&id).unwrap();
-                job.nodes.extend_from_slice(&new_nodes);
-                job.state = JobState::Resizing;
-                job.resize_log.push(ResizeEvent { time: now, from_procs: current, to_procs: to });
+                let procs = {
+                    let job = self.live.get_mut(&id).unwrap();
+                    job.nodes.extend_from_slice(&new_nodes);
+                    job.state = JobState::Resizing;
+                    job.resize_log.push(ResizeEvent {
+                        time: now,
+                        from_procs: current,
+                        to_procs: to,
+                    });
+                    job.nodes.len()
+                };
+                self.profile.set_procs(id, procs);
                 self.log.push(RmsEvent::Expanded { job: id, time: now, from: current, to });
                 self.snapshot(now);
                 DmrOutcome::Expand { to, new_nodes }
@@ -761,6 +951,7 @@ impl Rms {
         let job = self.live.get_mut(&id).unwrap();
         job.state = JobState::Running;
         job.resize_log.push(ResizeEvent { time: now, from_procs: from, to_procs: to });
+        self.profile.set_procs(id, to);
         self.log.push(RmsEvent::Shrunk { job: id, time: now, from, to });
         self.snapshot(now);
     }
@@ -790,6 +981,7 @@ impl Rms {
         debug_assert!(!job.is_resizer, "resizer jobs never hold nodes across events");
         job.nodes.retain(|&n| n != node);
         let survivors = job.nodes.len();
+        self.profile.set_procs(id, survivors);
         self.log.push(RmsEvent::Interrupted { job: id, time: now, node });
         self.snapshot(now);
         Some(NodeFailure { job: id, survivors })
@@ -839,6 +1031,7 @@ impl Rms {
             self.cluster.release(id, &nodes).expect("requeue: release");
         }
         self.active.remove(&id);
+        self.profile.remove(id);
         self.active_user -= 1;
         self.pending.push(id);
         self.pending_user += 1;
@@ -862,6 +1055,7 @@ impl Rms {
         if !released.is_empty() {
             self.cluster.release(id, &released).expect("rescue: release");
         }
+        self.profile.set_procs(id, to);
         let job = self.live.get_mut(&id).unwrap();
         job.state = JobState::Running;
         // `from` is the pre-failure size: survivors + the node that died.
@@ -933,6 +1127,27 @@ impl Rms {
         // Pending jobs hold no nodes.
         for id in &self.pending {
             if !self.live[id].nodes.is_empty() {
+                return false;
+            }
+        }
+        // The availability profile mirrors the active set exactly: one
+        // entry per active job carrying its live procs / end estimate —
+        // the rebuilt-from-scratch reference the incremental updates
+        // must match after every operation.
+        if !self.profile.check_invariants() {
+            return false;
+        }
+        if self.profile.len() != self.active.len() {
+            return false;
+        }
+        for id in &self.active {
+            let j = &self.live[id];
+            let ok = self.profile.entry(*id).is_some_and(|e| {
+                e.procs == j.nodes.len()
+                    && e.end == j.expected_end
+                    && e.est == j.spec.est_duration()
+            });
+            if !ok {
                 return false;
             }
         }
@@ -1223,6 +1438,125 @@ mod tests {
             }
             (p, o) => panic!("peek {p:?} disagrees with check {o:?}"),
         }
+    }
+
+    #[test]
+    fn noop_schedule_pass_is_elided() {
+        let mut rms = small_rms(32);
+        let a = rms.submit(spec(AppKind::Cg, 0.0), 0.0); // 32 nodes
+        rms.schedule(0.0); // a takes the whole machine
+        let b = rms.submit(spec(AppKind::Cg, 1.0), 1.0); // blocked
+        assert!(rms.schedule(5.0).is_empty());
+        assert_eq!(rms.pass_stats().sched_elided, 0);
+        let events = rms.log.all().len();
+
+        // Same clock, unchanged state: elided.
+        assert!(rms.schedule(5.0).is_empty());
+        assert_eq!(rms.pass_stats().sched_elided, 1);
+        // Later clock inside the order-reuse window, unchanged state:
+        // still elided (a no-op pass only hardens with time).
+        assert!(rms.schedule(6.0).is_empty());
+        assert_eq!(rms.pass_stats().sched_elided, 2);
+        assert_eq!(rms.log.all().len(), events, "elided passes log nothing");
+
+        // A submission bumps the queue version: the memo dies and the
+        // real pass runs (and still starts nothing — no room).
+        let c = rms.submit(spec(AppKind::Cg, 7.0), 7.0);
+        assert!(rms.schedule(7.0).is_empty());
+        assert_eq!(rms.pass_stats().sched_elided, 2);
+
+        // Freeing the machine kills the memo via the cluster/profile
+        // versions: the next pass must really run and start the head.
+        rms.finish(a, 10.0);
+        let started = rms.schedule(10.0);
+        assert_eq!(started.len(), 1);
+        assert_eq!(started[0].job, b);
+        let _ = c;
+        assert!(rms.check_invariants());
+    }
+
+    #[test]
+    fn elision_disabled_on_reference_path() {
+        let mut rms = Rms::new(RmsConfig {
+            nodes: 32,
+            incremental_profile: false,
+            ..Default::default()
+        });
+        rms.submit(spec(AppKind::Cg, 0.0), 0.0);
+        rms.schedule(0.0);
+        rms.submit(spec(AppKind::Cg, 1.0), 1.0);
+        rms.schedule(5.0);
+        rms.schedule(5.0);
+        rms.schedule(6.0);
+        assert_eq!(rms.pass_stats().sched_elided, 0);
+        assert_eq!(rms.pass_stats().dmr_elided, 0);
+        assert!(rms.check_invariants());
+    }
+
+    #[test]
+    fn noop_dmr_check_is_memoized_and_logs_identically() {
+        let run = |incremental: bool| {
+            let mut rms = Rms::new(RmsConfig {
+                nodes: 64,
+                incremental_profile: incremental,
+                ..Default::default()
+            });
+            let a = rms.submit(spec(AppKind::Cg, 0.0), 0.0);
+            rms.schedule(0.0);
+            rms.submit(spec(AppKind::Cg, 1.0), 1.0);
+            rms.schedule(1.0); // both running: machine full, queue empty
+            let req = DmrRequest { min: 2, max: 32, pref: None, factor: 2 };
+            // Nothing free, nothing queued: NoAction, repeatedly.
+            for t in [10.0, 11.0, 12.0] {
+                assert!(matches!(rms.dmr_check(a, &req, t), DmrOutcome::NoAction));
+            }
+            // State change (a queued job) invalidates the memo; decision
+            // is recomputed (still NoAction: releasing 30 < head's 32).
+            rms.submit(spec(AppKind::Cg, 13.0), 13.0);
+            assert!(matches!(rms.dmr_check(a, &req, 14.0), DmrOutcome::NoAction));
+            assert!(rms.check_invariants());
+            (rms.pass_stats(), rms.log.digest())
+        };
+        let (fast, fast_digest) = run(true);
+        let (slow, slow_digest) = run(false);
+        assert_eq!(fast.dmr_checks, 4);
+        assert_eq!(fast.dmr_elided, 2, "checks at t=11, t=12 replay the memo");
+        assert_eq!(slow.dmr_elided, 0);
+        assert_eq!(
+            fast_digest, slow_digest,
+            "memoized decisions must log bit-identically to the reference"
+        );
+    }
+
+    #[test]
+    fn saturated_queue_reuses_order_and_matches_resort() {
+        // Jobs all older than the age horizon: their age factors are
+        // pinned at 1, so the cached order is reusable indefinitely —
+        // and must stay bit-identical to re-sorting every pass.
+        let run = |cache: bool| {
+            let mut rms = Rms::new(RmsConfig {
+                nodes: 32,
+                cache_pending_order: cache,
+                ..Default::default()
+            });
+            let a = rms.submit(spec(AppKind::Cg, 0.0), 0.0);
+            rms.schedule(0.0); // takes the machine
+            for t in [1.0, 2.0, 3.0] {
+                rms.submit(spec(AppKind::Cg, t), t);
+            }
+            // First pass far past the horizon (3600): sorts a queue whose
+            // youngest member is already saturated.
+            rms.schedule(4000.0);
+            // These passes may reuse (cache on) or re-sort (cache off).
+            rms.schedule(5000.0);
+            rms.schedule(9000.0);
+            rms.finish(a, 9500.0);
+            let started = rms.schedule(9500.0);
+            assert_eq!(started.len(), 1, "head starts once the machine frees");
+            assert!(rms.check_invariants());
+            rms.log.digest()
+        };
+        assert_eq!(run(true), run(false));
     }
 
     #[test]

@@ -2,14 +2,18 @@
 //! refactor: the optimized scheduling/DES paths must produce
 //! **bit-identical** event logs, makespans and campaign aggregates.
 //!
-//! Three layers of protection:
+//! Four layers of protection:
 //!
-//! 1. The cached pending-queue order (the one optimization with a
-//!    nontrivial reuse rule) is compared against the always-re-sort
-//!    reference path (`RmsConfig::cache_pending_order = false`) across
-//!    fixed/sync/async modes.
-//! 2. Campaign aggregate CSV rows are compared across worker counts.
-//! 3. A recorded fixture (`rust/tests/fixtures/golden_hotpath.txt`) locks
+//! 1. The cached pending-queue order (a nontrivial reuse rule) is
+//!    compared against the always-re-sort reference path
+//!    (`RmsConfig::cache_pending_order = false`) across fixed/sync/async
+//!    modes.
+//! 2. The incremental availability profile + no-op elision
+//!    (`RmsConfig::incremental_profile = true`, the default) is compared
+//!    against the rebuild-and-sort reference path — fault-free and under
+//!    fault injection.
+//! 3. Campaign aggregate CSV rows are compared across worker counts.
+//! 4. A recorded fixture (`rust/tests/fixtures/golden_hotpath.txt`) locks
 //!    the exact event stream across PRs.  On the first run the fixture is
 //!    recorded; afterwards any drift fails the test.  Rerun with
 //!    `GOLDEN_UPDATE=1` to re-record after an *intentional* behavior
@@ -34,7 +38,7 @@ use dmr::workload;
 
 /// One run reduced to a digest line: event count, event-log FNV digest,
 /// makespan bits.  Equal lines <=> bit-identical observable behavior.
-fn run_digest(mode: &str, cache_pending_order: bool) -> String {
+fn run_digest(mode: &str, cache_pending_order: bool, incremental_profile: bool) -> String {
     let w = workload::generate(40, 17);
     let (sched, flexible) = match mode {
         "fixed" => (SchedMode::Sync, false),
@@ -44,7 +48,7 @@ fn run_digest(mode: &str, cache_pending_order: bool) -> String {
     };
     let w = if flexible { w } else { w.as_fixed() };
     let cfg = DesConfig {
-        rms: RmsConfig { nodes: 64, cache_pending_order, ..Default::default() },
+        rms: RmsConfig { nodes: 64, cache_pending_order, incremental_profile, ..Default::default() },
         mode: sched,
         ..Default::default()
     };
@@ -64,7 +68,7 @@ fn run_digest(mode: &str, cache_pending_order: bool) -> String {
 /// covers the failure events (NodeFailed/Interrupted/Rescued/Requeued/
 /// Drain*) through `EventLog::digest`, so any drift in the fault replay
 /// fails the fixture comparison.
-fn fault_run_digest(mode: &str) -> String {
+fn fault_run_digest(mode: &str, incremental_profile: bool) -> String {
     let w = workload::generate(40, 17);
     let (sched, flexible) = match mode {
         "fixed" => (SchedMode::Sync, false),
@@ -74,7 +78,7 @@ fn fault_run_digest(mode: &str) -> String {
     };
     let w = if flexible { w } else { w.as_fixed() };
     let cfg = DesConfig {
-        rms: RmsConfig { nodes: 64, ..Default::default() },
+        rms: RmsConfig { nodes: 64, incremental_profile, ..Default::default() },
         mode: sched,
         resilience: ResilienceConfig {
             faults: FaultSpec {
@@ -138,8 +142,8 @@ jobs = 15
 #[test]
 fn optimized_path_matches_uncached_reference() {
     for mode in ["fixed", "sync", "async"] {
-        let fast = run_digest(mode, true);
-        let slow = run_digest(mode, false);
+        let fast = run_digest(mode, true, true);
+        let slow = run_digest(mode, false, true);
         assert_eq!(fast, slow, "{mode}: cached pending order changed behavior");
     }
 }
@@ -149,7 +153,31 @@ fn optimized_path_matches_uncached_reference() {
 #[test]
 fn repeated_runs_bit_identical() {
     for mode in ["fixed", "sync", "async"] {
-        assert_eq!(run_digest(mode, true), run_digest(mode, true), "{mode}");
+        assert_eq!(run_digest(mode, true, true), run_digest(mode, true, true), "{mode}");
+    }
+}
+
+/// The incremental availability profile (and its no-op pass/check
+/// elision) must be indistinguishable from the rebuild-and-sort
+/// reference path — across all three scheduling modes, fault-free.
+#[test]
+fn incremental_profile_matches_reference_path() {
+    for mode in ["fixed", "sync", "async"] {
+        let fast = run_digest(mode, true, true);
+        let slow = run_digest(mode, true, false);
+        assert_eq!(fast, slow, "{mode}: incremental profile changed behavior");
+    }
+}
+
+/// Same lock under fault injection: failure evictions, rescue shrinks
+/// and requeues all publish profile deltas, and the elided passes around
+/// them must not change a single event.
+#[test]
+fn incremental_profile_matches_reference_path_under_faults() {
+    for mode in ["fixed", "sync", "async"] {
+        let fast = fault_run_digest(mode, true);
+        let slow = fault_run_digest(mode, false);
+        assert_eq!(fast, slow, "fault-{mode}: incremental profile changed behavior");
     }
 }
 
@@ -158,7 +186,7 @@ fn repeated_runs_bit_identical() {
 #[test]
 fn fault_injection_replays_bit_identical() {
     for mode in ["fixed", "sync", "async"] {
-        assert_eq!(fault_run_digest(mode), fault_run_digest(mode), "fault-{mode}");
+        assert_eq!(fault_run_digest(mode, true), fault_run_digest(mode, true), "fault-{mode}");
     }
 }
 
@@ -234,11 +262,11 @@ jobs = 10
 fn golden_fixture_locks_event_stream() {
     let mut lines: Vec<String> = ["fixed", "sync", "async"]
         .iter()
-        .map(|m| run_digest(m, true))
+        .map(|m| run_digest(m, true, true))
         .collect();
     lines.push(campaign_digest());
     for m in ["fixed", "sync", "async"] {
-        lines.push(fault_run_digest(m));
+        lines.push(fault_run_digest(m, true));
     }
     let body = format!("{}\n", lines.join("\n"));
 

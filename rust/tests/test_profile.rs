@@ -1,0 +1,291 @@
+//! Differential tests for the incremental cluster-availability profile
+//! (`rms::profile`) and its no-op elision.
+//!
+//! Three layers:
+//!
+//! 1. **Structure-level randomized differential**: thousands of random
+//!    insert/remove/set_procs/set_end ops against [`AvailProfile`],
+//!    re-deriving the shadow projection from a flat model after *every*
+//!    op and requiring bit-identical `(time, free)` answers.
+//! 2. **RMS-level randomized lifecycle**: thousands of random
+//!    submit/schedule/finish/resize/fail/rescue/requeue/repair/cancel
+//!    transitions through the real [`Rms`] entry points, asserting
+//!    `check_invariants()` (which rebuilds the profile's contents from
+//!    scratch and compares) after every op.
+//! 3. **Driver-level sanity**: a sync DES run must actually elide
+//!    repeated `NoAction` checks, and elision counters must stay zero on
+//!    the reference path.  (Whole-run profile-on/off digest equality
+//!    across fixed/sync/async and faulty scenarios lives in
+//!    `test_golden_determinism.rs`.)
+
+use dmr::apps::config::AppKind;
+use dmr::des::{DesConfig, Engine};
+use dmr::dmr::SchedMode;
+use dmr::rms::profile::AvailProfile;
+use dmr::rms::{Action, DmrOutcome, JobState, Rms, RmsConfig};
+use dmr::util::rng::Rng;
+use dmr::workload::{self, JobSpec};
+
+// ------------------------------------------------------------------
+// 1. Structure-level randomized differential
+
+/// Flat reference model: `(id, procs, end, est)` kept in ascending-id
+/// order — exactly the iteration order the pre-profile scheduling pass
+/// used when snapshotting running jobs.
+type Model = Vec<(u64, usize, Option<f64>, f64)>;
+
+/// The reference snapshot: `(end, procs)` in id order, stable-sorted by
+/// end (`total_cmp`).  This mirrors `rms::backfill`'s `SortedEnds` path
+/// verbatim; sorted once per mutation, then queried many times.
+fn reference_ends(model: &Model, now: f64) -> Vec<(f64, usize)> {
+    let mut ends: Vec<(f64, usize)> = model
+        .iter()
+        .map(|&(_, procs, end, est)| (end.unwrap_or(now + est), procs))
+        .collect();
+    ends.sort_by(|a, b| a.0.total_cmp(&b.0));
+    ends
+}
+
+fn reference_shadow(
+    ends: &[(f64, usize)],
+    free_now: usize,
+    need: usize,
+    now: f64,
+) -> (f64, usize) {
+    if free_now >= need {
+        return (now, free_now);
+    }
+    let mut free = free_now;
+    for &(t, p) in ends {
+        free += p;
+        if free >= need {
+            return (t.max(now), free);
+        }
+    }
+    (f64::INFINITY, free)
+}
+
+#[test]
+fn randomized_ops_match_rebuilt_reference_after_every_op() {
+    let mut rng = Rng::new(0xBEEF);
+    let mut profile = AvailProfile::default();
+    let mut model: Model = Vec::new();
+    let mut next_id: u64 = 1;
+    let mut now = 0.0f64;
+
+    for step in 0..4000 {
+        now += rng.exp(5.0);
+        let op = rng.below(10);
+        match op {
+            // 0..=3: insert a new job (40 % — the set keeps growing and
+            // shrinking around a few hundred entries).
+            0..=3 => {
+                let id = next_id;
+                next_id += 1;
+                let procs = 1 + rng.below(32) as usize;
+                let est = 10.0 + rng.exp(300.0);
+                // 30 % of inserts have no known end (the estimated
+                // fallback path).
+                let end = if rng.below(10) < 3 { None } else { Some(now + rng.exp(500.0)) };
+                profile.insert(id, procs, end, est);
+                model.push((id, procs, end, est));
+            }
+            // 4..=5: remove a random tracked job.
+            4 | 5 if !model.is_empty() => {
+                let idx = rng.below(model.len() as u64) as usize;
+                let id = model[idx].0;
+                profile.remove(id);
+                model.retain(|e| e.0 != id);
+            }
+            // 6..=7: resize a random tracked job.
+            6 | 7 if !model.is_empty() => {
+                let idx = rng.below(model.len() as u64) as usize;
+                let procs = 1 + rng.below(64) as usize;
+                model[idx].1 = procs;
+                profile.set_procs(model[idx].0, procs);
+            }
+            // 8..=9: refresh a random job's end estimate (ties included:
+            // reuse an existing end 20 % of the time to stress the
+            // equal-key id ordering).
+            _ if !model.is_empty() => {
+                let idx = rng.below(model.len() as u64) as usize;
+                let end = if rng.below(5) == 0 {
+                    let other = rng.below(model.len() as u64) as usize;
+                    model[other].2.unwrap_or(now + 111.0)
+                } else {
+                    now + rng.exp(500.0)
+                };
+                model[idx].2 = Some(end);
+                profile.set_end(model[idx].0, end);
+            }
+            _ => continue,
+        }
+
+        assert!(profile.check_invariants(), "step {step}: profile indices diverged");
+        assert_eq!(profile.len(), model.len(), "step {step}: cardinality diverged");
+        // The shadow projection must be bit-identical to the rebuilt
+        // reference for a spread of (free, need) queries.
+        let total: usize = model.iter().map(|e| e.1).sum();
+        let ends = reference_ends(&model, now);
+        let mut scratch = Vec::new();
+        for need in [1usize, 8, 64, total / 2 + 1, total + 7] {
+            for free in [0usize, 3, 17] {
+                let fast = profile.shadow(free, need, now, &mut scratch);
+                let slow = reference_shadow(&ends, free, need, now);
+                assert_eq!(
+                    fast.0.to_bits(),
+                    slow.0.to_bits(),
+                    "step {step}: shadow time diverged (need {need}, free {free})"
+                );
+                assert_eq!(
+                    fast.1, slow.1,
+                    "step {step}: projected free diverged (need {need}, free {free})"
+                );
+            }
+        }
+    }
+    assert!(next_id > 1000, "the op mix must exercise a substantial population");
+}
+
+// ------------------------------------------------------------------
+// 2. RMS-level randomized lifecycle
+
+fn rand_spec(rng: &mut Rng, t: f64, i: u64) -> JobSpec {
+    let app = *rng.choice(&[AppKind::Cg, AppKind::Jacobi, AppKind::NBody]);
+    JobSpec::from_app(app, format!("{app}-{i}"), t, 1.0)
+}
+
+/// Ids of live jobs matching a predicate, in ascending-id order (so the
+/// random choices are deterministic).
+fn ids_where(rms: &Rms, all: &[u64], pred: impl Fn(&dmr::rms::Job) -> bool) -> Vec<u64> {
+    all.iter()
+        .copied()
+        .filter(|&id| rms.job(id).map(|j| pred(j) && !j.is_resizer).unwrap_or(false))
+        .collect()
+}
+
+#[test]
+fn rms_random_lifecycle_keeps_profile_consistent() {
+    const NODES: usize = 64;
+    let mut rng = Rng::new(0xD1FF);
+    let mut rms = Rms::new(RmsConfig { nodes: NODES, ..Default::default() });
+    let mut all: Vec<u64> = Vec::new();
+    let mut t = 0.0f64;
+
+    for step in 0..2500 {
+        t += rng.exp(7.0);
+        match rng.below(12) {
+            // Submissions keep the machine saturated.
+            0..=3 => {
+                let id = rms.submit(rand_spec(&mut rng, t, step), t);
+                all.push(id);
+            }
+            4 | 5 => {
+                rms.schedule(t);
+            }
+            6 => {
+                let running =
+                    ids_where(&rms, &all, |j| j.state == JobState::Running);
+                if !running.is_empty() {
+                    let id = running[rng.below(running.len() as u64) as usize];
+                    rms.finish(id, t);
+                }
+            }
+            7 => {
+                // A node failure; the victim is rescued onto its
+                // survivors or killed + requeued, like the DES does.
+                let node = rng.below(NODES as u64) as usize;
+                if let Some(f) = rms.fail_node(node, t) {
+                    if f.survivors > 0 && rng.below(2) == 0 {
+                        rms.rescue_shrink_to(f.job, f.survivors.div_ceil(2), t);
+                    } else {
+                        rms.requeue_after_failure(f.job, t);
+                    }
+                }
+            }
+            8 => {
+                let node = rng.below(NODES as u64) as usize;
+                rms.repair_node(node, t);
+            }
+            9 => {
+                let active = ids_where(&rms, &all, |j| j.is_active());
+                if !active.is_empty() {
+                    let id = active[rng.below(active.len() as u64) as usize];
+                    rms.set_expected_end(id, t + rng.exp(400.0));
+                }
+            }
+            10 => {
+                // A voluntary resize through the async-apply protocol,
+                // committed immediately (shrink half / double).
+                let running =
+                    ids_where(&rms, &all, |j| j.state == JobState::Running);
+                if !running.is_empty() {
+                    let id = running[rng.below(running.len() as u64) as usize];
+                    let procs = rms.job(id).unwrap().procs();
+                    if rng.below(2) == 0 && procs >= 2 {
+                        let to = procs / 2;
+                        if let Ok(DmrOutcome::Shrink { to, .. }) =
+                            rms.dmr_apply(id, Action::Shrink { to }, t)
+                        {
+                            rms.commit_shrink_to(id, to, t);
+                        }
+                    } else if let Ok(DmrOutcome::Expand { .. }) =
+                        rms.dmr_apply(id, Action::Expand { to: procs * 2 }, t)
+                    {
+                        rms.commit_resize(id, t);
+                    }
+                }
+            }
+            _ => {
+                let pending =
+                    ids_where(&rms, &all, |j| j.state == JobState::Pending);
+                if !pending.is_empty() {
+                    let id = pending[rng.below(pending.len() as u64) as usize];
+                    rms.cancel(id, t);
+                }
+            }
+        }
+        assert!(
+            rms.check_invariants(),
+            "step {step}: incremental profile diverged from the rebuilt reference"
+        );
+    }
+    // The mix must have exercised the interesting transitions.
+    assert!(rms.completed_jobs() > 0);
+    assert!(rms.log.node_failures() > 0);
+    assert!(rms.log.rescues() + rms.log.requeues() > 0);
+    assert!(rms.log.shrinks() + rms.log.expansions() > 0);
+}
+
+// ------------------------------------------------------------------
+// 3. Driver-level elision sanity
+
+#[test]
+fn sync_des_run_elides_noop_checks_and_reference_path_does_not() {
+    let run = |incremental: bool| {
+        let w = workload::generate(40, 23);
+        let cfg = DesConfig {
+            rms: RmsConfig { nodes: 64, incremental_profile: incremental, ..Default::default() },
+            mode: SchedMode::Sync,
+            ..Default::default()
+        };
+        let r = Engine::new(cfg).run(&w, "elision");
+        assert_eq!(r.rms.completed_jobs(), 40);
+        assert!(r.rms.check_invariants());
+        (r.rms.pass_stats(), r.rms.log.digest(), r.makespan.to_bits())
+    };
+    let (fast, fast_log, fast_mk) = run(true);
+    let (slow, slow_log, slow_mk) = run(false);
+    assert_eq!(fast_log, slow_log, "elision changed the event stream");
+    assert_eq!(fast_mk, slow_mk, "elision changed the makespan");
+    assert_eq!(slow.sched_elided + slow.dmr_elided, 0, "reference path must not elide");
+    assert!(
+        fast.dmr_elided > 0,
+        "a sync run with repeated NoAction checks must hit the memo \
+         (checks={}, elided={})",
+        fast.dmr_checks,
+        fast.dmr_elided
+    );
+    assert_eq!(fast.dmr_checks, slow.dmr_checks, "check count must not change");
+    assert_eq!(fast.sched_passes, slow.sched_passes, "pass count must not change");
+}
