@@ -1,0 +1,185 @@
+//! Bench: federated meta-scheduler scaling — trace replay across sharded
+//! clusters (default 8 shards x 512 nodes; `BENCH_FULL=1` grows to the
+//! 32k-node, 8 x 4096 layout the subsystem targets).  Emits the
+//! machine-readable `BENCH_federation.json` (per-scenario events/s,
+//! steal counts, determinism checksums) so future PRs can compare.
+//!
+//! Every scenario runs **twice** and the combined per-shard checksums
+//! (event-log digests folded with the makespan bits) must match exactly
+//! — CI fails on a determinism mismatch or a panic, never on timing.
+//! The 1-shard scenario is additionally compared against the flat
+//! `des::Engine` on the same stream: digests and makespan bits must be
+//! identical (the federation's bit-exactness contract).
+
+mod common;
+
+use std::time::Instant;
+
+use dmr::des::{DesConfig, Engine};
+use dmr::dmr::SchedMode;
+use dmr::federation::{FedEngine, FederationConfig, FedRunResult, RoutingPolicy, ShardSpec};
+use dmr::metrics::report::{bench_json, BenchRecord};
+use dmr::rms::RmsConfig;
+use dmr::util::rng::Rng;
+use dmr::util::table::Table;
+use dmr::workload::{swf, WorkloadSpec};
+
+struct Case {
+    shards: usize,
+    routing: RoutingPolicy,
+    steal: bool,
+}
+
+/// Deterministic SWF-shaped trace sized to the federated pool:
+/// power-of-two job widths up to half a shard, exponential runtimes and
+/// inter-arrivals, an 8-user population for the locality policy.
+fn synth_trace(jobs: usize, max_width_pow: u32, seed: u64) -> swf::SwfTrace {
+    let mut rng = Rng::new(seed);
+    let mut records = Vec::with_capacity(jobs);
+    let mut t = 0.0;
+    let mut max_procs = 0;
+    for i in 0..jobs {
+        t += rng.exp(4.0);
+        let procs = 1usize << rng.below(max_width_pow as u64);
+        let runtime = 60.0 + rng.exp(600.0);
+        max_procs = max_procs.max(procs);
+        records.push(swf::SwfRecord {
+            job_id: i as u64 + 1,
+            submit: t,
+            runtime,
+            procs,
+            status: 1,
+            user: (i % 8) as i64 + 1,
+        });
+    }
+    swf::SwfTrace { records, stats: swf::SwfStats::default(), max_procs }
+}
+
+fn materialize(jobs: usize, total_nodes: usize) -> WorkloadSpec {
+    let trace = synth_trace(jobs, 9, common::SEED); // widths 1..=256
+    let opts = swf::SwfOptions {
+        rescale_nodes: Some(total_nodes / 8),
+        malleable_fraction: 0.3,
+        ..Default::default()
+    };
+    swf::to_workload(&trace, &opts, common::SEED)
+}
+
+fn cfg(total_nodes: usize) -> DesConfig {
+    DesConfig {
+        rms: RmsConfig { nodes: total_nodes, ..Default::default() },
+        mode: SchedMode::Sync,
+        ..Default::default()
+    }
+}
+
+/// Fold the per-shard event-log digests and the makespan bits into one
+/// hex checksum (shard order is part of the digest).
+fn fed_checksum(r: &FedRunResult) -> String {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for s in &r.shards {
+        h ^= s.rms.log.digest();
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    format!("{:016x}", h ^ r.makespan.to_bits())
+}
+
+fn run_once(case: &Case, total_nodes: usize, w: &WorkloadSpec) -> (FedRunResult, f64) {
+    let fed = FederationConfig {
+        shards: ShardSpec::uniform(total_nodes, case.shards),
+        routing: case.routing,
+        steal: case.steal,
+        shard_faults: None,
+    };
+    let t0 = Instant::now();
+    let r = FedEngine::new(cfg(total_nodes), fed).run(w, "federation");
+    (r, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let (jobs, total_nodes) = if common::full() {
+        (10_000, 8 * 4096) // the subsystem's target: 8 shards x 4096 nodes
+    } else {
+        (2_000, 8 * 512)
+    };
+    common::banner(
+        "federation_scale",
+        &format!("meta-scheduler replay: {jobs} jobs across {total_nodes} nodes"),
+    );
+    let cases = [
+        Case { shards: 1, routing: RoutingPolicy::RoundRobin, steal: false },
+        Case { shards: 8, routing: RoutingPolicy::RoundRobin, steal: false },
+        Case { shards: 8, routing: RoutingPolicy::LeastLoaded, steal: false },
+        Case { shards: 8, routing: RoutingPolicy::LeastLoaded, steal: true },
+        Case { shards: 8, routing: RoutingPolicy::Locality, steal: true },
+    ];
+    let w = materialize(jobs, total_nodes);
+
+    let mut t = Table::new(vec![
+        "Scenario", "Events", "Steals", "Wall (s)", "Events/s", "Makespan (s)", "Checksum",
+    ]);
+    let mut records = Vec::with_capacity(cases.len());
+    for case in &cases {
+        let scenario = format!(
+            "swf{jobs}-n{total_nodes}-s{}x{}{}",
+            case.shards,
+            case.routing.label(),
+            if case.steal { "-steal" } else { "" }
+        );
+        // Cold run: determinism reference.  Warm run: the measurement.
+        let (ra, _) = run_once(case, total_nodes, &w);
+        let (rb, wall) = run_once(case, total_nodes, &w);
+        let (sum_a, sum_b) = (fed_checksum(&ra), fed_checksum(&rb));
+        assert_eq!(sum_a, sum_b, "{scenario}: determinism checksum mismatch");
+        assert_eq!(ra.events, rb.events, "{scenario}: event count mismatch");
+        let done: usize = rb.shards.iter().map(|s| s.rms.completed_jobs()).sum();
+        assert_eq!(done, w.len(), "{scenario}: workload must drain");
+
+        if case.shards == 1 {
+            // Bit-exactness against the flat engine on the same stream.
+            let flat = Engine::new(cfg(total_nodes)).run(&w, "flat");
+            assert_eq!(
+                rb.shards[0].rms.log.digest(),
+                flat.rms.log.digest(),
+                "{scenario}: 1-shard digest must equal the flat engine"
+            );
+            assert_eq!(
+                rb.makespan.to_bits(),
+                flat.makespan.to_bits(),
+                "{scenario}: 1-shard makespan must equal the flat engine"
+            );
+        }
+
+        t.row(vec![
+            scenario.clone(),
+            rb.events.to_string(),
+            rb.steals().to_string(),
+            format!("{wall:.3}"),
+            format!("{:.0}", rb.events as f64 / wall.max(1e-9)),
+            format!("{:.1}", rb.makespan),
+            sum_b.clone(),
+        ]);
+        records.push(BenchRecord {
+            scenario,
+            workload: "swf".to_string(),
+            jobs,
+            nodes: total_nodes,
+            mode: format!(
+                "s{}x{}{}",
+                case.shards,
+                case.routing.label(),
+                if case.steal { "-steal" } else { "" }
+            ),
+            events: rb.events,
+            wall_secs: wall,
+            makespan_s: rb.makespan,
+            checksum: sum_b,
+        });
+    }
+    println!("{}", t.render());
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_federation.json".into());
+    let doc = bench_json("federation_scale", &records).render();
+    std::fs::write(&out, format!("{doc}\n")).expect("write BENCH_federation.json");
+    println!("wrote {out} ({} scenarios, determinism checksums verified)", records.len());
+}

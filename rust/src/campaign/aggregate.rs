@@ -57,6 +57,14 @@ pub struct ScenarioAgg {
     pub lost_node_s: Summary,
     /// Machine availability per run, percent.
     pub availability_pct: Summary,
+    // --- federation measures (crate::federation) -----------------------
+    /// Shard count of the scenario (1 for flat scenarios).
+    pub fed_shards: usize,
+    /// Cross-shard steals per run (all zero for flat scenarios).
+    pub fed_steals: Summary,
+    /// Per-shard utilization percentage across seeds, one summary per
+    /// shard id (empty for flat scenarios).
+    pub shard_util: Vec<Summary>,
 }
 
 impl ScenarioAgg {
@@ -83,6 +91,9 @@ impl ScenarioAgg {
             rework_s: Summary::new(),
             lost_node_s: Summary::new(),
             availability_pct: Summary::new(),
+            fed_shards: 1,
+            fed_steals: Summary::new(),
+            shard_util: Vec::new(),
         }
     }
 
@@ -107,6 +118,19 @@ impl ScenarioAgg {
         self.rework_s.push(s.resilience.rework_time);
         self.lost_node_s.push(s.resilience.lost_node_seconds);
         self.availability_pct.push(s.resilience.availability * 100.0);
+        match &s.federation {
+            Some(f) => {
+                self.fed_shards = f.shards;
+                self.fed_steals.push(f.steals as f64);
+                if self.shard_util.len() < f.per_shard.len() {
+                    self.shard_util.resize_with(f.per_shard.len(), Summary::new);
+                }
+                for (agg, sh) in self.shard_util.iter_mut().zip(&f.per_shard) {
+                    agg.push(sh.util_pct);
+                }
+            }
+            None => self.fed_steals.push(0.0),
+        }
     }
 }
 
@@ -144,10 +168,10 @@ pub fn write_outputs(spec: &CampaignSpec, result: &CampaignResult) -> std::io::R
     std::fs::create_dir_all(dir)?;
 
     let runs_csv = dir.join(format!("{}_runs.csv", spec.name));
-    write_csv(&runs_csv, report::CAMPAIGN_RUN_HEADER, &report::campaign_run_rows(&result.records))?;
+    write_csv(&runs_csv, report::run_columns(), &report::campaign_run_rows(&result.records))?;
 
     let agg_csv = dir.join(format!("{}_agg.csv", spec.name));
-    write_csv(&agg_csv, report::CAMPAIGN_AGG_HEADER, &report::campaign_agg_rows(&aggs))?;
+    write_csv(&agg_csv, report::agg_columns(), &report::campaign_agg_rows(&aggs))?;
 
     let agg_json = dir.join(format!("{}_agg.json", spec.name));
     std::fs::write(&agg_json, report::campaign_agg_json(spec, &aggs).render())?;

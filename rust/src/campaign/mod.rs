@@ -24,4 +24,6 @@ pub mod spec;
 
 pub use aggregate::{aggregate, write_outputs, CampaignOutputs, ScenarioAgg};
 pub use runner::{run_campaign, CampaignResult, RunRecord};
-pub use spec::{CampaignSpec, PolicyAxis, RunMode, RunPlan, WorkloadAxis, WorkloadSource};
+pub use spec::{
+    CampaignSpec, FedAxis, FedPlan, PolicyAxis, RunMode, RunPlan, WorkloadAxis, WorkloadSource,
+};

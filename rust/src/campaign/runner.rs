@@ -16,6 +16,7 @@ use anyhow::{Context, Result};
 
 use super::spec::{CampaignSpec, RunPlan, WorkloadSource};
 use crate::des::{DesConfig, Engine};
+use crate::federation::{FedEngine, FederationConfig};
 use crate::metrics::RunSummary;
 use crate::resilience::{FaultSpec, RecoveryConfig, ResilienceConfig};
 use crate::rms::{PolicyConfig, RmsConfig};
@@ -44,6 +45,22 @@ impl CampaignResult {
     /// Total DES runs per wall-clock second (runner throughput).
     pub fn runs_per_sec(&self) -> f64 {
         self.records.len() as f64 / self.wall_secs.max(1e-9)
+    }
+}
+
+/// Parse the `--workers` CLI argument.  `None` (flag absent) means
+/// "auto" and maps to the 0 sentinel [`resolve_workers`] expands to the
+/// spec value or one thread per core; an *explicit* `--workers 0` or a
+/// non-numeric value is a hard error instead of silently running with
+/// some default the user did not ask for.
+pub fn parse_workers(arg: Option<&str>) -> Result<usize, String> {
+    match arg {
+        None => Ok(0),
+        Some(s) => match s.parse::<usize>() {
+            Ok(0) => Err("--workers must be at least 1 (omit the flag for auto)".into()),
+            Ok(n) => Ok(n),
+            Err(_) => Err(format!("--workers expects a positive integer, got {s:?}")),
+        },
     }
 }
 
@@ -164,8 +181,20 @@ fn execute_plan(
         ..Default::default()
     };
     let jobs = w.len();
-    let result = Engine::new(cfg).run(&w, &plan.label);
-    RunRecord { plan: plan.clone(), jobs, summary: RunSummary::from_run(&result) }
+    let summary = match &plan.federation {
+        None => RunSummary::from_run(&Engine::new(cfg).run(&w, &plan.label)),
+        Some(fp) => {
+            let fed = FederationConfig {
+                shards: fp.shards.clone(),
+                routing: fp.routing,
+                steal: fp.steal,
+                shard_faults: None,
+            };
+            let result = FedEngine::new(cfg, fed).run(&w, &plan.label);
+            RunSummary::from_fed(&result, fp.routing, fp.steal)
+        }
+    };
+    RunRecord { plan: plan.clone(), jobs, summary }
 }
 
 fn materialize(
@@ -201,25 +230,12 @@ fn materialize(
 }
 
 /// Clamp job sizes to the scenario's cluster: a job asking for more nodes
-/// than exist would never start and the workload would not drain.  Sizes
-/// are re-rounded onto the job's factor chain afterwards.
+/// than exist would never start and the workload would not drain.  The
+/// per-job rule is [`workload::fit_spec`], shared with the federated
+/// meta-scheduler's per-shard refits.
 fn fit_to_cluster(w: &mut WorkloadSpec, nodes: usize) {
     for j in &mut w.jobs {
-        if j.max_procs > nodes {
-            j.max_procs = nodes;
-        }
-        if j.min_procs > j.max_procs {
-            j.min_procs = j.max_procs;
-        }
-        if j.procs > j.max_procs {
-            // Round down onto the factor chain of the submitted size while
-            // the chain is still rooted there (e.g. 32 on a 24-node
-            // cluster lands on 16, keeping resizes power-of-factor).
-            j.procs = j.clamp_procs(j.max_procs);
-        }
-        if j.pref_procs.is_some_and(|p| p > j.max_procs) {
-            j.pref_procs = Some(j.max_procs);
-        }
+        workload::fit_spec(j, nodes);
     }
 }
 
@@ -266,6 +282,48 @@ jobs = 8
         assert_eq!(resolve_workers(&spec, 2), 2);
         spec.workers = 0;
         assert!(resolve_workers(&spec, 0) >= 1, "auto is at least 1");
+    }
+
+    #[test]
+    fn workers_flag_parses_strictly() {
+        assert_eq!(parse_workers(None), Ok(0), "absent flag means auto");
+        assert_eq!(parse_workers(Some("4")), Ok(4));
+        assert_eq!(parse_workers(Some("1")), Ok(1));
+        assert!(parse_workers(Some("0")).is_err(), "explicit 0 rejected");
+        assert!(parse_workers(Some("-2")).is_err());
+        assert!(parse_workers(Some("four")).is_err());
+        assert!(parse_workers(Some("")).is_err());
+    }
+
+    #[test]
+    fn federated_plans_run_through_the_fed_engine() {
+        let spec = CampaignSpec::from_toml_str(
+            r#"
+name = "fed-runner"
+nodes = [32]
+modes = ["sync"]
+seeds = [1]
+[federation]
+shards = [2]
+routing = ["ll"]
+steal = true
+[[workload]]
+kind = "feitelson"
+jobs = 8
+"#,
+        )
+        .unwrap();
+        let res = run_campaign(&spec, 2).unwrap();
+        assert_eq!(res.records.len(), 1);
+        let s = &res.records[0].summary;
+        let fed = s.federation.as_ref().expect("federated summary");
+        assert_eq!(fed.shards, 2);
+        assert_eq!(fed.routing, "ll");
+        assert!(fed.steal);
+        assert_eq!(fed.per_shard.len(), 2);
+        assert_eq!(fed.per_shard.iter().map(|sh| sh.nodes).sum::<usize>(), 32);
+        assert_eq!(s.jobs.len(), 8, "all jobs completed across shards");
+        assert!(s.makespan > 0.0);
     }
 
     #[test]

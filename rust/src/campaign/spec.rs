@@ -11,6 +11,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::dmr::SchedMode;
+use crate::federation::{RoutingPolicy, ShardSpec};
 use crate::resilience::{DrainSet, DrainWindow, FaultKind, FaultTraceEvent};
 use crate::rms::PolicyStrategy;
 use crate::util::json::Json;
@@ -195,6 +196,62 @@ impl FaultAxis {
     }
 }
 
+/// The `[federation]` sweep axis ([`crate::federation`]): shard count and
+/// routing policy are sweepable lists; work stealing and an explicit
+/// heterogeneous topology are shared by every scenario.  Present only
+/// when the spec has a `[federation]` block — flat campaigns keep the
+/// single-cluster engine and their historical scenario ids.
+#[derive(Debug, Clone)]
+pub struct FedAxis {
+    /// Shard counts to sweep; each splits the `nodes` axis value evenly
+    /// ([`ShardSpec::uniform`]).  Mutually exclusive with `topology`.
+    pub shards: Vec<usize>,
+    /// Routing policies to sweep ([`RoutingPolicy::parse`] names).
+    pub routing: Vec<RoutingPolicy>,
+    /// Whether the meta-scheduler steals queued work between shards.
+    pub steal: bool,
+    /// Explicit heterogeneous layout: `"nodes[:speed[:mtbf_scale]]"`
+    /// entries ([`ShardSpec::parse`]).  When set, the shard-count axis
+    /// collapses to this single layout, and every `nodes` axis entry must
+    /// equal the topology's node total so scenario ids stay truthful.
+    pub topology: Option<Vec<ShardSpec>>,
+}
+
+impl Default for FedAxis {
+    fn default() -> Self {
+        FedAxis {
+            shards: vec![1],
+            routing: vec![RoutingPolicy::RoundRobin],
+            steal: false,
+            topology: None,
+        }
+    }
+}
+
+impl FedAxis {
+    /// Resolve the concrete [`FedPlan`] of one matrix point: the spec
+    /// topology verbatim, or a uniform split of the point's cluster size.
+    fn plan(&self, nodes: usize, shards: usize, routing: RoutingPolicy) -> FedPlan {
+        let shards = match &self.topology {
+            Some(t) => t.clone(),
+            None => ShardSpec::uniform(nodes, shards),
+        };
+        FedPlan { shards, routing, steal: self.steal }
+    }
+}
+
+/// Resolved federation point of one [`RunPlan`] (`None` = flat engine).
+#[derive(Debug, Clone)]
+pub struct FedPlan {
+    /// Concrete shard layout of this run (uniform split of the plan's
+    /// cluster size, or the spec topology verbatim).
+    pub shards: Vec<ShardSpec>,
+    /// Routing policy of this run.
+    pub routing: RoutingPolicy,
+    /// Whether cross-shard work stealing is on.
+    pub steal: bool,
+}
+
 /// One fully-resolved point of the matrix.
 #[derive(Debug, Clone)]
 pub struct RunPlan {
@@ -226,6 +283,8 @@ pub struct RunPlan {
     pub mtbf: f64,
     /// Checkpoint interval of this matrix point.
     pub checkpoint_interval: f64,
+    /// Federation point (`None` = the flat single-cluster engine).
+    pub federation: Option<FedPlan>,
 }
 
 /// A parsed campaign specification.
@@ -249,6 +308,8 @@ pub struct CampaignSpec {
     pub policy: PolicyAxis,
     /// Fault-injection axis.
     pub faults: FaultAxis,
+    /// Federation axis (`None` = no `[federation]` block, flat runs).
+    pub federation: Option<FedAxis>,
 }
 
 impl CampaignSpec {
@@ -379,6 +440,11 @@ impl CampaignSpec {
             Some(f) => parse_faults(f, max_nodes)?,
         };
 
+        let federation = match v.get("federation") {
+            None => None,
+            Some(f) => Some(parse_federation(f, &nodes)?),
+        };
+
         // A duplicate entry on any swept axis would emit two *non-adjacent*
         // scenario blocks with identical ids; aggregate() merges only
         // adjacent records, so the aggregate CSV would carry duplicate
@@ -395,6 +461,10 @@ impl CampaignSpec {
         no_duplicates(&policy.wide_optimization, "policy.wide_optimization")?;
         no_duplicates(&faults.mtbf, "faults.mtbf")?;
         no_duplicates(&faults.checkpoint_interval, "faults.checkpoint_interval")?;
+        if let Some(fed) = &federation {
+            no_duplicates(&fed.shards, "federation.shards")?;
+            no_duplicates(&fed.routing, "federation.routing")?;
+        }
 
         Ok(CampaignSpec {
             name,
@@ -406,6 +476,7 @@ impl CampaignSpec {
             seeds,
             policy,
             faults,
+            federation,
         })
     }
 
@@ -422,15 +493,22 @@ impl CampaignSpec {
             * self.policy.wide_optimization.len()
             * self.faults.mtbf.len()
             * self.faults.checkpoint_interval.len()
+            * self
+                .federation
+                .as_ref()
+                .map(|f| f.shards.len() * f.routing.len())
+                .unwrap_or(1)
     }
 
     /// Expand the cartesian matrix into the flat, deterministic run list.
-    /// Order: workload (outer) → nodes → mode → strategy → policy knobs →
-    /// faults → seed (inner), so all seeds of one scenario are adjacent.
+    /// Order: federation (outer) → workload → nodes → mode → strategy →
+    /// policy knobs → faults → seed (inner), so all seeds of one scenario
+    /// are adjacent.
     pub fn expand(&self) -> Vec<RunPlan> {
         let mut plans = Vec::with_capacity(self.matrix_size());
-        let swept = self.policy.swept();
-        let strat_swept = self.policy.strategy_swept();
+        let pol = &self.policy;
+        let swept = pol.swept();
+        let strat_swept = pol.strategy_swept();
         // Labels only encode kind + size; two same-kind sources differing
         // in other params (e.g. two feitelson-30 with different
         // inter-arrivals) would collide and aggregate() would silently
@@ -450,59 +528,83 @@ impl CampaignSpec {
                 .collect()
         };
         let faults_swept = self.faults.swept();
-        for wi in 0..self.workloads.len() {
-            for &nodes in &self.nodes {
-                for &mode in &self.modes {
-                    for &strategy in &self.policy.strategy {
-                        for &backfill in &self.policy.backfill {
-                            for &shrink_boost in &self.policy.shrink_boost {
-                                for &honor_preference in &self.policy.honor_preference {
-                                    for &wide_optimization in &self.policy.wide_optimization {
-                                        for &mtbf in &self.faults.mtbf {
-                                            for &ckpt in &self.faults.checkpoint_interval {
-                                                let mut scenario = format!(
-                                                    "{}-n{}-{}",
-                                                    labels[wi],
-                                                    nodes,
-                                                    mode.label()
-                                                );
-                                                if strat_swept {
-                                                    scenario.push('-');
-                                                    scenario.push_str(strategy.label());
-                                                }
-                                                if swept {
-                                                    scenario.push_str(&format!(
-                                                        "-bf{}-sb{}-hp{}-wo{}",
-                                                        u8::from(backfill),
-                                                        u8::from(shrink_boost),
-                                                        u8::from(honor_preference),
-                                                        u8::from(wide_optimization),
-                                                    ));
-                                                }
-                                                if faults_swept {
-                                                    scenario.push_str(&format!(
-                                                        "-mtbf{}-ck{}",
-                                                        fmt_axis(mtbf),
-                                                        fmt_axis(ckpt),
-                                                    ));
-                                                }
-                                                for &seed in &self.seeds {
-                                                    plans.push(RunPlan {
-                                                        index: plans.len(),
-                                                        scenario: scenario.clone(),
-                                                        label: format!("{scenario}-s{seed}"),
-                                                        workload: wi,
+        // Federation points as a flat (shard count, routing, scenario
+        // suffix) list — one degenerate point with an empty suffix when
+        // the spec has no [federation] block, so flat campaigns keep
+        // their historical scenario ids.
+        let fed_points: Vec<(usize, RoutingPolicy, String)> = match &self.federation {
+            None => vec![(1, RoutingPolicy::RoundRobin, String::new())],
+            Some(f) => {
+                let mut pts = Vec::new();
+                for &k in &f.shards {
+                    for &r in &f.routing {
+                        pts.push((k, r, format!("-s{k}x{}", r.label())));
+                    }
+                }
+                pts
+            }
+        };
+        for (fed_k, fed_route, fed_suffix) in &fed_points {
+            for wi in 0..self.workloads.len() {
+                for &nodes in &self.nodes {
+                    let federation = match &self.federation {
+                        None => None,
+                        Some(f) => Some(f.plan(nodes, *fed_k, *fed_route)),
+                    };
+                    for &mode in &self.modes {
+                        for &strategy in &pol.strategy {
+                            for &backfill in &pol.backfill {
+                                for &shrink_boost in &pol.shrink_boost {
+                                    for &honor_preference in &pol.honor_preference {
+                                        for &wide_optimization in &pol.wide_optimization {
+                                            for &mtbf in &self.faults.mtbf {
+                                                for &ckpt in &self.faults.checkpoint_interval {
+                                                    let mut scenario = format!(
+                                                        "{}-n{}-{}",
+                                                        labels[wi],
                                                         nodes,
-                                                        mode,
-                                                        seed,
-                                                        strategy,
-                                                        backfill,
-                                                        shrink_boost,
-                                                        honor_preference,
-                                                        wide_optimization,
-                                                        mtbf,
-                                                        checkpoint_interval: ckpt,
-                                                    });
+                                                        mode.label()
+                                                    );
+                                                    if strat_swept {
+                                                        scenario.push('-');
+                                                        scenario.push_str(strategy.label());
+                                                    }
+                                                    if swept {
+                                                        scenario.push_str(&format!(
+                                                            "-bf{}-sb{}-hp{}-wo{}",
+                                                            u8::from(backfill),
+                                                            u8::from(shrink_boost),
+                                                            u8::from(honor_preference),
+                                                            u8::from(wide_optimization),
+                                                        ));
+                                                    }
+                                                    if faults_swept {
+                                                        scenario.push_str(&format!(
+                                                            "-mtbf{}-ck{}",
+                                                            fmt_axis(mtbf),
+                                                            fmt_axis(ckpt),
+                                                        ));
+                                                    }
+                                                    scenario.push_str(fed_suffix);
+                                                    for &seed in &self.seeds {
+                                                        plans.push(RunPlan {
+                                                            index: plans.len(),
+                                                            scenario: scenario.clone(),
+                                                            label: format!("{scenario}-s{seed}"),
+                                                            workload: wi,
+                                                            nodes,
+                                                            mode,
+                                                            seed,
+                                                            strategy,
+                                                            backfill,
+                                                            shrink_boost,
+                                                            honor_preference,
+                                                            wide_optimization,
+                                                            mtbf,
+                                                            checkpoint_interval: ckpt,
+                                                            federation: federation.clone(),
+                                                        });
+                                                    }
                                                 }
                                             }
                                         }
@@ -725,6 +827,96 @@ fn parse_faults(f: &Json, max_nodes: usize) -> Result<FaultAxis> {
     }
 
     Ok(FaultAxis { mtbf, mttr, checkpoint_interval, scripted, drains })
+}
+
+/// Parse the `[federation]` section (see `scenarios/README.md` for the
+/// schema and `scenarios/federated_sweep.toml` for a worked example).
+/// `nodes` is the cluster-size axis: every shard count must divide into
+/// at least one node per shard on the *smallest* swept cluster, and an
+/// explicit topology must sum to every swept cluster size so the
+/// `-n<nodes>` scenario component stays truthful.
+fn parse_federation(f: &Json, nodes: &[usize]) -> Result<FedAxis> {
+    let d = FedAxis::default();
+    let topology = match f.get("topology") {
+        None => None,
+        Some(t) => {
+            let entries = t
+                .as_arr()
+                .context("`federation.topology` must be an array of strings")?
+                .iter()
+                .map(|x| {
+                    let s = x
+                        .as_str()
+                        .context("`federation.topology` entries must be strings")?;
+                    ShardSpec::parse(s).map_err(|e| anyhow!("federation.topology: {e}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            if entries.is_empty() {
+                bail!("`federation.topology` must not be empty");
+            }
+            let total: usize = entries.iter().map(|s| s.nodes).sum();
+            if let Some(&bad) = nodes.iter().find(|&&n| n != total) {
+                bail!(
+                    "`federation.topology` nodes sum to {total}, but the `nodes` axis \
+                     lists {bad} — they must match so scenario ids stay truthful"
+                );
+            }
+            Some(entries)
+        }
+    };
+    let shards = match usize_list(f.get("shards"), "federation.shards")? {
+        None => match &topology {
+            Some(t) => vec![t.len()],
+            None => d.shards,
+        },
+        Some(s) => {
+            if topology.is_some() {
+                bail!("`federation.shards` and `federation.topology` are mutually exclusive");
+            }
+            if s.is_empty() {
+                bail!("`federation.shards` must not be empty");
+            }
+            if s.contains(&0) {
+                bail!("`federation.shards` entries must be positive");
+            }
+            let min_nodes = nodes.iter().copied().min().unwrap_or(0);
+            if let Some(&big) = s.iter().find(|&&k| k > min_nodes) {
+                bail!(
+                    "`federation.shards` entry {big} exceeds the smallest `nodes` \
+                     entry ({min_nodes}); every shard needs at least one node"
+                );
+            }
+            s
+        }
+    };
+    let routing = match f.get("routing") {
+        None => d.routing,
+        Some(r) => {
+            let pols = r
+                .as_arr()
+                .context("`federation.routing` must be an array of strings")?
+                .iter()
+                .map(|x| {
+                    let s = x
+                        .as_str()
+                        .context("`federation.routing` entries must be strings")?;
+                    RoutingPolicy::parse(s).ok_or_else(|| {
+                        anyhow!("unknown routing policy {s:?} (expected rr | ll | loc)")
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            if pols.is_empty() {
+                bail!("`federation.routing` must not be empty");
+            }
+            pols
+        }
+    };
+    let steal = match f.get("steal") {
+        None => d.steal,
+        Some(Json::Bool(b)) => *b,
+        Some(_) => bail!("`federation.steal` must be a boolean"),
+    };
+    Ok(FedAxis { shards, routing, steal, topology })
 }
 
 fn usize_list(v: Option<&Json>, what: &str) -> Result<Option<Vec<usize>>> {
@@ -1121,6 +1313,100 @@ jobs = 10
         assert_eq!(plain.faults.mtbf, vec![0.0]);
         assert!(plain.faults.scripted.is_empty() && plain.faults.drains.is_empty());
         assert!(!plain.expand()[0].scenario.contains("mtbf"));
+    }
+
+    #[test]
+    fn federation_axis_parses_and_expands() {
+        let toml = r#"
+name = "fed"
+nodes = [64]
+modes = ["sync"]
+seeds = [1, 2]
+[federation]
+shards = [1, 4]
+routing = ["rr", "ll"]
+steal = true
+[[workload]]
+kind = "feitelson"
+jobs = 6
+"#;
+        let s = CampaignSpec::from_toml_str(toml).unwrap();
+        let fed = s.federation.as_ref().unwrap();
+        assert_eq!(fed.shards, vec![1, 4]);
+        assert_eq!(
+            fed.routing,
+            vec![RoutingPolicy::RoundRobin, RoutingPolicy::LeastLoaded]
+        );
+        assert!(fed.steal);
+        assert!(fed.topology.is_none());
+        assert_eq!(s.matrix_size(), 2 * 2 * 2);
+        let plans = s.expand();
+        assert_eq!(plans.len(), 8);
+        // federation is the outermost axis; seeds stay adjacent
+        assert_eq!(plans[0].scenario, "feitelson6-n64-sync-s1xrr");
+        assert_eq!(plans[2].scenario, "feitelson6-n64-sync-s1xll");
+        assert_eq!(plans[4].scenario, "feitelson6-n64-sync-s4xrr");
+        assert_eq!(plans[6].scenario, "feitelson6-n64-sync-s4xll");
+        assert_eq!(plans[0].label, "feitelson6-n64-sync-s1xrr-s1");
+        assert_eq!(plans[1].seed, 2);
+        let f = plans[4].federation.as_ref().unwrap();
+        assert_eq!(f.shards.len(), 4);
+        assert!(f.shards.iter().all(|sh| sh.nodes == 16));
+        assert_eq!(f.routing, RoutingPolicy::RoundRobin);
+        assert!(f.steal);
+
+        // no [federation] block -> flat plans, historical scenario ids
+        let plain = CampaignSpec::from_toml_str(
+            "name = \"p\"\nmodes = [\"sync\"]\n[[workload]]\nkind = \"feitelson\"\njobs = 2\n",
+        )
+        .unwrap();
+        let p = plain.expand();
+        assert!(p[0].federation.is_none());
+        assert!(!p[0].scenario.contains("-s1x"), "{}", p[0].scenario);
+    }
+
+    #[test]
+    fn federation_topology_parses_and_bad_specs_rejected() {
+        let toml = r#"
+name = "topo"
+nodes = [64]
+modes = ["sync"]
+seeds = [1]
+[federation]
+topology = ["32:1.0", "32:0.2:2.0"]
+routing = ["ll"]
+[[workload]]
+kind = "feitelson"
+jobs = 4
+"#;
+        let s = CampaignSpec::from_toml_str(toml).unwrap();
+        let fed = s.federation.as_ref().unwrap();
+        assert_eq!(fed.shards, vec![2], "topology fixes the shard count");
+        let t = fed.topology.as_ref().unwrap();
+        assert_eq!(t[1].nodes, 32);
+        assert_eq!(t[1].speed, 0.2);
+        assert_eq!(t[1].mtbf_scale, 2.0);
+        let plans = s.expand();
+        assert_eq!(plans[0].scenario, "feitelson4-n64-sync-s2xll");
+        let f = plans[0].federation.as_ref().unwrap();
+        assert_eq!(f.shards, *t, "topology is taken verbatim");
+
+        let base = "name = \"x\"\n[[workload]]\nkind = \"feitelson\"\njobs = 1\n";
+        for fed in [
+            "[federation]\nshards = [0]\n",
+            "[federation]\nshards = []\n",
+            "[federation]\nshards = [1, 1]\n",            // duplicate
+            "[federation]\nshards = [128]\n",             // > smallest nodes (64)
+            "[federation]\nrouting = [\"warp\"]\n",
+            "[federation]\nrouting = [\"rr\", \"rr\"]\n", // duplicate
+            "[federation]\nsteal = 1\n",
+            "[federation]\ntopology = [\"32\"]\n",        // sum != 64
+            "[federation]\ntopology = [\"32:0\"]\n",      // bad speed
+            "[federation]\nshards = [2]\ntopology = [\"32\", \"32\"]\n", // exclusive
+        ] {
+            let doc = format!("{base}{fed}");
+            assert!(CampaignSpec::from_toml_str(&doc).is_err(), "accepted: {fed}");
+        }
     }
 
     #[test]

@@ -35,3 +35,65 @@ pub enum NodeState {
 /// Number of nodes of the paper's evaluation partition (Fig. 6 peaks at
 /// 64 allocated nodes).
 pub const DEFAULT_NODES: usize = 64;
+
+/// O(1) head-counts of one shard's node pool, snapshotted from its
+/// [`Cluster`] counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolCounts {
+    /// Nodes the shard owns.
+    pub total: usize,
+    /// Nodes currently free for allocation.
+    pub available: usize,
+    /// Nodes currently offline (failed or drained).
+    pub down: usize,
+}
+
+/// Read-only aggregate over the shard-scoped node pools of a federation
+/// ([`crate::federation`]): each shard keeps its own [`Cluster`], and
+/// this view presents them as one machine for metrics and routing
+/// decisions without merging the allocation maps.
+#[derive(Debug, Clone, Default)]
+pub struct FederatedView {
+    shards: Vec<PoolCounts>,
+}
+
+impl FederatedView {
+    /// Append one shard's pool (shard ids follow push order).
+    pub fn push(&mut self, c: &Cluster) {
+        self.shards.push(PoolCounts {
+            total: c.total(),
+            available: c.available(),
+            down: c.down(),
+        });
+    }
+
+    /// Number of shards in the view.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Whether the view holds no shards.
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// One shard's counts, by shard id.
+    pub fn shard(&self, i: usize) -> Option<&PoolCounts> {
+        self.shards.get(i)
+    }
+
+    /// Total nodes across the federation.
+    pub fn total(&self) -> usize {
+        self.shards.iter().map(|s| s.total).sum()
+    }
+
+    /// Free nodes across the federation.
+    pub fn available(&self) -> usize {
+        self.shards.iter().map(|s| s.available).sum()
+    }
+
+    /// Offline nodes across the federation.
+    pub fn down(&self) -> usize {
+        self.shards.iter().map(|s| s.down).sum()
+    }
+}

@@ -7,6 +7,18 @@
 //! which is what lets the paper's 9-hour, 400-job workloads run in
 //! milliseconds (DESIGN.md §2).
 //!
+//! ## Shards
+//!
+//! The engine is generalized over a vector of **shards**: each shard owns
+//! its own `Rms` (cluster, priorities, availability profile), its own
+//! cost/fault RNG streams (salted by shard id; shard 0's salt is zero)
+//! and its own fault timeline, while the event heap, virtual clock and
+//! action statistics stay global.  [`Engine::new`] builds the 1-shard
+//! (flat) engine the paper's experiments use — every heterogeneity knob
+//! then multiplies by exactly `1.0`, so the flat path is bit-identical
+//! to pre-federation builds.  [`crate::federation::FedEngine`] builds the
+//! multi-shard configuration with routing and work stealing.
+//!
 //! ## Complexity budget
 //!
 //! One simulated event costs O(active jobs), independent of how many jobs
@@ -29,6 +41,8 @@
 //!   ([`crate::rms::profile`]), so scheduling passes never rebuild a
 //!   running-jobs snapshot and provably no-op passes/checks are elided
 //!   (`Rms::pass_stats` counts both).
+//! * Federated runs add O(shards) per event (down-node integration and
+//!   the steal scan) — shard counts are small constants.
 //!
 //! `RunResult::events` counts every processed event so throughput
 //! benchmarks (`benches/hotpath_scale.rs`) can report events/s.
@@ -40,11 +54,12 @@ use super::execmodel::ExecModel;
 use super::sched_cost::CostModel;
 use crate::cluster::NodeState;
 use crate::dmr::{Inhibitor, SchedMode};
-use crate::resilience::{feasible_shrink, FaultKind, ResilienceConfig, ResilienceStats};
+use crate::federation::{FedRunResult, FederationConfig, RoutingPolicy, ShardRun};
+use crate::resilience::{feasible_shrink, FaultKind, FaultSpec, ResilienceConfig, ResilienceStats};
 use crate::rms::{Action, DmrOutcome, DmrRequest, Rms, RmsConfig};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
-use crate::workload::{JobSpec, WorkloadSpec};
+use crate::workload::{fit_spec, JobSpec, WorkloadSpec};
 use crate::{JobId, NodeId, Time};
 
 /// DES configuration.
@@ -138,6 +153,10 @@ enum EvKind {
 struct Ev {
     t: Time,
     seq: u64,
+    /// Owning shard (0 in the flat engine).  Arrival events ignore it —
+    /// the meta-scheduler routes them when they are *popped*, so
+    /// load-sensitive policies see current state.
+    shard: usize,
     job: JobId,
     epoch: u64,
     kind: EvKind,
@@ -167,7 +186,9 @@ impl Ord for Ev {
 #[derive(Debug, Clone, Copy)]
 struct SimSpec {
     iterations: u32,
-    /// Pre-resolved `spec.work_per_iter()` (same float ops, same value).
+    /// Pre-resolved `spec.work_per_iter()` (same float ops, same value),
+    /// scaled by the owning shard's `1/speed` (exactly `1.0` on the flat
+    /// path and default shards).
     work_per_iter: f64,
     alpha: f64,
     sched_period: f64,
@@ -236,16 +257,33 @@ impl SimJob {
 
 const NO_SLOT: u32 = u32::MAX;
 
-/// The engine.
-pub struct Engine {
-    cfg: DesConfig,
+/// Golden-ratio sequence salt for per-shard RNG streams: distinct per
+/// shard, and zero for shard 0 — the flat path's streams are untouched.
+fn shard_salt(id: usize) -> u64 {
+    (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// One shard of the (possibly 1-shard) federation: its own manager,
+/// RNG streams, fault timeline and simulation slab.
+struct Shard {
     rms: Rms,
+    /// Cost-jitter stream (salted by shard id).
     rng: Rng,
     /// Dedicated RNG for the MTBF/MTTR fault chains — a separate stream so
     /// fault timelines are identical across scheduling modes and the cost
     /// stream of fault-free runs is untouched.
     fault_rng: Rng,
-    heap: BinaryHeap<Reverse<Ev>>,
+    /// This shard's fault sources (MTBF scaled by the shard spec).
+    faults: FaultSpec,
+    /// Whether any fault source is configured; `false` keeps the
+    /// fault-free hot path free of checkpoint bookkeeping.
+    faults_active: bool,
+    /// Relative node speed (reporting only; the reciprocal below does the
+    /// work).
+    speed: f64,
+    /// `1/speed`, folded into every `SimSpec::work_per_iter` and runtime
+    /// estimate on this shard.  Exactly `1.0` on the flat path.
+    inv_speed: f64,
     /// Dense per-job simulation slab, one slot per started user job.
     sims: Vec<SimJob>,
     /// JobId → slab slot (`NO_SLOT` = not simulated: resizers, unstarted).
@@ -262,71 +300,41 @@ pub struct Engine {
     /// scripted failure with no repair.  Drain ends must not resurrect a
     /// node while this is nonzero.
     fail_depth: Vec<u32>,
-    /// Whether any fault source is configured; `false` keeps the
-    /// fault-free hot path free of checkpoint bookkeeping.
-    faults_active: bool,
-    /// Down-node integral: `down_acc` node-seconds as of `down_last_t`.
+    /// Down-node integral of this shard as of the engine's `down_last_t`.
     down_acc: f64,
-    down_last_t: Time,
     stats: ResilienceStats,
-    now: Time,
-    seq: u64,
-    events: u64,
-    actions: ActionStats,
-    done: usize,
-    user_jobs: usize,
-    first_submit: Time,
+    /// Jobs stolen into / out of this shard, arrivals routed here.
+    steals_in: u64,
+    steals_out: u64,
+    routed: u64,
 }
 
-impl Engine {
-    /// Build an engine (fresh RMS + seeded RNG streams) for one run.
-    pub fn new(cfg: DesConfig) -> Self {
-        let rms = Rms::new(cfg.rms.clone());
-        let rng = Rng::new(cfg.seed);
-        let fault_rng = cfg.resilience.faults.rng(cfg.seed);
-        let faults_active = cfg.resilience.faults.is_active();
-        let nodes = cfg.rms.nodes;
-        let drain_nodes = cfg
-            .resilience
-            .faults
-            .drains
-            .iter()
-            .map(|w| w.nodes.node_ids(nodes))
-            .collect();
-        Engine {
-            cfg,
-            rms,
-            rng,
-            fault_rng,
-            heap: BinaryHeap::new(),
+impl Shard {
+    fn new(id: usize, nodes: usize, speed: f64, faults: FaultSpec, cfg: &DesConfig) -> Self {
+        let mut rms_cfg = cfg.rms.clone();
+        rms_cfg.nodes = nodes;
+        let salt = shard_salt(id);
+        let faults_active = faults.is_active();
+        let drain_nodes = faults.drains.iter().map(|w| w.nodes.node_ids(nodes)).collect();
+        Shard {
+            rms: Rms::new(rms_cfg),
+            rng: Rng::new(cfg.seed ^ salt),
+            fault_rng: faults.rng(cfg.seed ^ salt),
+            faults,
+            faults_active,
+            speed,
+            inv_speed: 1.0 / speed,
             sims: Vec::new(),
             slot_of: Vec::new(),
             drain_nodes,
             drain_depth: vec![0; nodes],
             fail_depth: vec![0; nodes],
-            faults_active,
             down_acc: 0.0,
-            down_last_t: 0.0,
             stats: ResilienceStats::default(),
-            now: 0.0,
-            seq: 0,
-            events: 0,
-            actions: ActionStats::default(),
-            done: 0,
-            user_jobs: 0,
-            first_submit: f64::INFINITY,
+            steals_in: 0,
+            steals_out: 0,
+            routed: 0,
         }
-    }
-
-    /// Direct access to the machine (failure-injection tests mark nodes
-    /// down before arrivals).
-    pub fn cluster_mut(&mut self) -> &mut crate::cluster::Cluster {
-        &mut self.rms.cluster
-    }
-
-    fn push(&mut self, t: Time, job: JobId, epoch: u64, kind: EvKind) {
-        self.seq += 1;
-        self.heap.push(Reverse(Ev { t, seq: self.seq, job, epoch, kind }));
     }
 
     fn slot(&self, id: JobId) -> Option<usize> {
@@ -345,13 +353,170 @@ impl Engine {
         self.slot_of[idx] = self.sims.len() as u32;
         self.sims.push(sim);
     }
+}
+
+/// The engine.
+pub struct Engine {
+    cfg: DesConfig,
+    /// The shard vector; the flat engine is exactly `shards.len() == 1`.
+    shards: Vec<Shard>,
+    routing: RoutingPolicy,
+    steal: bool,
+    /// Round-robin routing cursor.
+    rr_next: usize,
+    heap: BinaryHeap<Reverse<Ev>>,
+    down_last_t: Time,
+    now: Time,
+    seq: u64,
+    events: u64,
+    actions: ActionStats,
+    done: usize,
+    user_jobs: usize,
+    first_submit: Time,
+}
+
+impl Engine {
+    /// Build a flat (1-shard) engine — fresh RMS + seeded RNG streams —
+    /// for one run.
+    pub fn new(cfg: DesConfig) -> Self {
+        let shard = Shard::new(0, cfg.rms.nodes, 1.0, cfg.resilience.faults.clone(), &cfg);
+        Engine::with_shards(cfg, vec![shard], RoutingPolicy::RoundRobin, false)
+    }
+
+    /// Build a federated engine: one shard per [`FederationConfig`]
+    /// entry, MTBF scaled per shard (or overridden by `shard_faults`).
+    pub(crate) fn new_federated(cfg: DesConfig, fed: &FederationConfig) -> Self {
+        let shards = fed
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let faults = match fed.shard_faults.as_ref().and_then(|v| v.get(i)) {
+                    Some(f) => f.clone(),
+                    None => {
+                        let mut f = cfg.resilience.faults.clone();
+                        f.mtbf *= s.mtbf_scale;
+                        f
+                    }
+                };
+                Shard::new(i, s.nodes, s.speed, faults, &cfg)
+            })
+            .collect();
+        Engine::with_shards(cfg, shards, fed.routing, fed.steal)
+    }
+
+    fn with_shards(
+        cfg: DesConfig,
+        shards: Vec<Shard>,
+        routing: RoutingPolicy,
+        steal: bool,
+    ) -> Self {
+        Engine {
+            cfg,
+            shards,
+            routing,
+            steal,
+            rr_next: 0,
+            heap: BinaryHeap::new(),
+            down_last_t: 0.0,
+            now: 0.0,
+            seq: 0,
+            events: 0,
+            actions: ActionStats::default(),
+            done: 0,
+            user_jobs: 0,
+            first_submit: f64::INFINITY,
+        }
+    }
+
+    /// Direct access to the machine (failure-injection tests mark nodes
+    /// down before arrivals).
+    pub fn cluster_mut(&mut self) -> &mut crate::cluster::Cluster {
+        &mut self.shards[0].rms.cluster
+    }
+
+    /// Direct access to one shard's machine (federated tests).
+    pub(crate) fn shard_cluster_mut(&mut self, shard: usize) -> &mut crate::cluster::Cluster {
+        &mut self.shards[shard].rms.cluster
+    }
+
+    fn push(&mut self, t: Time, shard: usize, job: JobId, epoch: u64, kind: EvKind) {
+        self.seq += 1;
+        self.heap.push(Reverse(Ev { t, seq: self.seq, shard, job, epoch, kind }));
+    }
 
     /// Run a workload to completion; returns the measurements.
     pub fn run(mut self, workload: &WorkloadSpec, label: &str) -> RunResult {
+        debug_assert_eq!(self.shards.len(), 1, "flat run on a federated engine");
+        self.run_loop(workload);
+        let sh = self.shards.pop().expect("flat engine owns one shard");
+        RunResult {
+            label: label.to_string(),
+            makespan: self.now,
+            first_submit: self.first_submit,
+            actions: self.actions,
+            user_jobs: self.user_jobs,
+            events: self.events,
+            resilience: sh.stats,
+            rms: sh.rms,
+        }
+    }
+
+    /// Run a workload to completion across the federation; returns the
+    /// global measures plus one [`ShardRun`] per shard.
+    pub(crate) fn run_federated(mut self, workload: &WorkloadSpec, label: &str) -> FedRunResult {
+        self.run_loop(workload);
+        let makespan = self.now;
+        let mut merged = ResilienceStats::default();
+        let mut capacity = 0.0;
+        let mut lost = 0.0;
+        for sh in &self.shards {
+            merged.node_failures += sh.stats.node_failures;
+            merged.interrupted += sh.stats.interrupted;
+            merged.rescued += sh.stats.rescued;
+            merged.requeued += sh.stats.requeued;
+            merged.rework_time += sh.stats.rework_time;
+            lost += sh.stats.lost_node_seconds;
+            capacity += sh.rms.cluster.total() as f64 * makespan;
+        }
+        merged.lost_node_seconds = lost;
+        merged.availability =
+            if capacity > 0.0 { (1.0 - lost / capacity).max(0.0) } else { 1.0 };
+        let shards = self
+            .shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, sh)| ShardRun {
+                shard: i,
+                nodes: sh.rms.cluster.total(),
+                speed: sh.speed,
+                stats: sh.stats,
+                steals_in: sh.steals_in,
+                steals_out: sh.steals_out,
+                routed: sh.routed,
+                rms: sh.rms,
+            })
+            .collect();
+        FedRunResult {
+            label: label.to_string(),
+            makespan,
+            first_submit: self.first_submit,
+            actions: self.actions,
+            user_jobs: self.user_jobs,
+            events: self.events,
+            resilience: merged,
+            shards,
+        }
+    }
+
+    /// The shared event loop (flat and federated paths).
+    fn run_loop(&mut self, workload: &WorkloadSpec) {
         self.user_jobs = workload.jobs.len();
-        self.sims.reserve(self.user_jobs);
+        if self.shards.len() == 1 {
+            self.shards[0].sims.reserve(self.user_jobs);
+        }
         for (i, spec) in workload.jobs.iter().enumerate() {
-            self.push(spec.submit_time, 0, 0, EvKind::Arrival(i));
+            self.push(spec.submit_time, 0, 0, 0, EvKind::Arrival(i));
         }
         self.seed_fault_events();
 
@@ -363,6 +528,7 @@ impl Engine {
         const STUCK_EVENTS: u64 = 5_000_000;
         let mut last_done_at: u64 = 0;
         let mut last_done: usize = 0;
+        let steal_on = self.steal && self.shards.len() > 1;
 
         while let Some(Reverse(ev)) = self.heap.pop() {
             debug_assert!(ev.t >= self.now - 1e-9, "time went backwards");
@@ -378,15 +544,20 @@ impl Engine {
                     self.done, self.user_jobs, self.now
                 );
             }
-            // Integrate machine unavailability up to this instant (O(1):
-            // the down count is a maintained counter).
-            let down = self.rms.cluster.down();
-            if down > 0 {
-                self.down_acc += down as f64 * (self.now - self.down_last_t);
+            // Integrate machine unavailability up to this instant (O(1)
+            // per shard: the down count is a maintained counter).
+            for sh in &mut self.shards {
+                let down = sh.rms.cluster.down();
+                if down > 0 {
+                    sh.down_acc += down as f64 * (self.now - self.down_last_t);
+                }
             }
             self.down_last_t = self.now;
             match ev.kind {
-                EvKind::Arrival(i) => self.on_arrival(&workload.jobs[i]),
+                EvKind::Arrival(i) => {
+                    let s = self.route(&workload.jobs[i]);
+                    self.on_arrival(s, &workload.jobs[i]);
+                }
                 EvKind::Check => self.on_check(ev),
                 EvKind::Complete => self.on_complete(ev),
                 EvKind::ResizeDone { to, expand, began } => {
@@ -395,11 +566,14 @@ impl Engine {
                 EvKind::ExpandRetry { to, began, deadline } => {
                     self.on_expand_retry(ev, to, began, deadline)
                 }
-                EvKind::NodeFail { node, auto } => self.on_node_fail(node, auto),
-                EvKind::NodeRepair { node } => self.on_node_repair(node),
-                EvKind::DrainStart(w) => self.on_drain_start(w),
-                EvKind::DrainEnd(w) => self.on_drain_end(w),
+                EvKind::NodeFail { node, auto } => self.on_node_fail(ev.shard, node, auto),
+                EvKind::NodeRepair { node } => self.on_node_repair(ev.shard, node),
+                EvKind::DrainStart(w) => self.on_drain_start(ev.shard, w),
+                EvKind::DrainEnd(w) => self.on_drain_end(ev.shard, w),
                 EvKind::Resume => self.on_resume(ev),
+            }
+            if steal_on {
+                self.try_steal();
             }
             if self.done == self.user_jobs {
                 break;
@@ -407,100 +581,206 @@ impl Engine {
         }
         assert_eq!(self.done, self.user_jobs, "workload did not drain");
 
-        self.stats.lost_node_seconds = self.down_acc;
-        let capacity = self.rms.cluster.total() as f64 * self.now;
-        self.stats.availability =
-            if capacity > 0.0 { (1.0 - self.down_acc / capacity).max(0.0) } else { 1.0 };
-
-        RunResult {
-            label: label.to_string(),
-            makespan: self.now,
-            first_submit: self.first_submit,
-            actions: self.actions,
-            user_jobs: self.user_jobs,
-            events: self.events,
-            resilience: self.stats,
-            rms: self.rms,
+        for sh in &mut self.shards {
+            sh.stats.lost_node_seconds = sh.down_acc;
+            let capacity = sh.rms.cluster.total() as f64 * self.now;
+            sh.stats.availability =
+                if capacity > 0.0 { (1.0 - sh.down_acc / capacity).max(0.0) } else { 1.0 };
         }
     }
 
-    /// Seed the machine-event stream: scripted fault-trace events, drain
-    /// windows, and (when MTBF sampling is on) each node's first failure.
-    /// Pushed *after* the arrivals so fault-free heaps are identical to
-    /// pre-resilience builds.
+    /// Seed the machine-event streams: scripted fault-trace events, drain
+    /// windows, and (when MTBF sampling is on) each node's first failure
+    /// — per shard, in shard-id order.  Pushed *after* the arrivals so
+    /// fault-free heaps are identical to pre-resilience builds.
     fn seed_fault_events(&mut self) {
-        let faults = self.cfg.resilience.faults.clone();
-        if !faults.is_active() {
-            return;
-        }
-        let total = self.rms.cluster.total();
-        for ev in &faults.scripted {
-            if ev.node >= total {
+        for s in 0..self.shards.len() {
+            let faults = self.shards[s].faults.clone();
+            if !faults.is_active() {
                 continue;
             }
-            let kind = match ev.kind {
-                FaultKind::Fail => EvKind::NodeFail { node: ev.node, auto: false },
-                FaultKind::Repair => EvKind::NodeRepair { node: ev.node },
-            };
-            self.push(ev.at, 0, 0, kind);
-        }
-        for (i, w) in faults.drains.iter().enumerate() {
-            self.push(w.start, 0, 0, EvKind::DrainStart(i));
-            self.push(w.end, 0, 0, EvKind::DrainEnd(i));
-        }
-        let init = faults.initial_failures(total, &mut self.fault_rng);
-        for (node, at) in init {
-            self.push(at, 0, 0, EvKind::NodeFail { node, auto: true });
+            let total = self.shards[s].rms.cluster.total();
+            for ev in &faults.scripted {
+                if ev.node >= total {
+                    continue;
+                }
+                let kind = match ev.kind {
+                    FaultKind::Fail => EvKind::NodeFail { node: ev.node, auto: false },
+                    FaultKind::Repair => EvKind::NodeRepair { node: ev.node },
+                };
+                self.push(ev.at, s, 0, 0, kind);
+            }
+            for (i, w) in faults.drains.iter().enumerate() {
+                self.push(w.start, s, 0, 0, EvKind::DrainStart(i));
+                self.push(w.end, s, 0, 0, EvKind::DrainEnd(i));
+            }
+            let init = faults.initial_failures(total, &mut self.shards[s].fault_rng);
+            for (node, at) in init {
+                self.push(at, s, 0, 0, EvKind::NodeFail { node, auto: true });
+            }
         }
     }
 
     // ------------------------------------------------------------------
+    // Meta-scheduler: routing + work stealing
 
-    fn on_arrival(&mut self, spec: &JobSpec) {
+    /// Pick the shard for an arriving job (trivially shard 0 on the flat
+    /// path).  Shards whose whole pool is smaller than the job's
+    /// `min_procs` are skipped; if none qualifies the largest shard takes
+    /// the job (the per-shard `fit_spec` clamp keeps it placeable).
+    fn route(&mut self, spec: &JobSpec) -> usize {
+        let k = self.shards.len();
+        if k == 1 {
+            return 0;
+        }
+        let placeable = |sh: &Shard| spec.min_procs <= sh.rms.cluster.total();
+        let pick = match self.routing {
+            RoutingPolicy::RoundRobin => {
+                let mut pick = None;
+                for _ in 0..k {
+                    let s = self.rr_next % k;
+                    self.rr_next = (self.rr_next + 1) % k;
+                    if placeable(&self.shards[s]) {
+                        pick = Some(s);
+                        break;
+                    }
+                }
+                pick
+            }
+            RoutingPolicy::LeastLoaded => {
+                let mut best: Option<(f64, usize)> = None;
+                for (i, sh) in self.shards.iter().enumerate() {
+                    if !placeable(sh) {
+                        continue;
+                    }
+                    let load = (sh.rms.pending_user_jobs() + sh.rms.running_jobs()) as f64
+                        / sh.rms.cluster.total() as f64;
+                    let better = match best {
+                        Some((b, _)) => load.total_cmp(&b).is_lt(),
+                        None => true,
+                    };
+                    if better {
+                        best = Some((load, i));
+                    }
+                }
+                best.map(|(_, i)| i)
+            }
+            RoutingPolicy::Locality => {
+                let home = spec.user as usize % k;
+                (0..k).map(|d| (home + d) % k).find(|&s| placeable(&self.shards[s]))
+            }
+        };
+        pick.unwrap_or_else(|| {
+            let mut best = 0;
+            for i in 1..k {
+                if self.shards[i].rms.cluster.total() > self.shards[best].rms.cluster.total() {
+                    best = i;
+                }
+            }
+            best
+        })
+    }
+
+    /// One steal attempt (invoked after every processed event when
+    /// stealing is on): the lowest-id *drained* shard (no pending user
+    /// jobs, free nodes) takes the lowest-priority fitting job from the
+    /// most-backlogged shard.  The stolen job re-submits through the
+    /// thief's normal clamp/priority path with its original submission
+    /// time, so aging carries over; any checkpoint state stays behind
+    /// (a restart on the thief is the conservative model of a
+    /// cross-cluster migration).
+    fn try_steal(&mut self) {
+        let thief = self
+            .shards
+            .iter()
+            .position(|sh| sh.rms.pending_user_jobs() == 0 && sh.rms.cluster.available() > 0);
+        let Some(t) = thief else { return };
+        let mut victim: Option<(usize, usize)> = None;
+        for (i, sh) in self.shards.iter().enumerate() {
+            if i == t {
+                continue;
+            }
+            let p = sh.rms.pending_user_jobs();
+            if p == 0 {
+                continue;
+            }
+            if victim.map(|(_, best)| p > best).unwrap_or(true) {
+                victim = Some((i, p));
+            }
+        }
+        let Some((v, _)) = victim else { return };
+        let free = self.shards[t].rms.cluster.available();
+        let now = self.now;
+        let Some(cand) = self.shards[v].rms.steal_candidate(free, now) else { return };
+        let Some((mut spec, submitted)) = self.shards[v].rms.withdraw(cand, now) else {
+            return;
+        };
+        self.shards[v].steals_out += 1;
+        fit_spec(&mut spec, self.shards[t].rms.cluster.total());
+        let est = self.cfg.exec.exec_time(&spec, spec.procs) * self.shards[t].inv_speed;
+        let id = self.shards[t].rms.submit(spec, submitted);
+        self.shards[t].rms.set_expected_end(id, now + est);
+        self.shards[t].steals_in += 1;
+        self.try_schedule(t);
+    }
+
+    // ------------------------------------------------------------------
+
+    fn on_arrival(&mut self, s: usize, spec: &JobSpec) {
         self.first_submit = self.first_submit.min(self.now);
-        // Estimate for backfill: duration at the requested size.
-        let est = self.cfg.exec.exec_time(spec, spec.procs);
-        let id = self.rms.submit(spec.clone(), self.now);
-        self.rms.set_expected_end(id, self.now + est);
-        self.try_schedule();
+        let mut spec = spec.clone();
+        if self.shards.len() > 1 {
+            // Per-shard clamp: the job must fit the shard it landed on
+            // (the flat path never refits — bit-compatibility).
+            fit_spec(&mut spec, self.shards[s].rms.cluster.total());
+        }
+        // Estimate for backfill: duration at the requested size, on this
+        // shard's hardware.
+        let est = self.cfg.exec.exec_time(&spec, spec.procs) * self.shards[s].inv_speed;
+        let id = self.shards[s].rms.submit(spec, self.now);
+        self.shards[s].rms.set_expected_end(id, self.now + est);
+        self.shards[s].routed += 1;
+        self.try_schedule(s);
     }
 
-    fn try_schedule(&mut self) {
-        self.rms.schedule(self.now);
-        self.drain_started();
+    fn try_schedule(&mut self, s: usize) {
+        self.shards[s].rms.schedule(self.now);
+        self.drain_started(s);
     }
 
-    /// Materialize sims for every start the RMS has made that this driver
-    /// has not picked up yet.  Scheduling passes can run *inside*
-    /// `dmr_check` (the resizer-job protocol), so machine-event handlers
-    /// call this before touching victims — every active job then has a
-    /// slab slot.
-    fn drain_started(&mut self) {
-        let started = self.rms.take_recent_starts();
-        for s in started {
+    /// Materialize sims for every start shard `s`'s RMS has made that
+    /// this driver has not picked up yet.  Scheduling passes can run
+    /// *inside* `dmr_check` (the resizer-job protocol), so machine-event
+    /// handlers call this before touching victims — every active job then
+    /// has a slab slot.
+    fn drain_started(&mut self, s: usize) {
+        let started = self.shards[s].rms.take_recent_starts();
+        for st in started {
             // `is_active()` filters starts already invalidated by a node
             // failure that requeued the job before this buffer drained
             // (it will start again — and get its sim — via a later pass).
-            let (spec, malleable, procs) = match self.rms.job(s.job) {
+            let (spec, malleable, procs) = match self.shards[s].rms.job(st.job) {
                 Some(j) if !j.is_resizer && j.is_active() => {
-                    (SimSpec::of(&j.spec), j.spec.malleable, j.procs())
+                    let mut sp = SimSpec::of(&j.spec);
+                    sp.work_per_iter *= self.shards[s].inv_speed;
+                    (sp, j.spec.malleable, j.procs())
                 }
                 _ => continue,
             };
             let iter_t = self.cfg.exec.iter_time_raw(spec.work_per_iter, spec.alpha, procs);
             let period = spec.sched_period;
-            if let Some(slot) = self.slot(s.job) {
+            if let Some(slot) = self.shards[s].slot(st.job) {
                 // Restart after a failure requeue: the slab slot survives
                 // and keeps the checkpointed progress (`iters_done` /
                 // `run_time_acc`); everything else resets.
                 {
-                    let j = &mut self.sims[slot];
+                    let j = &mut self.shards[s].sims[slot];
                     debug_assert!(!j.running, "restarted job was still running");
                     j.procs = procs;
                     j.inhibitor = Inhibitor::new(period);
                     j.pending_async = None;
                 }
-                self.resume_sim(slot, s.job);
+                self.resume_sim(s, slot, st.job);
                 continue;
             }
             let sim = SimJob {
@@ -519,12 +799,12 @@ impl Engine {
                 ckpt_iters: 0.0,
             };
             let complete_at = self.now + sim.remaining() * iter_t;
-            self.rms.set_expected_end(s.job, complete_at);
-            self.insert_sim(s.job, sim);
-            self.push(complete_at, s.job, 0, EvKind::Complete);
+            self.shards[s].rms.set_expected_end(st.job, complete_at);
+            self.shards[s].insert_sim(st.job, sim);
+            self.push(complete_at, s, st.job, 0, EvKind::Complete);
             if malleable {
                 let check_at = self.now + iter_t.max(period).max(1e-3);
-                self.push(check_at, s.job, 0, EvKind::Check);
+                self.push(check_at, s, st.job, 0, EvKind::Check);
             }
         }
     }
@@ -532,10 +812,11 @@ impl Engine {
     /// Put a paused sim back to work at its current size: bump the epoch
     /// (invalidating every outstanding event), reschedule its completion
     /// and — for malleable jobs — its next DMR check.
-    fn resume_sim(&mut self, slot: usize, id: JobId) {
+    fn resume_sim(&mut self, s: usize, slot: usize, id: JobId) {
         let exec = &self.cfg.exec;
         let now = self.now;
-        let j = &mut self.sims[slot];
+        let sh = &mut self.shards[s];
+        let j = &mut sh.sims[slot];
         j.running = true;
         j.last_t = now;
         j.epoch += 1;
@@ -543,24 +824,24 @@ impl Engine {
         let iter_t = j.iter_time(exec);
         let complete_at = now + j.remaining() * iter_t;
         let malleable = j.spec.malleable;
-        self.rms.set_expected_end(id, complete_at);
-        self.push(complete_at, id, epoch, EvKind::Complete);
+        sh.rms.set_expected_end(id, complete_at);
+        self.push(complete_at, s, id, epoch, EvKind::Complete);
         if malleable {
-            let next = self.next_check_time(slot);
-            self.push(next, id, epoch, EvKind::Check);
+            let next = self.next_check_time(s, slot);
+            self.push(next, s, id, epoch, EvKind::Check);
         }
     }
 
-    fn progress(&mut self, slot: usize) {
-        let exec = &self.cfg.exec;
+    fn progress(&mut self, s: usize, slot: usize) {
         // Checkpoint bookkeeping only matters when something can fail.
-        let ckpt = if self.faults_active {
+        let ckpt = if self.shards[s].faults_active {
             self.cfg.resilience.recovery.checkpoint_interval
         } else {
             0.0
         };
+        let exec = &self.cfg.exec;
         let now = self.now;
-        let j = &mut self.sims[slot];
+        let j = &mut self.shards[s].sims[slot];
         if j.running {
             let it = j.iter_time(exec);
             j.iters_done = (j.iters_done + (now - j.last_t) / it).min(j.spec.iterations as f64);
@@ -581,30 +862,32 @@ impl Engine {
     }
 
     fn on_complete(&mut self, ev: Ev) {
-        let Some(slot) = self.slot(ev.job) else { return };
-        if self.sims[slot].epoch != ev.epoch || !self.sims[slot].running {
+        let s = ev.shard;
+        let Some(slot) = self.shards[s].slot(ev.job) else { return };
+        if self.shards[s].sims[slot].epoch != ev.epoch || !self.shards[s].sims[slot].running {
             return; // stale
         }
-        self.progress(slot);
-        let j = &mut self.sims[slot];
+        self.progress(s, slot);
+        let j = &mut self.shards[s].sims[slot];
         debug_assert!(j.remaining() < 1e-6, "completion with work left");
         j.running = false;
         j.epoch += 1;
-        self.rms.finish(ev.job, self.now);
+        self.shards[s].rms.finish(ev.job, self.now);
         self.done += 1;
-        self.try_schedule();
+        self.try_schedule(s);
     }
 
     fn on_check(&mut self, ev: Ev) {
-        let Some(slot) = self.slot(ev.job) else { return };
-        if self.sims[slot].epoch != ev.epoch || !self.sims[slot].running {
+        let s = ev.shard;
+        let Some(slot) = self.shards[s].slot(ev.job) else { return };
+        if self.shards[s].sims[slot].epoch != ev.epoch || !self.shards[s].sims[slot].running {
             return;
         }
-        self.progress(slot);
-        if self.sims[slot].remaining() <= 1e-9 {
+        self.progress(s, slot);
+        if self.shards[s].sims[slot].remaining() <= 1e-9 {
             return; // completion event will fire at this same instant
         }
-        let spec = self.sims[slot].spec;
+        let spec = self.shards[s].sims[slot].spec;
         let req = DmrRequest {
             min: spec.min_procs,
             max: spec.max_procs,
@@ -612,23 +895,23 @@ impl Engine {
             factor: spec.factor,
         };
 
-        if !self.sims[slot].inhibitor.allow(self.now) {
-            let epoch = self.sims[slot].epoch;
-            let next = self.next_check_time(slot);
-            self.push(next, ev.job, epoch, EvKind::Check);
+        if !self.shards[s].sims[slot].inhibitor.allow(self.now) {
+            let epoch = self.shards[s].sims[slot].epoch;
+            let next = self.next_check_time(s, slot);
+            self.push(next, s, ev.job, epoch, EvKind::Check);
             return;
         }
 
         let mode = self.cfg.mode;
         let outcome: Result<DmrOutcome, usize> = match mode {
-            SchedMode::Sync => Ok(self.rms.dmr_check(ev.job, &req, self.now)),
+            SchedMode::Sync => Ok(self.shards[s].rms.dmr_check(ev.job, &req, self.now)),
             SchedMode::Async => {
-                let prev = self.sims[slot].pending_async.take();
-                let next_decision = self.rms.dmr_peek(ev.job, &req, self.now);
-                self.sims[slot].pending_async = Some(next_decision);
+                let prev = self.shards[s].sims[slot].pending_async.take();
+                let next_decision = self.shards[s].rms.dmr_peek(ev.job, &req, self.now);
+                self.shards[s].sims[slot].pending_async = Some(next_decision);
                 match prev {
                     None | Some(Action::NoAction) => Ok(DmrOutcome::NoAction),
-                    Some(a) => match self.rms.dmr_apply(ev.job, a, self.now) {
+                    Some(a) => match self.shards[s].rms.dmr_apply(ev.job, a, self.now) {
                         Ok(o) => Ok(o),
                         Err(()) => {
                             // Stale expansion: resizer job waits (§5.2.1).
@@ -645,27 +928,28 @@ impl Engine {
 
         match outcome {
             Ok(DmrOutcome::NoAction) => {
-                let cost = self.cfg.costs.no_action(&mut self.rng);
+                let cost = self.cfg.costs.no_action(&mut self.shards[s].rng);
                 self.actions.no_action.push(cost);
                 // The ~10 ms decision overhead is recorded (Table 2) but
                 // not charged against progress: charging it would require
                 // rescheduling the completion event for a <0.1 % effect
                 // (the inhibitor spaces the calls 15 s apart).
-                let epoch = self.sims[slot].epoch;
-                let next = self.next_check_time(slot).max(self.now + cost);
-                self.push(next, ev.job, epoch, EvKind::Check);
+                let epoch = self.shards[s].sims[slot].epoch;
+                let next = self.next_check_time(s, slot).max(self.now + cost);
+                self.push(next, s, ev.job, epoch, EvKind::Check);
             }
-            Ok(DmrOutcome::Expand { to, .. }) => self.begin_resize(slot, ev.job, to, true),
-            Ok(DmrOutcome::Shrink { to, .. }) => self.begin_resize(slot, ev.job, to, false),
+            Ok(DmrOutcome::Expand { to, .. }) => self.begin_resize(s, slot, ev.job, to, true),
+            Ok(DmrOutcome::Shrink { to, .. }) => self.begin_resize(s, slot, ev.job, to, false),
             Err(to) => {
                 // Pause and retry until the deadline (async wait hazard).
-                let j = &mut self.sims[slot];
+                let j = &mut self.shards[s].sims[slot];
                 j.running = false;
                 j.epoch += 1;
                 let epoch = j.epoch;
                 let deadline = self.now + self.cfg.costs.expand_timeout;
                 self.push(
                     self.now + 1.0,
+                    s,
                     ev.job,
                     epoch,
                     EvKind::ExpandRetry { to, began: self.now, deadline },
@@ -675,23 +959,24 @@ impl Engine {
     }
 
     /// Pause the job and schedule the commit of a granted resize.
-    fn begin_resize(&mut self, slot: usize, id: JobId, to: usize, expand: bool) {
+    fn begin_resize(&mut self, s: usize, slot: usize, id: JobId, to: usize, expand: bool) {
         let began = self.now;
         let (from, epoch) = {
-            let j = &mut self.sims[slot];
+            let j = &mut self.shards[s].sims[slot];
             let from = j.procs;
             j.running = false;
             j.epoch += 1;
             (from, j.epoch)
         };
         let delta = to.abs_diff(from);
-        let sched = self.cfg.costs.action_sched(delta, &mut self.rng);
+        let sched = self.cfg.costs.action_sched(delta, &mut self.shards[s].rng);
         let transfer = self
             .cfg
             .costs
             .resize_transfer(self.cfg.exec.resize_bytes, from, to);
         self.push(
             self.now + sched + transfer,
+            s,
             id,
             epoch,
             EvKind::ResizeDone { to, expand, began },
@@ -699,45 +984,48 @@ impl Engine {
     }
 
     fn on_resize_done(&mut self, ev: Ev, to: usize, expand: bool, began: Time) {
-        let Some(slot) = self.slot(ev.job) else { return };
-        if self.sims[slot].epoch != ev.epoch {
+        let s = ev.shard;
+        let Some(slot) = self.shards[s].slot(ev.job) else { return };
+        if self.shards[s].sims[slot].epoch != ev.epoch {
             return;
         }
         if expand {
-            self.rms.commit_resize(ev.job, self.now);
+            self.shards[s].rms.commit_resize(ev.job, self.now);
             self.actions.expand.push(self.now - began);
         } else {
-            self.rms.commit_shrink_to(ev.job, to, self.now);
+            self.shards[s].rms.commit_shrink_to(ev.job, to, self.now);
             self.actions.shrink.push(self.now - began);
         }
-        self.sims[slot].procs = to;
-        self.resume_sim(slot, ev.job);
+        self.shards[s].sims[slot].procs = to;
+        self.resume_sim(s, slot, ev.job);
         // A shrink may let queued jobs start.
-        self.try_schedule();
+        self.try_schedule(s);
     }
 
     fn on_expand_retry(&mut self, ev: Ev, to: usize, began: Time, deadline: Time) {
-        let Some(slot) = self.slot(ev.job) else { return };
-        if self.sims[slot].epoch != ev.epoch {
+        let s = ev.shard;
+        let Some(slot) = self.shards[s].slot(ev.job) else { return };
+        if self.shards[s].sims[slot].epoch != ev.epoch {
             return;
         }
-        match self.rms.dmr_apply(ev.job, Action::Expand { to }, self.now) {
+        match self.shards[s].rms.dmr_apply(ev.job, Action::Expand { to }, self.now) {
             Ok(DmrOutcome::Expand { .. }) => {
                 // Resources appeared: pay the protocol costs now; the
                 // elapsed wait is part of the measured expand time.
                 let (from, epoch) = {
-                    let j = &mut self.sims[slot];
+                    let j = &mut self.shards[s].sims[slot];
                     j.epoch += 1;
                     (j.procs, j.epoch)
                 };
                 let delta = to.abs_diff(from);
-                let sched = self.cfg.costs.action_sched(delta, &mut self.rng);
+                let sched = self.cfg.costs.action_sched(delta, &mut self.shards[s].rng);
                 let transfer = self
                     .cfg
                     .costs
                     .resize_transfer(self.cfg.exec.resize_bytes, from, to);
                 self.push(
                     self.now + sched + transfer,
+                    s,
                     ev.job,
                     epoch,
                     EvKind::ResizeDone { to, expand: true, began },
@@ -748,6 +1036,7 @@ impl Engine {
                     let epoch = ev.epoch;
                     self.push(
                         self.now + 1.0,
+                        s,
                         ev.job,
                         epoch,
                         EvKind::ExpandRetry { to, began, deadline },
@@ -756,7 +1045,7 @@ impl Engine {
                     // Timed out: abort the action and resume (§5.2.1).
                     self.actions.expand.push(self.now - began);
                     self.actions.expand_aborts += 1;
-                    self.resume_sim(slot, ev.job);
+                    self.resume_sim(s, slot, ev.job);
                 }
             }
         }
@@ -765,111 +1054,116 @@ impl Engine {
     // ------------------------------------------------------------------
     // Machine events (crate::resilience)
 
-    fn on_node_fail(&mut self, node: NodeId, auto: bool) {
+    fn on_node_fail(&mut self, s: usize, node: NodeId, auto: bool) {
         // Keep the per-node failure cycle alive *first*: the repair and
-        // next-failure delays are drawn from the dedicated fault stream
-        // unconditionally, so the machine timeline is a pure function of
-        // (fault spec, seed) — identical across scheduling modes.
+        // next-failure delays are drawn from the shard's dedicated fault
+        // stream unconditionally, so each shard's machine timeline is a
+        // pure function of (fault spec, seed, shard id) — identical
+        // across scheduling modes and routing policies.
         if auto {
-            let (repair_after, next_fail_after) =
-                self.cfg.resilience.faults.next_cycle(&mut self.fault_rng);
+            let sh = &mut self.shards[s];
+            let (repair_after, next_fail_after) = sh.faults.next_cycle(&mut sh.fault_rng);
             let up_at = self.now + repair_after;
-            self.push(up_at, 0, 0, EvKind::NodeRepair { node });
-            self.push(up_at + next_fail_after, 0, 0, EvKind::NodeFail { node, auto: true });
+            self.push(up_at, s, 0, 0, EvKind::NodeRepair { node });
+            self.push(up_at + next_fail_after, s, 0, 0, EvKind::NodeFail { node, auto: true });
         }
         // Every hardware failure counts and is logged — including one that
         // lands on a node already offline (drain overlap / nested
         // outages).  Both the count and the NodeFailed sequence are then
         // mode-independent, whatever the node happened to be doing.
-        self.stats.node_failures += 1;
-        self.fail_depth[node] += 1;
-        if matches!(self.rms.cluster.state(node), NodeState::Down) {
+        self.shards[s].stats.node_failures += 1;
+        self.shards[s].fail_depth[node] += 1;
+        if matches!(self.shards[s].rms.cluster.state(node), NodeState::Down) {
             // Capacity already gone; the outage is extended (fail_depth),
             // not duplicated, and there is no victim.
-            self.rms.log.push(crate::rms::RmsEvent::NodeFailed { node, time: self.now });
+            self.shards[s]
+                .rms
+                .log
+                .push(crate::rms::RmsEvent::NodeFailed { node, time: self.now });
             return;
         }
         // Jobs started inside an undrained RMS pass need their sims
         // before the victim lookup.
-        self.drain_started();
-        if let Some(victim) = self.rms.fail_node(node, self.now) {
-            self.on_job_hit(victim.job, victim.survivors);
+        self.drain_started(s);
+        if let Some(victim) = self.shards[s].rms.fail_node(node, self.now) {
+            self.on_job_hit(s, victim.job, victim.survivors);
         }
     }
 
-    fn on_node_repair(&mut self, node: NodeId) {
+    fn on_node_repair(&mut self, s: usize, node: NodeId) {
         // Outages nest: the node returns only once every failure that hit
         // it has been repaired (a scripted failure without `repair_at`
         // never is — its depth contribution outlives every chain repair).
-        if self.fail_depth[node] > 0 {
-            self.fail_depth[node] -= 1;
+        if self.shards[s].fail_depth[node] > 0 {
+            self.shards[s].fail_depth[node] -= 1;
         }
         // A node under an active drain window stays offline until the
         // window ends.
-        if self.fail_depth[node] == 0
-            && self.drain_depth[node] == 0
-            && self.rms.repair_node(node, self.now)
+        if self.shards[s].fail_depth[node] == 0
+            && self.shards[s].drain_depth[node] == 0
+            && self.shards[s].rms.repair_node(node, self.now)
         {
-            self.try_schedule();
+            self.try_schedule(s);
         }
     }
 
-    fn on_drain_start(&mut self, w: usize) {
-        let nodes = std::mem::take(&mut self.drain_nodes[w]);
+    fn on_drain_start(&mut self, s: usize, w: usize) {
+        let nodes = std::mem::take(&mut self.shards[s].drain_nodes[w]);
         for &n in &nodes {
-            self.drain_depth[n] += 1;
-            if self.drain_depth[n] == 1 {
-                self.rms.begin_drain(n, self.now);
+            self.shards[s].drain_depth[n] += 1;
+            if self.shards[s].drain_depth[n] == 1 {
+                self.shards[s].rms.begin_drain(n, self.now);
             }
         }
-        self.drain_nodes[w] = nodes;
+        self.shards[s].drain_nodes[w] = nodes;
     }
 
-    fn on_drain_end(&mut self, w: usize) {
-        let nodes = std::mem::take(&mut self.drain_nodes[w]);
+    fn on_drain_end(&mut self, s: usize, w: usize) {
+        let nodes = std::mem::take(&mut self.shards[s].drain_nodes[w]);
         let mut freed = false;
         for &n in &nodes {
-            if self.drain_depth[n] > 0 {
-                self.drain_depth[n] -= 1;
+            if self.shards[s].drain_depth[n] > 0 {
+                self.shards[s].drain_depth[n] -= 1;
             }
-            if self.drain_depth[n] == 0 && self.fail_depth[n] == 0 {
-                freed |= self.rms.end_drain(n, self.now);
+            if self.shards[s].drain_depth[n] == 0 && self.shards[s].fail_depth[n] == 0 {
+                freed |= self.shards[s].rms.end_drain(n, self.now);
             }
         }
-        self.drain_nodes[w] = nodes;
+        self.shards[s].drain_nodes[w] = nodes;
         if freed {
-            self.try_schedule();
+            self.try_schedule(s);
         }
     }
 
-    /// A failure took one of `job`'s nodes.  Roll the job back to its last
-    /// checkpoint, then either shrink it onto a factor-reachable count of
-    /// surviving nodes (malleable rescue) or kill and requeue it.
-    fn on_job_hit(&mut self, job: JobId, survivors: usize) {
-        self.stats.interrupted += 1;
-        let Some(slot) = self.slot(job) else {
+    /// A failure took one of `job`'s nodes on shard `s`.  Roll the job
+    /// back to its last checkpoint, then either shrink it onto a
+    /// factor-reachable count of surviving nodes (malleable rescue) or
+    /// kill and requeue it.
+    fn on_job_hit(&mut self, s: usize, job: JobId, survivors: usize) {
+        self.shards[s].stats.interrupted += 1;
+        let Some(slot) = self.shards[s].slot(job) else {
             // The job started inside an RMS scheduling pass this driver
             // has not drained yet (it sits in `recent_starts` with no sim
             // slot).  It has made no modeled progress — requeue it; the
             // stale start record is skipped by `try_schedule`'s
             // `is_active()` filter and the job starts again later.
-            self.rms.requeue_after_failure(job, self.now);
-            self.stats.requeued += 1;
-            self.try_schedule();
+            self.shards[s].rms.requeue_after_failure(job, self.now);
+            self.shards[s].stats.requeued += 1;
+            self.try_schedule(s);
             return;
         };
-        self.progress(slot);
+        self.progress(s, slot);
 
         // Roll back to the exact state the last checkpoint held (with no
         // checkpointing, `ckpt_*` stay 0 — everything is lost).
         let (lost, committed, factor, min_procs, malleable) = {
-            let j = &mut self.sims[slot];
+            let j = &mut self.shards[s].sims[slot];
             let lost = (j.run_time_acc - j.ckpt_run_time).max(0.0);
             j.iters_done = j.ckpt_iters;
             j.run_time_acc = j.ckpt_run_time;
             (lost, j.procs, j.spec.factor, j.spec.min_procs, j.spec.malleable)
         };
-        self.stats.rework_time += lost;
+        self.shards[s].stats.rework_time += lost;
 
         // A failure during an in-flight resize abandons it: the pending
         // ResizeDone goes stale via the epoch bump below, and the resize
@@ -884,10 +1178,10 @@ impl Engine {
         };
         match target {
             Some(to) => {
-                self.rms.rescue_shrink_to(job, to, self.now);
-                self.stats.rescued += 1;
+                self.shards[s].rms.rescue_shrink_to(job, to, self.now);
+                self.shards[s].stats.rescued += 1;
                 let epoch = {
-                    let j = &mut self.sims[slot];
+                    let j = &mut self.shards[s].sims[slot];
                     j.procs = to;
                     j.running = false;
                     j.pending_async = None;
@@ -898,36 +1192,37 @@ impl Engine {
                 // survivor-side redistribution of the dead node's shard.
                 let from = survivors + 1;
                 let delta = from.abs_diff(to).max(1);
-                let sched = self.cfg.costs.action_sched(delta, &mut self.rng);
+                let sched = self.cfg.costs.action_sched(delta, &mut self.shards[s].rng);
                 let transfer =
                     self.cfg.costs.resize_transfer(self.cfg.exec.resize_bytes, from, to);
-                self.push(self.now + sched + transfer, job, epoch, EvKind::Resume);
+                self.push(self.now + sched + transfer, s, job, epoch, EvKind::Resume);
             }
             None => {
-                self.rms.requeue_after_failure(job, self.now);
-                self.stats.requeued += 1;
-                let j = &mut self.sims[slot];
+                self.shards[s].rms.requeue_after_failure(job, self.now);
+                self.shards[s].stats.requeued += 1;
+                let j = &mut self.shards[s].sims[slot];
                 j.running = false;
                 j.pending_async = None;
                 j.epoch += 1;
             }
         }
         // Freed nodes (released survivors) may admit queued jobs.
-        self.try_schedule();
+        self.try_schedule(s);
     }
 
     fn on_resume(&mut self, ev: Ev) {
-        let Some(slot) = self.slot(ev.job) else { return };
-        if self.sims[slot].epoch != ev.epoch {
+        let s = ev.shard;
+        let Some(slot) = self.shards[s].slot(ev.job) else { return };
+        if self.shards[s].sims[slot].epoch != ev.epoch {
             return;
         }
-        debug_assert!(!self.sims[slot].running, "resume of a running job");
-        self.resume_sim(slot, ev.job);
+        debug_assert!(!self.shards[s].sims[slot].running, "resume of a running job");
+        self.resume_sim(s, slot, ev.job);
     }
 
-    fn next_check_time(&mut self, slot: usize) -> Time {
+    fn next_check_time(&mut self, s: usize, slot: usize) -> Time {
         let exec = &self.cfg.exec;
-        let j = &mut self.sims[slot];
+        let j = &mut self.shards[s].sims[slot];
         let iter_t = j.iter_time(exec);
         // Reconfiguring points are iteration boundaries, rate-limited by
         // the checking inhibitor.
@@ -989,5 +1284,12 @@ mod tests {
         let r = Engine::new(cfg).run(&w, "async");
         assert_eq!(r.rms.completed_jobs(), 20);
         assert!(r.rms.check_invariants());
+    }
+
+    #[test]
+    fn shard_salt_is_zero_for_shard_zero_and_distinct() {
+        assert_eq!(shard_salt(0), 0, "flat path streams untouched");
+        let salts: std::collections::BTreeSet<u64> = (0..64).map(shard_salt).collect();
+        assert_eq!(salts.len(), 64, "salts are distinct");
     }
 }

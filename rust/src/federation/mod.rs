@@ -1,0 +1,330 @@
+//! Sharded multi-cluster federation with a meta-scheduler.
+//!
+//! The paper's throughput-aware malleability assumes one resource manager
+//! over one flat node pool; real deployments front many partitions behind
+//! a single scheduling brain (Chadha et al., arXiv:2009.08289, drive a
+//! SLURM extension against heterogeneous partitions).  This subsystem
+//! partitions the simulated machine into **shards** — each owning its own
+//! [`crate::rms::Rms`] (priorities, backfill, availability profile) and
+//! its own fault timeline — coordinated by a meta-scheduler that:
+//!
+//! * **routes** every arriving job to one shard via a pluggable
+//!   [`RoutingPolicy`] (round-robin, least-loaded, or user-locality);
+//! * **steals** queued work from a backlogged shard when another shard
+//!   drains (one candidate per processed event; the stolen job re-enters
+//!   through the thief's normal submit → clamp → priority path, keeping
+//!   its original submission time so queue aging is preserved);
+//! * supports **heterogeneous shards**: per-shard node counts, node
+//!   speeds (scaling every iteration time on that shard) and MTBF scale
+//!   factors (scaling the per-shard failure sampling).
+//!
+//! ## Determinism contract
+//!
+//! A federated run is a pure function of (workload spec, seed, shard
+//! layout): per-shard RNG streams are salted by shard id, shards are
+//! always visited in id order, and the event heap stays a single global
+//! total order.  The salt of shard 0 is zero and every heterogeneity
+//! knob multiplies by exactly `1.0` in the default layout, so **a 1-shard
+//! federation is bit-identical to the flat [`crate::des::Engine`]** —
+//! event log digests and makespan bits included.  The golden tests in
+//! `rust/tests/test_federation.rs` lock both properties.
+
+use crate::cluster::{Cluster, FederatedView, DEFAULT_NODES};
+use crate::des::{ActionStats, DesConfig, Engine};
+use crate::resilience::{FaultSpec, ResilienceStats};
+use crate::rms::Rms;
+use crate::workload::WorkloadSpec;
+use crate::Time;
+
+/// How the meta-scheduler picks a shard for an arriving job.
+///
+/// Routing happens when the arrival event is *processed* (not when it is
+/// enqueued), so load-sensitive policies see the federation's state at
+/// the arrival instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Cycle through the shards in id order, skipping shards too small to
+    /// ever hold the job (`min_procs` above the shard's node count).
+    RoundRobin,
+    /// Send the job to the shard with the lowest load ratio
+    /// `(pending + running jobs) / nodes`; ties break toward the lowest
+    /// shard id.  Unplaceable shards are skipped.
+    LeastLoaded,
+    /// User-affinity: user *u* homes on shard `u mod k` (models data or
+    /// license locality).  If the home shard cannot hold the job, the
+    /// scan falls forward to the next placeable shard.
+    Locality,
+}
+
+impl RoutingPolicy {
+    /// Parse a policy name; accepts the short labels (`rr`, `ll`, `loc`)
+    /// and the long forms (`round-robin`, `least-loaded`, `locality`,
+    /// plus `_`-separated variants and `affinity`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rr" | "round-robin" | "round_robin" | "roundrobin" => Some(RoutingPolicy::RoundRobin),
+            "ll" | "least-loaded" | "least_loaded" | "leastloaded" => {
+                Some(RoutingPolicy::LeastLoaded)
+            }
+            "loc" | "locality" | "affinity" => Some(RoutingPolicy::Locality),
+            _ => None,
+        }
+    }
+
+    /// Short label used in scenario ids (`-s4xll`) and CSV cells.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "rr",
+            RoutingPolicy::LeastLoaded => "ll",
+            RoutingPolicy::Locality => "loc",
+        }
+    }
+}
+
+/// Static description of one shard: its node count and its two
+/// heterogeneity knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardSpec {
+    /// Nodes owned by this shard.
+    pub nodes: usize,
+    /// Relative node speed (1.0 = the calibrated Table 1 machine).  Every
+    /// iteration on this shard takes `1/speed` times the modeled time.
+    pub speed: f64,
+    /// Multiplier on the configured MTBF for this shard's failure
+    /// sampling (2.0 = twice as reliable, 0.5 = twice as flaky).
+    pub mtbf_scale: f64,
+}
+
+impl Default for ShardSpec {
+    fn default() -> Self {
+        ShardSpec { nodes: DEFAULT_NODES, speed: 1.0, mtbf_scale: 1.0 }
+    }
+}
+
+impl ShardSpec {
+    /// Parse a topology entry `"nodes[:speed[:mtbf_scale]]"`, e.g.
+    /// `"64"`, `"64:0.5"`, `"128:1.0:2.0"`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let mut parts = s.split(':');
+        let nodes: usize = parts
+            .next()
+            .unwrap_or("")
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad shard node count in {s:?}"))?;
+        if nodes == 0 {
+            return Err(format!("shard must have at least one node: {s:?}"));
+        }
+        let mut spec = ShardSpec { nodes, ..Default::default() };
+        if let Some(sp) = parts.next() {
+            spec.speed =
+                sp.trim().parse().map_err(|_| format!("bad shard speed in {s:?}"))?;
+            if !(spec.speed > 0.0) {
+                return Err(format!("shard speed must be positive: {s:?}"));
+            }
+        }
+        if let Some(m) = parts.next() {
+            m.trim()
+                .parse()
+                .map(|v| spec.mtbf_scale = v)
+                .map_err(|_| format!("bad shard mtbf_scale in {s:?}"))?;
+            if !(spec.mtbf_scale > 0.0) {
+                return Err(format!("shard mtbf_scale must be positive: {s:?}"));
+            }
+        }
+        if parts.next().is_some() {
+            return Err(format!("too many ':' fields in shard spec {s:?}"));
+        }
+        Ok(spec)
+    }
+
+    /// Split `total` nodes uniformly into `k` homogeneous shards (the
+    /// remainder goes to the lowest shard ids, one node each).
+    pub fn uniform(total: usize, k: usize) -> Vec<ShardSpec> {
+        let k = k.max(1);
+        let base = total / k;
+        let rem = total % k;
+        (0..k)
+            .map(|i| ShardSpec {
+                nodes: base + usize::from(i < rem),
+                ..Default::default()
+            })
+            .collect()
+    }
+}
+
+/// Everything the federated engine needs beyond the per-shard
+/// [`DesConfig`]: the shard layout, the routing policy, and whether
+/// cross-shard work stealing is on.
+#[derive(Debug, Clone)]
+pub struct FederationConfig {
+    /// The shard layout (at least one shard).
+    pub shards: Vec<ShardSpec>,
+    /// Arrival routing policy.
+    pub routing: RoutingPolicy,
+    /// Steal queued work from backlogged shards into drained ones.
+    pub steal: bool,
+    /// Optional per-shard fault-spec override (index = shard id; shards
+    /// past the end of the vector keep the scaled base spec).  Used for
+    /// scripted per-shard fault traces and shard-loss drain experiments;
+    /// the campaign TOML axis never sets this.
+    pub shard_faults: Option<Vec<FaultSpec>>,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        FederationConfig {
+            shards: vec![ShardSpec::default()],
+            routing: RoutingPolicy::RoundRobin,
+            steal: false,
+            shard_faults: None,
+        }
+    }
+}
+
+/// Final state and counters of one shard after a federated run.
+pub struct ShardRun {
+    /// Shard id (position in the layout).
+    pub shard: usize,
+    /// Nodes the shard owned.
+    pub nodes: usize,
+    /// Relative node speed of the shard.
+    pub speed: f64,
+    /// The shard's manager state: job records, event log, telemetry.
+    pub rms: Rms,
+    /// The shard's own resilience measures (its fault timeline only).
+    pub stats: ResilienceStats,
+    /// Jobs this shard received through cross-shard stealing.
+    pub steals_in: u64,
+    /// Jobs stolen away from this shard's pending queue.
+    pub steals_out: u64,
+    /// Arrivals the meta-scheduler routed to this shard.
+    pub routed: u64,
+}
+
+/// Everything measured from one federated run: the global measures plus
+/// one [`ShardRun`] per shard.
+pub struct FedRunResult {
+    /// Run label (scenario + seed for campaigns).
+    pub label: String,
+    /// Completion time of the last job (global, across all shards).
+    pub makespan: Time,
+    /// Arrival time of the first job.
+    pub first_submit: Time,
+    /// Reconfiguration timing statistics, merged across shards.
+    pub actions: ActionStats,
+    /// User jobs processed (across all shards).
+    pub user_jobs: usize,
+    /// Discrete events processed by the shared event loop.
+    pub events: u64,
+    /// Merged resilience measures (counts summed; availability weighted
+    /// by shard capacity).
+    pub resilience: ResilienceStats,
+    /// Per-shard final states, in shard-id order.
+    pub shards: Vec<ShardRun>,
+}
+
+impl FedRunResult {
+    /// Total cross-shard steals (each steal counts once).
+    pub fn steals(&self) -> u64 {
+        self.shards.iter().map(|s| s.steals_out).sum()
+    }
+
+    /// Snapshot of the federated node pool at the end of the run.
+    pub fn view(&self) -> FederatedView {
+        let mut v = FederatedView::default();
+        for s in &self.shards {
+            v.push(&s.rms.cluster);
+        }
+        v
+    }
+}
+
+/// The federated engine: a thin façade over [`crate::des::Engine`]
+/// generalized to a shard vector.  Build one per run.
+///
+/// ```
+/// use dmr::des::DesConfig;
+/// use dmr::federation::{FedEngine, FederationConfig, RoutingPolicy, ShardSpec};
+/// use dmr::workload;
+///
+/// let w = workload::generate(20, 7);
+/// let fed = FederationConfig {
+///     shards: ShardSpec::uniform(64, 2),
+///     routing: RoutingPolicy::LeastLoaded,
+///     steal: true,
+///     ..Default::default()
+/// };
+/// let r = FedEngine::new(DesConfig::default(), fed).run(&w, "demo");
+/// assert_eq!(r.shards.len(), 2);
+/// assert_eq!(r.shards.iter().map(|s| s.rms.completed_jobs()).sum::<usize>(), 20);
+/// ```
+pub struct FedEngine {
+    inner: Engine,
+}
+
+impl FedEngine {
+    /// Build a federated engine: one `Rms` + fault timeline per shard,
+    /// RNG streams salted by shard id (shard 0's salt is zero, which is
+    /// what makes the 1-shard layout bit-identical to the flat engine).
+    pub fn new(cfg: DesConfig, fed: FederationConfig) -> Self {
+        assert!(!fed.shards.is_empty(), "federation needs at least one shard");
+        FedEngine { inner: Engine::new_federated(cfg, &fed) }
+    }
+
+    /// Direct access to one shard's machine (tests mark nodes down before
+    /// arrivals).  Panics if the shard id is out of range.
+    pub fn shard_cluster_mut(&mut self, shard: usize) -> &mut Cluster {
+        self.inner.shard_cluster_mut(shard)
+    }
+
+    /// Run a workload to completion across the federation.
+    pub fn run(self, workload: &WorkloadSpec, label: &str) -> FedRunResult {
+        self.inner.run_federated(workload, label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_policy_parses_short_and_long_forms() {
+        assert_eq!(RoutingPolicy::parse("rr"), Some(RoutingPolicy::RoundRobin));
+        assert_eq!(RoutingPolicy::parse("round-robin"), Some(RoutingPolicy::RoundRobin));
+        assert_eq!(RoutingPolicy::parse("ll"), Some(RoutingPolicy::LeastLoaded));
+        assert_eq!(RoutingPolicy::parse("least_loaded"), Some(RoutingPolicy::LeastLoaded));
+        assert_eq!(RoutingPolicy::parse("loc"), Some(RoutingPolicy::Locality));
+        assert_eq!(RoutingPolicy::parse("affinity"), Some(RoutingPolicy::Locality));
+        assert_eq!(RoutingPolicy::parse("bogus"), None);
+        for p in [RoutingPolicy::RoundRobin, RoutingPolicy::LeastLoaded, RoutingPolicy::Locality] {
+            assert_eq!(RoutingPolicy::parse(p.label()), Some(p), "label round-trips");
+        }
+    }
+
+    #[test]
+    fn shard_spec_parses_topology_strings() {
+        let s = ShardSpec::parse("64").unwrap();
+        assert_eq!(s, ShardSpec { nodes: 64, speed: 1.0, mtbf_scale: 1.0 });
+        let s = ShardSpec::parse("32:0.5").unwrap();
+        assert_eq!(s.nodes, 32);
+        assert_eq!(s.speed, 0.5);
+        let s = ShardSpec::parse("128:2.0:0.25").unwrap();
+        assert_eq!((s.nodes, s.speed, s.mtbf_scale), (128, 2.0, 0.25));
+        assert!(ShardSpec::parse("0").is_err(), "zero nodes rejected");
+        assert!(ShardSpec::parse("8:-1").is_err(), "negative speed rejected");
+        assert!(ShardSpec::parse("8:1:0").is_err(), "zero mtbf_scale rejected");
+        assert!(ShardSpec::parse("8:1:1:1").is_err(), "extra fields rejected");
+        assert!(ShardSpec::parse("x").is_err());
+    }
+
+    #[test]
+    fn uniform_split_spreads_remainder() {
+        let v = ShardSpec::uniform(64, 4);
+        assert_eq!(v.iter().map(|s| s.nodes).collect::<Vec<_>>(), vec![16, 16, 16, 16]);
+        let v = ShardSpec::uniform(10, 3);
+        assert_eq!(v.iter().map(|s| s.nodes).collect::<Vec<_>>(), vec![4, 3, 3]);
+        assert_eq!(v.iter().map(|s| s.nodes).sum::<usize>(), 10);
+        assert!(v.iter().all(|s| s.speed == 1.0 && s.mtbf_scale == 1.0));
+    }
+}

@@ -82,6 +82,27 @@
 //! count.  See `scenarios/README.md` for the spec schema, and run e.g.
 //! `repro campaign scenarios/sweep_small.toml --workers 8`.
 //!
+//! ## Sharded federation & meta-scheduling
+//!
+//! Real deployments front many partitions behind one scheduling brain;
+//! the [`federation`] subsystem scales the paper's single flat pool to
+//! that shape.  The node pool is partitioned into **shards**, each owning
+//! its own [`rms::Rms`] (priorities, backfill, incremental availability
+//! profile) and its own fault timeline; a meta-scheduler routes arrivals
+//! via a pluggable [`federation::RoutingPolicy`] (round-robin,
+//! least-loaded, user-locality), steals queued work from backlogged
+//! shards into drained ones (the stolen job re-enters through the
+//! thief's normal clamp/priority path with its original submission time,
+//! so aging is preserved), and supports heterogeneous shards — per-shard
+//! node counts, node speeds and MTBF scales.  Determinism is
+//! shard-layout-reproducible: a (spec, seed, shard layout) triple yields
+//! one event log, and the 1-shard layout is bit-identical to the flat
+//! [`des::Engine`] — locked by `rust/tests/test_federation.rs`.
+//! Campaigns sweep a `[federation]` axis (shard counts / topology ×
+//! routing policies, `-sNxpolicy` scenario suffixes) and the outputs
+//! carry per-shard utilization, queue depth and steal counts; see
+//! `scenarios/federated_sweep.toml`.
+//!
 //! ## Performance model & complexity budget
 //!
 //! The paper's headline claim — malleability decisions cost ~10 ms
@@ -170,6 +191,7 @@ pub mod campaign;
 pub mod cluster;
 pub mod des;
 pub mod dmr;
+pub mod federation;
 pub mod live;
 pub mod metrics;
 pub mod resilience;

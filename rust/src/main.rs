@@ -68,7 +68,10 @@ USAGE: repro <SUBCOMMAND> [--jobs N] [--seed S] [--nodes N] [--sizes 50,100,200,
   calibrate    measure real per-iteration PJRT times per (app, procs)
   campaign     run a scenario sweep: repro campaign <spec.toml> [--workers N]
                (spec schema: scenarios/README.md; examples under scenarios/;
-               --dry-run prints the expanded scenario matrix and exits)
+               --workers must be >= 1, omit for one thread per core;
+               --dry-run prints the expanded scenario matrix and exits;
+               a [federation] block shards the cluster under a
+               meta-scheduler — see scenarios/federated_sweep.toml)
   all          every DES-based artifact
 
 Results are also written as CSV under results/.";
@@ -251,7 +254,8 @@ Results are also written as CSV under results/.";
             .first()
             .context("usage: repro campaign <spec.toml|spec.json> [--workers N] [--dry-run]")?;
         let spec = CampaignSpec::from_file(path)?;
-        let workers = args.get_parse("workers", 0usize);
+        let workers = campaign::runner::parse_workers(args.get("workers"))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
         if args.flag("dry-run") {
             // Sanity-check large sweeps without executing anything: print
             // the expanded scenario matrix and exit.
@@ -289,7 +293,7 @@ Results are also written as CSV under results/.";
             {
                 String::new()
             } else {
-                " x policy/fault knobs".to_string()
+                " x policy/fault/federation knobs".to_string()
             },
             campaign::runner::resolve_workers(&spec, workers),
         );

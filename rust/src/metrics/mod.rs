@@ -7,4 +7,4 @@ pub mod report;
 pub mod summary;
 
 pub use record::{extract, JobRecord};
-pub use summary::{jain_index, RunSummary};
+pub use summary::{jain_index, FedSummary, RunSummary, ShardSummary};

@@ -246,16 +246,22 @@ pub fn throughput_rows(rows: &[(usize, RunSummary, RunSummary)]) -> Vec<Vec<Stri
 // Kept here so every CSV/JSON artifact the crate produces flows through
 // one module.
 
-/// Header of `<name>_runs.csv`.
+/// Header of `<name>_runs.csv` — the single source of truth for the
+/// per-run column set; [`campaign_run_rows`] emits cells in exactly this
+/// order and the header-golden test locks the joined string.  Federation
+/// columns sit at the end so flat-campaign consumers parse unchanged
+/// prefixes; flat runs fill them with `1` / `-` / `0` placeholders.
 pub const CAMPAIGN_RUN_HEADER: &[&str] = &[
     "run", "scenario", "label", "nodes", "mode", "policy", "seed", "jobs", "makespan_s",
     "util_pct", "wait_mean_s", "exec_mean_s", "completion_mean_s", "node_seconds", "expands",
     "shrinks", "expand_aborts", "bounded_slowdown", "jain_fairness", "deadline_jobs",
     "deadline_misses", "interrupted", "rescued", "requeued", "rework_s", "lost_node_s",
-    "availability_pct",
+    "availability_pct", "fed_shards", "fed_routing", "fed_steals", "shard_util_pct",
+    "shard_queue_depth", "shard_steals",
 ];
 
-/// Header of `<name>_agg.csv`.
+/// Header of `<name>_agg.csv` — single source of truth, like
+/// [`CAMPAIGN_RUN_HEADER`].
 pub const CAMPAIGN_AGG_HEADER: &[&str] = &[
     "scenario", "runs", "jobs", "makespan_mean_s", "makespan_ci95_s", "util_mean_pct",
     "util_ci95_pct", "wait_mean_s", "wait_ci95_s", "exec_mean_s", "exec_ci95_s",
@@ -263,7 +269,20 @@ pub const CAMPAIGN_AGG_HEADER: &[&str] = &[
     "shrinks_mean", "expand_aborts_mean", "slowdown_mean", "slowdown_ci95", "fairness_mean",
     "fairness_ci95", "deadline_miss_mean", "interrupted_mean", "rescued_mean",
     "requeued_mean", "rework_mean_s", "lost_node_s_mean", "availability_mean_pct",
+    "fed_shards", "fed_steals_mean", "shard_util_mean_pct",
 ];
+
+/// The per-run CSV columns (accessor over [`CAMPAIGN_RUN_HEADER`] so
+/// writers and tests share one definition).
+pub fn run_columns() -> &'static [&'static str] {
+    CAMPAIGN_RUN_HEADER
+}
+
+/// The per-scenario aggregate CSV columns (accessor over
+/// [`CAMPAIGN_AGG_HEADER`]).
+pub fn agg_columns() -> &'static [&'static str] {
+    CAMPAIGN_AGG_HEADER
+}
 
 /// One CSV row per campaign run, in matrix order.
 pub fn campaign_run_rows(records: &[crate::campaign::RunRecord]) -> Vec<Vec<String>> {
@@ -271,7 +290,7 @@ pub fn campaign_run_rows(records: &[crate::campaign::RunRecord]) -> Vec<Vec<Stri
         .iter()
         .map(|r| {
             let s = &r.summary;
-            vec![
+            let mut row = vec![
                 r.plan.index.to_string(),
                 r.plan.scenario.clone(),
                 r.plan.label.clone(),
@@ -299,16 +318,40 @@ pub fn campaign_run_rows(records: &[crate::campaign::RunRecord]) -> Vec<Vec<Stri
                 fmt(s.resilience.rework_time, 1),
                 fmt(s.resilience.lost_node_seconds, 1),
                 fmt(s.resilience.availability * 100.0, 3),
-            ]
+            ];
+            match &s.federation {
+                Some(f) => {
+                    row.push(f.shards.to_string());
+                    row.push(f.routing.clone());
+                    row.push(f.steals.to_string());
+                    row.push(join_shards(&f.per_shard, |sh| fmt(sh.util_pct, 2)));
+                    row.push(join_shards(&f.per_shard, |sh| fmt(sh.queue_depth, 2)));
+                    row.push(join_shards(&f.per_shard, |sh| {
+                        format!("{}:{}", sh.steals_in, sh.steals_out)
+                    }));
+                }
+                None => {
+                    row.extend(["1", "-", "0", "-", "-", "-"].map(String::from));
+                }
+            }
+            row
         })
         .collect()
+}
+
+/// `;`-join one formatted value per shard (shard-id order).
+fn join_shards(
+    shards: &[crate::metrics::ShardSummary],
+    f: impl Fn(&crate::metrics::ShardSummary) -> String,
+) -> String {
+    shards.iter().map(f).collect::<Vec<_>>().join(";")
 }
 
 /// One CSV row per scenario aggregate.
 pub fn campaign_agg_rows(aggs: &[crate::campaign::ScenarioAgg]) -> Vec<Vec<String>> {
     aggs.iter()
         .map(|a| {
-            vec![
+            let mut row = vec![
                 a.scenario.clone(),
                 a.runs.to_string(),
                 a.jobs.to_string(),
@@ -337,7 +380,15 @@ pub fn campaign_agg_rows(aggs: &[crate::campaign::ScenarioAgg]) -> Vec<Vec<Strin
                 fmt(a.rework_s.mean(), 1),
                 fmt(a.lost_node_s.mean(), 1),
                 fmt(a.availability_pct.mean(), 3),
-            ]
+            ];
+            row.push(a.fed_shards.to_string());
+            row.push(fmt(a.fed_steals.mean(), 2));
+            row.push(if a.shard_util.is_empty() {
+                "-".to_string()
+            } else {
+                a.shard_util.iter().map(|s| fmt(s.mean(), 2)).collect::<Vec<_>>().join(";")
+            });
+            row
         })
         .collect()
 }
@@ -347,7 +398,7 @@ pub fn campaign_table(name: &str, aggs: &[crate::campaign::ScenarioAgg]) -> Tabl
     let mut t = Table::new(vec![
         "Scenario", "Runs", "Makespan (s)", "Util (%)", "Wait (s)", "Completion (s)",
         "Expands", "Shrinks", "Slowdown", "Jain", "DlMiss", "Rescued", "Requeued",
-        "Avail (%)",
+        "Avail (%)", "Shards", "Steals",
     ])
     .with_title(&format!("Campaign {name}: per-scenario aggregates (mean ± 95% CI)"));
     let pm = |s: &Summary, prec: usize| format!("{} ± {}", fmt(s.mean(), prec), fmt(s.ci95_half(), prec));
@@ -367,6 +418,8 @@ pub fn campaign_table(name: &str, aggs: &[crate::campaign::ScenarioAgg]) -> Tabl
             fmt(a.rescued.mean(), 1),
             fmt(a.requeued.mean(), 1),
             fmt(a.availability_pct.mean(), 2),
+            a.fed_shards.to_string(),
+            fmt(a.fed_steals.mean(), 1),
         ]);
     }
     t
@@ -413,6 +466,14 @@ pub fn campaign_agg_json(
             m.insert("rework_s".into(), stat(&a.rework_s));
             m.insert("lost_node_seconds".into(), stat(&a.lost_node_s));
             m.insert("availability_pct".into(), stat(&a.availability_pct));
+            let mut fed = BTreeMap::new();
+            fed.insert("shards".into(), Json::Num(a.fed_shards as f64));
+            fed.insert("steals".into(), stat(&a.fed_steals));
+            fed.insert(
+                "shard_util_mean_pct".into(),
+                Json::Arr(a.shard_util.iter().map(|s| Json::Num(s.mean())).collect()),
+            );
+            m.insert("federation".into(), Json::Obj(fed));
             Json::Obj(m)
         })
         .collect();
@@ -577,6 +638,36 @@ jobs = 5
         let parsed = crate::util::json::Json::parse(&json).unwrap();
         assert_eq!(parsed.get("campaign").unwrap().as_str(), Some("report-unit"));
         assert_eq!(parsed.get("scenarios").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn campaign_headers_are_golden() {
+        // The exact joined header strings are a compatibility contract for
+        // downstream CSV consumers (CI greps, notebooks).  Any column
+        // addition must land at the END of the matching header and update
+        // this test deliberately.
+        assert_eq!(
+            run_columns().join(","),
+            "run,scenario,label,nodes,mode,policy,seed,jobs,makespan_s,util_pct,\
+             wait_mean_s,exec_mean_s,completion_mean_s,node_seconds,expands,shrinks,\
+             expand_aborts,bounded_slowdown,jain_fairness,deadline_jobs,deadline_misses,\
+             interrupted,rescued,requeued,rework_s,lost_node_s,availability_pct,\
+             fed_shards,fed_routing,fed_steals,shard_util_pct,shard_queue_depth,\
+             shard_steals"
+        );
+        assert_eq!(
+            agg_columns().join(","),
+            "scenario,runs,jobs,makespan_mean_s,makespan_ci95_s,util_mean_pct,\
+             util_ci95_pct,wait_mean_s,wait_ci95_s,exec_mean_s,exec_ci95_s,\
+             completion_mean_s,completion_ci95_s,node_seconds_mean,expands_mean,\
+             shrinks_mean,expand_aborts_mean,slowdown_mean,slowdown_ci95,fairness_mean,\
+             fairness_ci95,deadline_miss_mean,interrupted_mean,rescued_mean,\
+             requeued_mean,rework_mean_s,lost_node_s_mean,availability_mean_pct,\
+             fed_shards,fed_steals_mean,shard_util_mean_pct"
+        );
+        // accessors and consts are the same object
+        assert!(std::ptr::eq(run_columns(), CAMPAIGN_RUN_HEADER));
+        assert!(std::ptr::eq(agg_columns(), CAMPAIGN_AGG_HEADER));
     }
 
     #[test]

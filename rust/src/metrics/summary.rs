@@ -1,7 +1,10 @@
-//! Aggregated per-run measures (the rows of Tables 3–4).
+//! Aggregated per-run measures (the rows of Tables 3–4), for flat and
+//! federated runs.
 
 use super::record::{extract, JobRecord};
-use crate::des::RunResult;
+use crate::des::{ActionStats, RunResult};
+use crate::federation::{FedRunResult, RoutingPolicy};
+use crate::resilience::ResilienceStats;
 use crate::util::stats::{step_series_mean, Summary};
 
 /// Everything the reports need from one workload run.
@@ -37,6 +40,79 @@ pub struct RunSummary {
     pub deadline_jobs: usize,
     /// Deadline-carrying jobs that finished strictly late.
     pub deadline_misses: usize,
+    /// Federated-run extras (`None` for flat runs): per-shard measures
+    /// plus the meta-scheduler configuration that produced them.
+    pub federation: Option<FedSummary>,
+}
+
+/// Federation-level measures of one federated run.
+pub struct FedSummary {
+    /// Shard count.
+    pub shards: usize,
+    /// Routing-policy label (`rr` | `ll` | `loc`).
+    pub routing: String,
+    /// Whether cross-shard work stealing was enabled.
+    pub steal: bool,
+    /// Total jobs stolen across shards.
+    pub steals: u64,
+    /// One entry per shard, in shard-id order.
+    pub per_shard: Vec<ShardSummary>,
+}
+
+/// Per-shard measures of one federated run.
+pub struct ShardSummary {
+    /// Shard id.
+    pub shard: usize,
+    /// Nodes in this shard's pool.
+    pub nodes: usize,
+    /// Relative node speed.
+    pub speed: f64,
+    /// Jobs this shard completed (includes stolen-in jobs).
+    pub jobs: usize,
+    /// Mean allocated-nodes percentage over the *federation* makespan.
+    pub util_pct: f64,
+    /// Time-averaged queue depth by Little's law: total job waiting time
+    /// on this shard divided by the makespan.
+    pub queue_depth: f64,
+    /// Jobs stolen into this shard.
+    pub steals_in: u64,
+    /// Jobs stolen out of this shard.
+    pub steals_out: u64,
+    /// Arrivals the meta-scheduler routed here.
+    pub routed: u64,
+    /// This shard's availability (1.0 without faults).
+    pub availability: f64,
+    /// This shard's event-log digest (shard-layout determinism handle).
+    pub log_digest: u64,
+}
+
+/// Sum `k` step series (as emitted by the telemetry) into one step
+/// series: at every change point of any input, the output holds the sum
+/// of the inputs' current values.
+fn merge_step_series(series: &[&[(f64, f64)]]) -> Vec<(f64, f64)> {
+    let mut idx = vec![0usize; series.len()];
+    let mut cur = vec![0.0f64; series.len()];
+    let mut out: Vec<(f64, f64)> = Vec::new();
+    loop {
+        let mut next_t = f64::INFINITY;
+        for (s, &i) in series.iter().zip(idx.iter()) {
+            if i < s.len() {
+                next_t = next_t.min(s[i].0);
+            }
+        }
+        if !next_t.is_finite() {
+            break;
+        }
+        for ((s, i), c) in series.iter().zip(idx.iter_mut()).zip(cur.iter_mut()) {
+            while *i < s.len() && s[*i].0 <= next_t {
+                *c = s[*i].1;
+                *i += 1;
+            }
+        }
+        let total: f64 = cur.iter().sum();
+        out.push((next_t, total));
+    }
+    out
 }
 
 /// Jain's fairness index over `values`: `(Σx)² / (n · Σx²)`.  Ranges from
@@ -56,11 +132,92 @@ pub fn jain_index(values: &[f64]) -> f64 {
 
 impl RunSummary {
     pub fn from_run(r: &RunResult) -> RunSummary {
-        let jobs = extract(&r.rms);
-        let nodes = r.rms.cluster.total();
-        let t0 = 0.0;
+        Self::assemble(
+            r.label.clone(),
+            r.makespan,
+            r.rms.cluster.total(),
+            extract(&r.rms),
+            r.rms.telemetry.alloc_series.clone(),
+            r.rms.telemetry.running_series.clone(),
+            r.rms.telemetry.completed_series.clone(),
+            r.actions.clone(),
+            r.resilience.clone(),
+            None,
+        )
+    }
+
+    /// Summarize a federated run: job records merged across shards (in
+    /// shard-id order), cluster series summed, utilization over the total
+    /// node pool — plus the per-shard breakdown in
+    /// [`RunSummary::federation`].
+    pub fn from_fed(r: &FedRunResult, routing: RoutingPolicy, steal: bool) -> RunSummary {
         let t1 = r.makespan.max(1e-9);
-        let series = &r.rms.telemetry.alloc_series;
+        let nodes: usize = r.shards.iter().map(|s| s.nodes).sum();
+        let mut jobs: Vec<JobRecord> = Vec::new();
+        let mut per_shard = Vec::with_capacity(r.shards.len());
+        for sh in &r.shards {
+            let shard_jobs = extract(&sh.rms);
+            let util = step_series_mean(&sh.rms.telemetry.alloc_series, 0.0, t1)
+                / sh.nodes.max(1) as f64;
+            per_shard.push(ShardSummary {
+                shard: sh.shard,
+                nodes: sh.nodes,
+                speed: sh.speed,
+                jobs: shard_jobs.len(),
+                util_pct: util * 100.0,
+                queue_depth: shard_jobs.iter().map(|j| j.wait()).sum::<f64>() / t1,
+                steals_in: sh.steals_in,
+                steals_out: sh.steals_out,
+                routed: sh.routed,
+                availability: sh.stats.availability,
+                log_digest: sh.rms.log.digest(),
+            });
+            jobs.extend(shard_jobs);
+        }
+        let collect = |pick: fn(&crate::rms::Telemetry) -> &Vec<(f64, f64)>| {
+            let views: Vec<&[(f64, f64)]> =
+                r.shards.iter().map(|s| pick(&s.rms.telemetry).as_slice()).collect();
+            merge_step_series(&views)
+        };
+        let federation = FedSummary {
+            shards: r.shards.len(),
+            routing: routing.label().to_string(),
+            steal,
+            steals: r.steals(),
+            per_shard,
+        };
+        Self::assemble(
+            r.label.clone(),
+            r.makespan,
+            nodes,
+            jobs,
+            collect(|t| &t.alloc_series),
+            collect(|t| &t.running_series),
+            collect(|t| &t.completed_series),
+            r.actions.clone(),
+            r.resilience.clone(),
+            Some(federation),
+        )
+    }
+
+    /// Shared constructor: derives every measure from the job records and
+    /// cluster series (identical arithmetic for flat and federated runs).
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        label: String,
+        makespan: f64,
+        nodes: usize,
+        jobs: Vec<JobRecord>,
+        alloc_series: Vec<(f64, f64)>,
+        running_series: Vec<(f64, f64)>,
+        completed_series: Vec<(f64, f64)>,
+        actions: ActionStats,
+        resilience: ResilienceStats,
+        federation: Option<FedSummary>,
+    ) -> RunSummary {
+        let t0 = 0.0;
+        let t1 = makespan.max(1e-9);
+        let series = &alloc_series;
         let util_mean = step_series_mean(series, t0, t1) / nodes as f64;
         // time-weighted std of the busy fraction
         let util_std = {
@@ -94,23 +251,24 @@ impl RunSummary {
         let deadline_jobs = jobs.iter().filter(|j| j.deadline.is_some()).count();
         let deadline_misses = jobs.iter().filter(|j| j.missed_deadline()).count();
         RunSummary {
-            label: r.label.clone(),
-            makespan: r.makespan,
+            label,
+            makespan,
             util_mean,
             util_std,
             wait: Summary::from_iter(jobs.iter().map(|j| j.wait())),
             exec: Summary::from_iter(jobs.iter().map(|j| j.exec())),
             completion: Summary::from_iter(jobs.iter().map(|j| j.completion())),
             nodes,
-            alloc_series: series.clone(),
-            running_series: r.rms.telemetry.running_series.clone(),
-            completed_series: r.rms.telemetry.completed_series.clone(),
-            actions: r.actions.clone(),
-            resilience: r.resilience.clone(),
+            alloc_series,
+            running_series,
+            completed_series,
+            actions,
+            resilience,
             bounded_slowdown,
             fairness_jain,
             deadline_jobs,
             deadline_misses,
+            federation,
             jobs,
         }
     }

@@ -33,6 +33,12 @@ pub enum RmsEvent {
     Requeued { job: JobId, time: Time },
     /// An interrupted malleable job shrank onto its surviving nodes.
     Rescued { job: JobId, time: Time, from: usize, to: usize },
+    // --- federation events (crate::federation) -----------------------
+    /// A pending job was withdrawn from this shard's queue by the
+    /// meta-scheduler's work stealing (it re-submits on another shard).
+    /// Only federated multi-shard runs emit this, so flat and 1-shard
+    /// event logs are untouched.
+    Stolen { job: JobId, time: Time },
 }
 
 /// Append-only log with query helpers.
@@ -80,6 +86,11 @@ impl EventLog {
     /// Failure requeues recorded.
     pub fn requeues(&self) -> usize {
         self.count(|e| matches!(e, RmsEvent::Requeued { .. }))
+    }
+
+    /// Cross-shard steals recorded (jobs withdrawn from this shard).
+    pub fn steals(&self) -> usize {
+        self.count(|e| matches!(e, RmsEvent::Stolen { .. }))
     }
 
     /// Order-sensitive FNV-1a digest over every event and all its fields
@@ -191,6 +202,11 @@ impl EventLog {
                     mix(&mut h, *from as u64);
                     mix(&mut h, *to as u64);
                 }
+                RmsEvent::Stolen { job, time } => {
+                    mix(&mut h, 16);
+                    mix(&mut h, *job);
+                    mix(&mut h, time.to_bits());
+                }
             }
         }
         h
@@ -255,6 +271,7 @@ mod tests {
             digest_of(RmsEvent::Interrupted { job: 1, time: 2.0, node: 1 }),
             digest_of(RmsEvent::Requeued { job: 1, time: 2.0 }),
             digest_of(RmsEvent::Rescued { job: 1, time: 2.0, from: 8, to: 4 }),
+            digest_of(RmsEvent::Stolen { job: 1, time: 2.0 }),
         ];
         for (i, a) in all.iter().enumerate() {
             for (j, b) in all.iter().enumerate() {
@@ -272,8 +289,10 @@ mod tests {
         log.push(RmsEvent::NodeFailed { node: 3, time: 1.0 });
         log.push(RmsEvent::Rescued { job: 2, time: 1.0, from: 32, to: 16 });
         log.push(RmsEvent::Requeued { job: 4, time: 2.0 });
+        log.push(RmsEvent::Stolen { job: 5, time: 3.0 });
         assert_eq!(log.node_failures(), 1);
         assert_eq!(log.rescues(), 1);
         assert_eq!(log.requeues(), 1);
+        assert_eq!(log.steals(), 1);
     }
 }

@@ -609,6 +609,47 @@ impl Rms {
         self.log.push(RmsEvent::Cancelled { job: id, time: now });
     }
 
+    // ------------------------------------------------------------------
+    // Cross-shard work stealing (crate::federation)
+
+    /// Pick the pending job a federated meta-scheduler should steal from
+    /// this shard: the **lowest-priority** queued user job that fits in
+    /// `free` nodes (scanning the priority order from the back keeps the
+    /// shard's own head-of-queue — the job its backfill reservation
+    /// protects — at home).  Resizer jobs, boosted jobs and jobs with a
+    /// dependency are never candidates.  O(pending).
+    pub fn steal_candidate(&mut self, free: usize, now: Time) -> Option<JobId> {
+        if free == 0 || self.pending_user == 0 {
+            return None;
+        }
+        self.refresh_pending_order(now);
+        self.pending_order.iter().rev().copied().find(|id| {
+            let j = &self.live[id];
+            !j.is_resizer && !j.qos_boost && j.depends_on.is_none() && j.spec.min_procs <= free
+        })
+    }
+
+    /// Withdraw a pending user job from this shard so it can re-submit on
+    /// another shard: the job leaves the queue *and* the live map (no
+    /// archiving — exactly one shard owns the job's record at any time),
+    /// a [`RmsEvent::Stolen`] is logged, and the spec plus the original
+    /// submission time are returned for the thief's `submit` (preserving
+    /// queue aging).  Returns `None` if the job is not a stealable
+    /// pending user job.
+    pub fn withdraw(&mut self, id: JobId, now: Time) -> Option<(JobSpec, Time)> {
+        let pos = self.pending.iter().position(|&p| p == id)?;
+        let job = self.live.get(&id)?;
+        if job.state != JobState::Pending || job.is_resizer {
+            return None;
+        }
+        self.pending.swap_remove(pos);
+        self.invalidate_pending_order();
+        self.pending_user -= 1;
+        let job = self.live.remove(&id).expect("withdraw: unknown job");
+        self.log.push(RmsEvent::Stolen { job: id, time: now });
+        Some((job.spec, job.submit_time))
+    }
+
     /// Refresh the scheduler's estimate of a running job's end time
     /// (feeds backfill reservations; published to the availability
     /// profile when the job is active).

@@ -10,7 +10,7 @@ mod spec;
 pub mod swf;
 
 pub use feitelson::{sample, FeitelsonParams, SampledJob};
-pub use spec::{JobSpec, WorkloadSpec};
+pub use spec::{fit_spec, JobSpec, WorkloadSpec};
 
 use crate::apps::config::AppKind;
 use crate::util::rng::Rng;

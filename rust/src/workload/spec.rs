@@ -123,6 +123,28 @@ impl JobSpec {
     }
 }
 
+/// Clamp one job's size bounds onto a `nodes`-node pool: a job asking
+/// for more nodes than exist would never start.  The submitted size is
+/// re-rounded onto the job's factor chain while the chain is still
+/// rooted at the original size (e.g. 32 on a 24-node pool lands on 16,
+/// keeping resizes power-of-factor).  Idempotent — the campaign runner
+/// applies it per scenario cluster, and the federated meta-scheduler
+/// re-applies it per shard on routing and on every cross-shard steal.
+pub fn fit_spec(j: &mut JobSpec, nodes: usize) {
+    if j.max_procs > nodes {
+        j.max_procs = nodes;
+    }
+    if j.min_procs > j.max_procs {
+        j.min_procs = j.max_procs;
+    }
+    if j.procs > j.max_procs {
+        j.procs = j.clamp_procs(j.max_procs);
+    }
+    if j.pref_procs.is_some_and(|p| p > j.max_procs) {
+        j.pref_procs = Some(j.max_procs);
+    }
+}
+
 /// A workload: jobs sorted by arrival time (§7.1).
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {

@@ -1,0 +1,402 @@
+//! Federation subsystem tests: the meta-scheduler over sharded clusters.
+//!
+//! The load-bearing property is the determinism contract from
+//! `rust/src/federation/mod.rs`:
+//!
+//! 1. A **1-shard federation is bit-identical to the flat engine** —
+//!    event-log digests and makespan bits — across fixed/sync/async,
+//!    fault-free and under fault injection.  This proves the shard
+//!    generalization of `des::Engine` did not perturb the existing
+//!    single-cluster behavior that the golden fixtures lock.
+//! 2. A **multi-shard run is a pure function of (spec, seed, layout)**:
+//!    repeating a run reproduces every per-shard digest.
+//!
+//! On top of that: routing-policy behavior (least-loaded beats
+//! round-robin on a speed-skewed topology; locality homes users), work
+//! stealing (backlogged shards drain into idle ones and the makespan
+//! improves), and the campaign-level `[federation]` axis end to end.
+
+use dmr::campaign::{self, CampaignSpec};
+use dmr::des::{DesConfig, Engine};
+use dmr::dmr::SchedMode;
+use dmr::federation::{FedEngine, FederationConfig, FedRunResult, RoutingPolicy, ShardSpec};
+use dmr::metrics::RunSummary;
+use dmr::resilience::{
+    DrainSet, DrainWindow, FaultKind, FaultSpec, FaultTraceEvent, RecoveryConfig,
+    ResilienceConfig,
+};
+use dmr::rms::RmsConfig;
+use dmr::workload::{self, WorkloadSpec};
+
+fn modes() -> [(&'static str, SchedMode, bool); 3] {
+    [
+        ("fixed", SchedMode::Sync, false),
+        ("sync", SchedMode::Sync, true),
+        ("async", SchedMode::Async, true),
+    ]
+}
+
+fn base_cfg(sched: SchedMode, faulty: bool) -> DesConfig {
+    let resilience = if faulty {
+        ResilienceConfig {
+            faults: FaultSpec {
+                mtbf: 60_000.0,
+                mttr: 1_000.0,
+                scripted: vec![FaultTraceEvent { at: 300.0, node: 1, kind: FaultKind::Fail }],
+                drains: vec![DrainWindow {
+                    start: 1_500.0,
+                    end: 3_000.0,
+                    nodes: DrainSet::Count(6),
+                }],
+            },
+            recovery: RecoveryConfig { checkpoint_interval: 500.0, ..Default::default() },
+        }
+    } else {
+        ResilienceConfig::default()
+    };
+    DesConfig {
+        rms: RmsConfig { nodes: 64, ..Default::default() },
+        mode: sched,
+        resilience,
+        ..Default::default()
+    }
+}
+
+fn stream(flexible: bool) -> WorkloadSpec {
+    let w = workload::generate(40, 17);
+    if flexible {
+        w
+    } else {
+        w.as_fixed()
+    }
+}
+
+fn fed_run(cfg: DesConfig, fed: FederationConfig, w: &WorkloadSpec, label: &str) -> FedRunResult {
+    FedEngine::new(cfg, fed).run(w, label)
+}
+
+#[test]
+fn one_shard_federation_is_bit_identical_to_flat_engine() {
+    for faulty in [false, true] {
+        for (mode, sched, flexible) in modes() {
+            let w = stream(flexible);
+            let flat = Engine::new(base_cfg(sched, faulty)).run(&w, mode);
+            let fed = fed_run(
+                base_cfg(sched, faulty),
+                FederationConfig {
+                    shards: ShardSpec::uniform(64, 1),
+                    routing: RoutingPolicy::RoundRobin,
+                    steal: true, // must be inert at one shard
+                    shard_faults: None,
+                },
+                &w,
+                mode,
+            );
+            let tag = format!("{mode} faulty={faulty}");
+            assert_eq!(fed.shards.len(), 1);
+            assert_eq!(fed.events, flat.events, "{tag}: event count");
+            assert_eq!(
+                fed.shards[0].rms.log.digest(),
+                flat.rms.log.digest(),
+                "{tag}: event-log digest"
+            );
+            assert_eq!(
+                fed.makespan.to_bits(),
+                flat.makespan.to_bits(),
+                "{tag}: makespan bits"
+            );
+            assert_eq!(fed.shards[0].rms.completed_jobs(), 40, "{tag}: drained");
+            assert_eq!(fed.steals(), 0, "{tag}: no peers to steal from");
+            assert_eq!(
+                fed.resilience.node_failures, flat.resilience.node_failures,
+                "{tag}: fault replay"
+            );
+        }
+    }
+}
+
+#[test]
+fn multi_shard_runs_are_deterministic() {
+    let run = || {
+        let w = workload::generate(50, 23);
+        let r = fed_run(
+            base_cfg(SchedMode::Sync, true),
+            FederationConfig {
+                shards: vec![
+                    ShardSpec { nodes: 32, speed: 1.0, mtbf_scale: 1.0 },
+                    ShardSpec { nodes: 24, speed: 0.5, mtbf_scale: 2.0 },
+                    ShardSpec { nodes: 8, speed: 2.0, mtbf_scale: 0.5 },
+                ],
+                routing: RoutingPolicy::LeastLoaded,
+                steal: true,
+                shard_faults: None,
+            },
+            &w,
+            "det",
+        );
+        let digests: Vec<u64> = r.shards.iter().map(|s| s.rms.log.digest()).collect();
+        (r.events, digests, r.makespan.to_bits(), r.steals())
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same (spec, seed, layout) must replay bit-identically");
+    // and the heterogeneous layout actually engaged all shards
+    let (_, digests, _, _) = a;
+    assert_eq!(digests.len(), 3);
+}
+
+#[test]
+fn every_job_completes_exactly_once_across_shards() {
+    let w = workload::generate(60, 5);
+    let r = fed_run(
+        base_cfg(SchedMode::Sync, false),
+        FederationConfig {
+            shards: ShardSpec::uniform(64, 4),
+            routing: RoutingPolicy::RoundRobin,
+            steal: true,
+            shard_faults: None,
+        },
+        &w,
+        "complete",
+    );
+    let total: usize = r.shards.iter().map(|s| s.rms.completed_jobs()).sum();
+    assert_eq!(total, 60, "no job lost or duplicated by routing/stealing");
+    assert_eq!(r.user_jobs, 60);
+    let routed: u64 = r.shards.iter().map(|s| s.routed).sum();
+    assert_eq!(routed, 60, "every arrival routed exactly once");
+    for s in &r.shards {
+        assert!(s.rms.check_invariants(), "shard {} invariants", s.shard);
+    }
+}
+
+#[test]
+fn least_loaded_beats_round_robin_on_speed_skewed_topology() {
+    // Two equal-size shards, one 5x slower.  Round-robin alternates
+    // blindly, so half the stream lands on the slow shard; least-loaded
+    // sees the slow shard's backlog and steers work to the fast one.
+    // Rigid jobs + no stealing isolate the routing signal.
+    let shards = vec![
+        ShardSpec { nodes: 32, speed: 1.0, mtbf_scale: 1.0 },
+        ShardSpec { nodes: 32, speed: 0.2, mtbf_scale: 1.0 },
+    ];
+    let run = |routing: RoutingPolicy| {
+        let w = workload::generate(60, 11).as_fixed();
+        fed_run(
+            base_cfg(SchedMode::Sync, false),
+            FederationConfig { shards: shards.clone(), routing, steal: false, shard_faults: None },
+            &w,
+            routing.label(),
+        )
+    };
+    let rr = run(RoutingPolicy::RoundRobin);
+    let ll = run(RoutingPolicy::LeastLoaded);
+    assert!(
+        ll.makespan < rr.makespan,
+        "least-loaded ({:.0}s) must beat round-robin ({:.0}s) on a skewed topology",
+        ll.makespan,
+        rr.makespan
+    );
+    // and it does so by routing more work to the fast shard
+    assert!(
+        ll.shards[0].routed > rr.shards[0].routed,
+        "ll routed {} to the fast shard, rr routed {}",
+        ll.shards[0].routed,
+        rr.shards[0].routed
+    );
+}
+
+#[test]
+fn work_stealing_drains_a_backlogged_shard() {
+    // Home every job on shard 0 via locality routing (single user), so
+    // shard 1 idles unless the meta-scheduler steals.
+    let mut w = workload::generate(30, 9);
+    for j in &mut w.jobs {
+        j.user = 0;
+    }
+    let run = |steal: bool| {
+        fed_run(
+            base_cfg(SchedMode::Sync, false),
+            FederationConfig {
+                shards: ShardSpec::uniform(64, 2),
+                routing: RoutingPolicy::Locality,
+                steal,
+                shard_faults: None,
+            },
+            &w,
+            if steal { "steal" } else { "nosteal" },
+        )
+    };
+    let idle = run(false);
+    assert_eq!(idle.steals(), 0);
+    assert_eq!(idle.shards[1].routed, 0, "all arrivals home on shard 0");
+    assert_eq!(idle.shards[1].rms.completed_jobs(), 0);
+
+    let stealing = run(true);
+    assert!(stealing.steals() > 0, "the idle shard must pull queued work");
+    assert_eq!(stealing.shards[0].steals_out, stealing.shards[1].steals_in);
+    assert!(
+        stealing.shards[1].rms.completed_jobs() > 0,
+        "stolen jobs complete on the thief shard"
+    );
+    let total: usize = stealing.shards.iter().map(|s| s.rms.completed_jobs()).sum();
+    assert_eq!(total, 30);
+    assert!(
+        stealing.makespan < idle.makespan,
+        "stealing ({:.0}s) must beat the idle-shard run ({:.0}s)",
+        stealing.makespan,
+        idle.makespan
+    );
+}
+
+#[test]
+fn locality_routing_homes_users_on_their_shard() {
+    // 64 nodes in 2 shards of 32: every generated job (max 32 procs)
+    // fits its home shard, so the fall-forward never fires and user u
+    // lands exactly on shard u mod 2.
+    let w = workload::generate(40, 3);
+    let r = fed_run(
+        base_cfg(SchedMode::Sync, false),
+        FederationConfig {
+            shards: ShardSpec::uniform(64, 2),
+            routing: RoutingPolicy::Locality,
+            steal: false,
+            shard_faults: None,
+        },
+        &w,
+        "locality",
+    );
+    for s in &r.shards {
+        assert!(s.routed > 0, "both shards receive their users' jobs");
+        for j in dmr::metrics::extract(&s.rms) {
+            assert_eq!(
+                j.user as usize % 2,
+                s.shard,
+                "job {} (user {}) homed on the wrong shard",
+                j.name,
+                j.user
+            );
+        }
+    }
+}
+
+#[test]
+fn fed_summary_merges_shards_and_reports_per_shard_measures() {
+    let w = workload::generate(30, 7);
+    let r = fed_run(
+        base_cfg(SchedMode::Sync, false),
+        FederationConfig {
+            shards: ShardSpec::uniform(64, 2),
+            routing: RoutingPolicy::LeastLoaded,
+            steal: true,
+            shard_faults: None,
+        },
+        &w,
+        "summary",
+    );
+    let s = RunSummary::from_fed(&r, RoutingPolicy::LeastLoaded, true);
+    assert_eq!(s.jobs.len(), 30, "merged job records cover every shard");
+    let fed = s.federation.as_ref().expect("federated summary present");
+    assert_eq!(fed.shards, 2);
+    assert_eq!(fed.routing, "ll");
+    assert!(fed.steal);
+    assert_eq!(fed.per_shard.len(), 2);
+    assert_eq!(fed.per_shard.iter().map(|p| p.nodes).sum::<usize>(), 64);
+    assert_eq!(
+        fed.per_shard.iter().map(|p| p.jobs).sum::<usize>(),
+        30,
+        "per-shard job counts partition the workload"
+    );
+    for p in &fed.per_shard {
+        assert!((0.0..=100.0 + 1e-9).contains(&p.util_pct), "util {}", p.util_pct);
+        assert!(p.queue_depth >= 0.0);
+        assert!(p.availability > 0.0);
+    }
+    // flat summaries stay federation-free
+    let flat = Engine::new(base_cfg(SchedMode::Sync, false)).run(&w, "flat");
+    assert!(RunSummary::from_run(&flat).federation.is_none());
+}
+
+#[test]
+fn campaign_federation_axis_runs_end_to_end() {
+    let mut spec = CampaignSpec::from_toml_str(
+        r#"
+name = "fed-e2e"
+nodes = [64]
+modes = ["fixed", "sync"]
+seeds = [1, 2]
+[federation]
+shards = [2]
+routing = ["rr", "ll"]
+steal = true
+[[workload]]
+kind = "feitelson"
+jobs = 10
+"#,
+    )
+    .unwrap();
+    let dir = std::env::temp_dir().join(format!("dmr_fed_itest_{}", std::process::id()));
+    spec.output_dir = dir.clone();
+    assert_eq!(spec.matrix_size(), 2 * 2 * 2);
+    let res = campaign::run_campaign(&spec, 4).unwrap();
+    assert_eq!(res.records.len(), 8);
+    for r in &res.records {
+        let fed = r.summary.federation.as_ref().expect("every run is federated");
+        assert_eq!(fed.shards, 2);
+        assert!(r.plan.scenario.contains("-s2xrr") || r.plan.scenario.contains("-s2xll"));
+    }
+    let out = campaign::write_outputs(&spec, &res).unwrap();
+    let runs = std::fs::read_to_string(&out.runs_csv).unwrap();
+    let header = runs.lines().next().unwrap();
+    assert!(header.ends_with(
+        "fed_shards,fed_routing,fed_steals,shard_util_pct,shard_queue_depth,shard_steals"
+    ));
+    let row = runs.lines().nth(1).unwrap();
+    assert!(row.contains(",2,rr,") || row.contains(",2,ll,"), "fed cells present: {row}");
+    assert!(row.contains(';'), "per-shard cells are ;-joined: {row}");
+    let agg = std::fs::read_to_string(&out.agg_csv).unwrap();
+    let agg_header = agg.lines().next().unwrap();
+    assert!(agg_header.ends_with("fed_shards,fed_steals_mean,shard_util_mean_pct"));
+    let json = std::fs::read_to_string(&out.agg_json).unwrap();
+    assert!(json.contains("\"federation\""), "aggregate JSON carries the federation object");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn one_shard_campaign_matches_flat_campaign_bit_for_bit() {
+    let flat_toml = r#"
+name = "flatbase"
+nodes = [64]
+modes = ["fixed", "sync", "async"]
+seeds = [1, 2]
+[[workload]]
+kind = "feitelson"
+jobs = 12
+"#;
+    let fed_toml = r#"
+name = "fedbase"
+nodes = [64]
+modes = ["fixed", "sync", "async"]
+seeds = [1, 2]
+[federation]
+shards = [1]
+[[workload]]
+kind = "feitelson"
+jobs = 12
+"#;
+    let flat_spec = CampaignSpec::from_toml_str(flat_toml).unwrap();
+    let fed_spec = CampaignSpec::from_toml_str(fed_toml).unwrap();
+    let flat = campaign::run_campaign(&flat_spec, 4).unwrap();
+    let fed = campaign::run_campaign(&fed_spec, 4).unwrap();
+    assert_eq!(flat.records.len(), fed.records.len());
+    for (a, b) in flat.records.iter().zip(&fed.records) {
+        assert_eq!(
+            a.summary.makespan.to_bits(),
+            b.summary.makespan.to_bits(),
+            "{}: 1-shard federated campaign must equal the flat campaign",
+            a.plan.label
+        );
+        assert_eq!(a.summary.util_mean.to_bits(), b.summary.util_mean.to_bits());
+        let fb = b.summary.federation.as_ref().unwrap();
+        assert_eq!(fb.shards, 1);
+    }
+}

@@ -1,0 +1,128 @@
+//! SWF `user` field (field 12) coverage: malformed and missing user ids,
+//! traces with more users than the synthetic generator's four, and the
+//! FairShare strategy's determinism on a user-bearing SWF workload with
+//! soft deadlines (`deadline_slack`).
+//!
+//! The traces are inline strings fed through [`dmr::workload::swf::parse`]
+//! — no fixture files on disk.
+
+use dmr::des::{DesConfig, Engine};
+use dmr::metrics::RunSummary;
+use dmr::rms::{PolicyStrategy, RmsConfig};
+use dmr::workload::swf::{self, SwfOptions};
+use dmr::workload::WorkloadSpec;
+
+/// Eight completed jobs from six distinct users (field 12 = 10, 20, 30,
+/// 40, 50, 60), plus the user-field edge cases:
+/// * job 7: user id `-1` (explicitly unknown),
+/// * job 8: non-numeric user id (`xx`),
+/// * job 9: only 11 fields — the user column is absent entirely.
+const TRACE: &str = "\
+; inline user-bearing trace
+1 0 1 100 16 -1 -1 16 120 -1 1 10 1 1 1 -1 -1 -1
+2 10 1 200 8 -1 -1 8 240 -1 1 20 1 1 1 -1 -1 -1
+3 20 1 150 8 -1 -1 8 160 -1 1 30 1 1 1 -1 -1 -1
+4 30 1 120 16 -1 -1 16 130 -1 1 40 1 2 1 -1 -1 -1
+5 40 1 180 4 -1 -1 4 190 -1 1 50 1 2 1 -1 -1 -1
+6 50 1 160 8 -1 -1 8 170 -1 1 60 1 3 1 -1 -1 -1
+7 60 1 140 8 -1 -1 8 150 -1 1 -1 1 3 1 -1 -1 -1
+8 70 1 130 4 -1 -1 4 140 -1 1 xx 1 3 1 -1 -1 -1
+9 80 1 110 4 -1 -1 4 120 -1 1
+";
+
+fn workload(slack: Option<f64>) -> WorkloadSpec {
+    let trace = swf::parse(TRACE);
+    let opts = SwfOptions {
+        rescale_nodes: Some(32),
+        malleable_fraction: 0.5,
+        time_scale: 0.05,
+        ..Default::default()
+    };
+    let w = swf::to_workload(&trace, &opts, 3);
+    match slack {
+        Some(s) => w.with_deadlines(s),
+        None => w,
+    }
+}
+
+#[test]
+fn user_ids_parse_with_unknowns_mapped_to_zero() {
+    let trace = swf::parse(TRACE);
+    assert_eq!(trace.stats.malformed, 0, "all lines have >= 9 fields");
+    assert_eq!(trace.records.len(), 9);
+    let user_of = |id: u64| trace.records.iter().find(|r| r.job_id == id).unwrap().user;
+    assert_eq!(user_of(1), 10);
+    assert_eq!(user_of(6), 60);
+    assert_eq!(user_of(7), -1, "explicit -1 stays unknown");
+    assert_eq!(user_of(8), -1, "garbage user id maps to unknown");
+    assert_eq!(user_of(9), -1, "absent user column maps to unknown");
+
+    // materialization folds every unknown onto user 0
+    let w = workload(None);
+    assert_eq!(w.jobs.len(), 9);
+    let unknown = w
+        .jobs
+        .iter()
+        .filter(|j| j.user == 0)
+        .map(|j| j.name.clone())
+        .collect::<Vec<_>>();
+    assert_eq!(unknown, vec!["swf-00007", "swf-00008", "swf-00009"]);
+}
+
+#[test]
+fn more_than_four_distinct_users_survive_materialization() {
+    // The synthetic generator deals users 0..4; real traces carry many
+    // more, and the per-user fairness path must not clamp them.
+    let w = workload(None);
+    let mut users: Vec<u32> = w.jobs.iter().map(|j| j.user).collect();
+    users.sort_unstable();
+    users.dedup();
+    assert_eq!(users, vec![0, 10, 20, 30, 40, 50, 60], "7 distinct users");
+
+    let cfg = DesConfig {
+        rms: RmsConfig { nodes: 32, strategy: PolicyStrategy::FairShare, ..Default::default() },
+        ..Default::default()
+    };
+    let r = Engine::new(cfg).run(&w, "users");
+    assert_eq!(r.rms.completed_jobs(), 9);
+    let s = RunSummary::from_run(&r);
+    let mut seen: Vec<u32> = s.jobs.iter().map(|j| j.user).collect();
+    seen.sort_unstable();
+    seen.dedup();
+    assert_eq!(seen.len(), 7, "all users reach the job records");
+    assert!(
+        s.fairness_jain > 0.0 && s.fairness_jain <= 1.0 + 1e-12,
+        "jain over 7 users: {}",
+        s.fairness_jain
+    );
+}
+
+#[test]
+fn fair_share_is_deterministic_on_user_bearing_swf_with_deadlines() {
+    let run = |strategy: PolicyStrategy| {
+        let w = workload(Some(2.0));
+        assert_eq!(w.jobs.len(), 9);
+        assert!(w.jobs.iter().all(|j| j.deadline.is_some()), "slack decorates every job");
+        let cfg = DesConfig {
+            rms: RmsConfig { nodes: 32, strategy, ..Default::default() },
+            ..Default::default()
+        };
+        let r = Engine::new(cfg).run(&w, strategy.label());
+        assert_eq!(r.rms.completed_jobs(), 9, "{}: workload drains", strategy.label());
+        (r.events, r.rms.log.digest(), r.makespan.to_bits())
+    };
+    for strategy in [PolicyStrategy::FairShare, PolicyStrategy::DeadlineAware] {
+        let a = run(strategy);
+        let b = run(strategy);
+        assert_eq!(a, b, "{}: same trace + seed must replay bit-identically", strategy.label());
+    }
+    // the deadline decoration is visible in the summary
+    let w = workload(Some(2.0));
+    let cfg = DesConfig {
+        rms: RmsConfig { nodes: 32, strategy: PolicyStrategy::FairShare, ..Default::default() },
+        ..Default::default()
+    };
+    let s = RunSummary::from_run(&Engine::new(cfg).run(&w, "deadlines"));
+    assert_eq!(s.deadline_jobs, 9);
+    assert!(s.deadline_misses <= s.deadline_jobs);
+}
