@@ -9,8 +9,10 @@
 //! events included) must match exactly — CI fails on a determinism
 //! mismatch or a panic, never on timing.
 //!
-//! Quick mode (default, CI): 1k-job workloads on 256 nodes.
-//! `BENCH_FULL=1` adds 5k-job runs.
+//! Quick mode (default, CI): 1k-job workloads on 256 nodes, rigid +
+//! malleable + malleable-with-resize-faults (the `sync-rf` scenario puts
+//! the transactional resize path — aborts, rollbacks, retries — on the
+//! trajectory).  `BENCH_FULL=1` adds 5k-job runs.
 
 mod common;
 
@@ -21,7 +23,7 @@ use dmr::dmr::SchedMode;
 use dmr::metrics::report::{bench_checksum, bench_json, BenchRecord};
 use dmr::resilience::{
     DrainSet, DrainWindow, FaultKind, FaultSpec, FaultTraceEvent, RecoveryConfig,
-    ResilienceConfig,
+    ResilienceConfig, ResizeFaultSpec,
 };
 use dmr::rms::RmsConfig;
 use dmr::util::table::Table;
@@ -30,7 +32,13 @@ use dmr::workload::{self, WorkloadSpec};
 struct Case {
     jobs: usize,
     nodes: usize,
-    mode: &'static str, // fixed | sync
+    mode: &'static str, // fixed | sync | sync-rf (resize faults on)
+}
+
+impl Case {
+    fn resize_faults(&self) -> bool {
+        self.mode == "sync-rf"
+    }
 }
 
 /// A fault-heavy machine model: per-node MTBF tuned to land a few dozen
@@ -54,6 +62,7 @@ fn fault_model() -> ResilienceConfig {
             }],
         },
         recovery: RecoveryConfig { checkpoint_interval: 600.0, ..Default::default() },
+        ..Default::default()
     }
 }
 
@@ -66,11 +75,25 @@ fn materialize(case: &Case) -> WorkloadSpec {
     }
 }
 
-fn run_once(case: &Case, w: &WorkloadSpec) -> (u64, f64, f64, String, u64, u64) {
+fn run_once(case: &Case, w: &WorkloadSpec) -> (u64, f64, f64, String, u64, u64, u64) {
+    let mut resilience = fault_model();
+    if case.resize_faults() {
+        // The transactional-resize trajectory point: a third of the
+        // spawns fail, with a trickle of redistribution aborts and grant
+        // revocations on top of the machine faults above.
+        resilience.resize_faults = ResizeFaultSpec {
+            spawn_fail: 0.3,
+            redist_fail: 0.1,
+            revoke: 0.05,
+            max_retries: 2,
+            backoff_base: 30.0,
+            backoff_cap: 240.0,
+        };
+    }
     let cfg = DesConfig {
         rms: RmsConfig { nodes: case.nodes, ..Default::default() },
         mode: SchedMode::Sync,
-        resilience: fault_model(),
+        resilience,
         ..Default::default()
     };
     let t0 = Instant::now();
@@ -84,6 +107,7 @@ fn run_once(case: &Case, w: &WorkloadSpec) -> (u64, f64, f64, String, u64, u64) 
         checksum,
         r.resilience.node_failures,
         r.resilience.rescued + r.resilience.requeued,
+        r.resilience.resize_aborts,
     )
 }
 
@@ -92,11 +116,13 @@ fn main() {
     let mut cases = vec![
         Case { jobs: 1000, nodes: 256, mode: "fixed" },
         Case { jobs: 1000, nodes: 256, mode: "sync" },
+        Case { jobs: 1000, nodes: 256, mode: "sync-rf" },
     ];
     if common::full() {
         cases.extend([
             Case { jobs: 5000, nodes: 256, mode: "fixed" },
             Case { jobs: 5000, nodes: 256, mode: "sync" },
+            Case { jobs: 5000, nodes: 256, mode: "sync-rf" },
         ]);
     }
 
@@ -109,14 +135,20 @@ fn main() {
         let scenario = format!("faulty-feitelson{}-n{}-{}", case.jobs, case.nodes, case.mode);
         let w = materialize(case);
         // Cold run: determinism reference.  Warm run: the measurement.
-        let (ev_a, _, mk_a, sum_a, _, _) = run_once(case, &w);
-        let (ev_b, wall, mk_b, sum_b, failures, recoveries) = run_once(case, &w);
+        let (ev_a, _, mk_a, sum_a, _, _, aborts_a) = run_once(case, &w);
+        let (ev_b, wall, mk_b, sum_b, failures, recoveries, aborts_b) = run_once(case, &w);
         assert_eq!(
             sum_a, sum_b,
             "{scenario}: determinism checksum mismatch (makespans {mk_a} / {mk_b})"
         );
         assert_eq!(ev_a, ev_b, "{scenario}: event count mismatch");
         assert!(failures > 0, "{scenario}: fault injection never fired");
+        assert_eq!(aborts_a, aborts_b, "{scenario}: resize-abort count mismatch");
+        if case.resize_faults() {
+            assert!(aborts_b > 0, "{scenario}: resize faults never fired");
+        } else {
+            assert_eq!(aborts_b, 0, "{scenario}: unexpected resize aborts");
+        }
         t.row(vec![
             scenario.clone(),
             ev_b.to_string(),

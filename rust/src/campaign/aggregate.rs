@@ -57,6 +57,14 @@ pub struct ScenarioAgg {
     pub lost_node_s: Summary,
     /// Machine availability per run, percent.
     pub availability_pct: Summary,
+    /// Resize transactions begun per run (multi-phase path only).
+    pub resize_attempts: Summary,
+    /// Resize transactions aborted per run.
+    pub resize_aborts: Summary,
+    /// Time lost to aborted transactions + backoff waits per run, seconds.
+    pub retry_time_s: Summary,
+    /// Jobs degraded to non-malleable per run.
+    pub degraded_jobs: Summary,
     // --- federation measures (crate::federation) -----------------------
     /// Shard count of the scenario (1 for flat scenarios).
     pub fed_shards: usize,
@@ -91,6 +99,10 @@ impl ScenarioAgg {
             rework_s: Summary::new(),
             lost_node_s: Summary::new(),
             availability_pct: Summary::new(),
+            resize_attempts: Summary::new(),
+            resize_aborts: Summary::new(),
+            retry_time_s: Summary::new(),
+            degraded_jobs: Summary::new(),
             fed_shards: 1,
             fed_steals: Summary::new(),
             shard_util: Vec::new(),
@@ -118,6 +130,10 @@ impl ScenarioAgg {
         self.rework_s.push(s.resilience.rework_time);
         self.lost_node_s.push(s.resilience.lost_node_seconds);
         self.availability_pct.push(s.resilience.availability * 100.0);
+        self.resize_attempts.push(s.resilience.resize_attempts as f64);
+        self.resize_aborts.push(s.resilience.resize_aborts as f64);
+        self.retry_time_s.push(s.resilience.retry_time);
+        self.degraded_jobs.push(s.resilience.degraded_jobs as f64);
         match &s.federation {
             Some(f) => {
                 self.fed_shards = f.shards;

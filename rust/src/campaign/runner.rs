@@ -177,6 +177,7 @@ fn execute_plan(
                 checkpoint_interval: plan.checkpoint_interval,
                 ..Default::default()
             },
+            resize_faults: spec.resize_faults.spec(plan.spawn_fail),
         },
         ..Default::default()
     };
@@ -188,13 +189,49 @@ fn execute_plan(
                 shards: fp.shards.clone(),
                 routing: fp.routing,
                 steal: fp.steal,
-                shard_faults: None,
+                shard_faults: shard_fault_specs(spec, fp, &cfg),
             };
             let result = FedEngine::new(cfg, fed).run(&w, &plan.label);
             RunSummary::from_fed(&result, fp.routing, fp.steal)
         }
     };
     RunRecord { plan: plan.clone(), jobs, summary }
+}
+
+/// Build the per-shard fault list from the spec's
+/// `[[federation.shard_fault]]` overrides: entry `i` is the override
+/// targeting shard `i`, or the run's base fault spec with the shard's
+/// `mtbf_scale` applied — replicating the engine's own defaulting so
+/// overridden and defaulted shards mix in one run.  `None` (no overrides)
+/// keeps the engine-side defaulting path for every shard.
+fn shard_fault_specs(
+    spec: &CampaignSpec,
+    fp: &crate::campaign::spec::FedPlan,
+    cfg: &DesConfig,
+) -> Option<Vec<FaultSpec>> {
+    let overrides = &spec.federation.as_ref()?.shard_faults;
+    if overrides.is_empty() {
+        return None;
+    }
+    Some(
+        fp.shards
+            .iter()
+            .enumerate()
+            .map(|(i, sh)| match overrides.iter().find(|o| o.shard == i) {
+                Some(o) => FaultSpec {
+                    mtbf: o.mtbf,
+                    mttr: o.mttr.unwrap_or(spec.faults.mttr),
+                    scripted: spec.faults.scripted.clone(),
+                    drains: spec.faults.drains.clone(),
+                },
+                None => {
+                    let mut f = cfg.resilience.faults.clone();
+                    f.mtbf *= sh.mtbf_scale;
+                    f
+                }
+            })
+            .collect(),
+    )
 }
 
 fn materialize(
@@ -368,6 +405,95 @@ deadline_slack = 3.0
             makespans.iter().any(|m| (m - makespans[0]).abs() > 1e-9),
             "all four strategies produced identical makespans: {makespans:?}"
         );
+    }
+
+    #[test]
+    fn resize_fault_axis_flows_into_runs() {
+        // seeds = [7] + jobs = 30 on 64 nodes mirrors the engine-level
+        // resize-fault test's workload, so "resizes happen" is a given.
+        let spec = CampaignSpec::from_toml_str(
+            r#"
+name = "rf-runner"
+nodes = [64]
+modes = ["sync"]
+seeds = [7]
+[resize_faults]
+spawn_fail = [0.0, 1.0]
+max_retries = 1
+backoff_base = 5.0
+backoff_cap = 10.0
+[[workload]]
+kind = "feitelson"
+jobs = 30
+"#,
+        )
+        .unwrap();
+        let res = run_campaign(&spec, 2).unwrap();
+        assert_eq!(res.records.len(), 2);
+        assert_eq!(res.records[0].plan.spawn_fail, 0.0);
+        assert_eq!(res.records[1].plan.spawn_fail, 1.0);
+        let calm = &res.records[0].summary.resilience;
+        let hostile = &res.records[1].summary.resilience;
+        assert_eq!(calm.resize_attempts, 0, "inactive point keeps the legacy path");
+        assert_eq!(calm.resize_aborts, 0);
+        assert!(hostile.resize_attempts > 0, "active point counts transactions");
+        assert_eq!(
+            hostile.resize_aborts, hostile.resize_attempts,
+            "spawn_fail = 1 aborts every transaction"
+        );
+        assert!(hostile.degraded_jobs > 0);
+        for r in &res.records {
+            assert_eq!(r.summary.jobs.len(), 30, "workload drains under resize faults");
+        }
+    }
+
+    #[test]
+    fn shard_fault_overrides_reach_the_fed_engine() {
+        let toml = |sf: &str| {
+            format!(
+                r#"
+name = "shard-faults"
+nodes = [32]
+modes = ["sync"]
+seeds = [1]
+[faults]
+mttr = 300.0
+[federation]
+shards = [2]
+{sf}
+[[workload]]
+kind = "feitelson"
+jobs = 10
+"#
+            )
+        };
+        let quiet = CampaignSpec::from_toml_str(&toml("")).unwrap();
+        let noisy = CampaignSpec::from_toml_str(&toml(
+            "[[federation.shard_fault]]\nshard = 0\nmtbf = 400.0\nmttr = 200.0\n",
+        ))
+        .unwrap();
+
+        // the override list materializes into a full per-shard spec vec
+        let plan = &noisy.expand()[0];
+        let fp = plan.federation.as_ref().unwrap();
+        let cfg = DesConfig::default();
+        let specs = shard_fault_specs(&noisy, fp, &cfg).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].mtbf, 400.0);
+        assert_eq!(specs[0].mttr, 200.0);
+        assert_eq!(specs[1].mtbf, 0.0, "non-overridden shard keeps the base spec");
+        assert_eq!(specs[1].mttr, 300.0);
+        assert!(shard_fault_specs(&quiet, fp, &cfg).is_none(), "no overrides -> engine defaulting");
+
+        // and the targeted faults actually fire in the run
+        let q = run_campaign(&quiet, 1).unwrap();
+        let n = run_campaign(&noisy, 1).unwrap();
+        assert_eq!(q.records[0].summary.resilience.lost_node_seconds, 0.0);
+        assert!(
+            n.records[0].summary.resilience.lost_node_seconds > 0.0,
+            "shard-targeted MTBF override produced no downtime"
+        );
+        assert_eq!(n.records[0].summary.jobs.len(), 10, "workload still drains");
     }
 
     #[test]

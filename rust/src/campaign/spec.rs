@@ -12,7 +12,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::dmr::SchedMode;
 use crate::federation::{RoutingPolicy, ShardSpec};
-use crate::resilience::{DrainSet, DrainWindow, FaultKind, FaultTraceEvent};
+use crate::resilience::{DrainSet, DrainWindow, FaultKind, FaultTraceEvent, ResizeFaultSpec};
 use crate::rms::PolicyStrategy;
 use crate::util::json::Json;
 use crate::util::toml;
@@ -196,6 +196,60 @@ impl FaultAxis {
     }
 }
 
+/// The `[resize_faults]` sweep axis ([`crate::resilience::resize`]): the
+/// spawn-failure probability is a sweepable list; the other injection
+/// probabilities and the retry/backoff policy are shared by every
+/// scenario, so sweeping `spawn_fail` isolates one variable.
+#[derive(Debug, Clone)]
+pub struct ResizeFaultAxis {
+    /// Spawn-failure probabilities to sweep.  A scenario whose resolved
+    /// spec is inactive (all probabilities 0) keeps the legacy
+    /// single-event resize path.
+    pub spawn_fail: Vec<f64>,
+    /// Redistribution-abort probability.
+    pub redist_fail: f64,
+    /// Allocation-revocation probability.
+    pub revoke: f64,
+    /// Retry budget before a job degrades to non-malleable.
+    pub max_retries: u32,
+    /// First-retry backoff, seconds.
+    pub backoff_base: f64,
+    /// Backoff ceiling, seconds.
+    pub backoff_cap: f64,
+}
+
+impl Default for ResizeFaultAxis {
+    fn default() -> Self {
+        let d = ResizeFaultSpec::default();
+        ResizeFaultAxis {
+            spawn_fail: vec![0.0],
+            redist_fail: d.redist_fail,
+            revoke: d.revoke,
+            max_retries: d.max_retries,
+            backoff_base: d.backoff_base,
+            backoff_cap: d.backoff_cap,
+        }
+    }
+}
+
+impl ResizeFaultAxis {
+    fn swept(&self) -> bool {
+        self.spawn_fail.len() > 1
+    }
+
+    /// The concrete [`ResizeFaultSpec`] of one matrix point.
+    pub fn spec(&self, spawn_fail: f64) -> ResizeFaultSpec {
+        ResizeFaultSpec {
+            spawn_fail,
+            redist_fail: self.redist_fail,
+            revoke: self.revoke,
+            max_retries: self.max_retries,
+            backoff_base: self.backoff_base,
+            backoff_cap: self.backoff_cap,
+        }
+    }
+}
+
 /// The `[federation]` sweep axis ([`crate::federation`]): shard count and
 /// routing policy are sweepable lists; work stealing and an explicit
 /// heterogeneous topology are shared by every scenario.  Present only
@@ -215,6 +269,25 @@ pub struct FedAxis {
     /// collapses to this single layout, and every `nodes` axis entry must
     /// equal the topology's node total so scenario ids stay truthful.
     pub topology: Option<Vec<ShardSpec>>,
+    /// Per-shard fault overrides (`[[federation.shard_fault]]`) wired into
+    /// [`crate::federation::FederationConfig::shard_faults`].  Shards
+    /// without an entry keep the base `[faults]` spec with their
+    /// topology's `mtbf_scale` applied.
+    pub shard_faults: Vec<ShardFault>,
+}
+
+/// One `[[federation.shard_fault]]` entry: a fault-spec override targeting
+/// a single shard of every federated run in the campaign.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardFault {
+    /// Shard index the override applies to.
+    pub shard: usize,
+    /// Per-node MTBF on that shard, seconds (`0` = no random failures
+    /// there).
+    pub mtbf: f64,
+    /// Mean time to repair on that shard, seconds (`None` = inherit the
+    /// campaign's `faults.mttr`).
+    pub mttr: Option<f64>,
 }
 
 impl Default for FedAxis {
@@ -224,6 +297,7 @@ impl Default for FedAxis {
             routing: vec![RoutingPolicy::RoundRobin],
             steal: false,
             topology: None,
+            shard_faults: Vec::new(),
         }
     }
 }
@@ -283,6 +357,9 @@ pub struct RunPlan {
     pub mtbf: f64,
     /// Checkpoint interval of this matrix point.
     pub checkpoint_interval: f64,
+    /// Resize spawn-failure probability of this matrix point (the swept
+    /// component of the `[resize_faults]` axis).
+    pub spawn_fail: f64,
     /// Federation point (`None` = the flat single-cluster engine).
     pub federation: Option<FedPlan>,
 }
@@ -308,6 +385,8 @@ pub struct CampaignSpec {
     pub policy: PolicyAxis,
     /// Fault-injection axis.
     pub faults: FaultAxis,
+    /// Resize-transaction fault-injection axis.
+    pub resize_faults: ResizeFaultAxis,
     /// Federation axis (`None` = no `[federation]` block, flat runs).
     pub federation: Option<FedAxis>,
 }
@@ -440,6 +519,11 @@ impl CampaignSpec {
             Some(f) => parse_faults(f, max_nodes)?,
         };
 
+        let resize_faults = match v.get("resize_faults") {
+            None => ResizeFaultAxis::default(),
+            Some(f) => parse_resize_faults(f)?,
+        };
+
         let federation = match v.get("federation") {
             None => None,
             Some(f) => Some(parse_federation(f, &nodes)?),
@@ -461,6 +545,7 @@ impl CampaignSpec {
         no_duplicates(&policy.wide_optimization, "policy.wide_optimization")?;
         no_duplicates(&faults.mtbf, "faults.mtbf")?;
         no_duplicates(&faults.checkpoint_interval, "faults.checkpoint_interval")?;
+        no_duplicates(&resize_faults.spawn_fail, "resize_faults.spawn_fail")?;
         if let Some(fed) = &federation {
             no_duplicates(&fed.shards, "federation.shards")?;
             no_duplicates(&fed.routing, "federation.routing")?;
@@ -476,6 +561,7 @@ impl CampaignSpec {
             seeds,
             policy,
             faults,
+            resize_faults,
             federation,
         })
     }
@@ -493,6 +579,7 @@ impl CampaignSpec {
             * self.policy.wide_optimization.len()
             * self.faults.mtbf.len()
             * self.faults.checkpoint_interval.len()
+            * self.resize_faults.spawn_fail.len()
             * self
                 .federation
                 .as_ref()
@@ -502,8 +589,8 @@ impl CampaignSpec {
 
     /// Expand the cartesian matrix into the flat, deterministic run list.
     /// Order: federation (outer) → workload → nodes → mode → strategy →
-    /// policy knobs → faults → seed (inner), so all seeds of one scenario
-    /// are adjacent.
+    /// policy knobs → faults → resize faults → seed (inner), so all seeds
+    /// of one scenario are adjacent.
     pub fn expand(&self) -> Vec<RunPlan> {
         let mut plans = Vec::with_capacity(self.matrix_size());
         let pol = &self.policy;
@@ -528,6 +615,22 @@ impl CampaignSpec {
                 .collect()
         };
         let faults_swept = self.faults.swept();
+        let rf_swept = self.resize_faults.swept();
+        // Fault-axis points as a flat (mtbf, checkpoint, spawn_fail) list
+        // in axis order — machine faults outer, resize faults
+        // innermost-but-seed — so adding the resize axis keeps the loop
+        // nest below at its historical depth.
+        let fault_points: Vec<(f64, f64, f64)> = {
+            let mut pts = Vec::new();
+            for &mtbf in &self.faults.mtbf {
+                for &ckpt in &self.faults.checkpoint_interval {
+                    for &rf in &self.resize_faults.spawn_fail {
+                        pts.push((mtbf, ckpt, rf));
+                    }
+                }
+            }
+            pts
+        };
         // Federation points as a flat (shard count, routing, scenario
         // suffix) list — one degenerate point with an empty suffix when
         // the spec has no [federation] block, so flat campaigns keep
@@ -557,54 +660,59 @@ impl CampaignSpec {
                                 for &shrink_boost in &pol.shrink_boost {
                                     for &honor_preference in &pol.honor_preference {
                                         for &wide_optimization in &pol.wide_optimization {
-                                            for &mtbf in &self.faults.mtbf {
-                                                for &ckpt in &self.faults.checkpoint_interval {
-                                                    let mut scenario = format!(
-                                                        "{}-n{}-{}",
-                                                        labels[wi],
+                                            for &(mtbf, ckpt, spawn_fail) in &fault_points {
+                                                let mut scenario = format!(
+                                                    "{}-n{}-{}",
+                                                    labels[wi],
+                                                    nodes,
+                                                    mode.label()
+                                                );
+                                                if strat_swept {
+                                                    scenario.push('-');
+                                                    scenario.push_str(strategy.label());
+                                                }
+                                                if swept {
+                                                    scenario.push_str(&format!(
+                                                        "-bf{}-sb{}-hp{}-wo{}",
+                                                        u8::from(backfill),
+                                                        u8::from(shrink_boost),
+                                                        u8::from(honor_preference),
+                                                        u8::from(wide_optimization),
+                                                    ));
+                                                }
+                                                if faults_swept {
+                                                    scenario.push_str(&format!(
+                                                        "-mtbf{}-ck{}",
+                                                        fmt_axis(mtbf),
+                                                        fmt_axis(ckpt),
+                                                    ));
+                                                }
+                                                if rf_swept {
+                                                    scenario.push_str(&format!(
+                                                        "-rf{}",
+                                                        fmt_axis(spawn_fail),
+                                                    ));
+                                                }
+                                                scenario.push_str(fed_suffix);
+                                                for &seed in &self.seeds {
+                                                    plans.push(RunPlan {
+                                                        index: plans.len(),
+                                                        scenario: scenario.clone(),
+                                                        label: format!("{scenario}-s{seed}"),
+                                                        workload: wi,
                                                         nodes,
-                                                        mode.label()
-                                                    );
-                                                    if strat_swept {
-                                                        scenario.push('-');
-                                                        scenario.push_str(strategy.label());
-                                                    }
-                                                    if swept {
-                                                        scenario.push_str(&format!(
-                                                            "-bf{}-sb{}-hp{}-wo{}",
-                                                            u8::from(backfill),
-                                                            u8::from(shrink_boost),
-                                                            u8::from(honor_preference),
-                                                            u8::from(wide_optimization),
-                                                        ));
-                                                    }
-                                                    if faults_swept {
-                                                        scenario.push_str(&format!(
-                                                            "-mtbf{}-ck{}",
-                                                            fmt_axis(mtbf),
-                                                            fmt_axis(ckpt),
-                                                        ));
-                                                    }
-                                                    scenario.push_str(fed_suffix);
-                                                    for &seed in &self.seeds {
-                                                        plans.push(RunPlan {
-                                                            index: plans.len(),
-                                                            scenario: scenario.clone(),
-                                                            label: format!("{scenario}-s{seed}"),
-                                                            workload: wi,
-                                                            nodes,
-                                                            mode,
-                                                            seed,
-                                                            strategy,
-                                                            backfill,
-                                                            shrink_boost,
-                                                            honor_preference,
-                                                            wide_optimization,
-                                                            mtbf,
-                                                            checkpoint_interval: ckpt,
-                                                            federation: federation.clone(),
-                                                        });
-                                                    }
+                                                        mode,
+                                                        seed,
+                                                        strategy,
+                                                        backfill,
+                                                        shrink_boost,
+                                                        honor_preference,
+                                                        wide_optimization,
+                                                        mtbf,
+                                                        checkpoint_interval: ckpt,
+                                                        spawn_fail,
+                                                        federation: federation.clone(),
+                                                    });
                                                 }
                                             }
                                         }
@@ -829,6 +937,64 @@ fn parse_faults(f: &Json, max_nodes: usize) -> Result<FaultAxis> {
     Ok(FaultAxis { mtbf, mttr, checkpoint_interval, scripted, drains })
 }
 
+/// Parse the `[resize_faults]` section (see `scenarios/README.md` for the
+/// schema and `scenarios/resize_faults.toml` for a worked example).
+fn parse_resize_faults(f: &Json) -> Result<ResizeFaultAxis> {
+    let d = ResizeFaultAxis::default();
+    let spawn_fail =
+        f64_list(f.get("spawn_fail"), "resize_faults.spawn_fail")?.unwrap_or(d.spawn_fail);
+    if spawn_fail.is_empty() {
+        bail!("`resize_faults.spawn_fail` must not be empty");
+    }
+    // f64_list already rejects negatives/non-finites; cap the high side.
+    if let Some(&bad) = spawn_fail.iter().find(|&&p| p > 1.0) {
+        bail!("`resize_faults.spawn_fail` entry {bad} is not a probability in [0, 1]");
+    }
+    let prob = |key: &str, dv: f64| -> Result<f64> {
+        match f.get(key) {
+            None => Ok(dv),
+            Some(x) => {
+                let p = x
+                    .as_f64()
+                    .with_context(|| format!("`resize_faults.{key}` must be a number"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    bail!("`resize_faults.{key}` must be a probability in [0, 1] (got {p})");
+                }
+                Ok(p)
+            }
+        }
+    };
+    let redist_fail = prob("redist_fail", d.redist_fail)?;
+    let revoke = prob("revoke", d.revoke)?;
+    let max_retries = match f.get("max_retries") {
+        None => d.max_retries,
+        Some(x) => usize_scalar(Some(x), "resize_faults.max_retries")? as u32,
+    };
+    let pos = |key: &str, dv: f64| -> Result<f64> {
+        match f.get(key) {
+            None => Ok(dv),
+            Some(x) => {
+                let v = x
+                    .as_f64()
+                    .with_context(|| format!("`resize_faults.{key}` must be a number"))?;
+                if !(v.is_finite() && v > 0.0) {
+                    bail!("`resize_faults.{key}` must be positive (got {v})");
+                }
+                Ok(v)
+            }
+        }
+    };
+    let backoff_base = pos("backoff_base", d.backoff_base)?;
+    let backoff_cap = pos("backoff_cap", d.backoff_cap)?;
+    if backoff_cap < backoff_base {
+        bail!(
+            "`resize_faults.backoff_cap` ({backoff_cap}) must be >= \
+             `backoff_base` ({backoff_base})"
+        );
+    }
+    Ok(ResizeFaultAxis { spawn_fail, redist_fail, revoke, max_retries, backoff_base, backoff_cap })
+}
+
 /// Parse the `[federation]` section (see `scenarios/README.md` for the
 /// schema and `scenarios/federated_sweep.toml` for a worked example).
 /// `nodes` is the cluster-size axis: every shard count must divide into
@@ -916,7 +1082,51 @@ fn parse_federation(f: &Json, nodes: &[usize]) -> Result<FedAxis> {
         Some(Json::Bool(b)) => *b,
         Some(_) => bail!("`federation.steal` must be a boolean"),
     };
-    Ok(FedAxis { shards, routing, steal, topology })
+    let mut shard_faults: Vec<ShardFault> = Vec::new();
+    if let Some(sf) = f.get("shard_fault") {
+        // A shard index must exist in at least one swept layout; indices
+        // valid only for *some* shard counts are allowed — the runner
+        // defaults the missing shards on smaller layouts.
+        let max_shards = shards.iter().copied().max().unwrap_or(1);
+        for (i, ev) in sf
+            .as_arr()
+            .context("`[[federation.shard_fault]]` must be an array of tables")?
+            .iter()
+            .enumerate()
+        {
+            let shard = usize_scalar(ev.get("shard"), &format!("federation.shard_fault[{i}].shard"))?;
+            if shard >= max_shards {
+                bail!(
+                    "federation.shard_fault[{i}]: shard {shard} does not exist in any \
+                     swept layout (largest shard count is {max_shards})"
+                );
+            }
+            if shard_faults.iter().any(|s| s.shard == shard) {
+                bail!("federation.shard_fault[{i}]: shard {shard} listed more than once");
+            }
+            let mtbf = ev
+                .get("mtbf")
+                .and_then(|x| x.as_f64())
+                .with_context(|| format!("federation.shard_fault[{i}] needs a number `mtbf`"))?;
+            if !(mtbf.is_finite() && mtbf >= 0.0) {
+                bail!("federation.shard_fault[{i}]: `mtbf` must be non-negative");
+            }
+            let mttr = match ev.get("mttr") {
+                None => None,
+                Some(x) => {
+                    let m = x.as_f64().with_context(|| {
+                        format!("federation.shard_fault[{i}]: `mttr` must be a number")
+                    })?;
+                    if !(m.is_finite() && m >= 0.0) {
+                        bail!("federation.shard_fault[{i}]: `mttr` must be non-negative");
+                    }
+                    Some(m)
+                }
+            };
+            shard_faults.push(ShardFault { shard, mtbf, mttr });
+        }
+    }
+    Ok(FedAxis { shards, routing, steal, topology, shard_faults })
 }
 
 fn usize_list(v: Option<&Json>, what: &str) -> Result<Option<Vec<usize>>> {
@@ -1431,6 +1641,128 @@ jobs = 4
         ] {
             let doc = format!("{base}{faults}");
             assert!(CampaignSpec::from_toml_str(&doc).is_err(), "accepted: {faults}");
+        }
+    }
+
+    #[test]
+    fn resize_fault_axis_parses_and_expands() {
+        let toml = r#"
+name = "rf"
+nodes = [32]
+modes = ["fixed", "sync"]
+seeds = [1, 2]
+[resize_faults]
+spawn_fail = [0.0, 0.25]
+redist_fail = 0.05
+revoke = 0.02
+max_retries = 2
+backoff_base = 20.0
+backoff_cap = 120.0
+[[workload]]
+kind = "feitelson"
+jobs = 8
+"#;
+        let s = CampaignSpec::from_toml_str(toml).unwrap();
+        assert_eq!(s.resize_faults.spawn_fail, vec![0.0, 0.25]);
+        assert_eq!(s.resize_faults.max_retries, 2);
+        let point = s.resize_faults.spec(0.25);
+        assert_eq!(point.spawn_fail, 0.25);
+        assert_eq!(point.redist_fail, 0.05);
+        assert_eq!(point.backoff_base, 20.0);
+        assert!(point.is_active());
+        assert!(
+            s.resize_faults.spec(0.0).is_active(),
+            "nonzero redist/revoke probabilities keep the spawn_fail=0 point active"
+        );
+
+        // spawn_fail doubles the matrix and shows up in scenario ids
+        assert_eq!(s.matrix_size(), 2 * 2 * 2 * 2);
+        let plans = s.expand();
+        assert_eq!(plans.len(), 16);
+        assert!(plans[0].scenario.ends_with("-rf0"), "{}", plans[0].scenario);
+        assert!(plans[2].scenario.ends_with("-rf0.25"), "{}", plans[2].scenario);
+        assert_eq!(plans[0].spawn_fail, 0.0);
+        assert_eq!(plans[2].spawn_fail, 0.25);
+        // seeds stay adjacent within one resize-fault point
+        assert_eq!(plans[0].scenario, plans[1].scenario);
+
+        // defaults: no [resize_faults] section -> single inactive point,
+        // no scenario suffix, legacy resize path
+        let plain = CampaignSpec::from_toml_str(
+            "name = \"p\"\n[[workload]]\nkind = \"feitelson\"\njobs = 2\n",
+        )
+        .unwrap();
+        assert_eq!(plain.resize_faults.spawn_fail, vec![0.0]);
+        assert!(!plain.resize_faults.spec(0.0).is_active());
+        assert!(!plain.expand()[0].scenario.contains("-rf"));
+
+        let base = "name = \"x\"\n[[workload]]\nkind = \"feitelson\"\njobs = 1\n";
+        for bad in [
+            "[resize_faults]\nspawn_fail = [1.5]\n",
+            "[resize_faults]\nspawn_fail = [-0.1]\n",
+            "[resize_faults]\nspawn_fail = []\n",
+            "[resize_faults]\nspawn_fail = [0.1, 0.1]\n", // duplicate
+            "[resize_faults]\nredist_fail = 2.0\n",
+            "[resize_faults]\nrevoke = -1.0\n",
+            "[resize_faults]\nmax_retries = -1\n",
+            "[resize_faults]\nmax_retries = 1.5\n",
+            "[resize_faults]\nbackoff_base = 0.0\n",
+            "[resize_faults]\nbackoff_base = 60.0\nbackoff_cap = 30.0\n",
+        ] {
+            let doc = format!("{base}{bad}");
+            assert!(CampaignSpec::from_toml_str(&doc).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn shard_fault_overrides_parse_and_bad_specs_rejected() {
+        let toml = r#"
+name = "sf"
+nodes = [64]
+modes = ["sync"]
+seeds = [1]
+[federation]
+shards = [4]
+[[federation.shard_fault]]
+shard = 1
+mtbf = 8000.0
+mttr = 600.0
+[[federation.shard_fault]]
+shard = 3
+mtbf = 0.0
+[[workload]]
+kind = "feitelson"
+jobs = 4
+"#;
+        let s = CampaignSpec::from_toml_str(toml).unwrap();
+        let fed = s.federation.as_ref().unwrap();
+        assert_eq!(fed.shard_faults.len(), 2);
+        assert_eq!(
+            fed.shard_faults[0],
+            ShardFault { shard: 1, mtbf: 8000.0, mttr: Some(600.0) }
+        );
+        assert_eq!(fed.shard_faults[1], ShardFault { shard: 3, mtbf: 0.0, mttr: None });
+
+        // no [[federation.shard_fault]] tables -> empty override list
+        let plain = CampaignSpec::from_toml_str(
+            "name = \"p\"\n[federation]\nshards = [2]\n[[workload]]\nkind = \"feitelson\"\njobs = 2\n",
+        )
+        .unwrap();
+        assert!(plain.federation.as_ref().unwrap().shard_faults.is_empty());
+
+        let base = "name = \"x\"\n[[workload]]\nkind = \"feitelson\"\njobs = 1\n\
+                    [federation]\nshards = [2]\n";
+        for bad in [
+            "[[federation.shard_fault]]\nmtbf = 100.0\n", // missing shard
+            "[[federation.shard_fault]]\nshard = 2\nmtbf = 100.0\n", // beyond every layout
+            "[[federation.shard_fault]]\nshard = 0\n",    // missing mtbf
+            "[[federation.shard_fault]]\nshard = 0\nmtbf = -1.0\n",
+            "[[federation.shard_fault]]\nshard = 0\nmtbf = 1.0\nmttr = -2.0\n",
+            "[[federation.shard_fault]]\nshard = 0\nmtbf = 1.0\n\
+             [[federation.shard_fault]]\nshard = 0\nmtbf = 2.0\n", // duplicate shard
+        ] {
+            let doc = format!("{base}{bad}");
+            assert!(CampaignSpec::from_toml_str(&doc).is_err(), "accepted: {bad}");
         }
     }
 

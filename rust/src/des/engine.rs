@@ -55,7 +55,10 @@ use super::sched_cost::CostModel;
 use crate::cluster::NodeState;
 use crate::dmr::{Inhibitor, SchedMode};
 use crate::federation::{FedRunResult, FederationConfig, RoutingPolicy, ShardRun};
-use crate::resilience::{feasible_shrink, FaultKind, FaultSpec, ResilienceConfig, ResilienceStats};
+use crate::resilience::{
+    feasible_shrink, resize, FaultKind, FaultSpec, ResilienceConfig, ResilienceStats,
+    ResizeFaultSpec,
+};
 use crate::rms::{Action, DmrOutcome, DmrRequest, Rms, RmsConfig};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
@@ -136,6 +139,10 @@ enum EvKind {
     Check,
     Complete,
     ResizeDone { to: usize, expand: bool, began: Time },
+    /// One phase boundary of an active resize transaction (multi-phase
+    /// path only; `step` is a `resilience::resize::PHASE_*` code).  The
+    /// transaction state itself lives on the [`SimJob`].
+    ResizePhase { step: u8 },
     ExpandRetry { to: usize, began: Time, deadline: Time },
     /// Machine events (job field is 0): a node fails; `auto` failures
     /// belong to the MTBF sampling chain and schedule their own repair +
@@ -215,6 +222,31 @@ impl SimSpec {
     }
 }
 
+/// An in-flight multi-phase resize transaction (allocation grant → spawn
+/// → redistribute → commit).  Exists only on the fault-injected path —
+/// with an inactive [`ResizeFaultSpec`] resizes keep the legacy single
+/// `ResizeDone` event and this is never constructed.
+#[derive(Debug, Clone, Copy)]
+struct ResizeTxn {
+    /// Target process count.
+    to: usize,
+    /// Pre-transaction process count (the rollback target).
+    from: usize,
+    expand: bool,
+    /// When the granting DMR call happened (expand-time measurement base).
+    began: Time,
+    /// Fault outcomes for this transaction, pre-drawn at launch and
+    /// indexed by phase code (grant / spawn / redistribute).
+    fails: [bool; 3],
+    /// Absolute end of the spawn phase: `launch + action_sched`.
+    spawn_at: Time,
+    /// Absolute end of the redistribution phase — computed as
+    /// `launch + sched + transfer` with the exact expression the legacy
+    /// path uses, so a fault-free transaction commits on the very same
+    /// float the single `ResizeDone` event would have carried.
+    commit_at: Time,
+}
+
 struct SimJob {
     spec: SimSpec,
     procs: usize,
@@ -224,6 +256,11 @@ struct SimJob {
     epoch: u64,
     inhibitor: Inhibitor,
     pending_async: Option<Action>,
+    /// Active resize transaction, if any (multi-phase path only).
+    txn: Option<ResizeTxn>,
+    /// Consecutive aborted transactions; reset on commit, drives the
+    /// bounded exponential backoff and the degradation threshold.
+    resize_attempt: u32,
     /// Memoized `iter_time` at `memo_procs` processes.
     memo_procs: usize,
     memo_iter: f64,
@@ -278,6 +315,15 @@ struct Shard {
     /// Whether any fault source is configured; `false` keeps the
     /// fault-free hot path free of checkpoint bookkeeping.
     faults_active: bool,
+    /// Resize-transaction fault injection + retry policy.
+    resize_faults: ResizeFaultSpec,
+    /// Dedicated RNG for transaction fault draws — its own stream, so an
+    /// active resize-fault spec perturbs neither the cost jitter nor the
+    /// machine-fault timeline.
+    resize_rng: Rng,
+    /// Whether the spec injects anything; `false` keeps every resize on
+    /// the legacy single-event path (byte-identical event stream).
+    resize_active: bool,
     /// Relative node speed (reporting only; the reciprocal below does the
     /// work).
     speed: f64,
@@ -316,12 +362,18 @@ impl Shard {
         let salt = shard_salt(id);
         let faults_active = faults.is_active();
         let drain_nodes = faults.drains.iter().map(|w| w.nodes.node_ids(nodes)).collect();
+        let resize_faults = cfg.resilience.resize_faults.clone();
+        let resize_rng = resize_faults.rng(cfg.seed ^ salt);
+        let resize_active = resize_faults.is_active();
         Shard {
             rms: Rms::new(rms_cfg),
             rng: Rng::new(cfg.seed ^ salt),
             fault_rng: faults.rng(cfg.seed ^ salt),
             faults,
             faults_active,
+            resize_faults,
+            resize_rng,
+            resize_active,
             speed,
             inv_speed: 1.0 / speed,
             sims: Vec::new(),
@@ -476,6 +528,10 @@ impl Engine {
             merged.rescued += sh.stats.rescued;
             merged.requeued += sh.stats.requeued;
             merged.rework_time += sh.stats.rework_time;
+            merged.resize_attempts += sh.stats.resize_attempts;
+            merged.resize_aborts += sh.stats.resize_aborts;
+            merged.retry_time += sh.stats.retry_time;
+            merged.degraded_jobs += sh.stats.degraded_jobs;
             lost += sh.stats.lost_node_seconds;
             capacity += sh.rms.cluster.total() as f64 * makespan;
         }
@@ -563,6 +619,7 @@ impl Engine {
                 EvKind::ResizeDone { to, expand, began } => {
                     self.on_resize_done(ev, to, expand, began)
                 }
+                EvKind::ResizePhase { step } => self.on_resize_phase(ev, step),
                 EvKind::ExpandRetry { to, began, deadline } => {
                     self.on_expand_retry(ev, to, began, deadline)
                 }
@@ -779,6 +836,7 @@ impl Engine {
                     j.procs = procs;
                     j.inhibitor = Inhibitor::new(period);
                     j.pending_async = None;
+                    j.txn = None;
                 }
                 self.resume_sim(s, slot, st.job);
                 continue;
@@ -792,6 +850,8 @@ impl Engine {
                 epoch: 0,
                 inhibitor: Inhibitor::new(period),
                 pending_async: None,
+                txn: None,
+                resize_attempt: 0,
                 memo_procs: procs,
                 memo_iter: iter_t,
                 run_time_acc: 0.0,
@@ -958,7 +1018,9 @@ impl Engine {
         }
     }
 
-    /// Pause the job and schedule the commit of a granted resize.
+    /// Pause the job and launch the granted resize: the legacy
+    /// single-event commit when resize faults are inactive, the
+    /// multi-phase transaction otherwise.
     fn begin_resize(&mut self, s: usize, slot: usize, id: JobId, to: usize, expand: bool) {
         let began = self.now;
         let (from, epoch) = {
@@ -968,19 +1030,153 @@ impl Engine {
             j.epoch += 1;
             (from, j.epoch)
         };
+        self.launch_resize(s, slot, id, to, from, expand, began, epoch);
+    }
+
+    /// Schedule the commit — or the phase chain — of a resize the RMS has
+    /// already granted.  The sim must be paused with `epoch` current.
+    #[allow(clippy::too_many_arguments)]
+    fn launch_resize(
+        &mut self,
+        s: usize,
+        slot: usize,
+        id: JobId,
+        to: usize,
+        from: usize,
+        expand: bool,
+        began: Time,
+        epoch: u64,
+    ) {
         let delta = to.abs_diff(from);
         let sched = self.cfg.costs.action_sched(delta, &mut self.shards[s].rng);
         let transfer = self
             .cfg
             .costs
             .resize_transfer(self.cfg.exec.resize_bytes, from, to);
-        self.push(
-            self.now + sched + transfer,
-            s,
-            id,
-            epoch,
-            EvKind::ResizeDone { to, expand, began },
-        );
+        if !self.shards[s].resize_active {
+            // Legacy single-event path: byte-identical to the
+            // pre-transaction engine when the fault spec is inactive.
+            self.push(
+                self.now + sched + transfer,
+                s,
+                id,
+                epoch,
+                EvKind::ResizeDone { to, expand, began },
+            );
+            return;
+        }
+        // Multi-phase transaction: grant → spawn → redistribute → commit,
+        // with this transaction's fault outcomes pre-drawn from the
+        // dedicated stream (always exactly three draws, so the stream
+        // position is a pure function of the transaction count).
+        let grant_at = self.now + sched * self.cfg.costs.grant_frac;
+        let spawn_at = self.now + sched;
+        let commit_at = self.now + sched + transfer;
+        let sh = &mut self.shards[s];
+        let fails = sh.resize_faults.draw(&mut sh.resize_rng);
+        sh.stats.resize_attempts += 1;
+        sh.rms
+            .log
+            .push(crate::rms::RmsEvent::ResizeBegin { job: id, time: self.now, from, to });
+        sh.sims[slot].txn = Some(ResizeTxn { to, from, expand, began, fails, spawn_at, commit_at });
+        self.push(grant_at, s, id, epoch, EvKind::ResizePhase { step: resize::PHASE_GRANT });
+    }
+
+    /// One phase boundary of an active transaction: the phase either
+    /// failed (roll back, then retry with backoff — or degrade) or
+    /// completed (advance the chain; the last phase commits).
+    fn on_resize_phase(&mut self, ev: Ev, step: u8) {
+        let s = ev.shard;
+        let Some(slot) = self.shards[s].slot(ev.job) else { return };
+        if self.shards[s].sims[slot].epoch != ev.epoch {
+            return;
+        }
+        let Some(txn) = self.shards[s].sims[slot].txn else {
+            return; // defensive: transaction already resolved
+        };
+        if txn.fails[step as usize] {
+            self.abort_txn(s, slot, ev.job, txn, step);
+            return;
+        }
+        match step {
+            resize::PHASE_GRANT => self.push(
+                txn.spawn_at,
+                s,
+                ev.job,
+                ev.epoch,
+                EvKind::ResizePhase { step: resize::PHASE_SPAWN },
+            ),
+            resize::PHASE_SPAWN => self.push(
+                txn.commit_at,
+                s,
+                ev.job,
+                ev.epoch,
+                EvKind::ResizePhase { step: resize::PHASE_REDIST },
+            ),
+            _ => {
+                // Redistribution survived: commit the transaction.  The
+                // fault-free timing matches the legacy path exactly
+                // (grant + spawn = action_sched, redistribute = transfer).
+                self.shards[s].sims[slot].txn = None;
+                self.shards[s].sims[slot].resize_attempt = 0;
+                if txn.expand {
+                    self.shards[s].rms.commit_resize(ev.job, self.now);
+                    self.actions.expand.push(self.now - txn.began);
+                } else {
+                    self.shards[s].rms.commit_shrink_to(ev.job, txn.to, self.now);
+                    self.actions.shrink.push(self.now - txn.began);
+                }
+                self.shards[s].rms.log.push(crate::rms::RmsEvent::ResizeCommit {
+                    job: ev.job,
+                    time: self.now,
+                    procs: txn.to,
+                });
+                self.shards[s].sims[slot].procs = txn.to;
+                self.resume_sim(s, slot, ev.job);
+                // A shrink may let queued jobs start.
+                self.try_schedule(s);
+            }
+        }
+    }
+
+    /// Roll an aborted transaction back to the pre-transaction process
+    /// set, then retry after a bounded exponential backoff — or, when the
+    /// retry budget is exhausted, degrade the job to non-malleable.
+    fn abort_txn(&mut self, s: usize, slot: usize, id: JobId, txn: ResizeTxn, phase: u8) {
+        self.shards[s].sims[slot].txn = None;
+        self.shards[s].sims[slot].pending_async = None;
+        self.shards[s].stats.resize_aborts += 1;
+        if txn.expand {
+            self.shards[s].rms.abort_expand_to(id, txn.from, self.now, phase);
+        } else {
+            self.shards[s].rms.abort_shrink(id, self.now, phase);
+        }
+        let wasted = self.now - txn.began;
+        let attempt = self.shards[s].sims[slot].resize_attempt + 1;
+        self.shards[s].sims[slot].resize_attempt = attempt;
+        if attempt > self.shards[s].resize_faults.max_retries {
+            // Out of retries: the job keeps running at its old size,
+            // non-malleable for the rest of the run — the RMS marks it
+            // degraded (every policy sees NoAction) and the sim stops
+            // scheduling DMR checks.
+            self.shards[s].stats.retry_time += wasted;
+            self.shards[s].stats.degraded_jobs += 1;
+            self.shards[s].rms.degrade(id, self.now);
+            self.shards[s].sims[slot].spec.malleable = false;
+        } else {
+            // Resume at the old size immediately; the escalated inhibitor
+            // holds the next DMR call until the backoff expires.  (A job
+            // with a zero sched-period cannot express a future gate — it
+            // simply retries at its next natural check.)
+            let backoff = self.shards[s].resize_faults.backoff(attempt);
+            self.shards[s].stats.retry_time += wasted + backoff;
+            let period = self.shards[s].sims[slot].spec.sched_period;
+            self.shards[s].sims[slot].inhibitor =
+                Inhibitor::restore(period, Some(self.now + backoff - period));
+        }
+        self.resume_sim(s, slot, id);
+        // An aborted expansion released the granted nodes.
+        self.try_schedule(s);
     }
 
     fn on_resize_done(&mut self, ev: Ev, to: usize, expand: bool, began: Time) {
@@ -1017,19 +1213,7 @@ impl Engine {
                     j.epoch += 1;
                     (j.procs, j.epoch)
                 };
-                let delta = to.abs_diff(from);
-                let sched = self.cfg.costs.action_sched(delta, &mut self.shards[s].rng);
-                let transfer = self
-                    .cfg
-                    .costs
-                    .resize_transfer(self.cfg.exec.resize_bytes, from, to);
-                self.push(
-                    self.now + sched + transfer,
-                    s,
-                    ev.job,
-                    epoch,
-                    EvKind::ResizeDone { to, expand: true, began },
-                );
+                self.launch_resize(s, slot, ev.job, to, from, true, began, epoch);
             }
             _ => {
                 if self.now + 1.0 <= deadline {
@@ -1165,12 +1349,28 @@ impl Engine {
         };
         self.shards[s].stats.rework_time += lost;
 
+        // A machine fault landing on the job's allocation during an
+        // active transaction aborts it *explicitly* (digest-covered
+        // `ResizeAbort` with the node-fault phase code) instead of being
+        // silently absorbed.  The retry attempt is not charged — the
+        // resize protocol itself did not fail — and the recovery below
+        // (rescue or requeue) supersedes the rollback.
+        if let Some(txn) = self.shards[s].sims[slot].txn.take() {
+            self.shards[s].stats.resize_aborts += 1;
+            self.shards[s].stats.retry_time += self.now - txn.began;
+            self.shards[s].rms.log.push(crate::rms::RmsEvent::ResizeAbort {
+                job,
+                time: self.now,
+                phase: resize::PHASE_NODE_FAULT,
+            });
+        }
         // A failure during an in-flight resize abandons it: the pending
-        // ResizeDone goes stale via the epoch bump below, and the resize
-        // is not recorded in ActionStats (the recovery below is the
-        // action that actually happened).  Feasibility is judged from the
-        // *committed* size (the sim's); the cost uses the RMS's actual
-        // pre-failure holding, which can be larger mid-expand.
+        // ResizeDone (or phase chain) goes stale via the epoch bump
+        // below, and the resize is not recorded in ActionStats (the
+        // recovery below is the action that actually happened).
+        // Feasibility is judged from the *committed* size (the sim's);
+        // the cost uses the RMS's actual pre-failure holding, which can
+        // be larger mid-expand.
         let target = if self.cfg.resilience.recovery.rescue && malleable {
             feasible_shrink(committed, survivors, factor, min_procs)
         } else {
@@ -1284,6 +1484,60 @@ mod tests {
         let r = Engine::new(cfg).run(&w, "async");
         assert_eq!(r.rms.completed_jobs(), 20);
         assert!(r.rms.check_invariants());
+    }
+
+    #[test]
+    fn resize_faults_abort_roll_back_and_degrade() {
+        let w = workload::generate(30, 7);
+        let mut cfg = DesConfig::default();
+        cfg.resilience.resize_faults = ResizeFaultSpec {
+            spawn_fail: 1.0,
+            max_retries: 1,
+            backoff_base: 5.0,
+            backoff_cap: 10.0,
+            ..Default::default()
+        };
+        let r = Engine::new(cfg).run(&w, "rf");
+        assert_eq!(r.rms.completed_jobs(), 30, "workload drains despite 100% spawn failures");
+        assert!(r.resilience.resize_attempts > 0, "transactions were attempted");
+        assert_eq!(
+            r.resilience.resize_aborts, r.resilience.resize_attempts,
+            "every attempt aborts at spawn_fail = 1"
+        );
+        assert!(r.resilience.degraded_jobs > 0, "retry budgets get exhausted");
+        assert!(r.resilience.retry_time > 0.0);
+        assert_eq!(r.rms.log.resize_commits(), 0, "nothing ever commits");
+        assert_eq!(r.rms.log.resize_aborts() as u64, r.resilience.resize_aborts);
+        assert_eq!(r.rms.log.resize_begins() as u64, r.resilience.resize_attempts);
+        assert_eq!(r.rms.log.degradations() as u64, r.resilience.degraded_jobs);
+        assert!(r.rms.check_invariants());
+    }
+
+    #[test]
+    fn fault_free_transactions_commit_at_legacy_times() {
+        // An *active* spec whose draws never fire still takes the
+        // multi-phase path — the makespan must match the legacy engine
+        // bit-for-bit (phase durations sum to sched + transfer, and the
+        // cost stream is consumed identically).
+        let w = workload::generate(30, 7);
+        let legacy = Engine::new(DesConfig::default()).run(&w, "legacy");
+        let mut cfg = DesConfig::default();
+        cfg.resilience.resize_faults =
+            ResizeFaultSpec { spawn_fail: f64::MIN_POSITIVE, ..Default::default() };
+        let txn = Engine::new(cfg).run(&w, "txn");
+        assert!(txn.resilience.resize_attempts > 0);
+        assert_eq!(txn.resilience.resize_aborts, 0, "MIN_POSITIVE never fires");
+        assert_eq!(
+            legacy.makespan.to_bits(),
+            txn.makespan.to_bits(),
+            "fault-free transactions commit exactly when the legacy resize did"
+        );
+        assert_eq!(
+            txn.rms.log.resize_commits() as u64,
+            txn.resilience.resize_attempts,
+            "every transaction commits"
+        );
+        assert!(txn.rms.check_invariants());
     }
 
     #[test]

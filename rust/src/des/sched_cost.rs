@@ -32,6 +32,13 @@ pub struct CostModel {
     /// Resizer-job wait deadline in the asynchronous mode (§5.2.1; the
     /// Table 2 async expand max is ≈ 40 s).
     pub expand_timeout: f64,
+    /// Fraction of the scheduling step modeled as the allocation-grant
+    /// phase of a resize transaction; the remainder is the spawn phase.
+    /// Only the multi-phase (fault-injected) resize path reads it — the
+    /// phase durations sum exactly to `action_sched` + `resize_transfer`,
+    /// so a fault-free transaction commits at the same instant the legacy
+    /// single-event resize would have.
+    pub grant_frac: f64,
 }
 
 impl Default for CostModel {
@@ -45,6 +52,7 @@ impl Default for CostModel {
             bw_per_rank: 1.5e9,
             shrink_sync: 0.08,
             expand_timeout: 40.0,
+            grant_frac: 0.3,
         }
     }
 }

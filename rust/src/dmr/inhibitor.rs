@@ -17,11 +17,26 @@ impl Inhibitor {
     }
 
     /// Period from the environment override, falling back to `default`.
+    /// An unusable `DMR_INHIBIT_PERIOD` (non-numeric, empty, negative or
+    /// non-finite) falls back too, but says so on stderr once per process
+    /// instead of silently ignoring the knob the user tried to turn.
     pub fn from_env(default: f64) -> Self {
-        let period = std::env::var("DMR_INHIBIT_PERIOD")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(default);
+        let period = match std::env::var("DMR_INHIBIT_PERIOD") {
+            Err(_) => default,
+            Ok(raw) => match parse_period(&raw) {
+                Ok(p) => p,
+                Err(why) => {
+                    static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+                    WARN_ONCE.call_once(|| {
+                        eprintln!(
+                            "warning: ignoring DMR_INHIBIT_PERIOD={raw:?} ({why}); \
+                             using default {default}s"
+                        );
+                    });
+                    default
+                }
+            },
+        };
         Self::new(period)
     }
 
@@ -60,6 +75,24 @@ impl Inhibitor {
     }
 }
 
+/// Validate a `DMR_INHIBIT_PERIOD` value: a finite, non-negative number
+/// of seconds.  Split from [`Inhibitor::from_env`] so the rejection rules
+/// are unit-testable without touching process environment.
+pub fn parse_period(raw: &str) -> Result<f64, &'static str> {
+    let trimmed = raw.trim();
+    if trimmed.is_empty() {
+        return Err("empty value");
+    }
+    let p: f64 = trimmed.parse().map_err(|_| "not a number")?;
+    if !p.is_finite() {
+        return Err("not finite");
+    }
+    if p < 0.0 {
+        return Err("negative period");
+    }
+    Ok(p)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,6 +120,21 @@ mod tests {
         i.allow(3.0);
         assert_eq!(i.next_allowed(5.0), 13.0);
         assert_eq!(i.next_allowed(20.0), 20.0);
+    }
+
+    #[test]
+    fn period_env_values_validated() {
+        assert_eq!(parse_period("15"), Ok(15.0));
+        assert_eq!(parse_period("0.5"), Ok(0.5));
+        assert_eq!(parse_period("  30.0 "), Ok(30.0), "surrounding whitespace tolerated");
+        assert_eq!(parse_period("0"), Ok(0.0), "zero disables inhibition");
+        assert_eq!(parse_period(""), Err("empty value"));
+        assert_eq!(parse_period("   "), Err("empty value"));
+        assert_eq!(parse_period("fast"), Err("not a number"));
+        assert_eq!(parse_period("15s"), Err("not a number"));
+        assert_eq!(parse_period("-3"), Err("negative period"));
+        assert_eq!(parse_period("NaN"), Err("not finite"));
+        assert_eq!(parse_period("inf"), Err("not finite"));
     }
 
     #[test]

@@ -29,7 +29,7 @@ impl SchedMode {
         }
     }
 }
-pub use protocol::{Decision, StateMsg};
+pub use protocol::{DecodeError, Decision, StateMsg};
 pub use redistribute::{
     expand_dest, expand_src, merge_rows, shrink_role, split_rows, ShrinkRole,
 };

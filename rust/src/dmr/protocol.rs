@@ -6,6 +6,44 @@ use crate::vmpi::bytes_to_f32s;
 #[cfg(not(target_endian = "little"))]
 use crate::vmpi::f32s_to_bytes;
 
+/// Why a received frame could not be decoded.  Malformed frames can reach
+/// a decoder through any transport bug or version skew, so decoding is
+/// fallible instead of indexing straight into the buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeError {
+    /// The buffer ended before a fixed-size field: `need` bytes were
+    /// required, only `got` were present.
+    Truncated {
+        /// Bytes the frame needed up to and including the missing field.
+        need: usize,
+        /// Bytes actually received.
+        got: usize,
+    },
+    /// The leading tag byte named no known message kind.
+    UnknownTag(u8),
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Truncated { need, got } => {
+                write!(f, "truncated frame: need {need} bytes, got {got}")
+            }
+            DecodeError::UnknownTag(t) => write!(f, "unknown frame tag {t}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Read a fixed-size little-endian field at `b[at..at + N]`.
+fn field<const N: usize>(b: &[u8], at: usize) -> Result<[u8; N], DecodeError> {
+    match b.get(at..at + N) {
+        Some(s) => Ok(s.try_into().expect("slice length matches N")),
+        None => Err(DecodeError::Truncated { need: at + N, got: b.len() }),
+    }
+}
+
 /// The decision rank 0 broadcasts at each reconfiguring point.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Decision {
@@ -32,16 +70,18 @@ impl Decision {
         }
     }
 
-    pub fn decode(b: &[u8]) -> Decision {
-        match b[0] {
-            0 => Decision::Continue,
+    /// Decode a received frame.  Empty buffers, truncated `Resize`
+    /// payloads and unknown tag bytes are reported, not panicked on.
+    pub fn decode(b: &[u8]) -> Result<Decision, DecodeError> {
+        match *b.first().ok_or(DecodeError::Truncated { need: 1, got: 0 })? {
+            0 => Ok(Decision::Continue),
             1 => {
-                let to = u32::from_le_bytes(b[1..5].try_into().unwrap());
-                let new_group = u64::from_le_bytes(b[5..13].try_into().unwrap());
-                Decision::Resize { to, new_group }
+                let to = u32::from_le_bytes(field::<4>(b, 1)?);
+                let new_group = u64::from_le_bytes(field::<8>(b, 5)?);
+                Ok(Decision::Resize { to, new_group })
             }
-            2 => Decision::Stop,
-            x => panic!("bad decision byte {x}"),
+            2 => Ok(Decision::Stop),
+            x => Err(DecodeError::UnknownTag(x)),
         }
     }
 }
@@ -83,18 +123,22 @@ impl StateMsg {
         b
     }
 
-    pub fn decode(b: &[u8]) -> StateMsg {
-        let iter = u32::from_le_bytes(b[0..4].try_into().unwrap());
-        let inhibit_last = f64::from_le_bytes(b[4..12].try_into().unwrap());
-        let ns = u32::from_le_bytes(b[12..16].try_into().unwrap()) as usize;
-        let mut scalars = Vec::with_capacity(ns);
+    /// Decode a received frame; truncated headers or scalar sections are
+    /// reported, not panicked on.
+    pub fn decode(b: &[u8]) -> Result<StateMsg, DecodeError> {
+        let iter = u32::from_le_bytes(field::<4>(b, 0)?);
+        let inhibit_last = f64::from_le_bytes(field::<8>(b, 4)?);
+        let ns = u32::from_le_bytes(field::<4>(b, 12)?) as usize;
+        // Cap the pre-allocation by what the buffer could actually hold —
+        // a hostile/corrupt count must not drive a huge reservation.
+        let mut scalars = Vec::with_capacity(ns.min(b.len() / 8));
         let mut off = 16;
         for _ in 0..ns {
-            scalars.push(f64::from_le_bytes(b[off..off + 8].try_into().unwrap()));
+            scalars.push(f64::from_le_bytes(field::<8>(b, off)?));
             off += 8;
         }
         let data = bytes_to_f32s(&b[off..]);
-        StateMsg { iter, inhibit_last, scalars, data }
+        Ok(StateMsg { iter, inhibit_last, scalars, data })
     }
 }
 
@@ -109,8 +153,26 @@ mod tests {
             Decision::Resize { to: 8, new_group: 12345678901234 },
             Decision::Stop,
         ] {
-            assert_eq!(Decision::decode(&d.encode()), d);
+            assert_eq!(Decision::decode(&d.encode()), Ok(d));
         }
+    }
+
+    #[test]
+    fn malformed_decision_frames_are_errors() {
+        assert_eq!(Decision::decode(&[]), Err(DecodeError::Truncated { need: 1, got: 0 }));
+        // Resize tag with a truncated `to` field ...
+        assert_eq!(
+            Decision::decode(&[1, 8, 0]),
+            Err(DecodeError::Truncated { need: 5, got: 3 })
+        );
+        // ... and with `to` intact but `new_group` cut short.
+        let mut b = Decision::Resize { to: 8, new_group: 42 }.encode();
+        b.truncate(9);
+        assert_eq!(Decision::decode(&b), Err(DecodeError::Truncated { need: 13, got: 9 }));
+        assert_eq!(Decision::decode(&[7]), Err(DecodeError::UnknownTag(7)));
+        // error text is usable in logs
+        let e = Decision::decode(&[]).unwrap_err();
+        assert!(e.to_string().contains("truncated"), "{e}");
     }
 
     #[test]
@@ -121,12 +183,38 @@ mod tests {
             scalars: vec![1.5, -2.5e10],
             data: vec![1.0, 2.0, 3.0],
         };
-        assert_eq!(StateMsg::decode(&m.encode()), m);
+        assert_eq!(StateMsg::decode(&m.encode()), Ok(m));
+    }
+
+    #[test]
+    fn malformed_state_frames_are_errors() {
+        assert_eq!(StateMsg::decode(&[]), Err(DecodeError::Truncated { need: 4, got: 0 }));
+        let m = StateMsg {
+            iter: 3,
+            inhibit_last: 1.0,
+            scalars: vec![2.0, 4.0],
+            data: vec![1.0],
+        };
+        let full = m.encode();
+        // header cut mid-field
+        assert_eq!(
+            StateMsg::decode(&full[..10]),
+            Err(DecodeError::Truncated { need: 12, got: 10 })
+        );
+        // scalar section shorter than its declared count
+        assert_eq!(
+            StateMsg::decode(&full[..20]),
+            Err(DecodeError::Truncated { need: 24, got: 20 })
+        );
+        // a corrupt scalar count must error out, not panic or reserve
+        let mut bad = full.clone();
+        bad[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(StateMsg::decode(&bad), Err(DecodeError::Truncated { .. })));
     }
 
     #[test]
     fn state_empty_sections() {
         let m = StateMsg { iter: 0, inhibit_last: 0.0, scalars: vec![], data: vec![] };
-        assert_eq!(StateMsg::decode(&m.encode()), m);
+        assert_eq!(StateMsg::decode(&m.encode()), Ok(m));
     }
 }

@@ -167,7 +167,8 @@ pub struct FederationConfig {
     /// Optional per-shard fault-spec override (index = shard id; shards
     /// past the end of the vector keep the scaled base spec).  Used for
     /// scripted per-shard fault traces and shard-loss drain experiments;
-    /// the campaign TOML axis never sets this.
+    /// campaigns populate it from `[[federation.shard_fault]]` tables
+    /// (see `scenarios/README.md`).
     pub shard_faults: Option<Vec<FaultSpec>>,
 }
 

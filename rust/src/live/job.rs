@@ -98,7 +98,8 @@ pub fn app_main(ctx: Arc<JobCtx>, ep: Endpoint, origin: Origin) {
         ),
         Origin::Spawned { parent } => {
             let msg = ep.recv(RecvSelector::tag(TAG_STATE));
-            let sm = StateMsg::decode(&msg.payload);
+            let sm = StateMsg::decode(&msg.payload)
+                .unwrap_or_else(|e| panic!("spawn state transfer from job {parent}: {e}"));
             let state = AppState::from_rows(
                 ctx.app,
                 rank,
@@ -169,7 +170,8 @@ fn decide_collectively(
 ) -> Decision {
     if ep.rank() != 0 {
         let m = ep.recv(RecvSelector::from_rank(ep.group(), 0, TAG_DECISION));
-        return Decision::decode(&m.payload);
+        return Decision::decode(&m.payload)
+            .unwrap_or_else(|e| panic!("decision broadcast from rank 0: {e}"));
     }
 
     let mut decision = Decision::Continue;
@@ -271,7 +273,9 @@ fn perform_resize(
                     .iter()
                     .map(|&s| {
                         let m = ep.recv(RecvSelector::from_rank(ep.group(), s, TAG_STATE));
-                        (s, StateMsg::decode(&m.payload).data)
+                        let sm = StateMsg::decode(&m.payload)
+                            .unwrap_or_else(|e| panic!("shrink merge from rank {s}: {e}"));
+                        (s, sm.data)
                     })
                     .collect();
                 got.sort_by_key(|(s, _)| *s);

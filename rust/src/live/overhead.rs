@@ -82,7 +82,7 @@ pub fn measure_resize(from: usize, to: usize, total_f32s: usize) -> f64 {
     // New group: each rank waits for its state message.
     let new_gid = world.spawn(to, move |ep| {
         let m = ep.recv(RecvSelector::tag(TAG_STATE));
-        let sm = StateMsg::decode(&m.payload);
+        let sm = StateMsg::decode(&m.payload).expect("overhead state transfer decodes");
         std::hint::black_box(&sm.data);
         ep.barrier();
         if ep.rank() == 0 {
@@ -114,7 +114,9 @@ pub fn measure_resize(from: usize, to: usize, total_f32s: usize) -> f64 {
                     let mut parts: Vec<Vec<f32>> = Vec::with_capacity(srcs.len() + 1);
                     for s in srcs {
                         let m = ep.recv(RecvSelector::from_rank(ep.group(), s, TAG_STATE));
-                        parts.push(StateMsg::decode(&m.payload).data);
+                        let sm = StateMsg::decode(&m.payload)
+                            .expect("overhead shrink merge decodes");
+                        parts.push(sm.data);
                     }
                     parts.push(data);
                     ep.send_to_group(new_gid, new_dst, TAG_STATE, mk(merge_rows(parts)));

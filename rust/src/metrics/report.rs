@@ -257,7 +257,8 @@ pub const CAMPAIGN_RUN_HEADER: &[&str] = &[
     "shrinks", "expand_aborts", "bounded_slowdown", "jain_fairness", "deadline_jobs",
     "deadline_misses", "interrupted", "rescued", "requeued", "rework_s", "lost_node_s",
     "availability_pct", "fed_shards", "fed_routing", "fed_steals", "shard_util_pct",
-    "shard_queue_depth", "shard_steals",
+    "shard_queue_depth", "shard_steals", "resize_attempts", "resize_aborts", "retry_time_s",
+    "degraded_jobs",
 ];
 
 /// Header of `<name>_agg.csv` — single source of truth, like
@@ -269,7 +270,8 @@ pub const CAMPAIGN_AGG_HEADER: &[&str] = &[
     "shrinks_mean", "expand_aborts_mean", "slowdown_mean", "slowdown_ci95", "fairness_mean",
     "fairness_ci95", "deadline_miss_mean", "interrupted_mean", "rescued_mean",
     "requeued_mean", "rework_mean_s", "lost_node_s_mean", "availability_mean_pct",
-    "fed_shards", "fed_steals_mean", "shard_util_mean_pct",
+    "fed_shards", "fed_steals_mean", "shard_util_mean_pct", "resize_attempts_mean",
+    "resize_aborts_mean", "retry_time_mean_s", "degraded_jobs_mean",
 ];
 
 /// The per-run CSV columns (accessor over [`CAMPAIGN_RUN_HEADER`] so
@@ -334,6 +336,10 @@ pub fn campaign_run_rows(records: &[crate::campaign::RunRecord]) -> Vec<Vec<Stri
                     row.extend(["1", "-", "0", "-", "-", "-"].map(String::from));
                 }
             }
+            row.push(s.resilience.resize_attempts.to_string());
+            row.push(s.resilience.resize_aborts.to_string());
+            row.push(fmt(s.resilience.retry_time, 1));
+            row.push(s.resilience.degraded_jobs.to_string());
             row
         })
         .collect()
@@ -388,6 +394,10 @@ pub fn campaign_agg_rows(aggs: &[crate::campaign::ScenarioAgg]) -> Vec<Vec<Strin
             } else {
                 a.shard_util.iter().map(|s| fmt(s.mean(), 2)).collect::<Vec<_>>().join(";")
             });
+            row.push(fmt(a.resize_attempts.mean(), 2));
+            row.push(fmt(a.resize_aborts.mean(), 2));
+            row.push(fmt(a.retry_time_s.mean(), 1));
+            row.push(fmt(a.degraded_jobs.mean(), 2));
             row
         })
         .collect()
@@ -466,6 +476,10 @@ pub fn campaign_agg_json(
             m.insert("rework_s".into(), stat(&a.rework_s));
             m.insert("lost_node_seconds".into(), stat(&a.lost_node_s));
             m.insert("availability_pct".into(), stat(&a.availability_pct));
+            m.insert("resize_attempts".into(), stat(&a.resize_attempts));
+            m.insert("resize_aborts".into(), stat(&a.resize_aborts));
+            m.insert("retry_time_s".into(), stat(&a.retry_time_s));
+            m.insert("degraded_jobs".into(), stat(&a.degraded_jobs));
             let mut fed = BTreeMap::new();
             fed.insert("shards".into(), Json::Num(a.fed_shards as f64));
             fed.insert("steals".into(), stat(&a.fed_steals));
@@ -653,7 +667,7 @@ jobs = 5
              expand_aborts,bounded_slowdown,jain_fairness,deadline_jobs,deadline_misses,\
              interrupted,rescued,requeued,rework_s,lost_node_s,availability_pct,\
              fed_shards,fed_routing,fed_steals,shard_util_pct,shard_queue_depth,\
-             shard_steals"
+             shard_steals,resize_attempts,resize_aborts,retry_time_s,degraded_jobs"
         );
         assert_eq!(
             agg_columns().join(","),
@@ -663,7 +677,8 @@ jobs = 5
              shrinks_mean,expand_aborts_mean,slowdown_mean,slowdown_ci95,fairness_mean,\
              fairness_ci95,deadline_miss_mean,interrupted_mean,rescued_mean,\
              requeued_mean,rework_mean_s,lost_node_s_mean,availability_mean_pct,\
-             fed_shards,fed_steals_mean,shard_util_mean_pct"
+             fed_shards,fed_steals_mean,shard_util_mean_pct,resize_attempts_mean,\
+             resize_aborts_mean,retry_time_mean_s,degraded_jobs_mean"
         );
         // accessors and consts are the same object
         assert!(std::ptr::eq(run_columns(), CAMPAIGN_RUN_HEADER));

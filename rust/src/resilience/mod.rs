@@ -37,9 +37,11 @@
 
 pub mod model;
 pub mod recovery;
+pub mod resize;
 
 pub use model::{DrainSet, DrainWindow, FaultKind, FaultSpec, FaultTraceEvent};
 pub use recovery::{feasible_shrink, rework_lost, RecoveryConfig};
+pub use resize::ResizeFaultSpec;
 
 /// Everything the DES needs to inject faults and recover from them.
 #[derive(Debug, Clone, Default)]
@@ -48,6 +50,11 @@ pub struct ResilienceConfig {
     pub faults: FaultSpec,
     /// Recovery policy (checkpoint interval, rescue on/off).
     pub recovery: RecoveryConfig,
+    /// Resize-transaction failure injection + retry/backoff policy
+    /// ([`resize`]).  Inactive by default: the DES then keeps the legacy
+    /// single-event resize path, byte-identical to the pre-transaction
+    /// engine.
+    pub resize_faults: ResizeFaultSpec,
 }
 
 /// Per-run resilience measures (the new robustness axis of the campaign
@@ -77,6 +84,20 @@ pub struct ResilienceStats {
     pub lost_node_seconds: f64,
     /// Machine availability: `1 - lost_node_seconds / (nodes * makespan)`.
     pub availability: f64,
+    /// Resize transactions begun (multi-phase path only; the legacy
+    /// single-event resize path never counts here).
+    pub resize_attempts: u64,
+    /// Resize transactions aborted — by a drawn fault (revocation, spawn
+    /// failure, redistribution abort) or by a machine fault landing on
+    /// the job's allocation during the transfer window.
+    pub resize_aborts: u64,
+    /// Time lost to aborted transactions: the in-flight phase time thrown
+    /// away at each rollback plus the backoff waits before retries
+    /// (seconds).
+    pub retry_time: f64,
+    /// Jobs that exhausted their resize retries and degraded to
+    /// non-malleable for the rest of the run.
+    pub degraded_jobs: u64,
 }
 
 impl Default for ResilienceStats {
@@ -89,6 +110,10 @@ impl Default for ResilienceStats {
             rework_time: 0.0,
             lost_node_seconds: 0.0,
             availability: 1.0,
+            resize_attempts: 0,
+            resize_aborts: 0,
+            retry_time: 0.0,
+            degraded_jobs: 0,
         }
     }
 }

@@ -1,0 +1,151 @@
+//! Resize-transaction fault source: seeded failure injection for the
+//! multi-phase reconfiguration protocol (allocation grant → spawn →
+//! redistribute → commit, §5.2).
+//!
+//! PR 3's machine faults can kill nodes mid-run but can never make a
+//! *resize itself* fail; this spec closes that gap.  Each transaction
+//! draws three Bernoulli outcomes (revocation, spawn failure,
+//! redistribution abort — always in that fixed order, always all three,
+//! so the draw stream is a pure function of the transaction sequence) from
+//! a dedicated RNG stream salted away from both the cost-model stream and
+//! the machine-fault stream.  An inactive spec (`fail_prob = 0`
+//! everywhere) must leave the event stream byte-identical to today's
+//! single-event resize — the DES only takes the multi-phase path when
+//! [`ResizeFaultSpec::is_active`] holds.
+
+use crate::util::rng::Rng;
+
+/// Salt folded into the run seed for the resize-fault RNG, distinct from
+/// the cost stream (no salt) and the machine-fault stream
+/// (`model::FAULT_SEED_SALT`), so the three never alias.
+const RESIZE_FAULT_SEED_SALT: u64 = 0x2E51_5EED_FA17_0B57;
+
+/// Which phase of the transaction a drawn fault lands on (also the
+/// `phase` code carried by `RmsEvent::ResizeAbort`).
+pub const PHASE_GRANT: u8 = 0;
+/// Spawn phase (new processes launched on the granted nodes).
+pub const PHASE_SPAWN: u8 = 1;
+/// Redistribution phase (data moves to the new process set).
+pub const PHASE_REDIST: u8 = 2;
+/// Not a drawn fault: a machine fault hit the job's allocation during
+/// the transfer window and revoked the transaction.
+pub const PHASE_NODE_FAULT: u8 = 3;
+
+/// Failure injection for resize transactions, plus the retry policy
+/// applied after a rollback.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResizeFaultSpec {
+    /// Probability the spawn phase fails (new processes never come up).
+    pub spawn_fail: f64,
+    /// Probability the redistribution phase aborts mid-transfer.
+    pub redist_fail: f64,
+    /// Probability the allocation grant is revoked before the spawn.
+    pub revoke: f64,
+    /// Aborted transactions are retried at most this many times before
+    /// the job degrades to non-malleable for the rest of the run.
+    pub max_retries: u32,
+    /// First retry waits this long (seconds); each further retry doubles
+    /// the wait (bounded exponential backoff).
+    pub backoff_base: f64,
+    /// Backoff ceiling (seconds).
+    pub backoff_cap: f64,
+}
+
+impl Default for ResizeFaultSpec {
+    fn default() -> Self {
+        ResizeFaultSpec {
+            spawn_fail: 0.0,
+            redist_fail: 0.0,
+            revoke: 0.0,
+            max_retries: 3,
+            backoff_base: 30.0,
+            backoff_cap: 480.0,
+        }
+    }
+}
+
+impl ResizeFaultSpec {
+    /// Whether this spec injects anything at all.  An inactive spec keeps
+    /// the DES on the legacy single-event resize path, byte-identical to
+    /// the pre-transaction engine.
+    pub fn is_active(&self) -> bool {
+        self.spawn_fail > 0.0 || self.redist_fail > 0.0 || self.revoke > 0.0
+    }
+
+    /// The dedicated resize-fault RNG for a run seed.
+    pub fn rng(&self, seed: u64) -> Rng {
+        Rng::new(seed ^ RESIZE_FAULT_SEED_SALT)
+    }
+
+    /// Draw one transaction's fault outcomes: `[revoked, spawn_failed,
+    /// redist_failed]`, indexed by phase.  Exactly three draws in a fixed
+    /// order per transaction, so the stream position depends only on how
+    /// many transactions began before this one.
+    pub fn draw(&self, rng: &mut Rng) -> [bool; 3] {
+        let revoked = rng.f64() < self.revoke;
+        let spawn_failed = rng.f64() < self.spawn_fail;
+        let redist_failed = rng.f64() < self.redist_fail;
+        [revoked, spawn_failed, redist_failed]
+    }
+
+    /// Backoff before retry number `attempt` (1-based): bounded
+    /// exponential, `base * 2^(attempt-1)` clamped to `backoff_cap`.
+    pub fn backoff(&self, attempt: u32) -> f64 {
+        let exp = attempt.saturating_sub(1).min(60) as i32;
+        (self.backoff_base * 2f64.powi(exp)).min(self.backoff_cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inactive_by_default() {
+        let s = ResizeFaultSpec::default();
+        assert!(!s.is_active());
+        assert!(ResizeFaultSpec { spawn_fail: 0.1, ..Default::default() }.is_active());
+        assert!(ResizeFaultSpec { redist_fail: 0.1, ..Default::default() }.is_active());
+        assert!(ResizeFaultSpec { revoke: 0.1, ..Default::default() }.is_active());
+    }
+
+    #[test]
+    fn draws_are_deterministic_per_seed_and_independent_of_other_streams() {
+        let s = ResizeFaultSpec { spawn_fail: 0.5, redist_fail: 0.5, revoke: 0.5, ..Default::default() };
+        let seq = |seed: u64| {
+            let mut rng = s.rng(seed);
+            (0..32).map(|_| s.draw(&mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(seq(7), seq(7), "same seed, same outcomes");
+        assert_ne!(seq(7), seq(8), "different seeds differ");
+        // Salted away from the cost stream and the machine-fault stream.
+        let a = s.rng(42).next_u64();
+        assert_ne!(a, Rng::new(42).next_u64());
+        assert_ne!(a, crate::resilience::FaultSpec::default().rng(42).next_u64());
+    }
+
+    #[test]
+    fn three_draws_per_transaction_regardless_of_outcome() {
+        // The stream position after N transactions must not depend on
+        // what the outcomes were (reproducibility across fault configs
+        // with the same probabilities).
+        let s = ResizeFaultSpec { spawn_fail: 1.0, redist_fail: 1.0, revoke: 1.0, ..Default::default() };
+        let mut a = s.rng(3);
+        let mut b = s.rng(3);
+        let _ = s.draw(&mut a);
+        for _ in 0..3 {
+            b.f64();
+        }
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let s = ResizeFaultSpec { backoff_base: 30.0, backoff_cap: 200.0, ..Default::default() };
+        assert_eq!(s.backoff(1), 30.0);
+        assert_eq!(s.backoff(2), 60.0);
+        assert_eq!(s.backoff(3), 120.0);
+        assert_eq!(s.backoff(4), 200.0, "capped");
+        assert_eq!(s.backoff(40), 200.0, "huge attempts stay capped");
+    }
+}

@@ -39,6 +39,21 @@ pub enum RmsEvent {
     /// Only federated multi-shard runs emit this, so flat and 1-shard
     /// event logs are untouched.
     Stolen { job: JobId, time: Time },
+    // --- resize-transaction events (crate::resilience::resize) -------
+    /// A multi-phase resize transaction began (emitted only when resize
+    /// faults are active; fault-free runs keep the legacy single-event
+    /// resize, so their logs are untouched).
+    ResizeBegin { job: JobId, time: Time, from: usize, to: usize },
+    /// A resize transaction aborted in `phase` (codes in
+    /// [`crate::resilience::resize`]: 0 grant-revoked, 1 spawn failed,
+    /// 2 redistribution aborted, 3 machine fault on the allocation) and
+    /// the job rolled back to its pre-transaction process set.
+    ResizeAbort { job: JobId, time: Time, phase: u8 },
+    /// A resize transaction committed: the job now runs on `procs`.
+    ResizeCommit { job: JobId, time: Time, procs: usize },
+    /// A job exhausted its resize retries and degraded to non-malleable
+    /// for the rest of the run (policies stop proposing resizes for it).
+    Degraded { job: JobId, time: Time },
 }
 
 /// Append-only log with query helpers.
@@ -91,6 +106,26 @@ impl EventLog {
     /// Cross-shard steals recorded (jobs withdrawn from this shard).
     pub fn steals(&self) -> usize {
         self.count(|e| matches!(e, RmsEvent::Stolen { .. }))
+    }
+
+    /// Resize transactions begun (multi-phase path only).
+    pub fn resize_begins(&self) -> usize {
+        self.count(|e| matches!(e, RmsEvent::ResizeBegin { .. }))
+    }
+
+    /// Resize transactions aborted.
+    pub fn resize_aborts(&self) -> usize {
+        self.count(|e| matches!(e, RmsEvent::ResizeAbort { .. }))
+    }
+
+    /// Resize transactions committed.
+    pub fn resize_commits(&self) -> usize {
+        self.count(|e| matches!(e, RmsEvent::ResizeCommit { .. }))
+    }
+
+    /// Jobs degraded to non-malleable after exhausting resize retries.
+    pub fn degradations(&self) -> usize {
+        self.count(|e| matches!(e, RmsEvent::Degraded { .. }))
     }
 
     /// Order-sensitive FNV-1a digest over every event and all its fields
@@ -207,6 +242,30 @@ impl EventLog {
                     mix(&mut h, *job);
                     mix(&mut h, time.to_bits());
                 }
+                RmsEvent::ResizeBegin { job, time, from, to } => {
+                    mix(&mut h, 17);
+                    mix(&mut h, *job);
+                    mix(&mut h, time.to_bits());
+                    mix(&mut h, *from as u64);
+                    mix(&mut h, *to as u64);
+                }
+                RmsEvent::ResizeAbort { job, time, phase } => {
+                    mix(&mut h, 18);
+                    mix(&mut h, *job);
+                    mix(&mut h, time.to_bits());
+                    mix(&mut h, *phase as u64);
+                }
+                RmsEvent::ResizeCommit { job, time, procs } => {
+                    mix(&mut h, 19);
+                    mix(&mut h, *job);
+                    mix(&mut h, time.to_bits());
+                    mix(&mut h, *procs as u64);
+                }
+                RmsEvent::Degraded { job, time } => {
+                    mix(&mut h, 20);
+                    mix(&mut h, *job);
+                    mix(&mut h, time.to_bits());
+                }
             }
         }
         h
@@ -272,6 +331,10 @@ mod tests {
             digest_of(RmsEvent::Requeued { job: 1, time: 2.0 }),
             digest_of(RmsEvent::Rescued { job: 1, time: 2.0, from: 8, to: 4 }),
             digest_of(RmsEvent::Stolen { job: 1, time: 2.0 }),
+            digest_of(RmsEvent::ResizeBegin { job: 1, time: 2.0, from: 8, to: 4 }),
+            digest_of(RmsEvent::ResizeAbort { job: 1, time: 2.0, phase: 1 }),
+            digest_of(RmsEvent::ResizeCommit { job: 1, time: 2.0, procs: 8 }),
+            digest_of(RmsEvent::Degraded { job: 1, time: 2.0 }),
         ];
         for (i, a) in all.iter().enumerate() {
             for (j, b) in all.iter().enumerate() {
@@ -294,5 +357,38 @@ mod tests {
         assert_eq!(log.rescues(), 1);
         assert_eq!(log.requeues(), 1);
         assert_eq!(log.steals(), 1);
+    }
+
+    #[test]
+    fn resize_transaction_events_distinct_and_counted() {
+        let digest_of = |e: RmsEvent| {
+            let mut l = EventLog::default();
+            l.push(e);
+            l.digest()
+        };
+        // The abort phase code is digest-covered.
+        assert_ne!(
+            digest_of(RmsEvent::ResizeAbort { job: 1, time: 2.0, phase: 0 }),
+            digest_of(RmsEvent::ResizeAbort { job: 1, time: 2.0, phase: 2 }),
+        );
+        // Begin and commit are field-sensitive.
+        assert_ne!(
+            digest_of(RmsEvent::ResizeBegin { job: 1, time: 2.0, from: 8, to: 16 }),
+            digest_of(RmsEvent::ResizeBegin { job: 1, time: 2.0, from: 8, to: 32 }),
+        );
+        assert_ne!(
+            digest_of(RmsEvent::ResizeCommit { job: 1, time: 2.0, procs: 8 }),
+            digest_of(RmsEvent::ResizeCommit { job: 1, time: 2.0, procs: 16 }),
+        );
+        let mut log = EventLog::default();
+        log.push(RmsEvent::ResizeBegin { job: 1, time: 1.0, from: 8, to: 16 });
+        log.push(RmsEvent::ResizeAbort { job: 1, time: 2.0, phase: 1 });
+        log.push(RmsEvent::ResizeBegin { job: 1, time: 3.0, from: 8, to: 16 });
+        log.push(RmsEvent::ResizeCommit { job: 1, time: 4.0, procs: 16 });
+        log.push(RmsEvent::Degraded { job: 2, time: 5.0 });
+        assert_eq!(log.resize_begins(), 2);
+        assert_eq!(log.resize_aborts(), 1);
+        assert_eq!(log.resize_commits(), 1);
+        assert_eq!(log.degradations(), 1);
     }
 }

@@ -78,6 +78,10 @@ pub struct Job {
     /// ([`crate::resilience`]); `start_time` then reflects the *last*
     /// start and `resize_log` the last incarnation.
     pub requeues: usize,
+    /// The job exhausted its resize-transaction retries
+    /// ([`crate::resilience::resize`]) and is non-malleable for the rest
+    /// of the run: every policy sees `NoAction` for it from now on.
+    pub degraded: bool,
     /// Last `NoAction` DMR decision, for the no-op check elision
     /// (invalidated implicitly: the stamp it carries stops matching).
     pub(crate) dmr_memo: Option<DmrMemo>,
@@ -100,6 +104,7 @@ impl Job {
             depends_on: None,
             resize_log: Vec::new(),
             requeues: 0,
+            degraded: false,
             dmr_memo: None,
         }
     }

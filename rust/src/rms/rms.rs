@@ -800,6 +800,13 @@ impl Rms {
     /// report).
     pub fn dmr_check(&mut self, id: JobId, req: &DmrRequest, now: Time) -> DmrOutcome {
         self.passes.dmr_checks += 1;
+        if self.live[&id].degraded {
+            // Resize retries exhausted ([`Rms::degrade`]): the policy is
+            // never consulted again, but the decision event is still
+            // logged so the digest covers the (non-)decision.
+            self.log.push(RmsEvent::DmrDecision { job: id, time: now, action: Action::NoAction });
+            return DmrOutcome::NoAction;
+        }
         if self.cfg.incremental_profile {
             if let Some(memo) = self.live[&id].dmr_memo {
                 if memo.req == *req
@@ -843,6 +850,9 @@ impl Rms {
     /// is guaranteed side-effect-free — and provably identical, since the
     /// scan minimizes under the same total comparator the sort uses.
     pub fn dmr_peek(&self, id: JobId, req: &DmrRequest, now: Time) -> Action {
+        if self.live[&id].degraded {
+            return Action::NoAction;
+        }
         let current = self.live[&id].procs();
         let view = self.view_at(now);
         let ctx = self.policy_ctx(id, current, req, view, now);
@@ -858,6 +868,12 @@ impl Rms {
         action: Action,
         now: Time,
     ) -> Result<DmrOutcome, ()> {
+        if self.live[&id].degraded {
+            // A stale async decision computed before the degradation is
+            // discarded; the applied outcome is logged as `NoAction`.
+            self.log.push(RmsEvent::DmrDecision { job: id, time: now, action: Action::NoAction });
+            return Ok(DmrOutcome::NoAction);
+        }
         self.log.push(RmsEvent::DmrDecision { job: id, time: now, action });
         match action {
             Action::NoAction => Ok(DmrOutcome::NoAction),
@@ -1003,6 +1019,60 @@ impl Rms {
         assert_eq!(job.state, JobState::Resizing, "job {id} not resizing");
         job.state = JobState::Running;
         let _ = now;
+    }
+
+    // ------------------------------------------------------------------
+    // Resize-transaction rollback ([`crate::resilience::resize`])
+
+    /// Roll back an aborted expansion transaction: the job returns to its
+    /// pre-transaction `old_procs` process set (the granted tail of its
+    /// allocation is released), the provisional resize-log entry pushed
+    /// at grant time is dropped — so `resize_log` keeps recording only
+    /// reconfigurations that *stuck*, and node-second integrals /
+    /// expand counts derived from it stay clean — and a digest-covered
+    /// [`RmsEvent::ResizeAbort`] records the abort `phase`.
+    pub fn abort_expand_to(&mut self, id: JobId, old_procs: usize, now: Time, phase: u8) {
+        let released = {
+            let job = self.live.get_mut(&id).expect("abort_expand: unknown job");
+            assert_eq!(job.state, JobState::Resizing, "abort_expand: job {id} not resizing");
+            assert!(
+                old_procs <= job.nodes.len(),
+                "abort_expand: old {old_procs} > held {}",
+                job.nodes.len()
+            );
+            job.nodes.split_off(old_procs)
+        };
+        if !released.is_empty() {
+            self.cluster.release(id, &released).expect("abort_expand: release");
+        }
+        let job = self.live.get_mut(&id).unwrap();
+        job.state = JobState::Running;
+        job.resize_log.pop();
+        self.profile.set_procs(id, old_procs);
+        self.log.push(RmsEvent::ResizeAbort { job: id, time: now, phase });
+        self.snapshot(now);
+    }
+
+    /// Roll back an aborted shrink transaction.  Shrinks hold every node
+    /// until [`Rms::commit_shrink_to`], so nothing moves: the job's state
+    /// flips back to running and the abort is logged.
+    pub fn abort_shrink(&mut self, id: JobId, now: Time, phase: u8) {
+        let job = self.live.get_mut(&id).expect("abort_shrink: unknown job");
+        assert_eq!(job.state, JobState::Resizing, "abort_shrink: job {id} not resizing");
+        job.state = JobState::Running;
+        self.log.push(RmsEvent::ResizeAbort { job: id, time: now, phase });
+        self.snapshot(now);
+    }
+
+    /// Degrade a job to non-malleable after its resize retries ran out:
+    /// [`Job::degraded`] pins every future DMR decision to `NoAction`
+    /// (check, peek and apply alike), so policy engines stop proposing
+    /// resizes for it.  Logged as a digest-covered event.
+    pub fn degrade(&mut self, id: JobId, now: Time) {
+        let job = self.live.get_mut(&id).expect("degrade: unknown job");
+        assert!(!job.degraded, "degrade: job {id} already degraded");
+        job.degraded = true;
+        self.log.push(RmsEvent::Degraded { job: id, time: now });
     }
 
     // ------------------------------------------------------------------
@@ -1598,6 +1668,73 @@ mod tests {
             rms.log.digest()
         };
         assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn expand_rollback_restores_pre_transaction_state() {
+        let mut rms = small_rms(64);
+        let a = rms.submit(spec(AppKind::NBody, 0.0), 0.0); // 16 nodes
+        rms.schedule(0.0);
+        let _ = rms.begin_shrink(a, 4, 1.0);
+        rms.commit_shrink_to(a, 4, 1.0);
+        let before_nodes = rms.job(a).unwrap().nodes.clone();
+        let before_log = rms.job(a).unwrap().resize_log.len();
+        let free_before = rms.cluster.available();
+        let req = DmrRequest { min: 1, max: 16, pref: Some(1), factor: 2 };
+        let out = rms.dmr_check(a, &req, 5.0);
+        assert!(matches!(out, DmrOutcome::Expand { .. }));
+        assert_eq!(rms.job(a).unwrap().state, JobState::Resizing);
+        rms.abort_expand_to(a, before_nodes.len(), 6.0, 1);
+        let j = rms.job(a).unwrap();
+        assert_eq!(j.state, JobState::Running);
+        assert_eq!(j.nodes, before_nodes, "granted tail released, original nodes kept");
+        assert_eq!(j.resize_log.len(), before_log, "provisional entry dropped");
+        assert_eq!(rms.cluster.available(), free_before);
+        assert_eq!(rms.log.resize_aborts(), 1);
+        assert!(rms.check_invariants());
+    }
+
+    #[test]
+    fn shrink_rollback_keeps_all_nodes() {
+        let mut rms = small_rms(64);
+        let a = rms.submit(spec(AppKind::Cg, 0.0), 0.0); // 32 nodes
+        rms.schedule(0.0);
+        rms.submit(spec(AppKind::Cg, 1.0), 1.0);
+        rms.schedule(1.0);
+        rms.submit(spec(AppKind::Cg, 2.0), 2.0); // queued: shrink trigger
+        let before_nodes = rms.job(a).unwrap().nodes.clone();
+        let req = DmrRequest { min: 2, max: 32, pref: Some(8), factor: 2 };
+        let out = rms.dmr_check(a, &req, 10.0);
+        assert!(matches!(out, DmrOutcome::Shrink { .. }));
+        rms.abort_shrink(a, 11.0, 2);
+        let j = rms.job(a).unwrap();
+        assert_eq!(j.state, JobState::Running);
+        assert_eq!(j.nodes, before_nodes, "shrink holds nodes until commit");
+        assert_eq!(rms.log.resize_aborts(), 1);
+        assert!(rms.check_invariants());
+    }
+
+    #[test]
+    fn degraded_job_gets_no_action_everywhere() {
+        let mut rms = small_rms(64);
+        let a = rms.submit(spec(AppKind::Cg, 0.0), 0.0); // 32 nodes
+        rms.schedule(0.0);
+        rms.submit(spec(AppKind::Cg, 1.0), 1.0);
+        rms.schedule(1.0);
+        rms.submit(spec(AppKind::Cg, 2.0), 2.0); // queued: shrink pressure
+        let req = DmrRequest { min: 2, max: 32, pref: Some(8), factor: 2 };
+        // Sanity: the policy would shrink this job...
+        assert!(matches!(rms.dmr_peek(a, &req, 10.0), Action::Shrink { .. }));
+        // ...until it degrades.
+        rms.degrade(a, 10.0);
+        assert!(rms.job(a).unwrap().degraded);
+        assert_eq!(rms.log.degradations(), 1);
+        assert!(matches!(rms.dmr_peek(a, &req, 11.0), Action::NoAction));
+        assert!(matches!(rms.dmr_check(a, &req, 12.0), DmrOutcome::NoAction));
+        let applied = rms.dmr_apply(a, Action::Shrink { to: 8 }, 13.0);
+        assert!(matches!(applied, Ok(DmrOutcome::NoAction)));
+        assert_eq!(rms.job(a).unwrap().procs(), 32, "nothing moved");
+        assert!(rms.check_invariants());
     }
 
     #[test]

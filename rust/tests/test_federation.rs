@@ -50,6 +50,7 @@ fn base_cfg(sched: SchedMode, faulty: bool) -> DesConfig {
                 }],
             },
             recovery: RecoveryConfig { checkpoint_interval: 500.0, ..Default::default() },
+            ..Default::default()
         }
     } else {
         ResilienceConfig::default()

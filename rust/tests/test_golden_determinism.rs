@@ -92,6 +92,7 @@ fn fault_run_digest(mode: &str, incremental_profile: bool) -> String {
                 }],
             },
             recovery: RecoveryConfig { checkpoint_interval: 500.0, ..Default::default() },
+            ..Default::default()
         },
         ..Default::default()
     };
@@ -207,6 +208,7 @@ fn fault_timeline_identical_across_modes() {
             resilience: ResilienceConfig {
                 faults: FaultSpec { mtbf: 60_000.0, mttr: 1_000.0, ..Default::default() },
                 recovery: RecoveryConfig::default(),
+                ..Default::default()
             },
             ..Default::default()
         };

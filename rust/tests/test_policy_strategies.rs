@@ -58,6 +58,7 @@ fn run_with(
                 }],
             },
             recovery: RecoveryConfig { checkpoint_interval: 500.0, ..Default::default() },
+            ..Default::default()
         }
     } else {
         ResilienceConfig::default()

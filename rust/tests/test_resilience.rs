@@ -24,7 +24,7 @@ fn one_cg_workload() -> WorkloadSpec {
 fn run_with(faults: FaultSpec, recovery: RecoveryConfig, w: &WorkloadSpec) -> RunResult {
     let cfg = DesConfig {
         rms: RmsConfig { nodes: 64, ..Default::default() },
-        resilience: ResilienceConfig { faults, recovery },
+        resilience: ResilienceConfig { faults, recovery, ..Default::default() },
         ..Default::default()
     };
     Engine::new(cfg).run(w, "resilience-itest")
@@ -177,6 +177,7 @@ fn mtbf_runs_drain_and_are_deterministic() {
             resilience: ResilienceConfig {
                 faults: FaultSpec { mtbf: 40_000.0, mttr: 800.0, ..Default::default() },
                 recovery: RecoveryConfig::default(),
+                ..Default::default()
             },
             ..Default::default()
         };

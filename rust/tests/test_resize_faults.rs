@@ -1,0 +1,396 @@
+//! Integration: transactional reconfiguration under injected resize
+//! faults — the fold-to-no-op bit-identity contract, exactly-once
+//! completion with paired abort/rollback accounting, worker-count
+//! independence of the campaign outputs, the checked-in acceptance
+//! study, and the randomized rollback differential (every abort must
+//! restore the exact pre-transaction job state, and the incremental
+//! availability profile must match a from-scratch rebuild after every
+//! transition).
+
+use dmr::campaign::{self, CampaignSpec};
+use dmr::des::{DesConfig, Engine};
+use dmr::dmr::SchedMode;
+use dmr::metrics::report::{campaign_agg_rows, campaign_run_rows};
+use dmr::resilience::{FaultSpec, ResilienceConfig, ResizeFaultSpec};
+use dmr::rms::{Action, DmrOutcome, Job, JobState, Rms, RmsConfig};
+use dmr::util::rng::Rng;
+use dmr::workload;
+
+/// Run the 30-job reference stream (the same workload the engine unit
+/// tests pin down) under a given mode / machine-fault / resize-fault
+/// combination and return the full determinism triple.
+fn run_triple(
+    mode: SchedMode,
+    fixed: bool,
+    machine_faults: bool,
+    rf: ResizeFaultSpec,
+) -> (u64, u64, u64) {
+    let w = workload::generate(30, 7);
+    let w = if fixed { w.as_fixed() } else { w };
+    let faults = if machine_faults {
+        FaultSpec { mtbf: 60_000.0, mttr: 1_000.0, ..Default::default() }
+    } else {
+        FaultSpec::default()
+    };
+    let cfg = DesConfig {
+        rms: RmsConfig { nodes: 64, ..Default::default() },
+        mode,
+        resilience: ResilienceConfig { faults, resize_faults: rf, ..Default::default() },
+        ..Default::default()
+    };
+    let r = Engine::new(cfg).run(&w, "rf-itest");
+    assert_eq!(r.rms.completed_jobs(), 30, "workload must drain");
+    assert!(r.rms.check_invariants());
+    (r.rms.log.digest(), r.makespan.to_bits(), r.events)
+}
+
+/// The fold-to-no-op contract: an inactive spec (all fail probabilities
+/// zero) must leave every run bit-identical to the default engine, no
+/// matter how its retry/backoff knobs are tuned — across fixed/sync/async
+/// and fault-free/faulty machines.
+#[test]
+fn inactive_resize_fault_specs_fold_to_the_legacy_engine() {
+    // Deliberately exotic knobs: with fail_prob = 0 they must be inert.
+    let inactive = ResizeFaultSpec {
+        spawn_fail: 0.0,
+        redist_fail: 0.0,
+        revoke: 0.0,
+        max_retries: 9,
+        backoff_base: 1.0,
+        backoff_cap: 1.0,
+    };
+    for (mode, fixed) in [
+        (SchedMode::Sync, true),
+        (SchedMode::Sync, false),
+        (SchedMode::Async, false),
+    ] {
+        for machine_faults in [false, true] {
+            let legacy = run_triple(mode, fixed, machine_faults, ResizeFaultSpec::default());
+            let folded = run_triple(mode, fixed, machine_faults, inactive.clone());
+            assert_eq!(
+                legacy, folded,
+                "inactive spec diverged (mode {mode:?}, fixed {fixed}, \
+                 machine_faults {machine_faults})"
+            );
+        }
+    }
+}
+
+/// Injected faults on top of machine faults: the stream still drains with
+/// every job completing exactly once, every transaction that began either
+/// committed or aborted (an abort always pairs with a rollback — the
+/// post-run invariant check would catch a half-rolled-back allocation),
+/// and the whole thing replays bit-identically.
+#[test]
+fn injected_faults_complete_exactly_once_with_paired_aborts() {
+    let run = || {
+        let w = workload::generate(30, 7);
+        let cfg = DesConfig {
+            rms: RmsConfig { nodes: 64, ..Default::default() },
+            mode: SchedMode::Sync,
+            resilience: ResilienceConfig {
+                faults: FaultSpec { mtbf: 60_000.0, mttr: 1_000.0, ..Default::default() },
+                resize_faults: ResizeFaultSpec {
+                    spawn_fail: 0.3,
+                    redist_fail: 0.15,
+                    revoke: 0.1,
+                    max_retries: 2,
+                    backoff_base: 10.0,
+                    backoff_cap: 40.0,
+                },
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let r = Engine::new(cfg).run(&w, "rf-faulty");
+
+        // Exactly-once completion: all 30 user jobs end Completed.
+        let user: Vec<&Job> = r.rms.jobs().filter(|j| !j.is_resizer).collect();
+        assert_eq!(user.len(), 30);
+        assert!(
+            user.iter().all(|j| j.state == JobState::Completed && j.end_time.is_some()),
+            "every user job completes despite aborted resizes"
+        );
+        assert_eq!(r.rms.completed_jobs(), 30);
+
+        // Ledger closure: begins = commits + aborts, and the resilience
+        // stats mirror the digest-covered event log.
+        let log = &r.rms.log;
+        assert!(log.resize_begins() > 0, "transactions were attempted");
+        assert!(log.resize_aborts() > 0, "the fault mix must actually fire");
+        assert_eq!(
+            log.resize_begins(),
+            log.resize_commits() + log.resize_aborts(),
+            "every transaction that began either committed or aborted"
+        );
+        assert_eq!(r.resilience.resize_attempts, log.resize_begins() as u64);
+        assert_eq!(r.resilience.resize_aborts, log.resize_aborts() as u64);
+        assert_eq!(r.resilience.degraded_jobs, log.degradations() as u64);
+        assert!(r.resilience.retry_time > 0.0, "aborts pay backoff time");
+
+        // Degradations flow into the job records and stick.
+        let degraded = user.iter().filter(|j| j.degraded).count() as u64;
+        assert_eq!(degraded, r.resilience.degraded_jobs);
+
+        assert!(r.rms.check_invariants());
+        (r.rms.log.digest(), r.makespan.to_bits(), r.events)
+    };
+    assert_eq!(run(), run(), "faulty resize replay must be bit-identical");
+}
+
+/// Campaign outputs with an active resize-fault axis are a pure function
+/// of the spec: the runs/agg CSV rows must not depend on how many worker
+/// threads executed the matrix.
+#[test]
+fn campaign_rows_are_identical_across_worker_counts() {
+    let spec = CampaignSpec::from_toml_str(
+        r#"
+        name = "rf_workers"
+        nodes = [64]
+        modes = ["sync"]
+        seeds = [7, 8]
+
+        [resize_faults]
+        spawn_fail = [0.0, 0.5]
+        redist_fail = 0.1
+        revoke = 0.05
+        max_retries = 2
+        backoff_base = 10.0
+        backoff_cap = 40.0
+
+        [[workload]]
+        kind = "feitelson"
+        jobs = 30
+        "#,
+    )
+    .unwrap();
+    assert_eq!(spec.matrix_size(), 4, "2 spawn_fail x 2 seeds");
+
+    let serial = campaign::run_campaign(&spec, 1).unwrap();
+    let threaded = campaign::run_campaign(&spec, 4).unwrap();
+    assert_eq!(
+        campaign_run_rows(&serial.records),
+        campaign_run_rows(&threaded.records),
+        "per-run CSV rows depend on the worker count"
+    );
+    assert_eq!(
+        campaign_agg_rows(&campaign::aggregate(&serial.records)),
+        campaign_agg_rows(&campaign::aggregate(&threaded.records)),
+        "aggregate CSV rows depend on the worker count"
+    );
+
+    // The swept axis is visible in the scenario ids, and the control
+    // column stays on the legacy path.
+    let aggs = campaign::aggregate(&serial.records);
+    let quiet = aggs.iter().find(|a| a.scenario.ends_with("-rf0")).unwrap();
+    let noisy = aggs.iter().find(|a| a.scenario.ends_with("-rf0.5")).unwrap();
+    assert_eq!(quiet.resize_attempts.sum(), 0.0, "rf0 keeps the single-event resize");
+    assert_eq!(quiet.resize_aborts.sum(), 0.0);
+    assert!(noisy.resize_attempts.sum() > 0.0, "rf0.5 opens transactions");
+    assert!(noisy.resize_aborts.sum() > 0.0, "rf0.5 aborts some of them");
+}
+
+/// The checked-in acceptance study: rigid runs never open transactions
+/// (their rows are flat across the sweep), the malleable control column
+/// is abort-free, and aborts/retry time grow in while nothing is lost —
+/// completed stays at the full stream size everywhere.
+#[test]
+fn resize_faults_scenario_shows_degradation_without_loss() {
+    let spec = CampaignSpec::from_file("scenarios/resize_faults.toml").unwrap();
+    assert_eq!(spec.matrix_size(), 36, "1 workload x 1 nodes x 3 modes x 4 rf x 3 seeds");
+    assert_eq!(spec.resize_faults.spawn_fail, vec![0.0, 0.1, 0.25, 0.5]);
+
+    let res = campaign::run_campaign(&spec, 3).unwrap();
+    let aggs = campaign::aggregate(&res.records);
+    assert_eq!(aggs.len(), 12, "3 modes x 4 spawn_fail scenarios");
+
+    let find = |mode: &str, rf: &str| {
+        aggs.iter()
+            .find(|a| a.scenario.contains(mode) && a.scenario.ends_with(rf))
+            .unwrap_or_else(|| panic!("no {mode} {rf} scenario"))
+    };
+
+    // Nothing is ever lost: every run drains all 30 jobs.
+    for r in &res.records {
+        assert_eq!(r.summary.jobs.len(), 30, "{}: jobs lost", r.plan.label);
+    }
+
+    // Rigid jobs never resize, so the fault axis is a no-op for them:
+    // identical makespans all the way across the sweep.
+    let fixed0 = find("-fixed", "-rf0");
+    for rf in ["-rf0.1", "-rf0.25", "-rf0.5"] {
+        let f = find("-fixed", rf);
+        assert_eq!(
+            fixed0.makespan_s.sum().to_bits(),
+            f.makespan_s.sum().to_bits(),
+            "resize faults perturbed rigid runs ({rf})"
+        );
+        assert_eq!(f.resize_attempts.sum(), 0.0);
+    }
+
+    // The malleable control column is transaction-free; the noisy end
+    // aborts and pays measurable retry time.
+    for mode in ["-sync", "-async"] {
+        let quiet = find(mode, "-rf0");
+        assert_eq!(quiet.resize_aborts.sum(), 0.0, "{mode} control column aborted");
+        assert_eq!(quiet.retry_time_s.sum(), 0.0);
+        let noisy = find(mode, "-rf0.5");
+        assert!(noisy.resize_attempts.sum() > 0.0, "{mode} rf0.5 never resized");
+        assert!(noisy.resize_aborts.sum() > 0.0, "{mode} rf0.5 never aborted");
+        assert!(noisy.retry_time_s.sum() > 0.0, "{mode} rf0.5 paid no retry time");
+    }
+}
+
+/// Satellite: the randomized rollback differential.  Drive the real
+/// [`Rms`] through thousands of random lifecycle transitions; every
+/// transaction that gets aborted must leave the job *exactly* as the
+/// pre-transaction snapshot recorded it (state, allocation, resize log,
+/// boost, expected end, requeue count, degradation flag), and
+/// `check_invariants()` — which rebuilds the availability profile from
+/// scratch and compares it entry-for-entry with the incrementally
+/// maintained one — must hold after every single op.
+#[test]
+fn rollback_restores_the_exact_pre_transaction_job_state() {
+    const NODES: usize = 64;
+    let snap = |j: &Job| {
+        (
+            j.state,
+            j.nodes.clone(),
+            j.resize_log
+                .iter()
+                .map(|e| (e.time, e.from_procs, e.to_procs))
+                .collect::<Vec<_>>(),
+            j.qos_boost,
+            j.expected_end,
+            j.requeues,
+            j.degraded,
+        )
+    };
+    let running_ids = |rms: &Rms, all: &[u64]| -> Vec<u64> {
+        all.iter()
+            .copied()
+            .filter(|&id| {
+                rms.job(id)
+                    .map(|j| j.state == JobState::Running && !j.is_resizer && !j.degraded)
+                    .unwrap_or(false)
+            })
+            .collect()
+    };
+
+    let mut rng = Rng::new(0xAB0_07);
+    let mut rms = Rms::new(RmsConfig { nodes: NODES, ..Default::default() });
+    let mut all: Vec<u64> = Vec::new();
+    let mut t = 0.0f64;
+    let mut next_name = 0u64;
+
+    for step in 0..2000 {
+        t += rng.exp(7.0);
+        match rng.below(10) {
+            0..=2 => {
+                let app = *rng.choice(&[
+                    dmr::apps::config::AppKind::Cg,
+                    dmr::apps::config::AppKind::Jacobi,
+                    dmr::apps::config::AppKind::NBody,
+                ]);
+                next_name += 1;
+                let spec =
+                    dmr::workload::JobSpec::from_app(app, format!("{app}-{next_name}"), t, 1.0);
+                all.push(rms.submit(spec, t));
+            }
+            3 | 4 => {
+                rms.schedule(t);
+            }
+            5 => {
+                let running = running_ids(&rms, &all);
+                if !running.is_empty() {
+                    let id = running[rng.below(running.len() as u64) as usize];
+                    rms.finish(id, t);
+                }
+            }
+            6 | 7 => {
+                // The differential itself: open a transaction, abort it
+                // at a random phase, compare against the snapshot.
+                let running = running_ids(&rms, &all);
+                if !running.is_empty() {
+                    let id = running[rng.below(running.len() as u64) as usize];
+                    let procs = rms.job(id).unwrap().procs();
+                    let before = snap(rms.job(id).unwrap());
+                    let phase = rng.below(3) as u8;
+                    if rng.below(2) == 0 && procs >= 2 {
+                        let to = procs / 2;
+                        if let Ok(DmrOutcome::Shrink { .. }) =
+                            rms.dmr_apply(id, Action::Shrink { to }, t)
+                        {
+                            rms.abort_shrink(id, t, phase);
+                            assert_eq!(
+                                snap(rms.job(id).unwrap()),
+                                before,
+                                "step {step}: aborted shrink leaked state"
+                            );
+                        }
+                    } else if let Ok(DmrOutcome::Expand { .. }) =
+                        rms.dmr_apply(id, Action::Expand { to: procs * 2 }, t)
+                    {
+                        rms.abort_expand_to(id, procs, t, phase);
+                        assert_eq!(
+                            snap(rms.job(id).unwrap()),
+                            before,
+                            "step {step}: aborted expand leaked state"
+                        );
+                    }
+                }
+            }
+            8 => {
+                // A committed resize, to interleave real reconfigurations
+                // with the aborted ones.
+                let running = running_ids(&rms, &all);
+                if !running.is_empty() {
+                    let id = running[rng.below(running.len() as u64) as usize];
+                    let procs = rms.job(id).unwrap().procs();
+                    if rng.below(2) == 0 && procs >= 2 {
+                        let to = procs / 2;
+                        if let Ok(DmrOutcome::Shrink { to, .. }) =
+                            rms.dmr_apply(id, Action::Shrink { to }, t)
+                        {
+                            rms.commit_shrink_to(id, to, t);
+                        }
+                    } else if let Ok(DmrOutcome::Expand { .. }) =
+                        rms.dmr_apply(id, Action::Expand { to: procs * 2 }, t)
+                    {
+                        rms.commit_resize(id, t);
+                    }
+                }
+            }
+            _ => {
+                // Degrade a job and verify the policy gate: further
+                // decisions pin to NoAction and leave it untouched.
+                let running = running_ids(&rms, &all);
+                if !running.is_empty() {
+                    let id = running[rng.below(running.len() as u64) as usize];
+                    let before_procs = rms.job(id).unwrap().procs();
+                    rms.degrade(id, t);
+                    assert!(
+                        matches!(
+                            rms.dmr_apply(id, Action::Expand { to: before_procs * 2 }, t),
+                            Ok(DmrOutcome::NoAction)
+                        ),
+                        "step {step}: degraded job still resizes"
+                    );
+                    let j = rms.job(id).unwrap();
+                    assert!(j.degraded && j.state == JobState::Running);
+                    assert_eq!(j.procs(), before_procs);
+                }
+            }
+        }
+        assert!(
+            rms.check_invariants(),
+            "step {step}: incremental profile diverged from the from-scratch rebuild"
+        );
+    }
+
+    // The mix must have exercised the transitions under test.
+    assert!(rms.completed_jobs() > 0);
+    assert!(rms.log.resize_aborts() > 0, "no transaction was ever aborted");
+    assert!(rms.log.resize_commits() + rms.log.shrinks() + rms.log.expansions() > 0);
+    assert!(rms.log.degradations() > 0, "no job was ever degraded");
+}

@@ -63,7 +63,7 @@ fn spawn_and_expand_state_transfer() {
                 let done_tx = done_tx.clone();
                 let gid = w2.spawn(4, move |nep| {
                     let m = nep.recv(RecvSelector::tag(TAG_STATE));
-                    let sm = StateMsg::decode(&m.payload);
+                    let sm = StateMsg::decode(&m.payload).expect("state frame decodes");
                     assert_eq!(sm.iter, 7);
                     done_tx.send((nep.rank(), sm.data)).unwrap();
                 });
