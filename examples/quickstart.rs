@@ -24,8 +24,8 @@ fn main() {
     //    expands/shrinks them per the paper's §4 policy.
     let flex = Engine::new(DesConfig::default()).run(&wl, "Flexible");
 
-    let f = RunSummary::from_run(&fixed);
-    let x = RunSummary::from_run(&flex);
+    let f = RunSummary::from_run(fixed);
+    let x = RunSummary::from_run(flex);
 
     println!("\n              {:>12} {:>12}", "fixed", "flexible");
     println!("makespan      {:>11.0}s {:>11.0}s  (gain {:.1}%)",

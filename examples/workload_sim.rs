@@ -104,8 +104,8 @@ fn main() -> anyhow::Result<()> {
     println!("\n=== Phase 2: DES 50-job workload (paper scale, virtual time) ===");
     let wl = workload::generate(50, 42);
     let fixed =
-        RunSummary::from_run(&Engine::new(DesConfig::default()).run(&wl.as_fixed(), "Fixed"));
-    let flex = RunSummary::from_run(&Engine::new(DesConfig::default()).run(&wl, "Flexible"));
+        RunSummary::from_run(Engine::new(DesConfig::default()).run(&wl.as_fixed(), "Fixed"));
+    let flex = RunSummary::from_run(Engine::new(DesConfig::default()).run(&wl, "Flexible"));
     println!(
         "fixed   : makespan {:>8.0}s  util {:>5.1}%  wait {:>7.0}s  exec {:>5.0}s",
         fixed.makespan, fixed.util_mean * 100.0, fixed.wait.mean(), fixed.exec.mean()

@@ -28,7 +28,7 @@ fn main() {
             }
         }
         let r = Engine::new(DesConfig::default()).run(&w, &format!("p{period}"));
-        let s = RunSummary::from_run(&r);
+        let s = RunSummary::from_run(r);
         let acts = s.actions.expand.count() + s.actions.shrink.count();
         t.row(vec![
             format!("{period}"),

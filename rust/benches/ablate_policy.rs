@@ -21,7 +21,7 @@ fn run_cfg(policy: PolicyConfig, boost: bool, backfill: bool, label: &str) -> Ru
         ..Default::default()
     };
     let w = workload::generate(100, common::SEED);
-    RunSummary::from_run(&Engine::new(cfg).run(&w, label))
+    RunSummary::from_run(Engine::new(cfg).run(&w, label))
 }
 
 fn main() {
@@ -41,7 +41,7 @@ fn main() {
     let no_backfill = run_cfg(PolicyConfig::default(), true, false, "no-backfill");
     let fixed = {
         let w = workload::generate(100, common::SEED).as_fixed();
-        RunSummary::from_run(&Engine::new(DesConfig::default()).run(&w, "rigid"))
+        RunSummary::from_run(Engine::new(DesConfig::default()).run(&w, "rigid"))
     };
 
     let mut t = Table::new(vec!["Variant", "Makespan (s)", "Wait (s)", "Exec (s)", "Util (%)", "Actions"]);

@@ -18,7 +18,7 @@ pub fn run(jobs: usize, seed: u64, mode: SchedMode, flexible: bool, label: &str)
     let w = workload::generate(jobs, seed);
     let w = if flexible { w } else { w.as_fixed() };
     let cfg = DesConfig { mode, ..Default::default() };
-    RunSummary::from_run(&Engine::new(cfg).run(&w, label))
+    RunSummary::from_run(Engine::new(cfg).run(&w, label))
 }
 
 pub fn banner(name: &str, what: &str) {

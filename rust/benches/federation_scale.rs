@@ -19,6 +19,7 @@ use dmr::des::{DesConfig, Engine};
 use dmr::dmr::SchedMode;
 use dmr::federation::{FedEngine, FederationConfig, FedRunResult, RoutingPolicy, ShardSpec};
 use dmr::metrics::report::{bench_json, BenchRecord};
+use dmr::obs::Phase;
 use dmr::rms::RmsConfig;
 use dmr::util::rng::Rng;
 use dmr::util::table::Table;
@@ -174,6 +175,9 @@ fn main() {
             wall_secs: wall,
             makespan_s: rb.makespan,
             checksum: sum_b,
+            dispatch_ns: rb.profile.total_ns(),
+            sched_ns: rb.profile.wall_ns(Phase::Schedule),
+            dmr_ns: rb.profile.wall_ns(Phase::Dmr),
         });
     }
     println!("{}", t.render());

@@ -26,6 +26,7 @@ use std::time::Instant;
 use dmr::des::{DesConfig, Engine};
 use dmr::dmr::SchedMode;
 use dmr::metrics::report::{bench_checksum, bench_json, BenchRecord};
+use dmr::obs::{Phase, PhaseProfile};
 use dmr::rms::RmsConfig;
 use dmr::util::rng::Rng;
 use dmr::util::table::Table;
@@ -92,7 +93,7 @@ fn reference_path() -> bool {
     std::env::var("HOTPATH_REFERENCE").map(|v| v == "1").unwrap_or(false)
 }
 
-fn run_once(case: &Case, w: &WorkloadSpec) -> (u64, f64, f64, String, u64) {
+fn run_once(case: &Case, w: &WorkloadSpec) -> (u64, f64, f64, String, u64, PhaseProfile) {
     let mode = if case.mode == "async" { SchedMode::Async } else { SchedMode::Sync };
     let cfg = DesConfig {
         rms: RmsConfig {
@@ -109,7 +110,7 @@ fn run_once(case: &Case, w: &WorkloadSpec) -> (u64, f64, f64, String, u64) {
     let checksum = bench_checksum(&r.rms.log, r.makespan);
     let stats = r.rms.pass_stats();
     let elided = stats.sched_elided + stats.dmr_elided;
-    (r.events, wall, r.makespan, checksum, elided)
+    (r.events, wall, r.makespan, checksum, elided, r.profile)
 }
 
 fn main() {
@@ -143,8 +144,8 @@ fn main() {
         let scenario = format!("{}{}-n{}-{}", case.workload, case.jobs, case.nodes, case.mode);
         let w = materialize(case);
         // Cold run: determinism reference.  Warm run: the measurement.
-        let (ev_a, _, mk_a, sum_a, _) = run_once(case, &w);
-        let (ev_b, wall, mk_b, sum_b, elided) = run_once(case, &w);
+        let (ev_a, _, mk_a, sum_a, _, _) = run_once(case, &w);
+        let (ev_b, wall, mk_b, sum_b, elided, profile) = run_once(case, &w);
         assert_eq!(
             sum_a, sum_b,
             "{scenario}: determinism checksum mismatch ({mk_a} vs {mk_b})"
@@ -169,6 +170,9 @@ fn main() {
             wall_secs: wall,
             makespan_s: mk_b,
             checksum: sum_b,
+            dispatch_ns: profile.total_ns(),
+            sched_ns: profile.wall_ns(Phase::Schedule),
+            dmr_ns: profile.wall_ns(Phase::Dmr),
         });
     }
     println!("{}", t.render());

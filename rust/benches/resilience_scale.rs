@@ -21,6 +21,7 @@ use std::time::Instant;
 use dmr::des::{DesConfig, Engine};
 use dmr::dmr::SchedMode;
 use dmr::metrics::report::{bench_checksum, bench_json, BenchRecord};
+use dmr::obs::{Phase, PhaseProfile};
 use dmr::resilience::{
     DrainSet, DrainWindow, FaultKind, FaultSpec, FaultTraceEvent, RecoveryConfig,
     ResilienceConfig, ResizeFaultSpec,
@@ -75,7 +76,7 @@ fn materialize(case: &Case) -> WorkloadSpec {
     }
 }
 
-fn run_once(case: &Case, w: &WorkloadSpec) -> (u64, f64, f64, String, u64, u64, u64) {
+fn run_once(case: &Case, w: &WorkloadSpec) -> (u64, f64, f64, String, u64, u64, u64, PhaseProfile) {
     let mut resilience = fault_model();
     if case.resize_faults() {
         // The transactional-resize trajectory point: a third of the
@@ -108,6 +109,7 @@ fn run_once(case: &Case, w: &WorkloadSpec) -> (u64, f64, f64, String, u64, u64, 
         r.resilience.node_failures,
         r.resilience.rescued + r.resilience.requeued,
         r.resilience.resize_aborts,
+        r.profile,
     )
 }
 
@@ -135,8 +137,9 @@ fn main() {
         let scenario = format!("faulty-feitelson{}-n{}-{}", case.jobs, case.nodes, case.mode);
         let w = materialize(case);
         // Cold run: determinism reference.  Warm run: the measurement.
-        let (ev_a, _, mk_a, sum_a, _, _, aborts_a) = run_once(case, &w);
-        let (ev_b, wall, mk_b, sum_b, failures, recoveries, aborts_b) = run_once(case, &w);
+        let (ev_a, _, mk_a, sum_a, _, _, aborts_a, _) = run_once(case, &w);
+        let (ev_b, wall, mk_b, sum_b, failures, recoveries, aborts_b, profile) =
+            run_once(case, &w);
         assert_eq!(
             sum_a, sum_b,
             "{scenario}: determinism checksum mismatch (makespans {mk_a} / {mk_b})"
@@ -169,6 +172,9 @@ fn main() {
             wall_secs: wall,
             makespan_s: mk_b,
             checksum: sum_b,
+            dispatch_ns: profile.total_ns(),
+            sched_ns: profile.wall_ns(Phase::Schedule),
+            dmr_ns: profile.wall_ns(Phase::Dmr),
         });
     }
     println!("{}", t.render());

@@ -65,6 +65,22 @@ pub struct ScenarioAgg {
     pub retry_time_s: Summary,
     /// Jobs degraded to non-malleable per run.
     pub degraded_jobs: Summary,
+    // --- self-profile counters (crate::obs) ----------------------------
+    /// Scheduling passes executed per run (deterministic counter).
+    pub sched_passes: Summary,
+    /// Provably no-op scheduling passes elided per run.
+    pub sched_elided: Summary,
+    /// DMR policy checks evaluated per run.
+    pub dmr_checks: Summary,
+    /// Memoized (elided) DMR checks per run.
+    pub dmr_elided: Summary,
+    /// Total DES events across the scenario's runs (the events/s
+    /// numerator of the stdout table).
+    pub events_total: u64,
+    /// Total wall nanoseconds the engines spent dispatching across the
+    /// scenario's runs.  Timing noise: feeds the stdout table only,
+    /// never the CSVs/JSON.
+    pub wall_ns_total: u64,
     // --- federation measures (crate::federation) -----------------------
     /// Shard count of the scenario (1 for flat scenarios).
     pub fed_shards: usize,
@@ -103,6 +119,12 @@ impl ScenarioAgg {
             resize_aborts: Summary::new(),
             retry_time_s: Summary::new(),
             degraded_jobs: Summary::new(),
+            sched_passes: Summary::new(),
+            sched_elided: Summary::new(),
+            dmr_checks: Summary::new(),
+            dmr_elided: Summary::new(),
+            events_total: 0,
+            wall_ns_total: 0,
             fed_shards: 1,
             fed_steals: Summary::new(),
             shard_util: Vec::new(),
@@ -134,6 +156,12 @@ impl ScenarioAgg {
         self.resize_aborts.push(s.resilience.resize_aborts as f64);
         self.retry_time_s.push(s.resilience.retry_time);
         self.degraded_jobs.push(s.resilience.degraded_jobs as f64);
+        self.sched_passes.push(s.passes.sched_passes as f64);
+        self.sched_elided.push(s.passes.sched_elided as f64);
+        self.dmr_checks.push(s.passes.dmr_checks as f64);
+        self.dmr_elided.push(s.passes.dmr_elided as f64);
+        self.events_total += s.events;
+        self.wall_ns_total += s.profile.total_ns();
         match &s.federation {
             Some(f) => {
                 self.fed_shards = f.shards;
@@ -230,5 +258,11 @@ jobs = 6
         // the flexible scenario actually reconfigures
         let sync = aggs.iter().find(|a| a.scenario.ends_with("-sync")).unwrap();
         assert!(sync.expands.sum() + sync.shrinks.sum() > 0.0);
+        // self-profile counters ride along per scenario
+        for a in &aggs {
+            assert_eq!(a.sched_passes.count(), 3);
+            assert!(a.sched_passes.mean() > 0.0);
+            assert!(a.events_total > 0);
+        }
     }
 }

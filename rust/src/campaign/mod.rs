@@ -23,7 +23,10 @@ pub mod runner;
 pub mod spec;
 
 pub use aggregate::{aggregate, write_outputs, CampaignOutputs, ScenarioAgg};
-pub use runner::{run_campaign, CampaignResult, RunRecord};
+pub use runner::{
+    run_campaign, run_campaign_opts, run_plan, CampaignOpts, CampaignResult, RunRecord,
+};
 pub use spec::{
-    CampaignSpec, FedAxis, FedPlan, PolicyAxis, RunMode, RunPlan, WorkloadAxis, WorkloadSource,
+    CampaignSpec, FedAxis, FedPlan, PolicyAxis, RunMode, RunPlan, TraceAxis, WorkloadAxis,
+    WorkloadSource,
 };

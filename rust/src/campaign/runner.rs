@@ -8,6 +8,7 @@
 //! count or scheduling order, which `tests/test_campaign.rs` locks in.
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -18,6 +19,7 @@ use super::spec::{CampaignSpec, RunPlan, WorkloadSource};
 use crate::des::{DesConfig, Engine};
 use crate::federation::{FedEngine, FederationConfig};
 use crate::metrics::RunSummary;
+use crate::obs::{Trace, TraceConfig, TraceStats};
 use crate::resilience::{FaultSpec, RecoveryConfig, ResilienceConfig};
 use crate::rms::{PolicyConfig, RmsConfig};
 use crate::workload::{self, swf, BurstLullParams, FeitelsonParams, WorkloadSpec};
@@ -28,6 +30,26 @@ pub struct RunRecord {
     /// Jobs in the materialized workload (after `max_jobs` etc.).
     pub jobs: usize,
     pub summary: RunSummary,
+    /// Stats of the trace exported for this run (`None` when tracing is
+    /// off or the export failed — failures warn, they never kill a run).
+    pub trace: Option<TraceStats>,
+}
+
+/// Runtime knobs of one campaign invocation that live outside the spec:
+/// worker count, the stderr progress line, and span-trace export.  None
+/// of them may influence the deterministic outputs — tracing is post-run
+/// and the progress line goes to stderr only.
+#[derive(Debug, Clone, Default)]
+pub struct CampaignOpts {
+    /// Worker threads (0 = resolve from the spec / machine).
+    pub workers: usize,
+    /// Emit a periodic `completed/total (ETA)` line on stderr.
+    pub progress: bool,
+    /// Write per-run Chrome-trace + JSONL exports under this directory.
+    pub trace_dir: Option<PathBuf>,
+    /// Stride/cap knobs for the exported traces (enabled flag included —
+    /// both it and `trace_dir` must be set for exports to happen).
+    pub trace_cfg: TraceConfig,
 }
 
 /// Everything a campaign produced.
@@ -79,12 +101,22 @@ pub fn resolve_workers(spec: &CampaignSpec, override_workers: usize) -> usize {
 /// Run the full campaign matrix on `workers` threads (0 = resolve from
 /// the spec / machine).
 pub fn run_campaign(spec: &CampaignSpec, workers: usize) -> Result<CampaignResult> {
+    run_campaign_opts(spec, &CampaignOpts { workers, ..Default::default() })
+}
+
+/// Run the full campaign matrix with explicit runtime options
+/// ([`run_campaign`] is the plain wrapper).  The deterministic outputs
+/// are identical for every `opts` value: progress reporting writes to
+/// stderr only and trace export happens after each run's event log is
+/// sealed.
+pub fn run_campaign_opts(spec: &CampaignSpec, opts: &CampaignOpts) -> Result<CampaignResult> {
     let plans = spec.expand();
-    let workers = resolve_workers(spec, workers).min(plans.len().max(1));
+    let workers = resolve_workers(spec, opts.workers).min(plans.len().max(1));
     let traces = preload_traces(spec)?;
     let t0 = Instant::now();
 
     let next = AtomicUsize::new(0);
+    let completed = AtomicUsize::new(0);
     let slots: Mutex<Vec<Option<RunRecord>>> =
         Mutex::new((0..plans.len()).map(|_| None).collect());
 
@@ -93,8 +125,12 @@ pub fn run_campaign(spec: &CampaignSpec, workers: usize) -> Result<CampaignResul
             scope.spawn(|| loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 let Some(plan) = plans.get(i) else { return };
-                let record = execute_plan(spec, plan, &traces);
+                let record = execute_plan(spec, plan, &traces, opts);
                 slots.lock().unwrap()[i] = Some(record);
+                if opts.progress {
+                    let done = completed.fetch_add(1, Ordering::Relaxed) + 1;
+                    report_progress(&spec.name, done, plans.len(), t0);
+                }
             });
         }
     });
@@ -106,6 +142,27 @@ pub fn run_campaign(spec: &CampaignSpec, workers: usize) -> Result<CampaignResul
         .map(|r| r.expect("worker filled every slot"))
         .collect();
     Ok(CampaignResult { records, workers, wall_secs: t0.elapsed().as_secs_f64() })
+}
+
+/// Execute a single matrix point outside the worker pool — the
+/// `repro trace <scenario>` one-run path.  Preloads any SWF trace the
+/// plan's workload references, so it is self-contained.
+pub fn run_plan(spec: &CampaignSpec, plan: &RunPlan, opts: &CampaignOpts) -> Result<RunRecord> {
+    let traces = preload_traces(spec)?;
+    Ok(execute_plan(spec, plan, &traces, opts))
+}
+
+/// Periodic `completed/total (ETA)` line on stderr, behind `--progress`.
+/// Throttled to ~20 updates per campaign so huge matrices don't flood the
+/// terminal; always fires on the final run.
+fn report_progress(name: &str, done: usize, total: usize, t0: Instant) {
+    let step = (total / 20).max(1);
+    if done % step != 0 && done != total {
+        return;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let eta = elapsed / done as f64 * (total - done) as f64;
+    eprintln!("campaign {name}: {done}/{total} runs ({eta:.0}s left)");
 }
 
 /// Load every SWF trace referenced by the spec once, up front (they are
@@ -137,6 +194,7 @@ fn execute_plan(
     spec: &CampaignSpec,
     plan: &RunPlan,
     traces: &HashMap<String, swf::SwfTrace>,
+    opts: &CampaignOpts,
 ) -> RunRecord {
     let axis = &spec.workloads[plan.workload];
     let mut w = materialize(&axis.source, plan, traces);
@@ -182,8 +240,18 @@ fn execute_plan(
         ..Default::default()
     };
     let jobs = w.len();
-    let summary = match &plan.federation {
-        None => RunSummary::from_run(&Engine::new(cfg).run(&w, &plan.label)),
+    // Trace derivation must precede summarization (from_run takes the
+    // RunResult by value); it reads the sealed event log only, so the run
+    // itself is untouched.
+    let tracing = opts.trace_cfg.enabled && opts.trace_dir.is_some();
+    let (summary, trace) = match &plan.federation {
+        None => {
+            let result = Engine::new(cfg).run(&w, &plan.label);
+            let trace = tracing
+                .then(|| Trace::from_run(&result, &opts.trace_cfg))
+                .and_then(|t| export_trace(t, plan, opts));
+            (RunSummary::from_run(result), trace)
+        }
         Some(fp) => {
             let fed = FederationConfig {
                 shards: fp.shards.clone(),
@@ -192,10 +260,27 @@ fn execute_plan(
                 shard_faults: shard_fault_specs(spec, fp, &cfg),
             };
             let result = FedEngine::new(cfg, fed).run(&w, &plan.label);
-            RunSummary::from_fed(&result, fp.routing, fp.steal)
+            let trace = tracing
+                .then(|| Trace::from_fed(&result, &opts.trace_cfg))
+                .and_then(|t| export_trace(t, plan, opts));
+            (RunSummary::from_fed(&result, fp.routing, fp.steal), trace)
         }
     };
-    RunRecord { plan: plan.clone(), jobs, summary }
+    RunRecord { plan: plan.clone(), jobs, summary, trace }
+}
+
+/// Write the run's trace files.  Export failures warn and yield `None` —
+/// a full disk must not abort a long sweep.
+fn export_trace(trace: Trace, plan: &RunPlan, opts: &CampaignOpts) -> Option<TraceStats> {
+    let dir: &Path = opts.trace_dir.as_deref()?;
+    let stats = trace.stats();
+    match trace.write_files(dir, &plan.label) {
+        Ok(_) => Some(stats),
+        Err(e) => {
+            crate::obs::log::warn(&format!("trace export for {} failed: {e}", plan.label));
+            None
+        }
+    }
 }
 
 /// Build the per-shard fault list from the spec's
@@ -494,6 +579,50 @@ jobs = 10
             "shard-targeted MTBF override produced no downtime"
         );
         assert_eq!(n.records[0].summary.jobs.len(), 10, "workload still drains");
+    }
+
+    #[test]
+    fn trace_export_rides_along_without_changing_outputs() {
+        let spec = tiny_spec();
+        let plain = run_campaign(&spec, 1).unwrap();
+        let dir = std::env::temp_dir()
+            .join(format!("dmr_runner_trace_{}", std::process::id()));
+        let opts = CampaignOpts {
+            workers: 2,
+            trace_dir: Some(dir.clone()),
+            trace_cfg: TraceConfig::on(),
+            ..Default::default()
+        };
+        let traced = run_campaign_opts(&spec, &opts).unwrap();
+        assert_eq!(plain.records.len(), traced.records.len());
+        for (a, b) in plain.records.iter().zip(&traced.records) {
+            assert!(a.trace.is_none(), "tracing defaults to off");
+            let st = b.trace.expect("trace stats recorded per run");
+            assert!(st.job_tracks_kept > 0);
+            assert!(st.spans > 0);
+            assert_eq!(
+                a.summary.makespan.to_bits(),
+                b.summary.makespan.to_bits(),
+                "{}: tracing must be observationally inert",
+                b.plan.label
+            );
+            let json = dir.join(format!("{}.trace.json", b.plan.label));
+            let jsonl = dir.join(format!("{}.spans.jsonl", b.plan.label));
+            assert!(json.is_file(), "missing {}", json.display());
+            assert!(jsonl.is_file(), "missing {}", jsonl.display());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn run_plan_executes_a_single_matrix_point() {
+        let spec = tiny_spec();
+        let plan = spec.expand().into_iter().next().unwrap();
+        let rec = run_plan(&spec, &plan, &CampaignOpts::default()).unwrap();
+        assert_eq!(rec.plan.label, plan.label);
+        assert_eq!(rec.jobs, 8);
+        assert!(rec.summary.makespan > 0.0);
+        assert!(rec.trace.is_none());
     }
 
     #[test]

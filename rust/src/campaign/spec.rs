@@ -364,6 +364,24 @@ pub struct RunPlan {
     pub federation: Option<FedPlan>,
 }
 
+/// The optional `[trace]` block: default stride/cap knobs applied when the
+/// campaign runs with `--trace <dir>` (the CLI flags override them).  Not
+/// a sweep axis — tracing is post-run and never changes scenario ids or
+/// outputs, so there is nothing to sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceAxis {
+    /// Keep every `stride`-th job track (1 = every job).
+    pub stride: usize,
+    /// Upper bound on kept job tracks (0 = unlimited).
+    pub cap: usize,
+}
+
+impl Default for TraceAxis {
+    fn default() -> Self {
+        TraceAxis { stride: 1, cap: 0 }
+    }
+}
+
 /// A parsed campaign specification.
 #[derive(Debug, Clone)]
 pub struct CampaignSpec {
@@ -389,6 +407,8 @@ pub struct CampaignSpec {
     pub resize_faults: ResizeFaultAxis,
     /// Federation axis (`None` = no `[federation]` block, flat runs).
     pub federation: Option<FedAxis>,
+    /// Default trace-export knobs for `--trace` runs (`[trace]` block).
+    pub trace: TraceAxis,
 }
 
 impl CampaignSpec {
@@ -529,6 +549,11 @@ impl CampaignSpec {
             Some(f) => Some(parse_federation(f, &nodes)?),
         };
 
+        let trace = match v.get("trace") {
+            None => TraceAxis::default(),
+            Some(t) => parse_trace(t)?,
+        };
+
         // A duplicate entry on any swept axis would emit two *non-adjacent*
         // scenario blocks with identical ids; aggregate() merges only
         // adjacent records, so the aggregate CSV would carry duplicate
@@ -563,6 +588,7 @@ impl CampaignSpec {
             faults,
             resize_faults,
             federation,
+            trace,
         })
     }
 
@@ -1129,6 +1155,26 @@ fn parse_federation(f: &Json, nodes: &[usize]) -> Result<FedAxis> {
     Ok(FedAxis { shards, routing, steal, topology, shard_faults })
 }
 
+/// Parse the `[trace]` block (see `scenarios/README.md` for the schema).
+fn parse_trace(t: &Json) -> Result<TraceAxis> {
+    let d = TraceAxis::default();
+    let stride = match t.get("stride") {
+        None => d.stride,
+        Some(x) => {
+            let s = usize_scalar(Some(x), "trace.stride")?;
+            if s == 0 {
+                bail!("`trace.stride` must be positive (1 keeps every job)");
+            }
+            s
+        }
+    };
+    let cap = match t.get("cap") {
+        None => d.cap,
+        Some(x) => usize_scalar(Some(x), "trace.cap")?,
+    };
+    Ok(TraceAxis { stride, cap })
+}
+
 fn usize_list(v: Option<&Json>, what: &str) -> Result<Option<Vec<usize>>> {
     match v {
         None => Ok(None),
@@ -1294,6 +1340,31 @@ malleable_fraction = 0.5
         assert_eq!(ids.len(), 18);
         assert_eq!(plans[0].scenario, "feitelson10-n32-fixed");
         assert_eq!(plans[0].label, "feitelson10-n32-fixed-s1");
+    }
+
+    #[test]
+    fn trace_block_parses_with_defaults() {
+        let none = CampaignSpec::from_toml_str(
+            "name = \"t\"\n[[workload]]\nkind = \"feitelson\"\njobs = 4\n",
+        )
+        .unwrap();
+        assert_eq!(none.trace, TraceAxis::default());
+        assert_eq!(none.trace.stride, 1, "default keeps every job track");
+        assert_eq!(none.trace.cap, 0, "default is uncapped");
+        let some = CampaignSpec::from_toml_str(
+            "name = \"t\"\n[trace]\nstride = 4\ncap = 100\n\
+             [[workload]]\nkind = \"feitelson\"\njobs = 4\n",
+        )
+        .unwrap();
+        assert_eq!(some.trace, TraceAxis { stride: 4, cap: 100 });
+        assert!(
+            CampaignSpec::from_toml_str(
+                "name = \"t\"\n[trace]\nstride = 0\n\
+                 [[workload]]\nkind = \"feitelson\"\njobs = 4\n",
+            )
+            .is_err(),
+            "zero stride rejected"
+        );
     }
 
     #[test]

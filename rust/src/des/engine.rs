@@ -54,6 +54,7 @@ use super::execmodel::ExecModel;
 use super::sched_cost::CostModel;
 use crate::cluster::NodeState;
 use crate::dmr::{Inhibitor, SchedMode};
+use crate::obs::{Phase, PhaseProfile};
 use crate::federation::{FedRunResult, FederationConfig, RoutingPolicy, ShardRun};
 use crate::resilience::{
     feasible_shrink, resize, FaultKind, FaultSpec, ResilienceConfig, ResilienceStats,
@@ -131,6 +132,11 @@ pub struct RunResult {
     /// Fault-injection measures (all zero / availability 1.0 when the
     /// resilience config is inactive).
     pub resilience: ResilienceStats,
+    /// Host-side wall-clock profile of the engine's hot phases.  Purely
+    /// observational (no RNG, no heap, no effect on the event stream);
+    /// values are timing noise and must never enter deterministic
+    /// outputs — see [`crate::obs::profile`].
+    pub profile: PhaseProfile,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -425,6 +431,9 @@ pub struct Engine {
     done: usize,
     user_jobs: usize,
     first_submit: Time,
+    /// Wall-clock phase counters (observational only — never read by the
+    /// simulation).
+    profile: PhaseProfile,
 }
 
 impl Engine {
@@ -478,6 +487,7 @@ impl Engine {
             done: 0,
             user_jobs: 0,
             first_submit: f64::INFINITY,
+            profile: PhaseProfile::new(),
         }
     }
 
@@ -511,6 +521,7 @@ impl Engine {
             events: self.events,
             resilience: sh.stats,
             rms: sh.rms,
+            profile: self.profile,
         }
     }
 
@@ -562,6 +573,7 @@ impl Engine {
             events: self.events,
             resilience: merged,
             shards,
+            profile: self.profile,
         }
     }
 
@@ -609,6 +621,7 @@ impl Engine {
                 }
             }
             self.down_last_t = self.now;
+            let t_dispatch = std::time::Instant::now();
             match ev.kind {
                 EvKind::Arrival(i) => {
                     let s = self.route(&workload.jobs[i]);
@@ -632,6 +645,8 @@ impl Engine {
             if steal_on {
                 self.try_steal();
             }
+            self.profile
+                .record(Phase::Dispatch, t_dispatch.elapsed().as_nanos() as u64);
             if self.done == self.user_jobs {
                 break;
             }
@@ -801,7 +816,9 @@ impl Engine {
     }
 
     fn try_schedule(&mut self, s: usize) {
+        let t0 = std::time::Instant::now();
         self.shards[s].rms.schedule(self.now);
+        self.profile.record(Phase::Schedule, t0.elapsed().as_nanos() as u64);
         self.drain_started(s);
     }
 
@@ -963,6 +980,7 @@ impl Engine {
         }
 
         let mode = self.cfg.mode;
+        let t_dmr = std::time::Instant::now();
         let outcome: Result<DmrOutcome, usize> = match mode {
             SchedMode::Sync => Ok(self.shards[s].rms.dmr_check(ev.job, &req, self.now)),
             SchedMode::Async => {
@@ -985,6 +1003,7 @@ impl Engine {
                 }
             }
         };
+        self.profile.record(Phase::Dmr, t_dmr.elapsed().as_nanos() as u64);
 
         match outcome {
             Ok(DmrOutcome::NoAction) => {

@@ -18,8 +18,9 @@ impl Inhibitor {
 
     /// Period from the environment override, falling back to `default`.
     /// An unusable `DMR_INHIBIT_PERIOD` (non-numeric, empty, negative or
-    /// non-finite) falls back too, but says so on stderr once per process
-    /// instead of silently ignoring the knob the user tried to turn.
+    /// non-finite) falls back too, but says so once per process through
+    /// [`crate::obs::log`] (so `DMR_LOG=off` silences it) instead of
+    /// silently ignoring the knob the user tried to turn.
     pub fn from_env(default: f64) -> Self {
         let period = match std::env::var("DMR_INHIBIT_PERIOD") {
             Err(_) => default,
@@ -28,10 +29,10 @@ impl Inhibitor {
                 Err(why) => {
                     static WARN_ONCE: std::sync::Once = std::sync::Once::new();
                     WARN_ONCE.call_once(|| {
-                        eprintln!(
-                            "warning: ignoring DMR_INHIBIT_PERIOD={raw:?} ({why}); \
+                        crate::obs::log::warn(&format!(
+                            "ignoring DMR_INHIBIT_PERIOD={raw:?} ({why}); \
                              using default {default}s"
-                        );
+                        ));
                     });
                     default
                 }

@@ -223,6 +223,9 @@ pub struct FedRunResult {
     pub resilience: ResilienceStats,
     /// Per-shard final states, in shard-id order.
     pub shards: Vec<ShardRun>,
+    /// Host-side wall-clock profile of the shared event loop (global,
+    /// not per-shard).  Observational only — see [`crate::obs::profile`].
+    pub profile: crate::obs::PhaseProfile,
 }
 
 impl FedRunResult {

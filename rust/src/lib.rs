@@ -183,6 +183,23 @@
 //!   `scenarios/faulty_cluster.toml` for the malleable-vs-rigid
 //!   comparison under an identical fault trace.
 //!
+//! ## Observability
+//!
+//! The [`obs`] subsystem makes runs *inspectable* without making them
+//! different: [`obs::trace`] derives per-job lifecycle spans (pending /
+//! running / resize-transaction) and per-shard machine-fault spans
+//! **post-run** from the digest-locked event log and streams them as
+//! Chrome-trace/Perfetto JSON + JSONL (`repro trace <scenario>`,
+//! `repro campaign … --trace <dir>`, stride/cap knobs for bounded size);
+//! [`obs::profile`] instruments the engine's hot phases (event dispatch,
+//! schedule pass, DMR pass) with fixed-array wall-clock counters — no
+//! RNG, no heap — reported via the campaign table and `BENCH_*.json`
+//! while the worker-count-invariant CSVs carry the deterministic
+//! [`rms::PassStats`] counters; [`obs::log`] gives the crate's stderr
+//! diagnostics a `DMR_LOG=off|warn|info|debug` filter.  Tracing on vs
+//! off is bit-identical (event-log digest + makespan) by construction
+//! and by test (`rust/tests/test_obs.rs`).
+//!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
@@ -194,6 +211,7 @@ pub mod dmr;
 pub mod federation;
 pub mod live;
 pub mod metrics;
+pub mod obs;
 pub mod resilience;
 pub mod rms;
 pub mod runtime;

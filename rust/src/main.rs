@@ -61,7 +61,10 @@ USAGE: repro <SUBCOMMAND> [--jobs N] [--seed S] [--nodes N] [--sizes 50,100,200,
   throughput   Table 4 + Fig 4 + Fig 5: workload sweep fixed vs flexible
   table2       Table 2: action analysis (sync vs async scheduling)
   table3       Table 3: cluster and job measures (400-job workloads)
-  trace        Fig 6: time evolution (default --jobs 50)
+  trace        Fig 6: time evolution (default --jobs 50), or with a
+               scenario file: repro trace <spec.toml> [--run I] [--trace DIR]
+               runs one matrix point and exports a Chrome/Perfetto trace
+               (open the .trace.json in ui.perfetto.dev or chrome://tracing)
   perjob       Fig 7/8: per-job times by application (default --jobs 50)
   overhead     Fig 3: live scheduling + resize overheads (--mb payload)
   live         run a small live workload with real PJRT compute
@@ -71,9 +74,14 @@ USAGE: repro <SUBCOMMAND> [--jobs N] [--seed S] [--nodes N] [--sizes 50,100,200,
                --workers must be >= 1, omit for one thread per core;
                --dry-run prints the expanded scenario matrix and exits;
                a [federation] block shards the cluster under a
-               meta-scheduler — see scenarios/federated_sweep.toml)
+               meta-scheduler — see scenarios/federated_sweep.toml;
+               --trace DIR exports per-run Chrome traces there, with
+               --trace-stride N / --trace-cap N bounding the job tracks;
+               --progress prints completed/total (ETA) lines on stderr.
+               Boolean flags go AFTER the spec path)
   all          every DES-based artifact
 
+Set DMR_LOG=off|warn|info|debug to filter stderr diagnostics (default warn).
 Results are also written as CSV under results/.";
 
     fn cfg(args: &Args, mode: SchedMode) -> DesConfig {
@@ -99,7 +107,7 @@ Results are also written as CSV under results/.";
         } else {
             "Fixed"
         };
-        RunSummary::from_run(&Engine::new(cfg(args, mode)).run(&w, label))
+        RunSummary::from_run(Engine::new(cfg(args, mode)).run(&w, label))
     }
 
     fn throughput(args: &Args) -> Result<()> {
@@ -180,6 +188,17 @@ Results are also written as CSV under results/.";
     }
 
     fn trace(args: &Args) -> Result<()> {
+        // `repro trace <scenario.toml|.json>` (an existing spec file) is
+        // the one-run span-trace exporter; without a scenario file the
+        // legacy Fig 6 path runs.
+        if let Some(path) = args.positional.first() {
+            anyhow::ensure!(
+                std::path::Path::new(path).is_file(),
+                "scenario file {path:?} not found (repro trace with no \
+                 positional argument renders Fig 6)"
+            );
+            return trace_scenario(args, path);
+        }
         let jobs = args.get_parse("jobs", 50usize);
         let seed = args.get_parse("seed", 42u64);
         let fixed = summarize(args, jobs, seed, SchedMode::Sync, false);
@@ -194,6 +213,52 @@ Results are also written as CSV under results/.";
         let mut rows = series(&fixed, "alloc-fixed");
         rows.extend(series(&flex, "alloc-flex"));
         write_csv("results/fig6_trace.csv", &["series", "t_s", "value"], &rows)?;
+        Ok(())
+    }
+
+    /// `repro trace <scenario>`: run one matrix point of a campaign spec
+    /// and export its Chrome-trace + JSONL span files.
+    fn trace_scenario(args: &Args, path: &str) -> Result<()> {
+        use anyhow::Context as _;
+        use dmr::campaign::{self, CampaignOpts, CampaignSpec};
+        use dmr::obs::TraceConfig;
+
+        let spec = CampaignSpec::from_file(path)?;
+        let plans = spec.expand();
+        let run = args.get_parse("run", 0usize);
+        let plan = plans.get(run).with_context(|| {
+            format!("--run {run} is out of range (matrix has {} runs)", plans.len())
+        })?;
+        let dir = args
+            .get("trace")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| spec.output_dir.join("traces"));
+        let opts = CampaignOpts {
+            workers: 1,
+            trace_dir: Some(dir.clone()),
+            trace_cfg: TraceConfig {
+                enabled: true,
+                stride: args.get_parse("trace-stride", spec.trace.stride),
+                cap: args.get_parse("trace-cap", spec.trace.cap),
+            },
+            ..Default::default()
+        };
+        eprintln!("[trace] {} (run {run}/{}) ...", plan.label, plans.len());
+        let rec = campaign::run_plan(&spec, plan, &opts)?;
+        let st = rec.trace.context("trace export failed (see warnings above)")?;
+        println!(
+            "trace {}: {} spans ({} job spans, {} instants), {}/{} job tracks kept",
+            rec.plan.label,
+            st.spans,
+            st.job_spans,
+            st.instants,
+            st.job_tracks_kept,
+            st.job_tracks_total
+        );
+        println!("  profile: {}", rec.summary.profile.summary_line(rec.summary.events));
+        println!("  wrote {}", dir.join(format!("{}.trace.json", rec.plan.label)).display());
+        println!("  wrote {}", dir.join(format!("{}.spans.jsonl", rec.plan.label)).display());
+        println!("  open the .trace.json in ui.perfetto.dev or chrome://tracing");
         Ok(())
     }
 
@@ -249,13 +314,24 @@ Results are also written as CSV under results/.";
         use dmr::campaign::{self, CampaignSpec};
         use dmr::metrics::report;
 
-        let path = args
-            .positional
-            .first()
-            .context("usage: repro campaign <spec.toml|spec.json> [--workers N] [--dry-run]")?;
+        let path = args.positional.first().context(
+            "usage: repro campaign <spec.toml|spec.json> [--workers N] [--dry-run] \
+             [--trace DIR [--trace-stride N] [--trace-cap N]] [--progress]",
+        )?;
         let spec = CampaignSpec::from_file(path)?;
         let workers = campaign::runner::parse_workers(args.get("workers"))
             .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let trace_dir = args.get("trace").map(std::path::PathBuf::from);
+        let opts = campaign::CampaignOpts {
+            workers,
+            progress: args.flag("progress"),
+            trace_cfg: dmr::obs::TraceConfig {
+                enabled: trace_dir.is_some(),
+                stride: args.get_parse("trace-stride", spec.trace.stride),
+                cap: args.get_parse("trace-cap", spec.trace.cap),
+            },
+            trace_dir,
+        };
         if args.flag("dry-run") {
             // Sanity-check large sweeps without executing anything: print
             // the expanded scenario matrix and exit.
@@ -297,10 +373,18 @@ Results are also written as CSV under results/.";
             },
             campaign::runner::resolve_workers(&spec, workers),
         );
-        let result = campaign::run_campaign(&spec, workers)?;
+        let result = campaign::run_campaign_opts(&spec, &opts)?;
         let aggs = campaign::aggregate(&result.records);
         println!("{}", report::campaign_table(&spec.name, &aggs).render());
         let out = campaign::write_outputs(&spec, &result)?;
+        if let Some(dir) = &opts.trace_dir {
+            let traced = result.records.iter().filter(|r| r.trace.is_some()).count();
+            eprintln!(
+                "[campaign] wrote {traced}/{} trace pairs under {}",
+                result.records.len(),
+                dir.display()
+            );
+        }
         eprintln!(
             "[campaign] {} runs in {:.2}s on {} workers ({:.1} runs/s)",
             result.records.len(),

@@ -258,7 +258,7 @@ pub const CAMPAIGN_RUN_HEADER: &[&str] = &[
     "deadline_misses", "interrupted", "rescued", "requeued", "rework_s", "lost_node_s",
     "availability_pct", "fed_shards", "fed_routing", "fed_steals", "shard_util_pct",
     "shard_queue_depth", "shard_steals", "resize_attempts", "resize_aborts", "retry_time_s",
-    "degraded_jobs",
+    "degraded_jobs", "sched_passes", "sched_elided", "dmr_checks", "dmr_elided",
 ];
 
 /// Header of `<name>_agg.csv` — single source of truth, like
@@ -271,7 +271,8 @@ pub const CAMPAIGN_AGG_HEADER: &[&str] = &[
     "fairness_ci95", "deadline_miss_mean", "interrupted_mean", "rescued_mean",
     "requeued_mean", "rework_mean_s", "lost_node_s_mean", "availability_mean_pct",
     "fed_shards", "fed_steals_mean", "shard_util_mean_pct", "resize_attempts_mean",
-    "resize_aborts_mean", "retry_time_mean_s", "degraded_jobs_mean",
+    "resize_aborts_mean", "retry_time_mean_s", "degraded_jobs_mean", "sched_passes_mean",
+    "sched_elided_mean", "dmr_checks_mean", "dmr_elided_mean",
 ];
 
 /// The per-run CSV columns (accessor over [`CAMPAIGN_RUN_HEADER`] so
@@ -340,6 +341,12 @@ pub fn campaign_run_rows(records: &[crate::campaign::RunRecord]) -> Vec<Vec<Stri
             row.push(s.resilience.resize_aborts.to_string());
             row.push(fmt(s.resilience.retry_time, 1));
             row.push(s.resilience.degraded_jobs.to_string());
+            // Deterministic pass/check counters — never the wall-clock
+            // profile, which would break worker-count invariance.
+            row.push(s.passes.sched_passes.to_string());
+            row.push(s.passes.sched_elided.to_string());
+            row.push(s.passes.dmr_checks.to_string());
+            row.push(s.passes.dmr_elided.to_string());
             row
         })
         .collect()
@@ -398,6 +405,10 @@ pub fn campaign_agg_rows(aggs: &[crate::campaign::ScenarioAgg]) -> Vec<Vec<Strin
             row.push(fmt(a.resize_aborts.mean(), 2));
             row.push(fmt(a.retry_time_s.mean(), 1));
             row.push(fmt(a.degraded_jobs.mean(), 2));
+            row.push(fmt(a.sched_passes.mean(), 1));
+            row.push(fmt(a.sched_elided.mean(), 1));
+            row.push(fmt(a.dmr_checks.mean(), 1));
+            row.push(fmt(a.dmr_elided.mean(), 1));
             row
         })
         .collect()
@@ -408,7 +419,7 @@ pub fn campaign_table(name: &str, aggs: &[crate::campaign::ScenarioAgg]) -> Tabl
     let mut t = Table::new(vec![
         "Scenario", "Runs", "Makespan (s)", "Util (%)", "Wait (s)", "Completion (s)",
         "Expands", "Shrinks", "Slowdown", "Jain", "DlMiss", "Rescued", "Requeued",
-        "Avail (%)", "Shards", "Steals",
+        "Avail (%)", "Shards", "Steals", "Events/s",
     ])
     .with_title(&format!("Campaign {name}: per-scenario aggregates (mean ± 95% CI)"));
     let pm = |s: &Summary, prec: usize| format!("{} ± {}", fmt(s.mean(), prec), fmt(s.ci95_half(), prec));
@@ -430,6 +441,13 @@ pub fn campaign_table(name: &str, aggs: &[crate::campaign::ScenarioAgg]) -> Tabl
             fmt(a.availability_pct.mean(), 2),
             a.fed_shards.to_string(),
             fmt(a.fed_steals.mean(), 1),
+            // Wall-clock throughput: stdout-only (timing noise, never in
+            // the CSVs); "-" when nothing was measured.
+            if a.wall_ns_total == 0 {
+                "-".to_string()
+            } else {
+                fmt(a.events_total as f64 * 1e9 / a.wall_ns_total as f64, 0)
+            },
         ]);
     }
     t
@@ -480,6 +498,10 @@ pub fn campaign_agg_json(
             m.insert("resize_aborts".into(), stat(&a.resize_aborts));
             m.insert("retry_time_s".into(), stat(&a.retry_time_s));
             m.insert("degraded_jobs".into(), stat(&a.degraded_jobs));
+            m.insert("sched_passes".into(), stat(&a.sched_passes));
+            m.insert("sched_elided".into(), stat(&a.sched_elided));
+            m.insert("dmr_checks".into(), stat(&a.dmr_checks));
+            m.insert("dmr_elided".into(), stat(&a.dmr_elided));
             let mut fed = BTreeMap::new();
             fed.insert("shards".into(), Json::Num(a.fed_shards as f64));
             fed.insert("steals".into(), stat(&a.fed_steals));
@@ -522,6 +544,13 @@ pub struct BenchRecord {
     /// Hex digest over the run's event log and makespan bits.  Identical
     /// re-runs must produce identical checksums — the determinism gate.
     pub checksum: String,
+    /// Wall nanoseconds the engine spent dispatching events (the
+    /// self-profile's total; informational, never a CI gate).
+    pub dispatch_ns: u64,
+    /// Wall nanoseconds inside scheduling passes.
+    pub sched_ns: u64,
+    /// Wall nanoseconds inside DMR policy evaluations.
+    pub dmr_ns: u64,
 }
 
 /// Deterministic hex checksum for one run: event-log digest mixed with
@@ -558,6 +587,14 @@ pub fn bench_json(bench: &str, records: &[BenchRecord]) -> crate::util::json::Js
             );
             m.insert("makespan_s".into(), Json::Num(r.makespan_s));
             m.insert("checksum".into(), Json::Str(r.checksum.clone()));
+            let mut prof = BTreeMap::new();
+            prof.insert("dispatch_ns".into(), Json::Num(r.dispatch_ns as f64));
+            prof.insert("sched_ns".into(), Json::Num(r.sched_ns as f64));
+            prof.insert("dmr_ns".into(), Json::Num(r.dmr_ns as f64));
+            let total = r.dispatch_ns.max(1) as f64;
+            prof.insert("sched_share".into(), Json::Num(r.sched_ns as f64 / total));
+            prof.insert("dmr_share".into(), Json::Num(r.dmr_ns as f64 / total));
+            m.insert("profile".into(), Json::Obj(prof));
             Json::Obj(m)
         })
         .collect();
@@ -593,9 +630,9 @@ mod tests {
     fn pair(n: usize, seed: u64) -> (usize, RunSummary, RunSummary) {
         let w = workload::generate(n, seed);
         let fixed =
-            RunSummary::from_run(&Engine::new(DesConfig::default()).run(&w.as_fixed(), "Fixed"));
+            RunSummary::from_run(Engine::new(DesConfig::default()).run(&w.as_fixed(), "Fixed"));
         let flex =
-            RunSummary::from_run(&Engine::new(DesConfig::default()).run(&w, "Flexible"));
+            RunSummary::from_run(Engine::new(DesConfig::default()).run(&w, "Flexible"));
         (n, fixed, flex)
     }
 
@@ -667,7 +704,8 @@ jobs = 5
              expand_aborts,bounded_slowdown,jain_fairness,deadline_jobs,deadline_misses,\
              interrupted,rescued,requeued,rework_s,lost_node_s,availability_pct,\
              fed_shards,fed_routing,fed_steals,shard_util_pct,shard_queue_depth,\
-             shard_steals,resize_attempts,resize_aborts,retry_time_s,degraded_jobs"
+             shard_steals,resize_attempts,resize_aborts,retry_time_s,degraded_jobs,\
+             sched_passes,sched_elided,dmr_checks,dmr_elided"
         );
         assert_eq!(
             agg_columns().join(","),
@@ -678,7 +716,8 @@ jobs = 5
              fairness_ci95,deadline_miss_mean,interrupted_mean,rescued_mean,\
              requeued_mean,rework_mean_s,lost_node_s_mean,availability_mean_pct,\
              fed_shards,fed_steals_mean,shard_util_mean_pct,resize_attempts_mean,\
-             resize_aborts_mean,retry_time_mean_s,degraded_jobs_mean"
+             resize_aborts_mean,retry_time_mean_s,degraded_jobs_mean,sched_passes_mean,\
+             sched_elided_mean,dmr_checks_mean,dmr_elided_mean"
         );
         // accessors and consts are the same object
         assert!(std::ptr::eq(run_columns(), CAMPAIGN_RUN_HEADER));
@@ -699,6 +738,9 @@ jobs = 5
             wall_secs: 0.25,
             makespan_s: r.makespan,
             checksum: bench_checksum(&r.rms.log, r.makespan),
+            dispatch_ns: r.profile.total_ns(),
+            sched_ns: r.profile.wall_ns(crate::obs::Phase::Schedule),
+            dmr_ns: r.profile.wall_ns(crate::obs::Phase::Dmr),
         };
         // Checksum is a deterministic function of the run.
         assert_eq!(rec.checksum, bench_checksum(&r.rms.log, r.makespan));
@@ -711,6 +753,10 @@ jobs = 5
         assert_eq!(scen.len(), 2);
         assert_eq!(scen[0].get("events").unwrap().as_usize(), Some(r.events as usize));
         assert!(scen[0].get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        let prof = scen[0].get("profile").expect("per-phase profile present");
+        assert!(prof.get("dispatch_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(prof.get("sched_ns").is_some() && prof.get("dmr_ns").is_some());
+        assert!(prof.get("sched_share").unwrap().as_f64().unwrap() >= 0.0);
         let totals = parsed.get("totals").unwrap();
         assert_eq!(totals.get("runs").unwrap().as_usize(), Some(2));
         assert!((totals.get("wall_secs").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);

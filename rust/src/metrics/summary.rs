@@ -4,7 +4,9 @@
 use super::record::{extract, JobRecord};
 use crate::des::{ActionStats, RunResult};
 use crate::federation::{FedRunResult, RoutingPolicy};
+use crate::obs::PhaseProfile;
 use crate::resilience::ResilienceStats;
+use crate::rms::PassStats;
 use crate::util::stats::{step_series_mean, Summary};
 
 /// Everything the reports need from one workload run.
@@ -40,6 +42,16 @@ pub struct RunSummary {
     pub deadline_jobs: usize,
     /// Deadline-carrying jobs that finished strictly late.
     pub deadline_misses: usize,
+    /// Deterministic scheduling-pass / DMR-check counters (summed across
+    /// shards for federated runs) — safe for the worker-count-invariant
+    /// CSVs, unlike the wall-clock profile.
+    pub passes: PassStats,
+    /// Discrete events the engine processed (the events/s denominator).
+    pub events: u64,
+    /// Host-side wall-clock phase profile.  Timing noise: reported only
+    /// through non-deterministic channels (campaign stdout table,
+    /// `BENCH_*.json`) — never the CSVs.
+    pub profile: PhaseProfile,
     /// Federated-run extras (`None` for flat runs): per-shard measures
     /// plus the meta-scheduler configuration that produced them.
     pub federation: Option<FedSummary>,
@@ -131,17 +143,27 @@ pub fn jain_index(values: &[f64]) -> f64 {
 }
 
 impl RunSummary {
-    pub fn from_run(r: &RunResult) -> RunSummary {
+    /// Summarize a flat run.  Takes the result by value so the telemetry
+    /// series move into the summary instead of being cloned (they are the
+    /// run's largest allocations; nothing downstream needs the raw
+    /// `RunResult` once summarized).
+    pub fn from_run(mut r: RunResult) -> RunSummary {
+        let jobs = extract(&r.rms);
+        let nodes = r.rms.cluster.total();
+        let passes = r.rms.pass_stats();
         Self::assemble(
-            r.label.clone(),
+            r.label,
             r.makespan,
-            r.rms.cluster.total(),
-            extract(&r.rms),
-            r.rms.telemetry.alloc_series.clone(),
-            r.rms.telemetry.running_series.clone(),
-            r.rms.telemetry.completed_series.clone(),
-            r.actions.clone(),
-            r.resilience.clone(),
+            nodes,
+            jobs,
+            std::mem::take(&mut r.rms.telemetry.alloc_series),
+            std::mem::take(&mut r.rms.telemetry.running_series),
+            std::mem::take(&mut r.rms.telemetry.completed_series),
+            r.actions,
+            r.resilience,
+            passes,
+            r.events,
+            r.profile,
             None,
         )
     }
@@ -186,6 +208,14 @@ impl RunSummary {
             steals: r.steals(),
             per_shard,
         };
+        let mut passes = PassStats::default();
+        for sh in &r.shards {
+            let p = sh.rms.pass_stats();
+            passes.sched_passes += p.sched_passes;
+            passes.sched_elided += p.sched_elided;
+            passes.dmr_checks += p.dmr_checks;
+            passes.dmr_elided += p.dmr_elided;
+        }
         Self::assemble(
             r.label.clone(),
             r.makespan,
@@ -196,6 +226,9 @@ impl RunSummary {
             collect(|t| &t.completed_series),
             r.actions.clone(),
             r.resilience.clone(),
+            passes,
+            r.events,
+            r.profile.clone(),
             Some(federation),
         )
     }
@@ -213,6 +246,9 @@ impl RunSummary {
         completed_series: Vec<(f64, f64)>,
         actions: ActionStats,
         resilience: ResilienceStats,
+        passes: PassStats,
+        events: u64,
+        profile: PhaseProfile,
         federation: Option<FedSummary>,
     ) -> RunSummary {
         let t0 = 0.0;
@@ -268,6 +304,9 @@ impl RunSummary {
             fairness_jain,
             deadline_jobs,
             deadline_misses,
+            passes,
+            events,
+            profile,
             federation,
             jobs,
         }
@@ -310,8 +349,11 @@ mod tests {
     fn summary_from_small_run() {
         let w = workload::generate(10, 3);
         let r = Engine::new(DesConfig::default()).run(&w.as_fixed(), "fixed");
-        let s = RunSummary::from_run(&r);
+        let events = r.events;
+        let s = RunSummary::from_run(r);
         assert_eq!(s.jobs.len(), 10);
+        assert_eq!(s.events, events);
+        assert!(s.passes.sched_passes > 0, "pass counters ride along");
         assert!(s.util_mean > 0.0 && s.util_mean <= 1.0);
         assert!(s.makespan > 0.0);
         assert!(s.wait.count() == 10);
@@ -342,17 +384,49 @@ mod tests {
         // Slack 1.01 on a contended cluster: queue waits guarantee misses.
         let w = workload::generate(20, 5).with_deadlines(1.01);
         let r = Engine::new(DesConfig::default()).run(&w.as_fixed(), "fixed");
-        let s = RunSummary::from_run(&r);
+        let s = RunSummary::from_run(r);
         assert_eq!(s.deadline_jobs, 20);
         assert!(s.deadline_misses > 0, "tight deadlines must miss under contention");
         assert!(s.deadline_misses <= s.deadline_jobs);
     }
 
     #[test]
+    fn federated_summary_merges_across_shards() {
+        use crate::federation::{FedEngine, FederationConfig, RoutingPolicy, ShardSpec};
+        let w = workload::generate(24, 9);
+        let fed = FederationConfig {
+            shards: ShardSpec::uniform(64, 2),
+            routing: RoutingPolicy::RoundRobin,
+            steal: false,
+            ..Default::default()
+        };
+        let r = FedEngine::new(DesConfig::default(), fed).run(&w, "fed");
+        let events = r.events;
+        let per_shard_passes: u64 =
+            r.shards.iter().map(|sh| sh.rms.pass_stats().sched_passes).sum();
+        let s = RunSummary::from_fed(&r, RoutingPolicy::RoundRobin, false);
+        // Job records merge across shards; per-shard breakdown survives.
+        assert_eq!(s.jobs.len(), 24);
+        let f = s.federation.as_ref().expect("federated extras");
+        assert_eq!(f.shards, 2);
+        assert_eq!(f.per_shard.len(), 2);
+        assert_eq!(f.per_shard.iter().map(|p| p.jobs).sum::<usize>(), 24);
+        // The merged alloc series never exceeds the total pool and the
+        // summed step series covers both shards' allocations.
+        assert_eq!(s.nodes, 64);
+        assert!(s.alloc_series.iter().all(|&(_, v)| v <= 64.0));
+        assert!(s.util_mean > 0.0 && s.util_mean <= 1.0);
+        // Pass counters sum across shards; events ride along unchanged.
+        assert_eq!(s.passes.sched_passes, per_shard_passes);
+        assert!(s.passes.sched_passes > 0);
+        assert_eq!(s.events, events);
+    }
+
+    #[test]
     fn gains_positive_when_flexible_faster() {
         let w = workload::generate(25, 11);
-        let fixed = RunSummary::from_run(&Engine::new(DesConfig::default()).run(&w.as_fixed(), "fixed"));
-        let flex = RunSummary::from_run(&Engine::new(DesConfig::default()).run(&w, "flexible"));
+        let fixed = RunSummary::from_run(Engine::new(DesConfig::default()).run(&w.as_fixed(), "fixed"));
+        let flex = RunSummary::from_run(Engine::new(DesConfig::default()).run(&w, "flexible"));
         let (wait, exec, comp) = flex.gains_vs(&fixed);
         // Waiting improves; execution degrades (negative gain); completion
         // improves on average — the paper's Table 3/4 signature.

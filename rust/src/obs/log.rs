@@ -1,0 +1,130 @@
+//! Env-filtered diagnostic logging (`DMR_LOG=off|warn|info|debug`).
+//!
+//! One tiny helper replaces the ad-hoc `eprintln!` diagnostics scattered
+//! through the crate: every message carries a [`Level`], the threshold is
+//! read **once** from the `DMR_LOG` environment variable (default
+//! [`Level::Warn`], so existing one-shot warnings keep printing), and
+//! everything below the threshold is dropped before any formatting cost.
+//! Messages go to stderr — stdout stays reserved for machine-readable
+//! report output (tables, CSV paths).
+//!
+//! This is diagnostics-only plumbing: nothing here is read back by the
+//! engine, so it can never perturb the simulation (see the inertness
+//! contract in `docs/ARCHITECTURE.md`).
+
+use std::sync::OnceLock;
+
+/// Message severity, ordered from most to least severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Logging disabled (`DMR_LOG=off`); nothing prints, not even warnings.
+    Off = 0,
+    /// Actionable problems (ignored env vars, clamped knobs).  The default
+    /// threshold — matches the crate's historical unconditional warnings.
+    Warn = 1,
+    /// Progress and configuration notes (`DMR_LOG=info`).
+    Info = 2,
+    /// Verbose diagnostics (`DMR_LOG=debug`).
+    Debug = 3,
+}
+
+impl Level {
+    /// Parse a `DMR_LOG` value; unknown strings fall back to `Warn` so a
+    /// typo can never silence real warnings.
+    fn parse(s: &str) -> Level {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" | "silent" => Level::Off,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            _ => Level::Warn,
+        }
+    }
+
+    /// Label used in the stderr prefix.
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Warn => "warning",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+static THRESHOLD: OnceLock<Level> = OnceLock::new();
+
+/// The active threshold: parsed from `DMR_LOG` on first use, then cached
+/// for the life of the process.
+pub fn threshold() -> Level {
+    *THRESHOLD.get_or_init(|| match std::env::var("DMR_LOG") {
+        Ok(v) => Level::parse(&v),
+        Err(_) => Level::Warn,
+    })
+}
+
+/// Whether messages at `level` would currently print — check this before
+/// building an expensive message.
+pub fn enabled(level: Level) -> bool {
+    level <= threshold() && threshold() != Level::Off && level != Level::Off
+}
+
+/// Emit one message at `level` (dropped when below the threshold).
+pub fn log(level: Level, msg: &str) {
+    if enabled(level) {
+        eprintln!("dmr: {}: {msg}", level.tag());
+    }
+}
+
+/// Emit a warning (prints under the default threshold).
+pub fn warn(msg: &str) {
+    log(Level::Warn, msg);
+}
+
+/// Emit an informational note (`DMR_LOG=info` or `debug`).
+pub fn info(msg: &str) {
+    log(Level::Info, msg);
+}
+
+/// Emit a verbose diagnostic (`DMR_LOG=debug` only).
+pub fn debug(msg: &str) {
+    log(Level::Debug, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_maps_known_names() {
+        assert_eq!(Level::parse("off"), Level::Off);
+        assert_eq!(Level::parse("NONE"), Level::Off);
+        assert_eq!(Level::parse("warn"), Level::Warn);
+        assert_eq!(Level::parse("info"), Level::Info);
+        assert_eq!(Level::parse(" debug "), Level::Debug);
+        // A typo must not silence warnings.
+        assert_eq!(Level::parse("verbose"), Level::Warn);
+        assert_eq!(Level::parse(""), Level::Warn);
+    }
+
+    #[test]
+    fn severity_ordering() {
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Off < Level::Warn);
+    }
+
+    #[test]
+    fn threshold_defaults_to_warn_without_env() {
+        // The suite does not set DMR_LOG, so the cached threshold is the
+        // default and warnings are enabled while info/debug are not.
+        // (If a developer runs tests with DMR_LOG set, only the
+        // always-true implications are asserted.)
+        let t = threshold();
+        if t == Level::Warn {
+            assert!(enabled(Level::Warn));
+            assert!(!enabled(Level::Info));
+            assert!(!enabled(Level::Debug));
+        }
+        assert!(!enabled(Level::Off), "Off is never an emit level");
+    }
+}

@@ -1,0 +1,28 @@
+//! Observability: span tracing, engine self-profiling, env-filtered
+//! diagnostics.
+//!
+//! Three small, independent pieces with one shared contract — **nothing
+//! here may perturb the simulation**:
+//!
+//! * [`trace`] — per-job lifecycle and per-shard machine-fault spans
+//!   derived *post-run* from the digest-locked event log, exported as
+//!   Chrome-trace/Perfetto JSON + compact JSONL (`repro trace`,
+//!   `repro campaign --trace`).  Off by default; stride/cap knobs bound
+//!   memory; the writers stream.
+//! * [`profile`] — fixed-array wall-clock counters around the DES hot
+//!   path (event dispatch, schedule pass, DMR pass).  No RNG, no heap,
+//!   no branching on simulation state; values flow only through
+//!   non-deterministic channels (stdout table, `BENCH_*.json`).
+//! * [`log`] — `DMR_LOG=off|warn|info|debug` stderr diagnostics
+//!   replacing ad-hoc `eprintln!` warnings.
+//!
+//! The inertness contract is locked by the trace-on/off digest +
+//! makespan-bits matrix in `rust/tests/test_obs.rs` and documented in
+//! `docs/ARCHITECTURE.md` ("Observability").
+
+pub mod log;
+pub mod profile;
+pub mod trace;
+
+pub use profile::{Phase, PhaseProfile};
+pub use trace::{Trace, TraceConfig, TraceStats};

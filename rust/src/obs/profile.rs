@@ -1,0 +1,214 @@
+//! Engine self-profiling: fixed-size wall-clock counters for the DES hot
+//! path.
+//!
+//! The profile answers "where does the simulator burn host time" — event
+//! dispatch overall, scheduling passes, DMR policy calls — with nothing
+//! but fixed arrays of monotonic counters: no RNG, no heap allocation,
+//! no branching on simulation state.  Recording therefore cannot perturb
+//! the simulation (the inertness contract in `docs/ARCHITECTURE.md`);
+//! the *values* are host-timing noise, so they are reported only through
+//! non-deterministic channels (the campaign stdout table, `BENCH_*.json`,
+//! trace/profile files) — never the worker-count-invariant CSVs, which
+//! carry the deterministic [`crate::rms::PassStats`] counters instead.
+
+/// Latency-histogram bucket count (power-of-two nanosecond buckets:
+/// bucket `i` holds durations in `[2^i, 2^(i+1))` ns, the last bucket is
+/// open-ended).
+pub const HIST_BUCKETS: usize = 32;
+
+/// The instrumented engine phases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// One whole event dispatch (the engine's match arm), the superset of
+    /// the other phases — its wall total is the run's measured wall.
+    Dispatch = 0,
+    /// An RMS scheduling pass (`Rms::schedule`), elided passes included.
+    Schedule = 1,
+    /// A DMR policy evaluation (`dmr_check` / `dmr_peek` + `dmr_apply`).
+    Dmr = 2,
+}
+
+impl Phase {
+    /// Every phase, in index order.
+    pub const ALL: [Phase; 3] = [Phase::Dispatch, Phase::Schedule, Phase::Dmr];
+
+    /// Number of phases (array dimension).
+    pub const COUNT: usize = 3;
+
+    /// Short label used in reports (`dispatch`, `sched`, `dmr`).
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Dispatch => "dispatch",
+            Phase::Schedule => "sched",
+            Phase::Dmr => "dmr",
+        }
+    }
+}
+
+/// Per-phase wall-clock totals + call counts + a dispatch-latency
+/// histogram.  All counters are monotone under [`PhaseProfile::record`];
+/// merging two profiles adds them field-wise.
+#[derive(Debug, Clone)]
+pub struct PhaseProfile {
+    wall_ns: [u64; Phase::COUNT],
+    calls: [u64; Phase::COUNT],
+    hist: [u64; HIST_BUCKETS],
+}
+
+impl Default for PhaseProfile {
+    fn default() -> Self {
+        PhaseProfile {
+            wall_ns: [0; Phase::COUNT],
+            calls: [0; Phase::COUNT],
+            hist: [0; HIST_BUCKETS],
+        }
+    }
+}
+
+impl PhaseProfile {
+    /// A zeroed profile.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one timed call of `phase` lasting `ns` nanoseconds.
+    /// Dispatch calls also land in the latency histogram.
+    #[inline]
+    pub fn record(&mut self, phase: Phase, ns: u64) {
+        let i = phase as usize;
+        self.wall_ns[i] += ns;
+        self.calls[i] += 1;
+        if matches!(phase, Phase::Dispatch) {
+            self.hist[Self::bucket_of(ns)] += 1;
+        }
+    }
+
+    /// Histogram bucket index of a duration (`floor(log2 ns)`, clamped).
+    #[inline]
+    fn bucket_of(ns: u64) -> usize {
+        if ns == 0 {
+            0
+        } else {
+            ((63 - ns.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    /// Total wall time recorded for `phase`, nanoseconds.
+    pub fn wall_ns(&self, phase: Phase) -> u64 {
+        self.wall_ns[phase as usize]
+    }
+
+    /// Calls recorded for `phase`.
+    pub fn calls(&self, phase: Phase) -> u64 {
+        self.calls[phase as usize]
+    }
+
+    /// Total measured wall (the dispatch phase), nanoseconds.
+    pub fn total_ns(&self) -> u64 {
+        self.wall_ns[Phase::Dispatch as usize]
+    }
+
+    /// Share of the measured wall spent in `phase` (`0.0` when nothing
+    /// was recorded; `Dispatch` reports `1.0`).
+    pub fn share(&self, phase: Phase) -> f64 {
+        let total = self.total_ns();
+        if total == 0 {
+            0.0
+        } else {
+            self.wall_ns(phase) as f64 / total as f64
+        }
+    }
+
+    /// Wall-clock event throughput given the run's processed-event count
+    /// (`0.0` before anything was recorded).
+    pub fn events_per_sec(&self, events: u64) -> f64 {
+        let total = self.total_ns();
+        if total == 0 {
+            0.0
+        } else {
+            events as f64 * 1e9 / total as f64
+        }
+    }
+
+    /// The dispatch-latency histogram (power-of-two ns buckets).
+    pub fn histogram(&self) -> &[u64; HIST_BUCKETS] {
+        &self.hist
+    }
+
+    /// Add another profile's counters into this one (federated runs and
+    /// campaign aggregation).
+    pub fn merge(&mut self, other: &PhaseProfile) {
+        for i in 0..Phase::COUNT {
+            self.wall_ns[i] += other.wall_ns[i];
+            self.calls[i] += other.calls[i];
+        }
+        for i in 0..HIST_BUCKETS {
+            self.hist[i] += other.hist[i];
+        }
+    }
+
+    /// One human-readable summary line (stderr diagnostics and the
+    /// `repro trace` report): events/s plus per-phase shares.
+    pub fn summary_line(&self, events: u64) -> String {
+        format!(
+            "{:.0} events/s wall={:.3}s sched={:.1}% dmr={:.1}%",
+            self.events_per_sec(events),
+            self.total_ns() as f64 / 1e9,
+            100.0 * self.share(Phase::Schedule),
+            100.0 * self.share(Phase::Dmr),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_accumulates_monotonically() {
+        let mut p = PhaseProfile::new();
+        p.record(Phase::Dispatch, 100);
+        p.record(Phase::Dispatch, 50);
+        p.record(Phase::Schedule, 30);
+        assert_eq!(p.calls(Phase::Dispatch), 2);
+        assert_eq!(p.wall_ns(Phase::Dispatch), 150);
+        assert_eq!(p.calls(Phase::Schedule), 1);
+        assert_eq!(p.total_ns(), 150);
+        assert!((p.share(Phase::Schedule) - 0.2).abs() < 1e-12);
+        assert!((p.share(Phase::Dispatch) - 1.0).abs() < 1e-12);
+        // Histogram counts only dispatch calls.
+        let hist_total: u64 = p.histogram().iter().sum();
+        assert_eq!(hist_total, 2);
+    }
+
+    #[test]
+    fn bucket_of_is_log2() {
+        assert_eq!(PhaseProfile::bucket_of(0), 0);
+        assert_eq!(PhaseProfile::bucket_of(1), 0);
+        assert_eq!(PhaseProfile::bucket_of(2), 1);
+        assert_eq!(PhaseProfile::bucket_of(1023), 9);
+        assert_eq!(PhaseProfile::bucket_of(1024), 10);
+        assert_eq!(PhaseProfile::bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn merge_adds_fieldwise() {
+        let mut a = PhaseProfile::new();
+        a.record(Phase::Dispatch, 1000);
+        let mut b = PhaseProfile::new();
+        b.record(Phase::Dispatch, 500);
+        b.record(Phase::Dmr, 200);
+        a.merge(&b);
+        assert_eq!(a.wall_ns(Phase::Dispatch), 1500);
+        assert_eq!(a.calls(Phase::Dispatch), 2);
+        assert_eq!(a.wall_ns(Phase::Dmr), 200);
+    }
+
+    #[test]
+    fn events_per_sec_uses_dispatch_wall() {
+        let mut p = PhaseProfile::new();
+        p.record(Phase::Dispatch, 1_000_000_000);
+        assert!((p.events_per_sec(2_000) - 2_000.0).abs() < 1e-9);
+        assert_eq!(PhaseProfile::new().events_per_sec(10), 0.0);
+    }
+}

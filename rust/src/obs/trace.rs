@@ -1,0 +1,847 @@
+//! Span tracing: per-job lifecycle and per-shard machine-fault timelines
+//! derived **post-run** from the [`EventLog`], exported as Chrome-trace /
+//! Perfetto JSON plus a compact JSONL.
+//!
+//! ## Inertness by construction
+//!
+//! Nothing here runs during the simulation.  The event log always exists
+//! and is digest-locked (`EventLog::digest`), and the builder only *reads*
+//! it after the run completes — so enabling tracing cannot draw from any
+//! RNG stream, reorder any event, or change a single bit of the run
+//! (locked anyway by the trace-on/off matrix in `rust/tests/test_obs.rs`).
+//!
+//! ## Span model
+//!
+//! One Chrome-trace *process* per shard track pair: pid `2s+1` holds the
+//! shard's job tracks (one *thread* per job id), pid `2s+2` its machine
+//! tracks (one thread per node).  Spans:
+//!
+//! * `pending` — `Submitted`/`Requeued`/start-of-wait → `Started`
+//!   (or `Stolen`, which moves the wait to another shard).
+//! * `running` — `Started` → `Finished` or `Requeued`.  The number of
+//!   exported `running` spans equals jobs completed + failure requeues.
+//! * `resize` — `ResizeBegin` → `ResizeCommit`/`ResizeAbort`, nested
+//!   inside the owning `running` span (multi-phase transaction path).
+//! * `down` / `drain` — `NodeFailed` → `NodeRepaired`,
+//!   `DrainStarted` → `DrainEnded` per node (outages nest; the span
+//!   covers the whole nested outage).
+//!
+//! Commits, aborts, faults and recovery land as instant events on the
+//! owning track: `expanded`, `shrunk`, `expand-aborted`, `interrupted`,
+//! `rescued`, `requeued`, `resize-aborted`, `degraded`, `stolen`,
+//! `cancelled`.
+//!
+//! ## Bounded memory
+//!
+//! [`TraceConfig::stride`] keeps every k-th job track and
+//! [`TraceConfig::cap`] bounds the total number of job tracks, so trace
+//! size is controlled independently of workload size; the writers stream
+//! span-by-span through `io::Write` (no JSON tree is ever built).
+
+use std::collections::{HashMap, HashSet};
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+
+use crate::rms::{EventLog, RmsEvent};
+use crate::Time;
+
+/// Tracing knobs (off by default; zero work is done when disabled).
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Master switch — `false` means no trace is built at all.
+    pub enabled: bool,
+    /// Keep every `stride`-th job track (1 = every job; 0 is treated
+    /// as 1).  Applied to jobs in first-submission order across shards.
+    pub stride: usize,
+    /// Upper bound on kept job tracks across all shards (0 = unlimited).
+    pub cap: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { enabled: false, stride: 1, cap: 0 }
+    }
+}
+
+impl TraceConfig {
+    /// An enabled config with default stride/cap.
+    pub fn on() -> Self {
+        TraceConfig { enabled: true, ..Default::default() }
+    }
+}
+
+/// Optional numeric argument attached to a span or instant.
+type Arg = Option<(&'static str, f64)>;
+
+/// One closed span on a (pid, tid) track.
+#[derive(Debug, Clone)]
+struct Span {
+    pid: u32,
+    tid: u64,
+    name: &'static str,
+    begin: Time,
+    end: Time,
+    args: [Arg; 2],
+}
+
+/// One instant event on a (pid, tid) track.
+#[derive(Debug, Clone)]
+struct Mark {
+    pid: u32,
+    tid: u64,
+    name: &'static str,
+    t: Time,
+    args: [Arg; 2],
+}
+
+/// Summary counts of a built trace (test hooks + the `repro trace`
+/// report line).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TraceStats {
+    /// Total exported spans (job + machine).
+    pub spans: usize,
+    /// Exported `running` spans — equals jobs completed + failure
+    /// requeues on the kept tracks.
+    pub job_spans: usize,
+    /// Exported instant events.
+    pub instants: usize,
+    /// Distinct jobs observed across all shards.
+    pub job_tracks_total: usize,
+    /// Job tracks kept after stride/cap filtering.
+    pub job_tracks_kept: usize,
+}
+
+/// A fully-built trace, ready to stream to disk.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    spans: Vec<Span>,
+    marks: Vec<Mark>,
+    shards: usize,
+    stats: TraceStats,
+}
+
+/// Per-job builder state during the event walk.
+#[derive(Debug, Clone, Copy, Default)]
+struct JobState {
+    pending_since: Option<Time>,
+    running_since: Option<Time>,
+    resize_since: Option<Time>,
+    resize_from: usize,
+    resize_to: usize,
+}
+
+impl Trace {
+    /// Build from one event log per shard (`logs[s]` is shard `s`).
+    /// `end` closes any span still open when the run drained (a node
+    /// still down, a drain window outliving the last completion).
+    pub fn from_logs(logs: &[&EventLog], end: Time, cfg: &TraceConfig) -> Trace {
+        // Pass 1: enumerate jobs in first-appearance order (across shards
+        // in shard order) and pick the kept set via stride/cap.
+        let stride = cfg.stride.max(1);
+        let mut seen: HashSet<(usize, u64)> = HashSet::new();
+        let mut keep: HashSet<(usize, u64)> = HashSet::new();
+        let mut total = 0usize;
+        for (s, log) in logs.iter().enumerate() {
+            for ev in log.all() {
+                if let Some(job) = job_of(ev) {
+                    if seen.insert((s, job)) {
+                        let kept = total % stride == 0
+                            && (cfg.cap == 0 || keep.len() < cfg.cap);
+                        total += 1;
+                        if kept {
+                            keep.insert((s, job));
+                        }
+                    }
+                }
+            }
+        }
+
+        let mut spans = Vec::new();
+        let mut marks = Vec::new();
+        let mut job_spans = 0usize;
+
+        // Pass 2: per-shard state machines over the kept jobs + machine.
+        for (s, log) in logs.iter().enumerate() {
+            let job_pid = (2 * s + 1) as u32;
+            let machine_pid = (2 * s + 2) as u32;
+            let mut jobs: HashMap<u64, JobState> = HashMap::new();
+            // Per-node outage nesting depth and open-span starts.
+            let mut fail_depth: HashMap<usize, (u32, Time)> = HashMap::new();
+            let mut drain_depth: HashMap<usize, (u32, Time)> = HashMap::new();
+            for ev in log.all() {
+                match *ev {
+                    RmsEvent::Submitted { job, time } => {
+                        if keep.contains(&(s, job)) {
+                            jobs.entry(job).or_default().pending_since = Some(time);
+                        }
+                    }
+                    RmsEvent::Started { job, time, procs } => {
+                        let Some(j) = kept_job(&mut jobs, &keep, s, job) else { continue };
+                        if let Some(b) = j.pending_since.take() {
+                            spans.push(Span {
+                                pid: job_pid,
+                                tid: job,
+                                name: "pending",
+                                begin: b,
+                                end: time,
+                                args: [None, None],
+                            });
+                        }
+                        j.running_since = Some(time);
+                        marks.push(Mark {
+                            pid: job_pid,
+                            tid: job,
+                            name: "started",
+                            t: time,
+                            args: [Some(("procs", procs as f64)), None],
+                        });
+                    }
+                    RmsEvent::Finished { job, time } => {
+                        let Some(j) = kept_job(&mut jobs, &keep, s, job) else { continue };
+                        close_resize(&mut spans, job_pid, job, j, time);
+                        if let Some(b) = j.running_since.take() {
+                            spans.push(Span {
+                                pid: job_pid,
+                                tid: job,
+                                name: "running",
+                                begin: b,
+                                end: time,
+                                args: [None, None],
+                            });
+                            job_spans += 1;
+                        }
+                    }
+                    RmsEvent::Requeued { job, time } => {
+                        let Some(j) = kept_job(&mut jobs, &keep, s, job) else { continue };
+                        close_resize(&mut spans, job_pid, job, j, time);
+                        if let Some(b) = j.running_since.take() {
+                            spans.push(Span {
+                                pid: job_pid,
+                                tid: job,
+                                name: "running",
+                                begin: b,
+                                end: time,
+                                args: [None, None],
+                            });
+                            job_spans += 1;
+                        }
+                        j.pending_since = Some(time);
+                        marks.push(Mark {
+                            pid: job_pid,
+                            tid: job,
+                            name: "requeued",
+                            t: time,
+                            args: [None, None],
+                        });
+                    }
+                    RmsEvent::Cancelled { job, time } => {
+                        let Some(j) = kept_job(&mut jobs, &keep, s, job) else { continue };
+                        if let Some(b) = j.pending_since.take() {
+                            spans.push(Span {
+                                pid: job_pid,
+                                tid: job,
+                                name: "pending",
+                                begin: b,
+                                end: time,
+                                args: [None, None],
+                            });
+                        }
+                        marks.push(Mark {
+                            pid: job_pid,
+                            tid: job,
+                            name: "cancelled",
+                            t: time,
+                            args: [None, None],
+                        });
+                    }
+                    RmsEvent::Stolen { job, time } => {
+                        let Some(j) = kept_job(&mut jobs, &keep, s, job) else { continue };
+                        if let Some(b) = j.pending_since.take() {
+                            spans.push(Span {
+                                pid: job_pid,
+                                tid: job,
+                                name: "pending",
+                                begin: b,
+                                end: time,
+                                args: [None, None],
+                            });
+                        }
+                        marks.push(Mark {
+                            pid: job_pid,
+                            tid: job,
+                            name: "stolen",
+                            t: time,
+                            args: [None, None],
+                        });
+                    }
+                    RmsEvent::ResizeBegin { job, time, from, to } => {
+                        let Some(j) = kept_job(&mut jobs, &keep, s, job) else { continue };
+                        j.resize_since = Some(time);
+                        j.resize_from = from;
+                        j.resize_to = to;
+                    }
+                    RmsEvent::ResizeCommit { job, time, .. } => {
+                        let Some(j) = kept_job(&mut jobs, &keep, s, job) else { continue };
+                        close_resize(&mut spans, job_pid, job, j, time);
+                    }
+                    RmsEvent::ResizeAbort { job, time, phase } => {
+                        let Some(j) = kept_job(&mut jobs, &keep, s, job) else { continue };
+                        close_resize(&mut spans, job_pid, job, j, time);
+                        marks.push(Mark {
+                            pid: job_pid,
+                            tid: job,
+                            name: "resize-aborted",
+                            t: time,
+                            args: [Some(("phase", phase as f64)), None],
+                        });
+                    }
+                    RmsEvent::Expanded { job, time, from, to } => {
+                        if keep.contains(&(s, job)) {
+                            marks.push(Mark {
+                                pid: job_pid,
+                                tid: job,
+                                name: "expanded",
+                                t: time,
+                                args: [
+                                    Some(("from", from as f64)),
+                                    Some(("to", to as f64)),
+                                ],
+                            });
+                        }
+                    }
+                    RmsEvent::Shrunk { job, time, from, to } => {
+                        if keep.contains(&(s, job)) {
+                            marks.push(Mark {
+                                pid: job_pid,
+                                tid: job,
+                                name: "shrunk",
+                                t: time,
+                                args: [
+                                    Some(("from", from as f64)),
+                                    Some(("to", to as f64)),
+                                ],
+                            });
+                        }
+                    }
+                    RmsEvent::ExpandAborted { job, time } => {
+                        if keep.contains(&(s, job)) {
+                            marks.push(Mark {
+                                pid: job_pid,
+                                tid: job,
+                                name: "expand-aborted",
+                                t: time,
+                                args: [None, None],
+                            });
+                        }
+                    }
+                    RmsEvent::Interrupted { job, time, node } => {
+                        if keep.contains(&(s, job)) {
+                            marks.push(Mark {
+                                pid: job_pid,
+                                tid: job,
+                                name: "interrupted",
+                                t: time,
+                                args: [Some(("node", node as f64)), None],
+                            });
+                        }
+                    }
+                    RmsEvent::Rescued { job, time, from, to } => {
+                        if keep.contains(&(s, job)) {
+                            marks.push(Mark {
+                                pid: job_pid,
+                                tid: job,
+                                name: "rescued",
+                                t: time,
+                                args: [
+                                    Some(("from", from as f64)),
+                                    Some(("to", to as f64)),
+                                ],
+                            });
+                        }
+                    }
+                    RmsEvent::Degraded { job, time } => {
+                        if keep.contains(&(s, job)) {
+                            marks.push(Mark {
+                                pid: job_pid,
+                                tid: job,
+                                name: "degraded",
+                                t: time,
+                                args: [None, None],
+                            });
+                        }
+                    }
+                    RmsEvent::DmrDecision { .. } => {
+                        // High-volume and already summarized by the
+                        // commit/abort events; skipped to keep traces
+                        // proportional to actions, not checks.
+                    }
+                    RmsEvent::NodeFailed { node, time } => {
+                        let e = fail_depth.entry(node).or_insert((0, time));
+                        if e.0 == 0 {
+                            e.1 = time;
+                        }
+                        e.0 += 1;
+                    }
+                    RmsEvent::NodeRepaired { node, time } => {
+                        if let Some(e) = fail_depth.get_mut(&node) {
+                            if e.0 > 0 {
+                                e.0 -= 1;
+                                if e.0 == 0 {
+                                    spans.push(Span {
+                                        pid: machine_pid,
+                                        tid: node as u64,
+                                        name: "down",
+                                        begin: e.1,
+                                        end: time,
+                                        args: [None, None],
+                                    });
+                                }
+                            }
+                        }
+                    }
+                    RmsEvent::DrainStarted { node, time } => {
+                        let e = drain_depth.entry(node).or_insert((0, time));
+                        if e.0 == 0 {
+                            e.1 = time;
+                        }
+                        e.0 += 1;
+                    }
+                    RmsEvent::DrainEnded { node, time } => {
+                        if let Some(e) = drain_depth.get_mut(&node) {
+                            if e.0 > 0 {
+                                e.0 -= 1;
+                                if e.0 == 0 {
+                                    spans.push(Span {
+                                        pid: machine_pid,
+                                        tid: node as u64,
+                                        name: "drain",
+                                        begin: e.1,
+                                        end: time,
+                                        args: [None, None],
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // Close whatever the drained run left open at its makespan
+            // (nodes still down, drain windows outliving the last job).
+            for (&node, &(depth, b)) in &fail_depth {
+                if depth > 0 {
+                    spans.push(Span {
+                        pid: machine_pid,
+                        tid: node as u64,
+                        name: "down",
+                        begin: b,
+                        end: end.max(b),
+                        args: [None, None],
+                    });
+                }
+            }
+            for (&node, &(depth, b)) in &drain_depth {
+                if depth > 0 {
+                    spans.push(Span {
+                        pid: machine_pid,
+                        tid: node as u64,
+                        name: "drain",
+                        begin: b,
+                        end: end.max(b),
+                        args: [None, None],
+                    });
+                }
+            }
+            for (&job, st) in &jobs {
+                if let Some(b) = st.pending_since {
+                    spans.push(Span {
+                        pid: job_pid,
+                        tid: job,
+                        name: "pending",
+                        begin: b,
+                        end: end.max(b),
+                        args: [None, None],
+                    });
+                }
+                if let Some(b) = st.running_since {
+                    spans.push(Span {
+                        pid: job_pid,
+                        tid: job,
+                        name: "running",
+                        begin: b,
+                        end: end.max(b),
+                        args: [None, None],
+                    });
+                }
+            }
+        }
+
+        let stats = TraceStats {
+            spans: spans.len(),
+            job_spans,
+            instants: marks.len(),
+            job_tracks_total: total,
+            job_tracks_kept: keep.len(),
+        };
+        Trace { spans, marks, shards: logs.len(), stats }
+    }
+
+    /// Build from a flat run (one shard).
+    pub fn from_run(r: &crate::des::RunResult, cfg: &TraceConfig) -> Trace {
+        Trace::from_logs(&[&r.rms.log], r.makespan, cfg)
+    }
+
+    /// Build from a federated run (one track pair per shard).
+    pub fn from_fed(r: &crate::federation::FedRunResult, cfg: &TraceConfig) -> Trace {
+        let logs: Vec<&EventLog> = r.shards.iter().map(|sh| &sh.rms.log).collect();
+        Trace::from_logs(&logs, r.makespan, cfg)
+    }
+
+    /// Summary counts of this trace.
+    pub fn stats(&self) -> TraceStats {
+        self.stats
+    }
+
+    /// Stream the trace as Chrome-trace JSON (open with Perfetto:
+    /// <https://ui.perfetto.dev>, or `chrome://tracing`).  Span `B`/`E`
+    /// events are emitted per track in stack order, so every begin has a
+    /// matching, correctly-nested end.  Timestamps are simulated seconds
+    /// rendered as microseconds (the format's native unit).
+    pub fn write_chrome<W: Write>(&self, w: &mut W) -> io::Result<()> {
+        write!(w, "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[")?;
+        let mut first = true;
+        // Process-name metadata: one entry per shard track pair.
+        for s in 0..self.shards {
+            for (pid, kind) in [(2 * s + 1, "jobs"), (2 * s + 2, "machine")] {
+                sep(w, &mut first)?;
+                write!(
+                    w,
+                    "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\"name\":\"process_name\",\
+                     \"args\":{{\"name\":\"shard{s} {kind}\"}}}}"
+                )?;
+            }
+        }
+        // Group spans per (pid, tid) and emit each track in nesting order.
+        let mut order: Vec<usize> = (0..self.spans.len()).collect();
+        order.sort_by(|&a, &b| {
+            let (x, y) = (&self.spans[a], &self.spans[b]);
+            (x.pid, x.tid)
+                .cmp(&(y.pid, y.tid))
+                .then(x.begin.total_cmp(&y.begin))
+                .then(y.end.total_cmp(&x.end))
+        });
+        let mut stack: Vec<usize> = Vec::new();
+        let mut track: Option<(u32, u64)> = None;
+        for &i in &order {
+            let sp = &self.spans[i];
+            if track != Some((sp.pid, sp.tid)) {
+                while let Some(j) = stack.pop() {
+                    self.emit_end(w, &mut first, &self.spans[j])?;
+                }
+                track = Some((sp.pid, sp.tid));
+            }
+            while let Some(&j) = stack.last() {
+                if self.spans[j].end <= sp.begin {
+                    stack.pop();
+                    self.emit_end(w, &mut first, &self.spans[j])?;
+                } else {
+                    break;
+                }
+            }
+            sep(w, &mut first)?;
+            write!(
+                w,
+                "{{\"ph\":\"B\",\"pid\":{},\"tid\":{},\"ts\":{},\"name\":\"{}\"",
+                sp.pid,
+                sp.tid,
+                us(sp.begin),
+                sp.name
+            )?;
+            write_args(w, &sp.args)?;
+            write!(w, "}}")?;
+            stack.push(i);
+        }
+        while let Some(j) = stack.pop() {
+            self.emit_end(w, &mut first, &self.spans[j])?;
+        }
+        for m in &self.marks {
+            sep(w, &mut first)?;
+            write!(
+                w,
+                "{{\"ph\":\"i\",\"s\":\"t\",\"pid\":{},\"tid\":{},\"ts\":{},\"name\":\"{}\"",
+                m.pid,
+                m.tid,
+                us(m.t),
+                m.name
+            )?;
+            write_args(w, &m.args)?;
+            write!(w, "}}")?;
+        }
+        writeln!(w, "]}}")
+    }
+
+    fn emit_end<W: Write>(&self, w: &mut W, first: &mut bool, sp: &Span) -> io::Result<()> {
+        sep(w, first)?;
+        write!(
+            w,
+            "{{\"ph\":\"E\",\"pid\":{},\"tid\":{},\"ts\":{},\"name\":\"{}\"}}",
+            sp.pid,
+            sp.tid,
+            us(sp.end),
+            sp.name
+        )
+    }
+
+    /// Stream the compact JSONL form: one object per span / instant,
+    /// times in simulated seconds.
+    pub fn write_jsonl<W: Write>(&self, w: &mut W) -> io::Result<()> {
+        for sp in &self.spans {
+            write!(
+                w,
+                "{{\"type\":\"span\",\"pid\":{},\"tid\":{},\"name\":\"{}\",\"t0\":{},\"t1\":{}",
+                sp.pid,
+                sp.tid,
+                sp.name,
+                num(sp.begin),
+                num(sp.end)
+            )?;
+            for a in sp.args.iter().flatten() {
+                write!(w, ",\"{}\":{}", a.0, num(a.1))?;
+            }
+            writeln!(w, "}}")?;
+        }
+        for m in &self.marks {
+            write!(
+                w,
+                "{{\"type\":\"instant\",\"pid\":{},\"tid\":{},\"name\":\"{}\",\"t\":{}",
+                m.pid,
+                m.tid,
+                m.name,
+                num(m.t)
+            )?;
+            for a in m.args.iter().flatten() {
+                write!(w, ",\"{}\":{}", a.0, num(a.1))?;
+            }
+            writeln!(w, "}}")?;
+        }
+        Ok(())
+    }
+
+    /// Write both exports under `dir` (created if missing) as
+    /// `<label>.trace.json` and `<label>.spans.jsonl`; returns the two
+    /// paths.
+    pub fn write_files(&self, dir: &Path, label: &str) -> io::Result<(PathBuf, PathBuf)> {
+        std::fs::create_dir_all(dir)?;
+        let chrome = dir.join(format!("{label}.trace.json"));
+        let jsonl = dir.join(format!("{label}.spans.jsonl"));
+        let mut w = io::BufWriter::new(std::fs::File::create(&chrome)?);
+        self.write_chrome(&mut w)?;
+        w.flush()?;
+        let mut w = io::BufWriter::new(std::fs::File::create(&jsonl)?);
+        self.write_jsonl(&mut w)?;
+        w.flush()?;
+        Ok((chrome, jsonl))
+    }
+}
+
+/// The job id an event belongs to (`None` for machine events).
+fn job_of(ev: &RmsEvent) -> Option<u64> {
+    match *ev {
+        RmsEvent::Submitted { job, .. }
+        | RmsEvent::Started { job, .. }
+        | RmsEvent::Finished { job, .. }
+        | RmsEvent::Cancelled { job, .. }
+        | RmsEvent::DmrDecision { job, .. }
+        | RmsEvent::Expanded { job, .. }
+        | RmsEvent::Shrunk { job, .. }
+        | RmsEvent::ExpandAborted { job, .. }
+        | RmsEvent::Interrupted { job, .. }
+        | RmsEvent::Requeued { job, .. }
+        | RmsEvent::Rescued { job, .. }
+        | RmsEvent::Stolen { job, .. }
+        | RmsEvent::ResizeBegin { job, .. }
+        | RmsEvent::ResizeAbort { job, .. }
+        | RmsEvent::ResizeCommit { job, .. }
+        | RmsEvent::Degraded { job, .. } => Some(job),
+        RmsEvent::NodeFailed { .. }
+        | RmsEvent::NodeRepaired { .. }
+        | RmsEvent::DrainStarted { .. }
+        | RmsEvent::DrainEnded { .. } => None,
+    }
+}
+
+/// Mutable state of a kept job (`None` when the track was filtered out).
+fn kept_job<'a>(
+    jobs: &'a mut HashMap<u64, JobState>,
+    keep: &HashSet<(usize, u64)>,
+    shard: usize,
+    job: u64,
+) -> Option<&'a mut JobState> {
+    if keep.contains(&(shard, job)) {
+        Some(jobs.entry(job).or_default())
+    } else {
+        None
+    }
+}
+
+/// Close an open resize sub-span at `time`, if any.
+fn close_resize(spans: &mut Vec<Span>, pid: u32, job: u64, j: &mut JobState, time: Time) {
+    if let Some(b) = j.resize_since.take() {
+        spans.push(Span {
+            pid,
+            tid: job,
+            name: "resize",
+            begin: b,
+            end: time,
+            args: [
+                Some(("from", j.resize_from as f64)),
+                Some(("to", j.resize_to as f64)),
+            ],
+        });
+    }
+}
+
+/// Comma separator management for the streamed JSON array.
+fn sep<W: Write>(w: &mut W, first: &mut bool) -> io::Result<()> {
+    if *first {
+        *first = false;
+        Ok(())
+    } else {
+        write!(w, ",")
+    }
+}
+
+/// Simulated seconds → Chrome-trace microseconds.
+fn us(t: Time) -> String {
+    num(t * 1e6)
+}
+
+/// Strict-JSON number rendering (no `inf`/`nan`; integral values print
+/// without a fraction).
+fn num(x: f64) -> String {
+    if !x.is_finite() {
+        "0".to_string()
+    } else if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_log() -> EventLog {
+        let mut log = EventLog::default();
+        log.push(RmsEvent::Submitted { job: 1, time: 0.0 });
+        log.push(RmsEvent::Submitted { job: 2, time: 1.0 });
+        log.push(RmsEvent::Started { job: 1, time: 2.0, procs: 4 });
+        log.push(RmsEvent::ResizeBegin { job: 1, time: 3.0, from: 4, to: 8 });
+        log.push(RmsEvent::ResizeCommit { job: 1, time: 4.0, procs: 8 });
+        log.push(RmsEvent::Expanded { job: 1, time: 4.0, from: 4, to: 8 });
+        log.push(RmsEvent::Started { job: 2, time: 5.0, procs: 2 });
+        log.push(RmsEvent::NodeFailed { node: 3, time: 6.0 });
+        log.push(RmsEvent::Interrupted { job: 2, time: 6.0, node: 3 });
+        log.push(RmsEvent::Requeued { job: 2, time: 6.0 });
+        log.push(RmsEvent::NodeRepaired { node: 3, time: 7.0 });
+        log.push(RmsEvent::Started { job: 2, time: 8.0, procs: 2 });
+        log.push(RmsEvent::Finished { job: 1, time: 9.0 });
+        log.push(RmsEvent::Finished { job: 2, time: 10.0 });
+        log
+    }
+
+    #[test]
+    fn spans_derive_from_event_log() {
+        let log = demo_log();
+        let tr = Trace::from_logs(&[&log], 10.0, &TraceConfig::on());
+        let st = tr.stats();
+        // running spans: job1 (started→finished), job2 (started→requeued,
+        // started→finished) = completed(2) + requeued(1).
+        assert_eq!(st.job_spans, 3);
+        assert_eq!(st.job_tracks_total, 2);
+        assert_eq!(st.job_tracks_kept, 2);
+        let down = tr.spans.iter().filter(|s| s.name == "down").count();
+        assert_eq!(down, 1);
+        let resize = tr.spans.iter().filter(|s| s.name == "resize").count();
+        assert_eq!(resize, 1);
+        let pending = tr.spans.iter().filter(|s| s.name == "pending").count();
+        assert_eq!(pending, 3, "one initial wait per job + one requeue wait");
+    }
+
+    #[test]
+    fn stride_and_cap_bound_job_tracks() {
+        let log = demo_log();
+        let strided =
+            Trace::from_logs(&[&log], 10.0, &TraceConfig { enabled: true, stride: 2, cap: 0 });
+        assert_eq!(strided.stats().job_tracks_kept, 1, "every 2nd of 2 jobs");
+        let capped =
+            Trace::from_logs(&[&log], 10.0, &TraceConfig { enabled: true, stride: 1, cap: 1 });
+        assert_eq!(capped.stats().job_tracks_kept, 1);
+        assert_eq!(capped.stats().job_tracks_total, 2);
+        // Machine spans are never filtered.
+        assert!(capped.spans.iter().any(|s| s.name == "down"));
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_paired_spans() {
+        let log = demo_log();
+        let tr = Trace::from_logs(&[&log], 10.0, &TraceConfig::on());
+        let mut buf = Vec::new();
+        tr.write_chrome(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let doc = crate::util::json::Json::parse(&text).expect("chrome trace parses");
+        let events = doc.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents");
+        // Per-track B/E stack discipline.
+        let mut stacks: HashMap<(i64, i64), Vec<String>> = HashMap::new();
+        let mut begins = 0;
+        let mut ends = 0;
+        for ev in events {
+            let ph = ev.get("ph").and_then(|p| p.as_str()).unwrap();
+            let key = (
+                ev.get("pid").and_then(|p| p.as_f64()).unwrap() as i64,
+                ev.get("tid").and_then(|p| p.as_f64()).unwrap() as i64,
+            );
+            let name = ev.get("name").and_then(|n| n.as_str()).unwrap().to_string();
+            match ph {
+                "B" => {
+                    begins += 1;
+                    stacks.entry(key).or_default().push(name);
+                }
+                "E" => {
+                    ends += 1;
+                    let top = stacks.get_mut(&key).and_then(|s| s.pop());
+                    assert_eq!(top.as_deref(), Some(name.as_str()), "mismatched E");
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(begins, ends, "every B has an E");
+        assert!(stacks.values().all(|s| s.is_empty()), "no dangling spans");
+        assert_eq!(begins, tr.stats().spans);
+    }
+
+    #[test]
+    fn jsonl_lines_each_parse() {
+        let log = demo_log();
+        let tr = Trace::from_logs(&[&log], 10.0, &TraceConfig::on());
+        let mut buf = Vec::new();
+        tr.write_jsonl(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let mut lines = 0;
+        for line in text.lines() {
+            crate::util::json::Json::parse(line).expect("jsonl line parses");
+            lines += 1;
+        }
+        assert_eq!(lines, tr.stats().spans + tr.stats().instants);
+    }
+
+    #[test]
+    fn unrepaired_outage_closes_at_end() {
+        let mut log = EventLog::default();
+        log.push(RmsEvent::NodeFailed { node: 0, time: 5.0 });
+        let tr = Trace::from_logs(&[&log], 42.0, &TraceConfig::on());
+        let down: Vec<_> = tr.spans.iter().filter(|s| s.name == "down").collect();
+        assert_eq!(down.len(), 1);
+        assert_eq!(down[0].end, 42.0);
+    }
+}

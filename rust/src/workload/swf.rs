@@ -195,7 +195,16 @@ pub fn parse(text: &str) -> SwfTrace {
 
 /// Parse a trace file from disk.
 pub fn load(path: &str) -> std::io::Result<SwfTrace> {
-    Ok(parse(&std::fs::read_to_string(path)?))
+    let trace = parse(&std::fs::read_to_string(path)?);
+    if trace.stats.malformed > 0 || trace.stats.skipped > 0 {
+        crate::obs::log::info(&format!(
+            "SWF trace {path}: {} usable records ({} malformed, {} skipped)",
+            trace.records.len(),
+            trace.stats.malformed,
+            trace.stats.skipped
+        ));
+    }
+    Ok(trace)
 }
 
 /// Materialize a trace into a [`WorkloadSpec`] under `opts`.

@@ -11,7 +11,7 @@ fn run(jobs: usize, seed: u64, mode: SchedMode, flexible: bool) -> RunSummary {
     let w = workload::generate(jobs, seed);
     let w = if flexible { w } else { w.as_fixed() };
     let cfg = DesConfig { mode, ..Default::default() };
-    RunSummary::from_run(&Engine::new(cfg).run(&w, if flexible { "flex" } else { "fixed" }))
+    RunSummary::from_run(Engine::new(cfg).run(&w, if flexible { "flex" } else { "fixed" }))
 }
 
 #[test]
@@ -116,8 +116,8 @@ fn smaller_cluster_serializes_more() {
         rms: RmsConfig { nodes: 128, ..Default::default() },
         ..Default::default()
     };
-    let s = RunSummary::from_run(&Engine::new(small).run(&w, "small"));
-    let b = RunSummary::from_run(&Engine::new(big).run(&w, "big"));
+    let s = RunSummary::from_run(Engine::new(small).run(&w, "small"));
+    let b = RunSummary::from_run(Engine::new(big).run(&w, "big"));
     assert!(s.makespan > b.makespan);
 }
 
@@ -136,7 +136,7 @@ fn down_nodes_reduce_capacity_but_workload_drains() {
     let r = engine.run(&w, "degraded");
     assert_eq!(r.rms.completed_jobs(), 20);
     let healthy = run(20, 15, SchedMode::Sync, true);
-    let degraded = RunSummary::from_run(&r);
+    let degraded = RunSummary::from_run(r);
     assert!(degraded.makespan >= healthy.makespan);
 }
 

@@ -314,7 +314,7 @@ fn fed_summary_merges_shards_and_reports_per_shard_measures() {
     }
     // flat summaries stay federation-free
     let flat = Engine::new(base_cfg(SchedMode::Sync, false)).run(&w, "flat");
-    assert!(RunSummary::from_run(&flat).federation.is_none());
+    assert!(RunSummary::from_run(flat).federation.is_none());
 }
 
 #[test]

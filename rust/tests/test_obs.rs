@@ -1,0 +1,350 @@
+//! Observability subsystem tests ([`dmr::obs`]): the inertness contract,
+//! the Chrome-trace exporter, and the self-profile plumbing.
+//!
+//! The load-bearing property is **observational inertness**: deriving and
+//! exporting a span trace must not change a single bit of a run.  The
+//! matrix below locks event-log digests and makespan bits across
+//! fixed/sync/async × fault-free/faulty × flat/federated, with a full
+//! trace built and streamed in between.  On top of that: the exported
+//! Chrome-trace JSON round-trips through `util::json` with every span
+//! begin/end paired, the `running`-span count equals jobs completed +
+//! failure requeues, stride/cap bound the job tracks, and the
+//! deterministic pass counters reach the campaign CSV/JSON surfaces.
+
+use std::collections::HashMap;
+
+use dmr::campaign::{self, CampaignSpec};
+use dmr::des::{DesConfig, Engine, RunResult};
+use dmr::dmr::SchedMode;
+use dmr::federation::{FedEngine, FederationConfig, FedRunResult, RoutingPolicy, ShardSpec};
+use dmr::metrics::report;
+use dmr::obs::{Phase, Trace, TraceConfig};
+use dmr::resilience::{
+    DrainSet, DrainWindow, FaultKind, FaultSpec, FaultTraceEvent, RecoveryConfig,
+    ResilienceConfig,
+};
+use dmr::rms::RmsConfig;
+use dmr::util::json::Json;
+use dmr::workload::{self, WorkloadSpec};
+
+fn modes() -> [(&'static str, SchedMode, bool); 3] {
+    [
+        ("fixed", SchedMode::Sync, false),
+        ("sync", SchedMode::Sync, true),
+        ("async", SchedMode::Async, true),
+    ]
+}
+
+fn base_cfg(sched: SchedMode, faulty: bool) -> DesConfig {
+    let resilience = if faulty {
+        ResilienceConfig {
+            faults: FaultSpec {
+                mtbf: 60_000.0,
+                mttr: 1_000.0,
+                scripted: vec![FaultTraceEvent { at: 300.0, node: 1, kind: FaultKind::Fail }],
+                drains: vec![DrainWindow {
+                    start: 1_500.0,
+                    end: 3_000.0,
+                    nodes: DrainSet::Count(6),
+                }],
+            },
+            recovery: RecoveryConfig { checkpoint_interval: 500.0, ..Default::default() },
+            ..Default::default()
+        }
+    } else {
+        ResilienceConfig::default()
+    };
+    DesConfig {
+        rms: RmsConfig { nodes: 64, ..Default::default() },
+        mode: sched,
+        resilience,
+        ..Default::default()
+    }
+}
+
+fn stream(flexible: bool) -> WorkloadSpec {
+    let w = workload::generate(40, 17);
+    if flexible {
+        w
+    } else {
+        w.as_fixed()
+    }
+}
+
+fn flat_run(mode: &str, sched: SchedMode, flexible: bool, faulty: bool) -> RunResult {
+    Engine::new(base_cfg(sched, faulty)).run(&stream(flexible), mode)
+}
+
+fn flat_digest(r: &RunResult) -> String {
+    format!(
+        "events={} log={:016x} makespan={:016x}",
+        r.events,
+        r.rms.log.digest(),
+        r.makespan.to_bits()
+    )
+}
+
+fn fed_run(faulty: bool) -> FedRunResult {
+    let fed = FederationConfig {
+        shards: ShardSpec::uniform(64, 2),
+        routing: RoutingPolicy::RoundRobin,
+        steal: false,
+        shard_faults: None,
+    };
+    FedEngine::new(base_cfg(SchedMode::Sync, faulty), fed).run(&stream(true), "fed")
+}
+
+fn fed_digest(r: &FedRunResult) -> String {
+    let shards: Vec<String> =
+        r.shards.iter().map(|s| format!("{:016x}", s.rms.log.digest())).collect();
+    format!("events={} logs={} makespan={:016x}", r.events, shards.join(","), r.makespan.to_bits())
+}
+
+/// Derive a full trace from a finished run and stream both exporters into
+/// memory — the heaviest thing tracing ever does.  Returns bytes written
+/// so the caller can assert the writers actually ran.
+fn exercise_trace_flat(r: &RunResult) -> usize {
+    let t = Trace::from_run(r, &TraceConfig::on());
+    let mut chrome = Vec::new();
+    t.write_chrome(&mut chrome).unwrap();
+    let mut jsonl = Vec::new();
+    t.write_jsonl(&mut jsonl).unwrap();
+    chrome.len() + jsonl.len()
+}
+
+/// Trace-on vs trace-off bit-identity across the full flat matrix:
+/// fixed/sync/async × fault-free/faulty.  Tracing happens strictly
+/// post-run, so the digests cannot differ — this test is the contract
+/// that keeps it that way.
+#[test]
+fn tracing_is_observationally_inert_flat_matrix() {
+    for faulty in [false, true] {
+        for (mode, sched, flexible) in modes() {
+            let plain = flat_digest(&flat_run(mode, sched, flexible, faulty));
+            let traced_run = flat_run(mode, sched, flexible, faulty);
+            let bytes = exercise_trace_flat(&traced_run);
+            assert!(bytes > 0, "{mode} faulty={faulty}: exporters wrote nothing");
+            assert_eq!(
+                plain,
+                flat_digest(&traced_run),
+                "{mode} faulty={faulty}: tracing changed the run"
+            );
+        }
+    }
+}
+
+/// Same inertness lock for the federated engine (one track pair per
+/// shard): per-shard digests and the global makespan are bit-identical
+/// with a trace derived and streamed in between.
+#[test]
+fn tracing_is_observationally_inert_federated() {
+    for faulty in [false, true] {
+        let plain = fed_digest(&fed_run(faulty));
+        let traced_run = fed_run(faulty);
+        let t = Trace::from_fed(&traced_run, &TraceConfig::on());
+        let mut chrome = Vec::new();
+        t.write_chrome(&mut chrome).unwrap();
+        assert!(!chrome.is_empty());
+        assert_eq!(
+            plain,
+            fed_digest(&traced_run),
+            "faulty={faulty}: tracing changed the federated run"
+        );
+        assert!(t.stats().job_tracks_kept > 0, "both shards contribute job tracks");
+    }
+}
+
+/// The exported Chrome-trace JSON must round-trip through the crate's own
+/// strict parser with every span begin paired to an end on its (pid, tid)
+/// track, and the `running`-span count must equal jobs completed +
+/// failure requeues — the acceptance criterion of the exporter.
+#[test]
+fn chrome_export_round_trips_with_paired_spans() {
+    let r = flat_run("sync", SchedMode::Sync, true, true);
+    let completed = r.rms.completed_jobs();
+    let requeues = r.rms.log.requeues();
+    let t = Trace::from_run(&r, &TraceConfig::on());
+    let stats = t.stats();
+    let mut chrome = Vec::new();
+    t.write_chrome(&mut chrome).unwrap();
+    let text = String::from_utf8(chrome).unwrap();
+    let doc = Json::parse(&text).expect("exported Chrome trace must be valid JSON");
+
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+    let mut begins = 0usize;
+    let mut ends = 0usize;
+    let mut running_spans = 0usize;
+    let mut names_seen: Vec<String> = Vec::new();
+    let mut stacks: HashMap<(i64, i64), Vec<String>> = HashMap::new();
+    for ev in events {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).expect("every event has ph");
+        let key = (
+            ev.get("pid").and_then(|p| p.as_f64()).unwrap_or(-1.0) as i64,
+            ev.get("tid").and_then(|p| p.as_f64()).unwrap_or(-1.0) as i64,
+        );
+        let name = ev.get("name").and_then(|n| n.as_str()).unwrap_or("").to_string();
+        match ph {
+            "B" => {
+                begins += 1;
+                if name == "running" {
+                    running_spans += 1;
+                }
+                names_seen.push(name.clone());
+                stacks.entry(key).or_default().push(name);
+            }
+            "E" => {
+                ends += 1;
+                let open = stacks
+                    .get_mut(&key)
+                    .and_then(|s| s.pop())
+                    .unwrap_or_else(|| panic!("E without open B on track {key:?}"));
+                assert_eq!(open, name, "mismatched begin/end pair on track {key:?}");
+            }
+            "i" | "M" => {}
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    assert!(
+        stacks.values().all(|s| s.is_empty()),
+        "unclosed spans left on some track: {stacks:?}"
+    );
+    assert_eq!(begins, ends, "every begin is paired");
+    assert_eq!(begins, stats.spans, "span count matches TraceStats");
+    assert_eq!(
+        running_spans,
+        completed + requeues,
+        "running spans == jobs completed + failure requeues"
+    );
+    for required in ["pending", "running", "down", "drain"] {
+        assert!(
+            names_seen.iter().any(|n| n == required),
+            "span {required:?} missing from the faulty-run trace"
+        );
+    }
+}
+
+/// Every line of the JSONL exporter is a standalone JSON object.
+#[test]
+fn jsonl_export_parses_line_by_line() {
+    let r = flat_run("sync", SchedMode::Sync, true, true);
+    let t = Trace::from_run(&r, &TraceConfig::on());
+    let mut out = Vec::new();
+    t.write_jsonl(&mut out).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    let mut lines = 0usize;
+    for line in text.lines() {
+        let v = Json::parse(line).expect("every JSONL line parses");
+        assert!(v.get("type").and_then(|t| t.as_str()).is_some());
+        lines += 1;
+    }
+    let stats = t.stats();
+    assert_eq!(lines, stats.spans + stats.instants, "one line per span/instant");
+}
+
+/// Stride and cap bound the kept job tracks, and the machine tracks are
+/// never filtered — trace size stays controlled on huge workloads.
+#[test]
+fn stride_and_cap_bound_exported_job_tracks() {
+    let r = flat_run("sync", SchedMode::Sync, true, true);
+    let full = Trace::from_run(&r, &TraceConfig::on()).stats();
+    assert_eq!(full.job_tracks_kept, full.job_tracks_total, "stride 1 keeps everything");
+    assert_eq!(full.job_tracks_total, 40);
+
+    let strided = Trace::from_run(
+        &r,
+        &TraceConfig { enabled: true, stride: 4, cap: 0 },
+    )
+    .stats();
+    assert_eq!(strided.job_tracks_total, 40, "total is filter-independent");
+    assert_eq!(strided.job_tracks_kept, 10, "every 4th of 40 job tracks");
+
+    let capped = Trace::from_run(
+        &r,
+        &TraceConfig { enabled: true, stride: 1, cap: 5 },
+    )
+    .stats();
+    assert_eq!(capped.job_tracks_kept, 5, "cap bounds the kept set");
+    assert!(capped.spans < full.spans, "fewer tracks, fewer spans");
+    assert!(capped.spans > 0, "machine tracks survive the cap");
+}
+
+/// The self-profile counts every dispatched event exactly once, phases
+/// are recorded, and merged profiles accumulate — monotone by
+/// construction (fixed arrays of saturating counters).
+#[test]
+fn self_profile_counts_phases() {
+    let r = flat_run("sync", SchedMode::Sync, true, false);
+    assert_eq!(
+        r.profile.calls(Phase::Dispatch),
+        r.events,
+        "one dispatch sample per DES event"
+    );
+    assert!(r.profile.calls(Phase::Schedule) > 0, "schedule passes sampled");
+    assert!(r.profile.calls(Phase::Dmr) > 0, "DMR checks sampled");
+    assert!(r.profile.total_ns() > 0, "wall clock advanced");
+    let share_sched = r.profile.share(Phase::Schedule);
+    assert!(share_sched >= 0.0 && share_sched.is_finite(), "share is a fraction");
+    assert!(r.profile.events_per_sec(r.events) > 0.0);
+    // histogram mass equals dispatch samples
+    let hist_mass: u64 = r.profile.histogram().iter().sum();
+    assert_eq!(hist_mass, r.profile.calls(Phase::Dispatch));
+
+    // the federated engine threads one global profile through too
+    let f = fed_run(false);
+    assert_eq!(f.profile.calls(Phase::Dispatch), f.events);
+    assert!(f.profile.calls(Phase::Schedule) > 0);
+}
+
+/// The deterministic pass/check counters (never the wall-clock numbers)
+/// reach the campaign CSV headers, the per-run rows, and the aggregate
+/// JSON — and stay worker-count-invariant like every other column.
+#[test]
+fn pass_counters_reach_campaign_surfaces() {
+    let spec = CampaignSpec::from_toml_str(
+        r#"
+name = "obs-surfaces"
+nodes = [32]
+modes = ["fixed", "sync"]
+seeds = [1, 2]
+[[workload]]
+kind = "feitelson"
+jobs = 8
+"#,
+    )
+    .unwrap();
+    let res = campaign::run_campaign(&spec, 2).unwrap();
+
+    let run_cols = report::run_columns();
+    for col in ["sched_passes", "sched_elided", "dmr_checks", "dmr_elided"] {
+        assert!(run_cols.contains(&col), "runs CSV header missing {col}");
+    }
+    let run_rows = report::campaign_run_rows(&res.records);
+    assert!(run_rows.iter().all(|r| r.len() == run_cols.len()), "ragged runs CSV");
+
+    let aggs = campaign::aggregate(&res.records);
+    let agg_cols = report::agg_columns();
+    for col in ["sched_passes_mean", "sched_elided_mean", "dmr_checks_mean", "dmr_elided_mean"] {
+        assert!(agg_cols.contains(&col), "agg CSV header missing {col}");
+    }
+    let agg_rows = report::campaign_agg_rows(&aggs);
+    assert!(agg_rows.iter().all(|r| r.len() == agg_cols.len()), "ragged agg CSV");
+
+    let json = report::campaign_agg_json(&spec, &aggs).render();
+    for key in ["sched_passes", "sched_elided", "dmr_checks", "dmr_elided"] {
+        assert!(json.contains(key), "agg JSON missing {key}");
+    }
+    // wall-clock values must NOT leak into the deterministic outputs
+    assert!(!json.contains("wall_ns"), "wall clock leaked into agg JSON");
+    assert!(!run_cols.iter().any(|c| c.contains("wall")), "wall clock leaked into runs CSV");
+
+    // sync runs actually schedule and check
+    for r in &res.records {
+        assert!(r.summary.passes.sched_passes > 0, "{}: no passes", r.plan.label);
+        if !r.plan.label.contains("fixed") {
+            assert!(r.summary.passes.dmr_checks > 0, "{}: no DMR checks", r.plan.label);
+        }
+    }
+}

@@ -140,7 +140,7 @@ fn deadline_strategy_never_shrinks_deadline_jobs() {
         .filter(|e| matches!(e, RmsEvent::Shrunk { .. }))
         .count();
     assert_eq!(shrinks, 0, "deadline jobs must not be shrunk");
-    let s = RunSummary::from_run(&r);
+    let s = RunSummary::from_run(r);
     assert_eq!(s.deadline_jobs, 40);
     assert!(s.deadline_misses <= s.deadline_jobs);
 }

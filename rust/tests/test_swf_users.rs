@@ -85,7 +85,7 @@ fn more_than_four_distinct_users_survive_materialization() {
     };
     let r = Engine::new(cfg).run(&w, "users");
     assert_eq!(r.rms.completed_jobs(), 9);
-    let s = RunSummary::from_run(&r);
+    let s = RunSummary::from_run(r);
     let mut seen: Vec<u32> = s.jobs.iter().map(|j| j.user).collect();
     seen.sort_unstable();
     seen.dedup();
@@ -122,7 +122,7 @@ fn fair_share_is_deterministic_on_user_bearing_swf_with_deadlines() {
         rms: RmsConfig { nodes: 32, strategy: PolicyStrategy::FairShare, ..Default::default() },
         ..Default::default()
     };
-    let s = RunSummary::from_run(&Engine::new(cfg).run(&w, "deadlines"));
+    let s = RunSummary::from_run(Engine::new(cfg).run(&w, "deadlines"));
     assert_eq!(s.deadline_jobs, 9);
     assert!(s.deadline_misses <= s.deadline_jobs);
 }
