@@ -175,6 +175,7 @@ fn main() {
             wall_secs: wall,
             makespan_s: rb.makespan,
             checksum: sum_b,
+            peak_live: rb.peak_slab,
             dispatch_ns: rb.profile.total_ns(),
             sched_ns: rb.profile.wall_ns(Phase::Schedule),
             dmr_ns: rb.profile.wall_ns(Phase::Dmr),

@@ -93,7 +93,7 @@ fn reference_path() -> bool {
     std::env::var("HOTPATH_REFERENCE").map(|v| v == "1").unwrap_or(false)
 }
 
-fn run_once(case: &Case, w: &WorkloadSpec) -> (u64, f64, f64, String, u64, PhaseProfile) {
+fn run_once(case: &Case, w: &WorkloadSpec) -> (u64, f64, f64, String, u64, usize, PhaseProfile) {
     let mode = if case.mode == "async" { SchedMode::Async } else { SchedMode::Sync };
     let cfg = DesConfig {
         rms: RmsConfig {
@@ -110,7 +110,7 @@ fn run_once(case: &Case, w: &WorkloadSpec) -> (u64, f64, f64, String, u64, Phase
     let checksum = bench_checksum(&r.rms.log, r.makespan);
     let stats = r.rms.pass_stats();
     let elided = stats.sched_elided + stats.dmr_elided;
-    (r.events, wall, r.makespan, checksum, elided, r.profile)
+    (r.events, wall, r.makespan, checksum, elided, r.peak_slab, r.profile)
 }
 
 fn main() {
@@ -144,8 +144,8 @@ fn main() {
         let scenario = format!("{}{}-n{}-{}", case.workload, case.jobs, case.nodes, case.mode);
         let w = materialize(case);
         // Cold run: determinism reference.  Warm run: the measurement.
-        let (ev_a, _, mk_a, sum_a, _, _) = run_once(case, &w);
-        let (ev_b, wall, mk_b, sum_b, elided, profile) = run_once(case, &w);
+        let (ev_a, _, mk_a, sum_a, _, _, _) = run_once(case, &w);
+        let (ev_b, wall, mk_b, sum_b, elided, peak, profile) = run_once(case, &w);
         assert_eq!(
             sum_a, sum_b,
             "{scenario}: determinism checksum mismatch ({mk_a} vs {mk_b})"
@@ -170,6 +170,7 @@ fn main() {
             wall_secs: wall,
             makespan_s: mk_b,
             checksum: sum_b,
+            peak_live: peak,
             dispatch_ns: profile.total_ns(),
             sched_ns: profile.wall_ns(Phase::Schedule),
             dmr_ns: profile.wall_ns(Phase::Dmr),

@@ -76,7 +76,10 @@ fn materialize(case: &Case) -> WorkloadSpec {
     }
 }
 
-fn run_once(case: &Case, w: &WorkloadSpec) -> (u64, f64, f64, String, u64, u64, u64, PhaseProfile) {
+fn run_once(
+    case: &Case,
+    w: &WorkloadSpec,
+) -> (u64, f64, f64, String, u64, u64, u64, usize, PhaseProfile) {
     let mut resilience = fault_model();
     if case.resize_faults() {
         // The transactional-resize trajectory point: a third of the
@@ -109,6 +112,7 @@ fn run_once(case: &Case, w: &WorkloadSpec) -> (u64, f64, f64, String, u64, u64, 
         r.resilience.node_failures,
         r.resilience.rescued + r.resilience.requeued,
         r.resilience.resize_aborts,
+        r.peak_slab,
         r.profile,
     )
 }
@@ -137,8 +141,8 @@ fn main() {
         let scenario = format!("faulty-feitelson{}-n{}-{}", case.jobs, case.nodes, case.mode);
         let w = materialize(case);
         // Cold run: determinism reference.  Warm run: the measurement.
-        let (ev_a, _, mk_a, sum_a, _, _, aborts_a, _) = run_once(case, &w);
-        let (ev_b, wall, mk_b, sum_b, failures, recoveries, aborts_b, profile) =
+        let (ev_a, _, mk_a, sum_a, _, _, aborts_a, _, _) = run_once(case, &w);
+        let (ev_b, wall, mk_b, sum_b, failures, recoveries, aborts_b, peak, profile) =
             run_once(case, &w);
         assert_eq!(
             sum_a, sum_b,
@@ -172,6 +176,7 @@ fn main() {
             wall_secs: wall,
             makespan_s: mk_b,
             checksum: sum_b,
+            peak_live: peak,
             dispatch_ns: profile.total_ns(),
             sched_ns: profile.wall_ns(Phase::Schedule),
             dmr_ns: profile.wall_ns(Phase::Dmr),

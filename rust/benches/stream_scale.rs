@@ -1,0 +1,148 @@
+//! Bench: million-job streaming replay — DES events/s and peak-resident
+//! job count when arrivals are pulled lazily from a [`JobStream`] instead
+//! of a materialized workload vector.  Emits `BENCH_stream.json`
+//! (per-scenario events/s, makespan checksums, `peak_live_jobs`) so future
+//! PRs can track both throughput and the memory bound.
+//!
+//! The point of the streaming pipeline is that memory scales with peak
+//! *concurrency*, not total job count: a fault-free run can never hold
+//! more live slab slots than the cluster has nodes, so every scenario
+//! asserts `peak_live <= nodes` — at a million jobs that is a ~250×
+//! reduction over keeping every job resident.
+//!
+//! Every scenario runs **twice**; the second (warm) run is the one
+//! measured, and the two runs' checksums (rolling event-log digest +
+//! makespan bits) must match exactly — CI fails on a determinism mismatch
+//! or a panic, never on timing.  Records are dropped (`keep_records =
+//! false`): the rolling digest and streaming metric folds survive, which
+//! is exactly the bounded-memory configuration a million-job replay uses.
+//!
+//! Quick mode (default, CI): 100k jobs sync + 1M jobs fixed on 4096
+//! nodes.  `BENCH_FULL=1` adds the 1M-job sync (malleable) case.
+
+mod common;
+
+use std::time::Instant;
+
+use dmr::des::{DesConfig, Engine, RunResult};
+use dmr::dmr::SchedMode;
+use dmr::metrics::report::{bench_checksum, bench_json, BenchRecord};
+use dmr::obs::Phase;
+use dmr::rms::RmsConfig;
+use dmr::util::table::Table;
+use dmr::workload::{Adapted, FeitelsonParams, FeitelsonStream};
+
+struct Case {
+    jobs: usize,
+    nodes: usize,
+    mode: &'static str, // fixed | sync | async
+    /// Engine look-ahead window (pulled-but-not-yet-arrived jobs).
+    window: usize,
+}
+
+/// Build the case's job stream.  Nothing is materialized: the Feitelson
+/// generator emits one job per pull and [`Adapted`] applies the
+/// fit/fixed transforms per job, so the only job storage anywhere is the
+/// engine's look-ahead buffer plus the live slab.
+fn stream_for(case: &Case) -> Adapted<FeitelsonStream> {
+    let params = FeitelsonParams { jobs: case.jobs, ..Default::default() };
+    let s = Adapted::new(FeitelsonStream::new(params, common::SEED)).fit(case.nodes);
+    if case.mode == "fixed" {
+        s.fixed(true)
+    } else {
+        s
+    }
+}
+
+fn run_once(case: &Case) -> (RunResult, f64) {
+    let mode = if case.mode == "async" { SchedMode::Async } else { SchedMode::Sync };
+    let cfg = DesConfig {
+        rms: RmsConfig {
+            nodes: case.nodes,
+            // The bounded-memory configuration: no per-job records, no
+            // retained event vector — digests and folds only.
+            keep_records: false,
+            ..Default::default()
+        },
+        mode,
+        ..Default::default()
+    };
+    let mut stream = stream_for(case);
+    let t0 = Instant::now();
+    let r = Engine::new(cfg)
+        .run_stream(&mut stream, case.window, "stream")
+        .expect("generator streams cannot fail");
+    let wall = t0.elapsed().as_secs_f64();
+    (r, wall)
+}
+
+fn main() {
+    common::banner(
+        "stream_scale",
+        "streamed DES replay at 100k-1M jobs: events/s + peak-resident jobs",
+    );
+    let mut cases = vec![
+        Case { jobs: 100_000, nodes: 4096, mode: "sync", window: 64 },
+        Case { jobs: 1_000_000, nodes: 4096, mode: "fixed", window: 64 },
+    ];
+    if common::full() {
+        cases.push(Case { jobs: 1_000_000, nodes: 4096, mode: "sync", window: 64 });
+    }
+
+    let mut t = Table::new(vec![
+        "Scenario", "Events", "Wall (s)", "Events/s", "Peak live", "Makespan (s)", "Checksum",
+    ]);
+    let mut records = Vec::with_capacity(cases.len());
+    for case in &cases {
+        let scenario = format!("stream-feitelson{}-n{}-{}", case.jobs, case.nodes, case.mode);
+        // Cold run: determinism reference.  Warm run: the measurement.
+        let (ra, _) = run_once(case);
+        let (rb, wall) = run_once(case);
+        let (sum_a, sum_b) =
+            (bench_checksum(&ra.rms.log, ra.makespan), bench_checksum(&rb.rms.log, rb.makespan));
+        assert_eq!(sum_a, sum_b, "{scenario}: determinism checksum mismatch");
+        assert_eq!(ra.events, rb.events, "{scenario}: event count mismatch");
+        assert_eq!(rb.user_jobs, case.jobs, "{scenario}: stream must drain fully");
+        // The memory bound the whole subsystem exists for: live slab
+        // slots are capped by cluster capacity, never by replay length.
+        assert!(rb.peak_slab > 0, "{scenario}: peak never recorded");
+        assert!(
+            rb.peak_slab <= case.nodes,
+            "{scenario}: peak-resident jobs {} exceeds the {}-node capacity bound",
+            rb.peak_slab,
+            case.nodes
+        );
+        assert_eq!(ra.peak_slab, rb.peak_slab, "{scenario}: peak mismatch");
+
+        t.row(vec![
+            scenario.clone(),
+            rb.events.to_string(),
+            format!("{wall:.3}"),
+            format!("{:.0}", rb.events as f64 / wall.max(1e-9)),
+            rb.peak_slab.to_string(),
+            format!("{:.1}", rb.makespan),
+            sum_b.clone(),
+        ]);
+        records.push(BenchRecord {
+            scenario,
+            workload: "feitelson".to_string(),
+            jobs: case.jobs,
+            nodes: case.nodes,
+            mode: case.mode.to_string(),
+            events: rb.events,
+            wall_secs: wall,
+            makespan_s: rb.makespan,
+            checksum: sum_b,
+            peak_live: rb.peak_slab,
+            dispatch_ns: rb.profile.total_ns(),
+            sched_ns: rb.profile.wall_ns(Phase::Schedule),
+            dmr_ns: rb.profile.wall_ns(Phase::Dmr),
+        });
+    }
+    println!("{}", t.render());
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_stream.json".into());
+    let doc = bench_json("stream_scale", &records).render();
+    std::fs::write(&out, format!("{doc}\n")).expect("write BENCH_stream.json");
+    println!("wrote {out} ({} scenarios, determinism checksums verified)", records.len());
+}

@@ -74,6 +74,10 @@ pub struct ScenarioAgg {
     pub dmr_checks: Summary,
     /// Memoized (elided) DMR checks per run.
     pub dmr_elided: Summary,
+    /// Peak-resident (live) job count per run — the streaming memory
+    /// bound: under `[stream]` memory tracks peak queued+running
+    /// concurrency, never total replay length.
+    pub peak_live: Summary,
     /// Total DES events across the scenario's runs (the events/s
     /// numerator of the stdout table).
     pub events_total: u64,
@@ -123,6 +127,7 @@ impl ScenarioAgg {
             sched_elided: Summary::new(),
             dmr_checks: Summary::new(),
             dmr_elided: Summary::new(),
+            peak_live: Summary::new(),
             events_total: 0,
             wall_ns_total: 0,
             fed_shards: 1,
@@ -160,6 +165,7 @@ impl ScenarioAgg {
         self.sched_elided.push(s.passes.sched_elided as f64);
         self.dmr_checks.push(s.passes.dmr_checks as f64);
         self.dmr_elided.push(s.passes.dmr_elided as f64);
+        self.peak_live.push(s.peak_live as f64);
         self.events_total += s.events;
         self.wall_ns_total += s.profile.total_ns();
         match &s.federation {

@@ -27,6 +27,6 @@ pub use runner::{
     run_campaign, run_campaign_opts, run_plan, CampaignOpts, CampaignResult, RunRecord,
 };
 pub use spec::{
-    CampaignSpec, FedAxis, FedPlan, PolicyAxis, RunMode, RunPlan, TraceAxis, WorkloadAxis,
-    WorkloadSource,
+    CampaignSpec, FedAxis, FedPlan, PolicyAxis, RunMode, RunPlan, StreamAxis, TraceAxis,
+    WorkloadAxis, WorkloadSource,
 };

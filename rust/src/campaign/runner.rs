@@ -22,7 +22,10 @@ use crate::metrics::RunSummary;
 use crate::obs::{Trace, TraceConfig, TraceStats};
 use crate::resilience::{FaultSpec, RecoveryConfig, ResilienceConfig};
 use crate::rms::{PolicyConfig, RmsConfig};
-use crate::workload::{self, swf, BurstLullParams, FeitelsonParams, WorkloadSpec};
+use crate::workload::{
+    self, swf, Adapted, BurstLullParams, BurstLullStream, FeitelsonParams, FeitelsonStream,
+    JobStream, SwfStream, WorkloadSpec,
+};
 
 /// One finished run.
 pub struct RunRecord {
@@ -117,7 +120,7 @@ pub fn run_campaign_opts(spec: &CampaignSpec, opts: &CampaignOpts) -> Result<Cam
 
     let next = AtomicUsize::new(0);
     let completed = AtomicUsize::new(0);
-    let slots: Mutex<Vec<Option<RunRecord>>> =
+    let slots: Mutex<Vec<Option<Result<RunRecord>>>> =
         Mutex::new((0..plans.len()).map(|_| None).collect());
 
     std::thread::scope(|scope| {
@@ -140,7 +143,7 @@ pub fn run_campaign_opts(spec: &CampaignSpec, opts: &CampaignOpts) -> Result<Cam
         .unwrap()
         .into_iter()
         .map(|r| r.expect("worker filled every slot"))
-        .collect();
+        .collect::<Result<_>>()?;
     Ok(CampaignResult { records, workers, wall_secs: t0.elapsed().as_secs_f64() })
 }
 
@@ -149,7 +152,7 @@ pub fn run_campaign_opts(spec: &CampaignSpec, opts: &CampaignOpts) -> Result<Cam
 /// plan's workload references, so it is self-contained.
 pub fn run_plan(spec: &CampaignSpec, plan: &RunPlan, opts: &CampaignOpts) -> Result<RunRecord> {
     let traces = preload_traces(spec)?;
-    Ok(execute_plan(spec, plan, &traces, opts))
+    execute_plan(spec, plan, &traces, opts)
 }
 
 /// Periodic `completed/total (ETA)` line on stderr, behind `--progress`.
@@ -167,9 +170,14 @@ fn report_progress(name: &str, done: usize, total: usize, t0: Instant) {
 
 /// Load every SWF trace referenced by the spec once, up front (they are
 /// shared read-only across workers and failures should surface before any
-/// DES time is spent).
+/// DES time is spent).  Streamed campaigns skip the preload entirely —
+/// each run opens the file line-by-line ([`SwfStream::open`]), which is
+/// the whole point of the bounded-memory path.
 fn preload_traces(spec: &CampaignSpec) -> Result<HashMap<String, swf::SwfTrace>> {
     let mut traces = HashMap::new();
+    if spec.stream.enabled {
+        return Ok(traces);
+    }
     for w in &spec.workloads {
         if let WorkloadSource::Swf { path, .. } = &w.source {
             if !traces.contains_key(path) {
@@ -189,26 +197,11 @@ fn preload_traces(spec: &CampaignSpec) -> Result<HashMap<String, swf::SwfTrace>>
     Ok(traces)
 }
 
-/// Execute one matrix point (pure function of the plan — see module docs).
-fn execute_plan(
-    spec: &CampaignSpec,
-    plan: &RunPlan,
-    traces: &HashMap<String, swf::SwfTrace>,
-    opts: &CampaignOpts,
-) -> RunRecord {
-    let axis = &spec.workloads[plan.workload];
-    let mut w = materialize(&axis.source, plan, traces);
-    fit_to_cluster(&mut w, plan.nodes);
-    if let Some(slack) = axis.deadline_slack {
-        // Soft deadlines from the *clamped* sizes (fit_to_cluster may
-        // have shrunk oversized jobs, changing their runtime estimate).
-        w = w.with_deadlines(slack);
-    }
-    let (mode, flexible) = plan.mode.des_mode();
-    if !flexible {
-        w = w.as_fixed();
-    }
-    let cfg = DesConfig {
+/// Build the DES configuration for one matrix point (shared between the
+/// materialized and streamed execution paths — the config must be
+/// identical for the two paths to stay bit-identical).
+fn des_config(spec: &CampaignSpec, plan: &RunPlan, mode: crate::dmr::SchedMode) -> DesConfig {
+    DesConfig {
         rms: RmsConfig {
             nodes: plan.nodes,
             backfill: plan.backfill,
@@ -220,6 +213,7 @@ fn execute_plan(
                 fair_share_slack: spec.policy.fair_share_slack,
             },
             shrink_priority_boost: plan.shrink_boost,
+            keep_records: plan.keep_records,
             ..Default::default()
         },
         mode,
@@ -238,7 +232,32 @@ fn execute_plan(
             resize_faults: spec.resize_faults.spec(plan.spawn_fail),
         },
         ..Default::default()
-    };
+    }
+}
+
+/// Execute one matrix point (pure function of the plan — see module docs).
+fn execute_plan(
+    spec: &CampaignSpec,
+    plan: &RunPlan,
+    traces: &HashMap<String, swf::SwfTrace>,
+    opts: &CampaignOpts,
+) -> Result<RunRecord> {
+    if plan.stream {
+        return execute_streamed(spec, plan, opts);
+    }
+    let axis = &spec.workloads[plan.workload];
+    let mut w = materialize(&axis.source, plan, traces);
+    fit_to_cluster(&mut w, plan.nodes);
+    if let Some(slack) = axis.deadline_slack {
+        // Soft deadlines from the *clamped* sizes (fit_to_cluster may
+        // have shrunk oversized jobs, changing their runtime estimate).
+        w = w.with_deadlines(slack);
+    }
+    let (mode, flexible) = plan.mode.des_mode();
+    if !flexible {
+        w = w.as_fixed();
+    }
+    let cfg = des_config(spec, plan, mode);
     let jobs = w.len();
     // Trace derivation must precede summarization (from_run takes the
     // RunResult by value); it reads the sealed event log only, so the run
@@ -266,7 +285,85 @@ fn execute_plan(
             (RunSummary::from_fed(&result, fp.routing, fp.steal), trace)
         }
     };
-    RunRecord { plan: plan.clone(), jobs, summary, trace }
+    Ok(RunRecord { plan: plan.clone(), jobs, summary, trace })
+}
+
+/// Execute one matrix point through the streaming pipeline: build a
+/// [`JobStream`] for the plan's source, wrap it in the [`Adapted`]
+/// transform chain (fit → deadlines → fixed, mirroring the materialized
+/// path's order exactly), and let the engine pull arrivals lazily with
+/// the plan's look-ahead window.  SWF traces are opened here, per run,
+/// and read line-by-line — no preload, no resident record vector.
+fn execute_streamed(spec: &CampaignSpec, plan: &RunPlan, opts: &CampaignOpts) -> Result<RunRecord> {
+    let axis = &spec.workloads[plan.workload];
+    let inner: Box<dyn JobStream> = match &axis.source {
+        WorkloadSource::Feitelson { jobs, mean_interarrival, work_spread } => {
+            let params = FeitelsonParams {
+                jobs: *jobs,
+                mean_interarrival: *mean_interarrival,
+                work_spread: *work_spread,
+                ..Default::default()
+            };
+            Box::new(FeitelsonStream::new(params, plan.seed))
+        }
+        WorkloadSource::BurstLull { jobs, burst, burst_gap, lull } => {
+            let params = BurstLullParams {
+                jobs: *jobs,
+                burst: *burst,
+                burst_gap: *burst_gap,
+                lull: *lull,
+                ..Default::default()
+            };
+            Box::new(BurstLullStream::new(params, plan.seed))
+        }
+        WorkloadSource::Swf { path, opts: swf_opts } => Box::new(
+            SwfStream::open(path, swf_opts.clone(), plan.seed)
+                .with_context(|| format!("streaming SWF trace {path}"))?,
+        ),
+    };
+    let (mode, flexible) = plan.mode.des_mode();
+    let mut stream = Adapted::new(inner).fit(plan.nodes);
+    if let Some(slack) = axis.deadline_slack {
+        stream = stream.deadlines(slack);
+    }
+    if !flexible {
+        stream = stream.fixed(true);
+    }
+    let cfg = des_config(spec, plan, mode);
+    let tracing = opts.trace_cfg.enabled && opts.trace_dir.is_some();
+    if tracing && !plan.keep_records {
+        crate::obs::log::warn(&format!(
+            "trace export skipped for {}: streamed run without keep_records retains no events",
+            plan.label
+        ));
+    }
+    let (jobs, summary, trace) = match &plan.federation {
+        None => {
+            let result = Engine::new(cfg)
+                .run_stream(&mut stream, plan.lookahead, &plan.label)
+                .with_context(|| format!("streamed run {}", plan.label))?;
+            let trace = (tracing && plan.keep_records)
+                .then(|| Trace::from_run(&result, &opts.trace_cfg))
+                .and_then(|t| export_trace(t, plan, opts));
+            (result.user_jobs, RunSummary::from_run(result), trace)
+        }
+        Some(fp) => {
+            let fed = FederationConfig {
+                shards: fp.shards.clone(),
+                routing: fp.routing,
+                steal: fp.steal,
+                shard_faults: shard_fault_specs(spec, fp, &cfg),
+            };
+            let result = FedEngine::new(cfg, fed)
+                .run_stream(&mut stream, plan.lookahead, &plan.label)
+                .with_context(|| format!("streamed run {}", plan.label))?;
+            let trace = (tracing && plan.keep_records)
+                .then(|| Trace::from_fed(&result, &opts.trace_cfg))
+                .and_then(|t| export_trace(t, plan, opts));
+            (result.user_jobs, RunSummary::from_fed(&result, fp.routing, fp.steal), trace)
+        }
+    };
+    Ok(RunRecord { plan: plan.clone(), jobs, summary, trace })
 }
 
 /// Write the run's trace files.  Export failures warn and yield `None` —
@@ -612,6 +709,62 @@ jobs = 10
             assert!(jsonl.is_file(), "missing {}", jsonl.display());
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn streamed_campaign_matches_materialized() {
+        // Same matrix ± a [stream] block: every deterministic output must
+        // be bit-identical, while the streamed records drop the per-job
+        // vector (keep_records defaults to false under [stream]).
+        let body = r#"
+name = "streamy"
+nodes = [32]
+modes = ["fixed", "sync"]
+seeds = [1, 2]
+"#;
+        let tail = "[[workload]]\nkind = \"feitelson\"\njobs = 8\n";
+        let plain =
+            CampaignSpec::from_toml_str(&format!("{body}{tail}")).unwrap();
+        let streamed = CampaignSpec::from_toml_str(&format!(
+            "{body}[stream]\nlookahead = 4\n{tail}"
+        ))
+        .unwrap();
+        let a = run_campaign(&plain, 2).unwrap();
+        let b = run_campaign(&streamed, 2).unwrap();
+        assert_eq!(a.records.len(), b.records.len());
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.jobs, y.jobs);
+            let (s, t) = (&x.summary, &y.summary);
+            assert_eq!(s.makespan.to_bits(), t.makespan.to_bits(), "{}", y.plan.label);
+            assert_eq!(s.util_mean.to_bits(), t.util_mean.to_bits(), "{}", y.plan.label);
+            assert_eq!(s.wait.mean().to_bits(), t.wait.mean().to_bits());
+            assert_eq!(s.exec.mean().to_bits(), t.exec.mean().to_bits());
+            assert_eq!(s.node_seconds().to_bits(), t.node_seconds().to_bits());
+            assert_eq!(s.jobs.len(), x.jobs, "materialized keeps records");
+            assert!(t.jobs.is_empty(), "streamed default drops records");
+            assert!(t.peak_live > 0, "peak-resident count recorded");
+        }
+
+        // keep_records = true restores the per-job vector, still
+        // bit-identical.
+        let kept = CampaignSpec::from_toml_str(&format!(
+            "{body}[stream]\nkeep_records = true\n{tail}"
+        ))
+        .unwrap();
+        let c = run_campaign(&kept, 2).unwrap();
+        for (x, y) in a.records.iter().zip(&c.records) {
+            assert_eq!(
+                x.summary.makespan.to_bits(),
+                y.summary.makespan.to_bits(),
+                "{}",
+                y.plan.label
+            );
+            assert_eq!(y.summary.jobs.len(), y.jobs);
+            for (ja, jb) in x.summary.jobs.iter().zip(&y.summary.jobs) {
+                assert_eq!(ja.name, jb.name);
+                assert_eq!(ja.end.to_bits(), jb.end.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -362,6 +362,14 @@ pub struct RunPlan {
     pub spawn_fail: f64,
     /// Federation point (`None` = the flat single-cluster engine).
     pub federation: Option<FedPlan>,
+    /// Run through the streaming pipeline (lazy arrivals, reclaimed
+    /// archives) instead of materializing the workload.
+    pub stream: bool,
+    /// Retain per-job records/events/telemetry (always `true` for
+    /// non-streamed runs; the `[stream]` knob for streamed ones).
+    pub keep_records: bool,
+    /// Streaming look-ahead window (unused when `stream` is false).
+    pub lookahead: usize,
 }
 
 /// The optional `[trace]` block: default stride/cap knobs applied when the
@@ -379,6 +387,32 @@ pub struct TraceAxis {
 impl Default for TraceAxis {
     fn default() -> Self {
         TraceAxis { stride: 1, cap: 0 }
+    }
+}
+
+/// The optional `[stream]` block: the streaming-replay memory model
+/// (see `docs/ARCHITECTURE.md`, "Streaming replay & memory model").  Not
+/// a sweep axis — streamed and materialized runs are bit-identical by
+/// construction, so there is nothing to sweep; the block only changes how
+/// much memory a run holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamAxis {
+    /// Pull jobs lazily through a [`crate::workload::JobStream`] instead
+    /// of materializing the whole workload (`enabled = true`, or just the
+    /// presence of a `[stream]` block).
+    pub enabled: bool,
+    /// Retain per-job records, raw events and telemetry even when
+    /// streaming (needed for per-job CSVs and `--trace` export; costs
+    /// O(total jobs) memory).  Default `false` under `[stream]`.
+    pub keep_records: bool,
+    /// Look-ahead window: unarrived jobs held resident (any value ≥ 1
+    /// gives bit-identical results; bigger is marginally faster I/O).
+    pub lookahead: usize,
+}
+
+impl Default for StreamAxis {
+    fn default() -> Self {
+        StreamAxis { enabled: false, keep_records: true, lookahead: 64 }
     }
 }
 
@@ -409,6 +443,8 @@ pub struct CampaignSpec {
     pub federation: Option<FedAxis>,
     /// Default trace-export knobs for `--trace` runs (`[trace]` block).
     pub trace: TraceAxis,
+    /// Streaming-replay knobs (`[stream]` block; disabled by default).
+    pub stream: StreamAxis,
 }
 
 impl CampaignSpec {
@@ -554,6 +590,11 @@ impl CampaignSpec {
             Some(t) => parse_trace(t)?,
         };
 
+        let stream = match v.get("stream") {
+            None => StreamAxis::default(),
+            Some(s) => parse_stream(s)?,
+        };
+
         // A duplicate entry on any swept axis would emit two *non-adjacent*
         // scenario blocks with identical ids; aggregate() merges only
         // adjacent records, so the aggregate CSV would carry duplicate
@@ -589,6 +630,7 @@ impl CampaignSpec {
             resize_faults,
             federation,
             trace,
+            stream,
         })
     }
 
@@ -738,6 +780,10 @@ impl CampaignSpec {
                                                         checkpoint_interval: ckpt,
                                                         spawn_fail,
                                                         federation: federation.clone(),
+                                                        stream: self.stream.enabled,
+                                                        keep_records: !self.stream.enabled
+                                                            || self.stream.keep_records,
+                                                        lookahead: self.stream.lookahead,
                                                     });
                                                 }
                                             }
@@ -1153,6 +1199,32 @@ fn parse_federation(f: &Json, nodes: &[usize]) -> Result<FedAxis> {
         }
     }
     Ok(FedAxis { shards, routing, steal, topology, shard_faults })
+}
+
+/// Parse the `[stream]` block (see `scenarios/README.md` for the schema).
+/// The block's presence enables streaming unless `enabled = false`.
+fn parse_stream(s: &Json) -> Result<StreamAxis> {
+    let enabled = match s.get("enabled") {
+        None => true,
+        Some(Json::Bool(b)) => *b,
+        Some(_) => bail!("`stream.enabled` must be a boolean"),
+    };
+    let keep_records = match s.get("keep_records") {
+        None => false,
+        Some(Json::Bool(b)) => *b,
+        Some(_) => bail!("`stream.keep_records` must be a boolean"),
+    };
+    let lookahead = match s.get("lookahead") {
+        None => StreamAxis::default().lookahead,
+        Some(x) => {
+            let n = usize_scalar(Some(x), "stream.lookahead")?;
+            if n == 0 {
+                bail!("`stream.lookahead` must be at least 1");
+            }
+            n
+        }
+    };
+    Ok(StreamAxis { enabled, keep_records, lookahead })
 }
 
 /// Parse the `[trace]` block (see `scenarios/README.md` for the schema).
@@ -1594,6 +1666,44 @@ jobs = 10
         assert_eq!(plain.faults.mtbf, vec![0.0]);
         assert!(plain.faults.scripted.is_empty() && plain.faults.drains.is_empty());
         assert!(!plain.expand()[0].scenario.contains("mtbf"));
+    }
+
+    #[test]
+    fn stream_block_parses_and_reaches_plans() {
+        // No [stream] block: materialized plans with full retention.
+        let plain = CampaignSpec::from_toml_str(
+            "name = \"p\"\n[[workload]]\nkind = \"feitelson\"\njobs = 2\n",
+        )
+        .unwrap();
+        assert!(!plain.stream.enabled);
+        let p = &plain.expand()[0];
+        assert!(!p.stream && p.keep_records);
+
+        // Bare [stream] block: enabled, records dropped, default window.
+        let bare = CampaignSpec::from_toml_str(
+            "name = \"s\"\n[stream]\n[[workload]]\nkind = \"feitelson\"\njobs = 2\n",
+        )
+        .unwrap();
+        assert!(bare.stream.enabled);
+        assert!(!bare.stream.keep_records);
+        assert_eq!(bare.stream.lookahead, 64);
+        let p = &bare.expand()[0];
+        assert!(p.stream && !p.keep_records && p.lookahead == 64);
+
+        // Explicit knobs round-trip; lookahead = 0 is rejected.
+        let knobs = CampaignSpec::from_toml_str(
+            "name = \"k\"\n[stream]\nenabled = false\nkeep_records = true\n\
+             lookahead = 7\n[[workload]]\nkind = \"feitelson\"\njobs = 2\n",
+        )
+        .unwrap();
+        assert!(!knobs.stream.enabled);
+        assert!(knobs.stream.keep_records);
+        assert_eq!(knobs.stream.lookahead, 7);
+        assert!(CampaignSpec::from_toml_str(
+            "name = \"z\"\n[stream]\nlookahead = 0\n\
+             [[workload]]\nkind = \"feitelson\"\njobs = 2\n",
+        )
+        .is_err());
     }
 
     #[test]

@@ -27,13 +27,21 @@
 //! * Per-job simulation state lives in a **dense slab** (`Vec<SimJob>`
 //!   plus an id→slot table) instead of a hash map; a `SimJob` carries a
 //!   copyable [`SimSpec`] extracted from the `JobSpec` — starting a job
-//!   allocates no strings and never clones the spec.
+//!   allocates no strings and never clones the spec.  Completed jobs'
+//!   slots go on a free list and are reused, so the slab's live size is
+//!   bounded by the *active* job count, not the total processed
+//!   (requeued/rescued jobs keep their slot — the checkpointed progress
+//!   lives there).
 //! * `iter_time` is memoized per (job, procs): the `powf` in the
 //!   execution model is recomputed only when a resize changes the
 //!   process count.
-//! * Arrival handling borrows specs straight from the caller's
-//!   `WorkloadSpec`; exactly one clone per job is made — the one the RMS
-//!   must own.
+//! * Arrivals are **pulled lazily** from a [`JobStream`]: at most
+//!   `window` unarrived jobs are resident (a small look-ahead instead of
+//!   seeding every arrival up front).  Arrival events carry their pull
+//!   ordinal as the heap tiebreaker (below [`ARRIVAL_FLOOR`]), so pop
+//!   order — and therefore the whole event stream — is independent of
+//!   the window size; `Engine::run` is the special case of a
+//!   [`Materialized`] stream with an infinite window.
 //! * Every state transition the engine drives — start, finish, resize
 //!   commit, failure eviction, rescue shrink, requeue, expected-end
 //!   refresh — goes through an `Rms` method that publishes the matching
@@ -48,7 +56,7 @@
 //! benchmarks (`benches/hotpath_scale.rs`) can report events/s.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 use super::execmodel::ExecModel;
 use super::sched_cost::CostModel;
@@ -63,7 +71,7 @@ use crate::resilience::{
 use crate::rms::{Action, DmrOutcome, DmrRequest, Rms, RmsConfig};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
-use crate::workload::{fit_spec, JobSpec, WorkloadSpec};
+use crate::workload::{fit_spec, JobSpec, JobStream, Materialized, WorkloadSpec};
 use crate::{JobId, NodeId, Time};
 
 /// DES configuration.
@@ -132,6 +140,10 @@ pub struct RunResult {
     /// Fault-injection measures (all zero / availability 1.0 when the
     /// resilience config is inactive).
     pub resilience: ResilienceStats,
+    /// High-water mark of live simulation-slab slots (started,
+    /// not-yet-completed jobs).  Bounded by peak concurrency — on a
+    /// streamed run this stays flat no matter how many jobs replay.
+    pub peak_slab: usize,
     /// Host-side wall-clock profile of the engine's hot phases.  Purely
     /// observational (no RNG, no heap, no effect on the event stream);
     /// values are timing noise and must never enter deterministic
@@ -300,6 +312,14 @@ impl SimJob {
 
 const NO_SLOT: u32 = u32::MAX;
 
+/// Heap-tiebreaker floor for non-arrival events.  Arrivals carry their
+/// pull ordinal (0-based) as `seq`; every other event gets
+/// `ARRIVAL_FLOOR + counter`.  At equal times arrivals therefore always
+/// pop first, in submit order, regardless of *when* the look-ahead
+/// window pushed them — which makes the pop order (and the whole event
+/// stream) independent of the window size: streamed ≡ materialized.
+const ARRIVAL_FLOOR: u64 = 1 << 63;
+
 /// Golden-ratio sequence salt for per-shard RNG streams: distinct per
 /// shard, and zero for shard 0 — the flat path's streams are untouched.
 fn shard_salt(id: usize) -> u64 {
@@ -336,10 +356,17 @@ struct Shard {
     /// `1/speed`, folded into every `SimSpec::work_per_iter` and runtime
     /// estimate on this shard.  Exactly `1.0` on the flat path.
     inv_speed: f64,
-    /// Dense per-job simulation slab, one slot per started user job.
+    /// Dense per-job simulation slab, one slot per *live* started job —
+    /// completed jobs' slots are recycled via `free_slots`, so the slab
+    /// is bounded by peak concurrency, not total jobs processed.
     sims: Vec<SimJob>,
-    /// JobId → slab slot (`NO_SLOT` = not simulated: resizers, unstarted).
+    /// JobId → slab slot (`NO_SLOT` = not simulated: resizers, unstarted,
+    /// completed).
     slot_of: Vec<u32>,
+    /// Recycled slab slots of completed jobs, reused LIFO.
+    free_slots: Vec<u32>,
+    /// High-water mark of live slab slots (`sims.len() - free_slots.len()`).
+    slab_peak: usize,
     /// Resolved node lists of the fault spec's drain windows.
     drain_nodes: Vec<Vec<NodeId>>,
     /// Per-node count of drain windows currently covering the node.
@@ -384,6 +411,8 @@ impl Shard {
             inv_speed: 1.0 / speed,
             sims: Vec::new(),
             slot_of: Vec::new(),
+            free_slots: Vec::new(),
+            slab_peak: 0,
             drain_nodes,
             drain_depth: vec![0; nodes],
             fail_depth: vec![0; nodes],
@@ -408,8 +437,29 @@ impl Shard {
             self.slot_of.resize(idx + 1, NO_SLOT);
         }
         debug_assert_eq!(self.slot_of[idx], NO_SLOT, "job {id} simulated twice");
-        self.slot_of[idx] = self.sims.len() as u32;
-        self.sims.push(sim);
+        let slot = match self.free_slots.pop() {
+            Some(free) => {
+                self.sims[free as usize] = sim;
+                free
+            }
+            None => {
+                self.sims.push(sim);
+                (self.sims.len() - 1) as u32
+            }
+        };
+        self.slot_of[idx] = slot;
+        self.slab_peak = self.slab_peak.max(self.sims.len() - self.free_slots.len());
+    }
+
+    /// Release a completed job's slab slot for reuse.  Only terminal
+    /// completions free slots — requeued/rescued jobs keep theirs (the
+    /// checkpointed progress lives there until the job finishes).
+    fn free_sim(&mut self, id: JobId) {
+        let idx = id as usize;
+        let slot = self.slot_of[idx];
+        debug_assert_ne!(slot, NO_SLOT, "freeing an unsimulated job");
+        self.slot_of[idx] = NO_SLOT;
+        self.free_slots.push(slot);
     }
 }
 
@@ -504,15 +554,50 @@ impl Engine {
 
     fn push(&mut self, t: Time, shard: usize, job: JobId, epoch: u64, kind: EvKind) {
         self.seq += 1;
-        self.heap.push(Reverse(Ev { t, seq: self.seq, shard, job, epoch, kind }));
+        self.heap.push(Reverse(Ev { t, seq: ARRIVAL_FLOOR + self.seq, shard, job, epoch, kind }));
+    }
+
+    /// Push one arrival event; `seq` is the pull ordinal (below
+    /// [`ARRIVAL_FLOOR`]), keeping pop order window-independent.
+    fn push_arrival(&mut self, t: Time, ordinal: u64) {
+        debug_assert!(ordinal < ARRIVAL_FLOOR, "arrival ordinal overflow");
+        self.heap.push(Reverse(Ev {
+            t,
+            seq: ordinal,
+            shard: 0,
+            job: 0,
+            epoch: 0,
+            kind: EvKind::Arrival(ordinal as usize),
+        }));
     }
 
     /// Run a workload to completion; returns the measurements.
-    pub fn run(mut self, workload: &WorkloadSpec, label: &str) -> RunResult {
+    ///
+    /// The batch compatibility path: equivalent to [`Engine::run_stream`]
+    /// over a [`Materialized`] stream with an infinite look-ahead window,
+    /// and bit-identical to it (same event stream, same log digest).
+    pub fn run(self, workload: &WorkloadSpec, label: &str) -> RunResult {
+        let mut stream = Materialized::from(workload);
+        self.run_stream(&mut stream, usize::MAX, label)
+            .expect("materialized stream cannot fail")
+    }
+
+    /// Run a job stream to completion, holding at most `window` unarrived
+    /// jobs resident (peak resident jobs ≈ active jobs + `window`).
+    ///
+    /// Errors propagate from the stream only (e.g. a malformed or
+    /// out-of-order SWF trace); the engine itself is infallible.  Any
+    /// `window ≥ 1` produces the same result bit-for-bit.
+    pub fn run_stream(
+        mut self,
+        stream: &mut dyn JobStream,
+        window: usize,
+        label: &str,
+    ) -> anyhow::Result<RunResult> {
         debug_assert_eq!(self.shards.len(), 1, "flat run on a federated engine");
-        self.run_loop(workload);
+        self.run_loop(stream, window)?;
         let sh = self.shards.pop().expect("flat engine owns one shard");
-        RunResult {
+        Ok(RunResult {
             label: label.to_string(),
             makespan: self.now,
             first_submit: self.first_submit,
@@ -520,15 +605,29 @@ impl Engine {
             user_jobs: self.user_jobs,
             events: self.events,
             resilience: sh.stats,
+            peak_slab: sh.slab_peak,
             rms: sh.rms,
             profile: self.profile,
-        }
+        })
     }
 
     /// Run a workload to completion across the federation; returns the
     /// global measures plus one [`ShardRun`] per shard.
-    pub(crate) fn run_federated(mut self, workload: &WorkloadSpec, label: &str) -> FedRunResult {
-        self.run_loop(workload);
+    pub(crate) fn run_federated(self, workload: &WorkloadSpec, label: &str) -> FedRunResult {
+        let mut stream = Materialized::from(workload);
+        self.run_stream_federated(&mut stream, usize::MAX, label)
+            .expect("materialized stream cannot fail")
+    }
+
+    /// Streamed counterpart of [`Engine::run_federated`]: pull arrivals
+    /// lazily with a bounded look-ahead window.
+    pub(crate) fn run_stream_federated(
+        mut self,
+        stream: &mut dyn JobStream,
+        window: usize,
+        label: &str,
+    ) -> anyhow::Result<FedRunResult> {
+        self.run_loop(stream, window)?;
         let makespan = self.now;
         let mut merged = ResilienceStats::default();
         let mut capacity = 0.0;
@@ -549,6 +648,7 @@ impl Engine {
         merged.lost_node_seconds = lost;
         merged.availability =
             if capacity > 0.0 { (1.0 - lost / capacity).max(0.0) } else { 1.0 };
+        let peak_slab: usize = self.shards.iter().map(|sh| sh.slab_peak).sum();
         let shards = self
             .shards
             .into_iter()
@@ -564,7 +664,7 @@ impl Engine {
                 rms: sh.rms,
             })
             .collect();
-        FedRunResult {
+        Ok(FedRunResult {
             label: label.to_string(),
             makespan,
             first_submit: self.first_submit,
@@ -572,19 +672,53 @@ impl Engine {
             user_jobs: self.user_jobs,
             events: self.events,
             resilience: merged,
+            peak_slab,
             shards,
             profile: self.profile,
-        }
+        })
     }
 
-    /// The shared event loop (flat and federated paths).
-    fn run_loop(&mut self, workload: &WorkloadSpec) {
-        self.user_jobs = workload.jobs.len();
-        if self.shards.len() == 1 {
-            self.shards[0].sims.reserve(self.user_jobs);
-        }
-        for (i, spec) in workload.jobs.iter().enumerate() {
-            self.push(spec.submit_time, 0, 0, 0, EvKind::Arrival(i));
+    /// Pull one job from the stream into the look-ahead window: push its
+    /// arrival event and park the spec in `pending` (popped again, in
+    /// ordinal order, when the arrival event fires).  Returns `Ok(false)`
+    /// once the stream is exhausted.
+    fn pull_arrival(
+        &mut self,
+        stream: &mut dyn JobStream,
+        pending: &mut VecDeque<(u64, JobSpec)>,
+        pulled: &mut u64,
+        last_submit: &mut f64,
+    ) -> anyhow::Result<bool> {
+        let Some(spec) = stream.next_job()? else { return Ok(false) };
+        assert!(
+            spec.submit_time >= *last_submit,
+            "job stream must be submit-ordered: {} after {}",
+            spec.submit_time,
+            *last_submit
+        );
+        *last_submit = spec.submit_time;
+        self.user_jobs += 1;
+        self.push_arrival(spec.submit_time, *pulled);
+        pending.push_back((*pulled, spec));
+        *pulled += 1;
+        Ok(true)
+    }
+
+    /// The shared event loop (flat and federated paths): arrivals are
+    /// pulled lazily from `stream`, at most `window` unarrived jobs
+    /// resident at a time.  The window is refilled whenever an arrival
+    /// pops — the next arrival's submit time is ≥ `now`, so the heap
+    /// always holds it before any later-time event can pop, which is why
+    /// every `window ≥ 1` yields an identical event stream.
+    fn run_loop(&mut self, stream: &mut dyn JobStream, window: usize) -> anyhow::Result<()> {
+        let window = window.max(1);
+        let mut pending: VecDeque<(u64, JobSpec)> = VecDeque::new();
+        let mut pulled: u64 = 0;
+        let mut last_submit = f64::NEG_INFINITY;
+        let mut stream_done = false;
+        while pending.len() < window && !stream_done {
+            stream_done =
+                !self.pull_arrival(stream, &mut pending, &mut pulled, &mut last_submit)?;
         }
         self.seed_fault_events();
 
@@ -623,9 +757,18 @@ impl Engine {
             self.down_last_t = self.now;
             let t_dispatch = std::time::Instant::now();
             match ev.kind {
-                EvKind::Arrival(i) => {
-                    let s = self.route(&workload.jobs[i]);
-                    self.on_arrival(s, &workload.jobs[i]);
+                EvKind::Arrival(ord) => {
+                    let (o, spec) =
+                        pending.pop_front().expect("arrival event without a pulled spec");
+                    debug_assert_eq!(o as usize, ord, "arrival order mismatch");
+                    // Refill before handling, so the heap always holds
+                    // the next unarrived job (the window-1 invariant).
+                    if !stream_done {
+                        stream_done = !self
+                            .pull_arrival(stream, &mut pending, &mut pulled, &mut last_submit)?;
+                    }
+                    let s = self.route(&spec);
+                    self.on_arrival(s, spec);
                 }
                 EvKind::Check => self.on_check(ev),
                 EvKind::Complete => self.on_complete(ev),
@@ -647,7 +790,7 @@ impl Engine {
             }
             self.profile
                 .record(Phase::Dispatch, t_dispatch.elapsed().as_nanos() as u64);
-            if self.done == self.user_jobs {
+            if self.done == self.user_jobs && stream_done && pending.is_empty() {
                 break;
             }
         }
@@ -658,7 +801,9 @@ impl Engine {
             let capacity = sh.rms.cluster.total() as f64 * self.now;
             sh.stats.availability =
                 if capacity > 0.0 { (1.0 - sh.down_acc / capacity).max(0.0) } else { 1.0 };
+            sh.rms.seal_metrics(self.now);
         }
+        Ok(())
     }
 
     /// Seed the machine-event streams: scripted fault-trace events, drain
@@ -798,9 +943,8 @@ impl Engine {
 
     // ------------------------------------------------------------------
 
-    fn on_arrival(&mut self, s: usize, spec: &JobSpec) {
+    fn on_arrival(&mut self, s: usize, mut spec: JobSpec) {
         self.first_submit = self.first_submit.min(self.now);
-        let mut spec = spec.clone();
         if self.shards.len() > 1 {
             // Per-shard clamp: the job must fit the shard it landed on
             // (the flat path never refits — bit-compatibility).
@@ -951,6 +1095,10 @@ impl Engine {
         j.epoch += 1;
         self.shards[s].rms.finish(ev.job, self.now);
         self.done += 1;
+        // Terminal: recycle the slab slot.  Stale Complete/Check events
+        // for this job id now miss via `slot() == None`, exactly as the
+        // epoch check would have caught them.
+        self.shards[s].free_sim(ev.job);
         self.try_schedule(s);
     }
 
@@ -1465,6 +1613,45 @@ mod tests {
         assert!((exec - want).abs() < 1e-6, "exec {exec} vs {want}");
         assert_eq!(r.user_jobs, 1);
         assert!(r.events >= 2, "at least arrival + completion");
+    }
+
+    #[test]
+    fn streamed_run_matches_batch_for_every_window() {
+        let w = workload::generate(30, 7);
+        let batch = Engine::new(DesConfig::default()).run(&w, "b");
+        for window in [1usize, 7, 64, usize::MAX] {
+            let mut st = Materialized::from(&w);
+            let r = Engine::new(DesConfig::default())
+                .run_stream(&mut st, window, "s")
+                .unwrap();
+            assert_eq!(
+                r.makespan.to_bits(),
+                batch.makespan.to_bits(),
+                "makespan diverged at window {window}"
+            );
+            assert_eq!(
+                r.rms.log.digest(),
+                batch.rms.log.digest(),
+                "event log diverged at window {window}"
+            );
+            assert_eq!(r.events, batch.events, "event count diverged at window {window}");
+            assert_eq!(r.user_jobs, 30);
+        }
+    }
+
+    #[test]
+    fn slab_slots_are_reclaimed_and_bounded() {
+        let w = workload::generate(30, 7);
+        let r = Engine::new(DesConfig::default()).run(&w, "slab");
+        assert!(r.peak_slab > 0);
+        // Fault-free, every slab-resident job holds ≥ 1 node, so the live
+        // slab can never exceed the machine — far below the job count on
+        // a long-enough workload.
+        assert!(
+            r.peak_slab <= r.rms.cluster.total(),
+            "peak_slab {} exceeds the machine",
+            r.peak_slab
+        );
     }
 
     #[test]

@@ -33,7 +33,7 @@ use crate::cluster::{Cluster, FederatedView, DEFAULT_NODES};
 use crate::des::{ActionStats, DesConfig, Engine};
 use crate::resilience::{FaultSpec, ResilienceStats};
 use crate::rms::Rms;
-use crate::workload::WorkloadSpec;
+use crate::workload::{JobStream, WorkloadSpec};
 use crate::Time;
 
 /// How the meta-scheduler picks a shard for an arriving job.
@@ -221,6 +221,9 @@ pub struct FedRunResult {
     /// Merged resilience measures (counts summed; availability weighted
     /// by shard capacity).
     pub resilience: ResilienceStats,
+    /// High-water mark of live simulation-slab slots, summed across
+    /// shards (see [`crate::des::RunResult::peak_slab`]).
+    pub peak_slab: usize,
     /// Per-shard final states, in shard-id order.
     pub shards: Vec<ShardRun>,
     /// Host-side wall-clock profile of the shared event loop (global,
@@ -285,6 +288,19 @@ impl FedEngine {
     /// Run a workload to completion across the federation.
     pub fn run(self, workload: &WorkloadSpec, label: &str) -> FedRunResult {
         self.inner.run_federated(workload, label)
+    }
+
+    /// Streamed counterpart of [`FedEngine::run`]: pull arrivals lazily
+    /// from a [`JobStream`], holding at most `window` unarrived jobs
+    /// resident.  Bit-identical to [`FedEngine::run`] over the
+    /// materialized workload, for any `window ≥ 1`.
+    pub fn run_stream(
+        self,
+        stream: &mut dyn JobStream,
+        window: usize,
+        label: &str,
+    ) -> anyhow::Result<FedRunResult> {
+        self.inner.run_stream_federated(stream, window, label)
     }
 }
 

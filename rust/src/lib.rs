@@ -12,7 +12,8 @@
 //! * [`cluster`] — the machine: nodes and the allocation map.
 //! * [`workload`] — workload sources: Feitelson-model generation (§7.1),
 //!   synthetic burst–lull arrivals, and real traces in Standard Workload
-//!   Format ([`workload::swf`]).
+//!   Format ([`workload::swf`]); each available materialized or as a
+//!   pull-based [`workload::JobStream`] (streaming replay, below).
 //! * [`rms`] — the Slurm-like workload manager: multifactor priorities,
 //!   EASY backfill, the pluggable reconfiguration-policy engine
 //!   ([`rms::policy`], below) and the expand-via-resizer-job /
@@ -153,6 +154,32 @@
 //! the rebuild-everything reference, fault-free and faulty, plus a
 //! recorded fixture that locks the event stream across PRs) and by the
 //! randomized differential tests in `rust/tests/test_profile.rs`.
+//!
+//! ## Streaming replay & bounded memory
+//!
+//! The complexity budget above bounds *time*; the streaming pipeline
+//! bounds *space*.  [`workload::JobStream`] is a pull-based job source
+//! (submit-ordered, one job per `next_job()` call) with three
+//! implementations — the Feitelson/burst–lull generator streams, the
+//! line-at-a-time SWF trace reader [`workload::SwfStream`], and the
+//! [`workload::Materialized`] compatibility adapter — composed through
+//! [`workload::Adapted`] for per-job fit/rigid/deadline transforms.
+//! `des::Engine::run_stream` (and the federated
+//! `federation::FedEngine::run_stream`) pull arrivals lazily behind a
+//! bounded look-ahead window, reclaim per-job slab state at terminal
+//! completion, and fold per-job metrics at archive time (Welford
+//! streaming statistics, rolling event-log digest), so a million-job
+//! replay holds memory proportional to peak *concurrency* instead of
+//! total job count (`RunResult::peak_slab` measures the slab's
+//! high-water mark, capped by cluster capacity; the `peak_live_jobs`
+//! campaign column measures the manager's queued+running peak).
+//! Streamed and materialized replays are
+//! **bit-identical** — same digests, makespans and CSV bytes for any
+//! window size — locked by `rust/tests/test_streaming.rs` across every
+//! source × mode × fault config × federation layout; campaigns opt in
+//! via the `[stream]` block (`scenarios/README.md`), and
+//! `cargo bench --bench stream_scale` is the 100k–1M-job scale proof
+//! (`BENCH_stream.json`: events/s + peak-resident jobs).
 //!
 //! ## Resilience & fault injection
 //!

@@ -6,5 +6,5 @@ pub mod record;
 pub mod report;
 pub mod summary;
 
-pub use record::{extract, JobRecord};
+pub use record::{extract, JobRecord, MetricsFold};
 pub use summary::{jain_index, FedSummary, RunSummary, ShardSummary};

@@ -1,7 +1,12 @@
-//! Per-job measurement records extracted from a finished run.
+//! Per-job measurement records extracted from a finished run, plus the
+//! streaming [`MetricsFold`] accumulator that replaces record retention
+//! on bounded-memory runs.
+
+use std::collections::BTreeMap;
 
 use crate::apps::config::AppKind;
-use crate::rms::Rms;
+use crate::rms::{Job, Rms};
+use crate::util::stats::Summary;
 use crate::Time;
 
 /// The §7.5 per-job measures: waiting, execution and completion times.
@@ -114,6 +119,140 @@ pub fn extract(rms: &Rms) -> Vec<JobRecord> {
     out
 }
 
+/// Streaming accumulator of every run-level measure the reports derive
+/// from per-job records.  The `Rms` folds each job into this at archive
+/// time (`finish`/`cancel`), so a run's summary no longer requires the
+/// records themselves to be retained — the canonical metrics path for
+/// both streamed and materialized runs, which is what makes the two
+/// bit-identical by construction.
+///
+/// The arithmetic mirrors [`extract`] + `RunSummary::assemble` exactly:
+/// same job filter (resizers and never-started jobs excluded), same
+/// resize-log walk for node-seconds, same bounded-slowdown formula.
+/// Jobs fold in archive (finish-time) order, which is itself identical
+/// across streamed and materialized runs of the same event stream.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsFold {
+    /// Waiting times (submission → start).
+    pub wait: Summary,
+    /// Execution times (start → end).
+    pub exec: Summary,
+    /// Completion (turnaround) times (submission → end).
+    pub completion: Summary,
+    /// Bounded slowdowns ([`JobRecord::bounded_slowdown`] formula).
+    pub bounded_slowdown: Summary,
+    /// Per-user (bounded-slowdown sum, job count) — the Jain fairness
+    /// inputs, keyed in user-id order so the derived means are
+    /// deterministic.
+    pub per_user: BTreeMap<u32, (f64, u64)>,
+    /// Jobs that carried a soft deadline.
+    pub deadline_jobs: usize,
+    /// Deadline-carrying jobs that finished strictly late.
+    pub deadline_misses: usize,
+    /// Total node-seconds allocated to user jobs (resize-log integral).
+    pub node_seconds: f64,
+    /// Timestamp of the last allocation observation (utilization
+    /// integral state; fed by `Rms::snapshot` on every allocation
+    /// change, *before* any telemetry stride gating).
+    pub util_last_t: f64,
+    /// Allocated-node count at the last observation.
+    pub util_last_alloc: f64,
+    /// Integral of allocated nodes over time — `∫ alloc(t) dt` from 0 to
+    /// the last observation (seal at the makespan before reading).
+    pub util_area: f64,
+}
+
+impl MetricsFold {
+    /// Fold one archived job.  Applies the [`extract`] filter, so calling
+    /// this on resizers or never-started (cancelled) jobs is a no-op.
+    pub fn fold_job(&mut self, j: &Job) {
+        if j.is_resizer {
+            return;
+        }
+        let (Some(start), Some(end)) = (j.start_time, j.end_time) else {
+            return;
+        };
+        let completion = end - j.submit_time;
+        let exec = end - start;
+        self.wait.push(start - j.submit_time);
+        self.exec.push(exec);
+        self.completion.push(completion);
+        let slow = (completion / exec.max(SLOWDOWN_BOUND)).max(1.0);
+        self.bounded_slowdown.push(slow);
+        let e = self.per_user.entry(j.spec.user).or_insert((0.0, 0));
+        e.0 += slow;
+        e.1 += 1;
+        if let Some(d) = j.spec.deadline {
+            self.deadline_jobs += 1;
+            if end > d + 1e-9 {
+                self.deadline_misses += 1;
+            }
+        }
+        // Allocation integral over the resize history — the same walk as
+        // [`extract`], accumulated directly.
+        let mut t = start;
+        let mut procs = j.spec.procs as f64;
+        for r in &j.resize_log {
+            self.node_seconds += procs * (r.time - t);
+            t = r.time;
+            procs = r.to_procs as f64;
+        }
+        self.node_seconds += procs * (end - t);
+    }
+
+    /// Observe the allocated-node count at time `now`.  Step-function
+    /// semantics identical to `step_series_mean` over the telemetry
+    /// series: the previous value holds over `[last_t, now)`; repeated
+    /// observations at one timestamp keep the latest value.
+    pub fn observe_alloc(&mut self, now: f64, alloc: f64) {
+        if now > self.util_last_t {
+            self.util_area += self.util_last_alloc * (now - self.util_last_t);
+            self.util_last_t = now;
+        }
+        self.util_last_alloc = alloc;
+    }
+
+    /// Close the utilization integral at the end of the run (`t1` = the
+    /// makespan).  Idempotent; later [`MetricsFold::observe_alloc`] calls
+    /// at earlier times become no-ops.
+    pub fn seal_util(&mut self, t1: f64) {
+        if t1 > self.util_last_t {
+            self.util_area += self.util_last_alloc * (t1 - self.util_last_t);
+            self.util_last_t = t1;
+        }
+    }
+
+    /// Merge another fold into this one (federated runs merge per-shard
+    /// folds in shard-id order).  The utilization *state* fields do not
+    /// merge — seal both folds first; only the areas add.
+    pub fn merge(&mut self, o: &MetricsFold) {
+        self.wait.merge(&o.wait);
+        self.exec.merge(&o.exec);
+        self.completion.merge(&o.completion);
+        self.bounded_slowdown.merge(&o.bounded_slowdown);
+        for (u, (sum, n)) in &o.per_user {
+            let e = self.per_user.entry(*u).or_insert((0.0, 0));
+            e.0 += sum;
+            e.1 += n;
+        }
+        self.deadline_jobs += o.deadline_jobs;
+        self.deadline_misses += o.deadline_misses;
+        self.node_seconds += o.node_seconds;
+        self.util_area += o.util_area;
+    }
+
+    /// Jobs folded so far.
+    pub fn count(&self) -> u64 {
+        self.wait.count()
+    }
+
+    /// Per-user mean bounded slowdowns, in user-id order (the
+    /// `jain_index` input).
+    pub fn user_mean_slowdowns(&self) -> Vec<f64> {
+        self.per_user.values().map(|(sum, n)| sum / *n as f64).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,5 +308,101 @@ mod tests {
         assert!(!mk(0.0, 0.0, 50.0, Some(50.0)).missed_deadline());
         assert!(mk(0.0, 0.0, 50.1, Some(50.0)).missed_deadline());
         assert!(!mk(0.0, 0.0, 50.0, None).missed_deadline());
+    }
+
+    #[test]
+    fn fold_matches_extract_on_a_run() {
+        // Drive a small run through the engine; the archive-time fold
+        // must agree with the batch extract()-based formulas.
+        use crate::des::{DesConfig, Engine};
+        let w = crate::workload::generate(30, 11).with_deadlines(1.5);
+        let r = Engine::new(DesConfig::default()).run(&w, "fold");
+        let recs = extract(&r.rms);
+        let fold = &r.rms.fold;
+        assert_eq!(fold.count(), recs.len() as u64);
+        let near = |a: f64, b: f64| (a - b).abs() < 1e-6 * b.abs().max(1.0);
+        assert!(near(fold.wait.sum(), recs.iter().map(|j| j.wait()).sum()));
+        assert!(near(fold.exec.sum(), recs.iter().map(|j| j.exec()).sum()));
+        assert!(near(
+            fold.bounded_slowdown.sum(),
+            recs.iter().map(|j| j.bounded_slowdown()).sum()
+        ));
+        assert!(near(fold.node_seconds, recs.iter().map(|j| j.node_seconds).sum()));
+        assert_eq!(fold.deadline_jobs, recs.iter().filter(|j| j.deadline.is_some()).count());
+        assert_eq!(fold.deadline_misses, recs.iter().filter(|j| j.missed_deadline()).count());
+        // min/max are order-independent, so they match exactly.
+        let wmin = recs.iter().map(|j| j.wait()).fold(f64::INFINITY, f64::min);
+        assert_eq!(fold.wait.min(), wmin);
+    }
+
+    #[test]
+    fn fold_skips_resizers_and_unstarted_jobs() {
+        let mut fold = MetricsFold::default();
+        let spec = JobSpec::from_app(AppKind::Cg, "CG-0".into(), 0.0, 1.0);
+        let mut j = Job::new(1, spec, 0.0);
+        fold.fold_job(&j); // never started
+        assert_eq!(fold.count(), 0);
+        j.start_time = Some(1.0);
+        fold.fold_job(&j); // started, never ended
+        assert_eq!(fold.count(), 0);
+        j.end_time = Some(5.0);
+        j.is_resizer = true;
+        fold.fold_job(&j);
+        assert_eq!(fold.count(), 0, "resizers are not user jobs");
+        j.is_resizer = false;
+        fold.fold_job(&j);
+        assert_eq!(fold.count(), 1);
+        assert!((fold.wait.mean() - 1.0).abs() < 1e-12);
+        assert!((fold.exec.mean() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn util_integral_matches_step_series_mean() {
+        use crate::util::stats::step_series_mean;
+        let pts = [(0.0, 2.0), (5.0, 4.0), (5.0, 6.0), (8.0, 0.0), (9.0, 3.0)];
+        let mut fold = MetricsFold::default();
+        for &(t, v) in &pts {
+            fold.observe_alloc(t, v);
+        }
+        fold.seal_util(12.0);
+        let want = step_series_mean(&pts, 0.0, 12.0);
+        assert!((fold.util_area / 12.0 - want).abs() < 1e-12);
+        // sealing twice is a no-op
+        let area = fold.util_area;
+        fold.seal_util(12.0);
+        fold.seal_util(10.0);
+        assert_eq!(fold.util_area, area);
+    }
+
+    #[test]
+    fn fold_merge_matches_single_fold() {
+        // Split one observation stream across two folds; merging must
+        // reproduce the whole (Welford-merge + scalar sums).
+        let mk = |lo: usize, hi: usize| {
+            let mut f = MetricsFold::default();
+            for i in lo..hi {
+                let spec = JobSpec::from_app(AppKind::Cg, format!("j{i}"), i as f64, 1.0);
+                let mut j = Job::new(i as u64, spec, i as f64);
+                j.spec.user = (i % 3) as u32;
+                j.spec.deadline = Some(i as f64 + 100.0);
+                j.start_time = Some(i as f64 + 1.0 + i as f64 * 0.1);
+                j.end_time = Some(i as f64 + 50.0 + (i % 7) as f64 * 90.0);
+                f.fold_job(&j);
+            }
+            f
+        };
+        let whole = mk(0, 20);
+        let mut merged = mk(0, 8);
+        merged.merge(&mk(8, 20));
+        assert_eq!(merged.count(), whole.count());
+        assert!((merged.wait.mean() - whole.wait.mean()).abs() < 1e-9);
+        assert!((merged.completion.std() - whole.completion.std()).abs() < 1e-9);
+        assert_eq!(merged.deadline_jobs, whole.deadline_jobs);
+        assert_eq!(merged.deadline_misses, whole.deadline_misses);
+        assert!((merged.node_seconds - whole.node_seconds).abs() < 1e-9);
+        assert_eq!(merged.user_mean_slowdowns().len(), whole.user_mean_slowdowns().len());
+        for (a, b) in merged.user_mean_slowdowns().iter().zip(whole.user_mean_slowdowns()) {
+            assert!((a - b).abs() < 1e-9);
+        }
     }
 }

@@ -259,6 +259,7 @@ pub const CAMPAIGN_RUN_HEADER: &[&str] = &[
     "availability_pct", "fed_shards", "fed_routing", "fed_steals", "shard_util_pct",
     "shard_queue_depth", "shard_steals", "resize_attempts", "resize_aborts", "retry_time_s",
     "degraded_jobs", "sched_passes", "sched_elided", "dmr_checks", "dmr_elided",
+    "peak_live_jobs",
 ];
 
 /// Header of `<name>_agg.csv` — single source of truth, like
@@ -272,7 +273,7 @@ pub const CAMPAIGN_AGG_HEADER: &[&str] = &[
     "requeued_mean", "rework_mean_s", "lost_node_s_mean", "availability_mean_pct",
     "fed_shards", "fed_steals_mean", "shard_util_mean_pct", "resize_attempts_mean",
     "resize_aborts_mean", "retry_time_mean_s", "degraded_jobs_mean", "sched_passes_mean",
-    "sched_elided_mean", "dmr_checks_mean", "dmr_elided_mean",
+    "sched_elided_mean", "dmr_checks_mean", "dmr_elided_mean", "peak_live_mean",
 ];
 
 /// The per-run CSV columns (accessor over [`CAMPAIGN_RUN_HEADER`] so
@@ -347,6 +348,7 @@ pub fn campaign_run_rows(records: &[crate::campaign::RunRecord]) -> Vec<Vec<Stri
             row.push(s.passes.sched_elided.to_string());
             row.push(s.passes.dmr_checks.to_string());
             row.push(s.passes.dmr_elided.to_string());
+            row.push(s.peak_live.to_string());
             row
         })
         .collect()
@@ -409,6 +411,7 @@ pub fn campaign_agg_rows(aggs: &[crate::campaign::ScenarioAgg]) -> Vec<Vec<Strin
             row.push(fmt(a.sched_elided.mean(), 1));
             row.push(fmt(a.dmr_checks.mean(), 1));
             row.push(fmt(a.dmr_elided.mean(), 1));
+            row.push(fmt(a.peak_live.mean(), 1));
             row
         })
         .collect()
@@ -502,6 +505,7 @@ pub fn campaign_agg_json(
             m.insert("sched_elided".into(), stat(&a.sched_elided));
             m.insert("dmr_checks".into(), stat(&a.dmr_checks));
             m.insert("dmr_elided".into(), stat(&a.dmr_elided));
+            m.insert("peak_live_jobs".into(), stat(&a.peak_live));
             let mut fed = BTreeMap::new();
             fed.insert("shards".into(), Json::Num(a.fed_shards as f64));
             fed.insert("steals".into(), stat(&a.fed_steals));
@@ -544,6 +548,9 @@ pub struct BenchRecord {
     /// Hex digest over the run's event log and makespan bits.  Identical
     /// re-runs must produce identical checksums — the determinism gate.
     pub checksum: String,
+    /// Peak-resident (live) job count of the measured run — the
+    /// streaming memory bound (see [`crate::des::RunResult::peak_slab`]).
+    pub peak_live: usize,
     /// Wall nanoseconds the engine spent dispatching events (the
     /// self-profile's total; informational, never a CI gate).
     pub dispatch_ns: u64,
@@ -587,6 +594,7 @@ pub fn bench_json(bench: &str, records: &[BenchRecord]) -> crate::util::json::Js
             );
             m.insert("makespan_s".into(), Json::Num(r.makespan_s));
             m.insert("checksum".into(), Json::Str(r.checksum.clone()));
+            m.insert("peak_live_jobs".into(), Json::Num(r.peak_live as f64));
             let mut prof = BTreeMap::new();
             prof.insert("dispatch_ns".into(), Json::Num(r.dispatch_ns as f64));
             prof.insert("sched_ns".into(), Json::Num(r.sched_ns as f64));
@@ -705,7 +713,7 @@ jobs = 5
              interrupted,rescued,requeued,rework_s,lost_node_s,availability_pct,\
              fed_shards,fed_routing,fed_steals,shard_util_pct,shard_queue_depth,\
              shard_steals,resize_attempts,resize_aborts,retry_time_s,degraded_jobs,\
-             sched_passes,sched_elided,dmr_checks,dmr_elided"
+             sched_passes,sched_elided,dmr_checks,dmr_elided,peak_live_jobs"
         );
         assert_eq!(
             agg_columns().join(","),
@@ -717,7 +725,7 @@ jobs = 5
              requeued_mean,rework_mean_s,lost_node_s_mean,availability_mean_pct,\
              fed_shards,fed_steals_mean,shard_util_mean_pct,resize_attempts_mean,\
              resize_aborts_mean,retry_time_mean_s,degraded_jobs_mean,sched_passes_mean,\
-             sched_elided_mean,dmr_checks_mean,dmr_elided_mean"
+             sched_elided_mean,dmr_checks_mean,dmr_elided_mean,peak_live_mean"
         );
         // accessors and consts are the same object
         assert!(std::ptr::eq(run_columns(), CAMPAIGN_RUN_HEADER));
@@ -738,6 +746,7 @@ jobs = 5
             wall_secs: 0.25,
             makespan_s: r.makespan,
             checksum: bench_checksum(&r.rms.log, r.makespan),
+            peak_live: r.peak_slab,
             dispatch_ns: r.profile.total_ns(),
             sched_ns: r.profile.wall_ns(crate::obs::Phase::Schedule),
             dmr_ns: r.profile.wall_ns(crate::obs::Phase::Dmr),
@@ -753,6 +762,7 @@ jobs = 5
         assert_eq!(scen.len(), 2);
         assert_eq!(scen[0].get("events").unwrap().as_usize(), Some(r.events as usize));
         assert!(scen[0].get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(scen[0].get("peak_live_jobs").unwrap().as_usize(), Some(r.peak_slab));
         let prof = scen[0].get("profile").expect("per-phase profile present");
         assert!(prof.get("dispatch_ns").unwrap().as_f64().unwrap() > 0.0);
         assert!(prof.get("sched_ns").is_some() && prof.get("dmr_ns").is_some());

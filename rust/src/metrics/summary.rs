@@ -1,22 +1,33 @@
 //! Aggregated per-run measures (the rows of Tables 3–4), for flat and
 //! federated runs.
 
-use super::record::{extract, JobRecord};
+use super::record::{extract, JobRecord, MetricsFold};
 use crate::des::{ActionStats, RunResult};
 use crate::federation::{FedRunResult, RoutingPolicy};
 use crate::obs::PhaseProfile;
 use crate::resilience::ResilienceStats;
 use crate::rms::PassStats;
-use crate::util::stats::{step_series_mean, Summary};
+use crate::util::stats::Summary;
 
 /// Everything the reports need from one workload run.
+///
+/// Every job-derived measure comes from the archive-time
+/// [`MetricsFold`], never from the retained records — so a summary is
+/// identical whether the run kept its per-job records
+/// (`RmsConfig::keep_records`) or streamed them away.  The `jobs`
+/// vector and the telemetry series are populated only under retention;
+/// per-job reports and `gains_vs` need them, the CSV columns do not.
 pub struct RunSummary {
     pub label: String,
+    /// Retained per-job records (empty when the run streamed them away).
     pub jobs: Vec<JobRecord>,
     pub makespan: f64,
-    /// Mean / std of the allocated-nodes fraction over the makespan
-    /// ("resource utilization").
+    /// Mean of the allocated-nodes fraction over the makespan ("resource
+    /// utilization") — exact, from the fold's streaming integral.
     pub util_mean: f64,
+    /// Time-weighted std of the busy fraction.  Series-derived: `0.0`
+    /// when the telemetry was not retained (paper tables only — never a
+    /// CSV column, so streamed and materialized CSVs still match).
     pub util_std: f64,
     pub wait: Summary,
     pub exec: Summary,
@@ -55,6 +66,13 @@ pub struct RunSummary {
     /// Federated-run extras (`None` for flat runs): per-shard measures
     /// plus the meta-scheduler configuration that produced them.
     pub federation: Option<FedSummary>,
+    /// Total node-seconds allocated to user jobs (archive-time fold).
+    pub node_seconds_sum: f64,
+    /// Peak-resident job count: the high-water mark of the manager's
+    /// live map (summed across shards for federated runs).  The
+    /// streaming memory model is bounded by this, not the total job
+    /// count.
+    pub peak_live: usize,
 }
 
 /// Federation-level measures of one federated run.
@@ -148,14 +166,20 @@ impl RunSummary {
     /// run's largest allocations; nothing downstream needs the raw
     /// `RunResult` once summarized).
     pub fn from_run(mut r: RunResult) -> RunSummary {
+        // Defensive re-seal (idempotent): the engine seals at the end of
+        // its event loop, but a summary must never read an open integral.
+        r.rms.seal_metrics(r.makespan);
         let jobs = extract(&r.rms);
         let nodes = r.rms.cluster.total();
         let passes = r.rms.pass_stats();
+        let fold = r.rms.fold.clone();
+        let peak_live = r.rms.peak_live();
         Self::assemble(
             r.label,
             r.makespan,
             nodes,
             jobs,
+            &fold,
             std::mem::take(&mut r.rms.telemetry.alloc_series),
             std::mem::take(&mut r.rms.telemetry.running_series),
             std::mem::take(&mut r.rms.telemetry.completed_series),
@@ -165,6 +189,7 @@ impl RunSummary {
             r.events,
             r.profile,
             None,
+            peak_live,
         )
     }
 
@@ -177,23 +202,28 @@ impl RunSummary {
         let nodes: usize = r.shards.iter().map(|s| s.nodes).sum();
         let mut jobs: Vec<JobRecord> = Vec::new();
         let mut per_shard = Vec::with_capacity(r.shards.len());
+        let mut fold = MetricsFold::default();
+        let mut peak_live = 0usize;
         for sh in &r.shards {
             let shard_jobs = extract(&sh.rms);
-            let util = step_series_mean(&sh.rms.telemetry.alloc_series, 0.0, t1)
-                / sh.nodes.max(1) as f64;
+            let sf = &sh.rms.fold;
+            let util = sf.util_area / t1 / sh.nodes.max(1) as f64;
             per_shard.push(ShardSummary {
                 shard: sh.shard,
                 nodes: sh.nodes,
                 speed: sh.speed,
-                jobs: shard_jobs.len(),
+                jobs: sf.count() as usize,
                 util_pct: util * 100.0,
-                queue_depth: shard_jobs.iter().map(|j| j.wait()).sum::<f64>() / t1,
+                queue_depth: sf.wait.sum() / t1,
                 steals_in: sh.steals_in,
                 steals_out: sh.steals_out,
                 routed: sh.routed,
                 availability: sh.stats.availability,
                 log_digest: sh.rms.log.digest(),
             });
+            // Per-shard folds merge in shard-id order (deterministic).
+            fold.merge(sf);
+            peak_live += sh.rms.peak_live();
             jobs.extend(shard_jobs);
         }
         let collect = |pick: fn(&crate::rms::Telemetry) -> &Vec<(f64, f64)>| {
@@ -221,6 +251,7 @@ impl RunSummary {
             r.makespan,
             nodes,
             jobs,
+            &fold,
             collect(|t| &t.alloc_series),
             collect(|t| &t.running_series),
             collect(|t| &t.completed_series),
@@ -230,17 +261,21 @@ impl RunSummary {
             r.events,
             r.profile.clone(),
             Some(federation),
+            peak_live,
         )
     }
 
-    /// Shared constructor: derives every measure from the job records and
-    /// cluster series (identical arithmetic for flat and federated runs).
+    /// Shared constructor: derives every job measure from the
+    /// archive-time fold (identical arithmetic for flat and federated
+    /// runs, and for both memory models); the retained records and
+    /// series ride along for the per-job reports when present.
     #[allow(clippy::too_many_arguments)]
     fn assemble(
         label: String,
         makespan: f64,
         nodes: usize,
         jobs: Vec<JobRecord>,
+        fold: &MetricsFold,
         alloc_series: Vec<(f64, f64)>,
         running_series: Vec<(f64, f64)>,
         completed_series: Vec<(f64, f64)>,
@@ -250,17 +285,21 @@ impl RunSummary {
         events: u64,
         profile: PhaseProfile,
         federation: Option<FedSummary>,
+        peak_live: usize,
     ) -> RunSummary {
         let t0 = 0.0;
         let t1 = makespan.max(1e-9);
-        let series = &alloc_series;
-        let util_mean = step_series_mean(series, t0, t1) / nodes as f64;
-        // time-weighted std of the busy fraction
-        let util_std = {
+        let util_mean = fold.util_area / t1 / nodes as f64;
+        // Time-weighted std of the busy fraction — needs the retained
+        // alloc series; 0.0 under the streaming memory model (the paper
+        // tables that quote it require retention anyway).
+        let util_std = if alloc_series.is_empty() {
+            0.0
+        } else {
             let mut acc = 0.0;
             let mut prev_t = t0;
             let mut prev_v = 0.0;
-            for &(t, v) in series {
+            for &(t, v) in &alloc_series {
                 let tc = t.clamp(t0, t1);
                 let f = prev_v / nodes as f64;
                 acc += (f - util_mean) * (f - util_mean) * (tc - prev_t).max(0.0);
@@ -272,42 +311,33 @@ impl RunSummary {
             (acc / (t1 - t0)).sqrt()
         };
         // Policy-comparison measures: bounded slowdown, per-user fairness
-        // (Jain over per-user mean slowdowns), deadline misses.
-        let bounded_slowdown = Summary::from_iter(jobs.iter().map(|j| j.bounded_slowdown()));
-        let mut per_user: std::collections::BTreeMap<u32, (f64, usize)> =
-            std::collections::BTreeMap::new();
-        for j in &jobs {
-            let e = per_user.entry(j.user).or_insert((0.0, 0));
-            e.0 += j.bounded_slowdown();
-            e.1 += 1;
-        }
-        let user_means: Vec<f64> =
-            per_user.values().map(|(sum, n)| sum / *n as f64).collect();
-        let fairness_jain = jain_index(&user_means);
-        let deadline_jobs = jobs.iter().filter(|j| j.deadline.is_some()).count();
-        let deadline_misses = jobs.iter().filter(|j| j.missed_deadline()).count();
+        // (Jain over per-user mean slowdowns), deadline misses — all from
+        // the fold's streaming accumulators.
+        let fairness_jain = jain_index(&fold.user_mean_slowdowns());
         RunSummary {
             label,
             makespan,
             util_mean,
             util_std,
-            wait: Summary::from_iter(jobs.iter().map(|j| j.wait())),
-            exec: Summary::from_iter(jobs.iter().map(|j| j.exec())),
-            completion: Summary::from_iter(jobs.iter().map(|j| j.completion())),
+            wait: fold.wait.clone(),
+            exec: fold.exec.clone(),
+            completion: fold.completion.clone(),
             nodes,
             alloc_series,
             running_series,
             completed_series,
             actions,
             resilience,
-            bounded_slowdown,
+            bounded_slowdown: fold.bounded_slowdown.clone(),
             fairness_jain,
-            deadline_jobs,
-            deadline_misses,
+            deadline_jobs: fold.deadline_jobs,
+            deadline_misses: fold.deadline_misses,
             passes,
             events,
             profile,
             federation,
+            node_seconds_sum: fold.node_seconds,
+            peak_live,
             jobs,
         }
     }
@@ -333,9 +363,10 @@ impl RunSummary {
         (wait, exec, comp)
     }
 
-    /// Total node-seconds allocated to user jobs.
+    /// Total node-seconds allocated to user jobs (from the archive-time
+    /// fold, so it is exact even when per-job records are not retained).
     pub fn node_seconds(&self) -> f64 {
-        self.jobs.iter().map(|j| j.node_seconds).sum()
+        self.node_seconds_sum
     }
 }
 

@@ -1,5 +1,11 @@
 //! RMS event log: an append-only record of every scheduling decision,
 //! used by tests and by the evaluation reports.
+//!
+//! The log keeps a **rolling digest** and per-variant counters that are
+//! updated at [`EventLog::push`] time, so the determinism contract
+//! ([`EventLog::digest`]) and the summary counters survive even when the
+//! backing event `Vec` is disabled (`retain = false`, the bounded-memory
+//! streaming mode — see `docs/ARCHITECTURE.md`, "Streaming replay").
 
 use super::policy::Action;
 use crate::{JobId, NodeId, Time};
@@ -56,219 +62,305 @@ pub enum RmsEvent {
     Degraded { job: JobId, time: Time },
 }
 
+/// Fold one event into the rolling FNV-1a digest (order-sensitive; times
+/// hashed bit-exactly).  Kept as a free function so the per-push rolling
+/// digest is — by construction — the same fold the historical whole-log
+/// digest computed.
+fn fold_event(h: &mut u64, e: &RmsEvent) {
+    fn mix(h: &mut u64, x: u64) {
+        *h ^= x;
+        *h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    fn mix_action(h: &mut u64, a: &Action) {
+        match a {
+            Action::NoAction => mix(h, 0),
+            Action::Expand { to } => {
+                mix(h, 1);
+                mix(h, *to as u64);
+            }
+            Action::Shrink { to } => {
+                mix(h, 2);
+                mix(h, *to as u64);
+            }
+        }
+    }
+    match e {
+        RmsEvent::Submitted { job, time } => {
+            mix(h, 1);
+            mix(h, *job);
+            mix(h, time.to_bits());
+        }
+        RmsEvent::Started { job, time, procs } => {
+            mix(h, 2);
+            mix(h, *job);
+            mix(h, time.to_bits());
+            mix(h, *procs as u64);
+        }
+        RmsEvent::Finished { job, time } => {
+            mix(h, 3);
+            mix(h, *job);
+            mix(h, time.to_bits());
+        }
+        RmsEvent::Cancelled { job, time } => {
+            mix(h, 4);
+            mix(h, *job);
+            mix(h, time.to_bits());
+        }
+        RmsEvent::DmrDecision { job, time, action } => {
+            mix(h, 5);
+            mix(h, *job);
+            mix(h, time.to_bits());
+            mix_action(h, action);
+        }
+        RmsEvent::Expanded { job, time, from, to } => {
+            mix(h, 6);
+            mix(h, *job);
+            mix(h, time.to_bits());
+            mix(h, *from as u64);
+            mix(h, *to as u64);
+        }
+        RmsEvent::Shrunk { job, time, from, to } => {
+            mix(h, 7);
+            mix(h, *job);
+            mix(h, time.to_bits());
+            mix(h, *from as u64);
+            mix(h, *to as u64);
+        }
+        RmsEvent::ExpandAborted { job, time } => {
+            mix(h, 8);
+            mix(h, *job);
+            mix(h, time.to_bits());
+        }
+        RmsEvent::NodeFailed { node, time } => {
+            mix(h, 9);
+            mix(h, *node as u64);
+            mix(h, time.to_bits());
+        }
+        RmsEvent::NodeRepaired { node, time } => {
+            mix(h, 10);
+            mix(h, *node as u64);
+            mix(h, time.to_bits());
+        }
+        RmsEvent::DrainStarted { node, time } => {
+            mix(h, 11);
+            mix(h, *node as u64);
+            mix(h, time.to_bits());
+        }
+        RmsEvent::DrainEnded { node, time } => {
+            mix(h, 12);
+            mix(h, *node as u64);
+            mix(h, time.to_bits());
+        }
+        RmsEvent::Interrupted { job, time, node } => {
+            mix(h, 13);
+            mix(h, *job);
+            mix(h, time.to_bits());
+            mix(h, *node as u64);
+        }
+        RmsEvent::Requeued { job, time } => {
+            mix(h, 14);
+            mix(h, *job);
+            mix(h, time.to_bits());
+        }
+        RmsEvent::Rescued { job, time, from, to } => {
+            mix(h, 15);
+            mix(h, *job);
+            mix(h, time.to_bits());
+            mix(h, *from as u64);
+            mix(h, *to as u64);
+        }
+        RmsEvent::Stolen { job, time } => {
+            mix(h, 16);
+            mix(h, *job);
+            mix(h, time.to_bits());
+        }
+        RmsEvent::ResizeBegin { job, time, from, to } => {
+            mix(h, 17);
+            mix(h, *job);
+            mix(h, time.to_bits());
+            mix(h, *from as u64);
+            mix(h, *to as u64);
+        }
+        RmsEvent::ResizeAbort { job, time, phase } => {
+            mix(h, 18);
+            mix(h, *job);
+            mix(h, time.to_bits());
+            mix(h, *phase as u64);
+        }
+        RmsEvent::ResizeCommit { job, time, procs } => {
+            mix(h, 19);
+            mix(h, *job);
+            mix(h, time.to_bits());
+            mix(h, *procs as u64);
+        }
+        RmsEvent::Degraded { job, time } => {
+            mix(h, 20);
+            mix(h, *job);
+            mix(h, time.to_bits());
+        }
+    }
+}
+
 /// Append-only log with query helpers.
-#[derive(Debug, Default, Clone)]
+///
+/// The digest and the named counters are maintained incrementally at
+/// push time; the event `Vec` itself is only an *optional* retention
+/// buffer (needed by trace export and a handful of timeline tests).
+/// `EventLog::default()` retains; `set_retain(false)` switches the log
+/// to O(1) memory while keeping `digest()`/counters/`total_pushed()`
+/// bit-for-bit identical.
+#[derive(Debug, Clone)]
 pub struct EventLog {
     events: Vec<RmsEvent>,
+    retain: bool,
+    digest: u64,
+    pushed: u64,
+    n_expanded: usize,
+    n_shrunk: usize,
+    n_node_failed: usize,
+    n_rescued: usize,
+    n_requeued: usize,
+    n_stolen: usize,
+    n_resize_begin: usize,
+    n_resize_abort: usize,
+    n_resize_commit: usize,
+    n_degraded: usize,
+}
+
+impl Default for EventLog {
+    fn default() -> Self {
+        EventLog {
+            events: Vec::new(),
+            retain: true,
+            digest: 0xCBF2_9CE4_8422_2325, // FNV-1a offset basis
+            pushed: 0,
+            n_expanded: 0,
+            n_shrunk: 0,
+            n_node_failed: 0,
+            n_rescued: 0,
+            n_requeued: 0,
+            n_stolen: 0,
+            n_resize_begin: 0,
+            n_resize_abort: 0,
+            n_resize_commit: 0,
+            n_degraded: 0,
+        }
+    }
 }
 
 impl EventLog {
-    /// Append an event.
+    /// Append an event: fold it into the rolling digest, bump its
+    /// counter, and (when retaining) keep the event itself.
     pub fn push(&mut self, e: RmsEvent) {
-        self.events.push(e);
+        fold_event(&mut self.digest, &e);
+        self.pushed += 1;
+        match &e {
+            RmsEvent::Expanded { .. } => self.n_expanded += 1,
+            RmsEvent::Shrunk { .. } => self.n_shrunk += 1,
+            RmsEvent::NodeFailed { .. } => self.n_node_failed += 1,
+            RmsEvent::Rescued { .. } => self.n_rescued += 1,
+            RmsEvent::Requeued { .. } => self.n_requeued += 1,
+            RmsEvent::Stolen { .. } => self.n_stolen += 1,
+            RmsEvent::ResizeBegin { .. } => self.n_resize_begin += 1,
+            RmsEvent::ResizeAbort { .. } => self.n_resize_abort += 1,
+            RmsEvent::ResizeCommit { .. } => self.n_resize_commit += 1,
+            RmsEvent::Degraded { .. } => self.n_degraded += 1,
+            _ => {}
+        }
+        if self.retain {
+            self.events.push(e);
+        }
     }
 
-    /// Every recorded event, in order.
+    /// Toggle event retention.  With `retain = false` subsequent pushes
+    /// update only the digest/counters; [`EventLog::all`] stays empty.
+    /// Must be flipped before the first push — flipping mid-run would
+    /// leave a partial retention buffer.
+    pub fn set_retain(&mut self, retain: bool) {
+        debug_assert!(self.pushed == 0, "set_retain must precede the first push");
+        self.retain = retain;
+    }
+
+    /// Whether pushed events are retained in memory (trace export and
+    /// timeline queries need this; the digest/counters never do).
+    pub fn retains(&self) -> bool {
+        self.retain
+    }
+
+    /// Total number of events ever pushed (independent of retention).
+    pub fn total_pushed(&self) -> u64 {
+        self.pushed
+    }
+
+    /// Every recorded event, in order.  Empty when retention is off,
+    /// even though events were pushed — check [`EventLog::retains`].
     pub fn all(&self) -> &[RmsEvent] {
         &self.events
     }
 
-    /// Count events matching a predicate.
+    /// Count retained events matching a predicate (requires retention).
     pub fn count<F: Fn(&RmsEvent) -> bool>(&self, f: F) -> usize {
         self.events.iter().filter(|e| f(e)).count()
     }
 
     /// Committed expansions recorded.
     pub fn expansions(&self) -> usize {
-        self.count(|e| matches!(e, RmsEvent::Expanded { .. }))
+        self.n_expanded
     }
 
     /// Committed shrinks recorded.
     pub fn shrinks(&self) -> usize {
-        self.count(|e| matches!(e, RmsEvent::Shrunk { .. }))
+        self.n_shrunk
     }
 
     /// Node failures recorded.
     pub fn node_failures(&self) -> usize {
-        self.count(|e| matches!(e, RmsEvent::NodeFailed { .. }))
+        self.n_node_failed
     }
 
     /// Shrink rescues recorded.
     pub fn rescues(&self) -> usize {
-        self.count(|e| matches!(e, RmsEvent::Rescued { .. }))
+        self.n_rescued
     }
 
     /// Failure requeues recorded.
     pub fn requeues(&self) -> usize {
-        self.count(|e| matches!(e, RmsEvent::Requeued { .. }))
+        self.n_requeued
     }
 
     /// Cross-shard steals recorded (jobs withdrawn from this shard).
     pub fn steals(&self) -> usize {
-        self.count(|e| matches!(e, RmsEvent::Stolen { .. }))
+        self.n_stolen
     }
 
     /// Resize transactions begun (multi-phase path only).
     pub fn resize_begins(&self) -> usize {
-        self.count(|e| matches!(e, RmsEvent::ResizeBegin { .. }))
+        self.n_resize_begin
     }
 
     /// Resize transactions aborted.
     pub fn resize_aborts(&self) -> usize {
-        self.count(|e| matches!(e, RmsEvent::ResizeAbort { .. }))
+        self.n_resize_abort
     }
 
     /// Resize transactions committed.
     pub fn resize_commits(&self) -> usize {
-        self.count(|e| matches!(e, RmsEvent::ResizeCommit { .. }))
+        self.n_resize_commit
     }
 
     /// Jobs degraded to non-malleable after exhausting resize retries.
     pub fn degradations(&self) -> usize {
-        self.count(|e| matches!(e, RmsEvent::Degraded { .. }))
+        self.n_degraded
     }
 
-    /// Order-sensitive FNV-1a digest over every event and all its fields
-    /// (times hashed bit-exactly).  Two logs digest equal iff they are
-    /// bit-identical — the behavior-preservation contract the golden
-    /// determinism test and the `hotpath_scale` checksum rely on.
+    /// Order-sensitive FNV-1a digest over every event ever pushed and
+    /// all its fields (times hashed bit-exactly).  Two logs digest equal
+    /// iff their push sequences are bit-identical — the
+    /// behavior-preservation contract the golden determinism test and
+    /// the `hotpath_scale` checksum rely on.  Maintained incrementally,
+    /// so it is retention-independent and O(1) to read.
     pub fn digest(&self) -> u64 {
-        fn mix(h: &mut u64, x: u64) {
-            *h ^= x;
-            *h = h.wrapping_mul(0x0000_0100_0000_01B3);
-        }
-        fn mix_action(h: &mut u64, a: &Action) {
-            match a {
-                Action::NoAction => mix(h, 0),
-                Action::Expand { to } => {
-                    mix(h, 1);
-                    mix(h, *to as u64);
-                }
-                Action::Shrink { to } => {
-                    mix(h, 2);
-                    mix(h, *to as u64);
-                }
-            }
-        }
-        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
-        for e in &self.events {
-            match e {
-                RmsEvent::Submitted { job, time } => {
-                    mix(&mut h, 1);
-                    mix(&mut h, *job);
-                    mix(&mut h, time.to_bits());
-                }
-                RmsEvent::Started { job, time, procs } => {
-                    mix(&mut h, 2);
-                    mix(&mut h, *job);
-                    mix(&mut h, time.to_bits());
-                    mix(&mut h, *procs as u64);
-                }
-                RmsEvent::Finished { job, time } => {
-                    mix(&mut h, 3);
-                    mix(&mut h, *job);
-                    mix(&mut h, time.to_bits());
-                }
-                RmsEvent::Cancelled { job, time } => {
-                    mix(&mut h, 4);
-                    mix(&mut h, *job);
-                    mix(&mut h, time.to_bits());
-                }
-                RmsEvent::DmrDecision { job, time, action } => {
-                    mix(&mut h, 5);
-                    mix(&mut h, *job);
-                    mix(&mut h, time.to_bits());
-                    mix_action(&mut h, action);
-                }
-                RmsEvent::Expanded { job, time, from, to } => {
-                    mix(&mut h, 6);
-                    mix(&mut h, *job);
-                    mix(&mut h, time.to_bits());
-                    mix(&mut h, *from as u64);
-                    mix(&mut h, *to as u64);
-                }
-                RmsEvent::Shrunk { job, time, from, to } => {
-                    mix(&mut h, 7);
-                    mix(&mut h, *job);
-                    mix(&mut h, time.to_bits());
-                    mix(&mut h, *from as u64);
-                    mix(&mut h, *to as u64);
-                }
-                RmsEvent::ExpandAborted { job, time } => {
-                    mix(&mut h, 8);
-                    mix(&mut h, *job);
-                    mix(&mut h, time.to_bits());
-                }
-                RmsEvent::NodeFailed { node, time } => {
-                    mix(&mut h, 9);
-                    mix(&mut h, *node as u64);
-                    mix(&mut h, time.to_bits());
-                }
-                RmsEvent::NodeRepaired { node, time } => {
-                    mix(&mut h, 10);
-                    mix(&mut h, *node as u64);
-                    mix(&mut h, time.to_bits());
-                }
-                RmsEvent::DrainStarted { node, time } => {
-                    mix(&mut h, 11);
-                    mix(&mut h, *node as u64);
-                    mix(&mut h, time.to_bits());
-                }
-                RmsEvent::DrainEnded { node, time } => {
-                    mix(&mut h, 12);
-                    mix(&mut h, *node as u64);
-                    mix(&mut h, time.to_bits());
-                }
-                RmsEvent::Interrupted { job, time, node } => {
-                    mix(&mut h, 13);
-                    mix(&mut h, *job);
-                    mix(&mut h, time.to_bits());
-                    mix(&mut h, *node as u64);
-                }
-                RmsEvent::Requeued { job, time } => {
-                    mix(&mut h, 14);
-                    mix(&mut h, *job);
-                    mix(&mut h, time.to_bits());
-                }
-                RmsEvent::Rescued { job, time, from, to } => {
-                    mix(&mut h, 15);
-                    mix(&mut h, *job);
-                    mix(&mut h, time.to_bits());
-                    mix(&mut h, *from as u64);
-                    mix(&mut h, *to as u64);
-                }
-                RmsEvent::Stolen { job, time } => {
-                    mix(&mut h, 16);
-                    mix(&mut h, *job);
-                    mix(&mut h, time.to_bits());
-                }
-                RmsEvent::ResizeBegin { job, time, from, to } => {
-                    mix(&mut h, 17);
-                    mix(&mut h, *job);
-                    mix(&mut h, time.to_bits());
-                    mix(&mut h, *from as u64);
-                    mix(&mut h, *to as u64);
-                }
-                RmsEvent::ResizeAbort { job, time, phase } => {
-                    mix(&mut h, 18);
-                    mix(&mut h, *job);
-                    mix(&mut h, time.to_bits());
-                    mix(&mut h, *phase as u64);
-                }
-                RmsEvent::ResizeCommit { job, time, procs } => {
-                    mix(&mut h, 19);
-                    mix(&mut h, *job);
-                    mix(&mut h, time.to_bits());
-                    mix(&mut h, *procs as u64);
-                }
-                RmsEvent::Degraded { job, time } => {
-                    mix(&mut h, 20);
-                    mix(&mut h, *job);
-                    mix(&mut h, time.to_bits());
-                }
-            }
-        }
-        h
+        self.digest
     }
 }
 
@@ -285,6 +377,34 @@ mod tests {
         assert_eq!(log.expansions(), 1);
         assert_eq!(log.shrinks(), 2);
         assert_eq!(log.all().len(), 3);
+        assert_eq!(log.total_pushed(), 3);
+    }
+
+    #[test]
+    fn unretained_log_keeps_digest_and_counters() {
+        let events = [
+            RmsEvent::Submitted { job: 1, time: 0.0 },
+            RmsEvent::Started { job: 1, time: 1.0, procs: 8 },
+            RmsEvent::Expanded { job: 1, time: 2.0, from: 8, to: 16 },
+            RmsEvent::NodeFailed { node: 3, time: 2.5 },
+            RmsEvent::Requeued { job: 1, time: 2.5 },
+            RmsEvent::Finished { job: 1, time: 3.0 },
+        ];
+        let mut kept = EventLog::default();
+        let mut dropped = EventLog::default();
+        dropped.set_retain(false);
+        for e in &events {
+            kept.push(e.clone());
+            dropped.push(e.clone());
+        }
+        assert_eq!(kept.digest(), dropped.digest(), "digest is retention-independent");
+        assert_eq!(kept.total_pushed(), dropped.total_pushed());
+        assert_eq!(kept.all().len(), events.len());
+        assert!(dropped.all().is_empty(), "unretained log holds no events");
+        assert!(!dropped.retains());
+        assert_eq!(dropped.expansions(), 1);
+        assert_eq!(dropped.node_failures(), 1);
+        assert_eq!(dropped.requeues(), 1);
     }
 
     #[test]

@@ -107,6 +107,15 @@ pub struct RmsConfig {
     /// differential baseline the golden determinism tests compare
     /// against bit-for-bit.
     pub incremental_profile: bool,
+    /// Retain terminal jobs in the archive, the raw event list and the
+    /// telemetry series (default).  `false` is the streaming-replay
+    /// memory model: terminal jobs fold into [`Rms::fold`] and are
+    /// dropped, the event log keeps only its rolling digest + counters,
+    /// and telemetry series stay empty — memory stays O(active jobs)
+    /// over million-job runs.  Per-job reports, trace export and
+    /// `gains_vs` need retention; every CSV-level measure does not (see
+    /// `docs/ARCHITECTURE.md`, "Streaming replay & memory model").
+    pub keep_records: bool,
 }
 
 impl Default for RmsConfig {
@@ -121,6 +130,7 @@ impl Default for RmsConfig {
             telemetry_stride: 1,
             cache_pending_order: true,
             incremental_profile: true,
+            keep_records: true,
         }
     }
 }
@@ -264,6 +274,15 @@ pub struct Rms {
     /// Fig. 6 telemetry series.
     pub telemetry: Telemetry,
     telemetry_tick: u64,
+    /// Archive-time streaming metrics accumulator — the canonical source
+    /// of every run-level job measure, maintained identically whether or
+    /// not records are retained (so streamed and materialized summaries
+    /// agree by construction).  Seal via [`Rms::seal_metrics`] before
+    /// reading the utilization integral.
+    pub fold: crate::metrics::MetricsFold,
+    /// High-water mark of the live map (pending + active jobs) — the
+    /// peak-resident job count the streaming memory model is bounded by.
+    peak_live: usize,
 }
 
 impl Rms {
@@ -272,6 +291,8 @@ impl Rms {
     pub fn new(cfg: RmsConfig) -> Self {
         let cluster = Cluster::new(cfg.nodes);
         let policy = cfg.strategy.build(&cfg.policy);
+        let mut log = EventLog::default();
+        log.set_retain(cfg.keep_records);
         Self {
             cfg,
             cluster,
@@ -299,9 +320,11 @@ impl Rms {
             ends_scratch: Vec::new(),
             starts_buf: Vec::new(),
             recent_starts: Vec::new(),
-            log: EventLog::default(),
+            log,
             telemetry: Telemetry::default(),
             telemetry_tick: 0,
+            fold: crate::metrics::MetricsFold::default(),
+            peak_live: 0,
         }
     }
 
@@ -350,6 +373,21 @@ impl Rms {
     /// Hot-path pass/elision counters (observational; see [`PassStats`]).
     pub fn pass_stats(&self) -> PassStats {
         self.passes
+    }
+
+    /// High-water mark of the live map: the most jobs (pending + active,
+    /// resizers included) ever resident at once.  Under the streaming
+    /// memory model this — not the total job count — bounds the
+    /// manager's job storage.
+    pub fn peak_live(&self) -> usize {
+        self.peak_live
+    }
+
+    /// Close the metrics fold's utilization integral at the end of the
+    /// run (`t1` = the makespan).  The engines call this once after the
+    /// event loop drains; idempotent.
+    pub fn seal_metrics(&mut self, t1: Time) {
+        self.fold.seal_util(t1);
     }
 
     /// Read-only view of the incremental availability profile (tests,
@@ -554,6 +592,7 @@ impl Rms {
         self.next_id += 1;
         let job = Job::new(id, spec, now);
         self.live.insert(id, job);
+        self.peak_live = self.peak_live.max(self.live.len());
         self.pending.push(id);
         self.pending_user += 1;
         self.invalidate_pending_order();
@@ -575,7 +614,12 @@ impl Rms {
             self.active_user -= 1;
         }
         self.completed_count += 1;
-        self.archived.insert(id, job);
+        // Archive-time metrics fold: canonical for both memory models,
+        // so the summary never depends on whether records are kept.
+        self.fold.fold_job(&job);
+        if self.cfg.keep_records {
+            self.archived.insert(id, job);
+        }
         self.log.push(RmsEvent::Finished { job: id, time: now });
         self.snapshot(now);
     }
@@ -605,7 +649,13 @@ impl Rms {
         }
         job.state = JobState::Cancelled;
         job.end_time = Some(now);
-        self.archived.insert(id, job);
+        // No-op for every job cancel() actually sees (resizers and
+        // never-started jobs fail the fold's filter), but kept symmetric
+        // with finish() so the invariant is structural, not situational.
+        self.fold.fold_job(&job);
+        if self.cfg.keep_records {
+            self.archived.insert(id, job);
+        }
         self.log.push(RmsEvent::Cancelled { job: id, time: now });
     }
 
@@ -1180,8 +1230,12 @@ impl Rms {
     // Telemetry
 
     fn snapshot(&mut self, now: Time) {
+        // The utilization integral advances on *every* snapshot call —
+        // before stride gating or the keep_records check — so util_mean
+        // is exact and identical across memory models and strides.
+        self.fold.observe_alloc(now, self.cluster.allocated() as f64);
         let stride = self.cfg.telemetry_stride;
-        if stride == 0 {
+        if stride == 0 || !self.cfg.keep_records {
             return;
         }
         self.telemetry_tick += 1;
@@ -1275,15 +1329,19 @@ impl Rms {
             .count();
         let active_all: BTreeSet<JobId> =
             self.live.values().filter(|j| j.is_active()).map(|j| j.id).collect();
+        // Without record retention the archive is deliberately empty, so
+        // the re-derived completion count is only meaningful when records
+        // are kept.
         let completed = self
             .archived
             .values()
             .filter(|j| j.state == JobState::Completed)
             .count();
+        let archive_consistent = !self.cfg.keep_records || completed == self.completed_count;
         pending_user == self.pending_user
             && active_user == self.active_user
             && active_all == self.active
-            && completed == self.completed_count
+            && archive_consistent
     }
 }
 
@@ -1756,5 +1814,37 @@ mod tests {
         assert_eq!(lossless, 16, "one snapshot per start + finish");
         assert_eq!(run(4), lossless / 4);
         assert_eq!(run(0), 0, "stride 0 disables telemetry");
+    }
+
+    #[test]
+    fn unretained_archive_folds_and_reclaims() {
+        // keep_records = false: terminal jobs vanish, yet the digest, the
+        // counters and every folded measure match the retaining run.
+        let run = |keep: bool| {
+            let mut rms =
+                Rms::new(RmsConfig { nodes: 64, keep_records: keep, ..Default::default() });
+            for i in 0..6 {
+                let id = rms.submit(spec(AppKind::NBody, i as f64), i as f64);
+                rms.schedule(i as f64);
+                rms.finish(id, i as f64 + 30.0);
+            }
+            rms.seal_metrics(35.0);
+            assert!(rms.check_invariants());
+            rms
+        };
+        let kept = run(true);
+        let dropped = run(false);
+        assert_eq!(kept.log.digest(), dropped.log.digest());
+        assert_eq!(kept.log.total_pushed(), dropped.log.total_pushed());
+        assert_eq!(dropped.log.all().len(), 0, "raw events reclaimed");
+        assert_eq!(dropped.jobs().count(), 0, "archive reclaimed");
+        assert_eq!(kept.jobs().count(), 6);
+        assert!(dropped.telemetry.alloc_series.is_empty(), "telemetry reclaimed");
+        assert_eq!(dropped.completed_jobs(), 6);
+        assert_eq!(dropped.fold.count(), kept.fold.count());
+        assert_eq!(dropped.fold.wait.mean().to_bits(), kept.fold.wait.mean().to_bits());
+        assert_eq!(dropped.fold.util_area.to_bits(), kept.fold.util_area.to_bits());
+        assert_eq!(dropped.peak_live(), kept.peak_live());
+        assert!(dropped.peak_live() <= 2, "live map bounded by concurrent jobs");
     }
 }

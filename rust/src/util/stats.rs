@@ -98,6 +98,30 @@ impl Summary {
             1.96 * self.sample_std() / (self.n as f64).sqrt()
         }
     }
+
+    /// Merge another summary into this one (Chan et al.'s parallel
+    /// Welford update).  Used by the streaming metrics path to combine
+    /// per-shard archive-time folds into run-level statistics without
+    /// retaining per-job records; merge order is fixed (shard-id order)
+    /// so the result is deterministic.
+    pub fn merge(&mut self, o: &Summary) {
+        if o.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = o.clone();
+            return;
+        }
+        let n = self.n + o.n;
+        let d = o.mean - self.mean;
+        let mean = self.mean + d * (o.n as f64 / n as f64);
+        let m2 = self.m2 + o.m2 + d * d * (self.n as f64 * o.n as f64 / n as f64);
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(o.min);
+        self.max = self.max.max(o.max);
+    }
 }
 
 /// Percentage gain of `new` over `base` (positive = improvement when lower
@@ -176,6 +200,46 @@ mod tests {
         assert_eq!(Summary::new().ci95_half(), 0.0);
         assert_eq!(Summary::from_iter([5.0]).ci95_half(), 0.0);
         assert_eq!(Summary::from_iter([5.0]).sample_std(), 0.0);
+    }
+
+    #[test]
+    fn merge_matches_batch_formulas() {
+        // Welford merge (Chan) vs the batch moments, across uneven splits
+        // and 4 orders of magnitude (the Table 2 spread).
+        let xs: Vec<f64> =
+            (0..97).map(|i| ((i * 37 % 89) as f64).mul_add(123.456, 0.001 * i as f64)).collect();
+        let batch_mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let batch_var = xs.iter().map(|x| (x - batch_mean) * (x - batch_mean)).sum::<f64>()
+            / xs.len() as f64;
+        for split in [0, 1, 13, 48, 96, 97] {
+            let mut a = Summary::from_iter(xs[..split].iter().copied());
+            let b = Summary::from_iter(xs[split..].iter().copied());
+            a.merge(&b);
+            assert_eq!(a.count(), xs.len() as u64, "split {split}");
+            assert!((a.mean() - batch_mean).abs() < 1e-9, "split {split}: mean");
+            assert!((a.std() - batch_var.sqrt()).abs() < 1e-9, "split {split}: std");
+            assert_eq!(a.min(), Summary::from_iter(xs.iter().copied()).min());
+            assert_eq!(a.max(), Summary::from_iter(xs.iter().copied()).max());
+            // ci95 goes through sample_std, so it must agree too.
+            let whole = Summary::from_iter(xs.iter().copied());
+            assert!((a.ci95_half() - whole.ci95_half()).abs() < 1e-9, "split {split}: ci95");
+        }
+    }
+
+    #[test]
+    fn merge_empty_identities() {
+        let mut a = Summary::from_iter([1.0, 2.0]);
+        a.merge(&Summary::new());
+        assert_eq!(a.count(), 2);
+        assert!((a.mean() - 1.5).abs() < 1e-12);
+        let mut e = Summary::new();
+        e.merge(&Summary::from_iter([1.0, 2.0]));
+        assert_eq!(e.count(), 2);
+        assert!((e.mean() - 1.5).abs() < 1e-12);
+        let mut both = Summary::new();
+        both.merge(&Summary::new());
+        assert_eq!(both.count(), 0);
+        assert_eq!(both.mean(), 0.0);
     }
 
     #[test]

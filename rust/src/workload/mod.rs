@@ -7,13 +7,16 @@
 
 pub mod feitelson;
 mod spec;
+pub mod stream;
 pub mod swf;
 
 pub use feitelson::{sample, FeitelsonParams, SampledJob};
 pub use spec::{fit_spec, JobSpec, WorkloadSpec};
+pub use stream::{
+    Adapted, BurstLullStream, FeitelsonStream, JobStream, Materialized, SwfStream,
+};
 
 use crate::apps::config::AppKind;
-use crate::util::rng::Rng;
 
 /// Generate the paper's throughput-evaluation workload: `jobs` jobs,
 /// Poisson arrivals with 10 s mean gap, uniform CG/Jacobi/N-body mix,
@@ -26,26 +29,13 @@ pub fn generate(jobs: usize, seed: u64) -> WorkloadSpec {
     generate_with(&params, seed)
 }
 
-/// Generate with explicit model parameters.
+/// Generate with explicit model parameters.  Implemented as the collect
+/// of [`FeitelsonStream`], so a streamed generator run and a
+/// materialized one process bit-identical jobs by construction.
 pub fn generate_with(params: &FeitelsonParams, seed: u64) -> WorkloadSpec {
-    let mut rng = Rng::new(seed);
-    let sampled = sample(params, &mut rng);
-    let users = params.users.max(1);
-    let mut counts = std::collections::HashMap::new();
-    let jobs = sampled
-        .into_iter()
-        .enumerate()
-        .map(|(i, s)| {
-            let k = counts.entry(s.app).or_insert(0usize);
-            let name = format!("{}-{:03}", s.app, *k);
-            *k += 1;
-            let mut spec = JobSpec::from_app(s.app, name, s.arrival, s.work_scale);
-            // Round-robin by submission index: deterministic and free of
-            // RNG draws, so the sampled stream is unchanged.
-            spec.user = (i % users) as u32;
-            spec
-        })
-        .collect();
+    let jobs = FeitelsonStream::new(params.clone(), seed)
+        .collect_all()
+        .expect("generator streams cannot fail");
     WorkloadSpec { jobs, seed }
 }
 
@@ -87,28 +77,13 @@ impl Default for BurstLullParams {
 }
 
 /// Generate a burst–lull workload.  Deterministic for a given seed; the
-/// job mix and naming follow [`generate_with`].
+/// job mix and naming follow [`generate_with`].  Implemented as the
+/// collect of [`BurstLullStream`] (streamed ≡ materialized by
+/// construction).
 pub fn generate_burst_lull(params: &BurstLullParams, seed: u64) -> WorkloadSpec {
-    let mut rng = Rng::new(seed);
-    let burst = params.burst.max(1);
-    let users = params.users.max(1);
-    let mut t = 0.0;
-    let mut counts = std::collections::HashMap::new();
-    let mut jobs = Vec::with_capacity(params.jobs);
-    for i in 0..params.jobs {
-        if i > 0 {
-            t += if i % burst == 0 { params.lull } else { rng.exp(params.burst_gap) };
-        }
-        let app = *rng.choice(&params.apps);
-        let u = rng.f64() * 2.0 - 1.0;
-        let work_scale = (u * params.work_spread).exp();
-        let k = counts.entry(app).or_insert(0usize);
-        let name = format!("{}-{:03}", app, *k);
-        *k += 1;
-        let mut spec = JobSpec::from_app(app, name, t, work_scale);
-        spec.user = (i % users) as u32;
-        jobs.push(spec);
-    }
+    let jobs = BurstLullStream::new(params.clone(), seed)
+        .collect_all()
+        .expect("generator streams cannot fail");
     WorkloadSpec { jobs, seed }
 }
 

@@ -1,0 +1,648 @@
+//! Pull-based job streams: the workload side of the streaming memory
+//! model.
+//!
+//! A [`JobStream`] yields [`JobSpec`]s one at a time, ordered by submit
+//! time, so the engine can pull arrivals lazily into its event heap
+//! (a small look-ahead window) instead of materializing the whole
+//! workload up front.  Three sources implement it:
+//!
+//! * [`Materialized`] — wraps an already-built `Vec<JobSpec>`
+//!   (the compatibility path; `Engine::run` delegates through it, kept
+//!   bit-identical with the historical batch behavior).
+//! * [`FeitelsonStream`] / [`BurstLullStream`] — on-demand generator
+//!   adapters.  The batch generators ([`crate::workload::generate_with`],
+//!   [`crate::workload::generate_burst_lull`]) are implemented as
+//!   `collect_all()` of these streams, so streamed and materialized
+//!   generator workloads are equal by construction.
+//! * [`SwfStream`] — a line-streaming SWF reader that never holds the
+//!   file (or the record vector) in memory; it shares its line parser
+//!   and record materializer with the batch reader
+//!   ([`crate::workload::swf`]), so the two paths emit bit-identical
+//!   jobs for submit-sorted traces.
+//!
+//! [`Adapted`] layers the campaign runner's per-job transforms (cluster
+//! fitting → deadline decoration → rigid baseline, in exactly that
+//! order) over any source.
+
+use std::collections::HashMap;
+use std::io::BufRead;
+
+use anyhow::{bail, Context, Result};
+
+use crate::apps::config::AppKind;
+use crate::util::rng::Rng;
+use crate::workload::swf::{parse_line, SwfLine, SwfOptions, SwfStats};
+use crate::workload::{fit_spec, BurstLullParams, FeitelsonParams, JobSpec, WorkloadSpec};
+
+/// A pull-based, submit-ordered source of job specifications.
+///
+/// Contract: successive `Ok(Some(job))` results have non-decreasing
+/// `submit_time` (the engine's look-ahead window depends on it; sources
+/// either generate in order or — like [`SwfStream`] — error on
+/// violations), and after the first `Ok(None)` every further call also
+/// returns `Ok(None)`.
+pub trait JobStream {
+    /// The next job in submit order; `Ok(None)` when exhausted.
+    fn next_job(&mut self) -> Result<Option<JobSpec>>;
+
+    /// Drain the rest of the stream into a vector (the batch
+    /// compatibility path and tests; defeats the purpose of streaming
+    /// for million-job sources).
+    fn collect_all(&mut self) -> Result<Vec<JobSpec>> {
+        let mut out = Vec::new();
+        while let Some(j) = self.next_job()? {
+            out.push(j);
+        }
+        Ok(out)
+    }
+}
+
+/// Compatibility adapter: a [`JobStream`] over an in-memory job vector.
+/// `Engine::run` wraps every [`WorkloadSpec`] in one of these, so the
+/// historical batch API is the streamed engine with an infinite
+/// look-ahead window.
+pub struct Materialized {
+    iter: std::vec::IntoIter<JobSpec>,
+}
+
+impl Materialized {
+    /// Stream an owned workload.
+    pub fn new(w: WorkloadSpec) -> Self {
+        Self::from_jobs(w.jobs)
+    }
+
+    /// Stream an owned job vector (must be submit-sorted, as every
+    /// workload source guarantees).
+    pub fn from_jobs(jobs: Vec<JobSpec>) -> Self {
+        Materialized { iter: jobs.into_iter() }
+    }
+}
+
+impl From<&WorkloadSpec> for Materialized {
+    fn from(w: &WorkloadSpec) -> Self {
+        Self::from_jobs(w.jobs.clone())
+    }
+}
+
+impl JobStream for Materialized {
+    fn next_job(&mut self) -> Result<Option<JobSpec>> {
+        Ok(self.iter.next())
+    }
+}
+
+/// Deals per-app sequence names (`CG-017`) exactly like the batch
+/// generators' `HashMap` counters.
+#[derive(Default)]
+struct Namer {
+    counts: HashMap<AppKind, usize>,
+}
+
+impl Namer {
+    fn name(&mut self, app: AppKind) -> String {
+        let k = self.counts.entry(app).or_insert(0);
+        let name = format!("{}-{:03}", app, *k);
+        *k += 1;
+        name
+    }
+}
+
+/// On-demand Feitelson-model generator (§7.1): each pull draws one
+/// job's arrival gap, application, and work scale — the same RNG
+/// sequence as the batch [`crate::workload::feitelson::sample`], which
+/// draws per job in the same order, so collecting this stream equals
+/// the batch generator bit for bit.
+pub struct FeitelsonStream {
+    params: FeitelsonParams,
+    rng: Rng,
+    t: f64,
+    i: usize,
+    namer: Namer,
+}
+
+impl FeitelsonStream {
+    /// A stream of `params.jobs` jobs, deterministic for a given seed.
+    pub fn new(params: FeitelsonParams, seed: u64) -> Self {
+        FeitelsonStream { params, rng: Rng::new(seed), t: 0.0, i: 0, namer: Namer::default() }
+    }
+}
+
+impl JobStream for FeitelsonStream {
+    fn next_job(&mut self) -> Result<Option<JobSpec>> {
+        if self.i >= self.params.jobs {
+            return Ok(None);
+        }
+        self.t += self.rng.exp(self.params.mean_interarrival);
+        let app = *self.rng.choice(&self.params.apps);
+        // log-uniform in [e^-spread, e^+spread]
+        let u = self.rng.f64() * 2.0 - 1.0;
+        let work_scale = (u * self.params.work_spread).exp();
+        let name = self.namer.name(app);
+        let mut spec = JobSpec::from_app(app, name, self.t, work_scale);
+        // Round-robin by submission index: deterministic and free of
+        // RNG draws, so the sampled stream is unchanged.
+        spec.user = (self.i % self.params.users.max(1)) as u32;
+        self.i += 1;
+        Ok(Some(spec))
+    }
+}
+
+/// On-demand burst–lull generator: the streaming form of
+/// [`crate::workload::generate_burst_lull`] (which collects this
+/// stream).
+pub struct BurstLullStream {
+    params: BurstLullParams,
+    rng: Rng,
+    t: f64,
+    i: usize,
+    namer: Namer,
+}
+
+impl BurstLullStream {
+    /// A stream of `params.jobs` jobs, deterministic for a given seed.
+    pub fn new(params: BurstLullParams, seed: u64) -> Self {
+        BurstLullStream { params, rng: Rng::new(seed), t: 0.0, i: 0, namer: Namer::default() }
+    }
+}
+
+impl JobStream for BurstLullStream {
+    fn next_job(&mut self) -> Result<Option<JobSpec>> {
+        if self.i >= self.params.jobs {
+            return Ok(None);
+        }
+        let burst = self.params.burst.max(1);
+        if self.i > 0 {
+            self.t += if self.i % burst == 0 {
+                self.params.lull
+            } else {
+                self.rng.exp(self.params.burst_gap)
+            };
+        }
+        let app = *self.rng.choice(&self.params.apps);
+        let u = self.rng.f64() * 2.0 - 1.0;
+        let work_scale = (u * self.params.work_spread).exp();
+        let name = self.namer.name(app);
+        let mut spec = JobSpec::from_app(app, name, self.t, work_scale);
+        spec.user = (self.i % self.params.users.max(1)) as u32;
+        self.i += 1;
+        Ok(Some(spec))
+    }
+}
+
+/// Line-streaming SWF reader: parses one line at a time from any
+/// [`BufRead`] and materializes usable records on demand — the file is
+/// never resident, and neither is a record vector.
+///
+/// Differences from the batch path ([`crate::workload::swf::parse`] +
+/// [`crate::workload::swf::to_workload`]), both deliberate:
+///
+/// * The batch reader *sorts* records by submit time; a stream cannot.
+///   Records must arrive submit-sorted (real archive traces are) — an
+///   out-of-order submit is a deterministic error, not a panic.
+/// * Parse statistics ([`SwfStream::stats`]) only cover lines read so
+///   far: with `max_jobs` set the tail of the file is never read.
+///
+/// For submit-sorted input the emitted jobs are bit-identical with the
+/// batch path: both share [`parse_line`] and the record materializer,
+/// and both draw exactly one `rng.f64()` per emitted-eligible record in
+/// file order.
+pub struct SwfStream {
+    lines: std::io::Lines<Box<dyn BufRead>>,
+    opts: SwfOptions,
+    rng: Rng,
+    stats: SwfStats,
+    /// Node-rescaling factor (1.0 = none) — scanned in a first pass by
+    /// [`SwfStream::open`] when `rescale_nodes` is set.
+    scale: f64,
+    /// First usable record's submit time (the trace start shift).
+    t0: Option<f64>,
+    last_submit: f64,
+    line_no: usize,
+    emitted: usize,
+}
+
+impl SwfStream {
+    /// Stream a trace file from disk.  When `opts.rescale_nodes` is set
+    /// this makes a first line-streaming pass over the file to find the
+    /// largest processor request (the rescaling baseline, exactly the
+    /// batch reader's `max_procs`) — still constant-memory — then
+    /// reopens for the emit pass.
+    pub fn open(path: &str, opts: SwfOptions, seed: u64) -> Result<SwfStream> {
+        let max_procs = if opts.rescale_nodes.is_some() {
+            let f = std::fs::File::open(path)
+                .with_context(|| format!("SWF trace {path}: open for rescale scan"))?;
+            Some(scan_max_procs(Box::new(std::io::BufReader::new(f)))?)
+        } else {
+            None
+        };
+        let f = std::fs::File::open(path).with_context(|| format!("SWF trace {path}: open"))?;
+        Self::from_reader(Box::new(std::io::BufReader::new(f)), opts, seed, max_procs)
+    }
+
+    /// Stream from any reader.  `max_procs` is the trace-wide largest
+    /// processor request and is required when `opts.rescale_nodes` is
+    /// set (a plain reader cannot be rewound for the scan pass; use
+    /// [`SwfStream::open`] for files, or [`scan_max_procs`] on a copy).
+    pub fn from_reader(
+        reader: Box<dyn BufRead>,
+        opts: SwfOptions,
+        seed: u64,
+        max_procs: Option<usize>,
+    ) -> Result<SwfStream> {
+        let scale = match (opts.rescale_nodes, max_procs) {
+            (Some(n), Some(max)) if max > 0 => n as f64 / max as f64,
+            (Some(_), None) => {
+                bail!("SWF stream: rescale_nodes needs the trace's max_procs (use SwfStream::open)")
+            }
+            _ => 1.0,
+        };
+        Ok(SwfStream {
+            lines: reader.lines(),
+            opts,
+            rng: Rng::new(seed),
+            stats: SwfStats::default(),
+            scale,
+            t0: None,
+            last_submit: f64::NEG_INFINITY,
+            line_no: 0,
+            emitted: 0,
+        })
+    }
+
+    /// Parse statistics over the lines read so far (final once the
+    /// stream returns `Ok(None)` — except that `max_jobs` stops reading
+    /// early, leaving the tail uncounted).
+    pub fn stats(&self) -> &SwfStats {
+        &self.stats
+    }
+}
+
+impl JobStream for SwfStream {
+    fn next_job(&mut self) -> Result<Option<JobSpec>> {
+        if self.opts.max_jobs.is_some_and(|n| self.emitted >= n) {
+            return Ok(None);
+        }
+        for line in self.lines.by_ref() {
+            self.line_no += 1;
+            let line = line.with_context(|| format!("SWF stream: read line {}", self.line_no))?;
+            self.stats.lines += 1;
+            match parse_line(&line) {
+                SwfLine::Blank => {}
+                SwfLine::Comment => self.stats.comments += 1,
+                SwfLine::Malformed => self.stats.malformed += 1,
+                SwfLine::Skipped => self.stats.skipped += 1,
+                SwfLine::Record(rec) => {
+                    if !rec.completed() {
+                        self.stats.nonsuccess += 1;
+                    }
+                    // The batch reader sorts; a stream must insist.
+                    if rec.submit < self.last_submit {
+                        bail!(
+                            "SWF stream: out-of-order submit at line {} (job {}): {} < {}",
+                            self.line_no,
+                            rec.job_id,
+                            rec.submit,
+                            self.last_submit
+                        );
+                    }
+                    self.last_submit = rec.submit;
+                    if !(self.opts.include_failed || rec.completed()) {
+                        continue;
+                    }
+                    let t0 = *self.t0.get_or_insert(rec.submit);
+                    let job = crate::workload::swf::materialize_record(
+                        &rec,
+                        &self.opts,
+                        self.scale,
+                        t0,
+                        &mut self.rng,
+                    );
+                    self.emitted += 1;
+                    return Ok(Some(job));
+                }
+            }
+        }
+        Ok(None)
+    }
+}
+
+/// One line-streaming pass over a trace, returning the largest
+/// processor request (the batch reader's `max_procs`; the node-rescaling
+/// baseline).  Constant memory.
+pub fn scan_max_procs(reader: Box<dyn BufRead>) -> Result<usize> {
+    let mut max = 0usize;
+    for (i, line) in reader.lines().enumerate() {
+        let line = line.with_context(|| format!("SWF rescale scan: read line {}", i + 1))?;
+        if let SwfLine::Record(rec) = parse_line(&line) {
+            max = max.max(rec.procs);
+        }
+    }
+    Ok(max)
+}
+
+/// Per-job transform pipeline over any source, mirroring the campaign
+/// runner's materialized path in order: cluster fitting
+/// ([`fit_spec`]) → deadline decoration
+/// ([`WorkloadSpec::with_deadlines`] semantics) → rigid baseline
+/// ([`WorkloadSpec::as_fixed`] semantics).  Each job is transformed
+/// exactly as the batch path would, so streamed campaign runs stay
+/// bit-identical.
+pub struct Adapted<S> {
+    inner: S,
+    fit_nodes: Option<usize>,
+    deadline_slack: Option<f64>,
+    fixed: bool,
+}
+
+impl<S: JobStream> Adapted<S> {
+    /// Identity adapter over `inner`; add transforms with the builder
+    /// methods.
+    pub fn new(inner: S) -> Self {
+        Adapted { inner, fit_nodes: None, deadline_slack: None, fixed: false }
+    }
+
+    /// Clamp every job's size bounds onto a `nodes`-node pool.
+    pub fn fit(mut self, nodes: usize) -> Self {
+        self.fit_nodes = Some(nodes);
+        self
+    }
+
+    /// Give every job a soft deadline of `submit + slack × est_duration`
+    /// (computed after fitting, like the batch path).
+    pub fn deadlines(mut self, slack: f64) -> Self {
+        self.deadline_slack = Some(slack);
+        self
+    }
+
+    /// Force every job rigid (the paper's fixed baseline).
+    pub fn fixed(mut self, fixed: bool) -> Self {
+        self.fixed = fixed;
+        self
+    }
+}
+
+impl<S: JobStream> JobStream for Adapted<S> {
+    fn next_job(&mut self) -> Result<Option<JobSpec>> {
+        let Some(mut j) = self.inner.next_job()? else {
+            return Ok(None);
+        };
+        if let Some(n) = self.fit_nodes {
+            fit_spec(&mut j, n);
+        }
+        if let Some(slack) = self.deadline_slack {
+            j.deadline = Some(j.submit_time + slack * j.est_duration());
+        }
+        if self.fixed {
+            j.malleable = false;
+        }
+        Ok(Some(j))
+    }
+}
+
+/// Boxed streams forward (`Box<dyn JobStream>` composes with
+/// [`Adapted`] and the engines' `&mut dyn JobStream` entry points).
+impl<'a> JobStream for Box<dyn JobStream + 'a> {
+    fn next_job(&mut self) -> Result<Option<JobSpec>> {
+        (**self).next_job()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::swf::{self, FIXTURE};
+    use crate::workload::{feitelson, generate_burst_lull, generate_with};
+
+    #[test]
+    fn feitelson_stream_matches_batch_sample() {
+        // The stream must draw the exact RNG sequence of the batch
+        // sampler (drift tripwire: both draw gap → app → scale per job).
+        let p = FeitelsonParams { jobs: 40, ..Default::default() };
+        let sampled = feitelson::sample(&p, &mut Rng::new(11));
+        let jobs = FeitelsonStream::new(p.clone(), 11).collect_all().unwrap();
+        assert_eq!(jobs.len(), sampled.len());
+        for (j, s) in jobs.iter().zip(&sampled) {
+            assert_eq!(j.app, s.app);
+            assert_eq!(j.submit_time.to_bits(), s.arrival.to_bits());
+            assert_eq!(j.work_scale.to_bits(), s.work_scale.to_bits());
+        }
+        // And the batch generator (collect of this stream) agrees with
+        // naming/users too.
+        let w = generate_with(&p, 11);
+        for (a, b) in jobs.iter().zip(&w.jobs) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.user, b.user);
+        }
+    }
+
+    #[test]
+    fn burst_lull_stream_matches_batch() {
+        let p = BurstLullParams { jobs: 24, burst: 8, ..Default::default() };
+        let w = generate_burst_lull(&p, 5);
+        // Replicate the historical batch draw order inline as a drift
+        // tripwire (gap → app → scale per job).
+        let mut rng = Rng::new(5);
+        let mut t = 0.0;
+        for (i, j) in w.jobs.iter().enumerate() {
+            if i > 0 {
+                t += if i % 8 == 0 { p.lull } else { rng.exp(p.burst_gap) };
+            }
+            let app = *rng.choice(&p.apps);
+            let u = rng.f64() * 2.0 - 1.0;
+            let work_scale = (u * p.work_spread).exp();
+            assert_eq!(j.app, app, "job {i}");
+            assert_eq!(j.submit_time.to_bits(), t.to_bits(), "job {i}");
+            assert_eq!(j.work_scale.to_bits(), work_scale.to_bits(), "job {i}");
+            assert_eq!(j.user, (i % p.users) as u32, "job {i}");
+        }
+    }
+
+    fn cursor(text: &str) -> Box<dyn BufRead> {
+        Box::new(std::io::Cursor::new(text.to_string()))
+    }
+
+    /// Both SWF readers over the same text + options must emit
+    /// bit-identical jobs — the shared assertion set of the reader
+    /// tests.
+    fn assert_swf_stream_matches_batch(text: &str, opts: &SwfOptions, seed: u64) {
+        let trace = swf::parse(text);
+        let batch = swf::to_workload(&trace, opts, seed);
+        let max_procs = scan_max_procs(cursor(text)).unwrap();
+        let mut stream =
+            SwfStream::from_reader(cursor(text), opts.clone(), seed, Some(max_procs)).unwrap();
+        let streamed = stream.collect_all().unwrap();
+        assert_eq!(streamed.len(), batch.jobs.len());
+        for (s, b) in streamed.iter().zip(&batch.jobs) {
+            assert_eq!(s.name, b.name);
+            assert_eq!(s.app, b.app);
+            assert_eq!(s.iterations, b.iterations);
+            assert_eq!(s.work_scale.to_bits(), b.work_scale.to_bits(), "{}", s.name);
+            assert_eq!(
+                (s.procs, s.min_procs, s.max_procs, s.pref_procs, s.factor),
+                (b.procs, b.min_procs, b.max_procs, b.pref_procs, b.factor),
+                "{}",
+                s.name
+            );
+            assert_eq!(s.submit_time.to_bits(), b.submit_time.to_bits(), "{}", s.name);
+            assert_eq!(s.malleable, b.malleable);
+            assert_eq!(s.user, b.user);
+        }
+    }
+
+    #[test]
+    fn swf_stream_matches_batch_across_options() {
+        assert_swf_stream_matches_batch(FIXTURE, &SwfOptions::default(), 1);
+        assert_swf_stream_matches_batch(
+            FIXTURE,
+            &SwfOptions { include_failed: true, ..Default::default() },
+            1,
+        );
+        assert_swf_stream_matches_batch(
+            FIXTURE,
+            &SwfOptions { max_jobs: Some(3), ..Default::default() },
+            1,
+        );
+        assert_swf_stream_matches_batch(
+            FIXTURE,
+            &SwfOptions {
+                rescale_nodes: Some(32),
+                max_jobs: Some(3),
+                time_scale: 0.5,
+                ..Default::default()
+            },
+            1,
+        );
+        assert_swf_stream_matches_batch(
+            FIXTURE,
+            &SwfOptions { malleable_fraction: 1.0, ..Default::default() },
+            7,
+        );
+        assert_swf_stream_matches_batch(
+            FIXTURE,
+            &SwfOptions { malleable_fraction: 0.5, ..Default::default() },
+            3,
+        );
+    }
+
+    #[test]
+    fn swf_stream_handles_crlf_comments_and_truncation() {
+        // CRLF line endings, interleaved comments, and a final line
+        // truncated mid-record: counted, never fatal.
+        let text = "; header\r\n\
+                    1 0 5 100 16 -1 -1 16 120 -1 1 1 1 1 1 -1 -1 -1\r\n\
+                    ; interleaved comment\r\n\
+                    2 30 2 200 8 -1 -1 8 240 -1 1 2 1 1 1 -1 -1 -1\r\n\
+                    3 60 9 150";
+        let mut s = SwfStream::from_reader(cursor(text), SwfOptions::default(), 1, None).unwrap();
+        let jobs = s.collect_all().unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].name, "swf-00001");
+        assert_eq!(jobs[1].name, "swf-00002");
+        assert_eq!(s.stats().comments, 2);
+        assert_eq!(s.stats().malformed, 1, "the truncated tail line");
+        // and the batch reader agrees on the emitted jobs
+        assert_swf_stream_matches_batch(text, &SwfOptions::default(), 1);
+    }
+
+    #[test]
+    fn swf_stream_errors_deterministically_on_out_of_order_submits() {
+        let text = "1 50 5 100 16 -1 -1 16 120 -1 1 1 1 1 1 -1 -1 -1\n\
+                    2 20 2 200 8 -1 -1 8 240 -1 1 2 1 1 1 -1 -1 -1\n";
+        for _ in 0..2 {
+            let mut s =
+                SwfStream::from_reader(cursor(text), SwfOptions::default(), 1, None).unwrap();
+            assert!(s.next_job().unwrap().is_some(), "first record is fine");
+            let err = s.next_job().expect_err("out-of-order must error, not panic");
+            let msg = format!("{err}");
+            assert_eq!(
+                msg, "SWF stream: out-of-order submit at line 2 (job 2): 20 < 50",
+                "error must be deterministic"
+            );
+        }
+    }
+
+    #[test]
+    fn swf_stream_order_check_covers_filtered_records_too() {
+        // The out-of-order record is a failed job (status 0) that the
+        // usable filter would drop — ordering is still enforced on it.
+        let text = "1 50 5 100 16 -1 -1 16 120 -1 1 1 1 1 1 -1 -1 -1\n\
+                    2 20 2 200 8 -1 -1 8 240 -1 0 2 1 1 1 -1 -1 -1\n";
+        let mut s = SwfStream::from_reader(cursor(text), SwfOptions::default(), 1, None).unwrap();
+        assert!(s.next_job().unwrap().is_some());
+        assert!(s.next_job().is_err());
+    }
+
+    #[test]
+    fn swf_stream_rescale_requires_scan() {
+        let opts = SwfOptions { rescale_nodes: Some(32), ..Default::default() };
+        let err = SwfStream::from_reader(cursor(FIXTURE), opts, 1, None)
+            .err()
+            .expect("rescale without max_procs must error");
+        assert!(format!("{err}").contains("max_procs"));
+    }
+
+    #[test]
+    fn swf_open_two_pass_matches_batch_rescale() {
+        // Write the fixture to a temp file and use the two-pass open().
+        let dir = std::env::temp_dir();
+        let path = dir.join("dmr_swf_stream_test.swf");
+        std::fs::write(&path, FIXTURE).unwrap();
+        let opts = SwfOptions { rescale_nodes: Some(32), ..Default::default() };
+        let mut s = SwfStream::open(path.to_str().unwrap(), opts.clone(), 1).unwrap();
+        let streamed = s.collect_all().unwrap();
+        let batch = swf::to_workload(&swf::parse(FIXTURE), &opts, 1);
+        assert_eq!(streamed.len(), batch.jobs.len());
+        for (a, b) in streamed.iter().zip(&batch.jobs) {
+            assert_eq!(a.procs, b.procs, "{}", a.name);
+            assert_eq!(a.submit_time.to_bits(), b.submit_time.to_bits());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn adapted_matches_batch_transforms() {
+        // fit → deadline → fixed, in the campaign runner's order.
+        let p = FeitelsonParams { jobs: 12, ..Default::default() };
+        let mut batch = generate_with(&p, 3);
+        for j in &mut batch.jobs {
+            fit_spec(j, 24);
+        }
+        let batch = batch.with_deadlines(1.5).as_fixed();
+        let streamed = Adapted::new(FeitelsonStream::new(p, 3))
+            .fit(24)
+            .deadlines(1.5)
+            .fixed(true)
+            .collect_all()
+            .unwrap();
+        assert_eq!(streamed.len(), batch.jobs.len());
+        for (s, b) in streamed.iter().zip(&batch.jobs) {
+            assert_eq!(s.name, b.name);
+            assert_eq!(
+                (s.procs, s.min_procs, s.max_procs, s.pref_procs),
+                (b.procs, b.min_procs, b.max_procs, b.pref_procs)
+            );
+            assert_eq!(s.malleable, b.malleable);
+            assert!(!s.malleable);
+            assert_eq!(
+                s.deadline.unwrap().to_bits(),
+                b.deadline.unwrap().to_bits(),
+                "{}",
+                s.name
+            );
+        }
+    }
+
+    #[test]
+    fn materialized_round_trips() {
+        let w = generate_with(&FeitelsonParams { jobs: 9, ..Default::default() }, 2);
+        let jobs = Materialized::from(&w).collect_all().unwrap();
+        assert_eq!(jobs.len(), 9);
+        for (a, b) in jobs.iter().zip(&w.jobs) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.submit_time.to_bits(), b.submit_time.to_bits());
+        }
+        // exhausted stream keeps returning None
+        let mut m = Materialized::new(w);
+        while m.next_job().unwrap().is_some() {}
+        assert!(m.next_job().unwrap().is_none());
+    }
+}

@@ -129,6 +129,73 @@ impl Default for SwfOptions {
     }
 }
 
+/// Classification of one SWF line by the shared line parser
+/// ([`parse_line`]).  Both readers — the batch [`parse`] and the
+/// line-streaming [`crate::workload::stream::SwfStream`] — classify
+/// through this one function, so the two paths cannot drift.
+#[derive(Debug, Clone)]
+pub enum SwfLine {
+    /// Empty (whitespace-only) line.
+    Blank,
+    /// `;` header/comment line.
+    Comment,
+    /// Not parseable as an SWF record (also covers lines truncated
+    /// mid-stream).
+    Malformed,
+    /// Parseable but missing essentials (no positive runtime or
+    /// processor count, or a negative submit time).
+    Skipped,
+    /// A usable record.
+    Record(SwfRecord),
+}
+
+/// Parse one SWF line.  Shared by the batch and streaming readers.
+pub fn parse_line(line: &str) -> SwfLine {
+    let t = line.trim();
+    if t.is_empty() {
+        return SwfLine::Blank;
+    }
+    if t.starts_with(';') {
+        return SwfLine::Comment;
+    }
+    let fields: Vec<&str> = t.split_whitespace().collect();
+    // The format specifies 18 fields; everything we need is in the
+    // first 9.
+    if fields.len() < 9 {
+        return SwfLine::Malformed;
+    }
+    let num = |i: usize| -> Option<f64> { fields.get(i).and_then(|s| s.parse::<f64>().ok()) };
+    let (Some(job_id), Some(submit), Some(run), Some(alloc), Some(req), Some(req_time)) = (
+        num(0),
+        num(1),
+        num(3),
+        num(4),
+        num(7),
+        num(8),
+    ) else {
+        return SwfLine::Malformed;
+    };
+    // -1 = unknown: prefer the request, fall back to the measurement
+    // (and vice versa for the runtime).
+    let procs = if req > 0.0 { req } else { alloc };
+    let runtime = if run > 0.0 { run } else { req_time };
+    if procs <= 0.0 || runtime <= 0.0 || submit < 0.0 {
+        return SwfLine::Skipped;
+    }
+    // Field 11 (index 10) is the status; field 12 (index 11) the
+    // user id; absent/garbage = unknown.
+    let status = num(10).map(|s| s as i64).unwrap_or(-1);
+    let user = num(11).map(|s| s as i64).unwrap_or(-1);
+    SwfLine::Record(SwfRecord {
+        job_id: job_id.max(0.0) as u64,
+        submit,
+        runtime,
+        procs: procs as usize,
+        status,
+        user,
+    })
+}
+
 /// Parse SWF text.  Records are sorted by submit time; malformed lines are
 /// counted, not fatal (real archive traces contain glitches).
 pub fn parse(text: &str) -> SwfTrace {
@@ -136,57 +203,18 @@ pub fn parse(text: &str) -> SwfTrace {
     let mut records = Vec::new();
     for line in text.lines() {
         stats.lines += 1;
-        let t = line.trim();
-        if t.is_empty() {
-            continue;
+        match parse_line(line) {
+            SwfLine::Blank => {}
+            SwfLine::Comment => stats.comments += 1,
+            SwfLine::Malformed => stats.malformed += 1,
+            SwfLine::Skipped => stats.skipped += 1,
+            SwfLine::Record(rec) => {
+                if !rec.completed() {
+                    stats.nonsuccess += 1;
+                }
+                records.push(rec);
+            }
         }
-        if t.starts_with(';') {
-            stats.comments += 1;
-            continue;
-        }
-        let fields: Vec<&str> = t.split_whitespace().collect();
-        // The format specifies 18 fields; everything we need is in the
-        // first 9.
-        if fields.len() < 9 {
-            stats.malformed += 1;
-            continue;
-        }
-        let num = |i: usize| -> Option<f64> { fields.get(i).and_then(|s| s.parse::<f64>().ok()) };
-        let (Some(job_id), Some(submit), Some(run), Some(alloc), Some(req), Some(req_time)) = (
-            num(0),
-            num(1),
-            num(3),
-            num(4),
-            num(7),
-            num(8),
-        ) else {
-            stats.malformed += 1;
-            continue;
-        };
-        // -1 = unknown: prefer the request, fall back to the measurement
-        // (and vice versa for the runtime).
-        let procs = if req > 0.0 { req } else { alloc };
-        let runtime = if run > 0.0 { run } else { req_time };
-        if procs <= 0.0 || runtime <= 0.0 || submit < 0.0 {
-            stats.skipped += 1;
-            continue;
-        }
-        // Field 11 (index 10) is the status; field 12 (index 11) the
-        // user id; absent/garbage = unknown.
-        let status = num(10).map(|s| s as i64).unwrap_or(-1);
-        let user = num(11).map(|s| s as i64).unwrap_or(-1);
-        let rec = SwfRecord {
-            job_id: job_id.max(0.0) as u64,
-            submit,
-            runtime,
-            procs: procs as usize,
-            status,
-            user,
-        };
-        if !rec.completed() {
-            stats.nonsuccess += 1;
-        }
-        records.push(rec);
     }
     records.sort_by(|a, b| a.submit.total_cmp(&b.submit).then(a.job_id.cmp(&b.job_id)));
     let max_procs = records.iter().map(|r| r.procs).max().unwrap_or(0);
@@ -205,6 +233,63 @@ pub fn load(path: &str) -> std::io::Result<SwfTrace> {
         ));
     }
     Ok(trace)
+}
+
+/// Materialize one usable record into a [`JobSpec`] under `opts` — the
+/// single place the record→job arithmetic lives, shared by
+/// [`to_workload`] and the streaming reader
+/// ([`crate::workload::stream::SwfStream`]) so the two paths are
+/// bit-identical.  `scale` is the node-rescaling factor (1.0 = none),
+/// `t0` the trace start shift; the malleability draw consumes exactly
+/// one `rng.f64()` per call, in record order.
+pub(crate) fn materialize_record(
+    rec: &SwfRecord,
+    opts: &SwfOptions,
+    scale: f64,
+    t0: f64,
+    rng: &mut Rng,
+) -> JobSpec {
+    let fs = crate::apps::config::config_for(AppKind::FlexibleSleep);
+    let procs = ((rec.procs as f64 * scale).round() as usize).max(1);
+    let malleable = rng.f64() < opts.malleable_fraction;
+    // Shrink-only malleability: submitted at the maximum (the paper's
+    // "user-preferred scenario of a fast execution"), minimum a few
+    // factor steps below.
+    let mut min_procs = procs;
+    if malleable {
+        let f = opts.factor.max(2);
+        for _ in 0..opts.shrink_levels {
+            // Stay on the factor chain: a 6-proc job stops at 3, not
+            // 1 (1 is unreachable by factor-2 resizes from 6).
+            if min_procs % f == 0 && min_procs / f >= 1 {
+                min_procs /= f;
+            } else {
+                break;
+            }
+        }
+    }
+    let iterations = opts.iterations.max(1);
+    // exec_time_at(p) = iterations * work_per_iter * work_scale / p
+    // (alpha = 1) == runtime at p = procs.
+    let work_scale = rec.runtime * procs as f64 / (iterations as f64 * fs.work_per_iter);
+    JobSpec {
+        name: format!("swf-{:05}", rec.job_id),
+        app: AppKind::FlexibleSleep,
+        iterations,
+        work_scale,
+        procs,
+        min_procs,
+        max_procs: procs,
+        pref_procs: if malleable { Some(min_procs) } else { None },
+        factor: opts.factor,
+        sched_period: 15.0,
+        alpha: 1.0,
+        malleable,
+        submit_time: (rec.submit - t0) * opts.time_scale,
+        // Real traces carry real user ids; unknown maps to user 0.
+        user: rec.user.max(0) as u32,
+        deadline: None,
+    }
 }
 
 /// Materialize a trace into a [`WorkloadSpec`] under `opts`.
@@ -229,61 +314,19 @@ pub fn to_workload(trace: &SwfTrace, opts: &SwfOptions, seed: u64) -> WorkloadSp
         .collect();
     let t0 = usable.first().map(|r| r.submit).unwrap_or(0.0);
     let n = opts.max_jobs.unwrap_or(usable.len()).min(usable.len());
-    let fs = crate::apps::config::config_for(AppKind::FlexibleSleep);
     let mut jobs = Vec::with_capacity(n);
     for rec in &usable[..n] {
-        let procs = ((rec.procs as f64 * scale).round() as usize).max(1);
-        let malleable = rng.f64() < opts.malleable_fraction;
-        // Shrink-only malleability: submitted at the maximum (the paper's
-        // "user-preferred scenario of a fast execution"), minimum a few
-        // factor steps below.
-        let mut min_procs = procs;
-        if malleable {
-            let f = opts.factor.max(2);
-            for _ in 0..opts.shrink_levels {
-                // Stay on the factor chain: a 6-proc job stops at 3, not
-                // 1 (1 is unreachable by factor-2 resizes from 6).
-                if min_procs % f == 0 && min_procs / f >= 1 {
-                    min_procs /= f;
-                } else {
-                    break;
-                }
-            }
-        }
-        let iterations = opts.iterations.max(1);
-        // exec_time_at(p) = iterations * work_per_iter * work_scale / p
-        // (alpha = 1) == runtime at p = procs.
-        let work_scale =
-            rec.runtime * procs as f64 / (iterations as f64 * fs.work_per_iter);
-        jobs.push(JobSpec {
-            name: format!("swf-{:05}", rec.job_id),
-            app: AppKind::FlexibleSleep,
-            iterations,
-            work_scale,
-            procs,
-            min_procs,
-            max_procs: procs,
-            pref_procs: if malleable { Some(min_procs) } else { None },
-            factor: opts.factor,
-            sched_period: 15.0,
-            alpha: 1.0,
-            malleable,
-            submit_time: (rec.submit - t0) * opts.time_scale,
-            // Real traces carry real user ids; unknown maps to user 0.
-            user: rec.user.max(0) as u32,
-            deadline: None,
-        });
+        jobs.push(materialize_record(rec, opts, scale, t0, &mut rng));
     }
     WorkloadSpec { jobs, seed }
 }
 
+// 18-field records; job 3 has -1 run time (falls back to requested
+// time), job 4 has -1 requested procs (falls back to allocated).
+// Shared with the streaming-reader tests so both readers run against
+// one assertion set.
 #[cfg(test)]
-mod tests {
-    use super::*;
-
-    // 18-field records; job 3 has -1 run time (falls back to requested
-    // time), job 4 has -1 requested procs (falls back to allocated).
-    const FIXTURE: &str = "\
+pub(crate) const FIXTURE: &str = "\
 ; UnixStartTime: 0
 ; MaxNodes: 64
 ;  a second comment line
@@ -295,6 +338,10 @@ garbage line that is not swf
 5 120 3 -1 -1 -1 -1 -1 -1 -1 5 5 1 3 1 -1 -1 -1
 6 150 4 80 64 -1 -1 64 90 -1 1 6 1 3 1 -1 -1 -1
 ";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
 
     #[test]
     fn parses_comments_malformed_and_unknown_fields() {

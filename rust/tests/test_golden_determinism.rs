@@ -34,7 +34,7 @@ use dmr::resilience::{
     ResilienceConfig,
 };
 use dmr::rms::RmsConfig;
-use dmr::workload;
+use dmr::workload::{self, Adapted, FeitelsonParams, FeitelsonStream};
 
 /// One run reduced to a digest line: event count, event-log FNV digest,
 /// makespan bits.  Equal lines <=> bit-identical observable behavior.
@@ -108,6 +108,40 @@ fn fault_run_digest(mode: &str, incremental_profile: bool) -> String {
         r.resilience.node_failures,
         r.resilience.rescued,
         r.resilience.requeued,
+    )
+}
+
+/// The same run as [`run_digest`]'s optimized path, but pulled lazily
+/// from the generator stream with the given look-ahead window instead of
+/// a materialized workload vector.  `keep_records` toggles slab/telemetry
+/// reclamation — the rolling log digest must survive either way.
+fn streamed_run_digest(mode: &str, window: usize, keep_records: bool) -> String {
+    let (sched, flexible) = match mode {
+        "fixed" => (SchedMode::Sync, false),
+        "sync" => (SchedMode::Sync, true),
+        "async" => (SchedMode::Async, true),
+        other => panic!("unknown mode {other}"),
+    };
+    // Mirror run_digest exactly: generate(40, 17) applies no cluster fit,
+    // so the adapter only carries the rigid-baseline transform.
+    let params = FeitelsonParams { jobs: 40, ..Default::default() };
+    let mut stream = Adapted::new(FeitelsonStream::new(params, 17)).fixed(!flexible);
+    let cfg = DesConfig {
+        rms: RmsConfig { nodes: 64, keep_records, ..Default::default() },
+        mode: sched,
+        ..Default::default()
+    };
+    let r = Engine::new(cfg)
+        .run_stream(&mut stream, window, mode)
+        .expect("generator streams cannot fail");
+    assert_eq!(r.user_jobs, 40, "streamed-{mode}: workload must drain");
+    assert!(r.rms.check_invariants());
+    assert!(r.peak_slab > 0 && r.peak_slab <= 64, "peak {} out of bounds", r.peak_slab);
+    format!(
+        "{mode} events={} log={:016x} makespan={:016x}",
+        r.events,
+        r.rms.log.digest(),
+        r.makespan.to_bits()
     )
 }
 
@@ -234,6 +268,26 @@ fn fault_timeline_identical_across_modes() {
     );
 }
 
+/// The streamed replay path must be bit-identical with the batch path —
+/// for every mode, any look-ahead window, and with record retention on
+/// or off (reclamation must never touch the observable event stream).
+#[test]
+fn streamed_replay_matches_batch_path() {
+    for mode in ["fixed", "sync", "async"] {
+        let batch = run_digest(mode, true, true);
+        for window in [1, 7, 64, usize::MAX] {
+            for keep in [true, false] {
+                assert_eq!(
+                    streamed_run_digest(mode, window, keep),
+                    batch,
+                    "{mode}: streamed (window {window}, keep_records {keep}) \
+                     diverged from the batch path"
+                );
+            }
+        }
+    }
+}
+
 /// Campaign aggregates must not depend on the worker count.
 #[test]
 fn campaign_aggregates_identical_across_worker_counts() {
@@ -269,6 +323,12 @@ fn golden_fixture_locks_event_stream() {
     lines.push(campaign_digest());
     for m in ["fixed", "sync", "async"] {
         lines.push(fault_run_digest(m, true));
+    }
+    // Streamed replay digests (window 7, records reclaimed): locked
+    // directly so fixture drift points at the streaming layer even if
+    // the batch path moves in the same PR.
+    for m in ["fixed", "sync", "async"] {
+        lines.push(format!("streamed-{}", streamed_run_digest(m, 7, false)));
     }
     let body = format!("{}\n", lines.join("\n"));
 

@@ -1,0 +1,396 @@
+//! Streaming-equivalence differential suite: the lazy-pull replay path
+//! must be observationally indistinguishable from the materialized batch
+//! path, bit for bit.
+//!
+//! The contract under test (see `rust/src/des/engine.rs` and
+//! `rust/src/workload/stream.rs`):
+//!
+//! 1. **Every source** — Feitelson generator, burst–lull generator, SWF
+//!    line-streaming reader, and the `Materialized` compatibility adapter
+//!    — replayed through `Engine::run_stream` produces the exact event
+//!    log (rolling FNV digest), makespan bits, and event count of
+//!    `Engine::run` over the equivalent materialized workload.
+//! 2. The equivalence holds **across scheduling modes** (fixed / sync /
+//!    async), **under fault injection** (MTBF + scripted failures +
+//!    drain windows + transactional resize faults), and **federated**
+//!    (multi-shard with stealing).
+//! 3. The look-ahead **window is unobservable**: any window in
+//!    {1, 7, 64, ∞} yields the same run.
+//! 4. **Reclamation is unobservable**: `keep_records = false` drops the
+//!    retained event vector, per-job records and slab slots, yet digests,
+//!    counters and streamed metric folds match the retaining run — and
+//!    peak-resident slab occupancy stays bounded by cluster capacity on a
+//!    50k-job replay (memory scales with concurrency, not replay length).
+
+use dmr::des::{DesConfig, Engine, RunResult};
+use dmr::dmr::SchedMode;
+use dmr::federation::{FedEngine, FederationConfig, RoutingPolicy, ShardSpec};
+use dmr::metrics::RunSummary;
+use dmr::resilience::{
+    DrainSet, DrainWindow, FaultKind, FaultSpec, FaultTraceEvent, RecoveryConfig,
+    ResilienceConfig, ResizeFaultSpec,
+};
+use dmr::rms::RmsConfig;
+use dmr::workload::{
+    self, swf, Adapted, BurstLullParams, BurstLullStream, FeitelsonParams, FeitelsonStream,
+    JobStream, Materialized, SwfStream, WorkloadSpec,
+};
+
+const NODES: usize = 64;
+
+fn modes() -> [(&'static str, SchedMode, bool); 3] {
+    [
+        ("fixed", SchedMode::Sync, false),
+        ("sync", SchedMode::Sync, true),
+        ("async", SchedMode::Async, true),
+    ]
+}
+
+fn swf_path() -> String {
+    format!("{}/scenarios/traces/small.swf", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn swf_opts() -> swf::SwfOptions {
+    swf::SwfOptions {
+        rescale_nodes: Some(NODES),
+        malleable_fraction: 0.5,
+        ..Default::default()
+    }
+}
+
+/// The three real sources, as (name, materialized workload, fresh
+/// stream) — streams are consumed by a run, so every comparison asks for
+/// a fresh pair.
+fn source(name: &str, seed: u64) -> (WorkloadSpec, Box<dyn JobStream>) {
+    match name {
+        "feitelson" => {
+            let p = FeitelsonParams { jobs: 40, ..Default::default() };
+            (workload::generate_with(&p, seed), Box::new(FeitelsonStream::new(p, seed)))
+        }
+        "burst-lull" => {
+            let p = BurstLullParams { jobs: 30, burst: 6, ..Default::default() };
+            (
+                workload::generate_burst_lull(&p, seed),
+                Box::new(BurstLullStream::new(p, seed)),
+            )
+        }
+        "swf" => {
+            let trace = swf::load(&swf_path()).expect("sample trace readable");
+            let w = swf::to_workload(&trace, &swf_opts(), seed);
+            let s = SwfStream::open(&swf_path(), swf_opts(), seed).expect("stream opens");
+            (w, Box::new(s))
+        }
+        other => panic!("unknown source {other}"),
+    }
+}
+
+fn faulty_resilience() -> ResilienceConfig {
+    ResilienceConfig {
+        faults: FaultSpec {
+            mtbf: 60_000.0,
+            mttr: 1_000.0,
+            scripted: vec![FaultTraceEvent { at: 300.0, node: 1, kind: FaultKind::Fail }],
+            drains: vec![DrainWindow { start: 1_500.0, end: 3_000.0, nodes: DrainSet::Count(6) }],
+        },
+        recovery: RecoveryConfig { checkpoint_interval: 500.0, ..Default::default() },
+        resize_faults: ResizeFaultSpec {
+            spawn_fail: 0.2,
+            redist_fail: 0.1,
+            revoke: 0.05,
+            max_retries: 2,
+            backoff_base: 30.0,
+            backoff_cap: 240.0,
+        },
+    }
+}
+
+fn cfg(sched: SchedMode, faulty: bool, keep_records: bool) -> DesConfig {
+    DesConfig {
+        rms: RmsConfig { nodes: NODES, keep_records, ..Default::default() },
+        mode: sched,
+        resilience: if faulty { faulty_resilience() } else { ResilienceConfig::default() },
+        ..Default::default()
+    }
+}
+
+/// A run reduced to its observable identity.
+fn identity(r: &RunResult) -> (u64, u64, u64, usize) {
+    (r.events, r.rms.log.digest(), r.makespan.to_bits(), r.user_jobs)
+}
+
+fn batch_run(w: &WorkloadSpec, sched: SchedMode, flexible: bool, faulty: bool) -> RunResult {
+    let w = if flexible { w.clone() } else { w.as_fixed() };
+    Engine::new(cfg(sched, faulty, true)).run(&w, "batch")
+}
+
+fn streamed_run(
+    inner: Box<dyn JobStream>,
+    sched: SchedMode,
+    flexible: bool,
+    faulty: bool,
+    window: usize,
+    keep_records: bool,
+) -> RunResult {
+    let mut stream = Adapted::new(inner).fixed(!flexible);
+    Engine::new(cfg(sched, faulty, keep_records))
+        .run_stream(&mut stream, window, "streamed")
+        .expect("stream sources are well-formed")
+}
+
+/// Tentpole lock: every source × every mode, streamed ≡ materialized.
+#[test]
+fn every_source_and_mode_is_bit_identical() {
+    for src in ["feitelson", "burst-lull", "swf"] {
+        for (label, sched, flexible) in modes() {
+            let (w, _) = source(src, 11);
+            let batch = batch_run(&w, sched, flexible, false);
+            let (_, stream) = source(src, 11);
+            let streamed = streamed_run(stream, sched, flexible, false, 64, true);
+            assert_eq!(
+                identity(&batch),
+                identity(&streamed),
+                "{src}/{label}: streamed replay diverged from the batch path"
+            );
+            assert!(streamed.peak_slab > 0 && streamed.peak_slab <= NODES);
+        }
+    }
+}
+
+/// The same lock under the full fault stack: machine failures, drain
+/// windows, checkpoint recovery, and transactional resize faults all
+/// draw from seeded RNG streams that must not observe arrival laziness.
+#[test]
+fn fault_injection_is_stream_invariant() {
+    for src in ["feitelson", "swf"] {
+        for (label, sched, flexible) in modes() {
+            let (w, _) = source(src, 11);
+            let batch = batch_run(&w, sched, flexible, true);
+            let (_, stream) = source(src, 11);
+            let streamed = streamed_run(stream, sched, flexible, true, 64, true);
+            assert_eq!(
+                identity(&batch),
+                identity(&streamed),
+                "{src}/{label}: fault replay diverged under streaming"
+            );
+            assert_eq!(
+                batch.resilience.node_failures, streamed.resilience.node_failures,
+                "{src}/{label}: failure counts diverged"
+            );
+        }
+    }
+}
+
+/// The look-ahead window must be unobservable: 1 (minimum legal), small,
+/// default, and unbounded all produce the same run.
+#[test]
+fn lookahead_window_is_unobservable() {
+    for src in ["feitelson", "burst-lull", "swf"] {
+        let (w, _) = source(src, 23);
+        let batch = batch_run(&w, SchedMode::Sync, true, false);
+        for window in [1, 7, 64, usize::MAX] {
+            let (_, stream) = source(src, 23);
+            let streamed = streamed_run(stream, SchedMode::Sync, true, false, window, true);
+            assert_eq!(
+                identity(&batch),
+                identity(&streamed),
+                "{src}: window {window} changed the run"
+            );
+        }
+        // window 0 is clamped to 1, not an error
+        let (_, stream) = source(src, 23);
+        let streamed = streamed_run(stream, SchedMode::Sync, true, false, 0, true);
+        assert_eq!(identity(&batch), identity(&streamed), "{src}: window 0 must clamp to 1");
+    }
+}
+
+/// The `Materialized` adapter is the compatibility path `Engine::run`
+/// itself rides through — pin the explicit form too.
+#[test]
+fn materialized_adapter_matches_batch_entry_point() {
+    for (label, sched, flexible) in modes() {
+        let (w, _) = source("feitelson", 29);
+        let w = if flexible { w } else { w.as_fixed() };
+        let batch = Engine::new(cfg(sched, false, true)).run(&w, "batch");
+        let mut stream = Materialized::from(&w);
+        let streamed = Engine::new(cfg(sched, false, true))
+            .run_stream(&mut stream, usize::MAX, "materialized")
+            .unwrap();
+        assert_eq!(identity(&batch), identity(&streamed), "{label}");
+    }
+}
+
+/// Federated runs: lazy pull + meta-scheduler routing + stealing must be
+/// bit-identical with the materialized federated path, per shard.
+#[test]
+fn federated_streaming_is_bit_identical() {
+    let layouts = [
+        (RoutingPolicy::LeastLoaded, true),
+        (RoutingPolicy::RoundRobin, false),
+        (RoutingPolicy::Locality, false),
+    ];
+    for (routing, steal) in layouts {
+        for faulty in [false, true] {
+            let fed = || FederationConfig {
+                shards: vec![
+                    ShardSpec { nodes: 40, ..Default::default() },
+                    ShardSpec { nodes: 24, ..Default::default() },
+                ],
+                routing,
+                steal,
+                shard_faults: None,
+            };
+            let (w, _) = source("feitelson", 31);
+            let batch = FedEngine::new(cfg(SchedMode::Sync, faulty, true), fed())
+                .run(&w, "fed-batch");
+            let (_, inner) = source("feitelson", 31);
+            let mut stream = Adapted::new(inner);
+            let streamed = FedEngine::new(cfg(SchedMode::Sync, faulty, true), fed())
+                .run_stream(&mut stream, 7, "fed-streamed")
+                .unwrap();
+            assert_eq!(batch.events, streamed.events, "{routing:?} faulty={faulty}");
+            assert_eq!(
+                batch.makespan.to_bits(),
+                streamed.makespan.to_bits(),
+                "{routing:?} faulty={faulty}"
+            );
+            assert_eq!(batch.shards.len(), streamed.shards.len());
+            for (a, b) in batch.shards.iter().zip(&streamed.shards) {
+                assert_eq!(
+                    a.rms.log.digest(),
+                    b.rms.log.digest(),
+                    "{routing:?} faulty={faulty}: shard {} digest diverged",
+                    a.shard
+                );
+            }
+            assert!(streamed.peak_slab > 0 && streamed.peak_slab <= NODES);
+        }
+    }
+}
+
+/// Reclamation must be unobservable: with `keep_records = false` the
+/// retained event vector and per-job records are gone, but the rolling
+/// digest, counters and streamed metric folds are identical.
+#[test]
+fn record_reclamation_is_unobservable() {
+    for (label, sched, flexible) in modes() {
+        let (_, s1) = source("feitelson", 37);
+        let keep = streamed_run(s1, sched, flexible, false, 64, true);
+        let (_, s2) = source("feitelson", 37);
+        let drop = streamed_run(s2, sched, flexible, false, 64, false);
+        assert_eq!(identity(&keep), identity(&drop), "{label}");
+        assert!(!keep.rms.log.all().is_empty(), "{label}: retaining run keeps events");
+        assert!(drop.rms.log.all().is_empty(), "{label}: reclaiming run retains nothing");
+        assert_eq!(
+            keep.rms.log.total_pushed(),
+            drop.rms.log.total_pushed(),
+            "{label}: pushed-event counters"
+        );
+
+        // Summaries agree on everything the fold computes; only the
+        // per-job record vector differs.
+        let sk = RunSummary::from_run(keep);
+        let sd = RunSummary::from_run(drop);
+        assert_eq!(sk.makespan.to_bits(), sd.makespan.to_bits(), "{label}");
+        assert_eq!(sk.util_mean.to_bits(), sd.util_mean.to_bits(), "{label}");
+        assert_eq!(sk.wait.mean().to_bits(), sd.wait.mean().to_bits(), "{label}");
+        assert_eq!(sk.exec.mean().to_bits(), sd.exec.mean().to_bits(), "{label}");
+        assert_eq!(sk.completion.mean().to_bits(), sd.completion.mean().to_bits(), "{label}");
+        assert_eq!(sk.node_seconds().to_bits(), sd.node_seconds().to_bits(), "{label}");
+        assert_eq!(sk.peak_live, sd.peak_live, "{label}");
+        assert_eq!(sk.jobs.len(), 40, "{label}");
+        assert!(sd.jobs.is_empty(), "{label}");
+    }
+}
+
+/// Memory-bound property at scale: a 50k-job replay with reclamation on
+/// keeps the live slab bounded by cluster capacity — three orders of
+/// magnitude below the job count — and still drains deterministically.
+#[test]
+fn fifty_thousand_job_replay_stays_bounded() {
+    // 4096 nodes keeps the default Feitelson arrival process
+    // under-saturated (steady-state demand ~2.6k node-seconds/second), so
+    // the queue stays shallow and the replay is fast even unoptimized —
+    // the same sizing the stream_scale bench uses at 1M jobs.
+    let nodes = 4096;
+    let p = FeitelsonParams { jobs: 50_000, ..Default::default() };
+    let mut stream = Adapted::new(FeitelsonStream::new(p, 42)).fit(nodes).fixed(true);
+    let cfg = DesConfig {
+        rms: RmsConfig { nodes, keep_records: false, ..Default::default() },
+        mode: SchedMode::Sync,
+        ..Default::default()
+    };
+    let r = Engine::new(cfg).run_stream(&mut stream, 64, "50k").unwrap();
+    assert_eq!(r.user_jobs, 50_000, "stream must drain fully");
+    assert!(r.peak_slab > 0, "peak never recorded");
+    assert!(
+        r.peak_slab <= nodes,
+        "peak-resident jobs {} exceeds the {nodes}-node capacity bound",
+        r.peak_slab
+    );
+    assert!(r.rms.log.all().is_empty(), "no events retained at scale");
+    assert!(!r.rms.log.retains(), "retention off for the bounded-memory profile");
+    assert!(r.rms.log.total_pushed() > 100_000, "events were still pushed and digested");
+    // Repeat run: bit-identical (reclamation cannot introduce
+    // nondeterminism at scale).
+    let p2 = FeitelsonParams { jobs: 50_000, ..Default::default() };
+    let mut stream2 = Adapted::new(FeitelsonStream::new(p2, 42)).fit(nodes).fixed(true);
+    let cfg2 = DesConfig {
+        rms: RmsConfig { nodes, keep_records: false, ..Default::default() },
+        mode: SchedMode::Sync,
+        ..Default::default()
+    };
+    let r2 = Engine::new(cfg2).run_stream(&mut stream2, 64, "50k").unwrap();
+    assert_eq!(identity(&r), identity(&r2), "50k replay must be deterministic");
+    assert_eq!(r.peak_slab, r2.peak_slab);
+}
+
+/// Submit-order is a hard precondition of the streaming contract: a
+/// disordered source must fail loudly (deterministic panic), never
+/// silently reorder.
+#[test]
+#[should_panic(expected = "submit-ordered")]
+fn disordered_stream_panics_deterministically() {
+    struct Disordered(usize);
+    impl JobStream for Disordered {
+        fn next_job(&mut self) -> anyhow::Result<Option<dmr::workload::JobSpec>> {
+            let w = workload::generate(3, 1);
+            // emit jobs in reverse submit order
+            let j = w.jobs.get(2usize.wrapping_sub(self.0)).cloned();
+            self.0 += 1;
+            Ok(j)
+        }
+    }
+    let cfg = DesConfig {
+        rms: RmsConfig { nodes: NODES, ..Default::default() },
+        ..Default::default()
+    };
+    let _ = Engine::new(cfg).run_stream(&mut Disordered(0), 64, "disordered");
+}
+
+/// SWF stream errors surface as `Err`, not panics, and carry the line
+/// context (satellite of the reader-robustness suite; the shared
+/// batch-vs-stream assertion set lives in `workload::stream` unit tests).
+#[test]
+fn swf_stream_errors_propagate_through_the_engine() {
+    let dir = std::env::temp_dir().join(format!("dmr_stream_bad_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad.swf");
+    std::fs::write(
+        &path,
+        "1 50 5 100 16 -1 -1 16 120 -1 1 1 1 1 1 -1 -1 -1\n\
+         2 20 2 200 8 -1 -1 8 240 -1 1 2 1 1 1 -1 -1 -1\n",
+    )
+    .unwrap();
+    let mut stream = Adapted::new(
+        SwfStream::open(path.to_str().unwrap(), swf::SwfOptions::default(), 1).unwrap(),
+    );
+    let err = Engine::new(DesConfig {
+        rms: RmsConfig { nodes: NODES, ..Default::default() },
+        ..Default::default()
+    })
+    .run_stream(&mut stream, 64, "bad-swf")
+    .expect_err("out-of-order trace must error");
+    let msg = format!("{err}");
+    assert!(msg.contains("out-of-order submit"), "unexpected error: {msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
