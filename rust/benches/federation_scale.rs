@@ -17,7 +17,9 @@ use std::time::Instant;
 
 use dmr::des::{DesConfig, Engine};
 use dmr::dmr::SchedMode;
-use dmr::federation::{FedEngine, FederationConfig, FedRunResult, RoutingPolicy, ShardSpec};
+use dmr::federation::{
+    FedEngine, FederationConfig, FedRunResult, RoutingPolicy, ShardSpec, StealPolicy,
+};
 use dmr::metrics::report::{bench_json, BenchRecord};
 use dmr::obs::Phase;
 use dmr::rms::RmsConfig;
@@ -28,7 +30,7 @@ use dmr::workload::{swf, WorkloadSpec};
 struct Case {
     shards: usize,
     routing: RoutingPolicy,
-    steal: bool,
+    steal: StealPolicy,
 }
 
 /// Deterministic SWF-shaped trace sized to the federated pool:
@@ -90,7 +92,7 @@ fn run_once(case: &Case, total_nodes: usize, w: &WorkloadSpec) -> (FedRunResult,
         shards: ShardSpec::uniform(total_nodes, case.shards),
         routing: case.routing,
         steal: case.steal,
-        shard_faults: None,
+        ..Default::default()
     };
     let t0 = Instant::now();
     let r = FedEngine::new(cfg(total_nodes), fed).run(w, "federation");
@@ -108,11 +110,11 @@ fn main() {
         &format!("meta-scheduler replay: {jobs} jobs across {total_nodes} nodes"),
     );
     let cases = [
-        Case { shards: 1, routing: RoutingPolicy::RoundRobin, steal: false },
-        Case { shards: 8, routing: RoutingPolicy::RoundRobin, steal: false },
-        Case { shards: 8, routing: RoutingPolicy::LeastLoaded, steal: false },
-        Case { shards: 8, routing: RoutingPolicy::LeastLoaded, steal: true },
-        Case { shards: 8, routing: RoutingPolicy::Locality, steal: true },
+        Case { shards: 1, routing: RoutingPolicy::RoundRobin, steal: StealPolicy::Off },
+        Case { shards: 8, routing: RoutingPolicy::RoundRobin, steal: StealPolicy::Off },
+        Case { shards: 8, routing: RoutingPolicy::LeastLoaded, steal: StealPolicy::Off },
+        Case { shards: 8, routing: RoutingPolicy::LeastLoaded, steal: StealPolicy::Head },
+        Case { shards: 8, routing: RoutingPolicy::Locality, steal: StealPolicy::Half },
     ];
     let w = materialize(jobs, total_nodes);
 
@@ -125,7 +127,7 @@ fn main() {
             "swf{jobs}-n{total_nodes}-s{}x{}{}",
             case.shards,
             case.routing.label(),
-            if case.steal { "-steal" } else { "" }
+            if case.steal.enabled() { "-steal" } else { "" }
         );
         // Cold run: determinism reference.  Warm run: the measurement.
         let (ra, _) = run_once(case, total_nodes, &w);
@@ -169,7 +171,7 @@ fn main() {
                 "s{}x{}{}",
                 case.shards,
                 case.routing.label(),
-                if case.steal { "-steal" } else { "" }
+                if case.steal.enabled() { "-steal" } else { "" }
             ),
             events: rb.events,
             wall_secs: wall,

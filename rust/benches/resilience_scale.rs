@@ -12,7 +12,10 @@
 //! Quick mode (default, CI): 1k-job workloads on 256 nodes, rigid +
 //! malleable + malleable-with-resize-faults (the `sync-rf` scenario puts
 //! the transactional resize path — aborts, rollbacks, retries — on the
-//! trajectory).  `BENCH_FULL=1` adds 5k-job runs.
+//! trajectory) + a federated failure-domain run (`fed-out`: two shards,
+//! machine faults stacked with a whole-shard blackout and a partition
+//! window, cross-shard evacuations verified).  `BENCH_FULL=1` adds
+//! 5k-job runs.
 
 mod common;
 
@@ -20,11 +23,14 @@ use std::time::Instant;
 
 use dmr::des::{DesConfig, Engine};
 use dmr::dmr::SchedMode;
+use dmr::federation::{
+    FedEngine, FederationConfig, FedRunResult, RoutingPolicy, ShardSpec, StealPolicy,
+};
 use dmr::metrics::report::{bench_checksum, bench_json, BenchRecord};
 use dmr::obs::{Phase, PhaseProfile};
 use dmr::resilience::{
-    DrainSet, DrainWindow, FaultKind, FaultSpec, FaultTraceEvent, RecoveryConfig,
-    ResilienceConfig, ResizeFaultSpec,
+    DrainSet, DrainWindow, FaultKind, FaultSpec, FaultTraceEvent, OutageEvent, OutageSpec,
+    PartitionWindow, RecoveryConfig, ResilienceConfig, ResizeFaultSpec,
 };
 use dmr::rms::RmsConfig;
 use dmr::util::table::Table;
@@ -33,12 +39,18 @@ use dmr::workload::{self, WorkloadSpec};
 struct Case {
     jobs: usize,
     nodes: usize,
-    mode: &'static str, // fixed | sync | sync-rf (resize faults on)
+    // fixed | sync | sync-rf (resize faults on) | fed-out (2 shards,
+    // machine faults + whole-shard outage + partition).
+    mode: &'static str,
 }
 
 impl Case {
     fn resize_faults(&self) -> bool {
         self.mode == "sync-rf"
+    }
+
+    fn federated(&self) -> bool {
+        self.mode == "fed-out"
     }
 }
 
@@ -74,6 +86,92 @@ fn materialize(case: &Case) -> WorkloadSpec {
     } else {
         w
     }
+}
+
+/// The `fed-out` correlated-fault layer: shard 0 goes entirely dark for
+/// 3000 s mid-stream, shard 1 rides out a 1000 s network partition.
+fn outage_model() -> Vec<OutageSpec> {
+    vec![
+        OutageSpec {
+            scripted: vec![OutageEvent {
+                domain: String::new(),
+                at: 5_000.0,
+                duration: 3_000.0,
+            }],
+            ..Default::default()
+        },
+        OutageSpec {
+            partitions: vec![PartitionWindow { start: 9_000.0, end: 10_000.0 }],
+            ..Default::default()
+        },
+    ]
+}
+
+/// Fold the per-shard event-log digests and the makespan bits into one
+/// hex checksum (shard order is part of the digest), as in
+/// `federation_scale`.
+fn fed_checksum(r: &FedRunResult) -> String {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for s in &r.shards {
+        h ^= s.rms.log.digest();
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    format!("{:016x}", h ^ r.makespan.to_bits())
+}
+
+/// One federated fault-heavy run: machine faults on both shards plus the
+/// correlated-outage layer.  Verifies evacuation invariants inline (every
+/// interrupted job rescued, requeued or evacuated exactly once; work
+/// fails over rather than getting lost) and returns the same measurement
+/// tuple as `run_once`.
+fn run_once_fed(
+    case: &Case,
+    w: &WorkloadSpec,
+) -> (u64, f64, f64, String, u64, u64, u64, usize, PhaseProfile) {
+    let cfg = DesConfig {
+        rms: RmsConfig { nodes: case.nodes, ..Default::default() },
+        mode: SchedMode::Sync,
+        resilience: fault_model(),
+        ..Default::default()
+    };
+    let fed = FederationConfig {
+        shards: ShardSpec::uniform(case.nodes, 2),
+        routing: RoutingPolicy::LeastLoaded,
+        steal: StealPolicy::Half,
+        outages: Some(outage_model()),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let r = FedEngine::new(cfg, fed).run(w, "resilience-fed");
+    let wall = t0.elapsed().as_secs_f64();
+    let done: usize = r.shards.iter().map(|s| s.rms.completed_jobs()).sum();
+    assert_eq!(done, w.len(), "fed-out: outages displace work, they never lose it");
+    assert!(r.evacuations() > 0, "fed-out: the blackout must force cross-shard failover");
+    assert_eq!(
+        r.evacuations(),
+        r.cross_shard_requeues(),
+        "fed-out: every evacuee lands exactly once"
+    );
+    for s in &r.shards {
+        assert_eq!(
+            s.stats.interrupted,
+            s.stats.rescued + s.stats.requeued + s.stats.evacuated,
+            "fed-out: shard {} failure ledger must close",
+            s.shard
+        );
+    }
+    let checksum = fed_checksum(&r);
+    (
+        r.events,
+        wall,
+        r.makespan,
+        checksum,
+        r.resilience.node_failures,
+        r.resilience.rescued + r.resilience.requeued + r.resilience.evacuated,
+        r.resilience.resize_aborts,
+        r.peak_slab,
+        r.profile,
+    )
 }
 
 fn run_once(
@@ -123,12 +221,14 @@ fn main() {
         Case { jobs: 1000, nodes: 256, mode: "fixed" },
         Case { jobs: 1000, nodes: 256, mode: "sync" },
         Case { jobs: 1000, nodes: 256, mode: "sync-rf" },
+        Case { jobs: 1000, nodes: 256, mode: "fed-out" },
     ];
     if common::full() {
         cases.extend([
             Case { jobs: 5000, nodes: 256, mode: "fixed" },
             Case { jobs: 5000, nodes: 256, mode: "sync" },
             Case { jobs: 5000, nodes: 256, mode: "sync-rf" },
+            Case { jobs: 5000, nodes: 256, mode: "fed-out" },
         ]);
     }
 
@@ -140,10 +240,11 @@ fn main() {
     for case in &cases {
         let scenario = format!("faulty-feitelson{}-n{}-{}", case.jobs, case.nodes, case.mode);
         let w = materialize(case);
+        let runner = if case.federated() { run_once_fed } else { run_once };
         // Cold run: determinism reference.  Warm run: the measurement.
-        let (ev_a, _, mk_a, sum_a, _, _, aborts_a, _, _) = run_once(case, &w);
+        let (ev_a, _, mk_a, sum_a, _, _, aborts_a, _, _) = runner(case, &w);
         let (ev_b, wall, mk_b, sum_b, failures, recoveries, aborts_b, peak, profile) =
-            run_once(case, &w);
+            runner(case, &w);
         assert_eq!(
             sum_a, sum_b,
             "{scenario}: determinism checksum mismatch (makespans {mk_a} / {mk_b})"

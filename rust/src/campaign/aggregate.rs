@@ -93,6 +93,16 @@ pub struct ScenarioAgg {
     /// Per-shard utilization percentage across seeds, one summary per
     /// shard id (empty for flat scenarios).
     pub shard_util: Vec<Summary>,
+    /// Jain index over per-shard mean bounded slowdowns per run (empty —
+    /// count 0 — for flat scenarios).
+    pub shard_jain: Summary,
+    /// Jobs evacuated across shards per run (zero without outages).
+    pub evacuations: Summary,
+    /// Cross-shard requeues received per run.
+    pub cross_requeues: Summary,
+    /// Per-shard availability percentage across seeds, one summary per
+    /// shard id (empty for flat scenarios).
+    pub shard_avail: Vec<Summary>,
 }
 
 impl ScenarioAgg {
@@ -133,6 +143,10 @@ impl ScenarioAgg {
             fed_shards: 1,
             fed_steals: Summary::new(),
             shard_util: Vec::new(),
+            shard_jain: Summary::new(),
+            evacuations: Summary::new(),
+            cross_requeues: Summary::new(),
+            shard_avail: Vec::new(),
         }
     }
 
@@ -172,14 +186,27 @@ impl ScenarioAgg {
             Some(f) => {
                 self.fed_shards = f.shards;
                 self.fed_steals.push(f.steals as f64);
+                self.shard_jain.push(f.shard_jain);
+                self.evacuations.push(f.evacuations as f64);
+                self.cross_requeues.push(f.cross_requeues as f64);
                 if self.shard_util.len() < f.per_shard.len() {
                     self.shard_util.resize_with(f.per_shard.len(), Summary::new);
+                }
+                if self.shard_avail.len() < f.per_shard.len() {
+                    self.shard_avail.resize_with(f.per_shard.len(), Summary::new);
                 }
                 for (agg, sh) in self.shard_util.iter_mut().zip(&f.per_shard) {
                     agg.push(sh.util_pct);
                 }
+                for (agg, sh) in self.shard_avail.iter_mut().zip(&f.per_shard) {
+                    agg.push(sh.availability * 100.0);
+                }
             }
-            None => self.fed_steals.push(0.0),
+            None => {
+                self.fed_steals.push(0.0);
+                self.evacuations.push(0.0);
+                self.cross_requeues.push(0.0);
+            }
         }
     }
 }

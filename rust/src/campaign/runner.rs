@@ -277,6 +277,7 @@ fn execute_plan(
                 routing: fp.routing,
                 steal: fp.steal,
                 shard_faults: shard_fault_specs(spec, fp, &cfg),
+                outages: fp.outages.clone(),
             };
             let result = FedEngine::new(cfg, fed).run(&w, &plan.label);
             let trace = tracing
@@ -353,6 +354,7 @@ fn execute_streamed(spec: &CampaignSpec, plan: &RunPlan, opts: &CampaignOpts) ->
                 routing: fp.routing,
                 steal: fp.steal,
                 shard_faults: shard_fault_specs(spec, fp, &cfg),
+                outages: fp.outages.clone(),
             };
             let result = FedEngine::new(cfg, fed)
                 .run_stream(&mut stream, plan.lookahead, &plan.label)
@@ -538,7 +540,7 @@ jobs = 8
         let fed = s.federation.as_ref().expect("federated summary");
         assert_eq!(fed.shards, 2);
         assert_eq!(fed.routing, "ll");
-        assert!(fed.steal);
+        assert_eq!(fed.steal, "head", "boolean spec form maps to the head policy");
         assert_eq!(fed.per_shard.len(), 2);
         assert_eq!(fed.per_shard.iter().map(|sh| sh.nodes).sum::<usize>(), 32);
         assert_eq!(s.jobs.len(), 8, "all jobs completed across shards");

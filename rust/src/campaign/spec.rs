@@ -11,8 +11,11 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::dmr::SchedMode;
-use crate::federation::{RoutingPolicy, ShardSpec};
-use crate::resilience::{DrainSet, DrainWindow, FaultKind, FaultTraceEvent, ResizeFaultSpec};
+use crate::federation::{RoutingPolicy, ShardSpec, StealPolicy};
+use crate::resilience::{
+    DrainSet, DrainWindow, FailureDomain, FaultKind, FaultTraceEvent, OutageEvent, OutageSpec,
+    PartitionWindow, ResizeFaultSpec,
+};
 use crate::rms::PolicyStrategy;
 use crate::util::json::Json;
 use crate::util::toml;
@@ -262,8 +265,12 @@ pub struct FedAxis {
     pub shards: Vec<usize>,
     /// Routing policies to sweep ([`RoutingPolicy::parse`] names).
     pub routing: Vec<RoutingPolicy>,
-    /// Whether the meta-scheduler steals queued work between shards.
-    pub steal: bool,
+    /// Work-stealing policies to sweep ([`StealPolicy::parse`] names; a
+    /// bare boolean still parses as the historical on/off pair).
+    pub steal: Vec<StealPolicy>,
+    /// Shard-level failure-domain axis (`[federation.outages]`); `None`
+    /// keeps every run outage-free.
+    pub outages: Option<OutageAxis>,
     /// Explicit heterogeneous layout: `"nodes[:speed[:mtbf_scale]]"`
     /// entries ([`ShardSpec::parse`]).  When set, the shard-count axis
     /// collapses to this single layout, and every `nodes` axis entry must
@@ -290,12 +297,75 @@ pub struct ShardFault {
     pub mttr: Option<f64>,
 }
 
+/// The `[federation.outages]` block: shard-level failure domains with
+/// correlated outages, network partitions, and an optional seeded
+/// domain-MTBF stream.  The `enabled` list is the sweepable on/off axis
+/// (`[false, true]` runs every scenario both ways); the event tables are
+/// shared by all enabled points.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutageAxis {
+    /// Sweepable on/off axis (default `[true]`: the block's presence
+    /// enables outages everywhere).
+    pub enabled: Vec<bool>,
+    /// Named failure domains, as `(shard, domain)` pairs
+    /// (`[[federation.outages.domain]]`).
+    pub domains: Vec<(usize, FailureDomain)>,
+    /// Scripted outage events, as `(shard, event)` pairs
+    /// (`[[federation.outages.outage]]`).
+    pub outages: Vec<(usize, OutageEvent)>,
+    /// Scripted partition windows, as `(shard, window)` pairs
+    /// (`[[federation.outages.partition]]`).
+    pub partitions: Vec<(usize, PartitionWindow)>,
+    /// Mean time between correlated domain outages per shard (`0` = no
+    /// random outages, scripted events only).
+    pub mtbf: f64,
+    /// Mean outage duration for the random stream.
+    pub mttr: f64,
+}
+
+impl OutageAxis {
+    /// Number of matrix points this axis contributes.
+    fn points(&self) -> usize {
+        self.enabled.len()
+    }
+
+    /// Materialize the per-shard [`OutageSpec`] list of one `shards`-wide
+    /// layout.  Entries targeting shards beyond `shards` are dropped (the
+    /// index is valid for *some* swept layout, just not this one).
+    pub fn specs(&self, shards: usize) -> Vec<OutageSpec> {
+        let mut specs = vec![OutageSpec::default(); shards];
+        for (s, d) in &self.domains {
+            if *s < shards {
+                specs[*s].domains.push(d.clone());
+            }
+        }
+        for (s, ev) in &self.outages {
+            if *s < shards {
+                specs[*s].scripted.push(ev.clone());
+            }
+        }
+        for (s, w) in &self.partitions {
+            if *s < shards {
+                specs[*s].partitions.push(*w);
+            }
+        }
+        if self.mtbf > 0.0 {
+            for sp in &mut specs {
+                sp.mtbf = self.mtbf;
+                sp.mttr = self.mttr;
+            }
+        }
+        specs
+    }
+}
+
 impl Default for FedAxis {
     fn default() -> Self {
         FedAxis {
             shards: vec![1],
             routing: vec![RoutingPolicy::RoundRobin],
-            steal: false,
+            steal: vec![StealPolicy::Off],
+            outages: None,
             topology: None,
             shard_faults: Vec::new(),
         }
@@ -305,12 +375,24 @@ impl Default for FedAxis {
 impl FedAxis {
     /// Resolve the concrete [`FedPlan`] of one matrix point: the spec
     /// topology verbatim, or a uniform split of the point's cluster size.
-    fn plan(&self, nodes: usize, shards: usize, routing: RoutingPolicy) -> FedPlan {
+    fn plan(
+        &self,
+        nodes: usize,
+        shards: usize,
+        routing: RoutingPolicy,
+        steal: StealPolicy,
+        outages_on: bool,
+    ) -> FedPlan {
         let shards = match &self.topology {
             Some(t) => t.clone(),
             None => ShardSpec::uniform(nodes, shards),
         };
-        FedPlan { shards, routing, steal: self.steal }
+        let outages = if outages_on {
+            self.outages.as_ref().map(|o| o.specs(shards.len()))
+        } else {
+            None
+        };
+        FedPlan { shards, routing, steal, outages }
     }
 }
 
@@ -322,8 +404,10 @@ pub struct FedPlan {
     pub shards: Vec<ShardSpec>,
     /// Routing policy of this run.
     pub routing: RoutingPolicy,
-    /// Whether cross-shard work stealing is on.
-    pub steal: bool,
+    /// Cross-shard work-stealing policy of this run.
+    pub steal: StealPolicy,
+    /// Per-shard outage specs (`None` = this point runs outage-free).
+    pub outages: Option<Vec<OutageSpec>>,
 }
 
 /// One fully-resolved point of the matrix.
@@ -615,6 +699,10 @@ impl CampaignSpec {
         if let Some(fed) = &federation {
             no_duplicates(&fed.shards, "federation.shards")?;
             no_duplicates(&fed.routing, "federation.routing")?;
+            no_duplicates(&fed.steal, "federation.steal")?;
+            if let Some(out) = &fed.outages {
+                no_duplicates(&out.enabled, "federation.outages.enabled")?;
+            }
         }
 
         Ok(CampaignSpec {
@@ -651,7 +739,12 @@ impl CampaignSpec {
             * self
                 .federation
                 .as_ref()
-                .map(|f| f.shards.len() * f.routing.len())
+                .map(|f| {
+                    f.shards.len()
+                        * f.routing.len()
+                        * f.steal.len()
+                        * f.outages.as_ref().map(|o| o.points()).unwrap_or(1)
+                })
                 .unwrap_or(1)
     }
 
@@ -699,28 +792,53 @@ impl CampaignSpec {
             }
             pts
         };
-        // Federation points as a flat (shard count, routing, scenario
-        // suffix) list — one degenerate point with an empty suffix when
-        // the spec has no [federation] block, so flat campaigns keep
-        // their historical scenario ids.
-        let fed_points: Vec<(usize, RoutingPolicy, String)> = match &self.federation {
-            None => vec![(1, RoutingPolicy::RoundRobin, String::new())],
-            Some(f) => {
-                let mut pts = Vec::new();
-                for &k in &f.shards {
-                    for &r in &f.routing {
-                        pts.push((k, r, format!("-s{k}x{}", r.label())));
-                    }
+        // Federation points as a flat (shard count, routing, steal,
+        // outages-on, scenario suffix) list — one degenerate point with an
+        // empty suffix when the spec has no [federation] block, so flat
+        // campaigns keep their historical scenario ids.  The steal and
+        // outage components suffix the id only when actually swept, so
+        // single-policy campaigns keep their historical ids too.
+        let fed_points: Vec<(usize, RoutingPolicy, StealPolicy, bool, String)> =
+            match &self.federation {
+                None => {
+                    vec![(1, RoutingPolicy::RoundRobin, StealPolicy::Off, false, String::new())]
                 }
-                pts
-            }
-        };
-        for (fed_k, fed_route, fed_suffix) in &fed_points {
+                Some(f) => {
+                    let steal_swept = f.steal.len() > 1;
+                    let outage_axis: Vec<bool> = match &f.outages {
+                        Some(o) => o.enabled.clone(),
+                        None => vec![false],
+                    };
+                    let outage_swept = outage_axis.len() > 1;
+                    let mut pts = Vec::new();
+                    for &k in &f.shards {
+                        for &r in &f.routing {
+                            for &st in &f.steal {
+                                for &out in &outage_axis {
+                                    let mut sfx = format!("-s{k}x{}", r.label());
+                                    if steal_swept {
+                                        sfx.push('x');
+                                        sfx.push_str(st.label());
+                                    }
+                                    if outage_swept && out {
+                                        sfx.push_str("-out");
+                                    }
+                                    pts.push((k, r, st, out, sfx));
+                                }
+                            }
+                        }
+                    }
+                    pts
+                }
+            };
+        for (fed_k, fed_route, fed_steal, fed_out, fed_suffix) in &fed_points {
             for wi in 0..self.workloads.len() {
                 for &nodes in &self.nodes {
                     let federation = match &self.federation {
                         None => None,
-                        Some(f) => Some(f.plan(nodes, *fed_k, *fed_route)),
+                        Some(f) => {
+                            Some(f.plan(nodes, *fed_k, *fed_route, *fed_steal, *fed_out))
+                        }
                     };
                     for &mode in &self.modes {
                         for &strategy in &pol.strategy {
@@ -1149,10 +1267,43 @@ fn parse_federation(f: &Json, nodes: &[usize]) -> Result<FedAxis> {
             pols
         }
     };
+    let parse_steal = |s: &str| {
+        StealPolicy::parse(s)
+            .ok_or_else(|| anyhow!("unknown steal policy {s:?} (expected off | head | half)"))
+    };
     let steal = match f.get("steal") {
         None => d.steal,
-        Some(Json::Bool(b)) => *b,
-        Some(_) => bail!("`federation.steal` must be a boolean"),
+        // Historical boolean form: `true` is the original steal-the-head
+        // behaviour, `false` is off.
+        Some(Json::Bool(b)) => vec![if *b { StealPolicy::Head } else { StealPolicy::Off }],
+        Some(v) => {
+            if let Some(s) = v.as_str() {
+                vec![parse_steal(s)?]
+            } else if let Some(arr) = v.as_arr() {
+                let pols = arr
+                    .iter()
+                    .map(|x| {
+                        let s = x
+                            .as_str()
+                            .context("`federation.steal` entries must be strings")?;
+                        parse_steal(s)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                if pols.is_empty() {
+                    bail!("`federation.steal` must not be empty");
+                }
+                pols
+            } else {
+                bail!(
+                    "`federation.steal` must be a boolean, a policy name, or a list \
+                     of policy names (off | head | half)"
+                );
+            }
+        }
+    };
+    let outages = match f.get("outages") {
+        None => None,
+        Some(o) => Some(parse_outages(o, shards.iter().copied().max().unwrap_or(1))?),
     };
     let mut shard_faults: Vec<ShardFault> = Vec::new();
     if let Some(sf) = f.get("shard_fault") {
@@ -1198,7 +1349,193 @@ fn parse_federation(f: &Json, nodes: &[usize]) -> Result<FedAxis> {
             shard_faults.push(ShardFault { shard, mtbf, mttr });
         }
     }
-    Ok(FedAxis { shards, routing, steal, topology, shard_faults })
+    Ok(FedAxis { shards, routing, steal, outages, topology, shard_faults })
+}
+
+/// Parse the `[federation.outages]` block (see `scenarios/README.md` for
+/// the schema and `scenarios/shard_outage.toml` for a worked example).
+/// `max_shards` is the largest swept shard count: an entry targeting a
+/// shard at or beyond it could never fire in any scenario, so it is
+/// rejected as a spec typo (indices valid only for *some* layouts are
+/// allowed — [`OutageAxis::specs`] drops them on smaller layouts).
+fn parse_outages(o: &Json, max_shards: usize) -> Result<OutageAxis> {
+    let enabled = match o.get("enabled") {
+        None => vec![true],
+        Some(Json::Bool(b)) => vec![*b],
+        Some(v) => {
+            let arr = v.as_arr().context(
+                "`federation.outages.enabled` must be a boolean or a boolean list",
+            )?;
+            let mut e = Vec::new();
+            for x in arr {
+                match x {
+                    Json::Bool(b) => e.push(*b),
+                    _ => bail!("`federation.outages.enabled` entries must be booleans"),
+                }
+            }
+            if e.is_empty() {
+                bail!("`federation.outages.enabled` must not be empty");
+            }
+            e
+        }
+    };
+    let mtbf = match o.get("mtbf") {
+        None => 0.0,
+        Some(x) => x.as_f64().context("`federation.outages.mtbf` must be a number")?,
+    };
+    if !(mtbf.is_finite() && mtbf >= 0.0) {
+        bail!("`federation.outages.mtbf` must be non-negative");
+    }
+    let mttr = match o.get("mttr") {
+        None => 0.0,
+        Some(x) => x.as_f64().context("`federation.outages.mttr` must be a number")?,
+    };
+    if !(mttr.is_finite() && mttr >= 0.0) {
+        bail!("`federation.outages.mttr` must be non-negative");
+    }
+    if mtbf > 0.0 && mttr <= 0.0 {
+        bail!("`federation.outages.mttr` must be positive when `mtbf` is set");
+    }
+
+    let shard_of = |t: &Json, what: &str| -> Result<usize> {
+        let s = usize_scalar(t.get("shard"), &format!("{what}.shard"))?;
+        if s >= max_shards {
+            bail!(
+                "{what}: shard {s} does not exist in any swept layout \
+                 (largest shard count is {max_shards})"
+            );
+        }
+        Ok(s)
+    };
+
+    let mut domains: Vec<(usize, FailureDomain)> = Vec::new();
+    if let Some(ds) = o.get("domain") {
+        for (i, dv) in ds
+            .as_arr()
+            .context("`[[federation.outages.domain]]` must be an array of tables")?
+            .iter()
+            .enumerate()
+        {
+            let what = format!("federation.outages.domain[{i}]");
+            let shard = shard_of(dv, &what)?;
+            let name = dv
+                .get("name")
+                .and_then(|x| x.as_str())
+                .with_context(|| format!("{what} needs a string `name`"))?
+                .to_string();
+            if name.is_empty() || name == "shard" || name == "all" {
+                bail!("{what}: name {name:?} is reserved for the whole-shard domain");
+            }
+            if domains.iter().any(|(s, d)| *s == shard && d.name == name) {
+                bail!("{what}: domain {name:?} listed more than once for shard {shard}");
+            }
+            let nodes = match dv.get("nodes") {
+                Some(n @ Json::Num(_)) => {
+                    DrainSet::Count(usize_scalar(Some(n), &format!("{what}.nodes"))?)
+                }
+                Some(arr @ Json::Arr(_)) => {
+                    let ids = usize_list(Some(arr), &format!("{what}.nodes"))?
+                        .unwrap_or_default();
+                    if ids.is_empty() {
+                        bail!("{what}: `nodes` list must not be empty");
+                    }
+                    DrainSet::Nodes(ids)
+                }
+                _ => bail!("{what} needs `nodes` (a count or a node-id list)"),
+            };
+            domains.push((shard, FailureDomain { name, nodes }));
+        }
+    }
+
+    let mut outages: Vec<(usize, OutageEvent)> = Vec::new();
+    if let Some(evs) = o.get("outage") {
+        for (i, ev) in evs
+            .as_arr()
+            .context("`[[federation.outages.outage]]` must be an array of tables")?
+            .iter()
+            .enumerate()
+        {
+            let what = format!("federation.outages.outage[{i}]");
+            let shard = shard_of(ev, &what)?;
+            let at = ev
+                .get("at")
+                .and_then(|x| x.as_f64())
+                .with_context(|| format!("{what} needs a number `at`"))?;
+            if !(at.is_finite() && at >= 0.0) {
+                bail!("{what}: `at` must be non-negative");
+            }
+            let duration = ev
+                .get("for")
+                .and_then(|x| x.as_f64())
+                .with_context(|| format!("{what} needs a number `for` (outage duration)"))?;
+            if !(duration.is_finite() && duration > 0.0) {
+                bail!("{what}: `for` must be positive");
+            }
+            let domain = match ev.get("domain") {
+                None => String::new(),
+                Some(x) => x
+                    .as_str()
+                    .with_context(|| format!("{what}: `domain` must be a string"))?
+                    .to_string(),
+            };
+            let whole_shard = domain.is_empty() || domain == "shard" || domain == "all";
+            if !whole_shard
+                && !domains.iter().any(|(s, d)| *s == shard && d.name == domain)
+            {
+                bail!(
+                    "{what}: domain {domain:?} is not declared for shard {shard} \
+                     (add a [[federation.outages.domain]] entry)"
+                );
+            }
+            outages.push((shard, OutageEvent { domain, at, duration }));
+        }
+    }
+
+    let mut partitions: Vec<(usize, PartitionWindow)> = Vec::new();
+    if let Some(ws) = o.get("partition") {
+        for (i, w) in ws
+            .as_arr()
+            .context("`[[federation.outages.partition]]` must be an array of tables")?
+            .iter()
+            .enumerate()
+        {
+            let what = format!("federation.outages.partition[{i}]");
+            let shard = shard_of(w, &what)?;
+            let start = w
+                .get("at")
+                .or_else(|| w.get("start"))
+                .and_then(|x| x.as_f64())
+                .with_context(|| format!("{what} needs a number `at` (or `start`)"))?;
+            let end = match w.get("for") {
+                Some(x) => {
+                    let dur = x
+                        .as_f64()
+                        .with_context(|| format!("{what}: `for` must be a number"))?;
+                    if !(dur.is_finite() && dur > 0.0) {
+                        bail!("{what}: `for` must be positive");
+                    }
+                    start + dur
+                }
+                None => w
+                    .get("end")
+                    .and_then(|x| x.as_f64())
+                    .with_context(|| format!("{what} needs `for` (duration) or `end`"))?,
+            };
+            if !(start.is_finite() && start >= 0.0 && end > start) {
+                bail!("{what}: need 0 <= start < end");
+            }
+            partitions.push((shard, PartitionWindow { start, end }));
+        }
+    }
+
+    if mtbf == 0.0 && outages.is_empty() && partitions.is_empty() {
+        bail!(
+            "`[federation.outages]` needs at least one outage source: scripted \
+             [[federation.outages.outage]] / [[federation.outages.partition]] \
+             tables or `mtbf > 0`"
+        );
+    }
+    Ok(OutageAxis { enabled, domains, outages, partitions, mtbf, mttr })
 }
 
 /// Parse the `[stream]` block (see `scenarios/README.md` for the schema).
@@ -1728,7 +2065,8 @@ jobs = 6
             fed.routing,
             vec![RoutingPolicy::RoundRobin, RoutingPolicy::LeastLoaded]
         );
-        assert!(fed.steal);
+        assert_eq!(fed.steal, vec![StealPolicy::Head], "boolean form maps to head");
+        assert!(fed.outages.is_none());
         assert!(fed.topology.is_none());
         assert_eq!(s.matrix_size(), 2 * 2 * 2);
         let plans = s.expand();
@@ -1744,7 +2082,8 @@ jobs = 6
         assert_eq!(f.shards.len(), 4);
         assert!(f.shards.iter().all(|sh| sh.nodes == 16));
         assert_eq!(f.routing, RoutingPolicy::RoundRobin);
-        assert!(f.steal);
+        assert_eq!(f.steal, StealPolicy::Head);
+        assert!(f.outages.is_none());
 
         // no [federation] block -> flat plans, historical scenario ids
         let plain = CampaignSpec::from_toml_str(
@@ -1791,12 +2130,150 @@ jobs = 4
             "[federation]\nrouting = [\"warp\"]\n",
             "[federation]\nrouting = [\"rr\", \"rr\"]\n", // duplicate
             "[federation]\nsteal = 1\n",
+            "[federation]\nsteal = \"warp\"\n",           // unknown policy
+            "[federation]\nsteal = []\n",
+            "[federation]\nsteal = [\"head\", \"head\"]\n", // duplicate
             "[federation]\ntopology = [\"32\"]\n",        // sum != 64
             "[federation]\ntopology = [\"32:0\"]\n",      // bad speed
             "[federation]\nshards = [2]\ntopology = [\"32\", \"32\"]\n", // exclusive
         ] {
             let doc = format!("{base}{fed}");
             assert!(CampaignSpec::from_toml_str(&doc).is_err(), "accepted: {fed}");
+        }
+    }
+
+    #[test]
+    fn steal_axis_sweeps_and_suffixes() {
+        let toml = r#"
+name = "steal"
+nodes = [64]
+modes = ["sync"]
+seeds = [1]
+[federation]
+shards = [2]
+routing = ["rr"]
+steal = ["off", "head", "half"]
+[[workload]]
+kind = "feitelson"
+jobs = 4
+"#;
+        let s = CampaignSpec::from_toml_str(toml).unwrap();
+        let fed = s.federation.as_ref().unwrap();
+        assert_eq!(
+            fed.steal,
+            vec![StealPolicy::Off, StealPolicy::Head, StealPolicy::Half]
+        );
+        assert_eq!(s.matrix_size(), 3);
+        let plans = s.expand();
+        assert_eq!(plans[0].scenario, "feitelson4-n64-sync-s2xrrxoff");
+        assert_eq!(plans[1].scenario, "feitelson4-n64-sync-s2xrrxhead");
+        assert_eq!(plans[2].scenario, "feitelson4-n64-sync-s2xrrxhalf");
+        assert_eq!(plans[2].federation.as_ref().unwrap().steal, StealPolicy::Half);
+
+        // A single-policy axis keeps the historical un-suffixed ids.
+        let one = toml.replace("steal = [\"off\", \"head\", \"half\"]", "steal = \"half\"");
+        let s1 = CampaignSpec::from_toml_str(&one).unwrap();
+        let p1 = s1.expand();
+        assert_eq!(p1[0].scenario, "feitelson4-n64-sync-s2xrr");
+        assert_eq!(p1[0].federation.as_ref().unwrap().steal, StealPolicy::Half);
+    }
+
+    #[test]
+    fn outage_axis_parses_and_expands() {
+        let toml = r#"
+name = "out"
+nodes = [64]
+modes = ["sync"]
+seeds = [1]
+[federation]
+shards = [2]
+routing = ["rr"]
+[federation.outages]
+enabled = [false, true]
+[[federation.outages.domain]]
+shard = 0
+name = "rackA"
+nodes = [0, 1, 2, 3]
+[[federation.outages.outage]]
+shard = 0
+domain = "rackA"
+at = 100.0
+for = 50.0
+[[federation.outages.outage]]
+shard = 1
+at = 200.0
+for = 25.0
+[[federation.outages.partition]]
+shard = 1
+at = 400.0
+for = 100.0
+[[workload]]
+kind = "feitelson"
+jobs = 4
+"#;
+        let s = CampaignSpec::from_toml_str(toml).unwrap();
+        let fed = s.federation.as_ref().unwrap();
+        let out = fed.outages.as_ref().unwrap();
+        assert_eq!(out.enabled, vec![false, true]);
+        assert_eq!(out.domains.len(), 1);
+        assert_eq!(out.outages.len(), 2);
+        assert_eq!(out.partitions.len(), 1);
+        assert_eq!(s.matrix_size(), 2);
+
+        let plans = s.expand();
+        assert_eq!(plans[0].scenario, "feitelson4-n64-sync-s2xrr");
+        assert_eq!(plans[1].scenario, "feitelson4-n64-sync-s2xrr-out");
+        assert!(plans[0].federation.as_ref().unwrap().outages.is_none());
+        let specs = plans[1].federation.as_ref().unwrap().outages.as_ref().unwrap();
+        assert_eq!(specs.len(), 2);
+        assert!(specs[0].is_active() && specs[1].is_active());
+        assert_eq!(specs[0].domains.len(), 1);
+        assert_eq!(specs[0].domains[0].name, "rackA");
+        assert_eq!(specs[0].scripted.len(), 1);
+        assert_eq!(specs[1].scripted[0].domain, "");
+        assert_eq!(specs[1].partitions[0].end, 500.0);
+
+        // enabled defaults to [true]: no sweep, no -out suffix, specs set.
+        let always = toml.replace("enabled = [false, true]\n", "");
+        let sa = CampaignSpec::from_toml_str(&always).unwrap();
+        assert_eq!(sa.matrix_size(), 1);
+        let pa = sa.expand();
+        assert_eq!(pa[0].scenario, "feitelson4-n64-sync-s2xrr");
+        assert!(pa[0].federation.as_ref().unwrap().outages.is_some());
+    }
+
+    #[test]
+    fn bad_outage_specs_rejected() {
+        let base = "name = \"x\"\n[[workload]]\nkind = \"feitelson\"\njobs = 1\n\
+                    [federation]\nshards = [2]\n";
+        for out in [
+            // no outage source at all
+            "[federation.outages]\nenabled = [true]\n",
+            // duplicate enabled entries
+            "[federation.outages]\nenabled = [true, true]\nmtbf = 1e4\nmttr = 600\n",
+            "[federation.outages]\nenabled = []\nmtbf = 1e4\nmttr = 600\n",
+            "[federation.outages]\nenabled = [1]\nmtbf = 1e4\nmttr = 600\n",
+            // mtbf without mttr
+            "[federation.outages]\nmtbf = 1e4\n",
+            "[federation.outages]\nmtbf = -1.0\nmttr = 600\n",
+            // shard beyond every swept layout
+            "[[federation.outages.outage]]\nshard = 5\nat = 1.0\nfor = 1.0\n",
+            // missing / bad fields
+            "[[federation.outages.outage]]\nshard = 0\nfor = 1.0\n",
+            "[[federation.outages.outage]]\nshard = 0\nat = 1.0\n",
+            "[[federation.outages.outage]]\nshard = 0\nat = -1.0\nfor = 1.0\n",
+            "[[federation.outages.outage]]\nshard = 0\nat = 1.0\nfor = 0.0\n",
+            // outage naming an undeclared domain
+            "[[federation.outages.outage]]\nshard = 0\nat = 1.0\nfor = 1.0\ndomain = \"rackZ\"\n",
+            // reserved / duplicate / empty domain declarations
+            "[[federation.outages.domain]]\nshard = 0\nname = \"all\"\nnodes = 2\n",
+            "[[federation.outages.domain]]\nshard = 0\nname = \"a\"\nnodes = []\n",
+            // partition with end before start
+            "[[federation.outages.partition]]\nshard = 0\nat = 5.0\nend = 2.0\n",
+            "[[federation.outages.partition]]\nshard = 0\nat = 5.0\nfor = -1.0\n",
+        ] {
+            let doc = format!("{base}{out}");
+            assert!(CampaignSpec::from_toml_str(&doc).is_err(), "accepted: {out}");
         }
     }
 

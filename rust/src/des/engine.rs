@@ -63,12 +63,12 @@ use super::sched_cost::CostModel;
 use crate::cluster::NodeState;
 use crate::dmr::{Inhibitor, SchedMode};
 use crate::obs::{Phase, PhaseProfile};
-use crate::federation::{FedRunResult, FederationConfig, RoutingPolicy, ShardRun};
+use crate::federation::{FedRunResult, FederationConfig, RoutingPolicy, ShardRun, StealPolicy};
 use crate::resilience::{
-    feasible_shrink, resize, FaultKind, FaultSpec, ResilienceConfig, ResilienceStats,
-    ResizeFaultSpec,
+    feasible_shrink, resize, FaultKind, FaultSpec, OutageSpec, ResilienceConfig,
+    ResilienceStats, ResizeFaultSpec,
 };
-use crate::rms::{Action, DmrOutcome, DmrRequest, Rms, RmsConfig};
+use crate::rms::{Action, DmrOutcome, DmrRequest, PolicyStrategy, Rms, RmsConfig};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::workload::{fit_spec, JobSpec, JobStream, Materialized, WorkloadSpec};
@@ -172,6 +172,18 @@ enum EvKind {
     DrainEnd(usize),
     /// A rescued job finished its post-failure redistribution and resumes.
     Resume,
+    /// A correlated outage on failure domain `dom` of the event's shard
+    /// starts (`dom` indexes [`Shard::domain_nodes`]; 0 is the implicit
+    /// whole shard).  `auto` outages belong to the domain-MTBF chain and
+    /// schedule their own end + next outage.
+    OutageStart { dom: usize, auto: bool },
+    /// The matching outage ends: the domain's nodes repair (subject to
+    /// nesting with node faults and drains).
+    OutageEnd { dom: usize },
+    /// A network partition isolates the event's shard: it keeps running
+    /// local work but routing and stealing skip it until the window ends.
+    PartitionStart,
+    PartitionEnd,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -338,9 +350,36 @@ struct Shard {
     fault_rng: Rng,
     /// This shard's fault sources (MTBF scaled by the shard spec).
     faults: FaultSpec,
-    /// Whether any fault source is configured; `false` keeps the
-    /// fault-free hot path free of checkpoint bookkeeping.
+    /// Whether any fault source is configured.
     faults_active: bool,
+    /// This shard's correlated-outage sources (failure domains, scripted
+    /// outages/partitions, domain-MTBF sampling).
+    outages: OutageSpec,
+    /// Dedicated RNG for the domain-outage chains — its own salted stream
+    /// ([`OutageSpec::rng`]), so enabling outages perturbs neither the
+    /// cost jitter nor the per-node fault timeline.
+    outage_rng: Rng,
+    /// Whether the outage spec injects anything; `false` keeps every
+    /// outage structure empty and the event stream byte-identical to an
+    /// outage-free build.
+    outages_active: bool,
+    /// Whether checkpoint bookkeeping is needed at all: node faults *or*
+    /// outages can interrupt work on this shard.  `false` keeps the
+    /// fault-free hot path free of it.
+    ckpt_active: bool,
+    /// Resolved node lists per failure domain.  Index 0 is always the
+    /// implicit whole-shard domain; explicit domains follow in spec
+    /// order.  Empty when outages are inactive.
+    domain_nodes: Vec<Vec<NodeId>>,
+    /// Outages currently dark on this shard.  Routing, stealing and
+    /// evacuation skip the shard while this is nonzero.
+    outage_depth: u32,
+    /// Partition windows currently isolating this shard (reachability
+    /// only — local execution continues).
+    partition_depth: u32,
+    /// Jobs evacuated into / out of this shard during outages.
+    evac_in: u64,
+    evac_out: u64,
     /// Resize-transaction fault injection + retry policy.
     resize_faults: ResizeFaultSpec,
     /// Dedicated RNG for transaction fault draws — its own stream, so an
@@ -389,21 +428,52 @@ struct Shard {
 }
 
 impl Shard {
-    fn new(id: usize, nodes: usize, speed: f64, faults: FaultSpec, cfg: &DesConfig) -> Self {
+    fn new(
+        id: usize,
+        nodes: usize,
+        speed: f64,
+        faults: FaultSpec,
+        strategy: Option<PolicyStrategy>,
+        outages: OutageSpec,
+        cfg: &DesConfig,
+    ) -> Self {
         let mut rms_cfg = cfg.rms.clone();
         rms_cfg.nodes = nodes;
+        if let Some(st) = strategy {
+            // Per-shard policy override (`nodes:speed:mtbf:strategy` in
+            // the topology string); `None` inherits the global strategy.
+            rms_cfg.strategy = st;
+        }
         let salt = shard_salt(id);
         let faults_active = faults.is_active();
         let drain_nodes = faults.drains.iter().map(|w| w.nodes.node_ids(nodes)).collect();
         let resize_faults = cfg.resilience.resize_faults.clone();
         let resize_rng = resize_faults.rng(cfg.seed ^ salt);
         let resize_active = resize_faults.is_active();
+        let outages_active = outages.is_active();
+        let outage_rng = outages.rng(cfg.seed ^ salt);
+        let mut domain_nodes: Vec<Vec<NodeId>> = Vec::new();
+        if outages_active {
+            domain_nodes.push((0..nodes).collect());
+            for d in &outages.domains {
+                domain_nodes.push(d.nodes.node_ids(nodes));
+            }
+        }
         Shard {
             rms: Rms::new(rms_cfg),
             rng: Rng::new(cfg.seed ^ salt),
             fault_rng: faults.rng(cfg.seed ^ salt),
             faults,
             faults_active,
+            outages,
+            outage_rng,
+            outages_active,
+            ckpt_active: faults_active || outages_active,
+            domain_nodes,
+            outage_depth: 0,
+            partition_depth: 0,
+            evac_in: 0,
+            evac_out: 0,
             resize_faults,
             resize_rng,
             resize_active,
@@ -461,6 +531,24 @@ impl Shard {
         self.slot_of[idx] = NO_SLOT;
         self.free_slots.push(slot);
     }
+
+    /// Resolve a scripted outage's domain name to its
+    /// [`Shard::domain_nodes`] index (`""`/`"shard"`/`"all"` name the
+    /// implicit whole-shard domain).  Unknown names resolve to `None` —
+    /// the campaign parser validates them; the engine just skips.
+    fn resolve_domain(&self, name: &str) -> Option<usize> {
+        match name {
+            "" | "shard" | "all" => Some(0),
+            n => self.outages.domains.iter().position(|d| d.name == n).map(|i| i + 1),
+        }
+    }
+
+    /// Whether the meta-scheduler may send work here: not dark, not
+    /// partitioned.  Always `true` when outages are inactive (both depths
+    /// stay 0), so the outage-free paths are untouched.
+    fn reachable(&self) -> bool {
+        self.outage_depth == 0 && self.partition_depth == 0
+    }
 }
 
 /// The engine.
@@ -469,7 +557,7 @@ pub struct Engine {
     /// The shard vector; the flat engine is exactly `shards.len() == 1`.
     shards: Vec<Shard>,
     routing: RoutingPolicy,
-    steal: bool,
+    steal: StealPolicy,
     /// Round-robin routing cursor.
     rr_next: usize,
     heap: BinaryHeap<Reverse<Ev>>,
@@ -490,8 +578,16 @@ impl Engine {
     /// Build a flat (1-shard) engine — fresh RMS + seeded RNG streams —
     /// for one run.
     pub fn new(cfg: DesConfig) -> Self {
-        let shard = Shard::new(0, cfg.rms.nodes, 1.0, cfg.resilience.faults.clone(), &cfg);
-        Engine::with_shards(cfg, vec![shard], RoutingPolicy::RoundRobin, false)
+        let shard = Shard::new(
+            0,
+            cfg.rms.nodes,
+            1.0,
+            cfg.resilience.faults.clone(),
+            None,
+            OutageSpec::default(),
+            &cfg,
+        );
+        Engine::with_shards(cfg, vec![shard], RoutingPolicy::RoundRobin, StealPolicy::Off)
     }
 
     /// Build a federated engine: one shard per [`FederationConfig`]
@@ -510,7 +606,13 @@ impl Engine {
                         f
                     }
                 };
-                Shard::new(i, s.nodes, s.speed, faults, &cfg)
+                let outages = fed
+                    .outages
+                    .as_ref()
+                    .and_then(|v| v.get(i))
+                    .cloned()
+                    .unwrap_or_default();
+                Shard::new(i, s.nodes, s.speed, faults, s.strategy, outages, &cfg)
             })
             .collect();
         Engine::with_shards(cfg, shards, fed.routing, fed.steal)
@@ -520,7 +622,7 @@ impl Engine {
         cfg: DesConfig,
         shards: Vec<Shard>,
         routing: RoutingPolicy,
-        steal: bool,
+        steal: StealPolicy,
     ) -> Self {
         Engine {
             cfg,
@@ -637,6 +739,7 @@ impl Engine {
             merged.interrupted += sh.stats.interrupted;
             merged.rescued += sh.stats.rescued;
             merged.requeued += sh.stats.requeued;
+            merged.evacuated += sh.stats.evacuated;
             merged.rework_time += sh.stats.rework_time;
             merged.resize_attempts += sh.stats.resize_attempts;
             merged.resize_aborts += sh.stats.resize_aborts;
@@ -661,6 +764,8 @@ impl Engine {
                 steals_in: sh.steals_in,
                 steals_out: sh.steals_out,
                 routed: sh.routed,
+                evac_in: sh.evac_in,
+                evac_out: sh.evac_out,
                 rms: sh.rms,
             })
             .collect();
@@ -730,7 +835,7 @@ impl Engine {
         const STUCK_EVENTS: u64 = 5_000_000;
         let mut last_done_at: u64 = 0;
         let mut last_done: usize = 0;
-        let steal_on = self.steal && self.shards.len() > 1;
+        let steal_on = self.steal.enabled() && self.shards.len() > 1;
 
         while let Some(Reverse(ev)) = self.heap.pop() {
             debug_assert!(ev.t >= self.now - 1e-9, "time went backwards");
@@ -784,6 +889,10 @@ impl Engine {
                 EvKind::DrainStart(w) => self.on_drain_start(ev.shard, w),
                 EvKind::DrainEnd(w) => self.on_drain_end(ev.shard, w),
                 EvKind::Resume => self.on_resume(ev),
+                EvKind::OutageStart { dom, auto } => self.on_outage_start(ev.shard, dom, auto),
+                EvKind::OutageEnd { dom } => self.on_outage_end(ev.shard, dom),
+                EvKind::PartitionStart => self.on_partition_start(ev.shard),
+                EvKind::PartitionEnd => self.on_partition_end(ev.shard),
             }
             if steal_on {
                 self.try_steal();
@@ -813,27 +922,55 @@ impl Engine {
     fn seed_fault_events(&mut self) {
         for s in 0..self.shards.len() {
             let faults = self.shards[s].faults.clone();
-            if !faults.is_active() {
-                continue;
-            }
-            let total = self.shards[s].rms.cluster.total();
-            for ev in &faults.scripted {
-                if ev.node >= total {
-                    continue;
+            if faults.is_active() {
+                let total = self.shards[s].rms.cluster.total();
+                for ev in &faults.scripted {
+                    if ev.node >= total {
+                        continue;
+                    }
+                    let kind = match ev.kind {
+                        FaultKind::Fail => EvKind::NodeFail { node: ev.node, auto: false },
+                        FaultKind::Repair => EvKind::NodeRepair { node: ev.node },
+                    };
+                    self.push(ev.at, s, 0, 0, kind);
                 }
-                let kind = match ev.kind {
-                    FaultKind::Fail => EvKind::NodeFail { node: ev.node, auto: false },
-                    FaultKind::Repair => EvKind::NodeRepair { node: ev.node },
-                };
-                self.push(ev.at, s, 0, 0, kind);
+                for (i, w) in faults.drains.iter().enumerate() {
+                    self.push(w.start, s, 0, 0, EvKind::DrainStart(i));
+                    self.push(w.end, s, 0, 0, EvKind::DrainEnd(i));
+                }
+                let init = faults.initial_failures(total, &mut self.shards[s].fault_rng);
+                for (node, at) in init {
+                    self.push(at, s, 0, 0, EvKind::NodeFail { node, auto: true });
+                }
             }
-            for (i, w) in faults.drains.iter().enumerate() {
-                self.push(w.start, s, 0, 0, EvKind::DrainStart(i));
-                self.push(w.end, s, 0, 0, EvKind::DrainEnd(i));
-            }
-            let init = faults.initial_failures(total, &mut self.shards[s].fault_rng);
-            for (node, at) in init {
-                self.push(at, s, 0, 0, EvKind::NodeFail { node, auto: true });
+            let outages = self.shards[s].outages.clone();
+            if outages.is_active() {
+                // Scripted correlated outages + partition windows, then
+                // (when domain-MTBF sampling is on) each sampled domain's
+                // first outage — draws in domain order, like the per-node
+                // fault seeding above.
+                for ev in &outages.scripted {
+                    let Some(dom) = self.shards[s].resolve_domain(&ev.domain) else {
+                        continue;
+                    };
+                    self.push(ev.at, s, 0, 0, EvKind::OutageStart { dom, auto: false });
+                    self.push(ev.at + ev.duration, s, 0, 0, EvKind::OutageEnd { dom });
+                }
+                for w in &outages.partitions {
+                    self.push(w.start, s, 0, 0, EvKind::PartitionStart);
+                    self.push(w.end, s, 0, 0, EvKind::PartitionEnd);
+                }
+                if outages.mtbf > 0.0 {
+                    let sampled =
+                        if outages.domains.is_empty() { 1 } else { outages.domains.len() };
+                    let init = outages.initial_outages(sampled, &mut self.shards[s].outage_rng);
+                    for (d, at) in init {
+                        // Sampled domains are the explicit ones (indices
+                        // 1..) or, with none declared, the whole shard (0).
+                        let dom = if outages.domains.is_empty() { 0 } else { d + 1 };
+                        self.push(at, s, 0, 0, EvKind::OutageStart { dom, auto: true });
+                    }
+                }
             }
         }
     }
@@ -843,14 +980,16 @@ impl Engine {
 
     /// Pick the shard for an arriving job (trivially shard 0 on the flat
     /// path).  Shards whose whole pool is smaller than the job's
-    /// `min_procs` are skipped; if none qualifies the largest shard takes
-    /// the job (the per-shard `fit_spec` clamp keeps it placeable).
+    /// `min_procs` — or that are currently dark or partitioned — are
+    /// skipped; if none qualifies the largest shard takes the job (the
+    /// per-shard `fit_spec` clamp keeps it placeable; an unreachable
+    /// fallback shard just queues it until recovery).
     fn route(&mut self, spec: &JobSpec) -> usize {
         let k = self.shards.len();
         if k == 1 {
             return 0;
         }
-        let placeable = |sh: &Shard| spec.min_procs <= sh.rms.cluster.total();
+        let placeable = |sh: &Shard| sh.reachable() && spec.min_procs <= sh.rms.cluster.total();
         let pick = match self.routing {
             RoutingPolicy::RoundRobin => {
                 let mut pick = None;
@@ -900,21 +1039,22 @@ impl Engine {
 
     /// One steal attempt (invoked after every processed event when
     /// stealing is on): the lowest-id *drained* shard (no pending user
-    /// jobs, free nodes) takes the lowest-priority fitting job from the
-    /// most-backlogged shard.  The stolen job re-submits through the
-    /// thief's normal clamp/priority path with its original submission
-    /// time, so aging carries over; any checkpoint state stays behind
-    /// (a restart on the thief is the conservative model of a
+    /// jobs, free nodes) takes pending work from the most-backlogged
+    /// shard — the head job under [`StealPolicy::Head`], up to half the
+    /// victim's backlog under [`StealPolicy::Half`].  Dark or partitioned
+    /// shards participate on neither side.  Each stolen job re-submits
+    /// through the thief's normal clamp/priority path with its original
+    /// submission time, so aging carries over; any checkpoint state stays
+    /// behind (a restart on the thief is the conservative model of a
     /// cross-cluster migration).
     fn try_steal(&mut self) {
-        let thief = self
-            .shards
-            .iter()
-            .position(|sh| sh.rms.pending_user_jobs() == 0 && sh.rms.cluster.available() > 0);
+        let thief = self.shards.iter().position(|sh| {
+            sh.reachable() && sh.rms.pending_user_jobs() == 0 && sh.rms.cluster.available() > 0
+        });
         let Some(t) = thief else { return };
         let mut victim: Option<(usize, usize)> = None;
         for (i, sh) in self.shards.iter().enumerate() {
-            if i == t {
+            if i == t || !sh.reachable() {
                 continue;
             }
             let p = sh.rms.pending_user_jobs();
@@ -925,20 +1065,39 @@ impl Engine {
                 victim = Some((i, p));
             }
         }
-        let Some((v, _)) = victim else { return };
-        let free = self.shards[t].rms.cluster.available();
-        let now = self.now;
-        let Some(cand) = self.shards[v].rms.steal_candidate(free, now) else { return };
-        let Some((mut spec, submitted)) = self.shards[v].rms.withdraw(cand, now) else {
-            return;
+        let Some((v, backlog)) = victim else { return };
+        let budget = match self.steal {
+            StealPolicy::Off => return,
+            StealPolicy::Head => 1,
+            // Half the backlog, rounded up — the classic work-stealing
+            // split, amortizing the per-steal protocol cost.
+            StealPolicy::Half => (backlog + 1) / 2,
         };
-        self.shards[v].steals_out += 1;
-        fit_spec(&mut spec, self.shards[t].rms.cluster.total());
-        let est = self.cfg.exec.exec_time(&spec, spec.procs) * self.shards[t].inv_speed;
-        let id = self.shards[t].rms.submit(spec, submitted);
-        self.shards[t].rms.set_expected_end(id, now + est);
-        self.shards[t].steals_in += 1;
-        self.try_schedule(t);
+        let now = self.now;
+        let mut stole = 0usize;
+        for _ in 0..budget {
+            let free = self.shards[t].rms.cluster.available();
+            if free == 0 {
+                break;
+            }
+            let Some(cand) = self.shards[v].rms.steal_candidate(free, now) else { break };
+            let Some((mut spec, submitted)) = self.shards[v].rms.withdraw(cand, now) else {
+                break;
+            };
+            self.shards[v].steals_out += 1;
+            fit_spec(&mut spec, self.shards[t].rms.cluster.total());
+            let est = self.cfg.exec.exec_time(&spec, spec.procs) * self.shards[t].inv_speed;
+            let id = self.shards[t].rms.submit(spec, submitted);
+            self.shards[t].rms.set_expected_end(id, now + est);
+            self.shards[t].steals_in += 1;
+            stole += 1;
+        }
+        // Schedule only when something moved: a fruitless attempt must
+        // leave the thief's pass counters untouched (bit-compatibility
+        // with the single-steal engine).
+        if stole > 0 {
+            self.try_schedule(t);
+        }
     }
 
     // ------------------------------------------------------------------
@@ -1054,8 +1213,9 @@ impl Engine {
     }
 
     fn progress(&mut self, s: usize, slot: usize) {
-        // Checkpoint bookkeeping only matters when something can fail.
-        let ckpt = if self.shards[s].faults_active {
+        // Checkpoint bookkeeping only matters when something can fail —
+        // a node fault or a correlated outage.
+        let ckpt = if self.shards[s].ckpt_active {
             self.cfg.resilience.recovery.checkpoint_interval
         } else {
             0.0
@@ -1437,7 +1597,7 @@ impl Engine {
         // before the victim lookup.
         self.drain_started(s);
         if let Some(victim) = self.shards[s].rms.fail_node(node, self.now) {
-            self.on_job_hit(s, victim.job, victim.survivors);
+            self.on_job_hit(s, victim.job, victim.survivors, false);
         }
     }
 
@@ -1486,11 +1646,122 @@ impl Engine {
         }
     }
 
-    /// A failure took one of `job`'s nodes on shard `s`.  Roll the job
-    /// back to its last checkpoint, then either shrink it onto a
-    /// factor-reachable count of surviving nodes (malleable rescue) or
-    /// kill and requeue it.
-    fn on_job_hit(&mut self, s: usize, job: JobId, survivors: usize) {
+    // ------------------------------------------------------------------
+    // Correlated outages + partitions (shard-level failure domains)
+
+    /// A correlated outage takes failure domain `dom` of shard `s` dark:
+    /// every domain node force-downs atomically (nesting with node faults
+    /// and drains via `fail_depth`), then each interrupted job is
+    /// recovered exactly once — rescue-shrink first, cross-shard
+    /// evacuation second, local kill + requeue last.
+    fn on_outage_start(&mut self, s: usize, dom: usize, auto: bool) {
+        // Keep the per-domain outage cycle alive *first* (mirroring
+        // `on_node_fail`): duration and next-outage delays are drawn from
+        // the dedicated domain stream unconditionally, so each shard's
+        // outage timeline is a pure function of (spec, seed, shard id) —
+        // identical across scheduling modes and routing policies.
+        if auto {
+            let sh = &mut self.shards[s];
+            let (duration, next_after) = sh.outages.next_cycle(&mut sh.outage_rng);
+            let up_at = self.now + duration;
+            self.push(up_at, s, 0, 0, EvKind::OutageEnd { dom });
+            self.push(up_at + next_after, s, 0, 0, EvKind::OutageStart { dom, auto: true });
+        }
+        self.shards[s].outage_depth += 1;
+        self.shards[s]
+            .rms
+            .log
+            .push(crate::rms::RmsEvent::ShardDown { domain: dom, time: self.now });
+        // Materialize sims before force-downing, so every active victim
+        // has its slab slot (checkpoint state) at the recovery loop.
+        self.drain_started(s);
+        let nodes = self.shards[s].domain_nodes.get(dom).cloned().unwrap_or_default();
+        let mut victims: Vec<JobId> = Vec::new();
+        for &n in &nodes {
+            // Each downed node counts as a hardware failure, like
+            // `on_node_fail` — the ShardDown marker records the
+            // correlation on top, not instead.
+            self.shards[s].stats.node_failures += 1;
+            self.shards[s].fail_depth[n] += 1;
+            if matches!(self.shards[s].rms.cluster.state(n), NodeState::Down) {
+                self.shards[s]
+                    .rms
+                    .log
+                    .push(crate::rms::RmsEvent::NodeFailed { node: n, time: self.now });
+                continue;
+            }
+            if let Some(victim) = self.shards[s].rms.fail_node(n, self.now) {
+                if !victims.contains(&victim.job) {
+                    victims.push(victim.job);
+                }
+            }
+        }
+        // Recover each victim once, with its survivor count re-read
+        // after *all* domain nodes went down — a job spanning several of
+        // them is rolled back and rerouted exactly once.
+        for job in victims {
+            let survivors = self.shards[s].rms.job(job).map_or(0, |j| j.procs());
+            self.on_job_hit(s, job, survivors, true);
+        }
+        self.try_schedule(s);
+    }
+
+    /// The outage on domain `dom` of shard `s` ends: its nodes repair,
+    /// unless a node fault or drain window still covers them.
+    fn on_outage_end(&mut self, s: usize, dom: usize) {
+        let nodes = self.shards[s].domain_nodes.get(dom).cloned().unwrap_or_default();
+        let mut freed = false;
+        for &n in &nodes {
+            if self.shards[s].fail_depth[n] > 0 {
+                self.shards[s].fail_depth[n] -= 1;
+            }
+            if self.shards[s].fail_depth[n] == 0
+                && self.shards[s].drain_depth[n] == 0
+                && self.shards[s].rms.repair_node(n, self.now)
+            {
+                freed = true;
+            }
+        }
+        if self.shards[s].outage_depth > 0 {
+            self.shards[s].outage_depth -= 1;
+        }
+        self.shards[s]
+            .rms
+            .log
+            .push(crate::rms::RmsEvent::ShardUp { domain: dom, time: self.now });
+        if freed {
+            self.try_schedule(s);
+        }
+    }
+
+    /// A partition isolates shard `s`: local execution continues, but the
+    /// meta-scheduler stops routing, stealing and evacuating toward it
+    /// until the window ends.
+    fn on_partition_start(&mut self, s: usize) {
+        self.shards[s].partition_depth += 1;
+        self.shards[s]
+            .rms
+            .log
+            .push(crate::rms::RmsEvent::PartitionStarted { time: self.now });
+    }
+
+    fn on_partition_end(&mut self, s: usize) {
+        if self.shards[s].partition_depth > 0 {
+            self.shards[s].partition_depth -= 1;
+        }
+        self.shards[s]
+            .rms
+            .log
+            .push(crate::rms::RmsEvent::PartitionEnded { time: self.now });
+    }
+
+    /// A failure took one or more of `job`'s nodes on shard `s`.  Roll
+    /// the job back to its last checkpoint, then recover — in preference
+    /// order: shrink onto a factor-reachable count of surviving nodes
+    /// (malleable rescue), evacuate to a surviving shard (`evac` — set
+    /// only by the correlated-outage handler — and malleable), or kill
+    /// and requeue locally.
+    fn on_job_hit(&mut self, s: usize, job: JobId, survivors: usize, evac: bool) {
         self.shards[s].stats.interrupted += 1;
         let Some(slot) = self.shards[s].slot(job) else {
             // The job started inside an RMS scheduling pass this driver
@@ -1565,16 +1836,132 @@ impl Engine {
                 self.push(self.now + sched + transfer, s, job, epoch, EvKind::Resume);
             }
             None => {
-                self.shards[s].rms.requeue_after_failure(job, self.now);
-                self.shards[s].stats.requeued += 1;
-                let j = &mut self.shards[s].sims[slot];
-                j.running = false;
-                j.pending_async = None;
-                j.epoch += 1;
+                if !(evac && malleable && self.try_evacuate(s, job, slot)) {
+                    self.shards[s].rms.requeue_after_failure(job, self.now);
+                    self.shards[s].stats.requeued += 1;
+                    let j = &mut self.shards[s].sims[slot];
+                    j.running = false;
+                    j.pending_async = None;
+                    j.epoch += 1;
+                }
             }
         }
         // Freed nodes (released survivors) may admit queued jobs.
         self.try_schedule(s);
+    }
+
+    /// Cross-shard failover of an interrupted malleable job: withdraw it
+    /// (with its checkpointed progress, already rolled back by the
+    /// caller) from shard `s`, route it to a reachable surviving shard,
+    /// re-fit it to that shard's width via the normal factor-chain clamp
+    /// and re-submit it there with its original submission time — queue
+    /// aging carries over, and the paused sim pre-inserted on the target
+    /// resumes from the checkpoint instead of from scratch.  Returns
+    /// `false` (caller falls back to the local requeue) when no reachable
+    /// shard can ever hold the job.
+    fn try_evacuate(&mut self, s: usize, job: JobId, slot: usize) -> bool {
+        let Some((min_procs, user)) = self
+            .shards[s]
+            .rms
+            .job(job)
+            .map(|j| (j.spec.min_procs, j.spec.user))
+        else {
+            return false;
+        };
+        let Some(t) = self.route_evac(s, min_procs, user) else { return false };
+        let Some((mut spec, submitted)) = self.shards[s].rms.evacuate(job, t, self.now) else {
+            return false;
+        };
+        let (ckpt_run_time, ckpt_iters) = {
+            let j = &self.shards[s].sims[slot];
+            (j.ckpt_run_time, j.ckpt_iters)
+        };
+        // The source slot is recycled — stale events for the old id now
+        // miss via `slot() == None`, as on terminal completion.
+        self.shards[s].free_sim(job);
+        self.shards[s].stats.evacuated += 1;
+        self.shards[s].evac_out += 1;
+        fit_spec(&mut spec, self.shards[t].rms.cluster.total());
+        let est = self.cfg.exec.exec_time(&spec, spec.procs) * self.shards[t].inv_speed;
+        let mut sp = SimSpec::of(&spec);
+        sp.work_per_iter *= self.shards[t].inv_speed;
+        let procs = spec.procs;
+        let period = sp.sched_period;
+        let nid = self.shards[t].rms.submit(spec, submitted);
+        self.shards[t].rms.set_expected_end(nid, self.now + est);
+        self.shards[t].evac_in += 1;
+        // Pre-insert the paused sim holding the rolled-back progress:
+        // when the target starts the job, `drain_started`'s restart path
+        // resumes it from the checkpoint.  `memo_procs` is poisoned so
+        // the first `iter_time` recomputes on the target's speed.
+        let sim = SimJob {
+            spec: sp,
+            procs,
+            iters_done: ckpt_iters.min(sp.iterations as f64),
+            last_t: self.now,
+            running: false,
+            epoch: 0,
+            inhibitor: Inhibitor::new(period),
+            pending_async: None,
+            txn: None,
+            resize_attempt: 0,
+            memo_procs: usize::MAX,
+            memo_iter: 0.0,
+            run_time_acc: ckpt_run_time,
+            ckpt_run_time,
+            ckpt_iters,
+        };
+        self.shards[t].insert_sim(nid, sim);
+        self.try_schedule(t);
+        true
+    }
+
+    /// Pick the surviving shard an evacuated job fails over to, honoring
+    /// the configured routing policy among *reachable* candidates (never
+    /// the source, never a dark or partitioned shard, and the pool must
+    /// fit `min_procs`).  `None` when no such shard exists — the job then
+    /// requeues locally and waits out the outage.
+    fn route_evac(&mut self, from: usize, min_procs: usize, user: u32) -> Option<usize> {
+        let k = self.shards.len();
+        let ok = |sh: &Shard| sh.reachable() && min_procs <= sh.rms.cluster.total();
+        match self.routing {
+            RoutingPolicy::RoundRobin => {
+                let mut pick = None;
+                for _ in 0..k {
+                    let s = self.rr_next % k;
+                    self.rr_next = (self.rr_next + 1) % k;
+                    if s != from && ok(&self.shards[s]) {
+                        pick = Some(s);
+                        break;
+                    }
+                }
+                pick
+            }
+            RoutingPolicy::LeastLoaded => {
+                let mut best: Option<(f64, usize)> = None;
+                for (i, sh) in self.shards.iter().enumerate() {
+                    if i == from || !ok(sh) {
+                        continue;
+                    }
+                    let load = (sh.rms.pending_user_jobs() + sh.rms.running_jobs()) as f64
+                        / sh.rms.cluster.total() as f64;
+                    let better = match best {
+                        Some((b, _)) => load.total_cmp(&b).is_lt(),
+                        None => true,
+                    };
+                    if better {
+                        best = Some((load, i));
+                    }
+                }
+                best.map(|(_, i)| i)
+            }
+            RoutingPolicy::Locality => {
+                let home = user as usize % k;
+                (0..k)
+                    .map(|d| (home + d) % k)
+                    .find(|&s| s != from && ok(&self.shards[s]))
+            }
+        }
     }
 
     fn on_resume(&mut self, ev: Ev) {

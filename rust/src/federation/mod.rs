@@ -31,8 +31,8 @@
 
 use crate::cluster::{Cluster, FederatedView, DEFAULT_NODES};
 use crate::des::{ActionStats, DesConfig, Engine};
-use crate::resilience::{FaultSpec, ResilienceStats};
-use crate::rms::Rms;
+use crate::resilience::{FaultSpec, OutageSpec, ResilienceStats};
+use crate::rms::{PolicyStrategy, Rms};
 use crate::workload::{JobStream, WorkloadSpec};
 use crate::Time;
 
@@ -81,7 +81,48 @@ impl RoutingPolicy {
     }
 }
 
-/// Static description of one shard: its node count and its two
+/// How the meta-scheduler steals queued work from backlogged shards into
+/// drained ones (invoked after every processed event).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StealPolicy {
+    /// No stealing.
+    Off,
+    /// Take one candidate per invocation — the head of the victim's
+    /// lowest-priority fitting work (the historical `steal = true`).
+    Head,
+    /// Steal-half: take up to half the victim's pending queue in one
+    /// invocation (bounded by what fits the thief's free nodes).
+    Half,
+}
+
+impl StealPolicy {
+    /// Parse a policy name; booleans map to the historical semantics
+    /// (`"true"`/`"on"` = [`StealPolicy::Head`]).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" | "none" | "false" => Some(StealPolicy::Off),
+            "head" | "on" | "true" => Some(StealPolicy::Head),
+            "half" | "steal-half" | "steal_half" => Some(StealPolicy::Half),
+            _ => None,
+        }
+    }
+
+    /// Short label used in scenario ids (`-s4xllxhalf`) and reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            StealPolicy::Off => "off",
+            StealPolicy::Head => "head",
+            StealPolicy::Half => "half",
+        }
+    }
+
+    /// Whether this policy steals at all.
+    pub fn enabled(&self) -> bool {
+        *self != StealPolicy::Off
+    }
+}
+
+/// Static description of one shard: its node count and its three
 /// heterogeneity knobs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ShardSpec {
@@ -93,17 +134,22 @@ pub struct ShardSpec {
     /// Multiplier on the configured MTBF for this shard's failure
     /// sampling (2.0 = twice as reliable, 0.5 = twice as flaky).
     pub mtbf_scale: f64,
+    /// Per-shard reconfiguration policy override; `None` keeps the run's
+    /// global [`crate::rms::RmsConfig::strategy`].
+    pub strategy: Option<PolicyStrategy>,
 }
 
 impl Default for ShardSpec {
     fn default() -> Self {
-        ShardSpec { nodes: DEFAULT_NODES, speed: 1.0, mtbf_scale: 1.0 }
+        ShardSpec { nodes: DEFAULT_NODES, speed: 1.0, mtbf_scale: 1.0, strategy: None }
     }
 }
 
 impl ShardSpec {
-    /// Parse a topology entry `"nodes[:speed[:mtbf_scale]]"`, e.g.
-    /// `"64"`, `"64:0.5"`, `"128:1.0:2.0"`.
+    /// Parse a topology entry `"nodes[:speed[:mtbf_scale[:strategy]]]"`,
+    /// e.g. `"64"`, `"64:0.5"`, `"128:1.0:2.0"`, `"32:1:1:queue"`.  The
+    /// strategy field is validated against the policy registry
+    /// ([`PolicyStrategy::parse`]).
     pub fn parse(s: &str) -> Result<Self, String> {
         let mut parts = s.split(':');
         let nodes: usize = parts
@@ -132,6 +178,12 @@ impl ShardSpec {
                 return Err(format!("shard mtbf_scale must be positive: {s:?}"));
             }
         }
+        if let Some(st) = parts.next() {
+            match PolicyStrategy::parse(st.trim()) {
+                Ok(p) => spec.strategy = Some(p),
+                Err(e) => return Err(format!("bad shard strategy in {s:?}: {e}")),
+            }
+        }
         if parts.next().is_some() {
             return Err(format!("too many ':' fields in shard spec {s:?}"));
         }
@@ -154,22 +206,27 @@ impl ShardSpec {
 }
 
 /// Everything the federated engine needs beyond the per-shard
-/// [`DesConfig`]: the shard layout, the routing policy, and whether
-/// cross-shard work stealing is on.
+/// [`DesConfig`]: the shard layout, the routing policy, the
+/// work-stealing policy, and the optional failure-domain layer.
 #[derive(Debug, Clone)]
 pub struct FederationConfig {
     /// The shard layout (at least one shard).
     pub shards: Vec<ShardSpec>,
     /// Arrival routing policy.
     pub routing: RoutingPolicy,
-    /// Steal queued work from backlogged shards into drained ones.
-    pub steal: bool,
+    /// Cross-shard work-stealing policy (off / head / half).
+    pub steal: StealPolicy,
     /// Optional per-shard fault-spec override (index = shard id; shards
     /// past the end of the vector keep the scaled base spec).  Used for
     /// scripted per-shard fault traces and shard-loss drain experiments;
     /// campaigns populate it from `[[federation.shard_fault]]` tables
     /// (see `scenarios/README.md`).
     pub shard_faults: Option<Vec<FaultSpec>>,
+    /// Optional per-shard correlated-outage specs (index = shard id;
+    /// shards past the end stay outage-free).  `None` — the default —
+    /// keeps every event stream byte-identical to pre-outage builds;
+    /// campaigns populate it from `[federation.outages]`.
+    pub outages: Option<Vec<OutageSpec>>,
 }
 
 impl Default for FederationConfig {
@@ -177,8 +234,9 @@ impl Default for FederationConfig {
         FederationConfig {
             shards: vec![ShardSpec::default()],
             routing: RoutingPolicy::RoundRobin,
-            steal: false,
+            steal: StealPolicy::Off,
             shard_faults: None,
+            outages: None,
         }
     }
 }
@@ -201,6 +259,10 @@ pub struct ShardRun {
     pub steals_out: u64,
     /// Arrivals the meta-scheduler routed to this shard.
     pub routed: u64,
+    /// Evacuated jobs this shard received (cross-shard requeues in).
+    pub evac_in: u64,
+    /// Jobs evacuated away from this shard during outages.
+    pub evac_out: u64,
 }
 
 /// Everything measured from one federated run: the global measures plus
@@ -237,6 +299,18 @@ impl FedRunResult {
         self.shards.iter().map(|s| s.steals_out).sum()
     }
 
+    /// Total outage evacuations (each evacuated job counts once).
+    pub fn evacuations(&self) -> u64 {
+        self.shards.iter().map(|s| s.evac_out).sum()
+    }
+
+    /// Total cross-shard requeues received (equals
+    /// [`FedRunResult::evacuations`] — every evacuated job lands on
+    /// exactly one surviving shard).
+    pub fn cross_shard_requeues(&self) -> u64 {
+        self.shards.iter().map(|s| s.evac_in).sum()
+    }
+
     /// Snapshot of the federated node pool at the end of the run.
     pub fn view(&self) -> FederatedView {
         let mut v = FederatedView::default();
@@ -252,14 +326,14 @@ impl FedRunResult {
 ///
 /// ```
 /// use dmr::des::DesConfig;
-/// use dmr::federation::{FedEngine, FederationConfig, RoutingPolicy, ShardSpec};
+/// use dmr::federation::{FedEngine, FederationConfig, RoutingPolicy, ShardSpec, StealPolicy};
 /// use dmr::workload;
 ///
 /// let w = workload::generate(20, 7);
 /// let fed = FederationConfig {
 ///     shards: ShardSpec::uniform(64, 2),
 ///     routing: RoutingPolicy::LeastLoaded,
-///     steal: true,
+///     steal: StealPolicy::Head,
 ///     ..Default::default()
 /// };
 /// let r = FedEngine::new(DesConfig::default(), fed).run(&w, "demo");
@@ -325,17 +399,44 @@ mod tests {
     #[test]
     fn shard_spec_parses_topology_strings() {
         let s = ShardSpec::parse("64").unwrap();
-        assert_eq!(s, ShardSpec { nodes: 64, speed: 1.0, mtbf_scale: 1.0 });
+        assert_eq!(s, ShardSpec { nodes: 64, speed: 1.0, mtbf_scale: 1.0, strategy: None });
         let s = ShardSpec::parse("32:0.5").unwrap();
         assert_eq!(s.nodes, 32);
         assert_eq!(s.speed, 0.5);
         let s = ShardSpec::parse("128:2.0:0.25").unwrap();
         assert_eq!((s.nodes, s.speed, s.mtbf_scale), (128, 2.0, 0.25));
+        assert_eq!(s.strategy, None);
         assert!(ShardSpec::parse("0").is_err(), "zero nodes rejected");
         assert!(ShardSpec::parse("8:-1").is_err(), "negative speed rejected");
         assert!(ShardSpec::parse("8:1:0").is_err(), "zero mtbf_scale rejected");
-        assert!(ShardSpec::parse("8:1:1:1").is_err(), "extra fields rejected");
         assert!(ShardSpec::parse("x").is_err());
+    }
+
+    #[test]
+    fn shard_spec_parses_per_shard_strategy() {
+        let s = ShardSpec::parse("32:1:1:queue").unwrap();
+        assert_eq!(s.strategy, Some(PolicyStrategy::QueueAware));
+        let s = ShardSpec::parse("64:2.0:0.5:fair").unwrap();
+        assert_eq!((s.nodes, s.speed, s.mtbf_scale), (64, 2.0, 0.5));
+        assert_eq!(s.strategy, Some(PolicyStrategy::FairShare));
+        assert!(ShardSpec::parse("8:1:1:1").is_err(), "unknown strategy rejected");
+        assert!(ShardSpec::parse("8:1:1:bogus").is_err(), "unknown strategy rejected");
+        assert!(ShardSpec::parse("8:1:1:queue:x").is_err(), "extra fields rejected");
+    }
+
+    #[test]
+    fn steal_policy_parses_and_labels() {
+        assert_eq!(StealPolicy::parse("off"), Some(StealPolicy::Off));
+        assert_eq!(StealPolicy::parse("false"), Some(StealPolicy::Off));
+        assert_eq!(StealPolicy::parse("head"), Some(StealPolicy::Head));
+        assert_eq!(StealPolicy::parse("true"), Some(StealPolicy::Head));
+        assert_eq!(StealPolicy::parse("half"), Some(StealPolicy::Half));
+        assert_eq!(StealPolicy::parse("bogus"), None);
+        for p in [StealPolicy::Off, StealPolicy::Head, StealPolicy::Half] {
+            assert_eq!(StealPolicy::parse(p.label()), Some(p), "label round-trips");
+        }
+        assert!(!StealPolicy::Off.enabled());
+        assert!(StealPolicy::Head.enabled() && StealPolicy::Half.enabled());
     }
 
     #[test]

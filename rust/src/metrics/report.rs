@@ -259,7 +259,7 @@ pub const CAMPAIGN_RUN_HEADER: &[&str] = &[
     "availability_pct", "fed_shards", "fed_routing", "fed_steals", "shard_util_pct",
     "shard_queue_depth", "shard_steals", "resize_attempts", "resize_aborts", "retry_time_s",
     "degraded_jobs", "sched_passes", "sched_elided", "dmr_checks", "dmr_elided",
-    "peak_live_jobs",
+    "peak_live_jobs", "shard_jain", "evacuations", "cross_shard_requeues", "shard_avail_pct",
 ];
 
 /// Header of `<name>_agg.csv` — single source of truth, like
@@ -274,6 +274,7 @@ pub const CAMPAIGN_AGG_HEADER: &[&str] = &[
     "fed_shards", "fed_steals_mean", "shard_util_mean_pct", "resize_attempts_mean",
     "resize_aborts_mean", "retry_time_mean_s", "degraded_jobs_mean", "sched_passes_mean",
     "sched_elided_mean", "dmr_checks_mean", "dmr_elided_mean", "peak_live_mean",
+    "shard_jain_mean", "evacuations_mean", "cross_shard_requeues_mean", "shard_avail_mean_pct",
 ];
 
 /// The per-run CSV columns (accessor over [`CAMPAIGN_RUN_HEADER`] so
@@ -349,6 +350,21 @@ pub fn campaign_run_rows(records: &[crate::campaign::RunRecord]) -> Vec<Vec<Stri
             row.push(s.passes.dmr_checks.to_string());
             row.push(s.passes.dmr_elided.to_string());
             row.push(s.peak_live.to_string());
+            // Failure-domain columns (end-appended; flat runs keep the
+            // placeholder shape of the other federation columns).
+            match &s.federation {
+                Some(f) => {
+                    row.push(fmt(f.shard_jain, 4));
+                    row.push(f.evacuations.to_string());
+                    row.push(f.cross_requeues.to_string());
+                    row.push(join_shards(&f.per_shard, |sh| {
+                        fmt(sh.availability * 100.0, 3)
+                    }));
+                }
+                None => {
+                    row.extend(["-", "0", "0", "-"].map(String::from));
+                }
+            }
             row
         })
         .collect()
@@ -412,6 +428,22 @@ pub fn campaign_agg_rows(aggs: &[crate::campaign::ScenarioAgg]) -> Vec<Vec<Strin
             row.push(fmt(a.dmr_checks.mean(), 1));
             row.push(fmt(a.dmr_elided.mean(), 1));
             row.push(fmt(a.peak_live.mean(), 1));
+            row.push(if a.shard_jain.count() == 0 {
+                "-".to_string()
+            } else {
+                fmt(a.shard_jain.mean(), 4)
+            });
+            row.push(fmt(a.evacuations.mean(), 2));
+            row.push(fmt(a.cross_requeues.mean(), 2));
+            row.push(if a.shard_avail.is_empty() {
+                "-".to_string()
+            } else {
+                a.shard_avail
+                    .iter()
+                    .map(|s| fmt(s.mean(), 3))
+                    .collect::<Vec<_>>()
+                    .join(";")
+            });
             row
         })
         .collect()
@@ -422,7 +454,7 @@ pub fn campaign_table(name: &str, aggs: &[crate::campaign::ScenarioAgg]) -> Tabl
     let mut t = Table::new(vec![
         "Scenario", "Runs", "Makespan (s)", "Util (%)", "Wait (s)", "Completion (s)",
         "Expands", "Shrinks", "Slowdown", "Jain", "DlMiss", "Rescued", "Requeued",
-        "Avail (%)", "Shards", "Steals", "Events/s",
+        "Avail (%)", "Shards", "Steals", "Evac", "Events/s",
     ])
     .with_title(&format!("Campaign {name}: per-scenario aggregates (mean ± 95% CI)"));
     let pm = |s: &Summary, prec: usize| format!("{} ± {}", fmt(s.mean(), prec), fmt(s.ci95_half(), prec));
@@ -444,6 +476,7 @@ pub fn campaign_table(name: &str, aggs: &[crate::campaign::ScenarioAgg]) -> Tabl
             fmt(a.availability_pct.mean(), 2),
             a.fed_shards.to_string(),
             fmt(a.fed_steals.mean(), 1),
+            fmt(a.evacuations.mean(), 1),
             // Wall-clock throughput: stdout-only (timing noise, never in
             // the CSVs); "-" when nothing was measured.
             if a.wall_ns_total == 0 {
@@ -512,6 +545,13 @@ pub fn campaign_agg_json(
             fed.insert(
                 "shard_util_mean_pct".into(),
                 Json::Arr(a.shard_util.iter().map(|s| Json::Num(s.mean())).collect()),
+            );
+            fed.insert("shard_jain".into(), stat(&a.shard_jain));
+            fed.insert("evacuations".into(), stat(&a.evacuations));
+            fed.insert("cross_shard_requeues".into(), stat(&a.cross_requeues));
+            fed.insert(
+                "shard_avail_mean_pct".into(),
+                Json::Arr(a.shard_avail.iter().map(|s| Json::Num(s.mean())).collect()),
             );
             m.insert("federation".into(), Json::Obj(fed));
             Json::Obj(m)
@@ -713,7 +753,8 @@ jobs = 5
              interrupted,rescued,requeued,rework_s,lost_node_s,availability_pct,\
              fed_shards,fed_routing,fed_steals,shard_util_pct,shard_queue_depth,\
              shard_steals,resize_attempts,resize_aborts,retry_time_s,degraded_jobs,\
-             sched_passes,sched_elided,dmr_checks,dmr_elided,peak_live_jobs"
+             sched_passes,sched_elided,dmr_checks,dmr_elided,peak_live_jobs,\
+             shard_jain,evacuations,cross_shard_requeues,shard_avail_pct"
         );
         assert_eq!(
             agg_columns().join(","),
@@ -725,7 +766,8 @@ jobs = 5
              requeued_mean,rework_mean_s,lost_node_s_mean,availability_mean_pct,\
              fed_shards,fed_steals_mean,shard_util_mean_pct,resize_attempts_mean,\
              resize_aborts_mean,retry_time_mean_s,degraded_jobs_mean,sched_passes_mean,\
-             sched_elided_mean,dmr_checks_mean,dmr_elided_mean,peak_live_mean"
+             sched_elided_mean,dmr_checks_mean,dmr_elided_mean,peak_live_mean,\
+             shard_jain_mean,evacuations_mean,cross_shard_requeues_mean,shard_avail_mean_pct"
         );
         // accessors and consts are the same object
         assert!(std::ptr::eq(run_columns(), CAMPAIGN_RUN_HEADER));

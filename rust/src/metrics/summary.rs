@@ -3,7 +3,7 @@
 
 use super::record::{extract, JobRecord, MetricsFold};
 use crate::des::{ActionStats, RunResult};
-use crate::federation::{FedRunResult, RoutingPolicy};
+use crate::federation::{FedRunResult, RoutingPolicy, StealPolicy};
 use crate::obs::PhaseProfile;
 use crate::resilience::ResilienceStats;
 use crate::rms::PassStats;
@@ -81,10 +81,20 @@ pub struct FedSummary {
     pub shards: usize,
     /// Routing-policy label (`rr` | `ll` | `loc`).
     pub routing: String,
-    /// Whether cross-shard work stealing was enabled.
-    pub steal: bool,
+    /// Work-stealing-policy label (`off` | `head` | `half`).
+    pub steal: String,
     /// Total jobs stolen across shards.
     pub steals: u64,
+    /// Jain's fairness index over the per-shard mean bounded slowdowns
+    /// (1 = every shard's jobs see the same slowdown) — the federation's
+    /// load-balance headline.
+    pub shard_jain: f64,
+    /// Jobs evacuated off outage-struck shards (checkpointed state
+    /// requeued on a surviving shard).
+    pub evacuations: u64,
+    /// Cross-shard requeues received: jobs that finished on a different
+    /// shard than the one that first held them, due to an outage.
+    pub cross_requeues: u64,
     /// One entry per shard, in shard-id order.
     pub per_shard: Vec<ShardSummary>,
 }
@@ -108,6 +118,10 @@ pub struct ShardSummary {
     pub steals_in: u64,
     /// Jobs stolen out of this shard.
     pub steals_out: u64,
+    /// Jobs evacuated into this shard after another shard's outage.
+    pub evac_in: u64,
+    /// Jobs evacuated off this shard by its own outages.
+    pub evac_out: u64,
     /// Arrivals the meta-scheduler routed here.
     pub routed: u64,
     /// This shard's availability (1.0 without faults).
@@ -197,7 +211,7 @@ impl RunSummary {
     /// shard-id order), cluster series summed, utilization over the total
     /// node pool — plus the per-shard breakdown in
     /// [`RunSummary::federation`].
-    pub fn from_fed(r: &FedRunResult, routing: RoutingPolicy, steal: bool) -> RunSummary {
+    pub fn from_fed(r: &FedRunResult, routing: RoutingPolicy, steal: StealPolicy) -> RunSummary {
         let t1 = r.makespan.max(1e-9);
         let nodes: usize = r.shards.iter().map(|s| s.nodes).sum();
         let mut jobs: Vec<JobRecord> = Vec::new();
@@ -217,6 +231,8 @@ impl RunSummary {
                 queue_depth: sf.wait.sum() / t1,
                 steals_in: sh.steals_in,
                 steals_out: sh.steals_out,
+                evac_in: sh.evac_in,
+                evac_out: sh.evac_out,
                 routed: sh.routed,
                 availability: sh.stats.availability,
                 log_digest: sh.rms.log.digest(),
@@ -231,11 +247,19 @@ impl RunSummary {
                 r.shards.iter().map(|s| pick(&s.rms.telemetry).as_slice()).collect();
             merge_step_series(&views)
         };
+        // Load-balance headline: Jain over the per-shard mean bounded
+        // slowdowns (a routing policy that starves one shard shows up
+        // here even when the merged distribution looks fine).
+        let shard_slowdowns: Vec<f64> =
+            r.shards.iter().map(|sh| sh.rms.fold.bounded_slowdown.mean()).collect();
         let federation = FedSummary {
             shards: r.shards.len(),
             routing: routing.label().to_string(),
-            steal,
+            steal: steal.label().to_string(),
             steals: r.steals(),
+            shard_jain: jain_index(&shard_slowdowns),
+            evacuations: r.evacuations(),
+            cross_requeues: r.cross_shard_requeues(),
             per_shard,
         };
         let mut passes = PassStats::default();
@@ -428,19 +452,23 @@ mod tests {
         let fed = FederationConfig {
             shards: ShardSpec::uniform(64, 2),
             routing: RoutingPolicy::RoundRobin,
-            steal: false,
             ..Default::default()
         };
         let r = FedEngine::new(DesConfig::default(), fed).run(&w, "fed");
         let events = r.events;
         let per_shard_passes: u64 =
             r.shards.iter().map(|sh| sh.rms.pass_stats().sched_passes).sum();
-        let s = RunSummary::from_fed(&r, RoutingPolicy::RoundRobin, false);
+        let s = RunSummary::from_fed(&r, RoutingPolicy::RoundRobin, StealPolicy::Off);
         // Job records merge across shards; per-shard breakdown survives.
         assert_eq!(s.jobs.len(), 24);
         let f = s.federation.as_ref().expect("federated extras");
         assert_eq!(f.shards, 2);
         assert_eq!(f.per_shard.len(), 2);
+        assert_eq!(f.steal, "off");
+        assert!(f.shard_jain > 0.0 && f.shard_jain <= 1.0 + 1e-12, "{}", f.shard_jain);
+        assert_eq!(f.evacuations, 0, "no outages, no evacuations");
+        assert_eq!(f.cross_requeues, 0);
+        assert!(f.per_shard.iter().all(|p| p.evac_in == 0 && p.evac_out == 0));
         assert_eq!(f.per_shard.iter().map(|p| p.jobs).sum::<usize>(), 24);
         // The merged alloc series never exceeds the total pool and the
         // summed step series covers both shards' allocations.

@@ -39,7 +39,10 @@ pub mod model;
 pub mod recovery;
 pub mod resize;
 
-pub use model::{DrainSet, DrainWindow, FaultKind, FaultSpec, FaultTraceEvent};
+pub use model::{
+    DrainSet, DrainWindow, FailureDomain, FaultKind, FaultSpec, FaultTraceEvent, OutageEvent,
+    OutageSpec, PartitionWindow,
+};
 pub use recovery::{feasible_shrink, rework_lost, RecoveryConfig};
 pub use resize::ResizeFaultSpec;
 
@@ -76,6 +79,12 @@ pub struct ResilienceStats {
     /// Interrupted jobs killed and requeued (rigid, or no factor-reachable
     /// shrink fit).
     pub requeued: u64,
+    /// Interrupted malleable jobs evacuated off this shard during a
+    /// correlated outage: their checkpointed state was requeued through
+    /// the router to a surviving shard.  Zero outside federated
+    /// outage runs; per shard, `interrupted == rescued + requeued +
+    /// evacuated` (the failure ledger).
+    pub evacuated: u64,
     /// Total execution time redone because it post-dated the last
     /// checkpoint (seconds).
     pub rework_time: f64,
@@ -107,6 +116,7 @@ impl Default for ResilienceStats {
             interrupted: 0,
             rescued: 0,
             requeued: 0,
+            evacuated: 0,
             rework_time: 0.0,
             lost_node_seconds: 0.0,
             availability: 1.0,

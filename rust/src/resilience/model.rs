@@ -115,6 +115,99 @@ impl FaultSpec {
     }
 }
 
+// ---------------------------------------------------------------------
+// Shard-level failure domains: correlated outages and partitions.
+
+/// A named node group inside one shard that fails *together* (a rack, a
+/// switch, a sub-cluster).  The whole shard is always an implicit domain;
+/// explicit domains model finer-grained correlated blast radii.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FailureDomain {
+    /// Domain name, referenced by scripted [`OutageEvent`]s.
+    pub name: String,
+    /// The member nodes (resolved against the shard size like drains).
+    pub nodes: DrainSet,
+}
+
+/// One scripted correlated outage: the named domain (or, with an empty
+/// name, the whole shard) goes dark at `at` and returns `duration` later.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutageEvent {
+    /// Target domain name; `""`, `"shard"` or `"all"` means the implicit
+    /// whole-shard domain.
+    pub domain: String,
+    /// Outage start.
+    pub at: Time,
+    /// Outage length (`for` in the TOML schema).
+    pub duration: Time,
+}
+
+/// A network partition window: the shard keeps running its local jobs but
+/// is unreachable for routing and stealing between `start` and `end`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartitionWindow {
+    /// Partition start.
+    pub start: Time,
+    /// Partition end (recovery).
+    pub end: Time,
+}
+
+/// The correlated-outage sources of one shard: scripted outage/partition
+/// traces plus an optional seeded per-domain MTBF stream.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OutageSpec {
+    /// Explicit failure domains.  Empty means the only domain is the
+    /// implicit whole shard.
+    pub domains: Vec<FailureDomain>,
+    /// Scripted outages, replayed verbatim.
+    pub scripted: Vec<OutageEvent>,
+    /// Mean time between correlated outages *per domain*, seconds
+    /// (exponential).  `0` disables the seeded stream.
+    pub mtbf: f64,
+    /// Mean outage duration, seconds (exponential).
+    pub mttr: f64,
+    /// Scripted partition windows.
+    pub partitions: Vec<PartitionWindow>,
+}
+
+/// Salt for the domain-outage RNG stream: distinct from both the cost
+/// stream (no salt) and the per-node fault stream ([`FAULT_SEED_SALT`]),
+/// so enabling outages never perturbs either — and an outage-free run is
+/// byte-identical whether the stream exists or not.
+const DOMAIN_SEED_SALT: u64 = 0xD07A_60E5_DA2C_5EED;
+
+impl OutageSpec {
+    /// Whether this spec injects anything (an inactive spec leaves the
+    /// event stream byte-identical to an outage-free run).
+    pub fn is_active(&self) -> bool {
+        self.mtbf > 0.0 || !self.scripted.is_empty() || !self.partitions.is_empty()
+    }
+
+    /// The dedicated domain-outage RNG for a (shard-salted) run seed.
+    pub fn rng(&self, seed: u64) -> Rng {
+        Rng::new(seed ^ DOMAIN_SEED_SALT)
+    }
+
+    /// First outage time per sampled domain (one exponential draw each,
+    /// in domain order).  `domains` is the number of sampled domains —
+    /// the explicit domain count, or 1 (the whole shard) when none are
+    /// declared.  Empty when MTBF sampling is off.
+    pub fn initial_outages(&self, domains: usize, rng: &mut Rng) -> Vec<(usize, Time)> {
+        if self.mtbf <= 0.0 {
+            return Vec::new();
+        }
+        (0..domains).map(|d| (d, rng.exp(self.mtbf))).collect()
+    }
+
+    /// Outage duration and next-outage delay for one cycle (drawn in that
+    /// order, exactly once per processed auto-outage).
+    pub fn next_cycle(&self, rng: &mut Rng) -> (Time, Time) {
+        let duration = rng.exp(self.mttr.max(0.0));
+        let next = rng.exp(self.mtbf.max(0.0));
+        (duration, next)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,5 +257,50 @@ mod tests {
         let ids: Vec<usize> = init.iter().map(|&(n, _)| n).collect();
         assert_eq!(ids, vec![0, 1, 2, 3, 4]);
         assert!(init.iter().all(|&(_, t)| t >= 0.0));
+    }
+
+    #[test]
+    fn outage_spec_inactive_by_default() {
+        let o = OutageSpec::default();
+        assert!(!o.is_active());
+        assert!(o.initial_outages(4, &mut o.rng(1)).is_empty());
+    }
+
+    #[test]
+    fn outage_spec_activity_flags() {
+        let scripted = OutageSpec {
+            scripted: vec![OutageEvent { domain: String::new(), at: 100.0, duration: 50.0 }],
+            ..Default::default()
+        };
+        assert!(scripted.is_active());
+        let sampled = OutageSpec { mtbf: 1000.0, mttr: 100.0, ..Default::default() };
+        assert!(sampled.is_active());
+        let partitioned = OutageSpec {
+            partitions: vec![PartitionWindow { start: 10.0, end: 20.0 }],
+            ..Default::default()
+        };
+        assert!(partitioned.is_active());
+    }
+
+    #[test]
+    fn outage_stream_is_independent_of_fault_and_cost_streams() {
+        let o = OutageSpec { mtbf: 1.0, ..Default::default() };
+        let f = FaultSpec { mtbf: 1.0, ..Default::default() };
+        let a = o.rng(42).next_u64();
+        assert_ne!(a, f.rng(42).next_u64(), "distinct from the node-fault stream");
+        assert_ne!(a, Rng::new(42).next_u64(), "distinct from the cost stream");
+    }
+
+    #[test]
+    fn outage_sampling_is_deterministic_per_seed() {
+        let o = OutageSpec { mtbf: 5000.0, mttr: 500.0, ..Default::default() };
+        let draw = |seed| {
+            let mut rng = o.rng(seed);
+            let init = o.initial_outages(3, &mut rng);
+            let cycle = o.next_cycle(&mut rng);
+            (init, cycle)
+        };
+        assert_eq!(draw(7), draw(7), "same seed, same outage timeline");
+        assert_ne!(draw(7).0, draw(8).0, "different seeds differ");
     }
 }

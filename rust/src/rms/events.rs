@@ -60,6 +60,23 @@ pub enum RmsEvent {
     /// A job exhausted its resize retries and degraded to non-malleable
     /// for the rest of the run (policies stop proposing resizes for it).
     Degraded { job: JobId, time: Time },
+    // --- failure-domain events (crate::resilience::model) ------------
+    /// A correlated outage took failure domain `domain` of this shard
+    /// dark (domain 0 is the implicit whole shard).  Only outage-enabled
+    /// federated runs emit this — outage-free logs are untouched.
+    ShardDown { domain: usize, time: Time },
+    /// The outage on `domain` ended; its nodes return to the pool.
+    ShardUp { domain: usize, time: Time },
+    /// An interrupted malleable job was evacuated to shard `to`: removed
+    /// here, its checkpointed state re-submitted through the router.
+    /// Every evacuation pairs with a completion (or requeue) on the
+    /// target shard — the cross-shard half of the failure ledger.
+    Evacuated { job: JobId, time: Time, to: usize },
+    /// A network partition isolated this shard (it keeps running local
+    /// jobs; routing and stealing toward it are suppressed).
+    PartitionStarted { time: Time },
+    /// The partition healed.
+    PartitionEnded { time: Time },
 }
 
 /// Fold one event into the rolling FNV-1a digest (order-sensitive; times
@@ -198,6 +215,30 @@ fn fold_event(h: &mut u64, e: &RmsEvent) {
             mix(h, *job);
             mix(h, time.to_bits());
         }
+        RmsEvent::ShardDown { domain, time } => {
+            mix(h, 21);
+            mix(h, *domain as u64);
+            mix(h, time.to_bits());
+        }
+        RmsEvent::ShardUp { domain, time } => {
+            mix(h, 22);
+            mix(h, *domain as u64);
+            mix(h, time.to_bits());
+        }
+        RmsEvent::Evacuated { job, time, to } => {
+            mix(h, 23);
+            mix(h, *job);
+            mix(h, time.to_bits());
+            mix(h, *to as u64);
+        }
+        RmsEvent::PartitionStarted { time } => {
+            mix(h, 24);
+            mix(h, time.to_bits());
+        }
+        RmsEvent::PartitionEnded { time } => {
+            mix(h, 25);
+            mix(h, time.to_bits());
+        }
     }
 }
 
@@ -225,6 +266,10 @@ pub struct EventLog {
     n_resize_abort: usize,
     n_resize_commit: usize,
     n_degraded: usize,
+    n_shard_down: usize,
+    n_shard_up: usize,
+    n_evacuated: usize,
+    n_partitions: usize,
 }
 
 impl Default for EventLog {
@@ -244,6 +289,10 @@ impl Default for EventLog {
             n_resize_abort: 0,
             n_resize_commit: 0,
             n_degraded: 0,
+            n_shard_down: 0,
+            n_shard_up: 0,
+            n_evacuated: 0,
+            n_partitions: 0,
         }
     }
 }
@@ -265,6 +314,10 @@ impl EventLog {
             RmsEvent::ResizeAbort { .. } => self.n_resize_abort += 1,
             RmsEvent::ResizeCommit { .. } => self.n_resize_commit += 1,
             RmsEvent::Degraded { .. } => self.n_degraded += 1,
+            RmsEvent::ShardDown { .. } => self.n_shard_down += 1,
+            RmsEvent::ShardUp { .. } => self.n_shard_up += 1,
+            RmsEvent::Evacuated { .. } => self.n_evacuated += 1,
+            RmsEvent::PartitionStarted { .. } => self.n_partitions += 1,
             _ => {}
         }
         if self.retain {
@@ -351,6 +404,26 @@ impl EventLog {
     /// Jobs degraded to non-malleable after exhausting resize retries.
     pub fn degradations(&self) -> usize {
         self.n_degraded
+    }
+
+    /// Correlated domain outages begun on this shard.
+    pub fn shard_downs(&self) -> usize {
+        self.n_shard_down
+    }
+
+    /// Correlated domain outages ended on this shard.
+    pub fn shard_ups(&self) -> usize {
+        self.n_shard_up
+    }
+
+    /// Jobs evacuated off this shard during outages.
+    pub fn evacuations(&self) -> usize {
+        self.n_evacuated
+    }
+
+    /// Partition windows that isolated this shard.
+    pub fn partitions(&self) -> usize {
+        self.n_partitions
     }
 
     /// Order-sensitive FNV-1a digest over every event ever pushed and
@@ -455,6 +528,11 @@ mod tests {
             digest_of(RmsEvent::ResizeAbort { job: 1, time: 2.0, phase: 1 }),
             digest_of(RmsEvent::ResizeCommit { job: 1, time: 2.0, procs: 8 }),
             digest_of(RmsEvent::Degraded { job: 1, time: 2.0 }),
+            digest_of(RmsEvent::ShardDown { domain: 1, time: 2.0 }),
+            digest_of(RmsEvent::ShardUp { domain: 1, time: 2.0 }),
+            digest_of(RmsEvent::Evacuated { job: 1, time: 2.0, to: 1 }),
+            digest_of(RmsEvent::PartitionStarted { time: 2.0 }),
+            digest_of(RmsEvent::PartitionEnded { time: 2.0 }),
         ];
         for (i, a) in all.iter().enumerate() {
             for (j, b) in all.iter().enumerate() {
@@ -510,5 +588,37 @@ mod tests {
         assert_eq!(log.resize_aborts(), 1);
         assert_eq!(log.resize_commits(), 1);
         assert_eq!(log.degradations(), 1);
+    }
+
+    #[test]
+    fn failure_domain_events_distinct_and_counted() {
+        let digest_of = |e: RmsEvent| {
+            let mut l = EventLog::default();
+            l.push(e);
+            l.digest()
+        };
+        // Domain and target fields are digest-covered.
+        assert_ne!(
+            digest_of(RmsEvent::ShardDown { domain: 0, time: 2.0 }),
+            digest_of(RmsEvent::ShardDown { domain: 1, time: 2.0 }),
+        );
+        assert_ne!(
+            digest_of(RmsEvent::Evacuated { job: 1, time: 2.0, to: 1 }),
+            digest_of(RmsEvent::Evacuated { job: 1, time: 2.0, to: 2 }),
+        );
+        assert_ne!(
+            digest_of(RmsEvent::PartitionStarted { time: 2.0 }),
+            digest_of(RmsEvent::PartitionStarted { time: 3.0 }),
+        );
+        let mut log = EventLog::default();
+        log.push(RmsEvent::ShardDown { domain: 0, time: 1.0 });
+        log.push(RmsEvent::Evacuated { job: 7, time: 1.0, to: 1 });
+        log.push(RmsEvent::ShardUp { domain: 0, time: 5.0 });
+        log.push(RmsEvent::PartitionStarted { time: 6.0 });
+        log.push(RmsEvent::PartitionEnded { time: 7.0 });
+        assert_eq!(log.shard_downs(), 1);
+        assert_eq!(log.shard_ups(), 1);
+        assert_eq!(log.evacuations(), 1);
+        assert_eq!(log.partitions(), 1);
     }
 }

@@ -1226,6 +1226,47 @@ impl Rms {
         self.snapshot(now);
     }
 
+    /// Evacuate an interrupted *active* job off this shard during a
+    /// correlated outage: its surviving nodes (possibly none — a
+    /// whole-shard outage takes them all) are released, the record leaves
+    /// the live map (no archiving — like [`Rms::withdraw`], exactly one
+    /// shard owns a job's record at any time), and the spec plus the
+    /// original submission time are returned for the target shard's
+    /// `submit` (preserving queue aging; the engine carries the
+    /// checkpointed progress).  Any pending resizer job still waiting on
+    /// the evacuee is cancelled — its dependency is leaving the shard for
+    /// good.  Logged as a digest-covered [`RmsEvent::Evacuated`] naming
+    /// the target shard.
+    pub fn evacuate(&mut self, id: JobId, to_shard: usize, now: Time) -> Option<(JobSpec, Time)> {
+        let job = self.live.get_mut(&id)?;
+        if !job.is_active() || job.is_resizer {
+            return None;
+        }
+        let nodes = std::mem::take(&mut job.nodes);
+        if !nodes.is_empty() {
+            self.cluster.release(id, &nodes).expect("evacuate: release");
+        }
+        self.active.remove(&id);
+        self.profile.remove(id);
+        self.active_user -= 1;
+        let job = self.live.remove(&id).expect("evacuate: unknown job");
+        let orphaned: Vec<JobId> = self
+            .pending
+            .iter()
+            .copied()
+            .filter(|rid| {
+                let j = &self.live[rid];
+                j.is_resizer && j.depends_on == Some(id)
+            })
+            .collect();
+        for rid in orphaned {
+            self.cancel(rid, now);
+        }
+        self.log.push(RmsEvent::Evacuated { job: id, time: now, to: to_shard });
+        self.snapshot(now);
+        Some((job.spec, job.submit_time))
+    }
+
     // ------------------------------------------------------------------
     // Telemetry
 

@@ -19,7 +19,9 @@
 use dmr::campaign::{self, CampaignSpec};
 use dmr::des::{DesConfig, Engine};
 use dmr::dmr::SchedMode;
-use dmr::federation::{FedEngine, FederationConfig, FedRunResult, RoutingPolicy, ShardSpec};
+use dmr::federation::{
+    FedEngine, FederationConfig, FedRunResult, RoutingPolicy, ShardSpec, StealPolicy,
+};
 use dmr::metrics::RunSummary;
 use dmr::resilience::{
     DrainSet, DrainWindow, FaultKind, FaultSpec, FaultTraceEvent, RecoveryConfig,
@@ -87,8 +89,8 @@ fn one_shard_federation_is_bit_identical_to_flat_engine() {
                 FederationConfig {
                     shards: ShardSpec::uniform(64, 1),
                     routing: RoutingPolicy::RoundRobin,
-                    steal: true, // must be inert at one shard
-                    shard_faults: None,
+                    steal: StealPolicy::Head, // must be inert at one shard
+                    ..Default::default()
                 },
                 &w,
                 mode,
@@ -124,13 +126,13 @@ fn multi_shard_runs_are_deterministic() {
             base_cfg(SchedMode::Sync, true),
             FederationConfig {
                 shards: vec![
-                    ShardSpec { nodes: 32, speed: 1.0, mtbf_scale: 1.0 },
-                    ShardSpec { nodes: 24, speed: 0.5, mtbf_scale: 2.0 },
-                    ShardSpec { nodes: 8, speed: 2.0, mtbf_scale: 0.5 },
+                    ShardSpec { nodes: 32, speed: 1.0, mtbf_scale: 1.0, ..Default::default() },
+                    ShardSpec { nodes: 24, speed: 0.5, mtbf_scale: 2.0, ..Default::default() },
+                    ShardSpec { nodes: 8, speed: 2.0, mtbf_scale: 0.5, ..Default::default() },
                 ],
                 routing: RoutingPolicy::LeastLoaded,
-                steal: true,
-                shard_faults: None,
+                steal: StealPolicy::Head,
+                ..Default::default()
             },
             &w,
             "det",
@@ -154,8 +156,8 @@ fn every_job_completes_exactly_once_across_shards() {
         FederationConfig {
             shards: ShardSpec::uniform(64, 4),
             routing: RoutingPolicy::RoundRobin,
-            steal: true,
-            shard_faults: None,
+            steal: StealPolicy::Head,
+            ..Default::default()
         },
         &w,
         "complete",
@@ -177,14 +179,14 @@ fn least_loaded_beats_round_robin_on_speed_skewed_topology() {
     // sees the slow shard's backlog and steers work to the fast one.
     // Rigid jobs + no stealing isolate the routing signal.
     let shards = vec![
-        ShardSpec { nodes: 32, speed: 1.0, mtbf_scale: 1.0 },
-        ShardSpec { nodes: 32, speed: 0.2, mtbf_scale: 1.0 },
+        ShardSpec { nodes: 32, speed: 1.0, mtbf_scale: 1.0, ..Default::default() },
+        ShardSpec { nodes: 32, speed: 0.2, mtbf_scale: 1.0, ..Default::default() },
     ];
     let run = |routing: RoutingPolicy| {
         let w = workload::generate(60, 11).as_fixed();
         fed_run(
             base_cfg(SchedMode::Sync, false),
-            FederationConfig { shards: shards.clone(), routing, steal: false, shard_faults: None },
+            FederationConfig { shards: shards.clone(), routing, ..Default::default() },
             &w,
             routing.label(),
         )
@@ -214,25 +216,25 @@ fn work_stealing_drains_a_backlogged_shard() {
     for j in &mut w.jobs {
         j.user = 0;
     }
-    let run = |steal: bool| {
+    let run = |steal: StealPolicy| {
         fed_run(
             base_cfg(SchedMode::Sync, false),
             FederationConfig {
                 shards: ShardSpec::uniform(64, 2),
                 routing: RoutingPolicy::Locality,
                 steal,
-                shard_faults: None,
+                ..Default::default()
             },
             &w,
-            if steal { "steal" } else { "nosteal" },
+            steal.label(),
         )
     };
-    let idle = run(false);
+    let idle = run(StealPolicy::Off);
     assert_eq!(idle.steals(), 0);
     assert_eq!(idle.shards[1].routed, 0, "all arrivals home on shard 0");
     assert_eq!(idle.shards[1].rms.completed_jobs(), 0);
 
-    let stealing = run(true);
+    let stealing = run(StealPolicy::Head);
     assert!(stealing.steals() > 0, "the idle shard must pull queued work");
     assert_eq!(stealing.shards[0].steals_out, stealing.shards[1].steals_in);
     assert!(
@@ -260,8 +262,7 @@ fn locality_routing_homes_users_on_their_shard() {
         FederationConfig {
             shards: ShardSpec::uniform(64, 2),
             routing: RoutingPolicy::Locality,
-            steal: false,
-            shard_faults: None,
+            ..Default::default()
         },
         &w,
         "locality",
@@ -288,18 +289,19 @@ fn fed_summary_merges_shards_and_reports_per_shard_measures() {
         FederationConfig {
             shards: ShardSpec::uniform(64, 2),
             routing: RoutingPolicy::LeastLoaded,
-            steal: true,
-            shard_faults: None,
+            steal: StealPolicy::Head,
+            ..Default::default()
         },
         &w,
         "summary",
     );
-    let s = RunSummary::from_fed(&r, RoutingPolicy::LeastLoaded, true);
+    let s = RunSummary::from_fed(&r, RoutingPolicy::LeastLoaded, StealPolicy::Head);
     assert_eq!(s.jobs.len(), 30, "merged job records cover every shard");
     let fed = s.federation.as_ref().expect("federated summary present");
     assert_eq!(fed.shards, 2);
     assert_eq!(fed.routing, "ll");
-    assert!(fed.steal);
+    assert_eq!(fed.steal, "head");
+    assert_eq!(fed.evacuations, 0, "no outages configured");
     assert_eq!(fed.per_shard.len(), 2);
     assert_eq!(fed.per_shard.iter().map(|p| p.nodes).sum::<usize>(), 64);
     assert_eq!(
@@ -348,15 +350,19 @@ jobs = 10
     let out = campaign::write_outputs(&spec, &res).unwrap();
     let runs = std::fs::read_to_string(&out.runs_csv).unwrap();
     let header = runs.lines().next().unwrap();
-    assert!(header.ends_with(
+    assert!(header.contains(
         "fed_shards,fed_routing,fed_steals,shard_util_pct,shard_queue_depth,shard_steals"
     ));
+    assert!(header.ends_with("shard_jain,evacuations,cross_shard_requeues,shard_avail_pct"));
     let row = runs.lines().nth(1).unwrap();
     assert!(row.contains(",2,rr,") || row.contains(",2,ll,"), "fed cells present: {row}");
     assert!(row.contains(';'), "per-shard cells are ;-joined: {row}");
     let agg = std::fs::read_to_string(&out.agg_csv).unwrap();
     let agg_header = agg.lines().next().unwrap();
-    assert!(agg_header.ends_with("fed_shards,fed_steals_mean,shard_util_mean_pct"));
+    assert!(agg_header.contains("fed_shards,fed_steals_mean,shard_util_mean_pct"));
+    assert!(agg_header.ends_with(
+        "shard_jain_mean,evacuations_mean,cross_shard_requeues_mean,shard_avail_mean_pct"
+    ));
     let json = std::fs::read_to_string(&out.agg_json).unwrap();
     assert!(json.contains("\"federation\""), "aggregate JSON carries the federation object");
     std::fs::remove_dir_all(&dir).ok();

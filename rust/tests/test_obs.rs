@@ -88,8 +88,7 @@ fn fed_run(faulty: bool) -> FedRunResult {
     let fed = FederationConfig {
         shards: ShardSpec::uniform(64, 2),
         routing: RoutingPolicy::RoundRobin,
-        steal: false,
-        shard_faults: None,
+        ..Default::default()
     };
     FedEngine::new(base_cfg(SchedMode::Sync, faulty), fed).run(&stream(true), "fed")
 }

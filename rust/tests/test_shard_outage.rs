@@ -1,0 +1,384 @@
+//! Shard-level failure-domain tests: correlated outages, partitions, and
+//! cross-shard failover.
+//!
+//! Three load-bearing properties:
+//!
+//! 1. **Fold to baseline** — with the outage layer absent *or* present
+//!    but inactive, every per-shard event-log digest and the makespan
+//!    bits are identical to a pre-outage run.  This is the determinism
+//!    contract that lets `[federation.outages] enabled = [false, true]`
+//!    campaign points share control rows with outage-free builds.
+//! 2. **Outage timeline independence** — a scripted whole-shard outage
+//!    fires at the same simulated times under every routing policy, and
+//!    repeating a run reproduces every digest bit for bit.
+//! 3. **Exactly-once failover** — under a whole-shard outage (alone or
+//!    stacked on machine faults and drains) no job is ever lost: every
+//!    interrupted job is rescued, requeued, or evacuated exactly once,
+//!    and every evacuation lands on exactly one surviving shard.
+
+use dmr::des::DesConfig;
+use dmr::dmr::SchedMode;
+use dmr::federation::{
+    FedEngine, FederationConfig, FedRunResult, RoutingPolicy, ShardSpec, StealPolicy,
+};
+use dmr::resilience::{
+    DrainSet, DrainWindow, FailureDomain, FaultKind, FaultSpec, FaultTraceEvent, OutageEvent,
+    OutageSpec, PartitionWindow, RecoveryConfig, ResilienceConfig,
+};
+use dmr::rms::RmsConfig;
+use dmr::workload::{self, WorkloadSpec};
+
+const JOBS: usize = 40;
+
+fn base_cfg(sched: SchedMode, faulty: bool) -> DesConfig {
+    let resilience = if faulty {
+        ResilienceConfig {
+            faults: FaultSpec {
+                mtbf: 60_000.0,
+                mttr: 1_000.0,
+                scripted: vec![FaultTraceEvent { at: 300.0, node: 1, kind: FaultKind::Fail }],
+                drains: vec![DrainWindow {
+                    start: 1_500.0,
+                    end: 3_000.0,
+                    nodes: DrainSet::Count(6),
+                }],
+            },
+            recovery: RecoveryConfig { checkpoint_interval: 500.0, ..Default::default() },
+            ..Default::default()
+        }
+    } else {
+        ResilienceConfig::default()
+    };
+    DesConfig {
+        rms: RmsConfig { nodes: 64, ..Default::default() },
+        mode: sched,
+        resilience,
+        ..Default::default()
+    }
+}
+
+fn stream(flexible: bool) -> WorkloadSpec {
+    let w = workload::generate(JOBS, 17);
+    if flexible {
+        w
+    } else {
+        w.as_fixed()
+    }
+}
+
+/// A whole-shard outage on shard 0: dark at t=500 for 1500 s.  By t=500
+/// the whole stream has arrived, so round-robin guarantees shard 0 holds
+/// live work when the lights go out.
+fn shard0_blackout() -> Vec<OutageSpec> {
+    vec![
+        OutageSpec {
+            scripted: vec![OutageEvent { domain: String::new(), at: 500.0, duration: 1_500.0 }],
+            ..Default::default()
+        },
+        OutageSpec::default(),
+    ]
+}
+
+fn fed_run(
+    cfg: DesConfig,
+    routing: RoutingPolicy,
+    steal: StealPolicy,
+    outages: Option<Vec<OutageSpec>>,
+    w: &WorkloadSpec,
+    label: &str,
+) -> FedRunResult {
+    FedEngine::new(
+        cfg,
+        FederationConfig {
+            shards: ShardSpec::uniform(64, 2),
+            routing,
+            steal,
+            outages,
+            ..Default::default()
+        },
+    )
+    .run(w, label)
+}
+
+fn digests(r: &FedRunResult) -> Vec<u64> {
+    r.shards.iter().map(|s| s.rms.log.digest()).collect()
+}
+
+fn completed(r: &FedRunResult) -> usize {
+    r.shards.iter().map(|s| s.rms.completed_jobs()).sum()
+}
+
+/// Per-shard failure ledger: every interrupted job is accounted for by
+/// exactly one of rescue, local requeue, or cross-shard evacuation.
+fn assert_ledger(r: &FedRunResult, tag: &str) {
+    for sh in &r.shards {
+        assert_eq!(
+            sh.stats.interrupted,
+            sh.stats.rescued + sh.stats.requeued + sh.stats.evacuated,
+            "{tag}: shard {} ledger",
+            sh.shard
+        );
+        assert_eq!(
+            sh.rms.log.evacuations() as u64,
+            sh.evac_out,
+            "{tag}: shard {} evac events match the counter",
+            sh.shard
+        );
+    }
+    assert_eq!(
+        r.evacuations(),
+        r.cross_shard_requeues(),
+        "{tag}: every evacuated job lands on exactly one shard"
+    );
+    assert_eq!(
+        r.resilience.evacuated,
+        r.evacuations(),
+        "{tag}: merged resilience stats agree with the shard counters"
+    );
+}
+
+// ------------------------------------------------------------ fold-off
+
+#[test]
+fn inactive_outage_layer_folds_to_baseline() {
+    for faulty in [false, true] {
+        for (mode, sched, flexible) in
+            [("fixed", SchedMode::Sync, false), ("sync", SchedMode::Sync, true)]
+        {
+            let w = stream(flexible);
+            let run = |outages: Option<Vec<OutageSpec>>| {
+                fed_run(
+                    base_cfg(sched, faulty),
+                    RoutingPolicy::RoundRobin,
+                    StealPolicy::Head,
+                    outages,
+                    &w,
+                    mode,
+                )
+            };
+            let absent = run(None);
+            // Present but inactive: empty vector, and default (inert) specs.
+            for (form, outages) in [
+                ("empty vec", Some(vec![])),
+                ("inert specs", Some(vec![OutageSpec::default(), OutageSpec::default()])),
+                (
+                    "domains only",
+                    // Declared domains with no outage source are inert too.
+                    Some(vec![
+                        OutageSpec {
+                            domains: vec![FailureDomain {
+                                name: "rackA".into(),
+                                nodes: DrainSet::Count(8),
+                            }],
+                            ..Default::default()
+                        },
+                        OutageSpec::default(),
+                    ]),
+                ),
+            ] {
+                let r = run(outages);
+                let tag = format!("{mode} faulty={faulty} ({form})");
+                assert_eq!(digests(&r), digests(&absent), "{tag}: per-shard digests");
+                assert_eq!(
+                    r.makespan.to_bits(),
+                    absent.makespan.to_bits(),
+                    "{tag}: makespan bits"
+                );
+                assert_eq!(r.events, absent.events, "{tag}: event count");
+                assert_eq!(r.evacuations(), 0, "{tag}: nothing to evacuate");
+            }
+        }
+    }
+}
+
+// ----------------------------------------------- timeline independence
+
+#[test]
+fn scripted_outage_timeline_is_routing_independent_and_deterministic() {
+    let w = stream(true);
+    let routings =
+        [RoutingPolicy::RoundRobin, RoutingPolicy::LeastLoaded, RoutingPolicy::Locality];
+    for routing in routings {
+        let run = || {
+            fed_run(
+                base_cfg(SchedMode::Sync, false),
+                routing,
+                StealPolicy::Head,
+                Some(shard0_blackout()),
+                &w,
+                routing.label(),
+            )
+        };
+        let a = run();
+        let b = run();
+        let tag = routing.label();
+        // The outage timeline is scripted, so it is identical under every
+        // routing policy: exactly one blackout, on shard 0 only.  (The
+        // recovery marker only lands if the run outlives t=2000 — the
+        // engine stops at the last completion — so it is at most one.)
+        assert_eq!(a.shards[0].rms.log.shard_downs(), 1, "{tag}: shard 0 went down once");
+        assert!(a.shards[0].rms.log.shard_ups() <= 1, "{tag}: at most one recovery");
+        assert_eq!(a.shards[1].rms.log.shard_downs(), 0, "{tag}: shard 1 untouched");
+        assert_eq!(completed(&a), JOBS, "{tag}: every job completes");
+        assert_ledger(&a, tag);
+        // Bit-for-bit reproducibility under outages.
+        assert_eq!(digests(&a), digests(&b), "{tag}: repeat digests");
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{tag}: repeat makespan");
+        assert_eq!(a.evacuations(), b.evacuations(), "{tag}: repeat evacuations");
+    }
+}
+
+// -------------------------------------------------- exactly-once failover
+
+#[test]
+fn whole_shard_outage_evacuates_malleable_work_exactly_once() {
+    let w = stream(true);
+    let r = fed_run(
+        base_cfg(SchedMode::Sync, false),
+        RoutingPolicy::RoundRobin,
+        StealPolicy::Head,
+        Some(shard0_blackout()),
+        &w,
+        "evac",
+    );
+    assert_eq!(completed(&r), JOBS, "outages displace work, they never lose it");
+    assert!(
+        r.evacuations() > 0,
+        "shard 0 held live malleable jobs at t=500; they must fail over"
+    );
+    assert!(
+        r.shards[1].evac_in > 0 && r.shards[0].evac_out == r.shards[1].evac_in,
+        "evacuees from shard 0 land on the surviving shard 1"
+    );
+    assert_ledger(&r, "evac");
+    assert!(
+        r.shards[0].stats.availability < 1.0,
+        "the blackout must show up in shard 0 availability"
+    );
+}
+
+#[test]
+fn rigid_jobs_requeue_locally_instead_of_evacuating() {
+    let w = stream(false);
+    let r = fed_run(
+        base_cfg(SchedMode::Sync, false),
+        RoutingPolicy::RoundRobin,
+        StealPolicy::Off,
+        Some(shard0_blackout()),
+        &w,
+        "rigid",
+    );
+    assert_eq!(completed(&r), JOBS, "rigid work survives by waiting out the outage");
+    assert_eq!(r.evacuations(), 0, "rigid jobs cannot carry state across shards");
+    assert!(
+        r.shards[0].stats.interrupted > 0 && r.shards[0].stats.requeued > 0,
+        "interrupted rigid jobs were killed and requeued locally"
+    );
+    // The requeued jobs can only restart once shard 0 repairs, so the run
+    // outlives the outage and both timeline markers land.
+    assert_eq!(r.shards[0].rms.log.shard_downs(), 1, "blackout logged");
+    assert_eq!(r.shards[0].rms.log.shard_ups(), 1, "recovery logged");
+    assert!(r.makespan > 2_000.0, "shard 0's queue waited out the 1500 s outage");
+    assert_ledger(&r, "rigid");
+}
+
+#[test]
+fn evacuation_is_exactly_once_under_combined_faults() {
+    // Machine faults + drains + a whole-shard outage, stacked: the ledger
+    // and the completion count must still close exactly.
+    for (mode, sched, flexible) in
+        [("fixed", SchedMode::Sync, false), ("sync", SchedMode::Sync, true)]
+    {
+        let w = stream(flexible);
+        let run = || {
+            fed_run(
+                base_cfg(sched, true),
+                RoutingPolicy::LeastLoaded,
+                StealPolicy::Half,
+                Some(shard0_blackout()),
+                &w,
+                mode,
+            )
+        };
+        let r = run();
+        let tag = format!("{mode} combined");
+        assert_eq!(completed(&r), JOBS, "{tag}: every job completes");
+        assert_ledger(&r, &tag);
+        // Stacked fault sources stay deterministic.
+        let b = run();
+        assert_eq!(digests(&r), digests(&b), "{tag}: repeat digests");
+    }
+}
+
+// ------------------------------------------------------------ partitions
+
+#[test]
+fn partitions_suppress_cross_shard_traffic_without_losing_work() {
+    let w = stream(true);
+    let outages = vec![
+        OutageSpec::default(),
+        OutageSpec {
+            partitions: vec![PartitionWindow { start: 200.0, end: 1_200.0 }],
+            ..Default::default()
+        },
+    ];
+    let run = |outages: Option<Vec<OutageSpec>>| {
+        fed_run(
+            base_cfg(SchedMode::Sync, false),
+            RoutingPolicy::LeastLoaded,
+            StealPolicy::Head,
+            outages,
+            &w,
+            "part",
+        )
+    };
+    let r = run(Some(outages));
+    assert_eq!(completed(&r), JOBS, "partitioned shards keep running local work");
+    assert_eq!(r.shards[1].rms.log.partitions(), 1, "one partition window on shard 1");
+    assert_eq!(r.shards[0].rms.log.partitions(), 0, "shard 0 never partitioned");
+    assert_eq!(r.evacuations(), 0, "partitions do not interrupt running jobs");
+    assert_ledger(&r, "part");
+    // Determinism holds with partitions in play.
+    let b = run(Some(vec![
+        OutageSpec::default(),
+        OutageSpec {
+            partitions: vec![PartitionWindow { start: 200.0, end: 1_200.0 }],
+            ..Default::default()
+        },
+    ]));
+    assert_eq!(digests(&r), digests(&b), "partition runs reproduce bit for bit");
+}
+
+// ----------------------------------------------------- named domains
+
+#[test]
+fn named_domain_outage_downs_only_its_members() {
+    let w = stream(true);
+    let outages = vec![
+        OutageSpec {
+            domains: vec![FailureDomain { name: "rackA".into(), nodes: DrainSet::Count(8) }],
+            scripted: vec![OutageEvent { domain: "rackA".into(), at: 500.0, duration: 1_000.0 }],
+            ..Default::default()
+        },
+        OutageSpec::default(),
+    ];
+    let r = fed_run(
+        base_cfg(SchedMode::Sync, false),
+        RoutingPolicy::RoundRobin,
+        StealPolicy::Head,
+        Some(outages),
+        &w,
+        "domain",
+    );
+    assert_eq!(completed(&r), JOBS, "a rack-sized blast radius loses nothing");
+    assert_eq!(r.shards[0].rms.log.shard_downs(), 1, "the domain outage is logged");
+    assert_eq!(r.shards[1].rms.log.shard_downs(), 0, "the blast radius stays on shard 0");
+    // A rack-sized domain leaves 24 of 32 nodes up: victims prefer a
+    // rescue shrink onto survivors, and only jobs with no feasible
+    // shrink cross shards — either way the ledger closes exactly.
+    assert!(
+        r.shards[0].stats.availability < 1.0,
+        "eight nodes were dark for 1000 s"
+    );
+    assert_ledger(&r, "domain");
+}

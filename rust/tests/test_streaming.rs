@@ -24,7 +24,7 @@
 
 use dmr::des::{DesConfig, Engine, RunResult};
 use dmr::dmr::SchedMode;
-use dmr::federation::{FedEngine, FederationConfig, RoutingPolicy, ShardSpec};
+use dmr::federation::{FedEngine, FederationConfig, RoutingPolicy, ShardSpec, StealPolicy};
 use dmr::metrics::RunSummary;
 use dmr::resilience::{
     DrainSet, DrainWindow, FaultKind, FaultSpec, FaultTraceEvent, RecoveryConfig,
@@ -224,9 +224,9 @@ fn materialized_adapter_matches_batch_entry_point() {
 #[test]
 fn federated_streaming_is_bit_identical() {
     let layouts = [
-        (RoutingPolicy::LeastLoaded, true),
-        (RoutingPolicy::RoundRobin, false),
-        (RoutingPolicy::Locality, false),
+        (RoutingPolicy::LeastLoaded, StealPolicy::Head),
+        (RoutingPolicy::RoundRobin, StealPolicy::Off),
+        (RoutingPolicy::Locality, StealPolicy::Off),
     ];
     for (routing, steal) in layouts {
         for faulty in [false, true] {
@@ -237,7 +237,7 @@ fn federated_streaming_is_bit_identical() {
                 ],
                 routing,
                 steal,
-                shard_faults: None,
+                ..Default::default()
             };
             let (w, _) = source("feitelson", 31);
             let batch = FedEngine::new(cfg(SchedMode::Sync, faulty, true), fed())
